@@ -1,0 +1,45 @@
+//! Reasoning-accuracy evaluation across sparsity policies — a compact
+//! version of the paper's Fig 5 sweep (the full sweep is
+//! `seerattn repro fig5`).
+//!
+//!     cargo run --release --example reasoning_eval [-- episodes]
+
+use std::rc::Rc;
+
+use anyhow::Result;
+use seerattn::coordinator::EngineConfig;
+use seerattn::harness;
+use seerattn::runtime::Runtime;
+use seerattn::sparse::Policy;
+use seerattn::workload::reasoning::TaskConfig;
+
+fn main() -> Result<()> {
+    let n: usize = std::env::args().nth(1).and_then(|s| s.parse().ok()).unwrap_or(16);
+    let dir = harness::require_artifacts()?;
+    let rt = Rc::new(Runtime::load(&dir)?);
+    let task = TaskConfig::hard();
+    println!("task: {}-hop chains, {} facts, {n} episodes\n",
+             task.hops, task.n_chains * task.hops);
+    println!("{:<26} {:>9} {:>9} {:>9} {:>9}",
+             "policy", "accuracy", "answered", "gen_len", "kv-touch");
+    let configs: Vec<(String, Policy)> = vec![
+        ("dense".into(), Policy::Dense),
+        ("oracle b=128".into(), Policy::Oracle { budget_tokens: 128 }),
+        ("seer b=64".into(), Policy::GateBudget { budget_tokens: 64 }),
+        ("seer b=128".into(), Policy::GateBudget { budget_tokens: 128 }),
+        ("seer thresh=0.04".into(), Policy::GateThreshold { threshold: 0.04 }),
+        ("seer top-p=0.8".into(), Policy::GateTopP { p: 0.8 }),
+        ("quest b=64".into(), Policy::Quest { budget_tokens: 64 }),
+        ("quest b=128".into(), Policy::Quest { budget_tokens: 128 }),
+    ];
+    for (name, policy) in configs {
+        let ecfg = EngineConfig { policy, block_size: 16, ..Default::default() };
+        let mut eng = harness::build_engine(&rt, &dir, ecfg)?;
+        let max_new = harness::max_new_for(&task, eng.max_seq());
+        let o = harness::eval_policy(&mut eng, task, n, 7, max_new)?;
+        println!("{name:<26} {:>8.1}% {:>8.1}% {:>9.1} {:>9.3}",
+                 100.0 * o.accuracy, 100.0 * o.answered_frac, o.mean_gen_len,
+                 o.kv_touch_fraction);
+    }
+    Ok(())
+}

@@ -1,0 +1,349 @@
+"""AOT driver: lower every executable to HLO *text* + write the manifest.
+
+Run once at build time (``make artifacts``); Python never runs on the
+request path. The interchange format is HLO text, NOT serialized
+HloModuleProto: jax >= 0.5 emits protos with 64-bit instruction ids which
+xla_extension 0.5.1 (the version the Rust ``xla`` crate binds) rejects;
+the text parser reassigns ids and round-trips cleanly (see
+/opt/xla-example/README.md).
+
+Outputs under ``artifacts/``:
+  manifest.json     — configs, parameter layout, executable signatures
+  model_init.bin    — initial base-model parameters (raw LE f32)
+  gate_init.bin     — initial AttnGate parameters
+  fixtures.json     — golden values for Rust-side gate/kcomp parity tests
+  *.hlo.txt         — one per executable
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from .config import (DEFAULT_AOT, DEFAULT_KBENCH, DEFAULT_MODEL, AotConfig,
+                     KernelBenchConfig, ModelConfig)
+from . import gate as gate_mod
+from . import model as model_mod
+from . import params as params_mod
+from . import train as train_mod
+from .kernels.block_sparse_decode import block_sparse_decode, dense_decode
+from .kernels import ref
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True)
+    return comp.as_hlo_text()
+
+
+def _spec(name, arr):
+    arr = jax.ShapeDtypeStruct(arr.shape, arr.dtype) if not isinstance(
+        arr, jax.ShapeDtypeStruct) else arr
+    dt = {"float32": "f32", "int32": "i32"}[str(arr.dtype)]
+    return {"name": name, "dtype": dt, "shape": list(arr.shape)}
+
+
+def f32(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.float32)
+
+
+def i32(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.int32)
+
+
+class Emitter:
+    def __init__(self, out_dir: str, only=None):
+        self.out_dir = out_dir
+        self.manifest_exes = {}
+        self.only = only
+
+    def emit(self, name: str, fn, arg_specs, out_names):
+        """Lower fn(*args) and record its signature.
+
+        arg_specs: list of (arg_name, ShapeDtypeStruct) — flat positional.
+        """
+        args = [s for _, s in arg_specs]
+        path = os.path.join(self.out_dir, f"{name}.hlo.txt")
+        entry = {
+            "file": f"{name}.hlo.txt",
+            "args": [_spec(n, s) for n, s in arg_specs],
+            "outs": out_names,
+        }
+        self.manifest_exes[name] = entry
+        if self.only is not None and name not in self.only:
+            return
+        print(f"[aot] lowering {name} ({len(args)} args)", flush=True)
+        lowered = jax.jit(fn).lower(*args)
+        text = to_hlo_text(lowered)
+        with open(path, "w") as f:
+            f.write(text)
+
+
+def build_all(out_dir: str, cfg: ModelConfig, aot: AotConfig,
+              kb: KernelBenchConfig, only=None, skip_kbench=False):
+    os.makedirs(out_dir, exist_ok=True)
+    em = Emitter(out_dir, only=only)
+    B = aot.decode_batch
+    d, dh, dg = cfg.d_model, cfg.head_dim, cfg.d_gate
+    H, Hkv, g = cfg.n_heads, cfg.n_kv_heads, cfg.group_size
+    L, V, S = cfg.n_layers, cfg.vocab, cfg.max_seq
+    mh = cfg.mlp_hidden
+
+    pspecs = params_mod.param_specs(cfg)
+    gspecs = params_mod.gate_specs(cfg)
+    p_args = [(f"param:{n}", f32(*s)) for n, s in pspecs]
+    g_args = [(f"gate:{n}", f32(*s)) for n, s in gspecs]
+    nP, nG = len(pspecs), len(gspecs)
+
+    # --- decode path -------------------------------------------------------
+    em.emit(
+        "layer_pre",
+        lambda x, pos, wq, wk, wv, ln1, wqg: model_mod.layer_pre(
+            x, pos, wq, wk, wv, ln1, wqg, cfg),
+        [("x", f32(B, d)), ("pos", i32(B)), ("wq", f32(d, H * dh)),
+         ("wk", f32(d, Hkv * dh)), ("wv", f32(d, Hkv * dh)),
+         ("ln1", f32(d)), ("wq_gate", f32(Hkv, g * dh, dg))],
+        ["q_rope", "k_rope", "v", "k_pre", "q_gate"],
+    )
+    for T in aot.sel_token_variants:
+        em.emit(
+            f"layer_post_sel_t{T}",
+            lambda q, ks, vs, m, r, wo, w1, w2, ln2: (
+                model_mod.layer_post_sel(q, ks, vs, m, r, wo, w1, w2, ln2,
+                                         cfg),),
+            [("q_rope", f32(B, H, dh)), ("k_sel", f32(B, Hkv, T, dh)),
+             ("v_sel", f32(B, Hkv, T, dh)), ("sel_mask", f32(B, Hkv, T)),
+             ("resid", f32(B, d)), ("wo", f32(H * dh, d)),
+             ("w1", f32(d, mh)), ("w2", f32(mh, d)), ("ln2", f32(d))],
+            ["x_out"],
+        )
+    for T in aot.sel_token_variants:
+        em.emit(
+            f"layer_post_selh_t{T}",
+            lambda q, ks, vs, m, r, wo, w1, w2, ln2: (
+                model_mod.layer_post_sel_perhead(q, ks, vs, m, r, wo, w1,
+                                                 w2, ln2, cfg),),
+            [("q_rope", f32(B, H, dh)), ("k_sel", f32(B, H, T, dh)),
+             ("v_sel", f32(B, H, T, dh)), ("sel_mask", f32(B, H, T)),
+             ("resid", f32(B, d)), ("wo", f32(H * dh, d)),
+             ("w1", f32(d, mh)), ("w2", f32(mh, d)), ("ln2", f32(d))],
+            ["x_out"],
+        )
+    em.emit(
+        "layer_post_dense",
+        lambda q, kc, vc, sl, r, wo, w1, w2, ln2: (
+            model_mod.layer_post_dense(q, kc, vc, sl, r, wo, w1, w2, ln2,
+                                       cfg),),
+        [("q_rope", f32(B, H, dh)), ("k_cache", f32(B, Hkv, S, dh)),
+         ("v_cache", f32(B, Hkv, S, dh)), ("seq_len", i32(B)),
+         ("resid", f32(B, d)), ("wo", f32(H * dh, d)), ("w1", f32(d, mh)),
+         ("w2", f32(mh, d)), ("ln2", f32(d))],
+        ["x_out"],
+    )
+    em.emit(
+        "lm_head",
+        lambda x, lnf, head: (model_mod.lm_head(x, lnf, head, cfg),),
+        [("x", f32(B, d)), ("ln_f", f32(d)), ("head", f32(d, V))],
+        ["logits"],
+    )
+    em.emit(
+        "prefill",
+        lambda *a: model_mod.prefill(list(a[:nP]), cfg, a[nP], a[nP + 1]),
+        p_args + [("ids", i32(B, S)), ("seq_len", i32(B))],
+        ["logits", "k_rope", "v", "k_pre"],
+    )
+
+    # --- training ----------------------------------------------------------
+    TB, TS = aot.train_batch, aot.train_len
+    m_args = [(f"m:{n}", f32(*s)) for n, s in pspecs]
+    v_args = [(f"v:{n}", f32(*s)) for n, s in pspecs]
+
+    def pretrain_fn(*a):
+        ps = list(a[:nP])
+        ms = list(a[nP:2 * nP])
+        vs = list(a[2 * nP:3 * nP])
+        step, lr, ids, loss_w = a[3 * nP:]
+        new_p, new_m, new_v, loss = train_mod.pretrain_step(
+            ps, ms, vs, step, lr, ids, loss_w, cfg)
+        return tuple(new_p) + tuple(new_m) + tuple(new_v) + (loss,)
+
+    em.emit(
+        "pretrain_step", pretrain_fn,
+        p_args + m_args + v_args +
+        [("step", f32()), ("lr", f32()), ("ids", i32(TB, TS)),
+         ("loss_w", f32(TB, TS))],
+        [f"param:{n}" for n, _ in pspecs] + [f"m:{n}" for n, _ in pspecs] +
+        [f"v:{n}" for n, _ in pspecs] + ["loss"],
+    )
+
+    gm_args = [(f"gm:{n}", f32(*s)) for n, s in gspecs]
+    gv_args = [(f"gv:{n}", f32(*s)) for n, s in gspecs]
+    DB, DS = aot.distill_batch, aot.distill_len
+    for bs in aot.distill_block_sizes:
+        def distill_fn(*a, bs=bs):
+            ps = list(a[:nP])
+            gs = list(a[nP:nP + nG])
+            gms = list(a[nP + nG:nP + 2 * nG])
+            gvs = list(a[nP + 2 * nG:nP + 3 * nG])
+            step, lr, ids = a[nP + 3 * nG:]
+            ng, nm, nv, kl = train_mod.distill_step(
+                ps, gs, gms, gvs, step, lr, ids, cfg, bs)
+            # Anchor every frozen parameter into the graph: the distill
+            # loss does not touch the LM head / final layer-post weights,
+            # and XLA would otherwise prune those parameters, breaking the
+            # manifest's argument contract with the Rust driver.
+            anchor = sum(jnp.sum(t) for t in ps) * 0.0
+            return tuple(ng) + tuple(nm) + tuple(nv) + (kl + anchor,)
+
+        em.emit(
+            f"distill_step_bs{bs}", distill_fn,
+            p_args + g_args + gm_args + gv_args +
+            [("step", f32()), ("lr", f32()), ("ids", i32(DB, DS))],
+            [f"gate:{n}" for n, _ in gspecs] +
+            [f"gm:{n}" for n, _ in gspecs] +
+            [f"gv:{n}" for n, _ in gspecs] + ["kl"],
+        )
+
+    # --- Fig 6 kernel-benchmark family --------------------------------------
+    kbench_entries = []
+    if not skip_kbench:
+        kbs = kb.block_size
+        for s in kb.seqlens:
+            nblk = s // kbs
+            for b in kb.batches:
+                em.emit(
+                    f"kb_dense_s{s}_b{b}",
+                    lambda q, k, v, sl, kbs=kbs: (
+                        dense_decode(q, k, v, sl, block_size=kbs),),
+                    [("q", f32(b, kb.n_heads, kb.head_dim)),
+                     ("k", f32(b, kb.n_kv_heads, s, kb.head_dim)),
+                     ("v", f32(b, kb.n_kv_heads, s, kb.head_dim)),
+                     ("seq_len", i32(b))],
+                    ["out"],
+                )
+                for sp in kb.sparsities:
+                    ksel = max(1, round(nblk * (1.0 - sp)))
+                    em.emit(
+                        f"kb_sparse_s{s}_b{b}_k{ksel}",
+                        lambda q, k, v, idx, sl, kbs=kbs: (
+                            block_sparse_decode(q, k, v, idx, sl,
+                                                block_size=kbs),),
+                        [("q", f32(b, kb.n_heads, kb.head_dim)),
+                         ("k", f32(b, kb.n_kv_heads, s, kb.head_dim)),
+                         ("v", f32(b, kb.n_kv_heads, s, kb.head_dim)),
+                         ("idx", i32(b, kb.n_kv_heads, ksel)),
+                         ("seq_len", i32(b))],
+                        ["out"],
+                    )
+                    kbench_entries.append({
+                        "seqlen": s, "batch": b, "sparsity": sp,
+                        "k_sel": ksel,
+                        "dense": f"kb_dense_s{s}_b{b}",
+                        "sparse": f"kb_sparse_s{s}_b{b}_k{ksel}",
+                    })
+
+    # --- parameters + fixtures ----------------------------------------------
+    init_p = params_mod.init_params(cfg)
+    init_g = params_mod.init_gate(cfg)
+    params_mod.save_flat(os.path.join(out_dir, "model_init.bin"), init_p)
+    params_mod.save_flat(os.path.join(out_dir, "gate_init.bin"), init_g)
+    write_fixtures(os.path.join(out_dir, "fixtures.json"), cfg, init_g)
+
+    manifest = {
+        "model": cfg.to_dict(),
+        "aot": aot.to_dict(),
+        "kbench": kb.to_dict(),
+        "kbench_points": kbench_entries,
+        "params": [{"name": n, "shape": list(s)} for n, s in
+                   params_mod.param_specs(cfg)],
+        "gate_params": [{"name": n, "shape": list(s)} for n, s in
+                        params_mod.gate_specs(cfg)],
+        "executables": em.manifest_exes,
+    }
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"[aot] wrote manifest with {len(em.manifest_exes)} executables")
+
+
+def write_fixtures(path: str, cfg: ModelConfig, init_g: list):
+    """Golden values for the Rust-side gate math (kcomp / gate query /
+    scores / oracle GT), computed with the reference implementations."""
+    key = jax.random.PRNGKey(42)
+    dh, dg = cfg.head_dim, cfg.d_gate
+    Hkv, H, g = cfg.n_kv_heads, cfg.n_heads, cfg.group_size
+    bs = cfg.block_size
+    gd = params_mod.gate_as_dict(cfg, init_g)
+    wq_gate = gd["l0.wq_gate"]
+    wk_gate = gd["l0.wk_gate"]
+
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    # kcomp: one sequence of 2 blocks.
+    k_pre = jax.random.normal(k1, (1, Hkv, 2 * bs, dh))
+    kc = gate_mod.k_compress(wk_gate, k_pre, bs, cfg.rope_theta)  # [1,Hkv,2,dg]
+    # gate query at position 37.
+    q_pre = jax.random.normal(k2, (1, H, dh))
+    pos = jnp.array([37], dtype=jnp.int32)
+    qg = gate_mod.gate_query(wq_gate, q_pre, pos, cfg.rope_theta)  # [1,Hkv,dg]
+    scores = gate_mod.gate_scores(qg, kc)  # [1,Hkv,2]
+    # oracle GT for one decode query over S=4 blocks.
+    S = 4 * bs
+    q_rope = jax.random.normal(k3, (1, H, dh))
+    k_rope = jax.random.normal(k4, (1, Hkv, S, dh))
+    seq_len = jnp.array([S - 3], dtype=jnp.int32)
+    kf = ref.repeat_kv(k_rope, g)
+    logits = jnp.einsum("bhd,bhkd->bhk", q_rope, kf) / jnp.sqrt(
+        jnp.float32(dh))
+    ok = jnp.arange(S)[None, None] < seq_len[:, None, None]
+    logits = jnp.where(ok, logits, -1e30)
+    e = jnp.exp(logits - logits.max(-1, keepdims=True))
+    e = jnp.where(ok, e, 0.0)
+    probs = e / e.sum(-1, keepdims=True)
+    col = probs.reshape(1, H, S // bs, bs).max(-1)  # [1,H,NBLK]
+    gt = col.reshape(1, Hkv, g, S // bs).max(2)  # [1,Hkv,NBLK]
+
+    fx = {
+        "config": cfg.to_dict(),
+        "kcomp": {
+            "k_pre": np.asarray(k_pre).ravel().tolist(),
+            "wk_gate": np.asarray(wk_gate).ravel().tolist(),
+            "expected_kc": np.asarray(kc).ravel().tolist(),
+        },
+        "gate_query": {
+            "q_pre": np.asarray(q_pre).ravel().tolist(),
+            "wq_gate": np.asarray(wq_gate).ravel().tolist(),
+            "pos": 37,
+            "expected_qg": np.asarray(qg).ravel().tolist(),
+            "expected_scores": np.asarray(scores).ravel().tolist(),
+        },
+        "oracle": {
+            "q_rope": np.asarray(q_rope).ravel().tolist(),
+            "k_rope": np.asarray(k_rope).ravel().tolist(),
+            "seq_len": int(S - 3),
+            "expected_gt": np.asarray(gt).ravel().tolist(),
+        },
+    }
+    with open(path, "w") as f:
+        json.dump(fx, f)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--only", nargs="*", default=None,
+                    help="lower only the named executables")
+    ap.add_argument("--skip-kbench", action="store_true")
+    args = ap.parse_args()
+    build_all(args.out, DEFAULT_MODEL, DEFAULT_AOT, DEFAULT_KBENCH,
+              only=args.only, skip_kbench=args.skip_kbench)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,122 @@
+"""Shared model / gate configuration.
+
+This is the single source of truth for the architecture contract between the
+Python compile path (L1 Pallas kernels + L2 JAX model, AOT-lowered to HLO
+text) and the Rust coordinator (L3), which reads the same values from
+``artifacts/manifest.json``.
+
+The configuration mirrors the paper's Qwen3-style GQA transformer, scaled to
+the CPU testbed (see DESIGN.md §1 for the scale mapping):
+
+  * GQA with ``n_heads`` query heads sharing ``n_kv_heads`` KV heads
+    (group size g = n_heads // n_kv_heads, paper: g=8, ours: g=4).
+  * RoPE positional embedding, pre-RoPE Q/K feeding the AttnGate (§2.2).
+  * AttnGate with per-KV-head query aggregation (W_q_gate: [g*head_dim,
+    d_gate]) and {max,min,avg}-pooled K compression (W_k_gate: [3*head_dim,
+    d_gate]).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    """Architecture of the base GQA transformer + AttnGate dimensions."""
+
+    vocab: int = 256
+    d_model: int = 256
+    n_layers: int = 4
+    n_heads: int = 8
+    n_kv_heads: int = 2
+    head_dim: int = 32
+    mlp_hidden: int = 512
+    rope_theta: float = 10000.0
+    rms_eps: float = 1e-5
+    # AttnGate
+    d_gate: int = 32
+    # Default sparse attention block size (tokens per block). The paper's
+    # default is 64 at 32k contexts; ours is 16 at 512 contexts (same
+    # blocks-per-context ratio). Ablations sweep {8, 16, 32, 64}.
+    block_size: int = 16
+    # Maximum sequence length supported by the decode path artifacts.
+    max_seq: int = 512
+
+    @property
+    def group_size(self) -> int:
+        assert self.n_heads % self.n_kv_heads == 0
+        return self.n_heads // self.n_kv_heads
+
+    @property
+    def n_blocks(self) -> int:
+        return self.max_seq // self.block_size
+
+    def to_dict(self) -> dict:
+        d = dataclasses.asdict(self)
+        d["group_size"] = self.group_size
+        return d
+
+    def to_json(self) -> str:
+        return json.dumps(self.to_dict(), indent=2)
+
+
+@dataclasses.dataclass(frozen=True)
+class AotConfig:
+    """Shapes baked into the AOT-lowered executables.
+
+    Every executable has fully static shapes (XLA requirement); the Rust
+    coordinator pads its runtime state to these shapes. ``manifest.json``
+    records the instantiated variants.
+    """
+
+    # Decode/serving batch (requests are padded up to this).
+    decode_batch: int = 8
+    # Prefill sequence length (prompts padded).
+    prefill_len: int = 512
+    # layer_post_sel variants: number of *selected tokens* (budget * block)
+    # the sparse attention executable consumes. Covers every (block size,
+    # block budget) pair used in the experiments.
+    sel_token_variants: tuple = (64, 128, 192, 256, 384)
+    # Training step shapes.
+    train_batch: int = 4
+    train_len: int = 512
+    # Distillation step block sizes (Fig 7 ablation retrains the gate per
+    # block size).
+    distill_block_sizes: tuple = (8, 16, 32, 64)
+    distill_batch: int = 4
+    distill_len: int = 512
+
+    def to_dict(self) -> dict:
+        d = dataclasses.asdict(self)
+        d["sel_token_variants"] = list(self.sel_token_variants)
+        d["distill_block_sizes"] = list(self.distill_block_sizes)
+        return d
+
+
+@dataclasses.dataclass(frozen=True)
+class KernelBenchConfig:
+    """Fig 6 kernel-benchmark family: the paper sweeps seqlen x batch x
+    sparsity at GQA 64/8 heads, head_dim 128, block 64. We keep block 64
+    and the same GQA *group size ratio* while scaling head counts to the
+    CPU testbed."""
+
+    n_heads: int = 8
+    n_kv_heads: int = 2
+    head_dim: int = 32
+    block_size: int = 64
+    seqlens: tuple = (1024, 2048, 4096, 8192)
+    batches: tuple = (1, 4)
+    sparsities: tuple = (0.5, 0.7, 0.8, 0.9)
+
+    def to_dict(self) -> dict:
+        d = dataclasses.asdict(self)
+        for k in ("seqlens", "batches", "sparsities"):
+            d[k] = list(d[k])
+        return d
+
+
+DEFAULT_MODEL = ModelConfig()
+DEFAULT_AOT = AotConfig()
+DEFAULT_KBENCH = KernelBenchConfig()

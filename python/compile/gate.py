@@ -1,0 +1,105 @@
+"""AttnGate for sparse decoding (paper §2.2, eq. 1a-1c).
+
+  Q path:  pre-RoPE query heads, concatenated per GQA group, projected by a
+           per-KV-head linear W_q_gate [g*dh, dg], then RoPE at the query's
+           absolute position -> one gate query per KV head (shared
+           sparsity inside the group).
+  K path:  pre-RoPE keys, non-overlapping per-block {max,min,avg} pooling
+           along the sequence, concatenated (3*dh) and projected by
+           W_k_gate [3*dh, dg], then RoPE with the position of the block's
+           first token. The result is the "K compression cache" entry.
+  Score:   q_gate · KC^T / sqrt(dg); budget mode consumes raw logits
+           (top-k is softmax-invariant, §3.1), threshold mode applies a
+           softmax over complete blocks first.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from .rope import apply_rope
+
+NEG_INF = -1e30
+
+
+def gate_query(wq_gate: jnp.ndarray, q_prerope: jnp.ndarray,
+               positions: jnp.ndarray, theta: float) -> jnp.ndarray:
+    """Aggregate a GQA group of pre-RoPE queries into one gate query.
+
+    wq_gate: [Hkv, g*dh, dg]; q_prerope: [..., H, dh] (H = Hkv*g, heads of
+    one group contiguous); positions: broadcastable to q_prerope.shape[:-2].
+    Returns q_gate [..., Hkv, dg] (RoPE-applied).
+    """
+    hkv, gdh, dg = wq_gate.shape
+    lead = q_prerope.shape[:-2]
+    h, dh = q_prerope.shape[-2:]
+    g = gdh // dh
+    assert h == hkv * g
+    qg = q_prerope.reshape(*lead, hkv, g * dh)
+    qg = jnp.einsum("...kd,kde->...ke", qg, wq_gate)  # [..., Hkv, dg]
+    return apply_rope(qg, positions[..., None], theta)
+
+
+def pool_k_block(k_block: jnp.ndarray) -> jnp.ndarray:
+    """{max,min,avg}-pool one block of pre-RoPE keys along the sequence.
+
+    k_block: [..., block, dh] -> [..., 3*dh] (max ++ min ++ avg).
+    """
+    return jnp.concatenate(
+        [k_block.max(-2), k_block.min(-2), k_block.mean(-2)], axis=-1)
+
+
+def k_compress(wk_gate: jnp.ndarray, k_prerope: jnp.ndarray,
+               block_size: int, theta: float) -> jnp.ndarray:
+    """Build the full K compression cache for a sequence of keys.
+
+    wk_gate: [Hkv, 3*dh, dg]; k_prerope: [B, Hkv, S, dh] (S divisible by
+    block_size). Returns KC [B, Hkv, NBLK, dg], RoPE'd at block starts.
+    """
+    b, hkv, s, dh = k_prerope.shape
+    nblk = s // block_size
+    blocks = k_prerope.reshape(b, hkv, nblk, block_size, dh)
+    pooled = pool_k_block(blocks)  # [B, Hkv, NBLK, 3*dh]
+    kc = jnp.einsum("bknd,kde->bkne", pooled, wk_gate)  # [B, Hkv, NBLK, dg]
+    starts = jnp.arange(nblk, dtype=jnp.int32) * block_size
+    return apply_rope(kc, starts[None, None, :], theta)
+
+
+def gate_scores(q_gate: jnp.ndarray, kc: jnp.ndarray) -> jnp.ndarray:
+    """Raw gate logits. q_gate: [..., Hkv, dg]; kc: [B, Hkv, NBLK, dg].
+    Returns [..., Hkv, NBLK] (q leading dims must start with B)."""
+    dg = q_gate.shape[-1]
+    return jnp.einsum("b...ke,bkne->b...kn", q_gate, kc) / jnp.sqrt(
+        jnp.float32(dg))
+
+
+def gate_log_softmax(scores: jnp.ndarray, valid: jnp.ndarray) -> jnp.ndarray:
+    """Masked log-softmax over the block dimension (last axis)."""
+    masked = jnp.where(valid, scores, NEG_INF)
+    m = masked.max(-1, keepdims=True)
+    m = jnp.where(m > NEG_INF / 2, m, 0.0)
+    e = jnp.where(valid, jnp.exp(masked - m), 0.0)
+    denom = jnp.maximum(e.sum(-1, keepdims=True), 1e-30)
+    return jnp.where(valid, masked - m - jnp.log(denom), 0.0)
+
+
+def distill_kl(gate_logits: jnp.ndarray, gt_norm: jnp.ndarray,
+               block_size: int) -> jnp.ndarray:
+    """KL(gt || gate) averaged over positions with >=1 complete block.
+
+    gate_logits: [B, S, Hkv, NBLK]; gt_norm: [B, Hkv, S, NBLK] already
+    masked+normalised (ref.normalize_gt). Valid blocks: j < t // block.
+    """
+    b, s, hkv, nblk = gate_logits.shape
+    t = jnp.arange(s)[:, None]
+    j = jnp.arange(nblk)[None, :]
+    valid = (j < t // block_size)  # [S, NBLK]
+    logp = gate_log_softmax(gate_logits,
+                            valid[None, :, None, :])  # [B, S, Hkv, NBLK]
+    gt = jnp.transpose(gt_norm, (0, 2, 1, 3))  # [B, S, Hkv, NBLK]
+    # Rows whose GT sums to zero (t < block) contribute nothing.
+    row_ok = gt.sum(-1) > 0  # [B, S, Hkv]
+    log_gt = jnp.where(gt > 0, jnp.log(jnp.maximum(gt, 1e-30)), 0.0)
+    kl_row = (gt * (log_gt - logp)).sum(-1)  # [B, S, Hkv]
+    n = jnp.maximum(row_ok.sum(), 1)
+    return jnp.where(row_ok, kl_row, 0.0).sum() / n

@@ -1,0 +1,1 @@
+# L1: Pallas kernel(s) for the paper's compute hot-spot.

@@ -1,0 +1,172 @@
+"""Block-sparse flash-decoding kernel (paper §3.3) and its dense baseline.
+
+The paper implements this in TileLang for H100: grid over (batch, heads_kv,
+num_split), wgmma with the GQA query group padded to 64 rows, traversal of
+the AttnGate-selected block-index list, split-K load balancing over
+``max_selected_blocks``.
+
+Pallas/TPU-style adaptation (DESIGN.md §6):
+  * grid = (batch, heads_kv): each program owns one GQA group. The whole
+    group of ``g`` query rows stays resident as a [g, D] tile and is
+    matmul'd against each selected [block, D] K tile — the MXU-shaped
+    analog of the paper's wgmma group padding (arithmetic intensity comes
+    from the shared-sparsity group dimension, the paper's core hardware
+    point).
+  * the index list is streamed with a ``fori_loop``; padding entries
+    (idx < 0) contribute nothing (their logits are masked to -inf). The
+    loop trip count is the *compile-time* ``max_selected_blocks``, so cost
+    scales with the budget, exactly like the paper's kernel skipping
+    unselected blocks.
+  * ``num_split`` is unnecessary on the CPU interpret path (XLA
+    parallelises over the grid); on a real TPU the same kernel would add a
+    third grid axis over splits of the index list.
+
+Both kernels are lowered standalone (via aot.py) into the Fig 6 benchmark
+executables, and the sparse kernel backs the serving engine's fused decode
+ablation.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _sparse_decode_kernel(q_ref, k_ref, v_ref, idx_ref, len_ref, o_ref, *,
+                          block_size: int, max_sel: int, group: int,
+                          head_dim: int):
+    """Grid: (B, Hkv). q_ref: [1, g, D] (the GQA group); k/v_ref:
+    [1, 1, S, D]; idx_ref: [1, 1, MAXSEL] int32; len_ref: [1] int32."""
+    q = q_ref[0]  # [g, D]
+    seq_len = len_ref[0]
+    scale = 1.0 / (head_dim ** 0.5)
+
+    m0 = jnp.full((group,), NEG_INF, dtype=jnp.float32)
+    l0 = jnp.zeros((group,), dtype=jnp.float32)
+    acc0 = jnp.zeros((group, head_dim), dtype=jnp.float32)
+
+    def body(i, carry):
+        m, l, acc = carry
+        j = idx_ref[0, 0, i]
+        valid_blk = j >= 0
+        jc = jnp.maximum(j, 0)
+        k_blk = k_ref[0, 0, pl.ds(jc * block_size, block_size), :]
+        v_blk = v_ref[0, 0, pl.ds(jc * block_size, block_size), :]
+        logits = jnp.dot(q, k_blk.T) * scale  # [g, block]
+        k_pos = jc * block_size + jax.lax.iota(jnp.int32, block_size)
+        ok = valid_blk & (k_pos < seq_len)  # [block]
+        logits = jnp.where(ok[None, :], logits, NEG_INF)
+        blk_max = logits.max(axis=1)
+        m_new = jnp.maximum(m, blk_max)
+        shift = jnp.where(m_new > NEG_INF / 2, m_new, 0.0)
+        p = jnp.exp(logits - shift[:, None])
+        p = jnp.where(ok[None, :], p, 0.0)
+        corr = jnp.where(m > NEG_INF / 2, jnp.exp(m - shift), 0.0)
+        l_new = l * corr + p.sum(axis=1)
+        acc_new = acc * corr[:, None] + jnp.dot(p, v_blk)
+        return m_new, l_new, acc_new
+
+    m, l, acc = jax.lax.fori_loop(0, max_sel, body, (m0, l0, acc0))
+    o_ref[0] = acc / jnp.maximum(l, 1e-30)[:, None]
+
+
+@functools.partial(jax.jit, static_argnames=("block_size",))
+def block_sparse_decode(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                        idx: jnp.ndarray, seq_len: jnp.ndarray, *,
+                        block_size: int) -> jnp.ndarray:
+    """Block-sparse GQA decode attention for one generated token.
+
+    q: [B, H, D]; k, v: [B, Hkv, S, D]; idx: [B, Hkv, MAXSEL] int32
+    (-1 padded, shared within each GQA group); seq_len: [B] int32.
+    Returns out [B, H, D].
+    """
+    b, h, d = q.shape
+    _, hkv, s, _ = k.shape
+    group = h // hkv
+    max_sel = idx.shape[-1]
+    assert s % block_size == 0
+    kernel = functools.partial(_sparse_decode_kernel, block_size=block_size,
+                               max_sel=max_sel, group=group, head_dim=d)
+    out = pl.pallas_call(
+        kernel,
+        grid=(b, hkv),
+        in_specs=[
+            pl.BlockSpec((1, group, d), lambda bb, kh: (bb, kh, 0)),
+            pl.BlockSpec((1, 1, s, d), lambda bb, kh: (bb, kh, 0, 0)),
+            pl.BlockSpec((1, 1, s, d), lambda bb, kh: (bb, kh, 0, 0)),
+            pl.BlockSpec((1, 1, max_sel), lambda bb, kh: (bb, kh, 0)),
+            pl.BlockSpec((1,), lambda bb, kh: (bb,)),
+        ],
+        out_specs=pl.BlockSpec((1, group, d), lambda bb, kh: (bb, kh, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, h, d), jnp.float32),
+        interpret=True,
+    )(q, k, v, idx, seq_len)
+    return out
+
+
+def _dense_decode_kernel(q_ref, k_ref, v_ref, len_ref, o_ref, *,
+                         block_size: int, n_blocks: int, group: int,
+                         head_dim: int):
+    """Dense flash-decode baseline (FA3 analog): identical streaming loop,
+    but over *all* KV blocks — no index list, no skip."""
+    q = q_ref[0]
+    seq_len = len_ref[0]
+    scale = 1.0 / (head_dim ** 0.5)
+
+    m0 = jnp.full((group,), NEG_INF, dtype=jnp.float32)
+    l0 = jnp.zeros((group,), dtype=jnp.float32)
+    acc0 = jnp.zeros((group, head_dim), dtype=jnp.float32)
+
+    def body(j, carry):
+        m, l, acc = carry
+        k_blk = k_ref[0, 0, pl.ds(j * block_size, block_size), :]
+        v_blk = v_ref[0, 0, pl.ds(j * block_size, block_size), :]
+        logits = jnp.dot(q, k_blk.T) * scale
+        k_pos = j * block_size + jax.lax.iota(jnp.int32, block_size)
+        ok = k_pos < seq_len
+        logits = jnp.where(ok[None, :], logits, NEG_INF)
+        blk_max = logits.max(axis=1)
+        m_new = jnp.maximum(m, blk_max)
+        shift = jnp.where(m_new > NEG_INF / 2, m_new, 0.0)
+        p = jnp.exp(logits - shift[:, None])
+        p = jnp.where(ok[None, :], p, 0.0)
+        corr = jnp.where(m > NEG_INF / 2, jnp.exp(m - shift), 0.0)
+        l_new = l * corr + p.sum(axis=1)
+        acc_new = acc * corr[:, None] + jnp.dot(p, v_blk)
+        return m_new, l_new, acc_new
+
+    m, l, acc = jax.lax.fori_loop(0, n_blocks, body, (m0, l0, acc0))
+    o_ref[0] = acc / jnp.maximum(l, 1e-30)[:, None]
+
+
+@functools.partial(jax.jit, static_argnames=("block_size",))
+def dense_decode(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                 seq_len: jnp.ndarray, *, block_size: int) -> jnp.ndarray:
+    """Dense GQA flash-decode baseline. Same signature as the sparse kernel
+    minus the index list."""
+    b, h, d = q.shape
+    _, hkv, s, _ = k.shape
+    group = h // hkv
+    assert s % block_size == 0
+    kernel = functools.partial(_dense_decode_kernel, block_size=block_size,
+                               n_blocks=s // block_size, group=group,
+                               head_dim=d)
+    out = pl.pallas_call(
+        kernel,
+        grid=(b, hkv),
+        in_specs=[
+            pl.BlockSpec((1, group, d), lambda bb, kh: (bb, kh, 0)),
+            pl.BlockSpec((1, 1, s, d), lambda bb, kh: (bb, kh, 0, 0)),
+            pl.BlockSpec((1, 1, s, d), lambda bb, kh: (bb, kh, 0, 0)),
+            pl.BlockSpec((1,), lambda bb, kh: (bb,)),
+        ],
+        out_specs=pl.BlockSpec((1, group, d), lambda bb, kh: (bb, kh, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, h, d), jnp.float32),
+        interpret=True,
+    )(q, k, v, seq_len)
+    return out

@@ -1,0 +1,96 @@
+"""Block-sparse flash *prefill* kernel — the original SeerAttention
+setting and the paper's §6.3 unification direction.
+
+Where the decode kernel (block_sparse_decode.py) processes one query
+token against a selected KV block list, the prefill kernel processes a
+whole prompt with a *2D* block mask: for each (query-block, key-block)
+pair, a boolean activation from the prefill AttnGate decides whether the
+tile is computed or skipped. Causal structure is composed with the mask
+(upper-triangle tiles are never computed; the diagonal tile is always
+active, mirroring the decode path's always-on partial block).
+
+Same streaming (online-softmax) structure and interpret=True lowering as
+the other kernels; checked against the masked reference in ref.py by
+python/tests/test_kernels.py.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _sparse_prefill_kernel(q_ref, k_ref, v_ref, mask_ref, o_ref, *,
+                           block_q: int, block_k: int, seq_len: int,
+                           head_dim: int):
+    """Grid: (B, H, S // block_q). mask_ref: [1, 1, nqb, nkb] f32 (>0 =>
+    compute the tile); causality is enforced inside regardless."""
+    qi = pl.program_id(2)
+    q = q_ref[0, 0]  # [block_q, D]
+    q_pos = qi * block_q + jax.lax.iota(jnp.int32, block_q)
+    nkb = seq_len // block_k
+    scale = 1.0 / (head_dim ** 0.5)
+
+    m0 = jnp.full((block_q,), NEG_INF, dtype=jnp.float32)
+    l0 = jnp.zeros((block_q,), dtype=jnp.float32)
+    acc0 = jnp.zeros((block_q, head_dim), dtype=jnp.float32)
+
+    def body(j, carry):
+        m, l, acc = carry
+        active = mask_ref[0, 0, qi, j] > 0.0
+        k_blk = k_ref[0, 0, pl.ds(j * block_k, block_k), :]
+        v_blk = v_ref[0, 0, pl.ds(j * block_k, block_k), :]
+        logits = jnp.dot(q, k_blk.T) * scale
+        k_pos = j * block_k + jax.lax.iota(jnp.int32, block_k)
+        ok = (q_pos[:, None] >= k_pos[None, :]) & active
+        logits = jnp.where(ok, logits, NEG_INF)
+        blk_max = logits.max(axis=1)
+        m_new = jnp.maximum(m, blk_max)
+        shift = jnp.where(m_new > NEG_INF / 2, m_new, 0.0)
+        p = jnp.where(ok, jnp.exp(logits - shift[:, None]), 0.0)
+        corr = jnp.where(m > NEG_INF / 2, jnp.exp(m - shift), 0.0)
+        return (m_new, l * corr + p.sum(axis=1),
+                acc * corr[:, None] + jnp.dot(p, v_blk))
+
+    m, l, acc = jax.lax.fori_loop(0, nkb, body, (m0, l0, acc0))
+    o_ref[0, 0] = acc / jnp.maximum(l, 1e-30)[:, None]
+
+
+@functools.partial(jax.jit, static_argnames=("group", "block_q", "block_k"))
+def block_sparse_prefill(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                         block_mask: jnp.ndarray, *, group: int,
+                         block_q: int, block_k: int) -> jnp.ndarray:
+    """Causal GQA attention with a 2D block-activation mask.
+
+    q: [B, H, S, D]; k, v: [B, Hkv, S, D]; block_mask:
+    [B, Hkv, S//block_q, S//block_k] f32 (shared within the GQA group).
+    Returns out [B, H, S, D]. Rows whose causal+masked tile set is empty
+    yield zeros (callers always activate the diagonal in practice).
+    """
+    b, h, s, d = q.shape
+    assert s % block_q == 0 and s % block_k == 0
+    kernel = functools.partial(_sparse_prefill_kernel, block_q=block_q,
+                               block_k=block_k, seq_len=s, head_dim=d)
+    nqb, nkb = s // block_q, s // block_k
+    return pl.pallas_call(
+        kernel,
+        grid=(b, h, nqb),
+        in_specs=[
+            pl.BlockSpec((1, 1, block_q, d), lambda bb, hh, qq: (bb, hh, qq, 0)),
+            pl.BlockSpec((1, 1, s, d),
+                         lambda bb, hh, qq, group=group: (bb, hh // group, 0, 0)),
+            pl.BlockSpec((1, 1, s, d),
+                         lambda bb, hh, qq, group=group: (bb, hh // group, 0, 0)),
+            pl.BlockSpec((1, 1, nqb, nkb),
+                         lambda bb, hh, qq, group=group: (bb, hh // group, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, block_q, d),
+                               lambda bb, hh, qq: (bb, hh, qq, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, h, s, d), jnp.float32),
+        interpret=True,
+    )(q, k, v, block_mask)

@@ -1,0 +1,111 @@
+"""Ground-truth-generating FlashAttention forward kernel (paper Fig 2b).
+
+A Pallas port of the paper's modified FlashAttention-2 training kernel: a
+standard streaming (online-softmax) causal attention forward that *also*
+emits, for every query row, the column-block max-pooled attention scores —
+the distillation ground truth for the AttnGate — by reusing the running
+row-max/row-sum statistics instead of materialising the O(S^2) map.
+
+For a query row t with final running max m_t and sum l_t, the max attention
+probability inside K-block j is
+
+    gt[t, j] = exp(max_logit_block_j(t) - m_t) / l_t
+
+which is exactly ``max_{k in block j} softmax(qK^T)[t, k]``: the kernel only
+has to track the per-block max logit alongside the usual flash statistics.
+
+Hardware adaptation (DESIGN.md §6): the K-tile equals the AttnGate block
+size, the query tile keeps the whole GQA story at L2 (group max happens
+outside), and the kernel is lowered with ``interpret=True`` so it becomes
+plain HLO the CPU PJRT client can run.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _gt_flash_kernel(q_ref, k_ref, v_ref, o_ref, gt_ref, *, block_q: int,
+                     block_k: int, seq_len: int, head_dim: int):
+    """Grid: (B, H, S // block_q). K/V refs hold the full [S, D] slice of
+    the matching KV head; the loop below streams over K blocks."""
+    qi = pl.program_id(2)
+    q = q_ref[0, 0]  # [block_q, D]
+    q_pos = qi * block_q + jax.lax.iota(jnp.int32, block_q)  # [block_q]
+    nblk = seq_len // block_k
+    scale = 1.0 / (head_dim ** 0.5)
+
+    m0 = jnp.full((block_q,), NEG_INF, dtype=jnp.float32)
+    l0 = jnp.zeros((block_q,), dtype=jnp.float32)
+    acc0 = jnp.zeros((block_q, head_dim), dtype=jnp.float32)
+    mb0 = jnp.full((block_q, nblk), NEG_INF, dtype=jnp.float32)
+
+    def body(j, carry):
+        m, l, acc, mb = carry
+        k_blk = k_ref[0, 0, pl.ds(j * block_k, block_k), :]  # [block_k, D]
+        v_blk = v_ref[0, 0, pl.ds(j * block_k, block_k), :]
+        logits = jnp.dot(q, k_blk.T) * scale  # [block_q, block_k]
+        k_pos = j * block_k + jax.lax.iota(jnp.int32, block_k)
+        causal = q_pos[:, None] >= k_pos[None, :]
+        logits = jnp.where(causal, logits, NEG_INF)
+        blk_max = logits.max(axis=1)  # [block_q]
+        mb = mb.at[:, j].set(blk_max)
+        m_new = jnp.maximum(m, blk_max)
+        # Guard fully-masked rows: keep exp argument finite.
+        shift = jnp.where(m_new > NEG_INF / 2, m_new, 0.0)
+        p = jnp.exp(logits - shift[:, None])
+        p = jnp.where(causal, p, 0.0)
+        correction = jnp.where(m > NEG_INF / 2, jnp.exp(m - shift), 0.0)
+        l_new = l * correction + p.sum(axis=1)
+        acc_new = acc * correction[:, None] + jnp.dot(p, v_blk)
+        return m_new, l_new, acc_new, mb
+
+    m, l, acc, mb = jax.lax.fori_loop(0, nblk, body, (m0, l0, acc0, mb0))
+    l_safe = jnp.maximum(l, 1e-30)
+    o_ref[0, 0] = acc / l_safe[:, None]
+    shift = jnp.where(m > NEG_INF / 2, m, 0.0)
+    gt = jnp.where(mb > NEG_INF / 2,
+                   jnp.exp(mb - shift[:, None]) / l_safe[:, None], 0.0)
+    gt_ref[0, 0] = gt
+
+
+@functools.partial(jax.jit, static_argnames=("group", "block_k", "block_q"))
+def gt_flash(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *, group: int,
+             block_k: int, block_q: int = 64):
+    """Causal GQA flash attention that also returns GT block scores.
+
+    q: [B, H, S, D]; k, v: [B, Hkv, S, D], H = Hkv * group.
+    Returns (out [B, H, S, D], gt [B, H, S, S // block_k]).
+    ``gt`` is per *query head*; the GQA group max + normalisation live in
+    the caller (see ref.gt_block_scores_ref / gate.distill_targets).
+    """
+    b, h, s, d = q.shape
+    assert s % block_q == 0 and s % block_k == 0
+    nblk = s // block_k
+    kernel = functools.partial(_gt_flash_kernel, block_q=block_q,
+                               block_k=block_k, seq_len=s, head_dim=d)
+    out, gt = pl.pallas_call(
+        kernel,
+        grid=(b, h, s // block_q),
+        in_specs=[
+            pl.BlockSpec((1, 1, block_q, d), lambda bb, hh, qq: (bb, hh, qq, 0)),
+            pl.BlockSpec((1, 1, s, d), lambda bb, hh, qq, group=group: (bb, hh // group, 0, 0)),
+            pl.BlockSpec((1, 1, s, d), lambda bb, hh, qq, group=group: (bb, hh // group, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, block_q, d), lambda bb, hh, qq: (bb, hh, qq, 0)),
+            pl.BlockSpec((1, 1, block_q, nblk), lambda bb, hh, qq: (bb, hh, qq, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, h, s, d), jnp.float32),
+            jax.ShapeDtypeStruct((b, h, s, nblk), jnp.float32),
+        ],
+        interpret=True,
+    )(q, k, v)
+    return out, gt

@@ -1,0 +1,144 @@
+"""Pure-jnp reference oracles for the Pallas kernels.
+
+Every Pallas kernel in this package is checked against the corresponding
+function here by ``python/tests``. These references are deliberately naive
+(O(S^2) materialised attention maps) — clarity over speed.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def repeat_kv(x: jnp.ndarray, group: int) -> jnp.ndarray:
+    """[B, Hkv, S, D] -> [B, Hkv*group, S, D] by repeating each KV head."""
+    b, hkv, s, d = x.shape
+    x = jnp.broadcast_to(x[:, :, None], (b, hkv, group, s, d))
+    return x.reshape(b, hkv * group, s, d)
+
+
+def causal_attention_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                         group: int):
+    """Naive causal GQA attention.
+
+    q: [B, H, S, D]; k, v: [B, Hkv, S, D] with H == Hkv * group.
+    Returns (out [B, H, S, D], probs [B, H, S, S]).
+    """
+    b, h, s, d = q.shape
+    kf = repeat_kv(k, group)
+    vf = repeat_kv(v, group)
+    logits = jnp.einsum("bhqd,bhkd->bhqk", q, kf) / jnp.sqrt(jnp.float32(d))
+    mask = jnp.tril(jnp.ones((s, s), dtype=bool))
+    logits = jnp.where(mask[None, None], logits, NEG_INF)
+    probs = jnp.exp(logits - logits.max(-1, keepdims=True))
+    probs = probs / probs.sum(-1, keepdims=True)
+    out = jnp.einsum("bhqk,bhkd->bhqd", probs, vf)
+    return out, probs
+
+
+def gt_block_scores_ref(probs: jnp.ndarray, block_size: int,
+                        group: int) -> jnp.ndarray:
+    """Ground-truth block scores (paper §2.3): column-wise 1D max-pool of
+    the attention map per block, then max over each GQA query-head group.
+
+    probs: [B, H, S, S] -> gt [B, Hkv, S, NBLK] (unnormalised, unmasked:
+    includes the query's own partial block; masking/normalisation to the
+    *complete preceding blocks* happens in the caller, matching the decode
+    AttnGate which only scores complete blocks).
+    """
+    b, h, s, _ = probs.shape
+    nblk = s // block_size
+    p = probs.reshape(b, h, s, nblk, block_size)
+    col = p.max(-1)  # [B, H, S, NBLK]
+    hkv = h // group
+    colg = col.reshape(b, hkv, group, s, nblk).max(2)
+    return colg
+
+
+def normalize_gt(gt: jnp.ndarray, block_size: int) -> jnp.ndarray:
+    """Mask GT to complete preceding blocks (j < t // block) and normalise
+    each row to sum 1 (rows with no valid block stay all-zero)."""
+    b, hkv, s, nblk = gt.shape
+    t = jnp.arange(s)[:, None]
+    j = jnp.arange(nblk)[None, :]
+    valid = (j < t // block_size).astype(gt.dtype)  # [S, NBLK]
+    gt = gt * valid[None, None]
+    denom = gt.sum(-1, keepdims=True)
+    return jnp.where(denom > 0, gt / jnp.maximum(denom, 1e-30), 0.0)
+
+
+def sparse_decode_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                      idx: jnp.ndarray, seq_len: jnp.ndarray,
+                      block_size: int) -> jnp.ndarray:
+    """Naive block-sparse decode attention (single query token).
+
+    q: [B, H, D]; k, v: [B, Hkv, S, D]; idx: [B, Hkv, MAXSEL] int32 block
+    indices, -1 = padding; seq_len: [B] int32 valid KV length.
+    Sparsity is shared within each GQA group (paper §2.2).
+    Returns out [B, H, D].
+    """
+    b, h, d = q.shape
+    _, hkv, s, _ = k.shape
+    group = h // hkv
+    nblk = s // block_size
+    # Token-level mask from the selected block indices.
+    blk_sel = jnp.zeros((b, hkv, nblk), dtype=bool)
+    bi = jnp.arange(b)[:, None, None]
+    hi = jnp.arange(hkv)[None, :, None]
+    safe_idx = jnp.clip(idx, 0, nblk - 1)
+    blk_sel = blk_sel.at[bi, hi, safe_idx].max(idx >= 0)
+    tok_sel = jnp.repeat(blk_sel, block_size, axis=-1)  # [B, Hkv, S]
+    in_len = jnp.arange(s)[None] < seq_len[:, None]  # [B, S]
+    tok_mask = tok_sel & in_len[:, None]
+    kf = repeat_kv(k, group)
+    vf = repeat_kv(v, group)
+    maskf = jnp.repeat(tok_mask, group, axis=1)  # [B, H, S]
+    logits = jnp.einsum("bhd,bhkd->bhk", q, kf) / jnp.sqrt(jnp.float32(d))
+    logits = jnp.where(maskf, logits, NEG_INF)
+    m = logits.max(-1, keepdims=True)
+    e = jnp.exp(logits - m) * maskf
+    l = jnp.maximum(e.sum(-1, keepdims=True), 1e-30)
+    return jnp.einsum("bhk,bhkd->bhd", e / l, vf)
+
+
+def dense_decode_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                     seq_len: jnp.ndarray) -> jnp.ndarray:
+    """Naive dense decode attention (FlashAttention-3-baseline analog)."""
+    b, h, d = q.shape
+    _, hkv, s, _ = k.shape
+    group = h // hkv
+    kf = repeat_kv(k, group)
+    vf = repeat_kv(v, group)
+    logits = jnp.einsum("bhd,bhkd->bhk", q, kf) / jnp.sqrt(jnp.float32(d))
+    in_len = jnp.arange(s)[None, None] < seq_len[:, None, None]
+    logits = jnp.where(in_len, logits, NEG_INF)
+    m = logits.max(-1, keepdims=True)
+    e = jnp.exp(logits - m) * in_len
+    l = jnp.maximum(e.sum(-1, keepdims=True), 1e-30)
+    return jnp.einsum("bhk,bhkd->bhd", e / l, vf)
+
+
+def sparse_prefill_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                       block_mask: jnp.ndarray, block_q: int,
+                       block_k: int) -> jnp.ndarray:
+    """Naive causal GQA attention with a 2D block-activation mask (the
+    block_sparse_prefill oracle). block_mask: [B, Hkv, nqb, nkb]."""
+    b, h, s, d = q.shape
+    hkv = k.shape[1]
+    group = h // hkv
+    kf = repeat_kv(k, group)
+    vf = repeat_kv(v, group)
+    logits = jnp.einsum("bhqd,bhkd->bhqk", q, kf) / jnp.sqrt(jnp.float32(d))
+    causal = jnp.tril(jnp.ones((s, s), dtype=bool))
+    tile = jnp.repeat(jnp.repeat(block_mask > 0, block_q, axis=2),
+                      block_k, axis=3)  # [B, Hkv, S, S]
+    tile = jnp.repeat(tile, group, axis=1)  # [B, H, S, S]
+    ok = causal[None, None] & tile
+    logits = jnp.where(ok, logits, NEG_INF)
+    m = logits.max(-1, keepdims=True)
+    m = jnp.where(m > NEG_INF / 2, m, 0.0)
+    e = jnp.where(ok, jnp.exp(logits - m), 0.0)
+    l = jnp.maximum(e.sum(-1, keepdims=True), 1e-30)
+    return jnp.einsum("bhqk,bhkd->bhqd", e / l, vf)

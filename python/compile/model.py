@@ -1,0 +1,260 @@
+"""L2: the GQA transformer (Qwen3-style, scaled) and its decode-path pieces.
+
+The model is expressed as pure functions over *flat ordered parameter
+lists* (see params.py) so that every function AOT-lowers to an HLO
+executable with a stable, manifest-documented argument order.
+
+Decode is split per layer (DESIGN.md §2): ``layer_pre`` produces Q/K/V and
+the gate query for one token; the Rust coordinator then scores blocks,
+selects them (budget/threshold/quest/oracle policy) and gathers the
+selected KV; ``layer_post_sel`` consumes the gathered blocks. This mirrors
+a paged-KV serving system where page selection is host-side.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import gate as gate_mod
+from .config import ModelConfig
+from .kernels.gt_flash import gt_flash
+from .kernels import ref
+from .params import as_dict
+from .rope import apply_rope
+
+NEG_INF = -1e30
+
+
+def rmsnorm(x: jnp.ndarray, w: jnp.ndarray, eps: float) -> jnp.ndarray:
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    return x * jax.lax.rsqrt(var + eps) * w
+
+
+def mlp(x: jnp.ndarray, w1: jnp.ndarray, w2: jnp.ndarray) -> jnp.ndarray:
+    h = x @ w1
+    return (h * jax.nn.sigmoid(h)) @ w2  # SiLU
+
+
+# ---------------------------------------------------------------------------
+# Full-sequence forward (training / prefill)
+# ---------------------------------------------------------------------------
+
+def _qkv(p: dict, l: int, cfg: ModelConfig, x: jnp.ndarray,
+         positions: jnp.ndarray):
+    """Project one layer's Q/K/V for a full sequence.
+
+    x: [B, S, d]; positions: [B, S] int32. Returns
+    (q_rope [B,H,S,dh], k_rope [B,Hkv,S,dh], v [B,Hkv,S,dh],
+     q_pre [B,S,H,dh], k_pre [B,S,Hkv,dh]).
+    """
+    b, s, _ = x.shape
+    dh = cfg.head_dim
+    xn = rmsnorm(x, p[f"l{l}.ln1"], cfg.rms_eps)
+    q = (xn @ p[f"l{l}.wq"]).reshape(b, s, cfg.n_heads, dh)
+    k = (xn @ p[f"l{l}.wk"]).reshape(b, s, cfg.n_kv_heads, dh)
+    v = (xn @ p[f"l{l}.wv"]).reshape(b, s, cfg.n_kv_heads, dh)
+    q_rope = apply_rope(q, positions[..., None], cfg.rope_theta)
+    k_rope = apply_rope(k, positions[..., None], cfg.rope_theta)
+    to_hsd = lambda t: jnp.transpose(t, (0, 2, 1, 3))
+    return to_hsd(q_rope), to_hsd(k_rope), to_hsd(v), q, k
+
+
+def _finish_layer(p: dict, l: int, cfg: ModelConfig, x: jnp.ndarray,
+                  attn_out_hsd: jnp.ndarray) -> jnp.ndarray:
+    """attn_out_hsd: [B, H, S, dh] -> wo -> residual -> MLP block."""
+    b, h, s, dh = attn_out_hsd.shape
+    attn = jnp.transpose(attn_out_hsd, (0, 2, 1, 3)).reshape(b, s, h * dh)
+    x = x + attn @ p[f"l{l}.wo"]
+    return x + mlp(rmsnorm(x, p[f"l{l}.ln2"], cfg.rms_eps),
+                   p[f"l{l}.w1"], p[f"l{l}.w2"])
+
+
+def forward_train(params: list, cfg: ModelConfig,
+                  ids: jnp.ndarray) -> jnp.ndarray:
+    """Dense causal forward for pretraining. ids: [B, S] -> logits [B,S,V]."""
+    p = as_dict(cfg, params)
+    b, s = ids.shape
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+    x = p["emb"][ids]
+    for l in range(cfg.n_layers):
+        q, k, v, _, _ = _qkv(p, l, cfg, x, positions)
+        out, _ = ref.causal_attention_ref(q, k, v, cfg.group_size)
+        x = _finish_layer(p, l, cfg, x, out)
+    xn = rmsnorm(x, p["ln_f"], cfg.rms_eps)
+    return xn @ p["head"]
+
+
+def forward_with_gt(params: list, cfg: ModelConfig, ids: jnp.ndarray,
+                    block_size: int):
+    """Frozen-model forward through the GT-generating flash kernel
+    (paper Fig 2): returns per-layer distillation inputs.
+
+    Returns (pre_q [L][B,S,H,dh], pre_k [L][B,Hkv,S,dh],
+             gt_norm [L][B,Hkv,S,NBLK]).
+
+    The base model is *frozen* during distillation (§2.3): gradients are
+    stopped at the parameters, which also keeps the non-differentiable
+    GT flash kernel off every autodiff path.
+    """
+    params = [jax.lax.stop_gradient(t) for t in params]
+    p = as_dict(cfg, params)
+    b, s = ids.shape
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+    x = p["emb"][ids]
+    pre_qs, pre_ks, gts = [], [], []
+    for l in range(cfg.n_layers):
+        q, k, v, q_pre, k_pre = _qkv(p, l, cfg, x, positions)
+        out, gt_h = gt_flash(q, k, v, group=cfg.group_size,
+                             block_k=block_size)
+        nblk = s // block_size
+        gt = gt_h.reshape(b, cfg.n_kv_heads, cfg.group_size, s, nblk).max(2)
+        gts.append(ref.normalize_gt(gt, block_size))
+        pre_qs.append(q_pre)
+        pre_ks.append(jnp.transpose(k_pre, (0, 2, 1, 3)))
+        x = _finish_layer(p, l, cfg, x, out)
+    return pre_qs, pre_ks, gts
+
+
+def prefill(params: list, cfg: ModelConfig, ids: jnp.ndarray,
+            seq_len: jnp.ndarray):
+    """Dense prefill that materialises the decode-time caches.
+
+    ids: [B, S]; seq_len: [B] int32 (positions >= seq_len are padding).
+    Returns (logits [B,S,V], k_rope [L,B,Hkv,S,dh], v [L,B,Hkv,S,dh],
+             k_pre [L,B,Hkv,S,dh]).
+    The Rust side builds the K compression cache from k_pre (it owns the
+    gate weights) and reads logits at seq_len-1 to sample the first
+    generated token.
+    """
+    p = as_dict(cfg, params)
+    b, s = ids.shape
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+    x = p["emb"][ids]
+    k_caches, v_caches, kpre_caches = [], [], []
+    for l in range(cfg.n_layers):
+        q, k, v, _, k_pre = _qkv(p, l, cfg, x, positions)
+        # Mask padded keys so they never receive attention.
+        kmask = (jnp.arange(s)[None] < seq_len[:, None])  # [B, S]
+        kf = ref.repeat_kv(k, cfg.group_size)
+        vf = ref.repeat_kv(v, cfg.group_size)
+        logits = jnp.einsum("bhqd,bhkd->bhqk", q, kf) / jnp.sqrt(
+            jnp.float32(cfg.head_dim))
+        causal = jnp.tril(jnp.ones((s, s), dtype=bool))
+        ok = causal[None, None] & kmask[:, None, None, :]
+        logits = jnp.where(ok, logits, NEG_INF)
+        m = logits.max(-1, keepdims=True)
+        e = jnp.exp(logits - m)
+        e = jnp.where(ok, e, 0.0)
+        probs = e / jnp.maximum(e.sum(-1, keepdims=True), 1e-30)
+        out = jnp.einsum("bhqk,bhkd->bhqd", probs, vf)
+        k_caches.append(k)
+        v_caches.append(v)
+        kpre_caches.append(jnp.transpose(k_pre, (0, 2, 1, 3)))
+        x = _finish_layer(p, l, cfg, x, out)
+    xn = rmsnorm(x, p["ln_f"], cfg.rms_eps)
+    logits = xn @ p["head"]
+    return (logits, jnp.stack(k_caches), jnp.stack(v_caches),
+            jnp.stack(kpre_caches))
+
+
+# ---------------------------------------------------------------------------
+# Decode-path per-layer pieces (one token per sequence)
+# ---------------------------------------------------------------------------
+
+def layer_pre(x: jnp.ndarray, pos: jnp.ndarray, wq: jnp.ndarray,
+              wk: jnp.ndarray, wv: jnp.ndarray, ln1: jnp.ndarray,
+              wq_gate: jnp.ndarray, cfg: ModelConfig):
+    """One layer's projections for a single decode token.
+
+    x: [B, d]; pos: [B] int32.
+    Returns (q_rope [B,H,dh], k_rope [B,Hkv,dh], v [B,Hkv,dh],
+             k_pre [B,Hkv,dh], q_gate [B,Hkv,dg]).
+    k_rope/v extend the Rust-owned KV cache; k_pre feeds the K compression
+    cache update; q_gate scores blocks for this token.
+    """
+    b, _ = x.shape
+    dh = cfg.head_dim
+    xn = rmsnorm(x, ln1, cfg.rms_eps)
+    q = (xn @ wq).reshape(b, cfg.n_heads, dh)
+    k = (xn @ wk).reshape(b, cfg.n_kv_heads, dh)
+    v = (xn @ wv).reshape(b, cfg.n_kv_heads, dh)
+    q_rope = apply_rope(q, pos[:, None], cfg.rope_theta)
+    k_rope = apply_rope(k, pos[:, None], cfg.rope_theta)
+    q_gate = gate_mod.gate_query(wq_gate, q, pos, cfg.rope_theta)
+    return q_rope, k_rope, v, k, q_gate
+
+
+def layer_post_sel(q_rope: jnp.ndarray, k_sel: jnp.ndarray,
+                   v_sel: jnp.ndarray, sel_mask: jnp.ndarray,
+                   resid: jnp.ndarray, wo: jnp.ndarray, w1: jnp.ndarray,
+                   w2: jnp.ndarray, ln2: jnp.ndarray, cfg: ModelConfig):
+    """Sparse attention over Rust-gathered KV blocks + rest of the layer.
+
+    q_rope: [B, H, dh]; k_sel/v_sel: [B, Hkv, T, dh] (T = selected tokens,
+    gathered + padded by the coordinator); sel_mask: [B, Hkv, T] (1 valid);
+    resid: [B, d] (the layer input). Returns x' [B, d].
+    """
+    b, h, dh = q_rope.shape
+    hkv = cfg.n_kv_heads
+    g = cfg.group_size
+    qg = q_rope.reshape(b, hkv, g, dh)
+    logits = jnp.einsum("bkgd,bktd->bkgt", qg, k_sel) / jnp.sqrt(
+        jnp.float32(dh))
+    ok = sel_mask[:, :, None, :] > 0
+    logits = jnp.where(ok, logits, NEG_INF)
+    m = logits.max(-1, keepdims=True)
+    m = jnp.where(m > NEG_INF / 2, m, 0.0)
+    e = jnp.where(ok, jnp.exp(logits - m), 0.0)
+    probs = e / jnp.maximum(e.sum(-1, keepdims=True), 1e-30)
+    attn = jnp.einsum("bkgt,bktd->bkgd", probs, v_sel).reshape(b, h * dh)
+    x = resid + attn @ wo
+    return x + mlp(rmsnorm(x, ln2, cfg.rms_eps), w1, w2)
+
+
+def layer_post_sel_perhead(q_rope: jnp.ndarray, k_sel: jnp.ndarray,
+                           v_sel: jnp.ndarray, sel_mask: jnp.ndarray,
+                           resid: jnp.ndarray, wo: jnp.ndarray,
+                           w1: jnp.ndarray, w2: jnp.ndarray,
+                           ln2: jnp.ndarray, cfg: ModelConfig):
+    """Per-query-head sparse attention (Quest baseline: no shared sparsity
+    within the GQA group, §4.1).
+
+    q_rope: [B, H, dh]; k_sel/v_sel: [B, H, T, dh] (gathered per query
+    head); sel_mask: [B, H, T]. Returns x' [B, d].
+    """
+    b, h, dh = q_rope.shape
+    logits = jnp.einsum("bhd,bhtd->bht", q_rope, k_sel) / jnp.sqrt(
+        jnp.float32(dh))
+    ok = sel_mask > 0
+    logits = jnp.where(ok, logits, NEG_INF)
+    m = logits.max(-1, keepdims=True)
+    m = jnp.where(m > NEG_INF / 2, m, 0.0)
+    e = jnp.where(ok, jnp.exp(logits - m), 0.0)
+    probs = e / jnp.maximum(e.sum(-1, keepdims=True), 1e-30)
+    attn = jnp.einsum("bht,bhtd->bhd", probs, v_sel).reshape(b, h * dh)
+    x = resid + attn @ wo
+    return x + mlp(rmsnorm(x, ln2, cfg.rms_eps), w1, w2)
+
+
+def layer_post_dense(q_rope: jnp.ndarray, k_cache: jnp.ndarray,
+                     v_cache: jnp.ndarray, seq_len: jnp.ndarray,
+                     resid: jnp.ndarray, wo: jnp.ndarray, w1: jnp.ndarray,
+                     w2: jnp.ndarray, ln2: jnp.ndarray, cfg: ModelConfig):
+    """Dense decode attention over the full KV cache (baseline).
+
+    k_cache/v_cache: [B, Hkv, S, dh]; seq_len: [B] int32.
+    """
+    b, h, dh = q_rope.shape
+    s = k_cache.shape[2]
+    mask = (jnp.arange(s)[None, None] <
+            seq_len[:, None, None]).astype(jnp.float32)  # [B,1,S]
+    mask = jnp.broadcast_to(mask, (b, cfg.n_kv_heads, s))
+    return layer_post_sel(q_rope, k_cache, v_cache, mask, resid, wo, w1,
+                          w2, ln2, cfg)
+
+
+def lm_head(x: jnp.ndarray, ln_f: jnp.ndarray, head: jnp.ndarray,
+            cfg: ModelConfig) -> jnp.ndarray:
+    """Final norm + output projection. x: [B, d] -> logits [B, V]."""
+    return rmsnorm(x, ln_f, cfg.rms_eps) @ head

@@ -1,0 +1,101 @@
+"""Parameter layout contract shared with the Rust coordinator.
+
+Parameters are handled as *flat ordered lists* of f32 tensors: the order
+defined by ``param_specs`` / ``gate_specs`` is recorded in
+``artifacts/manifest.json`` and mirrored by ``rust/src/model/params.rs``.
+Checkpoints are raw little-endian f32 concatenations in that order.
+"""
+
+from __future__ import annotations
+
+import struct
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .config import ModelConfig
+
+
+def param_specs(cfg: ModelConfig) -> list:
+    """Ordered (name, shape) list for the base model parameters."""
+    d, dh = cfg.d_model, cfg.head_dim
+    specs = [("emb", (cfg.vocab, d))]
+    for l in range(cfg.n_layers):
+        specs += [
+            (f"l{l}.wq", (d, cfg.n_heads * dh)),
+            (f"l{l}.wk", (d, cfg.n_kv_heads * dh)),
+            (f"l{l}.wv", (d, cfg.n_kv_heads * dh)),
+            (f"l{l}.wo", (cfg.n_heads * dh, d)),
+            (f"l{l}.w1", (d, cfg.mlp_hidden)),
+            (f"l{l}.w2", (cfg.mlp_hidden, d)),
+            (f"l{l}.ln1", (d,)),
+            (f"l{l}.ln2", (d,)),
+        ]
+    specs += [("ln_f", (d,)), ("head", (d, cfg.vocab))]
+    return specs
+
+
+def gate_specs(cfg: ModelConfig) -> list:
+    """Ordered (name, shape) list for the AttnGate parameters (§2.2):
+    per-KV-head query aggregation + pooled-K projection."""
+    g, dh, dg = cfg.group_size, cfg.head_dim, cfg.d_gate
+    specs = []
+    for l in range(cfg.n_layers):
+        specs += [
+            (f"l{l}.wq_gate", (cfg.n_kv_heads, g * dh, dg)),
+            (f"l{l}.wk_gate", (cfg.n_kv_heads, 3 * dh, dg)),
+        ]
+    return specs
+
+
+def init_params(cfg: ModelConfig, seed: int = 0) -> list:
+    """Initialise base-model parameters (list in param_specs order)."""
+    key = jax.random.PRNGKey(seed)
+    out = []
+    for name, shape in param_specs(cfg):
+        key, sub = jax.random.split(key)
+        if name.endswith(("ln1", "ln2")) or name == "ln_f":
+            out.append(jnp.ones(shape, dtype=jnp.float32))
+        else:
+            fan_in = shape[0] if len(shape) > 1 else shape[0]
+            std = 0.02 if name in ("emb", "head") else 1.0 / np.sqrt(fan_in)
+            out.append(std * jax.random.normal(sub, shape, dtype=jnp.float32))
+    return out
+
+
+def init_gate(cfg: ModelConfig, seed: int = 1) -> list:
+    """Initialise AttnGate parameters (list in gate_specs order)."""
+    key = jax.random.PRNGKey(seed)
+    out = []
+    for _, shape in gate_specs(cfg):
+        key, sub = jax.random.split(key)
+        std = 1.0 / np.sqrt(shape[-2])
+        out.append(std * jax.random.normal(sub, shape, dtype=jnp.float32))
+    return out
+
+
+def as_dict(cfg: ModelConfig, flat: list) -> dict:
+    return {name: t for (name, _), t in zip(param_specs(cfg), flat)}
+
+
+def gate_as_dict(cfg: ModelConfig, flat: list) -> dict:
+    return {name: t for (name, _), t in zip(gate_specs(cfg), flat)}
+
+
+def save_flat(path: str, flat: list) -> None:
+    """Raw little-endian f32 concatenation in spec order."""
+    with open(path, "wb") as f:
+        for t in flat:
+            f.write(np.asarray(t, dtype="<f4").tobytes())
+
+
+def load_flat(path: str, specs: list) -> list:
+    out = []
+    with open(path, "rb") as f:
+        for _, shape in specs:
+            n = int(np.prod(shape))
+            buf = f.read(4 * n)
+            assert len(buf) == 4 * n, "truncated checkpoint"
+            out.append(jnp.asarray(np.frombuffer(buf, dtype="<f4").reshape(shape)))
+    return out

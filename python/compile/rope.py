@@ -1,0 +1,46 @@
+"""Rotary positional embedding (RoPE, Su et al. 2024) helpers.
+
+Used in three places, mirroring the paper:
+  * the base model's attention Q/K (standard RoPE over head_dim),
+  * the AttnGate query path (RoPE over d_gate at the query's absolute
+    position, eq. 1a),
+  * the AttnGate key-compression path (RoPE over d_gate with the position
+    of the *first token of each block*, eq. 1b / §2.2).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def rope_freqs(dim: int, theta: float) -> jnp.ndarray:
+    """Inverse frequencies for a rotary embedding of width ``dim``."""
+    assert dim % 2 == 0, "RoPE width must be even"
+    return 1.0 / (theta ** (jnp.arange(0, dim, 2, dtype=jnp.float32) / dim))
+
+
+def rope_cos_sin(positions: jnp.ndarray, dim: int, theta: float):
+    """cos/sin tables for integer ``positions`` (any shape).
+
+    Returns arrays of shape positions.shape + (dim//2,).
+    """
+    freqs = rope_freqs(dim, theta)  # [dim/2]
+    angles = positions.astype(jnp.float32)[..., None] * freqs  # [..., dim/2]
+    return jnp.cos(angles), jnp.sin(angles)
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float) -> jnp.ndarray:
+    """Apply RoPE to the trailing dimension of ``x``.
+
+    ``x``: [..., dim]; ``positions``: broadcastable to x.shape[:-1].
+    Uses the interleaved-pair convention: (x_even, x_odd) rotated per pair.
+    """
+    dim = x.shape[-1]
+    cos, sin = rope_cos_sin(positions, dim, theta)  # [..., dim/2]
+    x_even = x[..., 0::2]
+    x_odd = x[..., 1::2]
+    out_even = x_even * cos - x_odd * sin
+    out_odd = x_even * sin + x_odd * cos
+    # Re-interleave.
+    out = jnp.stack([out_even, out_odd], axis=-1)
+    return out.reshape(x.shape)

@@ -1,0 +1,113 @@
+"""Fused training steps, AOT-lowered and driven by the Rust trainer.
+
+Each step is one HLO executable doing forward + backward + AdamW update
+(the paper trains on MI300x with DeepSpeed ZeRO-2; our single-device analog
+is a fused donated-buffer step). The Rust side owns the parameter / Adam
+state buffers and the LR schedule (cosine decay, as in the paper §4.1) and
+feeds ``lr`` as a scalar each step.
+
+``distill_step`` is the paper's core training contribution (§2.3): the
+base model is frozen (stop_gradient), the GT-generating flash kernel
+produces the 1D-maxpooled target distribution, and only the AttnGate
+parameters receive gradients from the KL loss.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import gate as gate_mod
+from .config import ModelConfig
+from .model import forward_train, forward_with_gt
+
+ADAM_B1 = 0.9
+ADAM_B2 = 0.95
+ADAM_EPS = 1e-8
+WEIGHT_DECAY = 0.01
+
+
+def _adamw_update(params: list, grads: list, ms: list, vs: list,
+                  step: jnp.ndarray, lr: jnp.ndarray):
+    """AdamW with bias correction; weight decay on matrices only."""
+    new_p, new_m, new_v = [], [], []
+    t = step + 1.0
+    bc1 = 1.0 - ADAM_B1 ** t
+    bc2 = 1.0 - ADAM_B2 ** t
+    for p, g, m, v in zip(params, grads, ms, vs):
+        m2 = ADAM_B1 * m + (1.0 - ADAM_B1) * g
+        v2 = ADAM_B2 * v + (1.0 - ADAM_B2) * g * g
+        upd = (m2 / bc1) / (jnp.sqrt(v2 / bc2) + ADAM_EPS)
+        wd = WEIGHT_DECAY if p.ndim >= 2 else 0.0
+        new_p.append(p - lr * (upd + wd * p))
+        new_m.append(m2)
+        new_v.append(v2)
+    return new_p, new_m, new_v
+
+
+def lm_loss(params: list, cfg: ModelConfig, ids: jnp.ndarray,
+            loss_w: jnp.ndarray) -> jnp.ndarray:
+    """Weighted next-token cross entropy. ids: [B,S]; loss_w: [B,S]
+    (weight for predicting ids[:, t] from position t-1; loss_w[:, 0]
+    is ignored)."""
+    logits = forward_train(params, cfg, ids)  # [B,S,V]
+    logp = jax.nn.log_softmax(logits[:, :-1], axis=-1)
+    tgt = ids[:, 1:]
+    nll = -jnp.take_along_axis(logp, tgt[..., None], axis=-1)[..., 0]
+    w = loss_w[:, 1:]
+    return (nll * w).sum() / jnp.maximum(w.sum(), 1.0)
+
+
+def pretrain_step(params: list, ms: list, vs: list, step: jnp.ndarray,
+                  lr: jnp.ndarray, ids: jnp.ndarray, loss_w: jnp.ndarray,
+                  cfg: ModelConfig):
+    """One fused LM training step. Returns (params', ms', vs', loss)."""
+    loss, grads = jax.value_and_grad(
+        lambda p: lm_loss(p, cfg, ids, loss_w))(params)
+    new_p, new_m, new_v = _adamw_update(params, grads, ms, vs, step, lr)
+    return new_p, new_m, new_v, loss
+
+
+def gate_forward(gates: list, cfg: ModelConfig, pre_qs: list, pre_ks: list,
+                 block_size: int):
+    """AttnGate forward for all layers over a full training sequence.
+
+    pre_qs[l]: [B,S,H,dh]; pre_ks[l]: [B,Hkv,S,dh].
+    Returns per-layer gate logits [B,S,Hkv,NBLK].
+    """
+    from .params import gate_as_dict
+    gd = gate_as_dict(cfg, gates)
+    b, s = pre_qs[0].shape[:2]
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+    out = []
+    for l in range(cfg.n_layers):
+        qg = gate_mod.gate_query(gd[f"l{l}.wq_gate"], pre_qs[l], positions,
+                                 cfg.rope_theta)  # [B,S,Hkv,dg]
+        kc = gate_mod.k_compress(gd[f"l{l}.wk_gate"], pre_ks[l], block_size,
+                                 cfg.rope_theta)  # [B,Hkv,NBLK,dg]
+        out.append(gate_mod.gate_scores(qg, kc))  # [B,S,Hkv,NBLK]
+    return out
+
+
+def distill_loss(gates: list, params: list, cfg: ModelConfig,
+                 ids: jnp.ndarray, block_size: int) -> jnp.ndarray:
+    """Self-distillation KL over all layers (frozen base model)."""
+    pre_qs, pre_ks, gts = forward_with_gt(params, cfg, ids, block_size)
+    pre_qs = [jax.lax.stop_gradient(t) for t in pre_qs]
+    pre_ks = [jax.lax.stop_gradient(t) for t in pre_ks]
+    gts = [jax.lax.stop_gradient(t) for t in gts]
+    logits = gate_forward(gates, cfg, pre_qs, pre_ks, block_size)
+    kls = [gate_mod.distill_kl(lg, gt, block_size)
+           for lg, gt in zip(logits, gts)]
+    return jnp.stack(kls).mean()
+
+
+def distill_step(params: list, gates: list, gms: list, gvs: list,
+                 step: jnp.ndarray, lr: jnp.ndarray, ids: jnp.ndarray,
+                 cfg: ModelConfig, block_size: int):
+    """One fused AttnGate distillation step (base model frozen).
+    Returns (gates', gms', gvs', kl)."""
+    kl, grads = jax.value_and_grad(
+        lambda g: distill_loss(g, params, cfg, ids, block_size))(gates)
+    new_g, new_m, new_v = _adamw_update(gates, grads, gms, gvs, step, lr)
+    return new_g, new_m, new_v, kl

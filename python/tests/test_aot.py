@@ -1,0 +1,103 @@
+"""AOT pipeline tests: manifest structure, HLO text emission, checkpoint
+round-trip, fixture generation."""
+
+import json
+import os
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import aot
+from compile import params as P
+from compile.config import AotConfig, KernelBenchConfig, ModelConfig
+
+tcfg = ModelConfig(vocab=64, d_model=64, n_layers=2, n_heads=4,
+                   n_kv_heads=2, head_dim=16, mlp_hidden=128, block_size=8,
+                   max_seq=64)
+taot = AotConfig(decode_batch=2, prefill_len=64, sel_token_variants=(16,),
+                 train_batch=1, train_len=64, distill_block_sizes=(8,),
+                 distill_batch=1, distill_len=64)
+tkb = KernelBenchConfig(n_heads=4, n_kv_heads=2, head_dim=16, block_size=16,
+                        seqlens=(64,), batches=(1,), sparsities=(0.5,))
+
+
+@pytest.fixture(scope="module")
+def built(tmp_path_factory):
+    out = str(tmp_path_factory.mktemp("artifacts"))
+    # Lower only the cheap executables; record every signature.
+    aot.build_all(out, tcfg, taot, tkb,
+                  only={"layer_pre", "lm_head", "layer_post_sel_t16",
+                        "kb_dense_s64_b1", "kb_sparse_s64_b1_k2"})
+    return out
+
+
+class TestManifest:
+    def test_manifest_complete(self, built):
+        with open(os.path.join(built, "manifest.json")) as f:
+            man = json.load(f)
+        assert man["model"]["d_model"] == 64
+        assert man["model"]["group_size"] == 2
+        exes = man["executables"]
+        for name in ("layer_pre", "prefill", "pretrain_step",
+                     "distill_step_bs8", "layer_post_dense", "lm_head"):
+            assert name in exes, name
+        # Signatures carry dtype + shape for every arg.
+        for e in exes.values():
+            for a in e["args"]:
+                assert a["dtype"] in ("f32", "i32")
+                assert isinstance(a["shape"], list)
+
+    def test_pretrain_signature_ordering(self, built):
+        with open(os.path.join(built, "manifest.json")) as f:
+            man = json.load(f)
+        args = [a["name"] for a in man["executables"]["pretrain_step"]["args"]]
+        np_ = len(man["params"])
+        assert args[0] == "param:emb"
+        assert args[np_] == "m:emb"
+        assert args[2 * np_] == "v:emb"
+        assert args[-4:] == ["step", "lr", "ids", "loss_w"]
+        outs = man["executables"]["pretrain_step"]["outs"]
+        assert outs[-1] == "loss" and len(outs) == 3 * np_ + 1
+
+    def test_kbench_points(self, built):
+        with open(os.path.join(built, "manifest.json")) as f:
+            man = json.load(f)
+        pts = man["kbench_points"]
+        assert len(pts) == 1
+        assert pts[0]["sparsity"] == 0.5
+        assert pts[0]["k_sel"] == 2  # 4 blocks * (1 - 0.5)
+
+    def test_hlo_text_emitted_and_parsable_header(self, built):
+        p = os.path.join(built, "layer_pre.hlo.txt")
+        text = open(p).read()
+        assert "HloModule" in text and len(text) > 200
+
+    def test_init_checkpoints_roundtrip(self, built):
+        ps = P.load_flat(os.path.join(built, "model_init.bin"),
+                         P.param_specs(tcfg))
+        expect = P.init_params(tcfg)
+        for a, b in zip(ps, expect):
+            np.testing.assert_allclose(a, b, atol=0)
+        gs = P.load_flat(os.path.join(built, "gate_init.bin"),
+                         P.gate_specs(tcfg))
+        assert len(gs) == 2 * tcfg.n_layers
+
+
+class TestFixtures:
+    def test_fixture_values(self, built):
+        with open(os.path.join(built, "fixtures.json")) as f:
+            fx = json.load(f)
+        cfg = tcfg
+        assert fx["config"]["d_gate"] == cfg.d_gate
+        kc = fx["kcomp"]
+        assert len(kc["expected_kc"]) == cfg.n_kv_heads * 2 * cfg.d_gate
+        assert len(kc["k_pre"]) == cfg.n_kv_heads * 2 * cfg.block_size * \
+            cfg.head_dim
+        gq = fx["gate_query"]
+        assert len(gq["expected_qg"]) == cfg.n_kv_heads * cfg.d_gate
+        orc = fx["oracle"]
+        assert len(orc["expected_gt"]) == cfg.n_kv_heads * 4
+        # GT values are probabilities.
+        gt = np.array(orc["expected_gt"])
+        assert (gt >= 0).all() and (gt <= 1 + 1e-5).all()

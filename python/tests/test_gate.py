@@ -1,0 +1,156 @@
+"""AttnGate unit tests: query aggregation, K compression, RoPE, KL loss."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import gate as G
+from compile.config import DEFAULT_MODEL as cfg
+from compile.kernels import ref
+from compile.rope import apply_rope
+
+TOL = dict(rtol=1e-5, atol=1e-5)
+
+
+class TestRope:
+    def test_preserves_norm(self):
+        x = jax.random.normal(jax.random.PRNGKey(0), (4, 16))
+        pos = jnp.array([0, 5, 100, 511])
+        y = apply_rope(x, pos, 10000.0)
+        np.testing.assert_allclose(jnp.linalg.norm(y, axis=-1),
+                                   jnp.linalg.norm(x, axis=-1), **TOL)
+
+    def test_position_zero_is_identity(self):
+        x = jax.random.normal(jax.random.PRNGKey(1), (3, 32))
+        y = apply_rope(x, jnp.zeros(3, dtype=jnp.int32), 10000.0)
+        np.testing.assert_allclose(y, x, **TOL)
+
+    def test_relative_property(self):
+        """<rope(q,m), rope(k,n)> depends only on m-n."""
+        q = jax.random.normal(jax.random.PRNGKey(2), (16,))
+        k = jax.random.normal(jax.random.PRNGKey(3), (16,))
+        def dot(m, n):
+            qm = apply_rope(q[None], jnp.array([m]), 10000.0)[0]
+            kn = apply_rope(k[None], jnp.array([n]), 10000.0)[0]
+            return float(qm @ kn)
+        assert abs(dot(7, 3) - dot(104, 100)) < 1e-4
+        assert abs(dot(0, 0) - dot(50, 50)) < 1e-4
+
+
+class TestPooling:
+    def test_pool_components(self):
+        k = jax.random.normal(jax.random.PRNGKey(4), (2, 8, 16))
+        p = G.pool_k_block(k)
+        assert p.shape == (2, 3 * 16)
+        np.testing.assert_allclose(p[:, :16], k.max(-2), **TOL)
+        np.testing.assert_allclose(p[:, 16:32], k.min(-2), **TOL)
+        np.testing.assert_allclose(p[:, 32:], k.mean(-2), **TOL)
+
+    def test_pool_constant_block(self):
+        """max == min == avg for a constant block."""
+        k = jnp.ones((1, 4, 8)) * 3.5
+        p = G.pool_k_block(k)
+        np.testing.assert_allclose(p, 3.5, **TOL)
+
+
+class TestKCompress:
+    def test_shape_and_block_independence(self):
+        hkv, dh, dg, bs = 2, 16, 8, 4
+        wk = jax.random.normal(jax.random.PRNGKey(5), (hkv, 3 * dh, dg))
+        k = jax.random.normal(jax.random.PRNGKey(6), (1, hkv, 3 * bs, dh))
+        kc = G.k_compress(wk, k, bs, 10000.0)
+        assert kc.shape == (1, hkv, 3, dg)
+        # Changing block 2's keys must not change blocks 0-1 entries.
+        k2 = k.at[:, :, 2 * bs:].set(0.0)
+        kc2 = G.k_compress(wk, k2, bs, 10000.0)
+        np.testing.assert_allclose(kc[:, :, :2], kc2[:, :, :2], **TOL)
+
+    def test_rope_positions_are_block_starts(self):
+        """A single repeated key block should only differ between block
+        entries by the RoPE rotation at the block-start positions."""
+        hkv, dh, dg, bs = 1, 8, 8, 4
+        wk = jax.random.normal(jax.random.PRNGKey(7), (hkv, 3 * dh, dg))
+        blk = jax.random.normal(jax.random.PRNGKey(8), (1, hkv, bs, dh))
+        k = jnp.concatenate([blk, blk], axis=2)
+        kc = G.k_compress(wk, k, bs, 10000.0)
+        pooled = G.pool_k_block(blk.reshape(1, hkv, 1, bs, dh))
+        raw = jnp.einsum("bknd,kde->bkne", pooled, wk)
+        exp0 = apply_rope(raw, jnp.array([0])[None, None, :], 10000.0)
+        exp1 = apply_rope(raw, jnp.array([bs])[None, None, :], 10000.0)
+        np.testing.assert_allclose(kc[:, :, 0], exp0[:, :, 0], **TOL)
+        np.testing.assert_allclose(kc[:, :, 1], exp1[:, :, 0], **TOL)
+
+
+class TestGateQuery:
+    def test_group_aggregation_shape(self):
+        hkv, g, dh, dg = 2, 4, 16, 8
+        wq = jax.random.normal(jax.random.PRNGKey(9), (hkv, g * dh, dg))
+        q = jax.random.normal(jax.random.PRNGKey(10), (3, hkv * g, dh))
+        pos = jnp.array([1, 2, 3], dtype=jnp.int32)
+        qg = G.gate_query(wq, q, pos, 10000.0)
+        assert qg.shape == (3, hkv, dg)
+
+    def test_group_heads_feed_their_kv_head(self):
+        """Zeroing the queries of group 1 changes only gate head 1."""
+        hkv, g, dh, dg = 2, 2, 8, 8
+        wq = jax.random.normal(jax.random.PRNGKey(11), (hkv, g * dh, dg))
+        q = jax.random.normal(jax.random.PRNGKey(12), (1, hkv * g, dh))
+        pos = jnp.zeros(1, dtype=jnp.int32)
+        qg = G.gate_query(wq, q, pos, 10000.0)
+        q2 = q.at[:, g:].set(0.0)  # zero group 1 (heads g..2g-1)
+        qg2 = G.gate_query(wq, q2, pos, 10000.0)
+        np.testing.assert_allclose(qg[:, 0], qg2[:, 0], **TOL)
+        assert not np.allclose(qg[:, 1], qg2[:, 1])
+
+    def test_sequence_batched(self):
+        hkv, g, dh, dg = 2, 4, 16, 8
+        wq = jax.random.normal(jax.random.PRNGKey(13), (hkv, g * dh, dg))
+        q = jax.random.normal(jax.random.PRNGKey(14), (2, 5, hkv * g, dh))
+        pos = jnp.broadcast_to(jnp.arange(5, dtype=jnp.int32), (2, 5))
+        qg = G.gate_query(wq, q, pos, 10000.0)
+        assert qg.shape == (2, 5, hkv, dg)
+        # Row 3 equals the single-token call at position 3.
+        qg3 = G.gate_query(wq, q[:, 3], pos[:, 3], 10000.0)
+        np.testing.assert_allclose(qg[:, 3], qg3, **TOL)
+
+
+class TestDistillKL:
+    def _mk(self, seed, b=1, s=64, hkv=2, bs=16):
+        nblk = s // bs
+        k1, k2 = jax.random.split(jax.random.PRNGKey(seed))
+        logits = jax.random.normal(k1, (b, s, hkv, nblk))
+        raw = jax.nn.softmax(jax.random.normal(k2, (b, hkv, s, nblk)))
+        gt = ref.normalize_gt(raw, bs)
+        return logits, gt, bs
+
+    def test_kl_nonnegative(self):
+        logits, gt, bs = self._mk(0)
+        assert float(G.distill_kl(logits, gt, bs)) >= -1e-6
+
+    def test_kl_zero_when_gate_matches_gt(self):
+        _, gt, bs = self._mk(1)
+        # Use log(gt) as logits -> masked softmax reproduces gt exactly.
+        safe = jnp.log(jnp.maximum(jnp.transpose(gt, (0, 2, 1, 3)), 1e-30))
+        kl = float(G.distill_kl(safe, gt, bs))
+        assert abs(kl) < 1e-4
+
+    def test_kl_decreases_toward_gt(self):
+        logits, gt, bs = self._mk(2)
+        kl0 = float(G.distill_kl(logits, gt, bs))
+        tgt = jnp.log(jnp.maximum(jnp.transpose(gt, (0, 2, 1, 3)), 1e-30))
+        kl_half = float(G.distill_kl(0.5 * logits + 0.5 * tgt, gt, bs))
+        assert kl_half < kl0
+
+    @settings(deadline=None, max_examples=6)
+    @given(st.integers(0, 100))
+    def test_gradient_only_on_valid_blocks(self, seed):
+        logits, gt, bs = self._mk(seed)
+        grad = jax.grad(lambda lg: G.distill_kl(lg, gt, bs))(logits)
+        s, nblk = logits.shape[1], logits.shape[3]
+        t = np.arange(s)[:, None]
+        j = np.arange(nblk)[None, :]
+        invalid = ~(j < t // bs)
+        gm = np.asarray(jnp.transpose(grad, (0, 1, 3, 2)))  # [B,S,NBLK,Hkv]
+        assert np.abs(gm[:, invalid]).max() < 1e-8

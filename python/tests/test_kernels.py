@@ -1,0 +1,219 @@
+"""L1 kernel correctness: Pallas kernels vs pure-jnp oracles.
+
+Hypothesis sweeps shapes/GQA-group settings and asserts allclose against
+ref.py — the core correctness signal for the compile path.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.block_sparse_decode import block_sparse_decode, dense_decode
+from compile.kernels.gt_flash import gt_flash
+
+TOL = dict(rtol=2e-5, atol=2e-5)
+
+
+def rand(key, shape):
+    return jax.random.normal(jax.random.PRNGKey(key), shape,
+                             dtype=jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# gt_flash: flash forward + ground-truth block scores (paper Fig 2b)
+# ---------------------------------------------------------------------------
+
+class TestGtFlash:
+    @pytest.mark.parametrize("g", [1, 2, 4])
+    @pytest.mark.parametrize("bs", [8, 16, 32])
+    def test_matches_ref(self, g, bs):
+        B, Hkv, S, D = 2, 2, 128, 16
+        H = Hkv * g
+        q, k, v = rand(0, (B, H, S, D)), rand(1, (B, Hkv, S, D)), rand(
+            2, (B, Hkv, S, D))
+        out, gt = gt_flash(q, k, v, group=g, block_k=bs, block_q=32)
+        out_ref, probs = ref.causal_attention_ref(q, k, v, g)
+        np.testing.assert_allclose(out, out_ref, **TOL)
+        gt_ref = probs.reshape(B, H, S, S // bs, bs).max(-1)
+        np.testing.assert_allclose(gt, gt_ref, **TOL)
+
+    def test_gt_rows_bounded_by_one(self):
+        B, H, S, D = 1, 2, 64, 8
+        q, k, v = rand(3, (B, H, S, D)), rand(4, (B, 2, S, D)), rand(
+            5, (B, 2, S, D))
+        _, gt = gt_flash(q, k, v, group=1, block_k=16, block_q=16)
+        assert float(gt.max()) <= 1.0 + 1e-5
+        assert float(gt.min()) >= 0.0
+
+    def test_first_row_attends_only_block0(self):
+        """Query 0 can only attend to token 0 -> gt[..,0,0] == 1, rest 0."""
+        B, H, S, D = 1, 2, 64, 8
+        q, k, v = rand(6, (B, H, S, D)), rand(7, (B, 2, S, D)), rand(
+            8, (B, 2, S, D))
+        _, gt = gt_flash(q, k, v, group=1, block_k=16, block_q=16)
+        np.testing.assert_allclose(gt[:, :, 0, 0], 1.0, **TOL)
+        np.testing.assert_allclose(gt[:, :, 0, 1:], 0.0, **TOL)
+
+    @settings(deadline=None, max_examples=8)
+    @given(st.integers(1, 3), st.sampled_from([16, 32]),
+           st.sampled_from([8, 16]), st.integers(0, 100))
+    def test_hypothesis_sweep(self, hkv, block_q, block_k, seed):
+        g = 2
+        B, S, D = 1, 64, 8
+        H = hkv * g
+        q = jax.random.normal(jax.random.PRNGKey(seed), (B, H, S, D))
+        k = jax.random.normal(jax.random.PRNGKey(seed + 1), (B, hkv, S, D))
+        v = jax.random.normal(jax.random.PRNGKey(seed + 2), (B, hkv, S, D))
+        out, gt = gt_flash(q, k, v, group=g, block_k=block_k,
+                           block_q=block_q)
+        out_ref, probs = ref.causal_attention_ref(q, k, v, g)
+        np.testing.assert_allclose(out, out_ref, **TOL)
+        gt_ref = probs.reshape(B, H, S, S // block_k, block_k).max(-1)
+        np.testing.assert_allclose(gt, gt_ref, **TOL)
+
+
+# ---------------------------------------------------------------------------
+# block-sparse flash decode (paper §3.3)
+# ---------------------------------------------------------------------------
+
+class TestSparseDecode:
+    def test_full_selection_equals_dense(self):
+        B, H, Hkv, S, D, bs = 2, 8, 2, 256, 32, 16
+        q = rand(10, (B, H, D))
+        k, v = rand(11, (B, Hkv, S, D)), rand(12, (B, Hkv, S, D))
+        sl = jnp.array([256, 200], dtype=jnp.int32)
+        nblk = S // bs
+        idx = jnp.broadcast_to(jnp.arange(nblk, dtype=jnp.int32),
+                               (B, Hkv, nblk))
+        o_sp = block_sparse_decode(q, k, v, idx, sl, block_size=bs)
+        o_d = dense_decode(q, k, v, sl, block_size=bs)
+        np.testing.assert_allclose(o_sp, o_d, **TOL)
+        np.testing.assert_allclose(o_d, ref.dense_decode_ref(q, k, v, sl),
+                                   **TOL)
+
+    def test_padding_indices_ignored(self):
+        B, H, Hkv, S, D, bs = 1, 4, 2, 128, 16, 16
+        q = rand(13, (B, H, D))
+        k, v = rand(14, (B, Hkv, S, D)), rand(15, (B, Hkv, S, D))
+        sl = jnp.array([128], dtype=jnp.int32)
+        idx_a = jnp.array([[[0, 3, -1, -1], [2, 5, -1, -1]]], jnp.int32)
+        idx_b = jnp.array([[[0, 3, -1, -1, -1, -1],
+                            [2, 5, -1, -1, -1, -1]]], jnp.int32)
+        o_a = block_sparse_decode(q, k, v, idx_a, sl, block_size=bs)
+        o_b = block_sparse_decode(q, k, v, idx_b, sl, block_size=bs)
+        np.testing.assert_allclose(o_a, o_b, **TOL)
+
+    def test_partial_last_block_masked_by_len(self):
+        """Selected last block beyond seq_len contributes nothing."""
+        B, H, Hkv, S, D, bs = 1, 4, 2, 64, 16, 16
+        q = rand(16, (B, H, D))
+        k, v = rand(17, (B, Hkv, S, D)), rand(18, (B, Hkv, S, D))
+        sl = jnp.array([40], dtype=jnp.int32)  # block 2 is partial (32..39)
+        idx = jnp.array([[[0, 1, 2, -1], [0, 1, 2, -1]]], jnp.int32)
+        o = block_sparse_decode(q, k, v, idx, sl, block_size=bs)
+        np.testing.assert_allclose(
+            o, ref.sparse_decode_ref(q, k, v, idx, sl, bs), **TOL)
+
+    def test_unsorted_and_duplicate_free_order_invariance(self):
+        B, H, Hkv, S, D, bs = 1, 4, 2, 128, 16, 16
+        q = rand(19, (B, H, D))
+        k, v = rand(20, (B, Hkv, S, D)), rand(21, (B, Hkv, S, D))
+        sl = jnp.array([128], dtype=jnp.int32)
+        idx1 = jnp.array([[[0, 2, 5, 7], [1, 3, 4, 6]]], jnp.int32)
+        idx2 = jnp.array([[[7, 5, 2, 0], [6, 4, 3, 1]]], jnp.int32)
+        o1 = block_sparse_decode(q, k, v, idx1, sl, block_size=bs)
+        o2 = block_sparse_decode(q, k, v, idx2, sl, block_size=bs)
+        np.testing.assert_allclose(o1, o2, **TOL)
+
+    @settings(deadline=None, max_examples=10)
+    @given(st.integers(1, 2), st.integers(1, 4), st.integers(8, 128),
+           st.integers(0, 1000))
+    def test_hypothesis_sweep(self, hkv, g, seq_len, seed):
+        bs, D, B = 16, 8, 1
+        S = 128
+        H = hkv * g
+        kq, kk, kv, ki = jax.random.split(jax.random.PRNGKey(seed), 4)
+        q = jax.random.normal(kq, (B, H, D))
+        k = jax.random.normal(kk, (B, hkv, S, D))
+        v = jax.random.normal(kv, (B, hkv, S, D))
+        nblk = S // bs
+        # Random subset of blocks per kv head, padded with -1.
+        sel = jax.random.bernoulli(ki, 0.5, (B, hkv, nblk))
+        idx = jnp.where(sel, jnp.arange(nblk, dtype=jnp.int32), -1)
+        # Always keep block 0 so the softmax is never empty.
+        idx = idx.at[:, :, 0].set(0)
+        sl = jnp.array([max(seq_len, 1)], dtype=jnp.int32)
+        o = block_sparse_decode(q, k, v, idx, sl, block_size=bs)
+        o_ref = ref.sparse_decode_ref(q, k, v, idx, sl, bs)
+        np.testing.assert_allclose(o, o_ref, **TOL)
+
+
+class TestDenseDecode:
+    @settings(deadline=None, max_examples=8)
+    @given(st.integers(1, 128), st.integers(0, 50))
+    def test_hypothesis_matches_ref(self, seq_len, seed):
+        B, H, Hkv, S, D, bs = 2, 4, 2, 128, 16, 16
+        kq, kk, kv = jax.random.split(jax.random.PRNGKey(seed), 3)
+        q = jax.random.normal(kq, (B, H, D))
+        k = jax.random.normal(kk, (B, Hkv, S, D))
+        v = jax.random.normal(kv, (B, Hkv, S, D))
+        sl = jnp.array([seq_len, S], dtype=jnp.int32)
+        o = dense_decode(q, k, v, sl, block_size=bs)
+        np.testing.assert_allclose(o, ref.dense_decode_ref(q, k, v, sl),
+                                   **TOL)
+
+
+class TestSparsePrefill:
+    """block_sparse_prefill (the §6.3 unification kernel) vs oracle."""
+
+    def _mk(self, seed, B=1, Hkv=2, g=2, S=64, D=8):
+        H = Hkv * g
+        kq, kk, kv = jax.random.split(jax.random.PRNGKey(seed), 3)
+        q = jax.random.normal(kq, (B, H, S, D))
+        k = jax.random.normal(kk, (B, Hkv, S, D))
+        v = jax.random.normal(kv, (B, Hkv, S, D))
+        return q, k, v
+
+    def test_full_mask_equals_dense(self):
+        from compile.kernels.block_sparse_prefill import block_sparse_prefill
+        q, k, v = self._mk(0)
+        bq = bk = 16
+        mask = jnp.ones((1, 2, 4, 4))
+        out = block_sparse_prefill(q, k, v, mask, group=2, block_q=bq,
+                                   block_k=bk)
+        ref_out, _ = ref.causal_attention_ref(q, k, v, 2)
+        np.testing.assert_allclose(out, ref_out, **TOL)
+
+    def test_diagonal_plus_random_mask(self):
+        from compile.kernels.block_sparse_prefill import block_sparse_prefill
+        q, k, v = self._mk(1)
+        bq = bk = 16
+        key = jax.random.PRNGKey(2)
+        mask = jax.random.bernoulli(key, 0.5, (1, 2, 4, 4)).astype(
+            jnp.float32)
+        # Diagonal always active (engine invariant).
+        mask = jnp.maximum(mask, jnp.eye(4)[None, None])
+        out = block_sparse_prefill(q, k, v, mask, group=2, block_q=bq,
+                                   block_k=bk)
+        expect = ref.sparse_prefill_ref(q, k, v, mask, bq, bk)
+        np.testing.assert_allclose(out, expect, **TOL)
+
+    @settings(deadline=None, max_examples=6)
+    @given(st.integers(0, 500), st.sampled_from([8, 16]))
+    def test_hypothesis_sweep(self, seed, bk):
+        from compile.kernels.block_sparse_prefill import block_sparse_prefill
+        q, k, v = self._mk(seed)
+        bq = 16
+        nqb, nkb = 64 // bq, 64 // bk
+        key = jax.random.PRNGKey(seed + 7)
+        mask = jax.random.bernoulli(key, 0.6, (1, 2, nqb, nkb)).astype(
+            jnp.float32)
+        # Keep every row non-empty: activate key-block 0.
+        mask = mask.at[:, :, :, 0].set(1.0)
+        out = block_sparse_prefill(q, k, v, mask, group=2, block_q=bq,
+                                   block_k=bk)
+        expect = ref.sparse_prefill_ref(q, k, v, mask, bq, bk)
+        np.testing.assert_allclose(out, expect, **TOL)

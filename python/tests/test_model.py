@@ -1,0 +1,202 @@
+"""L2 model tests — most importantly the decode-path parity: stepping
+token-by-token through layer_pre / layer_post (the Rust coordinator's
+call sequence) must reproduce the full-sequence forward exactly."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model as M
+from compile import params as P
+from compile.config import ModelConfig
+
+TOL = dict(rtol=3e-4, atol=3e-4)
+
+# A tiny config so tests are fast; same structure as the default.
+tcfg = ModelConfig(vocab=64, d_model=64, n_layers=2, n_heads=4,
+                   n_kv_heads=2, head_dim=16, mlp_hidden=128, block_size=8,
+                   max_seq=64)
+
+
+@pytest.fixture(scope="module")
+def tparams():
+    return P.init_params(tcfg, seed=3)
+
+
+def decode_logits_stepwise(params, cfg, ids_row, upto):
+    """Reference 'Rust driver' in python: prefill on [0..upto), then dense
+    decode steps for the remaining tokens; returns logits of final step."""
+    p = P.as_dict(cfg, params)
+    b = 1
+    s = cfg.max_seq
+    ids = jnp.zeros((b, s), dtype=jnp.int32).at[0, :len(ids_row)].set(
+        jnp.asarray(ids_row))
+    seq_len = jnp.array([upto], dtype=jnp.int32)
+    logits, kc, vc, _ = M.prefill(params, cfg, ids, seq_len)
+    k_cache = [np.array(kc[l]) for l in range(cfg.n_layers)]
+    v_cache = [np.array(vc[l]) for l in range(cfg.n_layers)]
+    last = None
+    for t in range(upto, len(ids_row)):
+        x = p["emb"][ids[:, t]]
+        pos = jnp.array([t], dtype=jnp.int32)
+        for l in range(cfg.n_layers):
+            q, k_new, v_new, _, _ = M.layer_pre(
+                x, pos, p[f"l{l}.wq"], p[f"l{l}.wk"], p[f"l{l}.wv"],
+                p[f"l{l}.ln1"],
+                jnp.zeros((cfg.n_kv_heads,
+                           cfg.group_size * cfg.head_dim, cfg.d_gate)),
+                cfg)
+            k_cache[l][:, :, t] = np.asarray(k_new)
+            v_cache[l][:, :, t] = np.asarray(v_new)
+            x = M.layer_post_dense(
+                q, jnp.asarray(k_cache[l]), jnp.asarray(v_cache[l]),
+                jnp.array([t + 1], dtype=jnp.int32), x,
+                p[f"l{l}.wo"], p[f"l{l}.w1"], p[f"l{l}.w2"],
+                p[f"l{l}.ln2"], cfg)
+        last = M.lm_head(x, p["ln_f"], p["head"], cfg)
+    return last
+
+
+class TestForward:
+    def test_shapes(self, tparams):
+        ids = jnp.zeros((2, 32), dtype=jnp.int32)
+        logits = M.forward_train(tparams, tcfg, ids)
+        assert logits.shape == (2, 32, tcfg.vocab)
+
+    def test_causality(self, tparams):
+        """Changing a future token must not affect earlier logits."""
+        key = jax.random.PRNGKey(0)
+        ids = jax.random.randint(key, (1, 32), 0, tcfg.vocab)
+        l1 = M.forward_train(tparams, tcfg, ids)
+        ids2 = ids.at[0, 20].set((ids[0, 20] + 1) % tcfg.vocab)
+        l2 = M.forward_train(tparams, tcfg, ids2)
+        np.testing.assert_allclose(l1[:, :20], l2[:, :20], **TOL)
+        assert not np.allclose(l1[:, 20:], l2[:, 20:], atol=1e-3)
+
+    def test_prefill_matches_forward(self, tparams):
+        key = jax.random.PRNGKey(1)
+        ids = jax.random.randint(key, (2, tcfg.max_seq), 0, tcfg.vocab)
+        seq_len = jnp.array([tcfg.max_seq, 40], dtype=jnp.int32)
+        logits_f = M.forward_train(tparams, tcfg, ids)
+        logits_p, _, _, _ = M.prefill(tparams, tcfg, ids, seq_len)
+        # Row 0: full length, all positions must match.
+        np.testing.assert_allclose(logits_p[0], logits_f[0], **TOL)
+        # Row 1: valid positions only.
+        np.testing.assert_allclose(logits_p[1, :40], logits_f[1, :40], **TOL)
+
+    def test_forward_with_gt_matches_forward(self, tparams):
+        """The GT-kernel forward is the same model: logits unchanged."""
+        key = jax.random.PRNGKey(2)
+        ids = jax.random.randint(key, (1, 64), 0, tcfg.vocab)
+        # forward_with_gt does not return logits; instead check the GT
+        # normalisation invariants per layer.
+        _, _, gts = M.forward_with_gt(tparams, tcfg, ids, 8)
+        for gt in gts:
+            sums = np.asarray(gt.sum(-1))
+            t = np.arange(64)
+            has_blocks = (t // 8) >= 1
+            np.testing.assert_allclose(sums[:, :, has_blocks], 1.0,
+                                       rtol=1e-4, atol=1e-4)
+            np.testing.assert_allclose(sums[:, :, ~has_blocks], 0.0,
+                                       atol=1e-6)
+
+
+class TestDecodeParity:
+    def test_stepwise_decode_matches_full_forward(self, tparams):
+        """prefill + per-layer decode steps == forward_train (the exact
+        call sequence the Rust engine performs)."""
+        key = jax.random.PRNGKey(5)
+        n = 24
+        ids_row = list(np.asarray(
+            jax.random.randint(key, (n,), 0, tcfg.vocab)))
+        upto = 16
+        last = decode_logits_stepwise(tparams, tcfg, ids_row, upto)
+        ids_full = jnp.zeros((1, tcfg.max_seq), dtype=jnp.int32
+                             ).at[0, :n].set(jnp.asarray(ids_row))
+        logits_f = M.forward_train(tparams, tcfg, ids_full)
+        np.testing.assert_allclose(last[0], logits_f[0, n - 1], **TOL)
+
+    def test_sel_full_budget_matches_dense(self, tparams):
+        """layer_post_sel with every block selected == layer_post_dense."""
+        p = P.as_dict(tcfg, tparams)
+        cfg = tcfg
+        b, s = 2, cfg.max_seq
+        key = jax.random.PRNGKey(6)
+        q = jax.random.normal(key, (b, cfg.n_heads, cfg.head_dim))
+        kc = jax.random.normal(jax.random.PRNGKey(7),
+                               (b, cfg.n_kv_heads, s, cfg.head_dim))
+        vc = jax.random.normal(jax.random.PRNGKey(8),
+                               (b, cfg.n_kv_heads, s, cfg.head_dim))
+        resid = jax.random.normal(jax.random.PRNGKey(9), (b, cfg.d_model))
+        seq_len = jnp.array([s, 50], dtype=jnp.int32)
+        args = (p["l0.wo"], p["l0.w1"], p["l0.w2"], p["l0.ln2"], cfg)
+        dense = M.layer_post_dense(q, kc, vc, seq_len, resid, *args)
+        mask = (jnp.arange(s)[None, None] < seq_len[:, None, None])
+        mask = jnp.broadcast_to(mask, (b, cfg.n_kv_heads, s)).astype(
+            jnp.float32)
+        sel = M.layer_post_sel(q, kc, vc, mask, resid, *args)
+        np.testing.assert_allclose(sel, dense, **TOL)
+
+    def test_sel_gathered_subset(self, tparams):
+        """Gathering blocks (as Rust does) + layer_post_sel == masked
+        attention over the same token set."""
+        p = P.as_dict(tcfg, tparams)
+        cfg = tcfg
+        bs = cfg.block_size
+        b, s = 1, cfg.max_seq
+        nblk = s // bs
+        key = jax.random.PRNGKey(10)
+        q = jax.random.normal(key, (b, cfg.n_heads, cfg.head_dim))
+        kc = jax.random.normal(jax.random.PRNGKey(11),
+                               (b, cfg.n_kv_heads, s, cfg.head_dim))
+        vc = jax.random.normal(jax.random.PRNGKey(12),
+                               (b, cfg.n_kv_heads, s, cfg.head_dim))
+        resid = jax.random.normal(jax.random.PRNGKey(13), (b, cfg.d_model))
+        args = (p["l0.wo"], p["l0.w1"], p["l0.w2"], p["l0.ln2"], cfg)
+        # Select blocks {0, 3, 5} for head 0, {1, 3, 7} for head 1.
+        sel_blocks = [[0, 3, 5], [1, 3, 7]]
+        T = 3 * bs
+        k_sel = np.zeros((b, cfg.n_kv_heads, T, cfg.head_dim), np.float32)
+        v_sel = np.zeros_like(k_sel)
+        for h, blocks in enumerate(sel_blocks):
+            for i, j in enumerate(blocks):
+                k_sel[0, h, i * bs:(i + 1) * bs] = np.asarray(
+                    kc[0, h, j * bs:(j + 1) * bs])
+                v_sel[0, h, i * bs:(i + 1) * bs] = np.asarray(
+                    vc[0, h, j * bs:(j + 1) * bs])
+        mask_sel = jnp.ones((b, cfg.n_kv_heads, T))
+        out_g = M.layer_post_sel(q, jnp.asarray(k_sel), jnp.asarray(v_sel),
+                                 mask_sel, resid, *args)
+        # Equivalent token mask over the full cache.
+        full_mask = np.zeros((b, cfg.n_kv_heads, s), np.float32)
+        for h, blocks in enumerate(sel_blocks):
+            for j in blocks:
+                full_mask[0, h, j * bs:(j + 1) * bs] = 1.0
+        out_m = M.layer_post_sel(q, kc, vc, jnp.asarray(full_mask), resid,
+                                 *args)
+        np.testing.assert_allclose(out_g, out_m, **TOL)
+
+
+class TestPerHeadVariant:
+    def test_perhead_equals_shared_when_selection_identical(self, tparams):
+        """Per-query-head attention (Quest path) with every head of a
+        group given the same gathered blocks == the shared-GQA variant."""
+        p = P.as_dict(tcfg, tparams)
+        cfg = tcfg
+        b, T = 2, 32
+        key = jax.random.PRNGKey(20)
+        q = jax.random.normal(key, (b, cfg.n_heads, cfg.head_dim))
+        k_sel = jax.random.normal(jax.random.PRNGKey(21),
+                                  (b, cfg.n_kv_heads, T, cfg.head_dim))
+        v_sel = jax.random.normal(jax.random.PRNGKey(22),
+                                  (b, cfg.n_kv_heads, T, cfg.head_dim))
+        mask = jnp.ones((b, cfg.n_kv_heads, T))
+        resid = jax.random.normal(jax.random.PRNGKey(23), (b, cfg.d_model))
+        args = (p["l0.wo"], p["l0.w1"], p["l0.w2"], p["l0.ln2"], cfg)
+        shared = M.layer_post_sel(q, k_sel, v_sel, mask, resid, *args)
+        kh = jnp.repeat(k_sel, cfg.group_size, axis=1)
+        vh = jnp.repeat(v_sel, cfg.group_size, axis=1)
+        mh = jnp.repeat(mask, cfg.group_size, axis=1)
+        perhead = M.layer_post_sel_perhead(q, kh, vh, mh, resid, *args)
+        np.testing.assert_allclose(perhead, shared, **TOL)

@@ -1,0 +1,58 @@
+//! Coordinator benchmark: end-to-end decode step latency under each
+//! policy, plus the share spent outside the XLA executables (the L3
+//! coordination overhead target in DESIGN.md §8).
+
+use std::rc::Rc;
+
+use seerattn::coordinator::{EngineConfig, Request};
+use seerattn::harness;
+use seerattn::runtime::Runtime;
+use seerattn::sparse::Policy;
+use seerattn::util::rng::Rng;
+use seerattn::workload::reasoning::{generate, TaskConfig};
+use seerattn::workload::Vocab;
+
+fn main() {
+    if !harness::artifacts_available() {
+        eprintln!("artifacts not built; run `make artifacts` first");
+        return;
+    }
+    let dir = harness::artifacts_dir();
+    let rt = Rc::new(Runtime::load(&dir).unwrap());
+    let vocab = Vocab::default();
+    println!("decode-step latency at full batch (8 x ~450-token contexts)\n");
+    println!("{:<26} {:>12} {:>12} {:>14} {:>12}",
+             "policy", "decode p50", "decode p95", "xla share", "prefill p50");
+    for (name, policy) in [
+        ("dense", Policy::Dense),
+        ("seer b=64", Policy::GateBudget { budget_tokens: 64 }),
+        ("seer b=128", Policy::GateBudget { budget_tokens: 128 }),
+        ("seer b=256", Policy::GateBudget { budget_tokens: 256 }),
+        ("seer thresh=0.04", Policy::GateThreshold { threshold: 0.04 }),
+        ("oracle b=128", Policy::Oracle { budget_tokens: 128 }),
+        ("quest b=128", Policy::Quest { budget_tokens: 128 }),
+    ] {
+        let ecfg = EngineConfig { policy, block_size: 16, ..Default::default() };
+        let mut eng = harness::build_engine(&rt, &dir, ecfg).unwrap();
+        let mut rng = Rng::new(3);
+        let task = TaskConfig::hard();
+        for i in 0..eng.batch_size() {
+            let ep = generate(&vocab, &task, &mut rng);
+            eng.submit(Request { id: i as u64, prompt: ep.prompt, max_new: 40 });
+        }
+        let xla0 = eng.rt.stats().execute_s;
+        let t0 = std::time::Instant::now();
+        eng.run_to_completion().unwrap();
+        let wall = t0.elapsed().as_secs_f64();
+        let xla = eng.rt.stats().execute_s - xla0;
+        println!(
+            "{name:<26} {:>9.2} ms {:>9.2} ms {:>13.1}% {:>9.2} ms",
+            eng.metrics.decode_step_s.median() * 1e3,
+            eng.metrics.decode_step_s.percentile(95.0) * 1e3,
+            100.0 * xla / wall,
+            eng.metrics.prefill_s.median() * 1e3,
+        );
+    }
+    println!("\n(xla share = fraction of wall time inside executables; the \
+              rest is the L3 coordinator: gather, selection, cache updates)");
+}

@@ -1,0 +1,17 @@
+//! Fig 6 benchmark: block-sparse flash-decoding kernel vs dense baseline
+//! across seqlen x batch x sparsity (`cargo bench --bench
+//! fig6_kernel_speedup`). Also reachable as `seerattn repro fig6`.
+
+use seerattn::harness::{self, experiments};
+
+fn main() {
+    if !harness::artifacts_available() {
+        eprintln!("artifacts not built; run `make artifacts` first");
+        return;
+    }
+    let budget: f64 = std::env::var("BENCH_BUDGET_S")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(1.0);
+    experiments::fig6(&harness::artifacts_dir(), budget).unwrap();
+}

@@ -1,0 +1,816 @@
+//! The decode engine: continuous batching over the AOT executables.
+//!
+//! Per decode token and layer, the engine performs the paper's inference
+//! loop (Fig 3):
+//!   1. `layer_pre` (device): QKV projections + RoPE + the AttnGate query.
+//!   2. host: append K/V to the paged cache, pre-RoPE K to the pending
+//!      K-compression block (flushing a new compressed entry every
+//!      `block_size` tokens, §3.2), RoPE'd K to the Quest min/max
+//!      metadata.
+//!   3. host: block selection under the configured policy (§3.1) — gate
+//!      top-k / threshold, oracle, Quest, or dense — with the partial
+//!      last block always force-activated.
+//!   4. host: gather the selected pages into the staging buffer (this is
+//!      the I/O the paper saves: bytes moved scale with the budget).
+//!   5. `layer_post_sel_t{T}` / `layer_post_selh_t{T}` / dense (device):
+//!      block-sparse attention + the rest of the layer.
+//! Then `lm_head` + sampling, once per token for the whole batch.
+
+use std::collections::{HashMap, VecDeque};
+use std::rc::Rc;
+use std::time::Instant;
+
+use anyhow::{bail, Result};
+
+use super::metrics::Metrics;
+use super::request::{Completion, Request, SeqStats, StopReason};
+use super::sampling;
+use crate::gate;
+use crate::kvcache::offload::{OffloadConfig, TieredKv};
+use crate::kvcache::{KcompCache, PagedKvPool, SeqKv};
+use crate::model::{ModelConfig, ParamStore};
+use crate::runtime::{Arg, DeviceTensor, HostTensor, Runtime};
+use crate::sparse::policy::{select_budget, select_threshold, select_top_p, Policy,
+                            Selection};
+use crate::sparse::quest::QuestMeta;
+use crate::sparse::topk::{merge_mandatory, topk_indices};
+use crate::util::rng::Rng;
+use crate::workload::Vocab;
+
+#[derive(Debug, Clone, Copy)]
+pub struct EngineConfig {
+    pub policy: Policy,
+    /// Hybrid ablation (§5.2): this many leading layers run dense.
+    pub dense_first_layers: usize,
+    /// Sparse attention block size (tokens); also the KV page size.
+    pub block_size: usize,
+    pub max_new: usize,
+    /// 0.0 = greedy.
+    pub temperature: f32,
+    pub seed: u64,
+    /// Record gate-vs-oracle recall at every step (slow; diagnostics).
+    pub track_recall: bool,
+    /// KV offload simulation (§3.2): fast-tier capacity in pages
+    /// (0 = disabled). Pages touched by attention gathers go through an
+    /// LRU fast tier; misses are charged as slow-tier fetches.
+    pub offload_fast_pages: usize,
+}
+
+impl Default for EngineConfig {
+    fn default() -> Self {
+        EngineConfig {
+            policy: Policy::Dense,
+            dense_first_layers: 0,
+            block_size: 16,
+            max_new: 32,
+            temperature: 0.0,
+            seed: 0,
+            track_recall: false,
+            offload_fast_pages: 0,
+        }
+    }
+}
+
+/// Per-slot sequence state.
+struct Slot {
+    req: Request,
+    admitted: Instant,
+    first_token: Option<Instant>,
+    /// All tokens: prompt + generated (last one not yet in KV cache).
+    tokens: Vec<i32>,
+    /// Tokens whose KV is cached.
+    len: usize,
+    kv: Vec<SeqKv>,          // per layer
+    kcomp: Vec<KcompCache>,  // per layer
+    quest: Vec<QuestMeta>,   // per layer
+    generated: Vec<i32>,
+    stats: SeqStats,
+    stop: Option<StopReason>,
+}
+
+pub struct Engine {
+    pub rt: Rc<Runtime>,
+    pub cfg: ModelConfig,
+    pub ecfg: EngineConfig,
+    params: ParamStore,
+    pool: PagedKvPool,
+    slots: Vec<Option<Slot>>,
+    queue: VecDeque<(Request, Instant)>,
+    rng: Rng,
+    pub metrics: Metrics,
+    pub vocab: Vocab,
+    batch: usize,
+    max_seq: usize,
+    /// Resident device copies of every weight tensor (uploaded once).
+    dev: HashMap<String, DeviceTensor>,
+    /// Per-layer wk_gate host copies (hot in the kcomp update).
+    wk_gates: Vec<Vec<f32>>,
+    /// Current decode step's q_rope (for the oracle / recall paths).
+    current_q: Vec<f32>,
+    /// Optional tiered-KV offload accounting (§3.2).
+    pub offload: Option<TieredKv>,
+}
+
+impl Engine {
+    pub fn new(rt: Rc<Runtime>, params: ParamStore, gates: ParamStore,
+               ecfg: EngineConfig) -> Result<Engine> {
+        let cfg = ModelConfig::from_json(&rt.manifest.model)?;
+        let batch = rt.manifest.aot.get("decode_batch")?.as_usize()?;
+        let max_seq = rt.manifest.aot.get("prefill_len")?.as_usize()?;
+        if max_seq % ecfg.block_size != 0 {
+            bail!("block size {} must divide max_seq {max_seq}", ecfg.block_size);
+        }
+        let pages_per_seq = max_seq / ecfg.block_size + 1;
+        let capacity = batch * cfg.n_layers * pages_per_seq;
+        let pool = PagedKvPool::new(capacity, cfg.n_kv_heads, cfg.head_dim,
+                                    ecfg.block_size);
+        let slots = (0..batch).map(|_| None).collect();
+        let wk_gates = (0..cfg.n_layers)
+            .map(|l| Ok(gates.get(&format!("l{l}.wk_gate"))?.as_f32()?.to_vec()))
+            .collect::<Result<Vec<_>>>()?;
+        let offload = if ecfg.offload_fast_pages > 0 {
+            Some(TieredKv::new(OffloadConfig {
+                fast_capacity: ecfg.offload_fast_pages,
+                fetch_s_per_byte: 1e-10, // ~10 GB/s host link analog
+                page_bytes: 2 * cfg.n_kv_heads * ecfg.block_size * cfg.head_dim * 4,
+            }))
+        } else {
+            None
+        };
+        // Upload all weights once; the decode hot path only ships
+        // activations and gathered KV.
+        let mut dev = HashMap::new();
+        for (spec, t) in params.specs.iter().zip(&params.tensors) {
+            dev.insert(spec.name.clone(), rt.upload(t)?);
+        }
+        for (spec, t) in gates.specs.iter().zip(&gates.tensors) {
+            dev.insert(spec.name.clone(), rt.upload(t)?);
+        }
+        Ok(Engine {
+            rng: Rng::new(ecfg.seed),
+            rt,
+            cfg,
+            ecfg,
+            params,
+            pool,
+            slots,
+            queue: VecDeque::new(),
+            dev,
+            metrics: Metrics::new(),
+            vocab: Vocab::default(),
+            batch,
+            max_seq,
+            wk_gates,
+            current_q: Vec::new(),
+            offload,
+        })
+    }
+
+    pub fn batch_size(&self) -> usize {
+        self.batch
+    }
+
+    /// Free pages in the KV pool (leak detection in tests).
+    pub fn pool_free(&self) -> usize {
+        self.pool.free_pages()
+    }
+
+    pub fn pool_capacity(&self) -> usize {
+        self.pool.capacity()
+    }
+
+    pub fn max_seq(&self) -> usize {
+        self.max_seq
+    }
+
+    pub fn submit(&mut self, req: Request) {
+        assert!(req.prompt.len() + 2 < self.max_seq,
+                "prompt {} too long for context {}", req.prompt.len(), self.max_seq);
+        self.metrics.start_clock();
+        self.queue.push_back((req, Instant::now()));
+    }
+
+    pub fn pending(&self) -> usize {
+        self.queue.len()
+    }
+
+    pub fn active(&self) -> usize {
+        self.slots.iter().filter(|s| s.is_some()).count()
+    }
+
+    pub fn idle(&self) -> bool {
+        self.queue.is_empty() && self.active() == 0
+    }
+
+    /// Run everything currently queued to completion.
+    pub fn run_to_completion(&mut self) -> Result<Vec<Completion>> {
+        let mut out = Vec::new();
+        while !self.idle() {
+            out.extend(self.step()?);
+        }
+        Ok(out)
+    }
+
+    /// One engine iteration: admit+prefill if there are waiting requests
+    /// and free slots, otherwise decode one token for the running batch.
+    pub fn step(&mut self) -> Result<Vec<Completion>> {
+        if !self.queue.is_empty() && self.slots.iter().any(|s| s.is_none()) {
+            self.admit_and_prefill()?;
+        } else if self.active() > 0 {
+            self.decode_step()?;
+        }
+        Ok(self.reap())
+    }
+
+    // ------------------------------------------------------------------
+    // Prefill
+    // ------------------------------------------------------------------
+
+    fn admit_and_prefill(&mut self) -> Result<()> {
+        let t0 = Instant::now();
+        let mut new_slots: Vec<usize> = Vec::new();
+        for i in 0..self.batch {
+            if self.slots[i].is_none() {
+                if let Some((req, admitted)) = self.queue.pop_front() {
+                    self.slots[i] = Some(Slot {
+                        tokens: req.prompt.clone(),
+                        len: 0,
+                        kv: (0..self.cfg.n_layers).map(|_| SeqKv::new()).collect(),
+                        kcomp: (0..self.cfg.n_layers)
+                            .map(|_| KcompCache::new(&self.cfg, self.ecfg.block_size))
+                            .collect(),
+                        quest: (0..self.cfg.n_layers)
+                            .map(|_| QuestMeta::new(&self.cfg, self.ecfg.block_size,
+                                                    self.max_seq))
+                            .collect(),
+                        generated: Vec::new(),
+                        stats: SeqStats::default(),
+                        stop: None,
+                        req,
+                        admitted,
+                        first_token: None,
+                    });
+                    new_slots.push(i);
+                }
+            }
+        }
+        if new_slots.is_empty() {
+            return Ok(());
+        }
+        // Padded prefill batch: only new slots get nonzero len.
+        let (b, s) = (self.batch, self.max_seq);
+        let mut ids = vec![0i32; b * s];
+        let mut seq_len = vec![0i32; b];
+        for &i in &new_slots {
+            let p = &self.slots[i].as_ref().unwrap().req.prompt;
+            ids[i * s..i * s + p.len()].copy_from_slice(p);
+            seq_len[i] = p.len() as i32;
+        }
+        let ids_t = HostTensor::i32(vec![b, s], ids);
+        let len_t = HostTensor::i32(vec![b], seq_len);
+        let names: Vec<String> =
+            self.params.specs.iter().map(|sp| sp.name.clone()).collect();
+        let outs = {
+            let mut args: Vec<Arg> = Vec::with_capacity(names.len() + 2);
+            for n in &names {
+                args.push(Arg::Dev(&self.dev[n.as_str()]));
+            }
+            args.push(Arg::Host(&ids_t));
+            args.push(Arg::Host(&len_t));
+            self.rt.call("prefill", &args)?
+        };
+        let lg = outs[0].as_f32()?;
+        let kr = outs[1].as_f32()?;
+        let vv = outs[2].as_f32()?;
+        let kp = outs[3].as_f32()?;
+        let (hkv, dh, l_n) = (self.cfg.n_kv_heads, self.cfg.head_dim, self.cfg.n_layers);
+        let vocab = self.cfg.vocab;
+        // cache layout [L, B, Hkv, S, dh]
+        let idx = |l: usize, bi: usize, h: usize, t: usize| {
+            (((l * b + bi) * hkv + h) * s + t) * dh
+        };
+        let mut krow = vec![0f32; hkv * dh];
+        let mut vrow = vec![0f32; hkv * dh];
+        let mut prow = vec![0f32; hkv * dh];
+        for &i in &new_slots {
+            let plen = self.slots[i].as_ref().unwrap().req.prompt.len();
+            for t in 0..plen {
+                for l in 0..l_n {
+                    for h in 0..hkv {
+                        let o = idx(l, i, h, t);
+                        krow[h * dh..(h + 1) * dh].copy_from_slice(&kr[o..o + dh]);
+                        vrow[h * dh..(h + 1) * dh].copy_from_slice(&vv[o..o + dh]);
+                        prow[h * dh..(h + 1) * dh].copy_from_slice(&kp[o..o + dh]);
+                    }
+                    let slot = self.slots[i].as_mut().unwrap();
+                    slot.kv[l].append(&mut self.pool, &krow, &vrow)?;
+                    slot.quest[l].append(&krow);
+                    slot.kcomp[l].append(&self.cfg, &self.wk_gates[l], &prow);
+                }
+            }
+            // First generated token from logits[i, plen-1].
+            let row = &lg[(i * s + plen - 1) * vocab..(i * s + plen) * vocab];
+            let tok = sampling::sample(row, self.ecfg.temperature, &mut self.rng);
+            let slot = self.slots[i].as_mut().unwrap();
+            slot.len = plen;
+            slot.tokens.push(tok);
+            slot.generated.push(tok);
+            slot.first_token = Some(Instant::now());
+            self.check_stop(i, tok);
+        }
+        self.metrics.prefill_s.push(t0.elapsed().as_secs_f64());
+        Ok(())
+    }
+
+    // ------------------------------------------------------------------
+    // Decode
+    // ------------------------------------------------------------------
+
+    fn decode_step(&mut self) -> Result<()> {
+        let t0 = Instant::now();
+        let (b, d) = (self.batch, self.cfg.d_model);
+        let (hkv, _h_all, dh, dg) = (self.cfg.n_kv_heads, self.cfg.n_heads,
+                                    self.cfg.head_dim, self.cfg.d_gate);
+        let active: Vec<usize> = (0..b).filter(|&i| self.slots[i].is_some()).collect();
+        // Embed current tokens (host: one row copy per sequence).
+        let mut x = vec![0f32; b * d];
+        let mut pos = vec![0i32; b];
+        {
+            let emb = self.params.get("emb")?.as_f32()?;
+            for &i in &active {
+                let slot = self.slots[i].as_ref().unwrap();
+                let tok = *slot.tokens.last().unwrap() as usize;
+                x[i * d..(i + 1) * d].copy_from_slice(&emb[tok * d..(tok + 1) * d]);
+                pos[i] = slot.len as i32;
+            }
+        }
+        let mut x_t = HostTensor::f32(vec![b, d], x);
+        let pos_t = HostTensor::i32(vec![b], pos);
+
+        for l in 0..self.cfg.n_layers {
+            // 1. layer_pre
+            let outs = {
+                let args = [
+                    Arg::Host(&x_t),
+                    Arg::Host(&pos_t),
+                    Arg::Dev(&self.dev[&format!("l{l}.wq")]),
+                    Arg::Dev(&self.dev[&format!("l{l}.wk")]),
+                    Arg::Dev(&self.dev[&format!("l{l}.wv")]),
+                    Arg::Dev(&self.dev[&format!("l{l}.ln1")]),
+                    Arg::Dev(&self.dev[&format!("l{l}.wq_gate")]),
+                ];
+                self.rt.call("layer_pre", &args)?
+            };
+            let k_rope = outs[1].as_f32()?;
+            let v_new = outs[2].as_f32()?;
+            let k_pre = outs[3].as_f32()?;
+            let q_gate_all = outs[4].as_f32()?.to_vec();
+            self.current_q = outs[0].as_f32()?.to_vec();
+
+            // 2. cache updates
+            for &i in &active {
+                let krow = &k_rope[i * hkv * dh..(i + 1) * hkv * dh];
+                let vrow = &v_new[i * hkv * dh..(i + 1) * hkv * dh];
+                let prow = &k_pre[i * hkv * dh..(i + 1) * hkv * dh];
+                let slot = self.slots[i].as_mut().unwrap();
+                slot.kv[l].append(&mut self.pool, krow, vrow)?;
+                slot.quest[l].append(krow);
+                slot.kcomp[l].append(&self.cfg, &self.wk_gates[l], prow);
+            }
+
+            // 3. selection
+            let effective = if l < self.ecfg.dense_first_layers {
+                Policy::Dense
+            } else {
+                self.ecfg.policy
+            };
+            let mut selections: Vec<Option<Selection>> = vec![None; b];
+            for &i in &active {
+                let qg = q_gate_all[i * hkv * dg..(i + 1) * hkv * dg].to_vec();
+                let sel = self.select(i, l, effective, &qg)?;
+                if l == 0 {
+                    self.record_activation(i, l, &sel);
+                }
+                selections[i] = Some(sel);
+            }
+
+            // 4+5. gather + attention
+            x_t = self.run_attention(l, &outs[0], &x_t, &active, &selections)?;
+        }
+
+        // lm_head + sampling
+        let logits = {
+            let args = [
+                Arg::Host(&x_t),
+                Arg::Dev(&self.dev["ln_f"]),
+                Arg::Dev(&self.dev["head"]),
+            ];
+            self.rt.call("lm_head", &args)?
+        };
+        let lg = logits[0].as_f32()?;
+        let vocab = self.cfg.vocab;
+        for &i in &active {
+            let row = &lg[i * vocab..(i + 1) * vocab];
+            let tok = sampling::sample(row, self.ecfg.temperature, &mut self.rng);
+            let slot = self.slots[i].as_mut().unwrap();
+            slot.len += 1;
+            slot.tokens.push(tok);
+            slot.generated.push(tok);
+            self.check_stop(i, tok);
+        }
+        self.metrics.decode_step_s.push(t0.elapsed().as_secs_f64());
+        Ok(())
+    }
+
+    /// Fig 9a accounting: activated tokens per head at layer 0.
+    fn record_activation(&mut self, i: usize, l: usize, sel: &Selection) {
+        let bs = self.ecfg.block_size;
+        let slot = self.slots[i].as_ref().unwrap();
+        let ctx = slot.kv[l].len;
+        let act = match sel {
+            Selection::Dense => ctx as f64,
+            Selection::Shared(v) | Selection::PerHead(v) => {
+                let per: f64 = v
+                    .iter()
+                    .map(|row| {
+                        row.iter()
+                            .map(|&j| slot.kv[l].tokens_in_block(j as usize, bs))
+                            .sum::<usize>() as f64
+                    })
+                    .sum();
+                per / v.len().max(1) as f64
+            }
+        };
+        let slot = self.slots[i].as_mut().unwrap();
+        slot.stats.activated.push((ctx, act));
+    }
+
+    /// Block selection for one slot at one layer (step 3).
+    fn select(&mut self, i: usize, l: usize, policy: Policy,
+              q_gate: &[f32]) -> Result<Selection> {
+        let bs = self.ecfg.block_size;
+        let (partial, n_complete) = {
+            let kc = &self.slots[i].as_ref().unwrap().kcomp[l];
+            (if kc.has_partial() { Some(kc.partial_index()) } else { None },
+             kc.n_complete())
+        };
+        let sel = match policy {
+            Policy::Dense => Selection::Dense,
+            Policy::GateBudget { budget_tokens } => {
+                let kc = &self.slots[i].as_ref().unwrap().kcomp[l];
+                let scores = kc.score(&self.cfg, q_gate);
+                let k = Policy::block_budget(budget_tokens, bs);
+                Selection::Shared(select_budget(&scores, k, partial))
+            }
+            Policy::GateThreshold { threshold } => {
+                let kc = &self.slots[i].as_ref().unwrap().kcomp[l];
+                let mut scores = kc.score(&self.cfg, q_gate);
+                for row in &mut scores {
+                    let n = row.len();
+                    if n > 0 {
+                        gate::softmax_rows(row, n);
+                    }
+                }
+                Selection::Shared(select_threshold(&scores, threshold, partial))
+            }
+            Policy::GateTopP { p } => {
+                let kc = &self.slots[i].as_ref().unwrap().kcomp[l];
+                let mut scores = kc.score(&self.cfg, q_gate);
+                for row in &mut scores {
+                    let n = row.len();
+                    if n > 0 {
+                        gate::softmax_rows(row, n);
+                    }
+                }
+                Selection::Shared(select_top_p(&scores, p, partial))
+            }
+            Policy::Oracle { budget_tokens } => {
+                let rows = self.oracle_rows(i, l);
+                let k = Policy::block_budget(budget_tokens, bs);
+                let mut sel: Vec<Vec<i32>> = Vec::with_capacity(rows.len());
+                for row in &rows {
+                    let take = if partial.is_some() { k.saturating_sub(1) } else { k };
+                    let mut s = topk_indices(&row[..n_complete.min(row.len())], take);
+                    if let Some(p) = partial {
+                        merge_mandatory(&mut s, p);
+                    }
+                    sel.push(s);
+                }
+                Selection::Shared(sel)
+            }
+            Policy::Quest { budget_tokens } => {
+                let k = Policy::block_budget(budget_tokens, bs);
+                let g = self.cfg.group_size;
+                let dh = self.cfg.head_dim;
+                let slot = self.slots[i].as_ref().unwrap();
+                let mut sel = Vec::with_capacity(self.cfg.n_heads);
+                for qh in 0..self.cfg.n_heads {
+                    let kvh = qh / g;
+                    let q = &self.current_q[(i * self.cfg.n_heads + qh) * dh..][..dh];
+                    let scores = slot.quest[l].scores(kvh, q);
+                    let take = if partial.is_some() { k.saturating_sub(1) } else { k };
+                    let mut s =
+                        topk_indices(&scores[..n_complete.min(scores.len())], take);
+                    if let Some(p) = partial {
+                        merge_mandatory(&mut s, p);
+                    }
+                    sel.push(s);
+                }
+                Selection::PerHead(sel)
+            }
+        };
+        // Recall diagnostics vs the oracle.
+        if self.ecfg.track_recall {
+            if let Policy::GateBudget { budget_tokens } | Policy::Quest { budget_tokens } =
+                policy
+            {
+                let rows = self.oracle_rows(i, l);
+                let k = Policy::block_budget(budget_tokens, bs);
+                let orc: Vec<Vec<i32>> = rows
+                    .iter()
+                    .map(|r| topk_indices(&r[..n_complete.min(r.len())], k))
+                    .collect();
+                let mut rsum = 0.0;
+                let mut rn = 0u64;
+                let g = self.cfg.group_size;
+                match &sel {
+                    Selection::Shared(v) => {
+                        for (hh, row) in v.iter().enumerate() {
+                            let o = &orc[hh];
+                            if !o.is_empty() {
+                                let hit = row.iter().filter(|x| o.contains(x)).count();
+                                rsum += hit as f64 / o.len() as f64;
+                                rn += 1;
+                            }
+                        }
+                    }
+                    Selection::PerHead(v) => {
+                        for (qh, row) in v.iter().enumerate() {
+                            let o = &orc[qh / g];
+                            if !o.is_empty() {
+                                let hit = row.iter().filter(|x| o.contains(x)).count();
+                                rsum += hit as f64 / o.len() as f64;
+                                rn += 1;
+                            }
+                        }
+                    }
+                    Selection::Dense => {}
+                }
+                let slot = self.slots[i].as_mut().unwrap();
+                slot.stats.recall_sum += rsum;
+                slot.stats.recall_n += rn;
+            }
+        }
+        Ok(sel)
+    }
+
+    /// Oracle block scores (true attention over the cached keys, §4.2)
+    /// for one slot+layer: per-KV-head rows over all blocks (incl.
+    /// partial).
+    fn oracle_rows(&self, i: usize, l: usize) -> Vec<Vec<f32>> {
+        let slot = self.slots[i].as_ref().unwrap();
+        let kvl = &slot.kv[l];
+        let bs = self.ecfg.block_size;
+        let len = kvl.len;
+        let n = self.cfg.n_heads * self.cfg.head_dim;
+        let q = &self.current_q[i * n..(i + 1) * n];
+        let pool = &self.pool;
+        let pages = &kvl.pages;
+        let k_at = |h: usize, t: usize| -> *const f32 {
+            pool.k_row(pages[t / bs], h, t % bs).as_ptr()
+        };
+        let flat = gate::oracle_scores(&self.cfg, q, &k_at, len, bs);
+        let nblk = len.div_ceil(bs);
+        (0..self.cfg.n_kv_heads)
+            .map(|h| flat[h * nblk..(h + 1) * nblk].to_vec())
+            .collect()
+    }
+
+    /// Gather + attention executable dispatch (steps 4-5).
+    fn run_attention(&mut self, l: usize, q_rope_t: &HostTensor, x_t: &HostTensor,
+                     active: &[usize], selections: &[Option<Selection>])
+                     -> Result<HostTensor> {
+        let b = self.batch;
+        let (hkv, h_all, dh) = (self.cfg.n_kv_heads, self.cfg.n_heads, self.cfg.head_dim);
+        let bs = self.ecfg.block_size;
+        let _ = h_all;
+        let any_dense =
+            active.iter().any(|&i| matches!(selections[i], Some(Selection::Dense)));
+        let wo = format!("l{l}.wo");
+        let w1 = format!("l{l}.w1");
+        let w2 = format!("l{l}.w2");
+        let ln2 = format!("l{l}.ln2");
+
+        // Sparse staging is capped by the largest compiled variant; if a
+        // selection (e.g. a low threshold) exceeds it, attending densely
+        // is the correct superset behaviour.
+        let mut max_tokens = 1usize;
+        if !any_dense {
+            for &i in active {
+                let slot = self.slots[i].as_ref().unwrap();
+                let kvl = &slot.kv[l];
+                if let Some(Selection::Shared(v)) | Some(Selection::PerHead(v)) =
+                    &selections[i]
+                {
+                    for row in v {
+                        let t: usize = row
+                            .iter()
+                            .map(|&j| kvl.tokens_in_block(j as usize, bs))
+                            .sum();
+                        max_tokens = max_tokens.max(t);
+                    }
+                }
+            }
+        }
+        let variant = self.rt.manifest.sel_variant_for(max_tokens);
+        if any_dense || variant.is_err() {
+            // Dense baseline: ship the full cache.
+            let s = self.max_seq;
+            let mut kc = vec![0f32; b * hkv * s * dh];
+            let mut vc = vec![0f32; b * hkv * s * dh];
+            let mut seq_len = vec![0i32; b];
+            let mut touched_total = 0u64;
+            for &i in active {
+                let mut touched = 0u64;
+                {
+                    let slot = self.slots[i].as_ref().unwrap();
+                    let kvl = &slot.kv[l];
+                    seq_len[i] = kvl.len as i32;
+                    for h in 0..hkv {
+                        for (blk, &pg) in kvl.pages.iter().enumerate() {
+                            if let Some(t) = &mut self.offload {
+                                t.touch(pg);
+                            }
+                            let n = kvl.tokens_in_block(blk, bs);
+                            let off = ((i * hkv + h) * s + blk * bs) * dh;
+                            self.pool.gather_block(
+                                pg, h, n,
+                                &mut kc[off..off + n * dh],
+                                &mut vc[off..off + n * dh],
+                            );
+                            touched += 2 * (n * dh * 4) as u64;
+                        }
+                    }
+                }
+                touched_total += touched;
+                let slot = self.slots[i].as_mut().unwrap();
+                slot.stats.kv_bytes_touched += touched;
+            }
+            self.metrics.kv_bytes_touched += touched_total;
+            self.metrics.kv_bytes_dense_equiv += touched_total;
+            let kc_t = HostTensor::f32(vec![b, hkv, s, dh], kc);
+            let vc_t = HostTensor::f32(vec![b, hkv, s, dh], vc);
+            let sl_t = HostTensor::i32(vec![b], seq_len);
+            let args = [
+                Arg::Host(q_rope_t),
+                Arg::Host(&kc_t),
+                Arg::Host(&vc_t),
+                Arg::Host(&sl_t),
+                Arg::Host(x_t),
+                Arg::Dev(&self.dev[&wo]),
+                Arg::Dev(&self.dev[&w1]),
+                Arg::Dev(&self.dev[&w2]),
+                Arg::Dev(&self.dev[&ln2]),
+            ];
+            let outs = self.rt.call("layer_post_dense", &args)?;
+            return Ok(outs.into_iter().next().unwrap());
+        }
+
+        // Sparse: widest head-row in tokens -> staging variant.
+        let per_head =
+            active.iter().any(|&i| matches!(selections[i], Some(Selection::PerHead(_))));
+        let t_cap = variant.expect("checked above");
+        let heads = if per_head { h_all } else { hkv };
+        let g = self.cfg.group_size;
+        let mut k_sel = vec![0f32; b * heads * t_cap * dh];
+        let mut v_sel = vec![0f32; b * heads * t_cap * dh];
+        let mut mask = vec![0f32; b * heads * t_cap];
+        let mut dense_equiv = 0u64;
+        let mut touched_total = 0u64;
+        for &i in active {
+            let rows: Vec<Vec<i32>> = match selections[i].as_ref().unwrap() {
+                Selection::Shared(v) => {
+                    if per_head {
+                        // Mixed Shared/PerHead batch: expand to per head.
+                        let mut e = Vec::with_capacity(h_all);
+                        for qh in 0..h_all {
+                            e.push(v[qh / g].clone());
+                        }
+                        e
+                    } else {
+                        v.clone()
+                    }
+                }
+                Selection::PerHead(v) => v.clone(),
+                Selection::Dense => unreachable!(),
+            };
+            let mut touched = 0u64;
+            let kvl_len = self.slots[i].as_ref().unwrap().kv[l].len;
+            for (hr, row) in rows.iter().enumerate() {
+                let kv_head = if per_head { hr / g } else { hr };
+                let mut cursor = 0usize;
+                for &j in row {
+                    let (n, pg) = {
+                        let slot = self.slots[i].as_ref().unwrap();
+                        (slot.kv[l].tokens_in_block(j as usize, bs),
+                         slot.kv[l].pages[j as usize])
+                    };
+                    if let Some(t) = &mut self.offload {
+                        t.touch(pg);
+                    }
+                    let off = ((i * heads + hr) * t_cap + cursor) * dh;
+                    self.pool.gather_block(
+                        pg, kv_head, n,
+                        &mut k_sel[off..off + n * dh],
+                        &mut v_sel[off..off + n * dh],
+                    );
+                    let moff = (i * heads + hr) * t_cap + cursor;
+                    for m in &mut mask[moff..moff + n] {
+                        *m = 1.0;
+                    }
+                    cursor += n;
+                    touched += 2 * (n * dh * 4) as u64;
+                }
+            }
+            dense_equiv += 2 * (kvl_len * dh * 4) as u64 * hkv as u64;
+            touched_total += touched;
+            let slot = self.slots[i].as_mut().unwrap();
+            slot.stats.kv_bytes_touched += touched;
+        }
+        self.metrics.kv_bytes_touched += touched_total;
+        self.metrics.kv_bytes_dense_equiv += dense_equiv;
+        let k_t = HostTensor::f32(vec![b, heads, t_cap, dh], k_sel);
+        let v_t = HostTensor::f32(vec![b, heads, t_cap, dh], v_sel);
+        let m_t = HostTensor::f32(vec![b, heads, t_cap], mask);
+        let exe = if per_head {
+            format!("layer_post_selh_t{t_cap}")
+        } else {
+            format!("layer_post_sel_t{t_cap}")
+        };
+        let args = [
+            Arg::Host(q_rope_t),
+            Arg::Host(&k_t),
+            Arg::Host(&v_t),
+            Arg::Host(&m_t),
+            Arg::Host(x_t),
+            Arg::Dev(&self.dev[&wo]),
+            Arg::Dev(&self.dev[&w1]),
+            Arg::Dev(&self.dev[&w2]),
+            Arg::Dev(&self.dev[&ln2]),
+        ];
+        let outs = self.rt.call(&exe, &args)?;
+        Ok(outs.into_iter().next().unwrap())
+    }
+
+    fn check_stop(&mut self, i: usize, tok: i32) {
+        let max_seq = self.max_seq;
+        let eos = self.vocab.eos;
+        let slot = self.slots[i].as_mut().unwrap();
+        if tok == eos {
+            slot.stop = Some(StopReason::Eos);
+        } else if slot.generated.len() >= slot.req.max_new {
+            slot.stop = Some(StopReason::MaxNewTokens);
+        } else if slot.len + 2 >= max_seq {
+            slot.stop = Some(StopReason::ContextFull);
+        }
+    }
+
+    /// Collect finished slots into completions, releasing their pages.
+    fn reap(&mut self) -> Vec<Completion> {
+        let mut out = Vec::new();
+        for i in 0..self.batch {
+            let finished = self.slots[i]
+                .as_ref()
+                .map(|s| s.stop.is_some())
+                .unwrap_or(false);
+            if finished {
+                let mut slot = self.slots[i].take().unwrap();
+                for kv in &mut slot.kv {
+                    if let Some(t) = &mut self.offload {
+                        for &pg in &kv.pages {
+                            t.invalidate(pg);
+                        }
+                    }
+                    kv.release(&mut self.pool);
+                }
+                let now = Instant::now();
+                let ttft = slot
+                    .first_token
+                    .map(|t| t - slot.admitted)
+                    .unwrap_or_default();
+                let e2e = now - slot.admitted;
+                self.metrics.record_completion(ttft, e2e, slot.generated.len());
+                out.push(Completion {
+                    id: slot.req.id,
+                    prompt_len: slot.req.prompt.len(),
+                    generated: slot.generated,
+                    stop: slot.stop.unwrap(),
+                    ttft,
+                    e2e,
+                    stats: slot.stats,
+                });
+            }
+        }
+        out
+    }
+}

@@ -1,0 +1,91 @@
+//! Serving metrics: latency histograms, throughput, sparsity counters.
+
+use std::time::Duration;
+
+use crate::util::stats::Series;
+
+#[derive(Debug, Default)]
+pub struct Metrics {
+    pub ttft_s: Series,
+    pub e2e_s: Series,
+    pub decode_step_s: Series,
+    pub prefill_s: Series,
+    pub tokens_generated: u64,
+    pub requests_completed: u64,
+    pub kv_bytes_touched: u64,
+    pub kv_bytes_dense_equiv: u64,
+    wall_start: Option<std::time::Instant>,
+}
+
+impl Metrics {
+    pub fn new() -> Metrics {
+        Metrics::default()
+    }
+
+    pub fn start_clock(&mut self) {
+        if self.wall_start.is_none() {
+            self.wall_start = Some(std::time::Instant::now());
+        }
+    }
+
+    pub fn record_completion(&mut self, ttft: Duration, e2e: Duration, tokens: usize) {
+        self.ttft_s.push(ttft.as_secs_f64());
+        self.e2e_s.push(e2e.as_secs_f64());
+        self.tokens_generated += tokens as u64;
+        self.requests_completed += 1;
+    }
+
+    /// Generated tokens per wall-clock second since start_clock().
+    pub fn throughput_tps(&self) -> f64 {
+        match self.wall_start {
+            Some(t0) => self.tokens_generated as f64 / t0.elapsed().as_secs_f64().max(1e-9),
+            None => 0.0,
+        }
+    }
+
+    /// Fraction of dense KV traffic actually touched (the paper's I/O
+    /// saving: 1 - sparsity).
+    pub fn kv_touch_fraction(&self) -> f64 {
+        if self.kv_bytes_dense_equiv == 0 {
+            return 1.0;
+        }
+        self.kv_bytes_touched as f64 / self.kv_bytes_dense_equiv as f64
+    }
+
+    pub fn report(&self) -> String {
+        format!(
+            "requests={} tokens={} tps={:.1}\n  ttft    {}\n  e2e     {}\n  decode  {}\n  kv-touch fraction {:.3}",
+            self.requests_completed,
+            self.tokens_generated,
+            self.throughput_tps(),
+            self.ttft_s.summary("s"),
+            self.e2e_s.summary("s"),
+            self.decode_step_s.summary("s"),
+            self.kv_touch_fraction(),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn record_and_report() {
+        let mut m = Metrics::new();
+        m.start_clock();
+        m.record_completion(Duration::from_millis(50), Duration::from_millis(500), 16);
+        m.record_completion(Duration::from_millis(70), Duration::from_millis(700), 24);
+        assert_eq!(m.requests_completed, 2);
+        assert_eq!(m.tokens_generated, 40);
+        assert!(m.throughput_tps() > 0.0);
+        let r = m.report();
+        assert!(r.contains("requests=2"));
+    }
+
+    #[test]
+    fn touch_fraction_defaults_to_dense() {
+        let m = Metrics::new();
+        assert_eq!(m.kv_touch_fraction(), 1.0);
+    }
+}

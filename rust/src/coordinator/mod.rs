@@ -1,0 +1,13 @@
+//! L3 coordinator: the serving engine (continuous batching over the
+//! AOT-compiled decode executables), sampling, scheduling, metrics, and
+//! the TCP server.
+
+pub mod engine;
+pub mod metrics;
+pub mod request;
+pub mod sampling;
+pub mod scheduler;
+pub mod server;
+
+pub use engine::{Engine, EngineConfig};
+pub use request::{Completion, Request};

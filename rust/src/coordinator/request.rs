@@ -1,0 +1,84 @@
+//! Request / completion types flowing through the coordinator.
+
+use std::time::Duration;
+
+/// A generation request (token-level; the workload layer produces the
+//  prompts).
+#[derive(Debug, Clone)]
+pub struct Request {
+    pub id: u64,
+    pub prompt: Vec<i32>,
+    pub max_new: usize,
+}
+
+/// Why a generation stopped.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum StopReason {
+    Eos,
+    MaxNewTokens,
+    ContextFull,
+}
+
+/// Per-request sparsity / accuracy diagnostics collected by the engine.
+#[derive(Debug, Clone, Default)]
+pub struct SeqStats {
+    /// (context length, activated tokens per KV head) at each decode step
+    /// of layer 0 — the Fig 9a distribution.
+    pub activated: Vec<(usize, f64)>,
+    /// Sum / count of gate-vs-oracle block recall (when tracking enabled).
+    pub recall_sum: f64,
+    pub recall_n: u64,
+    /// KV bytes gathered for attention across the generation (I/O proxy).
+    pub kv_bytes_touched: u64,
+}
+
+impl SeqStats {
+    pub fn mean_recall(&self) -> Option<f64> {
+        if self.recall_n == 0 {
+            None
+        } else {
+            Some(self.recall_sum / self.recall_n as f64)
+        }
+    }
+
+    pub fn mean_activated(&self) -> Option<f64> {
+        if self.activated.is_empty() {
+            None
+        } else {
+            Some(self.activated.iter().map(|(_, a)| a).sum::<f64>()
+                / self.activated.len() as f64)
+        }
+    }
+}
+
+/// A finished request.
+#[derive(Debug, Clone)]
+pub struct Completion {
+    pub id: u64,
+    pub prompt_len: usize,
+    pub generated: Vec<i32>,
+    pub stop: StopReason,
+    /// Queue admission -> first generated token.
+    pub ttft: Duration,
+    /// Queue admission -> completion.
+    pub e2e: Duration,
+    pub stats: SeqStats,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stats_means() {
+        let mut s = SeqStats::default();
+        assert!(s.mean_recall().is_none());
+        assert!(s.mean_activated().is_none());
+        s.activated.push((10, 4.0));
+        s.activated.push((20, 6.0));
+        s.recall_sum = 1.5;
+        s.recall_n = 2;
+        assert_eq!(s.mean_activated(), Some(5.0));
+        assert_eq!(s.mean_recall(), Some(0.75));
+    }
+}

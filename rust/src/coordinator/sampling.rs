@@ -1,0 +1,79 @@
+//! Token sampling from LM-head logits.
+
+use crate::util::rng::Rng;
+
+/// Greedy argmax (ties -> lowest id, deterministic).
+pub fn greedy(logits: &[f32]) -> i32 {
+    let mut best = 0usize;
+    let mut best_v = f32::NEG_INFINITY;
+    for (i, &v) in logits.iter().enumerate() {
+        if v > best_v {
+            best_v = v;
+            best = i;
+        }
+    }
+    best as i32
+}
+
+/// Temperature sampling (temperature <= 0 falls back to greedy).
+pub fn sample(logits: &[f32], temperature: f32, rng: &mut Rng) -> i32 {
+    if temperature <= 0.0 {
+        return greedy(logits);
+    }
+    let m = logits.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+    let probs: Vec<f64> = logits
+        .iter()
+        .map(|&v| (((v - m) / temperature) as f64).exp())
+        .collect();
+    let total: f64 = probs.iter().sum();
+    let mut u = rng.f64() * total;
+    for (i, p) in probs.iter().enumerate() {
+        u -= p;
+        if u <= 0.0 {
+            return i as i32;
+        }
+    }
+    (probs.len() - 1) as i32
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn greedy_picks_max() {
+        assert_eq!(greedy(&[0.1, 3.0, -1.0]), 1);
+        assert_eq!(greedy(&[5.0, 5.0]), 0, "tie -> lowest id");
+    }
+
+    #[test]
+    fn zero_temperature_is_greedy() {
+        let mut rng = Rng::new(0);
+        assert_eq!(sample(&[0.0, 9.0, 1.0], 0.0, &mut rng), 1);
+    }
+
+    #[test]
+    fn sampling_respects_distribution() {
+        // Token 2 has overwhelming mass at low temperature.
+        let mut rng = Rng::new(1);
+        let logits = [0.0, 0.0, 10.0, 0.0];
+        let mut counts = [0usize; 4];
+        for _ in 0..200 {
+            counts[sample(&logits, 0.5, &mut rng) as usize] += 1;
+        }
+        assert!(counts[2] > 195, "{counts:?}");
+    }
+
+    #[test]
+    fn high_temperature_spreads() {
+        let mut rng = Rng::new(2);
+        let logits = [1.0, 1.0, 1.0, 1.0];
+        let mut counts = [0usize; 4];
+        for _ in 0..4000 {
+            counts[sample(&logits, 1.0, &mut rng) as usize] += 1;
+        }
+        for c in counts {
+            assert!(c > 800, "{counts:?}");
+        }
+    }
+}

@@ -1,0 +1,70 @@
+//! Trace-driven scheduling: replays a timed arrival trace against the
+//! engine (continuous batching happens inside `Engine::step`), used by
+//! the serving benchmark. Arrivals can be replayed in real time or in
+//! virtual time (as fast as the engine can go, arrival order preserved).
+
+use std::time::Instant;
+
+use anyhow::Result;
+
+use super::engine::Engine;
+use super::request::{Completion, Request};
+use crate::workload::trace::TracedRequest;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Replay {
+    /// Honour wall-clock arrival times (sleeps while idle).
+    RealTime,
+    /// Submit each request as soon as the engine has consumed everything
+    /// that arrived earlier (throughput-oriented).
+    Virtual,
+}
+
+pub struct TraceRunner {
+    pub replay: Replay,
+}
+
+impl TraceRunner {
+    pub fn run(&self, engine: &mut Engine, trace: &[TracedRequest])
+               -> Result<Vec<Completion>> {
+        let mut completions = Vec::new();
+        let start = Instant::now();
+        let mut next = 0usize;
+        let mut id = 0u64;
+        while next < trace.len() || !engine.idle() {
+            // Admit everything whose arrival time has passed.
+            while next < trace.len() {
+                let due = match self.replay {
+                    Replay::RealTime => {
+                        start.elapsed().as_secs_f64() >= trace[next].arrival_s
+                    }
+                    Replay::Virtual => true,
+                };
+                if !due {
+                    break;
+                }
+                let t = &trace[next];
+                engine.submit(Request {
+                    id,
+                    prompt: t.episode.prompt.clone(),
+                    max_new: t.max_new,
+                });
+                id += 1;
+                next += 1;
+                // In virtual mode admit at most one burst per step so the
+                // queue still exercises batching decisions.
+                if self.replay == Replay::Virtual && engine.pending() >= engine.batch_size()
+                {
+                    break;
+                }
+            }
+            if engine.idle() {
+                // Real-time replay with nothing due yet: wait briefly.
+                std::thread::sleep(std::time::Duration::from_millis(1));
+                continue;
+            }
+            completions.extend(engine.step()?);
+        }
+        Ok(completions)
+    }
+}

@@ -1,0 +1,168 @@
+//! TCP JSON-lines serving front-end.
+//!
+//! Protocol (one JSON object per line):
+//!   request:  {"id": 1, "prompt": [tok, ...], "max_new": 32}
+//!   response: {"id": 1, "generated": [tok, ...], "stop": "eos",
+//!              "ttft_ms": 12.3, "e2e_ms": 45.6}
+//!
+//! The engine is single-threaded (one PJRT CPU device); the server
+//! thread-pool handles connection I/O and funnels requests through a
+//! channel into the engine loop, which batches them continuously. (The
+//! offline vendor set has no tokio; std::net + threads provide the same
+//! architecture.)
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use anyhow::{anyhow, Result};
+
+use super::engine::Engine;
+use super::request::{Completion, Request, StopReason};
+use crate::util::json::Json;
+
+/// Parse one request line.
+pub fn parse_request(line: &str) -> Result<Request> {
+    let j = Json::parse(line)?;
+    let id = j.get("id")?.as_i64()? as u64;
+    let prompt: Vec<i32> = j
+        .get("prompt")?
+        .as_arr()?
+        .iter()
+        .map(|t| Ok(t.as_i64()? as i32))
+        .collect::<Result<_>>()?;
+    let max_new = j.opt("max_new").map(|v| v.as_usize()).transpose()?.unwrap_or(32);
+    Ok(Request { id, prompt, max_new })
+}
+
+/// Encode one completion line.
+pub fn encode_completion(c: &Completion) -> String {
+    let stop = match c.stop {
+        StopReason::Eos => "eos",
+        StopReason::MaxNewTokens => "max_new",
+        StopReason::ContextFull => "context_full",
+    };
+    Json::obj(vec![
+        ("id", Json::Num(c.id as f64)),
+        ("generated",
+         Json::Arr(c.generated.iter().map(|&t| Json::Num(t as f64)).collect())),
+        ("stop", Json::Str(stop.to_string())),
+        ("ttft_ms", Json::Num(c.ttft.as_secs_f64() * 1e3)),
+        ("e2e_ms", Json::Num(c.e2e.as_secs_f64() * 1e3)),
+    ])
+    .to_string()
+}
+
+struct Inflight {
+    conn: Arc<Mutex<TcpStream>>,
+    client_id: u64,
+}
+
+/// Serve forever on `addr`. Each connection may pipeline requests; ids
+/// are rewritten internally so concurrent clients cannot collide.
+pub fn serve(mut engine: Engine, addr: &str) -> Result<()> {
+    let listener = TcpListener::bind(addr).map_err(|e| anyhow!("bind {addr}: {e}"))?;
+    listener.set_nonblocking(true)?;
+    eprintln!("[seerattn] serving on {addr} (policy {})", engine.ecfg.policy.name());
+    let (tx, rx): (Sender<(Request, Arc<Mutex<TcpStream>>)>, Receiver<_>) = channel();
+    // Acceptor thread: spawns a reader thread per connection.
+    std::thread::spawn(move || loop {
+        match listener.accept() {
+            Ok((stream, _)) => {
+                let tx = tx.clone();
+                std::thread::spawn(move || {
+                    let shared = Arc::new(Mutex::new(stream.try_clone().unwrap()));
+                    let reader = BufReader::new(stream);
+                    for line in reader.lines() {
+                        let line = match line {
+                            Ok(l) => l,
+                            Err(_) => break,
+                        };
+                        if line.trim().is_empty() {
+                            continue;
+                        }
+                        match parse_request(&line) {
+                            Ok(req) => {
+                                let _ = tx.send((req, shared.clone()));
+                            }
+                            Err(e) => {
+                                let mut s = shared.lock().unwrap();
+                                let _ = writeln!(s, "{{\"error\": \"{e}\"}}");
+                            }
+                        }
+                    }
+                });
+            }
+            Err(ref e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                std::thread::sleep(Duration::from_millis(5));
+            }
+            Err(_) => break,
+        }
+    });
+
+    // Engine loop: admit from the channel, step, push completions back.
+    let mut inflight: std::collections::HashMap<u64, Inflight> =
+        std::collections::HashMap::new();
+    let mut next_id = 0u64;
+    loop {
+        // Drain newly arrived requests.
+        while let Ok((mut req, conn)) = rx.try_recv() {
+            let client_id = req.id;
+            req.id = next_id;
+            inflight.insert(next_id, Inflight { conn, client_id });
+            next_id += 1;
+            engine.submit(req);
+        }
+        if engine.idle() {
+            std::thread::sleep(Duration::from_millis(2));
+            continue;
+        }
+        for mut c in engine.step()? {
+            if let Some(fl) = inflight.remove(&c.id) {
+                c.id = fl.client_id;
+                let line = encode_completion(&c);
+                if let Ok(mut s) = fl.conn.lock() {
+                    let _ = writeln!(s, "{line}");
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::request::SeqStats;
+
+    #[test]
+    fn parse_roundtrip() {
+        let r = parse_request(r#"{"id": 7, "prompt": [1, 2, 3], "max_new": 16}"#).unwrap();
+        assert_eq!(r.id, 7);
+        assert_eq!(r.prompt, vec![1, 2, 3]);
+        assert_eq!(r.max_new, 16);
+        // default max_new
+        let r = parse_request(r#"{"id": 1, "prompt": []}"#).unwrap();
+        assert_eq!(r.max_new, 32);
+        assert!(parse_request("{\"id\": 1}").is_err());
+    }
+
+    #[test]
+    fn encode_completion_line() {
+        let c = Completion {
+            id: 3,
+            prompt_len: 5,
+            generated: vec![9, 2],
+            stop: StopReason::Eos,
+            ttft: Duration::from_millis(10),
+            e2e: Duration::from_millis(20),
+            stats: SeqStats::default(),
+        };
+        let line = encode_completion(&c);
+        let j = Json::parse(&line).unwrap();
+        assert_eq!(j.get("id").unwrap().as_i64().unwrap(), 3);
+        assert_eq!(j.get("stop").unwrap().as_str().unwrap(), "eos");
+        assert_eq!(j.get("generated").unwrap().as_arr().unwrap().len(), 2);
+    }
+}

@@ -1,0 +1,279 @@
+//! Host-side AttnGate math (paper §2.2 / §3.2).
+//!
+//! The gate *query* is produced by the `layer_pre` executable (it is part
+//! of the model graph); everything downstream of it — the K compression
+//! cache entries (pool + linear + RoPE), the block scores, and the
+//! softmax for threshold mode — is tiny (a few thousand MACs per token)
+//! and runs directly in the coordinator. This mirrors the paper's point
+//! that AttnGate overhead is negligible, and keeps the selection decision
+//! on the host where the paged KV metadata lives.
+//!
+//! Every function here is checked against the JAX reference through
+//! `artifacts/fixtures.json` (see `rust/tests/parity.rs`).
+
+use crate::model::ModelConfig;
+
+/// Apply interleaved-pair RoPE in place over the trailing dim of `x`.
+/// Matches `python/compile/rope.py::apply_rope`.
+pub fn rope_inplace(x: &mut [f32], dim: usize, pos: i64, theta: f64) {
+    debug_assert_eq!(x.len() % dim, 0);
+    debug_assert_eq!(dim % 2, 0);
+    let half = dim / 2;
+    for row in x.chunks_exact_mut(dim) {
+        for i in 0..half {
+            let freq = 1.0 / theta.powf(2.0 * i as f64 / dim as f64);
+            let angle = pos as f64 * freq;
+            let (sin, cos) = (angle.sin() as f32, angle.cos() as f32);
+            let e = row[2 * i];
+            let o = row[2 * i + 1];
+            row[2 * i] = e * cos - o * sin;
+            row[2 * i + 1] = e * sin + o * cos;
+        }
+    }
+}
+
+/// Build one K compression cache entry from a *complete* block of pre-RoPE
+/// keys: {max,min,avg}-pool over the block, per-KV-head linear, RoPE at
+/// the block-start position.
+///
+/// `k_block`: [Hkv, block, dh] row-major; `wk_gate`: [Hkv, 3*dh, dg].
+/// Returns [Hkv, dg].
+pub fn kcomp_entry(cfg: &ModelConfig, wk_gate: &[f32], k_block: &[f32],
+                   block_size: usize, block_start: i64) -> Vec<f32> {
+    let (hkv, dh, dg) = (cfg.n_kv_heads, cfg.head_dim, cfg.d_gate);
+    debug_assert_eq!(k_block.len(), hkv * block_size * dh);
+    debug_assert_eq!(wk_gate.len(), hkv * 3 * dh * dg);
+    let mut out = vec![0f32; hkv * dg];
+    let mut pooled = vec![0f32; 3 * dh];
+    for h in 0..hkv {
+        let base = h * block_size * dh;
+        for d in 0..dh {
+            let mut mx = f32::NEG_INFINITY;
+            let mut mn = f32::INFINITY;
+            let mut sum = 0f32;
+            for t in 0..block_size {
+                let v = k_block[base + t * dh + d];
+                mx = mx.max(v);
+                mn = mn.min(v);
+                sum += v;
+            }
+            pooled[d] = mx;
+            pooled[dh + d] = mn;
+            pooled[2 * dh + d] = sum / block_size as f32;
+        }
+        let w = &wk_gate[h * 3 * dh * dg..(h + 1) * 3 * dh * dg];
+        let o = &mut out[h * dg..(h + 1) * dg];
+        for (i, p) in pooled.iter().enumerate() {
+            if *p == 0.0 {
+                continue;
+            }
+            let wrow = &w[i * dg..(i + 1) * dg];
+            for (oo, ww) in o.iter_mut().zip(wrow) {
+                *oo += p * ww;
+            }
+        }
+        rope_inplace(o, dg, block_start, cfg.rope_theta);
+    }
+    out
+}
+
+/// Gate block scores (logits): q_gate · KC^T / sqrt(dg).
+///
+/// `q_gate`: [Hkv, dg]; `kc`: [Hkv, n_entries, dg] (row-major, only
+/// `n_complete` leading entries are valid). Returns [Hkv, n_complete].
+pub fn gate_scores(cfg: &ModelConfig, q_gate: &[f32], kc: &[f32],
+                   entries_stride: usize, n_complete: usize) -> Vec<f32> {
+    let (hkv, dg) = (cfg.n_kv_heads, cfg.d_gate);
+    let scale = 1.0 / (dg as f32).sqrt();
+    let mut out = vec![0f32; hkv * n_complete];
+    for h in 0..hkv {
+        let q = &q_gate[h * dg..(h + 1) * dg];
+        for j in 0..n_complete {
+            let e = &kc[(h * entries_stride + j) * dg..][..dg];
+            let mut dot = 0f32;
+            for (a, b) in q.iter().zip(e) {
+                dot += a * b;
+            }
+            out[h * n_complete + j] = dot * scale;
+        }
+    }
+    out
+}
+
+/// In-place softmax over each row of an [rows, n] matrix (threshold mode,
+/// §3.1: the paper thresholds softmaxed scores).
+pub fn softmax_rows(scores: &mut [f32], n: usize) {
+    if n == 0 {
+        return;
+    }
+    for row in scores.chunks_exact_mut(n) {
+        let m = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+        let mut sum = 0f32;
+        for x in row.iter_mut() {
+            *x = (*x - m).exp();
+            sum += *x;
+        }
+        let inv = 1.0 / sum.max(1e-30);
+        for x in row.iter_mut() {
+            *x *= inv;
+        }
+    }
+}
+
+/// Oracle block scores for one decode query (the training ground truth,
+/// §2.3, computed at inference): true attention probabilities over the
+/// full cache, column-max within each block, max over the GQA group.
+///
+/// `q_rope`: [H, dh]; `k_at(head, t)` returns the cached RoPE'd key row.
+/// Returns [Hkv, n_blocks_covering_len] (last entry may cover a partial
+/// block).
+pub fn oracle_scores(cfg: &ModelConfig, q_rope: &[f32],
+                     k_at: &dyn Fn(usize, usize) -> *const f32, len: usize,
+                     block_size: usize) -> Vec<f32> {
+    let (h_all, hkv, g, dh) = (cfg.n_heads, cfg.n_kv_heads, cfg.group_size,
+                               cfg.head_dim);
+    let nblk = len.div_ceil(block_size);
+    let scale = 1.0 / (dh as f32).sqrt();
+    let mut out = vec![0f32; hkv * nblk];
+    let mut logits = vec![0f32; len];
+    for qh in 0..h_all {
+        let kvh = qh / g;
+        let q = &q_rope[qh * dh..(qh + 1) * dh];
+        let mut m = f32::NEG_INFINITY;
+        for (t, lg) in logits.iter_mut().enumerate() {
+            // SAFETY: k_at returns a pointer to a dh-long row that outlives
+            // this call (the paged cache is not mutated during scoring).
+            let krow = unsafe { std::slice::from_raw_parts(k_at(kvh, t), dh) };
+            let mut dot = 0f32;
+            for (a, b) in q.iter().zip(krow) {
+                dot += a * b;
+            }
+            *lg = dot * scale;
+            m = m.max(*lg);
+        }
+        let mut denom = 0f32;
+        for lg in logits.iter_mut() {
+            *lg = (*lg - m).exp();
+            denom += *lg;
+        }
+        let inv = 1.0 / denom.max(1e-30);
+        for (t, lg) in logits.iter().enumerate() {
+            let p = lg * inv;
+            let j = t / block_size;
+            let slot = &mut out[kvh * nblk + j];
+            if p > *slot {
+                *slot = p;
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg() -> ModelConfig {
+        ModelConfig {
+            vocab: 64, d_model: 64, n_layers: 1, n_heads: 4, n_kv_heads: 2,
+            head_dim: 4, mlp_hidden: 8, rope_theta: 10000.0, rms_eps: 1e-5,
+            d_gate: 4, block_size: 4, max_seq: 32, group_size: 2,
+        }
+    }
+
+    #[test]
+    fn rope_pos_zero_identity_and_norm() {
+        let mut x = vec![1.0, 2.0, 3.0, 4.0];
+        let orig = x.clone();
+        rope_inplace(&mut x, 4, 0, 10000.0);
+        assert_eq!(x, orig);
+        rope_inplace(&mut x, 4, 12345, 10000.0);
+        let n0: f32 = orig.iter().map(|v| v * v).sum();
+        let n1: f32 = x.iter().map(|v| v * v).sum();
+        assert!((n0 - n1).abs() < 1e-4);
+    }
+
+    #[test]
+    fn rope_relative_dot_product() {
+        let q = [0.3f32, -1.2, 0.7, 0.1];
+        let k = [1.0f32, 0.5, -0.4, 0.9];
+        let dot = |m: i64, n: i64| {
+            let mut qm = q.to_vec();
+            let mut kn = k.to_vec();
+            rope_inplace(&mut qm, 4, m, 10000.0);
+            rope_inplace(&mut kn, 4, n, 10000.0);
+            qm.iter().zip(&kn).map(|(a, b)| a * b).sum::<f32>()
+        };
+        assert!((dot(9, 5) - dot(104, 100)).abs() < 1e-4);
+    }
+
+    #[test]
+    fn kcomp_constant_block() {
+        // Constant keys: max == min == avg, so the projection reduces to
+        // c * sum over the three pooled copies of each weight column.
+        let c = cfg();
+        let bs = 4;
+        let k_block = vec![2.0f32; c.n_kv_heads * bs * c.head_dim];
+        let wk = vec![0.5f32; c.n_kv_heads * 3 * c.head_dim * c.d_gate];
+        let out = kcomp_entry(&c, &wk, &k_block, bs, 0);
+        // each output = 2.0 * 0.5 * 3*dh = 12 (dh=4) => 12.0; pos 0 rope = id
+        for x in out {
+            assert!((x - 2.0 * 0.5 * 3.0 * c.head_dim as f32).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn gate_scores_manual() {
+        let c = cfg();
+        // Hkv=2, dg=4, two entries each.
+        let qg = vec![1.0, 0.0, 0.0, 0.0, /*h1*/ 0.0, 1.0, 0.0, 0.0];
+        let kc = vec![
+            // h0 entries
+            2.0, 0.0, 0.0, 0.0, 0.0, 4.0, 0.0, 0.0,
+            // h1 entries
+            0.0, 6.0, 0.0, 0.0, 8.0, 0.0, 0.0, 0.0,
+        ];
+        let s = gate_scores(&c, &qg, &kc, 2, 2);
+        let scale = 1.0 / 2.0; // sqrt(4)
+        assert!((s[0] - 2.0 * scale).abs() < 1e-6);
+        assert!((s[1] - 0.0).abs() < 1e-6);
+        assert!((s[2] - 6.0 * scale).abs() < 1e-6);
+        assert!((s[3] - 0.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn softmax_rows_sums_to_one() {
+        let mut s = vec![1.0, 2.0, 3.0, -1.0, 0.0, 1.0];
+        softmax_rows(&mut s, 3);
+        for row in s.chunks(3) {
+            let sum: f32 = row.iter().sum();
+            assert!((sum - 1.0).abs() < 1e-5);
+            assert!(row.windows(2).all(|w| w[0] < w[1]));
+        }
+    }
+
+    #[test]
+    fn oracle_scores_sum_le_one_and_peak_block() {
+        let c = cfg();
+        let len = 10; // 3 blocks (last partial)
+        // Keys: token 5 identical to the query direction -> block 1 peaks.
+        let mut kdata = vec![0f32; c.n_kv_heads * 16 * c.head_dim];
+        for h in 0..c.n_kv_heads {
+            kdata[(h * 16 + 5) * c.head_dim] = 5.0;
+        }
+        let q: Vec<f32> = (0..c.n_heads * c.head_dim)
+            .map(|i| if i % c.head_dim == 0 { 3.0 } else { 0.0 })
+            .collect();
+        let dh = c.head_dim;
+        let k_at = |h: usize, t: usize| -> *const f32 {
+            kdata[(h * 16 + t) * dh..].as_ptr()
+        };
+        let s = oracle_scores(&c, &q, &k_at, len, c.block_size);
+        assert_eq!(s.len(), c.n_kv_heads * 3);
+        for h in 0..c.n_kv_heads {
+            let row = &s[h * 3..(h + 1) * 3];
+            assert!(row[1] > row[0] && row[1] > row[2], "{row:?}");
+            assert!(row.iter().all(|p| (0.0..=1.0 + 1e-5).contains(p)));
+        }
+    }
+}

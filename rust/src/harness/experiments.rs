@@ -1,0 +1,441 @@
+//! One runner per paper exhibit. Every runner prints the table/series the
+//! paper reports (scaled per DESIGN.md §1) and writes a CSV next to it.
+
+use std::path::Path;
+use std::rc::Rc;
+
+use anyhow::Result;
+
+use super::report::{f, f1, pct, Table};
+use super::{eval_policy, load_gates, load_runtime_and_params, max_new_for,
+            results_dir, EvalOutcome};
+use crate::coordinator::{Engine, EngineConfig};
+use crate::model::ParamStore;
+use crate::runtime::{Arg, HostTensor, Runtime};
+use crate::sparse::Policy;
+use crate::util::bench::bench;
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+use crate::workload::reasoning::TaskConfig;
+
+pub const BUDGETS: [usize; 4] = [64, 128, 256, 384];
+
+fn engine(rt: &Rc<Runtime>, dir: &Path, ecfg: EngineConfig) -> Result<Engine> {
+    let params = {
+        let trained = crate::train::model_ckpt_path(dir);
+        let path = if trained.exists() { trained } else { dir.join("model_init.bin") };
+        ParamStore::load(&path, &rt.manifest.params)?
+    };
+    let gates = load_gates(rt, dir, ecfg.block_size)?;
+    Engine::new(rt.clone(), params, gates, ecfg)
+}
+
+fn tasks() -> Vec<(&'static str, TaskConfig)> {
+    vec![("easy(1-hop)", TaskConfig::easy()), ("hard(3-hop)", TaskConfig::hard())]
+}
+
+fn run_one(rt: &Rc<Runtime>, dir: &Path, ecfg: EngineConfig, task: TaskConfig,
+           n: usize, seed: u64) -> Result<EvalOutcome> {
+    let mut eng = engine(rt, dir, ecfg)?;
+    let max_new = max_new_for(&task, eng.max_seq());
+    eval_policy(&mut eng, task, n, seed, max_new)
+}
+
+/// Fig 4 — oracle sparse accuracy across block sizes and budgets.
+pub fn fig4(dir: &Path, n: usize) -> Result<()> {
+    let (rt, _params) = load_runtime_and_params(dir)?;
+    let rt = Rc::new(rt);
+    let mut t = Table::new(
+        "Fig 4 — oracle block-sparse accuracy (paper: lossless >= 2k budget; \
+         degradation only at the smallest budget x largest block)",
+        &["task", "block", "budget", "accuracy", "answered", "gen_len"],
+    );
+    for (tname, task) in tasks() {
+        // Dense reference first.
+        let o = run_one(&rt, dir, EngineConfig { policy: Policy::Dense,
+                                                 ..Default::default() },
+                        task, n, 40)?;
+        t.row(vec![tname.into(), "-".into(), "dense".into(), pct(o.accuracy),
+                   pct(o.answered_frac), f1(o.mean_gen_len)]);
+        for &bs in &[8usize, 16, 32] {
+            for &budget in &BUDGETS {
+                let ecfg = EngineConfig {
+                    policy: Policy::Oracle { budget_tokens: budget },
+                    block_size: bs,
+                    ..Default::default()
+                };
+                let o = run_one(&rt, dir, ecfg, task, n, 40)?;
+                t.row(vec![tname.into(), bs.to_string(), budget.to_string(),
+                           pct(o.accuracy), pct(o.answered_frac),
+                           f1(o.mean_gen_len)]);
+            }
+        }
+    }
+    t.print();
+    t.save_csv(&results_dir().join("fig4.csv"))?;
+    Ok(())
+}
+
+/// Fig 5 — the main comparison: Full vs SeerAttention-R vs Quest.
+pub fn fig5(dir: &Path, n: usize) -> Result<()> {
+    let (rt, _params) = load_runtime_and_params(dir)?;
+    let rt = Rc::new(rt);
+    let mut t = Table::new(
+        "Fig 5 — accuracy vs token budget (paper: Seer near-lossless at mid \
+         budget, Quest below at every budget; block 64 -> scaled block 16)",
+        &["task", "policy", "budget", "accuracy", "answered", "gen_len",
+          "kv_touch"],
+    );
+    for (tname, task) in tasks() {
+        let o = run_one(&rt, dir, EngineConfig { policy: Policy::Dense,
+                                                 ..Default::default() },
+                        task, n, 41)?;
+        t.row(vec![tname.into(), "full".into(), "-".into(), pct(o.accuracy),
+                   pct(o.answered_frac), f1(o.mean_gen_len),
+                   f(o.kv_touch_fraction)]);
+        for &budget in &BUDGETS {
+            for (pname, policy) in [
+                ("seer", Policy::GateBudget { budget_tokens: budget }),
+                ("quest", Policy::Quest { budget_tokens: budget }),
+            ] {
+                let ecfg = EngineConfig { policy, block_size: 16,
+                                          ..Default::default() };
+                let o = run_one(&rt, dir, ecfg, task, n, 41)?;
+                t.row(vec![tname.into(), pname.into(), budget.to_string(),
+                           pct(o.accuracy), pct(o.answered_frac),
+                           f1(o.mean_gen_len), f(o.kv_touch_fraction)]);
+            }
+        }
+    }
+    t.print();
+    t.save_csv(&results_dir().join("fig5.csv"))?;
+    Ok(())
+}
+
+/// Fig 6 — block-sparse flash-decoding kernel speedup vs the dense
+/// baseline, across seqlen x batch x sparsity (paper: up to 9x at 0.9
+/// sparsity on H100; here shape-checked on the CPU PJRT backend).
+pub fn fig6(dir: &Path, budget_s: f64) -> Result<()> {
+    let rt = Runtime::load(dir)?;
+    let mut t = Table::new(
+        "Fig 6 — sparse decode kernel speedup over dense flash-decode \
+         (theoretical = 1/(1-sparsity))",
+        &["seqlen", "batch", "sparsity", "dense_ms", "sparse_ms", "speedup",
+          "theoretical"],
+    );
+    let kb = &rt.manifest.kbench;
+    let heads = kb.get("n_heads")?.as_usize()?;
+    let hkv = kb.get("n_kv_heads")?.as_usize()?;
+    let dh = kb.get("head_dim")?.as_usize()?;
+    let bs = kb.get("block_size")?.as_usize()?;
+    let mut rng = Rng::new(7);
+    let points = rt.manifest.kbench_points.clone();
+    let mut dense_cache: std::collections::HashMap<String, f64> =
+        std::collections::HashMap::new();
+    for p in &points {
+        let (s, b) = (p.seqlen, p.batch);
+        // KV (and q/idx) are uploaded ONCE and kept device-resident — the
+        // paper's setting (the decode kernel reads the KV cache from HBM;
+        // it does not re-ship it per call). Before this change the upload
+        // memcpy added a fixed ~1.4 ms/call at s=8k and capped measured
+        // speedups near 2x (see EXPERIMENTS.md §Perf).
+        let q = rt.upload(&HostTensor::f32(vec![b, heads, dh],
+            (0..b * heads * dh).map(|_| rng.normal() as f32).collect()))?;
+        let k = rt.upload(&HostTensor::f32(vec![b, hkv, s, dh],
+            (0..b * hkv * s * dh).map(|_| rng.f32() - 0.5).collect()))?;
+        let v = rt.upload(&HostTensor::f32(vec![b, hkv, s, dh],
+            (0..b * hkv * s * dh).map(|_| rng.f32() - 0.5).collect()))?;
+        let sl = rt.upload(&HostTensor::i32(vec![b], vec![s as i32; b]))?;
+        let dense_ms = if let Some(d) = dense_cache.get(&p.dense) {
+            *d
+        } else {
+            let r = bench(&p.dense, 1, 3, budget_s, || {
+                rt.call(&p.dense, &[Arg::Dev(&q), Arg::Dev(&k), Arg::Dev(&v),
+                                    Arg::Dev(&sl)])
+                    .unwrap();
+            });
+            dense_cache.insert(p.dense.clone(), r.median_s);
+            r.median_s
+        };
+        // Random ascending distinct block indices, k_sel per kv head.
+        let nblk = s / bs;
+        let mut idx = Vec::with_capacity(b * hkv * p.k_sel);
+        for _ in 0..b * hkv {
+            let mut sel = rng.sample_distinct(nblk, p.k_sel);
+            sel.sort_unstable();
+            idx.extend(sel.into_iter().map(|x| x as i32));
+        }
+        let idx_t = rt.upload(&HostTensor::i32(vec![b, hkv, p.k_sel], idx))?;
+        let r = bench(&p.sparse, 1, 3, budget_s, || {
+            rt.call(&p.sparse, &[Arg::Dev(&q), Arg::Dev(&k), Arg::Dev(&v),
+                                 Arg::Dev(&idx_t), Arg::Dev(&sl)])
+                .unwrap();
+        });
+        let speedup = dense_ms / r.median_s;
+        let theo = nblk as f64 / p.k_sel as f64;
+        t.row(vec![s.to_string(), b.to_string(), format!("{:.1}", p.sparsity),
+                   f(dense_ms * 1e3), f(r.median_s * 1e3), format!("{speedup:.2}x"),
+                   format!("{theo:.2}x")]);
+    }
+    t.print();
+    t.save_csv(&results_dir().join("fig6.csv"))?;
+    Ok(())
+}
+
+/// Fig 7 — block-size ablation at fixed budget (Seer flat, Quest degrades).
+pub fn fig7(dir: &Path, n: usize) -> Result<()> {
+    let (rt, _params) = load_runtime_and_params(dir)?;
+    let rt = Rc::new(rt);
+    let task = TaskConfig::hard();
+    let budget = 128;
+    let mut t = Table::new(
+        "Fig 7 — accuracy vs sparse block size at fixed budget (scaled: \
+         paper 16..128 @ 4k -> 8..64 @ 128)",
+        &["policy", "block", "accuracy", "answered", "gen_len"],
+    );
+    for &bs in &[8usize, 16, 32, 64] {
+        for (pname, policy) in [
+            ("seer", Policy::GateBudget { budget_tokens: budget }),
+            ("quest", Policy::Quest { budget_tokens: budget }),
+        ] {
+            let ecfg = EngineConfig { policy, block_size: bs, ..Default::default() };
+            let o = run_one(&rt, dir, ecfg, task, n, 42)?;
+            t.row(vec![pname.into(), bs.to_string(), pct(o.accuracy),
+                       pct(o.answered_frac), f1(o.mean_gen_len)]);
+        }
+    }
+    t.print();
+    t.save_csv(&results_dir().join("fig7.csv"))?;
+    Ok(())
+}
+
+/// Fig 8 — hybrid dense attention in the first two layers.
+pub fn fig8(dir: &Path, n: usize) -> Result<()> {
+    let (rt, _params) = load_runtime_and_params(dir)?;
+    let rt = Rc::new(rt);
+    let task = TaskConfig::hard();
+    let mut t = Table::new(
+        "Fig 8 — dense attention in the first two layers (paper: helps \
+         Quest a lot, Seer marginally)",
+        &["policy", "dense_layers", "budget", "accuracy", "gen_len"],
+    );
+    for &budget in &[64usize, 128] {
+        for (pname, policy) in [
+            ("seer", Policy::GateBudget { budget_tokens: budget }),
+            ("quest", Policy::Quest { budget_tokens: budget }),
+        ] {
+            for dense_first in [0usize, 2] {
+                let ecfg = EngineConfig {
+                    policy,
+                    dense_first_layers: dense_first,
+                    block_size: 16,
+                    ..Default::default()
+                };
+                let o = run_one(&rt, dir, ecfg, task, n, 43)?;
+                t.row(vec![pname.into(), dense_first.to_string(),
+                           budget.to_string(), pct(o.accuracy),
+                           f1(o.mean_gen_len)]);
+            }
+        }
+    }
+    t.print();
+    t.save_csv(&results_dir().join("fig8.csv"))?;
+    Ok(())
+}
+
+/// Fig 9 — threshold vs token budget: activated-token distribution and
+/// the sparsity/accuracy trade-off.
+pub fn fig9(dir: &Path, n: usize) -> Result<()> {
+    let (rt, _params) = load_runtime_and_params(dir)?;
+    let rt = Rc::new(rt);
+    let task = TaskConfig::hard();
+    let thresholds = [0.02f32, 0.04, 0.06, 0.09, 0.13];
+    let mut t = Table::new(
+        "Fig 9b — threshold vs token budget trade-off (activated tokens \
+         vs accuracy; paper: threshold slightly better at high sparsity)",
+        &["method", "setting", "mean_activated_tok", "accuracy", "gen_len"],
+    );
+    let mut scatter = Table::new(
+        "Fig 9a — activated tokens vs context length (sample)",
+        &["method", "setting", "ctx_len", "activated"],
+    );
+    for &budget in &BUDGETS {
+        let ecfg = EngineConfig {
+            policy: Policy::GateBudget { budget_tokens: budget },
+            block_size: 16,
+            ..Default::default()
+        };
+        let o = run_one(&rt, dir, ecfg, task, n, 44)?;
+        t.row(vec!["budget".into(), budget.to_string(),
+                   f1(o.mean_activated.unwrap_or(0.0)), pct(o.accuracy),
+                   f1(o.mean_gen_len)]);
+        for (c, a) in o.activation_points.iter().step_by(37) {
+            scatter.row(vec!["budget".into(), budget.to_string(), c.to_string(),
+                             f1(*a)]);
+        }
+    }
+    for &th in &thresholds {
+        let ecfg = EngineConfig {
+            policy: Policy::GateThreshold { threshold: th },
+            block_size: 16,
+            ..Default::default()
+        };
+        let o = run_one(&rt, dir, ecfg, task, n, 44)?;
+        t.row(vec!["threshold".into(), format!("{th}"),
+                   f1(o.mean_activated.unwrap_or(0.0)), pct(o.accuracy),
+                   f1(o.mean_gen_len)]);
+        for (c, a) in o.activation_points.iter().step_by(37) {
+            scatter.row(vec!["threshold".into(), format!("{th}"), c.to_string(),
+                             f1(*a)]);
+        }
+    }
+    t.print();
+    t.save_csv(&results_dir().join("fig9b.csv"))?;
+    scatter.save_csv(&results_dir().join("fig9a.csv"))?;
+    println!("(Fig 9a scatter written to results/fig9a.csv, {} points)",
+             scatter.rows.len());
+    Ok(())
+}
+
+/// Table 1 — accuracy vs generation length under inaccurate sparsity.
+pub fn table1(dir: &Path, n: usize) -> Result<()> {
+    let (rt, _params) = load_runtime_and_params(dir)?;
+    let rt = Rc::new(rt);
+    let task = TaskConfig::hard();
+    let mut t = Table::new(
+        "Table 1 — accuracy vs generation length (paper: inaccurate sparse \
+         attention inflates reasoning length)",
+        &["policy", "budget", "accuracy", "gen_len", "answered"],
+    );
+    let o = run_one(&rt, dir, EngineConfig { policy: Policy::Dense,
+                                             ..Default::default() },
+                    task, n, 45)?;
+    t.row(vec!["full".into(), "-".into(), pct(o.accuracy), f1(o.mean_gen_len),
+               pct(o.answered_frac)]);
+    for (pname, mk) in [
+        ("quest", (|b: usize| Policy::Quest { budget_tokens: b })
+            as fn(usize) -> Policy),
+        ("seer", |b: usize| Policy::GateBudget { budget_tokens: b }),
+    ] {
+        for &budget in &BUDGETS {
+            let ecfg = EngineConfig { policy: mk(budget), block_size: 16,
+                                      ..Default::default() };
+            let o = run_one(&rt, dir, ecfg, task, n, 45)?;
+            t.row(vec![pname.into(), budget.to_string(), pct(o.accuracy),
+                       f1(o.mean_gen_len), pct(o.answered_frac)]);
+        }
+    }
+    t.print();
+    t.save_csv(&results_dir().join("table1.csv"))?;
+    Ok(())
+}
+
+/// Table 2 — training budget: read the train/distill reports.
+pub fn table2(_dir: &Path) -> Result<()> {
+    let mut t = Table::new(
+        "Table 2 — training budget (paper: 0.4B tokens, 10.9-18.6 GPU-h on \
+         MI300x; ours: scaled single-CPU-core wall clock)",
+        &["phase", "steps", "tokens", "wall_s", "final_loss"],
+    );
+    let rd = results_dir();
+    for name in ["pretrain", "distill_bs8", "distill_bs16", "distill_bs32",
+                 "distill_bs64"] {
+        let p = rd.join(format!("{name}.json"));
+        if !p.exists() {
+            continue;
+        }
+        let j = Json::parse_file(&p)?;
+        t.row(vec![
+            name.into(),
+            j.get("steps")?.as_usize()?.to_string(),
+            j.get("tokens")?.as_usize()?.to_string(),
+            f1(j.get("wall_s")?.as_f64()?),
+            f(j.get("final_loss")?.as_f64()?),
+        ]);
+    }
+    if t.rows.is_empty() {
+        println!("(no training reports found — run `seerattn train` and \
+                  `seerattn distill` first)");
+    }
+    t.print();
+    t.save_csv(&rd.join("table2.csv"))?;
+    Ok(())
+}
+
+/// Gate/Quest selection recall vs the oracle (diagnostic under Figs 5/7).
+pub fn recall(dir: &Path, n: usize) -> Result<()> {
+    let (rt, _params) = load_runtime_and_params(dir)?;
+    let rt = Rc::new(rt);
+    let task = TaskConfig::hard();
+    let mut t = Table::new(
+        "Selection recall vs oracle (diagnostic: why Seer beats Quest)",
+        &["policy", "budget", "recall", "accuracy"],
+    );
+    for &budget in &[64usize, 128, 256] {
+        for (pname, policy) in [
+            ("seer", Policy::GateBudget { budget_tokens: budget }),
+            ("quest", Policy::Quest { budget_tokens: budget }),
+        ] {
+            let ecfg = EngineConfig { policy, block_size: 16, track_recall: true,
+                                      ..Default::default() };
+            let o = run_one(&rt, dir, ecfg, task, n, 46)?;
+            t.row(vec![pname.into(), budget.to_string(),
+                       o.mean_recall.map(f).unwrap_or_else(|| "-".into()),
+                       pct(o.accuracy)]);
+        }
+    }
+    t.print();
+    t.save_csv(&results_dir().join("recall.csv"))?;
+    Ok(())
+}
+
+/// KV-offload ablation (§3.2): with the KV cache in a slow tier and a
+/// small fast tier, sparse selection turns offloading practical — only
+/// the activated blocks move. Reports bytes fetched + hit rate.
+pub fn offload(dir: &Path, n: usize) -> Result<()> {
+    let (rt, _params) = load_runtime_and_params(dir)?;
+    let rt = Rc::new(rt);
+    let task = TaskConfig::hard();
+    let mut t = Table::new(
+        "KV offload ablation — fast tier = 12.5% of pool (paper §3.2: only \
+         activated blocks need to be retrieved)",
+        &["policy", "fetched_MB", "hit_rate", "sim_fetch_ms/token"],
+    );
+    for (pname, policy) in [
+        ("dense", Policy::Dense),
+        ("seer b=256", Policy::GateBudget { budget_tokens: 256 }),
+        ("seer b=128", Policy::GateBudget { budget_tokens: 128 }),
+        ("seer b=64", Policy::GateBudget { budget_tokens: 64 }),
+    ] {
+        let mut eng = {
+            let mut ecfg = EngineConfig { policy, block_size: 16,
+                                          ..Default::default() };
+            // fast tier: 1/8 of the page pool
+            let params = ParamStore::load(
+                &{
+                    let tr = crate::train::model_ckpt_path(dir);
+                    if tr.exists() { tr } else { dir.join("model_init.bin") }
+                },
+                &rt.manifest.params)?;
+            let gates = load_gates(&rt, dir, ecfg.block_size)?;
+            let probe = Engine::new(rt.clone(), params, gates, ecfg)?;
+            ecfg.offload_fast_pages = probe.pool_capacity() / 8;
+            drop(probe);
+            engine(&rt, dir, ecfg)?
+        };
+        let max_new = max_new_for(&task, eng.max_seq());
+        let o = eval_policy(&mut eng, task, n, 47, max_new)?;
+        let tiered = eng.offload.as_ref().unwrap();
+        let tokens = eng.metrics.tokens_generated.max(1);
+        t.row(vec![
+            pname.into(),
+            format!("{:.2}", tiered.bytes_fetched as f64 / 1e6),
+            f(tiered.hit_rate()),
+            format!("{:.4}", tiered.simulated_fetch_s * 1e3 / tokens as f64),
+        ]);
+        let _ = o;
+    }
+    t.print();
+    t.save_csv(&results_dir().join("offload.csv"))?;
+    Ok(())
+}

@@ -1,0 +1,162 @@
+//! Experiment harness: one runner per paper table/figure (DESIGN.md §4).
+
+pub mod experiments;
+pub mod report;
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, Result};
+
+use crate::coordinator::{Engine, EngineConfig, Request};
+use crate::model::ParamStore;
+use crate::runtime::Runtime;
+use crate::train;
+use crate::util::rng::Rng;
+use crate::workload::reasoning::{generate, Episode, TaskConfig};
+use crate::workload::Vocab;
+
+/// Locate the artifacts directory (env override for tests).
+pub fn artifacts_dir() -> PathBuf {
+    std::env::var("SEERATTN_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|_| PathBuf::from("artifacts"))
+}
+
+pub fn results_dir() -> PathBuf {
+    let d = PathBuf::from("results");
+    std::fs::create_dir_all(&d).ok();
+    d
+}
+
+/// Load the runtime + trained model parameters (falls back to the init
+/// checkpoint with a warning when no trained checkpoint exists).
+pub fn load_runtime_and_params(dir: &Path) -> Result<(Runtime, ParamStore)> {
+    let rt = Runtime::load(dir)?;
+    let trained = train::model_ckpt_path(dir);
+    let path = if trained.exists() {
+        trained
+    } else {
+        eprintln!("[harness] WARNING: no trained model at {}; using init weights",
+                  trained.display());
+        dir.join("model_init.bin")
+    };
+    let params = ParamStore::load(&path, &rt.manifest.params)?;
+    Ok((rt, params))
+}
+
+/// Load gate parameters for a block size (distilled checkpoint preferred).
+pub fn load_gates(rt: &Runtime, dir: &Path, block_size: usize) -> Result<ParamStore> {
+    let distilled = train::gate_ckpt_path(dir, block_size);
+    let path = if distilled.exists() {
+        distilled
+    } else {
+        eprintln!("[harness] WARNING: no distilled gate at {}; using init gate",
+                  distilled.display());
+        dir.join("gate_init.bin")
+    };
+    ParamStore::load(&path, &rt.manifest.gate_params)
+}
+
+/// Outcome of evaluating one (policy, task) configuration.
+#[derive(Debug, Clone)]
+pub struct EvalOutcome {
+    pub n: usize,
+    /// pass@1 over episodes (unanswered counts as wrong).
+    pub accuracy: f64,
+    pub answered_frac: f64,
+    pub mean_gen_len: f64,
+    pub mean_recall: Option<f64>,
+    /// Mean activated tokens per step per KV head (Fig 9 accounting).
+    pub mean_activated: Option<f64>,
+    /// (context len, activated tokens) points across all steps (Fig 9a).
+    pub activation_points: Vec<(usize, f64)>,
+    /// Fraction of dense KV bytes touched.
+    pub kv_touch_fraction: f64,
+    pub wall_s: f64,
+}
+
+/// Evaluate `n` episodes of `task` on an engine (policy already set).
+pub fn eval_policy(engine: &mut Engine, task: TaskConfig, n: usize, seed: u64,
+                   max_new: usize) -> Result<EvalOutcome> {
+    let vocab = Vocab::default();
+    let mut rng = Rng::new(seed);
+    let episodes: Vec<Episode> =
+        (0..n).map(|_| generate(&vocab, &task, &mut rng)).collect();
+    let t0 = std::time::Instant::now();
+    for (i, ep) in episodes.iter().enumerate() {
+        engine.submit(Request { id: i as u64, prompt: ep.prompt.clone(), max_new });
+    }
+    let completions = engine.run_to_completion()?;
+    let mut correct = 0usize;
+    let mut answered = 0usize;
+    let mut gen_len_sum = 0usize;
+    let mut recall_sum = 0.0;
+    let mut recall_n = 0usize;
+    let mut act_sum = 0.0;
+    let mut act_n = 0usize;
+    let mut points = Vec::new();
+    for c in &completions {
+        let ep = &episodes[c.id as usize];
+        match ep.score(&vocab, &c.generated) {
+            Some(true) => {
+                correct += 1;
+                answered += 1;
+            }
+            Some(false) => answered += 1,
+            None => {}
+        }
+        gen_len_sum += Episode::gen_len(&vocab, &c.generated);
+        if let Some(r) = c.stats.mean_recall() {
+            recall_sum += r;
+            recall_n += 1;
+        }
+        if let Some(a) = c.stats.mean_activated() {
+            act_sum += a;
+            act_n += 1;
+        }
+        points.extend(c.stats.activated.iter().cloned());
+    }
+    let nf = completions.len().max(1) as f64;
+    Ok(EvalOutcome {
+        n: completions.len(),
+        accuracy: correct as f64 / nf,
+        answered_frac: answered as f64 / nf,
+        mean_gen_len: gen_len_sum as f64 / nf,
+        mean_recall: if recall_n > 0 { Some(recall_sum / recall_n as f64) } else { None },
+        mean_activated: if act_n > 0 { Some(act_sum / act_n as f64) } else { None },
+        activation_points: points,
+        kv_touch_fraction: engine.metrics.kv_touch_fraction(),
+        wall_s: t0.elapsed().as_secs_f64(),
+    })
+}
+
+/// Build a fresh engine for one configuration. Share the `Rc<Runtime>`
+/// across engines to reuse the executable compile cache.
+pub fn build_engine(rt: &std::rc::Rc<Runtime>, dir: &Path,
+                    ecfg: EngineConfig) -> Result<Engine> {
+    let trained = train::model_ckpt_path(dir);
+    let path = if trained.exists() { trained } else { dir.join("model_init.bin") };
+    let params = ParamStore::load(&path, &rt.manifest.params)?;
+    let gates = load_gates(rt, dir, ecfg.block_size)?;
+    Engine::new(rt.clone(), params, gates, ecfg)
+}
+
+/// Max generation budget for a task inside the context window.
+pub fn max_new_for(task: &TaskConfig, max_seq: usize) -> usize {
+    let room = max_seq.saturating_sub(task.context_tokens() + 4);
+    (task.target_tokens() * 3 + 16).min(room).min(96)
+}
+
+/// Ensure artifacts exist; tests use this to self-skip.
+pub fn artifacts_available() -> bool {
+    artifacts_dir().join("manifest.json").exists()
+}
+
+pub fn require_artifacts() -> Result<PathBuf> {
+    let d = artifacts_dir();
+    if d.join("manifest.json").exists() {
+        Ok(d)
+    } else {
+        Err(anyhow!("artifacts not built; run `make artifacts`"))
+    }
+}

@@ -1,0 +1,250 @@
+//! K Compression Cache (paper §3.2): cached compressed key representations
+//! (pool + linear + RoPE per complete block) so the AttnGate never
+//! recomputes its K branch for past tokens.
+//!
+//! Update protocol (two phases, exactly as the paper describes):
+//!   1. While the sequence length is not a multiple of the block size, the
+//!      newest (partial) block has no cache entry — the engine must always
+//!      activate that block to avoid accuracy loss.
+//!   2. Once `block_size` new tokens have accumulated, the pending
+//!      pre-RoPE keys pass through pooling + linear once and append one
+//!      entry.
+
+use crate::gate;
+use crate::model::ModelConfig;
+
+#[derive(Debug, Clone)]
+pub struct KcompCache {
+    hkv: usize,
+    dh: usize,
+    dg: usize,
+    block_size: usize,
+    /// Completed entries, layout [n_complete, hkv, dg] (entry-major so an
+    /// append is a plain extend).
+    entries: Vec<f32>,
+    n_complete: usize,
+    /// Pending pre-RoPE keys of the current partial block:
+    /// [t_in_block, hkv, dh].
+    pending: Vec<f32>,
+    pending_tokens: usize,
+    len: usize,
+}
+
+impl KcompCache {
+    pub fn new(cfg: &ModelConfig, block_size: usize) -> KcompCache {
+        KcompCache {
+            hkv: cfg.n_kv_heads,
+            dh: cfg.head_dim,
+            dg: cfg.d_gate,
+            block_size,
+            entries: Vec::new(),
+            n_complete: 0,
+            pending: Vec::with_capacity(block_size * cfg.n_kv_heads * cfg.head_dim),
+            pending_tokens: 0,
+            len: 0,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    pub fn n_complete(&self) -> usize {
+        self.n_complete
+    }
+
+    /// True while the tail of the sequence is a partial block that must be
+    /// force-activated.
+    pub fn has_partial(&self) -> bool {
+        self.pending_tokens > 0
+    }
+
+    /// Index of the partial block (valid when has_partial()).
+    pub fn partial_index(&self) -> i32 {
+        self.n_complete as i32
+    }
+
+    /// Append one token's pre-RoPE keys (`k_pre`: [hkv, dh]); compresses
+    /// and caches the block when it completes.
+    pub fn append(&mut self, cfg: &ModelConfig, wk_gate: &[f32], k_pre: &[f32]) {
+        debug_assert_eq!(k_pre.len(), self.hkv * self.dh);
+        // pending layout: [t, hkv, dh]
+        self.pending.extend_from_slice(k_pre);
+        self.pending_tokens += 1;
+        self.len += 1;
+        if self.pending_tokens == self.block_size {
+            self.flush_block(cfg, wk_gate);
+        }
+    }
+
+    fn flush_block(&mut self, cfg: &ModelConfig, wk_gate: &[f32]) {
+        // Transpose pending [t, hkv, dh] -> [hkv, t, dh] for kcomp_entry.
+        let (bs, hkv, dh) = (self.block_size, self.hkv, self.dh);
+        let mut block = vec![0f32; hkv * bs * dh];
+        for t in 0..bs {
+            for h in 0..hkv {
+                let src = (t * hkv + h) * dh;
+                let dst = (h * bs + t) * dh;
+                block[dst..dst + dh].copy_from_slice(&self.pending[src..src + dh]);
+            }
+        }
+        let start = (self.n_complete * self.block_size) as i64;
+        let entry = gate::kcomp_entry(cfg, wk_gate, &block, bs, start);
+        self.entries.extend_from_slice(&entry);
+        self.n_complete += 1;
+        self.pending.clear();
+        self.pending_tokens = 0;
+    }
+
+    /// Completed entries as [n_complete, hkv, dg].
+    pub fn entries(&self) -> &[f32] {
+        &self.entries
+    }
+
+    /// Gate scores of `q_gate` ([hkv, dg]) against all complete entries.
+    /// Returns per-head rows [hkv][n_complete].
+    pub fn score(&self, cfg: &ModelConfig, q_gate: &[f32]) -> Vec<Vec<f32>> {
+        let scale = 1.0 / (self.dg as f32).sqrt();
+        let mut out = vec![vec![0f32; self.n_complete]; self.hkv];
+        for j in 0..self.n_complete {
+            for h in 0..self.hkv {
+                let e = &self.entries[(j * self.hkv + h) * self.dg..][..self.dg];
+                let q = &q_gate[h * self.dg..(h + 1) * self.dg];
+                let mut dot = 0f32;
+                for (a, b) in q.iter().zip(e) {
+                    dot += a * b;
+                }
+                out[h][j] = dot * scale;
+            }
+        }
+        debug_assert_eq!(cfg.n_kv_heads, self.hkv);
+        out
+    }
+
+    /// Memory footprint in bytes (entries only — the paper's <1% claim).
+    pub fn bytes(&self) -> usize {
+        self.entries.len() * 4
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn cfg() -> ModelConfig {
+        ModelConfig {
+            vocab: 4, d_model: 8, n_layers: 1, n_heads: 4, n_kv_heads: 2,
+            head_dim: 4, mlp_hidden: 8, rope_theta: 10000.0, rms_eps: 1e-5,
+            d_gate: 4, block_size: 4, max_seq: 64, group_size: 2,
+        }
+    }
+
+    fn wk(c: &ModelConfig, rng: &mut Rng) -> Vec<f32> {
+        (0..c.n_kv_heads * 3 * c.head_dim * c.d_gate)
+            .map(|_| rng.normal() as f32)
+            .collect()
+    }
+
+    #[test]
+    fn partial_block_protocol() {
+        let c = cfg();
+        let mut rng = Rng::new(1);
+        let w = wk(&c, &mut rng);
+        let mut kc = KcompCache::new(&c, 4);
+        let k: Vec<f32> = (0..8).map(|_| rng.normal() as f32).collect();
+        assert!(!kc.has_partial());
+        for t in 1..=3 {
+            kc.append(&c, &w, &k);
+            assert!(kc.has_partial(), "t={t}");
+            assert_eq!(kc.n_complete(), 0);
+            assert_eq!(kc.partial_index(), 0);
+        }
+        kc.append(&c, &w, &k); // completes block 0
+        assert!(!kc.has_partial());
+        assert_eq!(kc.n_complete(), 1);
+        kc.append(&c, &w, &k);
+        assert!(kc.has_partial());
+        assert_eq!(kc.partial_index(), 1);
+    }
+
+    #[test]
+    fn entry_matches_direct_kcomp() {
+        let c = cfg();
+        let mut rng = Rng::new(2);
+        let w = wk(&c, &mut rng);
+        let mut kc = KcompCache::new(&c, 4);
+        // 8 tokens; track them to build the direct reference for block 1.
+        let mut tokens: Vec<Vec<f32>> = Vec::new();
+        for _ in 0..8 {
+            let k: Vec<f32> = (0..8).map(|_| rng.normal() as f32).collect();
+            kc.append(&c, &w, &k);
+            tokens.push(k);
+        }
+        assert_eq!(kc.n_complete(), 2);
+        // Reference entry for block 1 (tokens 4..8), layout [hkv, bs, dh].
+        let mut block = vec![0f32; 2 * 4 * 4];
+        for (t, tok) in tokens[4..8].iter().enumerate() {
+            for h in 0..2 {
+                let dst = (h * 4 + t) * 4;
+                block[dst..dst + 4].copy_from_slice(&tok[h * 4..(h + 1) * 4]);
+            }
+        }
+        let expect = gate::kcomp_entry(&c, &w, &block, 4, 4);
+        let got = &kc.entries()[1 * 2 * 4..2 * 2 * 4];
+        for (a, b) in got.iter().zip(&expect) {
+            assert!((a - b).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn score_shapes_and_scaling() {
+        let c = cfg();
+        let mut rng = Rng::new(3);
+        let w = wk(&c, &mut rng);
+        let mut kc = KcompCache::new(&c, 4);
+        for _ in 0..12 {
+            let k: Vec<f32> = (0..8).map(|_| rng.normal() as f32).collect();
+            kc.append(&c, &w, &k);
+        }
+        let qg: Vec<f32> = (0..8).map(|_| rng.normal() as f32).collect();
+        let s = kc.score(&c, &qg);
+        assert_eq!(s.len(), 2);
+        assert_eq!(s[0].len(), 3);
+        // Agrees with gate::gate_scores on a transposed copy.
+        let mut kc_t = vec![0f32; 3 * 2 * 4];
+        for j in 0..3 {
+            for h in 0..2 {
+                let src = (j * 2 + h) * 4;
+                let dst = (h * 3 + j) * 4;
+                kc_t[dst..dst + 4].copy_from_slice(&kc.entries()[src..src + 4]);
+            }
+        }
+        let flat = gate::gate_scores(&c, &qg, &kc_t, 3, 3);
+        for h in 0..2 {
+            for j in 0..3 {
+                assert!((s[h][j] - flat[h * 3 + j]).abs() < 1e-6);
+            }
+        }
+    }
+
+    #[test]
+    fn memory_overhead_below_one_percent_at_paper_scale() {
+        // Paper block 64, head_dim 128, d_gate 128: KC is 1/128 of K cache
+        // (and 1/256 of KV). Our scaled shapes keep the same ratio law.
+        let c = cfg();
+        let mut rng = Rng::new(4);
+        let w = wk(&c, &mut rng);
+        let mut kc = KcompCache::new(&c, 64.min(c.max_seq));
+        for _ in 0..64 {
+            let k: Vec<f32> = (0..8).map(|_| rng.normal() as f32).collect();
+            kc.append(&c, &w, &k);
+        }
+        let kv_bytes = 64 * c.kv_bytes_per_token_layer();
+        assert!(kc.bytes() * 100 < kv_bytes, "{} vs {kv_bytes}", kc.bytes());
+    }
+}

@@ -1,0 +1,9 @@
+//! KV-cache subsystem: the paged block pool (vLLM-style), the paper's
+//! K Compression Cache (§3.2), and a tiered-offload cost simulator.
+
+pub mod kcomp;
+pub mod offload;
+pub mod paged;
+
+pub use kcomp::KcompCache;
+pub use paged::{PageId, PagedKvPool, SeqKv};

@@ -1,0 +1,31 @@
+//! # seerattn — SeerAttention-R reproduction
+//!
+//! A three-layer reproduction of *SeerAttention-R: Sparse Attention
+//! Adaptation for Long Reasoning* (2025):
+//!
+//! * **L1** (build time): Pallas kernels — the block-sparse flash-decoding
+//!   kernel (§3.3) and the ground-truth-generating flash forward (§2.3) —
+//!   lowered with `interpret=True` into plain HLO.
+//! * **L2** (build time): a GQA transformer + AttnGate in JAX, AOT-lowered
+//!   to HLO text executables (`artifacts/*.hlo.txt`).
+//! * **L3** (this crate, the request path): a serving coordinator that
+//!   loads the executables through the PJRT CPU client (`xla` crate) and
+//!   owns everything the paper's system owns at inference time — the
+//!   paged KV cache, the K compression cache (§3.2), the AttnGate scoring
+//!   + budget/threshold sparsification (§3.1), the Quest and oracle
+//!   baselines, continuous batching, and the distillation/pretraining
+//!   drivers.
+//!
+//! Python never runs on the request path: after `make artifacts` the
+//! binary is self-contained.
+
+pub mod coordinator;
+pub mod gate;
+pub mod harness;
+pub mod kvcache;
+pub mod model;
+pub mod runtime;
+pub mod sparse;
+pub mod train;
+pub mod util;
+pub mod workload;

@@ -1,0 +1,290 @@
+//! `seerattn` CLI — train, distill, reproduce paper exhibits, and serve.
+
+use std::path::PathBuf;
+use std::rc::Rc;
+
+use anyhow::{anyhow, bail, Result};
+
+use seerattn::coordinator::{server, Engine, EngineConfig};
+use seerattn::harness::{self, experiments};
+use seerattn::model::ParamStore;
+use seerattn::runtime::Runtime;
+use seerattn::sparse::Policy;
+use seerattn::train::{self, TrainConfig};
+use seerattn::util::json::Json;
+
+const USAGE: &str = "\
+seerattn — SeerAttention-R reproduction (Rust + JAX + Pallas via XLA/PJRT)
+
+USAGE:
+  seerattn train   [--steps N] [--lr X] [--seed S]
+  seerattn distill [--block-size B[,B..]] [--steps N] [--lr X]
+  seerattn repro   <fig4|fig5|fig6|fig7|fig8|fig9|table1|table2|recall|offload|all>
+                   [--n EPISODES] [--bench-budget SECONDS]
+  seerattn serve   [--addr HOST:PORT] [--policy P] [--budget TOKENS]
+                   [--block-size B]
+  seerattn generate [--task easy|hard] [--policy P] [--budget TOKENS] [--n N]
+
+POLICIES: dense | seer | seer-threshold:T | seer-topp:P | oracle | quest
+Artifacts are read from ./artifacts (override: SEERATTN_ARTIFACTS).";
+
+struct Args {
+    positional: Vec<String>,
+    flags: std::collections::HashMap<String, String>,
+}
+
+fn parse_args(argv: &[String]) -> Args {
+    let mut positional = Vec::new();
+    let mut flags = std::collections::HashMap::new();
+    let mut i = 0;
+    while i < argv.len() {
+        let a = &argv[i];
+        if let Some(name) = a.strip_prefix("--") {
+            if i + 1 < argv.len() && !argv[i + 1].starts_with("--") {
+                flags.insert(name.to_string(), argv[i + 1].clone());
+                i += 2;
+            } else {
+                flags.insert(name.to_string(), "true".to_string());
+                i += 1;
+            }
+        } else {
+            positional.push(a.clone());
+            i += 1;
+        }
+    }
+    Args { positional, flags }
+}
+
+impl Args {
+    fn usize_flag(&self, name: &str, default: usize) -> usize {
+        self.flags
+            .get(name)
+            .map(|v| v.parse().unwrap_or_else(|_| panic!("bad --{name}")))
+            .unwrap_or(default)
+    }
+
+    fn f64_flag(&self, name: &str, default: f64) -> f64 {
+        self.flags
+            .get(name)
+            .map(|v| v.parse().unwrap_or_else(|_| panic!("bad --{name}")))
+            .unwrap_or(default)
+    }
+
+    fn str_flag(&self, name: &str, default: &str) -> String {
+        self.flags.get(name).cloned().unwrap_or_else(|| default.to_string())
+    }
+}
+
+fn parse_policy(s: &str, budget: usize) -> Result<Policy> {
+    Ok(match s {
+        "dense" | "full" => Policy::Dense,
+        "seer" | "seer-budget" => Policy::GateBudget { budget_tokens: budget },
+        "oracle" => Policy::Oracle { budget_tokens: budget },
+        "quest" => Policy::Quest { budget_tokens: budget },
+        other => {
+            if let Some(t) = other.strip_prefix("seer-threshold:") {
+                Policy::GateThreshold { threshold: t.parse()? }
+            } else if let Some(t) = other.strip_prefix("seer-topp:") {
+                Policy::GateTopP { p: t.parse()? }
+            } else {
+                bail!("unknown policy {other:?}")
+            }
+        }
+    })
+}
+
+fn write_report(name: &str, steps: usize, rep: &train::TrainReport) -> Result<()> {
+    let losses = Json::Arr(
+        rep.losses
+            .iter()
+            .map(|(s, l)| Json::Arr(vec![Json::Num(*s as f64), Json::Num(*l)]))
+            .collect(),
+    );
+    let j = Json::obj(vec![
+        ("steps", Json::Num(steps as f64)),
+        ("tokens", Json::Num(rep.tokens_seen as f64)),
+        ("wall_s", Json::Num(rep.wall_s)),
+        ("final_loss", Json::Num(rep.final_loss())),
+        ("losses", losses),
+    ]);
+    let p = harness::results_dir().join(format!("{name}.json"));
+    std::fs::write(&p, j.to_string())?;
+    println!("wrote {}", p.display());
+    Ok(())
+}
+
+fn cmd_train(args: &Args, dir: &PathBuf) -> Result<()> {
+    let tc = TrainConfig {
+        steps: args.usize_flag("steps", 400),
+        lr_max: args.f64_flag("lr", 1e-3),
+        seed: args.usize_flag("seed", 0) as u64,
+        ..Default::default()
+    };
+    let rt = Runtime::load(dir)?;
+    let start = if args.flags.contains_key("resume")
+        && train::model_ckpt_path(dir).exists()
+    {
+        train::model_ckpt_path(dir)
+    } else {
+        dir.join("model_init.bin")
+    };
+    let mut params = ParamStore::load(&start, &rt.manifest.params)?;
+    println!("pretraining {} params for {} steps (from {}) ...",
+             params.numel(), tc.steps, start.display());
+    let rep = train::pretrain(&rt, &mut params, &tc, |s, l| {
+        println!("  step {s:>5}  loss {l:.4}");
+    })?;
+    params.save(&train::model_ckpt_path(dir))?;
+    println!("saved {} ({:.1}s, {:.1} tok/s)", train::model_ckpt_path(dir).display(),
+             rep.wall_s, rep.tokens_seen as f64 / rep.wall_s);
+    write_report("pretrain", tc.steps, &rep)
+}
+
+fn cmd_distill(args: &Args, dir: &PathBuf) -> Result<()> {
+    let blocks: Vec<usize> = args
+        .str_flag("block-size", "8,16,32,64")
+        .split(',')
+        .map(|s| s.parse().map_err(|_| anyhow!("bad block size {s}")))
+        .collect::<Result<_>>()?;
+    let tc = TrainConfig {
+        steps: args.usize_flag("steps", 150),
+        lr_max: args.f64_flag("lr", 1e-3),
+        seed: args.usize_flag("seed", 0) as u64,
+        ..Default::default()
+    };
+    let rt = Runtime::load(dir)?;
+    let params = {
+        let trained = train::model_ckpt_path(dir);
+        let p = if trained.exists() { trained } else { dir.join("model_init.bin") };
+        ParamStore::load(&p, &rt.manifest.params)?
+    };
+    for bs in blocks {
+        let mut gates = ParamStore::load(&dir.join("gate_init.bin"),
+                                         &rt.manifest.gate_params)?;
+        println!("distilling AttnGate (block {bs}) for {} steps ...", tc.steps);
+        let rep = train::distill(&rt, &params, &mut gates, bs, &tc, |s, l| {
+            println!("  step {s:>5}  kl {l:.5}");
+        })?;
+        gates.save(&train::gate_ckpt_path(dir, bs))?;
+        println!("saved {} ({:.1}s)", train::gate_ckpt_path(dir, bs).display(),
+                 rep.wall_s);
+        write_report(&format!("distill_bs{bs}"), tc.steps, &rep)?;
+    }
+    Ok(())
+}
+
+fn cmd_repro(args: &Args, dir: &PathBuf) -> Result<()> {
+    let what = args
+        .positional
+        .get(1)
+        .ok_or_else(|| anyhow!("repro needs an experiment name\n{USAGE}"))?
+        .as_str();
+    let n = args.usize_flag("n", 48);
+    let bench_budget = args.f64_flag("bench-budget", 2.0);
+    match what {
+        "fig4" => experiments::fig4(dir, n)?,
+        "fig5" => experiments::fig5(dir, n)?,
+        "fig6" => experiments::fig6(dir, bench_budget)?,
+        "fig7" => experiments::fig7(dir, n)?,
+        "fig8" => experiments::fig8(dir, n)?,
+        "fig9" => experiments::fig9(dir, n)?,
+        "table1" => experiments::table1(dir, n)?,
+        "table2" => experiments::table2(dir)?,
+        "recall" => experiments::recall(dir, n)?,
+        "offload" => experiments::offload(dir, n)?,
+        "all" => {
+            experiments::fig4(dir, n)?;
+            experiments::fig5(dir, n)?;
+            experiments::fig6(dir, bench_budget)?;
+            experiments::fig7(dir, n)?;
+            experiments::fig8(dir, n)?;
+            experiments::fig9(dir, n)?;
+            experiments::table1(dir, n)?;
+            experiments::table2(dir)?;
+            experiments::recall(dir, n.min(16))?;
+            experiments::offload(dir, n.min(16))?;
+        }
+        other => bail!("unknown experiment {other:?}\n{USAGE}"),
+    }
+    Ok(())
+}
+
+fn cmd_serve(args: &Args, dir: &PathBuf) -> Result<()> {
+    let budget = args.usize_flag("budget", 128);
+    let policy = parse_policy(&args.str_flag("policy", "seer"), budget)?;
+    let ecfg = EngineConfig {
+        policy,
+        block_size: args.usize_flag("block-size", 16),
+        max_new: args.usize_flag("max-new", 64),
+        ..Default::default()
+    };
+    let (rt, params) = harness::load_runtime_and_params(dir)?;
+    let rt = Rc::new(rt);
+    let gates = harness::load_gates(&rt, dir, ecfg.block_size)?;
+    let engine = Engine::new(rt, params, gates, ecfg)?;
+    server::serve(engine, &args.str_flag("addr", "127.0.0.1:7077"))
+}
+
+fn cmd_generate(args: &Args, dir: &PathBuf) -> Result<()> {
+    use seerattn::workload::reasoning::TaskConfig;
+    let budget = args.usize_flag("budget", 128);
+    let policy = parse_policy(&args.str_flag("policy", "seer"), budget)?;
+    let task = match args.str_flag("task", "hard").as_str() {
+        "easy" => TaskConfig::easy(),
+        _ => TaskConfig::hard(),
+    };
+    let n = args.usize_flag("n", 8);
+    let ecfg = EngineConfig {
+        policy,
+        block_size: args.usize_flag("block-size", 16),
+        ..Default::default()
+    };
+    let (rt, params) = harness::load_runtime_and_params(dir)?;
+    let rt = Rc::new(rt);
+    let gates = harness::load_gates(&rt, dir, ecfg.block_size)?;
+    let mut engine = Engine::new(rt, params, gates, ecfg)?;
+    let max_new = harness::max_new_for(&task, engine.max_seq());
+    let o = harness::eval_policy(&mut engine, task, n, 123, max_new)?;
+    println!("policy={} n={} accuracy={:.1}% answered={:.1}% gen_len={:.1} ({:.1}s)",
+             engine.ecfg.policy.name(), o.n, 100.0 * o.accuracy,
+             100.0 * o.answered_frac, o.mean_gen_len, o.wall_s);
+    println!("{}", engine.metrics.report());
+    Ok(())
+}
+
+fn main() -> Result<()> {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    if argv.is_empty() {
+        println!("{USAGE}");
+        return Ok(());
+    }
+    let args = parse_args(&argv);
+    let dir = harness::require_artifacts()?;
+    match args.positional.first().map(|s| s.as_str()) {
+        Some("train") => cmd_train(&args, &dir),
+        Some("distill") => cmd_distill(&args, &dir),
+        Some("repro") => cmd_repro(&args, &dir),
+        Some("serve") => cmd_serve(&args, &dir),
+        Some("generate") => cmd_generate(&args, &dir),
+        Some("dump-batch") => {
+            // Debug: write one packed training batch as JSON (ids+weights).
+            use seerattn::util::rng::Rng;
+            use seerattn::workload::{corpus, Vocab};
+            let mut rng = Rng::new(args.usize_flag("seed", 0) as u64);
+            let (ids, ws) = corpus::pack_batch(&Vocab::default(),
+                &corpus::default_mixture(), 2, 512, &mut rng);
+            let j = Json::obj(vec![
+                ("ids", Json::Arr(ids.iter().map(|&t| Json::Num(t as f64)).collect())),
+                ("ws", Json::Arr(ws.iter().map(|&w| Json::Num(w as f64)).collect())),
+            ]);
+            std::fs::create_dir_all("results").ok();
+            std::fs::write("results/batch_dump.json", j.to_string())?;
+            println!("wrote results/batch_dump.json");
+            Ok(())
+        }
+        _ => {
+            println!("{USAGE}");
+            Ok(())
+        }
+    }
+}

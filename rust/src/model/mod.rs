@@ -1,0 +1,117 @@
+//! Model configuration (mirrors `python/compile/config.py`) and the flat
+//! parameter store shared with the AOT layer.
+
+pub mod params;
+
+pub use params::ParamStore;
+
+use anyhow::Result;
+
+use crate::util::json::Json;
+
+/// Architecture of the base GQA transformer + AttnGate, read back from
+/// the manifest (single source of truth lives in Python).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ModelConfig {
+    pub vocab: usize,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub n_kv_heads: usize,
+    pub head_dim: usize,
+    pub mlp_hidden: usize,
+    pub rope_theta: f64,
+    pub rms_eps: f64,
+    pub d_gate: usize,
+    pub block_size: usize,
+    pub max_seq: usize,
+    pub group_size: usize,
+}
+
+impl ModelConfig {
+    pub fn from_json(j: &Json) -> Result<ModelConfig> {
+        Ok(ModelConfig {
+            vocab: j.get("vocab")?.as_usize()?,
+            d_model: j.get("d_model")?.as_usize()?,
+            n_layers: j.get("n_layers")?.as_usize()?,
+            n_heads: j.get("n_heads")?.as_usize()?,
+            n_kv_heads: j.get("n_kv_heads")?.as_usize()?,
+            head_dim: j.get("head_dim")?.as_usize()?,
+            mlp_hidden: j.get("mlp_hidden")?.as_usize()?,
+            rope_theta: j.get("rope_theta")?.as_f64()?,
+            rms_eps: j.get("rms_eps")?.as_f64()?,
+            d_gate: j.get("d_gate")?.as_usize()?,
+            block_size: j.get("block_size")?.as_usize()?,
+            max_seq: j.get("max_seq")?.as_usize()?,
+            group_size: j.get("group_size")?.as_usize()?,
+        })
+    }
+
+    pub fn n_blocks(&self, block_size: usize) -> usize {
+        self.max_seq / block_size
+    }
+
+    /// KV-cache bytes per token per layer (f32 K + V across kv heads).
+    pub fn kv_bytes_per_token_layer(&self) -> usize {
+        2 * self.n_kv_heads * self.head_dim * 4
+    }
+
+    /// K compression cache bytes per *block* per layer — the paper's §3.2
+    /// overhead claim (<1% of KV at block 64) is checked in tests.
+    pub fn kcomp_bytes_per_block_layer(&self) -> usize {
+        self.n_kv_heads * self.d_gate * 4
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny() -> ModelConfig {
+        ModelConfig {
+            vocab: 64,
+            d_model: 64,
+            n_layers: 2,
+            n_heads: 4,
+            n_kv_heads: 2,
+            head_dim: 16,
+            mlp_hidden: 128,
+            rope_theta: 10000.0,
+            rms_eps: 1e-5,
+            d_gate: 32,
+            block_size: 16,
+            max_seq: 64,
+            group_size: 2,
+        }
+    }
+
+    #[test]
+    fn from_json_roundtrip() {
+        let c = tiny();
+        let j = Json::parse(&format!(
+            r#"{{"vocab":{},"d_model":{},"n_layers":{},"n_heads":{},
+                 "n_kv_heads":{},"head_dim":{},"mlp_hidden":{},
+                 "rope_theta":{},"rms_eps":{},"d_gate":{},"block_size":{},
+                 "max_seq":{},"group_size":{}}}"#,
+            c.vocab, c.d_model, c.n_layers, c.n_heads, c.n_kv_heads,
+            c.head_dim, c.mlp_hidden, c.rope_theta, c.rms_eps, c.d_gate,
+            c.block_size, c.max_seq, c.group_size
+        ))
+        .unwrap();
+        assert_eq!(ModelConfig::from_json(&j).unwrap(), c);
+    }
+
+    #[test]
+    fn kcomp_overhead_matches_paper_ratio() {
+        // Paper §3.2: at block 64 and d_gate == head_dim/..., the K
+        // compression cache is ~1/128 of KV. Generalised:
+        // ratio = d_gate / (2 * head_dim * block).
+        let c = tiny();
+        let kv_per_block = c.kv_bytes_per_token_layer() * 64;
+        let kc_per_block = c.kcomp_bytes_per_block_layer();
+        let ratio = kc_per_block as f64 / kv_per_block as f64;
+        let expect = c.d_gate as f64 / (2.0 * c.head_dim as f64 * 64.0);
+        assert!((ratio - expect).abs() < 1e-12);
+        assert!(ratio < 0.02, "compression cache should be ~1% of KV");
+    }
+}

@@ -1,0 +1,163 @@
+//! Flat ordered parameter store: load/save raw LE-f32 checkpoints in the
+//! manifest layout, index tensors by name, and keep resident device
+//! copies for the decode hot path.
+
+use std::collections::HashMap;
+use std::io::{Read, Write};
+use std::path::Path;
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::runtime::manifest::ParamSpec;
+use crate::runtime::HostTensor;
+
+pub struct ParamStore {
+    pub specs: Vec<ParamSpec>,
+    pub tensors: Vec<HostTensor>,
+    index: HashMap<String, usize>,
+}
+
+impl ParamStore {
+    pub fn zeros(specs: &[ParamSpec]) -> ParamStore {
+        let tensors = specs
+            .iter()
+            .map(|s| HostTensor::zeros_f32(s.shape.clone()))
+            .collect::<Vec<_>>();
+        Self::from_tensors(specs, tensors)
+    }
+
+    pub fn from_tensors(specs: &[ParamSpec], tensors: Vec<HostTensor>) -> ParamStore {
+        assert_eq!(specs.len(), tensors.len());
+        let index = specs
+            .iter()
+            .enumerate()
+            .map(|(i, s)| (s.name.clone(), i))
+            .collect();
+        ParamStore { specs: specs.to_vec(), tensors, index }
+    }
+
+    /// Load a raw little-endian f32 checkpoint in spec order.
+    pub fn load(path: &Path, specs: &[ParamSpec]) -> Result<ParamStore> {
+        let mut f = std::fs::File::open(path)
+            .map_err(|e| anyhow!("open {}: {e}", path.display()))?;
+        let mut tensors = Vec::with_capacity(specs.len());
+        for s in specs {
+            let n: usize = s.shape.iter().product();
+            let mut buf = vec![0u8; 4 * n];
+            f.read_exact(&mut buf)
+                .map_err(|e| anyhow!("reading {} ({n} f32): {e}", s.name))?;
+            let data: Vec<f32> = buf
+                .chunks_exact(4)
+                .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                .collect();
+            tensors.push(HostTensor::f32(s.shape.clone(), data));
+        }
+        let mut rest = Vec::new();
+        f.read_to_end(&mut rest)?;
+        if !rest.is_empty() {
+            bail!("checkpoint {} has {} trailing bytes", path.display(), rest.len());
+        }
+        Ok(Self::from_tensors(specs, tensors))
+    }
+
+    pub fn save(&self, path: &Path) -> Result<()> {
+        let mut f = std::fs::File::create(path)
+            .map_err(|e| anyhow!("create {}: {e}", path.display()))?;
+        for t in &self.tensors {
+            let v = t.as_f32()?;
+            let mut buf = Vec::with_capacity(4 * v.len());
+            for x in v {
+                buf.extend_from_slice(&x.to_le_bytes());
+            }
+            f.write_all(&buf)?;
+        }
+        Ok(())
+    }
+
+    pub fn len(&self) -> usize {
+        self.tensors.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.tensors.is_empty()
+    }
+
+    pub fn numel(&self) -> usize {
+        self.tensors.iter().map(|t| t.numel()).sum()
+    }
+
+    pub fn get(&self, name: &str) -> Result<&HostTensor> {
+        let i = *self
+            .index
+            .get(name)
+            .ok_or_else(|| anyhow!("unknown parameter {name:?}"))?;
+        Ok(&self.tensors[i])
+    }
+
+    /// Replace every tensor (training step output); shapes must match.
+    pub fn set_all(&mut self, tensors: Vec<HostTensor>) -> Result<()> {
+        if tensors.len() != self.tensors.len() {
+            bail!("set_all: {} tensors, expected {}", tensors.len(), self.tensors.len());
+        }
+        for (t, s) in tensors.iter().zip(&self.specs) {
+            t.check(&s.name, "f32", &s.shape)?;
+        }
+        self.tensors = tensors;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn specs() -> Vec<ParamSpec> {
+        vec![
+            ParamSpec { name: "a".into(), shape: vec![2, 3] },
+            ParamSpec { name: "b".into(), shape: vec![4] },
+        ]
+    }
+
+    #[test]
+    fn save_load_roundtrip() {
+        let dir = std::env::temp_dir().join(format!("seerattn_params_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("ckpt.bin");
+        let mut ps = ParamStore::zeros(&specs());
+        ps.set_all(vec![
+            HostTensor::f32(vec![2, 3], vec![1.0, -2.0, 3.5, 0.0, 7.25, -0.5]),
+            HostTensor::f32(vec![4], vec![9.0, 8.0, 7.0, 6.0]),
+        ])
+        .unwrap();
+        ps.save(&path).unwrap();
+        let loaded = ParamStore::load(&path, &specs()).unwrap();
+        assert_eq!(loaded.tensors, ps.tensors);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn load_rejects_truncated_and_oversized() {
+        let dir = std::env::temp_dir().join(format!("seerattn_params2_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("bad.bin");
+        std::fs::write(&path, vec![0u8; 4 * 5]).unwrap(); // needs 4*10
+        assert!(ParamStore::load(&path, &specs()).is_err());
+        std::fs::write(&path, vec![0u8; 4 * 11]).unwrap(); // one extra f32
+        assert!(ParamStore::load(&path, &specs()).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn get_and_set_validation() {
+        let mut ps = ParamStore::zeros(&specs());
+        assert!(ps.get("a").is_ok());
+        assert!(ps.get("zz").is_err());
+        assert_eq!(ps.numel(), 10);
+        // Wrong shape rejected.
+        let bad = vec![
+            HostTensor::f32(vec![3, 2], vec![0.0; 6]),
+            HostTensor::f32(vec![4], vec![0.0; 4]),
+        ];
+        assert!(ps.set_all(bad).is_err());
+    }
+}

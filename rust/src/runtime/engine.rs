@@ -1,0 +1,242 @@
+//! The PJRT execution engine: HLO text -> compiled executables -> typed
+//! calls. Executables are compiled lazily and cached for the process
+//! lifetime; weights can be uploaded once as resident device buffers and
+//! mixed with per-call host tensors (the decode hot path does this).
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::path::Path;
+use std::time::Instant;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use super::manifest::{ExeSpec, Manifest};
+use super::tensor::{Data, HostTensor};
+
+/// A tensor resident on the PJRT device (CPU plugin: pinned host memory).
+pub struct DeviceTensor {
+    pub buffer: xla::PjRtBuffer,
+    pub shape: Vec<usize>,
+    pub dtype: &'static str,
+}
+
+/// Call argument: borrowed host tensor (uploaded per call) or a resident
+/// device buffer (uploaded once, e.g. model weights).
+pub enum Arg<'a> {
+    Host(&'a HostTensor),
+    Dev(&'a DeviceTensor),
+}
+
+impl<'a> Arg<'a> {
+    fn dtype(&self) -> &str {
+        match self {
+            Arg::Host(t) => t.dtype(),
+            Arg::Dev(t) => t.dtype,
+        }
+    }
+
+    fn shape(&self) -> &[usize] {
+        match self {
+            Arg::Host(t) => &t.shape,
+            Arg::Dev(t) => &t.shape,
+        }
+    }
+}
+
+struct Compiled {
+    exe: xla::PjRtLoadedExecutable,
+    spec: ExeSpec,
+}
+
+/// Cumulative runtime counters (used by the perf harness).
+#[derive(Debug, Default, Clone)]
+pub struct RuntimeStats {
+    pub calls: u64,
+    pub compile_s: f64,
+    pub execute_s: f64,
+    pub upload_bytes: u64,
+    pub download_bytes: u64,
+}
+
+pub struct Runtime {
+    client: xla::PjRtClient,
+    pub manifest: Manifest,
+    cache: RefCell<HashMap<String, Compiled>>,
+    stats: RefCell<RuntimeStats>,
+}
+
+impl Runtime {
+    /// Create a runtime over `artifacts/` (manifest + HLO text files).
+    pub fn load(artifacts_dir: &Path) -> Result<Runtime> {
+        let manifest = Manifest::load(artifacts_dir)
+            .with_context(|| format!("loading manifest from {}", artifacts_dir.display()))?;
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("pjrt cpu client: {e:?}"))?;
+        Ok(Runtime {
+            client,
+            manifest,
+            cache: RefCell::new(HashMap::new()),
+            stats: RefCell::new(RuntimeStats::default()),
+        })
+    }
+
+    pub fn stats(&self) -> RuntimeStats {
+        self.stats.borrow().clone()
+    }
+
+    /// Upload a host tensor as a resident device buffer.
+    pub fn upload(&self, t: &HostTensor) -> Result<DeviceTensor> {
+        let buffer = match &t.data {
+            Data::F32(v) => self
+                .client
+                .buffer_from_host_buffer::<f32>(v, &t.shape, None)
+                .map_err(|e| anyhow!("upload f32: {e:?}"))?,
+            Data::I32(v) => self
+                .client
+                .buffer_from_host_buffer::<i32>(v, &t.shape, None)
+                .map_err(|e| anyhow!("upload i32: {e:?}"))?,
+        };
+        self.stats.borrow_mut().upload_bytes += 4 * t.numel() as u64;
+        Ok(DeviceTensor { buffer, shape: t.shape.clone(), dtype: t.dtype() })
+    }
+
+    /// Ensure an executable is compiled; returns compile wall time if it
+    /// happened now.
+    pub fn prepare(&self, name: &str) -> Result<()> {
+        if self.cache.borrow().contains_key(name) {
+            return Ok(());
+        }
+        let spec = self.manifest.exe(name)?.clone();
+        let t0 = Instant::now();
+        let path = spec
+            .file
+            .to_str()
+            .ok_or_else(|| anyhow!("non-utf8 path"))?
+            .to_string();
+        let proto = xla::HloModuleProto::from_text_file(&path)
+            .map_err(|e| anyhow!("parse HLO text {path}: {e:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compile {name}: {e:?}"))?;
+        self.stats.borrow_mut().compile_s += t0.elapsed().as_secs_f64();
+        self.cache.borrow_mut().insert(name.to_string(), Compiled { exe, spec });
+        Ok(())
+    }
+
+    /// Execute `name` with the given args; returns the decomposed output
+    /// tuple as host tensors (order = manifest `outs`).
+    pub fn call(&self, name: &str, args: &[Arg]) -> Result<Vec<HostTensor>> {
+        self.prepare(name)?;
+        let cache = self.cache.borrow();
+        let compiled = cache.get(name).unwrap();
+        let spec = &compiled.spec;
+        if args.len() != spec.args.len() {
+            bail!(
+                "{name}: got {} args, expected {} ({:?})",
+                args.len(),
+                spec.args.len(),
+                spec.args.iter().map(|a| a.name.as_str()).collect::<Vec<_>>()
+            );
+        }
+        for (a, s) in args.iter().zip(&spec.args) {
+            if a.dtype() != s.dtype || a.shape() != s.shape.as_slice() {
+                bail!(
+                    "{name}: arg {:?} has {}{:?}, expected {}{:?}",
+                    s.name,
+                    a.dtype(),
+                    a.shape(),
+                    s.dtype,
+                    s.shape
+                );
+            }
+        }
+        // Stage: upload host args, borrow device args.
+        let mut staged: Vec<DeviceTensor> = Vec::new();
+        let mut order: Vec<usize> = Vec::new(); // index into staged or marker
+        let mut upload = 0u64;
+        for a in args {
+            match a {
+                Arg::Host(t) => {
+                    staged.push(self.upload_quiet(t)?);
+                    upload += 4 * t.numel() as u64;
+                    order.push(staged.len()); // 1-based into staged
+                }
+                Arg::Dev(_) => order.push(0),
+            }
+        }
+        let mut bufs: Vec<&xla::PjRtBuffer> = Vec::with_capacity(args.len());
+        let mut si = 0usize;
+        for (a, o) in args.iter().zip(&order) {
+            match a {
+                Arg::Host(_) => {
+                    bufs.push(&staged[si].buffer);
+                    si += 1;
+                    debug_assert_eq!(*o, si);
+                }
+                Arg::Dev(d) => bufs.push(&d.buffer),
+            }
+        }
+        let t0 = Instant::now();
+        let result = compiled
+            .exe
+            .execute_b::<&xla::PjRtBuffer>(&bufs)
+            .map_err(|e| anyhow!("execute {name}: {e:?}"))?;
+        let tuple = result
+            .first()
+            .and_then(|r| r.first())
+            .ok_or_else(|| anyhow!("{name}: empty execution result"))?;
+        let mut literal = tuple
+            .to_literal_sync()
+            .map_err(|e| anyhow!("{name}: to_literal: {e:?}"))?;
+        let parts = literal
+            .decompose_tuple()
+            .map_err(|e| anyhow!("{name}: decompose: {e:?}"))?;
+        let mut outs = Vec::with_capacity(parts.len());
+        let mut download = 0u64;
+        for part in parts {
+            let t = literal_to_host(&part)?;
+            download += 4 * t.numel() as u64;
+            outs.push(t);
+        }
+        if outs.len() != spec.outs.len() {
+            bail!("{name}: {} outputs, manifest says {}", outs.len(), spec.outs.len());
+        }
+        let mut st = self.stats.borrow_mut();
+        st.calls += 1;
+        st.execute_s += t0.elapsed().as_secs_f64();
+        st.upload_bytes += upload;
+        st.download_bytes += download;
+        Ok(outs)
+    }
+
+    fn upload_quiet(&self, t: &HostTensor) -> Result<DeviceTensor> {
+        let buffer = match &t.data {
+            Data::F32(v) => self
+                .client
+                .buffer_from_host_buffer::<f32>(v, &t.shape, None)
+                .map_err(|e| anyhow!("upload f32: {e:?}"))?,
+            Data::I32(v) => self
+                .client
+                .buffer_from_host_buffer::<i32>(v, &t.shape, None)
+                .map_err(|e| anyhow!("upload i32: {e:?}"))?,
+        };
+        Ok(DeviceTensor { buffer, shape: t.shape.clone(), dtype: t.dtype() })
+    }
+}
+
+fn literal_to_host(lit: &xla::Literal) -> Result<HostTensor> {
+    let shape = lit.array_shape().map_err(|e| anyhow!("literal shape: {e:?}"))?;
+    let dims: Vec<usize> = shape.dims().iter().map(|d| *d as usize).collect();
+    match shape.ty() {
+        xla::ElementType::F32 => {
+            let v = lit.to_vec::<f32>().map_err(|e| anyhow!("to_vec f32: {e:?}"))?;
+            Ok(HostTensor::f32(dims, v))
+        }
+        xla::ElementType::S32 => {
+            let v = lit.to_vec::<i32>().map_err(|e| anyhow!("to_vec i32: {e:?}"))?;
+            Ok(HostTensor::i32(dims, v))
+        }
+        other => bail!("unsupported output element type {other:?}"),
+    }
+}

@@ -1,0 +1,149 @@
+//! Manifest loading: the contract written by `python/compile/aot.py`.
+//!
+//! The manifest carries the model/gate configuration, the flat parameter
+//! layout, and every executable's argument/output signature; the runtime
+//! validates each call against it.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, Result};
+
+use crate::util::json::Json;
+
+/// One executable argument (name, dtype, static shape).
+#[derive(Debug, Clone)]
+pub struct ArgSpec {
+    pub name: String,
+    pub dtype: String,
+    pub shape: Vec<usize>,
+}
+
+/// One AOT-lowered executable.
+#[derive(Debug, Clone)]
+pub struct ExeSpec {
+    pub name: String,
+    pub file: PathBuf,
+    pub args: Vec<ArgSpec>,
+    pub outs: Vec<String>,
+}
+
+/// A named tensor in the flat parameter layout.
+#[derive(Debug, Clone)]
+pub struct ParamSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+}
+
+/// One Fig 6 benchmark point (seqlen x batch x sparsity pair of exes).
+#[derive(Debug, Clone)]
+pub struct KbenchPoint {
+    pub seqlen: usize,
+    pub batch: usize,
+    pub sparsity: f64,
+    pub k_sel: usize,
+    pub dense: String,
+    pub sparse: String,
+}
+
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub model: Json,
+    pub aot: Json,
+    pub kbench: Json,
+    pub kbench_points: Vec<KbenchPoint>,
+    pub params: Vec<ParamSpec>,
+    pub gate_params: Vec<ParamSpec>,
+    pub executables: BTreeMap<String, ExeSpec>,
+}
+
+fn parse_param_list(j: &Json) -> Result<Vec<ParamSpec>> {
+    j.as_arr()?
+        .iter()
+        .map(|p| {
+            Ok(ParamSpec {
+                name: p.get("name")?.as_str()?.to_string(),
+                shape: p.get("shape")?.as_usize_vec()?,
+            })
+        })
+        .collect()
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let j = Json::parse_file(&dir.join("manifest.json"))?;
+        let mut executables = BTreeMap::new();
+        for (name, e) in j.get("executables")?.as_obj()? {
+            let args = e
+                .get("args")?
+                .as_arr()?
+                .iter()
+                .map(|a| {
+                    Ok(ArgSpec {
+                        name: a.get("name")?.as_str()?.to_string(),
+                        dtype: a.get("dtype")?.as_str()?.to_string(),
+                        shape: a.get("shape")?.as_usize_vec()?,
+                    })
+                })
+                .collect::<Result<Vec<_>>>()?;
+            let outs = e
+                .get("outs")?
+                .as_arr()?
+                .iter()
+                .map(|o| Ok(o.as_str()?.to_string()))
+                .collect::<Result<Vec<_>>>()?;
+            executables.insert(
+                name.clone(),
+                ExeSpec {
+                    name: name.clone(),
+                    file: dir.join(e.get("file")?.as_str()?),
+                    args,
+                    outs,
+                },
+            );
+        }
+        let kbench_points = j
+            .get("kbench_points")?
+            .as_arr()?
+            .iter()
+            .map(|p| {
+                Ok(KbenchPoint {
+                    seqlen: p.get("seqlen")?.as_usize()?,
+                    batch: p.get("batch")?.as_usize()?,
+                    sparsity: p.get("sparsity")?.as_f64()?,
+                    k_sel: p.get("k_sel")?.as_usize()?,
+                    dense: p.get("dense")?.as_str()?.to_string(),
+                    sparse: p.get("sparse")?.as_str()?.to_string(),
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+        Ok(Manifest {
+            dir: dir.to_path_buf(),
+            model: j.get("model")?.clone(),
+            aot: j.get("aot")?.clone(),
+            kbench: j.get("kbench")?.clone(),
+            kbench_points,
+            params: parse_param_list(j.get("params")?)?,
+            gate_params: parse_param_list(j.get("gate_params")?)?,
+            executables: executables,
+        })
+    }
+
+    pub fn exe(&self, name: &str) -> Result<&ExeSpec> {
+        self.executables
+            .get(name)
+            .ok_or_else(|| anyhow!("unknown executable {name:?}"))
+    }
+
+    /// Smallest `layer_post_sel_t{T}` variant with T >= wanted tokens.
+    pub fn sel_variant_for(&self, tokens: usize) -> Result<usize> {
+        let variants = self.aot.get("sel_token_variants")?.as_usize_vec()?;
+        variants
+            .iter()
+            .copied()
+            .filter(|t| *t >= tokens)
+            .min()
+            .ok_or_else(|| anyhow!("no sel variant >= {tokens} (have {variants:?})"))
+    }
+}

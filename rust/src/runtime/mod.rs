@@ -1,0 +1,11 @@
+//! PJRT runtime: loads `artifacts/manifest.json`, compiles the HLO-text
+//! executables on the CPU PJRT client (once per process), and provides a
+//! typed call interface over host tensors / resident device buffers.
+
+pub mod engine;
+pub mod manifest;
+pub mod tensor;
+
+pub use engine::{Arg, DeviceTensor, Runtime};
+pub use manifest::{ArgSpec, ExeSpec, Manifest};
+pub use tensor::{Data, HostTensor};

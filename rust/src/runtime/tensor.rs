@@ -1,0 +1,122 @@
+//! Host-side tensors: the interchange type between the coordinator's own
+//! math (gate scoring, gathers, sampling) and the PJRT executables.
+
+use anyhow::{bail, Result};
+
+/// Element storage. Everything in the model contract is f32 or i32.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Data {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+}
+
+/// Dense row-major host tensor.
+#[derive(Debug, Clone, PartialEq)]
+pub struct HostTensor {
+    pub shape: Vec<usize>,
+    pub data: Data,
+}
+
+impl HostTensor {
+    pub fn f32(shape: Vec<usize>, data: Vec<f32>) -> Self {
+        assert_eq!(shape.iter().product::<usize>(), data.len(),
+                   "shape {shape:?} vs len {}", data.len());
+        HostTensor { shape, data: Data::F32(data) }
+    }
+
+    pub fn i32(shape: Vec<usize>, data: Vec<i32>) -> Self {
+        assert_eq!(shape.iter().product::<usize>(), data.len(),
+                   "shape {shape:?} vs len {}", data.len());
+        HostTensor { shape, data: Data::I32(data) }
+    }
+
+    pub fn zeros_f32(shape: Vec<usize>) -> Self {
+        let n = shape.iter().product();
+        HostTensor::f32(shape, vec![0.0; n])
+    }
+
+    pub fn scalar_f32(x: f32) -> Self {
+        HostTensor::f32(vec![], vec![x])
+    }
+
+    pub fn scalar_i32(x: i32) -> Self {
+        HostTensor::i32(vec![], vec![x])
+    }
+
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    pub fn dtype(&self) -> &'static str {
+        match self.data {
+            Data::F32(_) => "f32",
+            Data::I32(_) => "i32",
+        }
+    }
+
+    pub fn as_f32(&self) -> Result<&[f32]> {
+        match &self.data {
+            Data::F32(v) => Ok(v),
+            _ => bail!("tensor is not f32"),
+        }
+    }
+
+    pub fn as_f32_mut(&mut self) -> Result<&mut [f32]> {
+        match &mut self.data {
+            Data::F32(v) => Ok(v),
+            _ => bail!("tensor is not f32"),
+        }
+    }
+
+    pub fn as_i32(&self) -> Result<&[i32]> {
+        match &self.data {
+            Data::I32(v) => Ok(v),
+            _ => bail!("tensor is not i32"),
+        }
+    }
+
+    /// Strict shape check used at the runtime call boundary.
+    pub fn check(&self, name: &str, dtype: &str, shape: &[usize]) -> Result<()> {
+        if self.dtype() != dtype {
+            bail!("arg {name}: dtype {} != expected {dtype}", self.dtype());
+        }
+        if self.shape != shape {
+            bail!("arg {name}: shape {:?} != expected {shape:?}", self.shape);
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn construction_and_accessors() {
+        let t = HostTensor::f32(vec![2, 3], vec![1.0; 6]);
+        assert_eq!(t.numel(), 6);
+        assert_eq!(t.dtype(), "f32");
+        assert!(t.as_f32().is_ok());
+        assert!(t.as_i32().is_err());
+    }
+
+    #[test]
+    #[should_panic]
+    fn shape_mismatch_panics() {
+        HostTensor::f32(vec![2, 2], vec![0.0; 5]);
+    }
+
+    #[test]
+    fn check_validates() {
+        let t = HostTensor::i32(vec![4], vec![0; 4]);
+        assert!(t.check("x", "i32", &[4]).is_ok());
+        assert!(t.check("x", "f32", &[4]).is_err());
+        assert!(t.check("x", "i32", &[2, 2]).is_err());
+    }
+
+    #[test]
+    fn scalars_have_empty_shape() {
+        assert_eq!(HostTensor::scalar_f32(1.5).shape, Vec::<usize>::new());
+        assert_eq!(HostTensor::scalar_i32(3).numel(), 1);
+    }
+}

@@ -1,0 +1,8 @@
+//! Sparse block selection: the policies (§3.1), top-k / threshold
+//! utilities, and the Quest training-free baseline.
+
+pub mod policy;
+pub mod quest;
+pub mod topk;
+
+pub use policy::{Policy, Selection};

@@ -1,0 +1,191 @@
+//! Sparsity policies (§3.1) and the selection result consumed by the
+//! decode engine's gather step.
+
+use super::topk::{merge_mandatory, threshold_indices, top_p_indices, topk_indices};
+
+/// How KV blocks are selected at each decode step.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Policy {
+    /// Full attention baseline.
+    Dense,
+    /// SeerAttention-R, token-budget mode: top-k gate scores, shared
+    /// within each GQA group.
+    GateBudget { budget_tokens: usize },
+    /// SeerAttention-R, threshold mode: softmaxed gate score > t.
+    GateThreshold { threshold: f32 },
+    /// Adaptive sparsity via nucleus (top-p) selection on softmaxed gate
+    /// scores (§6.2 future work, Twilight-style).
+    GateTopP { p: f32 },
+    /// Oracle selection from true attention scores (accuracy upper bound,
+    /// §4.2 — "compute attention twice").
+    Oracle { budget_tokens: usize },
+    /// Quest baseline: per-query-head min/max upper-bound top-k.
+    Quest { budget_tokens: usize },
+}
+
+impl Policy {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Policy::Dense => "dense",
+            Policy::GateBudget { .. } => "seer-budget",
+            Policy::GateThreshold { .. } => "seer-threshold",
+            Policy::GateTopP { .. } => "seer-topp",
+            Policy::Oracle { .. } => "oracle",
+            Policy::Quest { .. } => "quest",
+        }
+    }
+
+    pub fn is_dense(&self) -> bool {
+        matches!(self, Policy::Dense)
+    }
+
+    /// Token budget -> block budget (paper: "divides the token budget by
+    /// the block size").
+    pub fn block_budget(budget_tokens: usize, block_size: usize) -> usize {
+        (budget_tokens / block_size).max(1)
+    }
+}
+
+/// Result of block selection for one sequence at one layer.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Selection {
+    /// Attend to the whole cache.
+    Dense,
+    /// One ascending block-index list per KV head (shared GQA sparsity).
+    Shared(Vec<Vec<i32>>),
+    /// One list per query head (Quest).
+    PerHead(Vec<Vec<i32>>),
+}
+
+impl Selection {
+    /// Max selected blocks across heads (drives the gather staging size).
+    pub fn max_blocks(&self) -> usize {
+        match self {
+            Selection::Dense => 0,
+            Selection::Shared(v) | Selection::PerHead(v) => {
+                v.iter().map(|x| x.len()).max().unwrap_or(0)
+            }
+        }
+    }
+
+    /// Total selected blocks summed over heads (sparsity accounting).
+    pub fn total_blocks(&self) -> usize {
+        match self {
+            Selection::Dense => 0,
+            Selection::Shared(v) | Selection::PerHead(v) => {
+                v.iter().map(|x| x.len()).sum()
+            }
+        }
+    }
+}
+
+/// Budget selection over per-head score rows (`scores[h]` has one entry
+/// per *complete* block). The partial-block index (if any) is always
+/// force-included (§3.2: "the last block is always activated").
+pub fn select_budget(scores: &[Vec<f32>], block_budget: usize,
+                     partial_block: Option<i32>) -> Vec<Vec<i32>> {
+    scores
+        .iter()
+        .map(|row| {
+            // Reserve one slot for the mandatory partial block.
+            let k = if partial_block.is_some() {
+                block_budget.saturating_sub(1)
+            } else {
+                block_budget
+            };
+            let mut sel = topk_indices(row, k);
+            if let Some(p) = partial_block {
+                merge_mandatory(&mut sel, p);
+            }
+            sel
+        })
+        .collect()
+}
+
+/// Top-p selection over per-head softmaxed score rows.
+pub fn select_top_p(probs: &[Vec<f32>], p: f32,
+                    partial_block: Option<i32>) -> Vec<Vec<i32>> {
+    probs
+        .iter()
+        .map(|row| {
+            let mut sel = top_p_indices(row, p);
+            if let Some(pb) = partial_block {
+                merge_mandatory(&mut sel, pb);
+            }
+            sel
+        })
+        .collect()
+}
+
+/// Threshold selection over per-head softmaxed score rows.
+pub fn select_threshold(probs: &[Vec<f32>], threshold: f32,
+                        partial_block: Option<i32>) -> Vec<Vec<i32>> {
+    probs
+        .iter()
+        .map(|row| {
+            let mut sel = threshold_indices(row, threshold);
+            if let Some(p) = partial_block {
+                merge_mandatory(&mut sel, p);
+            }
+            sel
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn block_budget_floor_and_min() {
+        assert_eq!(Policy::block_budget(64, 16), 4);
+        assert_eq!(Policy::block_budget(65, 16), 4);
+        assert_eq!(Policy::block_budget(4, 16), 1);
+    }
+
+    #[test]
+    fn budget_reserves_slot_for_partial() {
+        let scores = vec![vec![0.9, 0.1, 0.8, 0.2]];
+        // budget 2 with a partial block at 4: one top-k slot + the partial.
+        let sel = select_budget(&scores, 2, Some(4));
+        assert_eq!(sel[0], vec![0, 4]);
+        // without partial: two top-k slots.
+        let sel = select_budget(&scores, 2, None);
+        assert_eq!(sel[0], vec![0, 2]);
+    }
+
+    #[test]
+    fn budget_never_exceeds_budget() {
+        let scores = vec![vec![0.5; 10], vec![0.1; 10]];
+        for b in 1..6 {
+            for partial in [None, Some(10)] {
+                let sel = select_budget(&scores, b, partial);
+                for row in &sel {
+                    assert!(row.len() <= b.max(1), "b={b} row={row:?}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn threshold_includes_partial_even_below() {
+        let probs = vec![vec![0.001, 0.9]];
+        let sel = select_threshold(&probs, 0.5, Some(2));
+        assert_eq!(sel[0], vec![1, 2]);
+    }
+
+    #[test]
+    fn selection_accounting() {
+        let s = Selection::Shared(vec![vec![0, 1], vec![2]]);
+        assert_eq!(s.max_blocks(), 2);
+        assert_eq!(s.total_blocks(), 3);
+        assert_eq!(Selection::Dense.max_blocks(), 0);
+    }
+
+    #[test]
+    fn per_head_differs_when_scores_differ() {
+        let scores = vec![vec![1.0, 0.0], vec![0.0, 1.0]];
+        let sel = select_budget(&scores, 1, None);
+        assert_eq!(sel, vec![vec![0], vec![1]]);
+    }
+}

@@ -1,0 +1,186 @@
+//! Quest baseline (Tang et al. 2024): training-free, query-aware KV block
+//! selection. Per block, keep elementwise min/max of the RoPE'd keys; at
+//! decode time, score each block with the upper bound
+//! `ub(q, block) = sum_d max(q_d * min_d, q_d * max_d)`,
+//! which upper-bounds q·k for every key in the block. Selection is
+//! per-*query*-head (Quest does not share sparsity in a GQA group —
+//! paper §4.1 / Fig 7 note), and the paper's comparison configuration
+//! uses the same block size as SeerAttention-R with sparse attention in
+//! all layers.
+
+use crate::model::ModelConfig;
+
+/// Incrementally-maintained per-block min/max key metadata for one layer
+/// of one sequence. Layout: per kv head, per block, min[dh] ++ max[dh].
+#[derive(Debug, Clone)]
+pub struct QuestMeta {
+    hkv: usize,
+    dh: usize,
+    block_size: usize,
+    max_blocks: usize,
+    /// [hkv, max_blocks, 2, dh]
+    data: Vec<f32>,
+    len: usize,
+}
+
+impl QuestMeta {
+    pub fn new(cfg: &ModelConfig, block_size: usize, max_seq: usize) -> QuestMeta {
+        let max_blocks = max_seq.div_ceil(block_size);
+        QuestMeta {
+            hkv: cfg.n_kv_heads,
+            dh: cfg.head_dim,
+            block_size,
+            max_blocks,
+            data: vec![0.0; cfg.n_kv_heads * max_blocks * 2 * cfg.head_dim],
+            len: 0,
+        }
+    }
+
+    /// Append one token's RoPE'd keys (`k_rope`: [hkv, dh]) at position
+    /// `self.len`.
+    pub fn append(&mut self, k_rope: &[f32]) {
+        debug_assert_eq!(k_rope.len(), self.hkv * self.dh);
+        let blk = self.len / self.block_size;
+        assert!(blk < self.max_blocks, "quest metadata overflow");
+        let fresh = self.len % self.block_size == 0;
+        for h in 0..self.hkv {
+            let base = ((h * self.max_blocks + blk) * 2) * self.dh;
+            let krow = &k_rope[h * self.dh..(h + 1) * self.dh];
+            for d in 0..self.dh {
+                let (mn, mx) = (base + d, base + self.dh + d);
+                if fresh {
+                    self.data[mn] = krow[d];
+                    self.data[mx] = krow[d];
+                } else {
+                    self.data[mn] = self.data[mn].min(krow[d]);
+                    self.data[mx] = self.data[mx].max(krow[d]);
+                }
+            }
+        }
+        self.len += 1;
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Number of blocks with at least one token.
+    pub fn n_blocks(&self) -> usize {
+        self.len.div_ceil(self.block_size)
+    }
+
+    /// Upper-bound scores for one *query head*'s query vector against
+    /// every (partially) filled block of its kv head.
+    pub fn scores(&self, kv_head: usize, q: &[f32]) -> Vec<f32> {
+        debug_assert_eq!(q.len(), self.dh);
+        let nblk = self.n_blocks();
+        let mut out = vec![0f32; nblk];
+        for (blk, o) in out.iter_mut().enumerate() {
+            let base = ((kv_head * self.max_blocks + blk) * 2) * self.dh;
+            let mut ub = 0f32;
+            for d in 0..self.dh {
+                let a = q[d] * self.data[base + d]; // q*min
+                let b = q[d] * self.data[base + self.dh + d]; // q*max
+                ub += a.max(b);
+            }
+            *o = ub;
+        }
+        out
+    }
+
+    /// The provable invariant: ub >= q·k for every cached key in the
+    /// block. Exposed for the property tests.
+    pub fn upper_bounds_hold(&self, kv_head: usize, q: &[f32], keys: &[Vec<f32>]) -> bool {
+        let scores = self.scores(kv_head, q);
+        for (t, k) in keys.iter().enumerate().take(self.len) {
+            let dot: f32 = q.iter().zip(k).map(|(a, b)| a * b).sum();
+            if dot > scores[t / self.block_size] + 1e-4 {
+                return false;
+            }
+        }
+        true
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn cfg() -> ModelConfig {
+        ModelConfig {
+            vocab: 4, d_model: 8, n_layers: 1, n_heads: 4, n_kv_heads: 2,
+            head_dim: 8, mlp_hidden: 8, rope_theta: 10000.0, rms_eps: 1e-5,
+            d_gate: 4, block_size: 4, max_seq: 64, group_size: 2,
+        }
+    }
+
+    #[test]
+    fn minmax_tracks_extremes() {
+        let c = cfg();
+        let mut m = QuestMeta::new(&c, 4, 64);
+        // Two tokens into block 0, head 0 dim 0 values 1.0 then -3.0.
+        let mut k = vec![0f32; c.n_kv_heads * c.head_dim];
+        k[0] = 1.0;
+        m.append(&k);
+        k[0] = -3.0;
+        m.append(&k);
+        let mut q = vec![0f32; c.head_dim];
+        q[0] = 1.0;
+        assert!((m.scores(0, &q)[0] - 1.0).abs() < 1e-6); // q*max wins
+        q[0] = -1.0;
+        assert!((m.scores(0, &q)[0] - 3.0).abs() < 1e-6); // q*min wins
+    }
+
+    #[test]
+    fn property_upper_bound_dominates_true_dot() {
+        let c = cfg();
+        let mut rng = Rng::new(99);
+        for _ in 0..30 {
+            let mut m = QuestMeta::new(&c, 4, 64);
+            let n = rng.range(1, 40);
+            let mut keys_h0: Vec<Vec<f32>> = Vec::new();
+            for _ in 0..n {
+                let k: Vec<f32> = (0..c.n_kv_heads * c.head_dim)
+                    .map(|_| rng.normal() as f32)
+                    .collect();
+                keys_h0.push(k[..c.head_dim].to_vec());
+                m.append(&k);
+            }
+            let q: Vec<f32> = (0..c.head_dim).map(|_| rng.normal() as f32).collect();
+            assert!(m.upper_bounds_hold(0, &q, &keys_h0));
+        }
+    }
+
+    #[test]
+    fn block_boundaries_reset() {
+        let c = cfg();
+        let mut m = QuestMeta::new(&c, 4, 64);
+        let mut k = vec![0f32; c.n_kv_heads * c.head_dim];
+        for t in 0..8 {
+            k[0] = if t < 4 { 100.0 } else { -1.0 };
+            m.append(&k);
+        }
+        let mut q = vec![0f32; c.head_dim];
+        q[0] = 1.0;
+        let s = m.scores(0, &q);
+        assert_eq!(s.len(), 2);
+        assert!((s[0] - 100.0).abs() < 1e-5);
+        assert!((s[1] + 1.0).abs() < 1e-5, "block 1 must not inherit block 0 max");
+    }
+
+    #[test]
+    fn partial_block_counted() {
+        let c = cfg();
+        let mut m = QuestMeta::new(&c, 4, 64);
+        let k = vec![1f32; c.n_kv_heads * c.head_dim];
+        for _ in 0..5 {
+            m.append(&k);
+        }
+        assert_eq!(m.n_blocks(), 2);
+    }
+}

@@ -1,0 +1,151 @@
+//! Top-k / threshold block selection over gate scores.
+
+/// Indices of the `k` largest scores (ties broken toward lower index),
+/// returned in ascending index order. O(n log n) on a scratch sort —
+/// n is blocks-per-context (tens), so this is never hot enough to need a
+/// partial select.
+pub fn topk_indices(scores: &[f32], k: usize) -> Vec<i32> {
+    let k = k.min(scores.len());
+    if k == 0 {
+        return Vec::new();
+    }
+    let mut order: Vec<usize> = (0..scores.len()).collect();
+    order.sort_by(|&a, &b| {
+        scores[b]
+            .partial_cmp(&scores[a])
+            .unwrap_or(std::cmp::Ordering::Equal)
+            .then(a.cmp(&b))
+    });
+    let mut picked: Vec<i32> = order[..k].iter().map(|&i| i as i32).collect();
+    picked.sort_unstable();
+    picked
+}
+
+/// Indices with score > threshold, ascending. The paper's threshold mode
+/// (§3.1) applies this to the softmaxed gate scores.
+pub fn threshold_indices(scores: &[f32], threshold: f32) -> Vec<i32> {
+    scores
+        .iter()
+        .enumerate()
+        .filter(|(_, s)| **s > threshold)
+        .map(|(i, _)| i as i32)
+        .collect()
+}
+
+/// Merge a mandatory block index into a selection (keeps ascending order,
+/// no duplicate). Used for the always-active partial last block (§3.2).
+pub fn merge_mandatory(sel: &mut Vec<i32>, idx: i32) {
+    match sel.binary_search(&idx) {
+        Ok(_) => {}
+        Err(pos) => sel.insert(pos, idx),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn topk_matches_full_sort() {
+        let mut rng = Rng::new(11);
+        for _ in 0..50 {
+            let n = rng.range(1, 40);
+            let k = rng.range(0, n + 1);
+            let scores: Vec<f32> = (0..n).map(|_| rng.normal() as f32).collect();
+            let got = topk_indices(&scores, k);
+            // Reference: sort all, take top k values (multiset compare).
+            let mut vals: Vec<f32> = scores.clone();
+            vals.sort_by(|a, b| b.partial_cmp(a).unwrap());
+            let mut got_vals: Vec<f32> = got.iter().map(|&i| scores[i as usize]).collect();
+            got_vals.sort_by(|a, b| b.partial_cmp(a).unwrap());
+            assert_eq!(got_vals.len(), k.min(n));
+            for (a, b) in got_vals.iter().zip(vals.iter()) {
+                assert_eq!(a, b);
+            }
+            // Ascending, unique.
+            assert!(got.windows(2).all(|w| w[0] < w[1]));
+        }
+    }
+
+    #[test]
+    fn topk_k_larger_than_n() {
+        assert_eq!(topk_indices(&[3.0, 1.0], 10), vec![0, 1]);
+    }
+
+    #[test]
+    fn threshold_selects_strictly_above() {
+        let s = [0.1, 0.5, 0.5001, 0.9];
+        assert_eq!(threshold_indices(&s, 0.5), vec![2, 3]);
+        assert_eq!(threshold_indices(&s, 1.0), Vec::<i32>::new());
+    }
+
+    #[test]
+    fn merge_mandatory_no_dup_keeps_order() {
+        let mut v = vec![1, 4, 7];
+        merge_mandatory(&mut v, 4);
+        assert_eq!(v, vec![1, 4, 7]);
+        merge_mandatory(&mut v, 0);
+        assert_eq!(v, vec![0, 1, 4, 7]);
+        merge_mandatory(&mut v, 9);
+        assert_eq!(v, vec![0, 1, 4, 7, 9]);
+    }
+}
+
+/// Top-p (nucleus) block selection over *softmaxed* gate scores — the
+/// paper's §6.2 future-work direction (explored by Twilight/MagicPIG):
+/// pick the smallest set of blocks whose probability mass reaches `p`,
+/// adapting the sparsity ratio per head and per step. Returns ascending
+/// indices; always selects at least one block.
+pub fn top_p_indices(probs: &[f32], p: f32) -> Vec<i32> {
+    if probs.is_empty() {
+        return Vec::new();
+    }
+    let mut order: Vec<usize> = (0..probs.len()).collect();
+    order.sort_by(|&a, &b| {
+        probs[b]
+            .partial_cmp(&probs[a])
+            .unwrap_or(std::cmp::Ordering::Equal)
+            .then(a.cmp(&b))
+    });
+    let mut mass = 0.0f32;
+    let mut picked: Vec<i32> = Vec::new();
+    for &i in &order {
+        picked.push(i as i32);
+        mass += probs[i];
+        if mass >= p {
+            break;
+        }
+    }
+    picked.sort_unstable();
+    picked
+}
+
+#[cfg(test)]
+mod top_p_tests {
+    use super::*;
+
+    #[test]
+    fn selects_minimal_prefix_of_mass() {
+        let probs = [0.5, 0.3, 0.15, 0.05];
+        assert_eq!(top_p_indices(&probs, 0.5), vec![0]);
+        assert_eq!(top_p_indices(&probs, 0.75), vec![0, 1]);
+        assert_eq!(top_p_indices(&probs, 0.9), vec![0, 1, 2]);
+        assert_eq!(top_p_indices(&probs, 1.0), vec![0, 1, 2, 3]);
+    }
+
+    #[test]
+    fn adapts_to_concentration() {
+        // Peaked distribution -> tiny selection; flat -> large.
+        let peaked = [0.97, 0.01, 0.01, 0.01];
+        let flat = [0.25, 0.25, 0.25, 0.25];
+        assert_eq!(top_p_indices(&peaked, 0.9).len(), 1);
+        assert_eq!(top_p_indices(&flat, 0.9).len(), 4);
+    }
+
+    #[test]
+    fn always_at_least_one() {
+        assert_eq!(top_p_indices(&[0.4, 0.6], 0.0), vec![1]);
+        assert!(top_p_indices(&[], 0.9).is_empty());
+    }
+}

@@ -1,0 +1,171 @@
+//! Training drivers: the Rust side of pretraining and AttnGate
+//! distillation. Each step is one fused AOT executable (fwd + bwd +
+//! AdamW); Rust owns the parameter/optimizer buffers, the LR schedule
+//! (cosine with warmup, §4.1), the data pipeline, and checkpointing.
+
+pub mod schedule;
+
+use std::path::Path;
+use std::time::Instant;
+
+use anyhow::{anyhow, Result};
+
+use crate::model::{ModelConfig, ParamStore};
+use crate::runtime::{Arg, HostTensor, Runtime};
+use crate::util::rng::Rng;
+use crate::workload::corpus;
+use crate::workload::Vocab;
+use schedule::CosineSchedule;
+
+#[derive(Debug, Clone)]
+pub struct TrainConfig {
+    pub steps: usize,
+    pub lr_max: f64,
+    pub warmup: usize,
+    pub seed: u64,
+    pub log_every: usize,
+}
+
+impl Default for TrainConfig {
+    fn default() -> Self {
+        TrainConfig { steps: 400, lr_max: 1e-3, warmup: 20, seed: 0, log_every: 10 }
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct TrainReport {
+    /// (step, loss) samples.
+    pub losses: Vec<(usize, f64)>,
+    pub tokens_seen: u64,
+    pub wall_s: f64,
+}
+
+impl TrainReport {
+    pub fn final_loss(&self) -> f64 {
+        self.losses.last().map(|(_, l)| *l).unwrap_or(f64::NAN)
+    }
+}
+
+/// Pretrain the base model on the synthetic reasoning corpus.
+/// `params` is updated in place; Adam state lives for the run.
+pub fn pretrain(rt: &Runtime, params: &mut ParamStore, tc: &TrainConfig,
+                mut on_log: impl FnMut(usize, f64)) -> Result<TrainReport> {
+    let cfg = ModelConfig::from_json(&rt.manifest.model)?;
+    let tb = rt.manifest.aot.get("train_batch")?.as_usize()?;
+    let ts = rt.manifest.aot.get("train_len")?.as_usize()?;
+    let n_p = rt.manifest.params.len();
+    let mut m = ParamStore::zeros(&rt.manifest.params);
+    let mut v = ParamStore::zeros(&rt.manifest.params);
+    let sched = CosineSchedule { lr_max: tc.lr_max, warmup: tc.warmup, total: tc.steps };
+    let vocab = Vocab::default();
+    let mixture = corpus::default_mixture();
+    let mut rng = Rng::new(tc.seed);
+    let mut report = TrainReport { losses: Vec::new(), tokens_seen: 0, wall_s: 0.0 };
+    let t0 = Instant::now();
+    let _ = cfg;
+    for step in 0..tc.steps {
+        let (ids, ws) = corpus::pack_batch(&vocab, &mixture, tb, ts, &mut rng);
+        let ids_t = HostTensor::i32(vec![tb, ts], ids);
+        let ws_t = HostTensor::f32(vec![tb, ts], ws);
+        let step_t = HostTensor::scalar_f32(step as f32);
+        let lr_t = HostTensor::scalar_f32(sched.lr(step) as f32);
+        let mut args: Vec<Arg> = Vec::with_capacity(3 * n_p + 4);
+        for t in &params.tensors {
+            args.push(Arg::Host(t));
+        }
+        for t in &m.tensors {
+            args.push(Arg::Host(t));
+        }
+        for t in &v.tensors {
+            args.push(Arg::Host(t));
+        }
+        args.push(Arg::Host(&step_t));
+        args.push(Arg::Host(&lr_t));
+        args.push(Arg::Host(&ids_t));
+        args.push(Arg::Host(&ws_t));
+        let mut outs = rt.call("pretrain_step", &args)?;
+        let loss = outs
+            .pop()
+            .ok_or_else(|| anyhow!("missing loss output"))?
+            .as_f32()?[0] as f64;
+        let v_new = outs.split_off(2 * n_p);
+        let m_new = outs.split_off(n_p);
+        params.set_all(outs)?;
+        m.set_all(m_new)?;
+        v.set_all(v_new)?;
+        report.tokens_seen += (tb * ts) as u64;
+        if step % tc.log_every == 0 || step + 1 == tc.steps {
+            report.losses.push((step, loss));
+            on_log(step, loss);
+        }
+    }
+    report.wall_s = t0.elapsed().as_secs_f64();
+    Ok(report)
+}
+
+/// Distill the AttnGate against the frozen base model (§2.3) for one
+/// block size. `gates` is updated in place.
+pub fn distill(rt: &Runtime, params: &ParamStore, gates: &mut ParamStore,
+               block_size: usize, tc: &TrainConfig,
+               mut on_log: impl FnMut(usize, f64)) -> Result<TrainReport> {
+    let db = rt.manifest.aot.get("distill_batch")?.as_usize()?;
+    let ds = rt.manifest.aot.get("distill_len")?.as_usize()?;
+    let exe = format!("distill_step_bs{block_size}");
+    let n_g = rt.manifest.gate_params.len();
+    let mut gm = ParamStore::zeros(&rt.manifest.gate_params);
+    let mut gv = ParamStore::zeros(&rt.manifest.gate_params);
+    let sched = CosineSchedule { lr_max: tc.lr_max, warmup: tc.warmup, total: tc.steps };
+    let vocab = Vocab::default();
+    let mixture = corpus::default_mixture();
+    let mut rng = Rng::new(tc.seed.wrapping_add(0x5eed));
+    let mut report = TrainReport { losses: Vec::new(), tokens_seen: 0, wall_s: 0.0 };
+    let t0 = Instant::now();
+    for step in 0..tc.steps {
+        let (ids, _ws) = corpus::pack_batch(&vocab, &mixture, db, ds, &mut rng);
+        let ids_t = HostTensor::i32(vec![db, ds], ids);
+        let step_t = HostTensor::scalar_f32(step as f32);
+        let lr_t = HostTensor::scalar_f32(sched.lr(step) as f32);
+        let mut args: Vec<Arg> = Vec::new();
+        for t in &params.tensors {
+            args.push(Arg::Host(t));
+        }
+        for t in &gates.tensors {
+            args.push(Arg::Host(t));
+        }
+        for t in &gm.tensors {
+            args.push(Arg::Host(t));
+        }
+        for t in &gv.tensors {
+            args.push(Arg::Host(t));
+        }
+        args.push(Arg::Host(&step_t));
+        args.push(Arg::Host(&lr_t));
+        args.push(Arg::Host(&ids_t));
+        let mut outs = rt.call(&exe, &args)?;
+        let kl = outs
+            .pop()
+            .ok_or_else(|| anyhow!("missing kl output"))?
+            .as_f32()?[0] as f64;
+        let gv_new = outs.split_off(2 * n_g);
+        let gm_new = outs.split_off(n_g);
+        gates.set_all(outs)?;
+        gm.set_all(gm_new)?;
+        gv.set_all(gv_new)?;
+        report.tokens_seen += (db * ds) as u64;
+        if step % tc.log_every == 0 || step + 1 == tc.steps {
+            report.losses.push((step, kl));
+            on_log(step, kl);
+        }
+    }
+    report.wall_s = t0.elapsed().as_secs_f64();
+    Ok(report)
+}
+
+/// Standard checkpoint locations under the artifacts dir.
+pub fn model_ckpt_path(dir: &Path) -> std::path::PathBuf {
+    dir.join("model_trained.bin")
+}
+
+pub fn gate_ckpt_path(dir: &Path, block_size: usize) -> std::path::PathBuf {
+    dir.join(format!("gate_bs{block_size}.bin"))
+}

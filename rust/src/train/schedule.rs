@@ -1,0 +1,59 @@
+//! Learning-rate schedule: linear warmup then cosine decay (paper §4.1:
+//! "AdamW optimizer and a learning rate of 1e-3 with cosine decay").
+
+#[derive(Debug, Clone, Copy)]
+pub struct CosineSchedule {
+    pub lr_max: f64,
+    pub warmup: usize,
+    pub total: usize,
+}
+
+impl CosineSchedule {
+    pub fn lr(&self, step: usize) -> f64 {
+        if self.warmup > 0 && step < self.warmup {
+            return self.lr_max * (step + 1) as f64 / self.warmup as f64;
+        }
+        let span = (self.total.saturating_sub(self.warmup)).max(1) as f64;
+        let t = (step - self.warmup.min(step)) as f64 / span;
+        let t = t.clamp(0.0, 1.0);
+        0.5 * self.lr_max * (1.0 + (std::f64::consts::PI * t).cos())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn warmup_ramps_linearly() {
+        let s = CosineSchedule { lr_max: 1e-3, warmup: 10, total: 100 };
+        assert!((s.lr(0) - 1e-4).abs() < 1e-12);
+        assert!((s.lr(4) - 5e-4).abs() < 1e-12);
+        assert!((s.lr(9) - 1e-3).abs() < 1e-12);
+    }
+
+    #[test]
+    fn cosine_decays_to_zero() {
+        let s = CosineSchedule { lr_max: 1e-3, warmup: 10, total: 100 };
+        assert!((s.lr(10) - 1e-3).abs() < 1e-9, "peak right after warmup");
+        let mid = s.lr(55);
+        assert!(mid < 1e-3 && mid > 0.0);
+        assert!(s.lr(100) < 1e-9);
+        // Monotone decay after warmup.
+        let mut prev = s.lr(10);
+        for t in 11..=100 {
+            let cur = s.lr(t);
+            assert!(cur <= prev + 1e-15);
+            prev = cur;
+        }
+    }
+
+    #[test]
+    fn no_warmup_edge() {
+        let s = CosineSchedule { lr_max: 1.0, warmup: 0, total: 10 };
+        assert!((s.lr(0) - 1.0).abs() < 1e-12);
+        assert!(s.lr(10) < 1e-9);
+        // Steps past total stay clamped at 0.
+        assert!(s.lr(50) < 1e-9);
+    }
+}

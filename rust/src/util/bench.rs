@@ -1,0 +1,71 @@
+//! Tiny benchmark harness (criterion is not in the offline vendor set).
+//!
+//! Measures wall-clock of a closure with warmup, reports median +
+//! mean ± std over iterations. Used by `rust/benches/*` (harness = false)
+//! and the Fig 6 kernel-speedup runner.
+
+use std::time::Instant;
+
+use crate::util::stats::Series;
+
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub median_s: f64,
+    pub mean_s: f64,
+    pub std_s: f64,
+}
+
+impl BenchResult {
+    pub fn report(&self) -> String {
+        format!(
+            "{:<44} {:>10.3} ms (median, n={}, mean {:.3} ± {:.3})",
+            self.name,
+            self.median_s * 1e3,
+            self.iters,
+            self.mean_s * 1e3,
+            self.std_s * 1e3
+        )
+    }
+}
+
+/// Run `f` with `warmup` untimed calls and at least `min_iters` timed calls
+/// (stops early after `budget_s` seconds of measurement).
+pub fn bench<F: FnMut()>(name: &str, warmup: usize, min_iters: usize, budget_s: f64,
+                         mut f: F) -> BenchResult {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut series = Series::new();
+    let start = Instant::now();
+    let mut iters = 0;
+    while iters < min_iters || (start.elapsed().as_secs_f64() < budget_s && iters < 10_000) {
+        let t = Instant::now();
+        f();
+        series.push(t.elapsed().as_secs_f64());
+        iters += 1;
+    }
+    BenchResult {
+        name: name.to_string(),
+        iters,
+        median_s: series.median(),
+        mean_s: series.mean(),
+        std_s: series.std(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_something() {
+        let r = bench("noop-ish", 1, 5, 0.01, || {
+            std::hint::black_box((0..1000).sum::<u64>());
+        });
+        assert!(r.iters >= 5);
+        assert!(r.median_s >= 0.0);
+        assert!(r.report().contains("noop-ish"));
+    }
+}

@@ -1,0 +1,7 @@
+//! Small self-contained utilities (the build is fully offline, so the
+//! crate hand-rolls what would normally come from serde/rand/criterion).
+
+pub mod bench;
+pub mod json;
+pub mod rng;
+pub mod stats;

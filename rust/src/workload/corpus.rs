@@ -1,0 +1,167 @@
+//! Pretraining / distillation corpus: episodes packed into fixed-length
+//! training sequences (the paper packs OpenR1-MATH-220K into 32k-token
+//! sequences; we pack mixed-difficulty episodes into `seq_len`).
+
+use super::reasoning::{generate, Episode, TaskConfig, Vocab};
+use crate::util::rng::Rng;
+
+/// One packed training sequence: token ids + per-position loss weights.
+#[derive(Debug, Clone)]
+pub struct Packed {
+    pub ids: Vec<i32>,
+    pub loss_w: Vec<f32>,
+}
+
+/// Mixture of task difficulties used for pretraining and distillation.
+pub fn default_mixture() -> Vec<TaskConfig> {
+    vec![
+        TaskConfig { hops: 1, n_chains: 12 },
+        TaskConfig { hops: 1, n_chains: 24 },
+        TaskConfig { hops: 2, n_chains: 16 },
+        TaskConfig { hops: 2, n_chains: 24 },
+        TaskConfig { hops: 3, n_chains: 16 },
+        TaskConfig { hops: 3, n_chains: 24 },
+        TaskConfig { hops: 4, n_chains: 18 },
+    ]
+}
+
+/// Loss weight on context (facts) tokens vs. reasoning (post-query)
+/// tokens: contexts are random and unlearnable, the chain-of-thought is
+/// the signal.
+pub const CONTEXT_W: f32 = 0.1;
+pub const REASONING_W: f32 = 1.0;
+
+/// Fraction of packed items that are in-context copy tasks. Copy tasks
+/// (a random segment followed by its exact repeat, loss on the repeat)
+/// are the classic induction-head driver; the lookup episodes reuse the
+/// same circuit, so mixing them in accelerates the substrate model's
+/// retrieval ability dramatically at this scale.
+pub const COPY_FRAC: f64 = 0.4;
+
+/// One in-context copy item: BOS + segment (context weight) then the
+/// segment again + EOS (full weight).
+fn copy_item(vocab: &Vocab, rng: &mut Rng) -> (Vec<i32>, Vec<i32>) {
+    let len = rng.range(24, 48);
+    let seg: Vec<i32> = (0..len)
+        .map(|_| {
+            if rng.bool(0.7) {
+                vocab.var(rng.below(vocab.n_vars as usize))
+            } else {
+                vocab.val(rng.below(vocab.n_vals as usize))
+            }
+        })
+        .collect();
+    let mut prompt = vec![vocab.bos];
+    prompt.extend_from_slice(&seg);
+    let mut target = seg;
+    target.push(vocab.eos);
+    (prompt, target)
+}
+
+/// Pack episodes into a sequence of exactly `seq_len` tokens (PAD-filled,
+/// PAD positions get zero loss weight).
+pub fn pack_sequence(vocab: &Vocab, mixture: &[TaskConfig], seq_len: usize,
+                     rng: &mut Rng) -> Packed {
+    let mut ids = Vec::with_capacity(seq_len);
+    let mut loss_w = Vec::with_capacity(seq_len);
+    loop {
+        let (prompt, target) = if rng.bool(COPY_FRAC) {
+            copy_item(vocab, rng)
+        } else {
+            let cfg = *rng.choose(mixture);
+            let ep: Episode = generate(vocab, &cfg, rng);
+            (ep.prompt, ep.target)
+        };
+        let total = prompt.len() + target.len();
+        if ids.len() + total > seq_len {
+            break;
+        }
+        for &t in &prompt {
+            ids.push(t);
+            loss_w.push(CONTEXT_W);
+        }
+        for &t in &target {
+            ids.push(t);
+            loss_w.push(REASONING_W);
+        }
+        if ids.len() + 64 > seq_len {
+            break; // no small-enough item will fit; stop trying
+        }
+    }
+    while ids.len() < seq_len {
+        ids.push(vocab.pad);
+        loss_w.push(0.0);
+    }
+    Packed { ids, loss_w }
+}
+
+/// A batch of packed sequences, flattened row-major [batch, seq_len].
+pub fn pack_batch(vocab: &Vocab, mixture: &[TaskConfig], batch: usize,
+                  seq_len: usize, rng: &mut Rng) -> (Vec<i32>, Vec<f32>) {
+    let mut ids = Vec::with_capacity(batch * seq_len);
+    let mut ws = Vec::with_capacity(batch * seq_len);
+    for _ in 0..batch {
+        let p = pack_sequence(vocab, mixture, seq_len, rng);
+        ids.extend_from_slice(&p.ids);
+        ws.extend_from_slice(&p.loss_w);
+    }
+    (ids, ws)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn packed_exact_length_and_padding() {
+        let v = Vocab::default();
+        let mut rng = Rng::new(0);
+        let p = pack_sequence(&v, &default_mixture(), 512, &mut rng);
+        assert_eq!(p.ids.len(), 512);
+        assert_eq!(p.loss_w.len(), 512);
+        // Padding suffix has zero weights.
+        let mut in_pad = false;
+        for (t, w) in p.ids.iter().zip(&p.loss_w).rev() {
+            if *t != v.pad {
+                in_pad = true; // reversed: once we leave the pad suffix
+            }
+            if !in_pad {
+                assert_eq!(*w, 0.0);
+            }
+        }
+        // At least one full episode packed.
+        assert!(p.ids.iter().filter(|&&t| t == v.query).count() >= 1);
+    }
+
+    #[test]
+    fn weights_match_regions() {
+        let v = Vocab::default();
+        let mut rng = Rng::new(1);
+        let p = pack_sequence(&v, &[TaskConfig::easy()], 512, &mut rng);
+        // Every ANS token is in the reasoning region -> weight 1.
+        for (i, &t) in p.ids.iter().enumerate() {
+            if t == v.ans {
+                assert_eq!(p.loss_w[i], REASONING_W);
+            }
+            if t == v.bos {
+                assert_eq!(p.loss_w[i], CONTEXT_W);
+            }
+        }
+    }
+
+    #[test]
+    fn batch_shapes() {
+        let v = Vocab::default();
+        let mut rng = Rng::new(2);
+        let (ids, ws) = pack_batch(&v, &default_mixture(), 4, 256, &mut rng);
+        assert_eq!(ids.len(), 4 * 256);
+        assert_eq!(ws.len(), 4 * 256);
+    }
+
+    #[test]
+    fn episodes_fit_training_window() {
+        for cfg in default_mixture() {
+            assert!(cfg.context_tokens() + cfg.target_tokens() < 512, "{cfg:?}");
+        }
+    }
+}

@@ -1,0 +1,8 @@
+//! Synthetic reasoning workload (the AIME/MATH-500/GPQA stand-in, see
+//! DESIGN.md §1): multi-hop variable-chain resolution with exact scoring.
+
+pub mod corpus;
+pub mod reasoning;
+pub mod trace;
+
+pub use reasoning::{Episode, TaskConfig, Vocab};

@@ -1,0 +1,285 @@
+//! Multi-hop variable-chain reasoning tasks.
+//!
+//! An episode's context is a shuffled list of assignment facts
+//! (`var = var2 ;` links and `var = val ;` terminals) organised into
+//! chains. The query names the head of one chain; the target generation
+//! re-derives the chain hop by hop (each hop requires *retrieving* the
+//! fact for the current variable from wherever it landed in the context —
+//! long-range, content-addressed attention) and finishes with
+//! `ANS <val> EOS`.
+//!
+//! Difficulty knobs mirror the paper's benchmark spread: `hops` (1 =
+//! MATH-500-like, 3-4 = AIME-like) and `n_chains` (context length /
+//! distractor density). Accuracy is exact (the emitted ANS value), and a
+//! failed retrieval sends the generation wandering — the mechanism behind
+//! the paper's Table 1 generation-length inflation.
+
+use crate::util::rng::Rng;
+
+/// Token-id layout within the model's 256-token vocabulary.
+#[derive(Debug, Clone, Copy)]
+pub struct Vocab {
+    pub pad: i32,
+    pub bos: i32,
+    pub eos: i32,
+    pub query: i32,
+    pub eq: i32,
+    pub sep: i32,
+    pub arrow: i32,
+    pub ans: i32,
+    pub var0: i32,
+    pub n_vars: i32,
+    pub val0: i32,
+    pub n_vals: i32,
+}
+
+impl Default for Vocab {
+    fn default() -> Self {
+        Vocab {
+            pad: 0,
+            bos: 1,
+            eos: 2,
+            query: 3,
+            eq: 4,
+            sep: 5,
+            arrow: 6,
+            ans: 7,
+            var0: 16,
+            n_vars: 150,
+            val0: 170,
+            n_vals: 60,
+        }
+    }
+}
+
+impl Vocab {
+    pub fn var(&self, i: usize) -> i32 {
+        assert!((i as i32) < self.n_vars);
+        self.var0 + i as i32
+    }
+
+    pub fn val(&self, i: usize) -> i32 {
+        assert!((i as i32) < self.n_vals);
+        self.val0 + i as i32
+    }
+
+    pub fn is_val(&self, t: i32) -> bool {
+        t >= self.val0 && t < self.val0 + self.n_vals
+    }
+
+    pub fn is_var(&self, t: i32) -> bool {
+        t >= self.var0 && t < self.var0 + self.n_vars
+    }
+}
+
+/// Episode generation parameters.
+#[derive(Debug, Clone, Copy)]
+pub struct TaskConfig {
+    /// Chain length of the queried chain (number of lookups).
+    pub hops: usize,
+    /// Total chains in the context (all of length `hops`); one is queried,
+    /// the rest are distractors.
+    pub n_chains: usize,
+}
+
+impl TaskConfig {
+    /// "MATH-500-like": single-hop, moderate context.
+    pub fn easy() -> TaskConfig {
+        TaskConfig { hops: 1, n_chains: 24 }
+    }
+
+    /// "AIME-like": multi-hop, dense context.
+    pub fn hard() -> TaskConfig {
+        TaskConfig { hops: 3, n_chains: 24 }
+    }
+
+    pub fn context_tokens(&self) -> usize {
+        // BOS + facts * 4 + query (3 tokens)
+        1 + self.n_chains * self.hops * 4 + 3
+    }
+
+    pub fn target_tokens(&self) -> usize {
+        // hops * 4 (fact re-derivations) + ANS val EOS
+        self.hops * 4 + 3
+    }
+}
+
+/// One generated episode.
+#[derive(Debug, Clone)]
+pub struct Episode {
+    /// BOS + facts + "Q head ->" (what the engine prefills).
+    pub prompt: Vec<i32>,
+    /// The ideal continuation (used as LM target during pretraining).
+    pub target: Vec<i32>,
+    /// Correct final value token.
+    pub answer: i32,
+    pub cfg: TaskConfig,
+}
+
+impl Episode {
+    /// Full training sequence = prompt ++ target.
+    pub fn full(&self) -> Vec<i32> {
+        let mut v = self.prompt.clone();
+        v.extend_from_slice(&self.target);
+        v
+    }
+
+    /// Score a generated continuation: Some(true/false) once an ANS token
+    /// pair appears, None if generation never answered.
+    pub fn score(&self, vocab: &Vocab, generated: &[i32]) -> Option<bool> {
+        let mut it = generated.iter().peekable();
+        while let Some(&t) = it.next() {
+            if t == vocab.ans {
+                if let Some(&&v) = it.peek() {
+                    return Some(v == self.answer);
+                }
+                return Some(false);
+            }
+        }
+        None
+    }
+
+    /// Generation length until (and including) EOS, or the full length.
+    pub fn gen_len(vocab: &Vocab, generated: &[i32]) -> usize {
+        for (i, &t) in generated.iter().enumerate() {
+            if t == vocab.eos {
+                return i + 1;
+            }
+        }
+        generated.len()
+    }
+}
+
+/// Generate one episode. All chains have `cfg.hops` links; variables are
+/// globally unique so resolution is a function.
+pub fn generate(vocab: &Vocab, cfg: &TaskConfig, rng: &mut Rng) -> Episode {
+    let vars_needed = cfg.n_chains * (cfg.hops + 1);
+    assert!(
+        vars_needed <= vocab.n_vars as usize,
+        "need {vars_needed} vars, have {}",
+        vocab.n_vars
+    );
+    let var_ids = rng.sample_distinct(vocab.n_vars as usize, vars_needed);
+    let mut facts: Vec<[i32; 4]> = Vec::new();
+    let mut chains: Vec<Vec<i32>> = Vec::new();
+    for c in 0..cfg.n_chains {
+        // chain c: v0 <- v1 <- ... <- v_{hops-1} <- value
+        let vs: Vec<i32> = (0..=cfg.hops)
+            .map(|i| vocab.var(var_ids[c * (cfg.hops + 1) + i]))
+            .collect();
+        let value = vocab.val(rng.below(vocab.n_vals as usize));
+        let mut chain_tokens = Vec::new();
+        for i in 0..cfg.hops {
+            let rhs = if i + 1 < cfg.hops { vs[i + 1] } else { value };
+            facts.push([vs[i], vocab.eq, rhs, vocab.sep]);
+            chain_tokens.push(vs[i]);
+        }
+        chain_tokens.push(value);
+        chains.push(chain_tokens);
+    }
+    rng.shuffle(&mut facts);
+
+    let queried = rng.below(cfg.n_chains);
+    let chain = &chains[queried];
+    let head = chain[0];
+    let answer = *chain.last().unwrap();
+
+    let mut prompt = vec![vocab.bos];
+    for f in &facts {
+        prompt.extend_from_slice(f);
+    }
+    prompt.extend_from_slice(&[vocab.query, head, vocab.arrow]);
+
+    // Target: re-derive each hop ("cur = next ;"), then ANS value EOS.
+    let mut target = Vec::new();
+    for i in 0..cfg.hops {
+        target.extend_from_slice(&[chain[i], vocab.eq, chain[i + 1], vocab.sep]);
+    }
+    target.extend_from_slice(&[vocab.ans, answer, vocab.eos]);
+
+    Episode { prompt, target, answer, cfg: *cfg }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn episode_structure() {
+        let v = Vocab::default();
+        let mut rng = Rng::new(0);
+        let cfg = TaskConfig { hops: 3, n_chains: 10 };
+        let ep = generate(&v, &cfg, &mut rng);
+        assert_eq!(ep.prompt.len(), cfg.context_tokens());
+        assert_eq!(ep.target.len(), cfg.target_tokens());
+        assert_eq!(ep.prompt[0], v.bos);
+        assert_eq!(ep.prompt[ep.prompt.len() - 3], v.query);
+        assert_eq!(*ep.prompt.last().unwrap(), v.arrow);
+        assert!(v.is_val(ep.answer));
+        assert_eq!(*ep.target.last().unwrap(), v.eos);
+        assert_eq!(ep.target[ep.target.len() - 2], ep.answer);
+    }
+
+    #[test]
+    fn chain_is_resolvable_from_facts() {
+        let v = Vocab::default();
+        let mut rng = Rng::new(1);
+        let cfg = TaskConfig { hops: 4, n_chains: 8 };
+        let ep = generate(&v, &cfg, &mut rng);
+        // Parse facts from prompt, resolve the query by lookup.
+        let mut map = std::collections::HashMap::new();
+        let body = &ep.prompt[1..ep.prompt.len() - 3];
+        for f in body.chunks(4) {
+            assert_eq!(f[1], v.eq);
+            assert_eq!(f[3], v.sep);
+            assert!(map.insert(f[0], f[2]).is_none(), "duplicate LHS");
+        }
+        let mut cur = ep.prompt[ep.prompt.len() - 2];
+        let mut steps = 0;
+        while v.is_var(cur) {
+            cur = *map.get(&cur).expect("unresolvable var");
+            steps += 1;
+            assert!(steps <= cfg.hops);
+        }
+        assert_eq!(cur, ep.answer);
+        assert_eq!(steps, cfg.hops);
+    }
+
+    #[test]
+    fn scoring() {
+        let v = Vocab::default();
+        let mut rng = Rng::new(2);
+        let ep = generate(&v, &TaskConfig::easy(), &mut rng);
+        // Perfect continuation scores correct.
+        assert_eq!(ep.score(&v, &ep.target), Some(true));
+        // Wrong answer.
+        let mut bad = ep.target.clone();
+        let n = bad.len();
+        bad[n - 2] = if ep.answer == v.val(0) { v.val(1) } else { v.val(0) };
+        assert_eq!(ep.score(&v, &bad), Some(false));
+        // Never answers.
+        assert_eq!(ep.score(&v, &[v.sep, v.sep]), None);
+        // gen_len stops at EOS.
+        assert_eq!(Episode::gen_len(&v, &ep.target), ep.target.len());
+        assert_eq!(Episode::gen_len(&v, &[v.sep, v.eos, v.sep]), 2);
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let v = Vocab::default();
+        let cfg = TaskConfig::hard();
+        let a = generate(&v, &cfg, &mut Rng::new(7));
+        let b = generate(&v, &cfg, &mut Rng::new(7));
+        assert_eq!(a.prompt, b.prompt);
+        assert_eq!(a.target, b.target);
+    }
+
+    #[test]
+    fn fits_default_context() {
+        // Default eval configs must fit the 512-token decode window.
+        for cfg in [TaskConfig::easy(), TaskConfig::hard()] {
+            assert!(cfg.context_tokens() + cfg.target_tokens() + 32 <= 512,
+                    "{cfg:?}");
+        }
+    }
+}

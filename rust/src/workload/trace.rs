@@ -1,0 +1,60 @@
+//! Serving trace generation: Poisson arrivals over a task mixture, for
+//! the end-to-end serving benchmark (latency/throughput under load).
+
+use super::reasoning::{generate, Episode, TaskConfig, Vocab};
+use crate::util::rng::Rng;
+
+#[derive(Debug, Clone)]
+pub struct TracedRequest {
+    /// Arrival time in seconds from trace start.
+    pub arrival_s: f64,
+    pub episode: Episode,
+    pub max_new: usize,
+}
+
+/// Generate `n` requests with exponential inter-arrival gaps at `rate_rps`
+/// requests/second, drawing tasks uniformly from `mixture`.
+pub fn poisson_trace(vocab: &Vocab, mixture: &[TaskConfig], n: usize,
+                     rate_rps: f64, max_new: usize, rng: &mut Rng)
+                     -> Vec<TracedRequest> {
+    let mut t = 0.0;
+    let mut out = Vec::with_capacity(n);
+    for _ in 0..n {
+        t += rng.exp(rate_rps);
+        let cfg = *rng.choose(mixture);
+        out.push(TracedRequest {
+            arrival_s: t,
+            episode: generate(vocab, &cfg, rng),
+            max_new,
+        });
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn arrivals_monotone_and_rate_roughly_right() {
+        let v = Vocab::default();
+        let mut rng = Rng::new(0);
+        let tr = poisson_trace(&v, &[TaskConfig::easy()], 500, 10.0, 32, &mut rng);
+        assert_eq!(tr.len(), 500);
+        for w in tr.windows(2) {
+            assert!(w[1].arrival_s >= w[0].arrival_s);
+        }
+        let span = tr.last().unwrap().arrival_s;
+        let rate = 500.0 / span;
+        assert!((rate - 10.0).abs() < 2.0, "empirical rate {rate}");
+    }
+
+    #[test]
+    fn deterministic() {
+        let v = Vocab::default();
+        let a = poisson_trace(&v, &[TaskConfig::hard()], 5, 1.0, 8, &mut Rng::new(3));
+        let b = poisson_trace(&v, &[TaskConfig::hard()], 5, 1.0, 8, &mut Rng::new(3));
+        assert_eq!(a[4].arrival_s, b[4].arrival_s);
+        assert_eq!(a[4].episode.prompt, b[4].episode.prompt);
+    }
+}

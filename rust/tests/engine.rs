@@ -1,0 +1,250 @@
+//! Engine integration tests (need `make artifacts`; self-skip otherwise).
+//!
+//! The key correctness property: with the budget set to the whole
+//! context, every sparse policy must generate exactly the same tokens as
+//! the dense baseline (greedy sampling is deterministic).
+
+use std::rc::Rc;
+
+use seerattn::coordinator::{Engine, EngineConfig, Request};
+use seerattn::harness;
+use seerattn::runtime::Runtime;
+use seerattn::sparse::Policy;
+use seerattn::util::rng::Rng;
+use seerattn::workload::reasoning::{generate, TaskConfig};
+use seerattn::workload::Vocab;
+
+fn runtime() -> Option<Rc<Runtime>> {
+    if !harness::artifacts_available() {
+        eprintln!("skipping: artifacts not built");
+        return None;
+    }
+    Some(Rc::new(Runtime::load(&harness::artifacts_dir()).unwrap()))
+}
+
+fn engine(rt: &Rc<Runtime>, ecfg: EngineConfig) -> Engine {
+    harness::build_engine(rt, &harness::artifacts_dir(), ecfg).unwrap()
+}
+
+fn gen_tokens(eng: &mut Engine, prompts: &[Vec<i32>], max_new: usize) -> Vec<Vec<i32>> {
+    for (i, p) in prompts.iter().enumerate() {
+        eng.submit(Request { id: i as u64, prompt: p.clone(), max_new });
+    }
+    let mut out = vec![Vec::new(); prompts.len()];
+    for c in eng.run_to_completion().unwrap() {
+        out[c.id as usize] = c.generated;
+    }
+    out
+}
+
+fn sample_prompts(n: usize) -> Vec<Vec<i32>> {
+    let vocab = Vocab::default();
+    let mut rng = Rng::new(99);
+    (0..n)
+        .map(|_| generate(&vocab, &TaskConfig { hops: 2, n_chains: 10 }, &mut rng).prompt)
+        .collect()
+}
+
+#[test]
+fn full_budget_policies_match_dense() {
+    let Some(rt) = runtime() else { return };
+    let prompts = sample_prompts(3);
+    let max_new = 12;
+    let dense = gen_tokens(&mut engine(&rt, EngineConfig::default()), &prompts, max_new);
+    // Budget >= max_seq selects every block.
+    for policy in [
+        Policy::Oracle { budget_tokens: 4096 },
+        Policy::GateBudget { budget_tokens: 4096 },
+        Policy::Quest { budget_tokens: 4096 },
+    ] {
+        let ecfg = EngineConfig { policy, ..Default::default() };
+        let got = gen_tokens(&mut engine(&rt, ecfg), &prompts, max_new);
+        assert_eq!(got, dense, "{policy:?} with full budget must equal dense");
+    }
+}
+
+#[test]
+fn threshold_zero_matches_dense() {
+    let Some(rt) = runtime() else { return };
+    let prompts = sample_prompts(2);
+    let dense = gen_tokens(&mut engine(&rt, EngineConfig::default()), &prompts, 8);
+    // Threshold below any softmax probability selects everything.
+    let ecfg = EngineConfig {
+        policy: Policy::GateThreshold { threshold: -1.0 },
+        ..Default::default()
+    };
+    let got = gen_tokens(&mut engine(&rt, ecfg), &prompts, 8);
+    assert_eq!(got, dense);
+}
+
+#[test]
+fn continuous_batching_handles_more_requests_than_slots() {
+    let Some(rt) = runtime() else { return };
+    let mut eng = engine(&rt, EngineConfig {
+        policy: Policy::GateBudget { budget_tokens: 128 },
+        ..Default::default()
+    });
+    let n = eng.batch_size() + 3;
+    let prompts = sample_prompts(n);
+    let outs = gen_tokens(&mut eng, &prompts, 6);
+    assert_eq!(outs.len(), n);
+    for o in &outs {
+        assert!(!o.is_empty(), "every request must generate");
+    }
+    // All pages returned to the pool.
+    assert_eq!(eng.pool_free(), eng.pool_capacity(), "page leak");
+    assert_eq!(eng.metrics.requests_completed as usize, n);
+}
+
+#[test]
+fn dense_first_layers_with_full_budget_matches_dense() {
+    let Some(rt) = runtime() else { return };
+    let prompts = sample_prompts(2);
+    let dense = gen_tokens(&mut engine(&rt, EngineConfig::default()), &prompts, 8);
+    let ecfg = EngineConfig {
+        policy: Policy::GateBudget { budget_tokens: 4096 },
+        dense_first_layers: 2,
+        ..Default::default()
+    };
+    let got = gen_tokens(&mut engine(&rt, ecfg), &prompts, 8);
+    assert_eq!(got, dense);
+}
+
+#[test]
+fn block_sizes_agree_at_full_budget() {
+    let Some(rt) = runtime() else { return };
+    let prompts = sample_prompts(2);
+    let dense = gen_tokens(&mut engine(&rt, EngineConfig::default()), &prompts, 8);
+    for bs in [8usize, 32, 64] {
+        let ecfg = EngineConfig {
+            policy: Policy::Oracle { budget_tokens: 4096 },
+            block_size: bs,
+            ..Default::default()
+        };
+        let got = gen_tokens(&mut engine(&rt, ecfg), &prompts, 8);
+        assert_eq!(got, dense, "block size {bs}");
+    }
+}
+
+#[test]
+fn sparse_budget_reduces_kv_traffic() {
+    let Some(rt) = runtime() else { return };
+    // Long contexts (3-hop task, ~290 tokens) so a 64-token budget bites.
+    let vocab = Vocab::default();
+    let mut prng = Rng::new(5);
+    let prompts: Vec<Vec<i32>> = (0..4)
+        .map(|_| generate(&vocab, &TaskConfig::hard(), &mut prng).prompt)
+        .collect();
+    let mut eng = engine(&rt, EngineConfig {
+        policy: Policy::GateBudget { budget_tokens: 64 },
+        ..Default::default()
+    });
+    gen_tokens(&mut eng, &prompts, 16);
+    let frac = eng.metrics.kv_touch_fraction();
+    assert!(frac < 0.6, "budget 64 of ~450-token contexts must cut traffic, got {frac}");
+
+    let mut dense_eng = engine(&rt, EngineConfig::default());
+    gen_tokens(&mut dense_eng, &prompts, 16);
+    assert!(dense_eng.metrics.kv_touch_fraction() > 0.99);
+}
+
+#[test]
+fn recall_tracking_produces_values() {
+    let Some(rt) = runtime() else { return };
+    let prompts = sample_prompts(2);
+    let mut eng = engine(&rt, EngineConfig {
+        policy: Policy::GateBudget { budget_tokens: 128 },
+        track_recall: true,
+        ..Default::default()
+    });
+    for (i, p) in prompts.iter().enumerate() {
+        eng.submit(Request { id: i as u64, prompt: p.clone(), max_new: 8 });
+    }
+    let comps = eng.run_to_completion().unwrap();
+    for c in comps {
+        let r = c.stats.mean_recall().expect("recall tracked");
+        assert!((0.0..=1.0).contains(&r), "recall {r}");
+        assert!(!c.stats.activated.is_empty(), "activation points recorded");
+    }
+}
+
+#[test]
+fn deterministic_across_runs() {
+    let Some(rt) = runtime() else { return };
+    let prompts = sample_prompts(2);
+    let mk = || EngineConfig {
+        policy: Policy::GateBudget { budget_tokens: 128 },
+        seed: 7,
+        temperature: 0.8,
+        ..Default::default()
+    };
+    let a = gen_tokens(&mut engine(&rt, mk()), &prompts, 10);
+    let b = gen_tokens(&mut engine(&rt, mk()), &prompts, 10);
+    assert_eq!(a, b, "same seed => same sampled generation");
+}
+
+#[test]
+fn trace_runner_serves_poisson_trace() {
+    use seerattn::coordinator::scheduler::{Replay, TraceRunner};
+    use seerattn::workload::trace::poisson_trace;
+    let Some(rt) = runtime() else { return };
+    let vocab = Vocab::default();
+    let mut rng = Rng::new(1);
+    let trace = poisson_trace(&vocab, &[TaskConfig { hops: 1, n_chains: 8 }],
+                              10, 100.0, 6, &mut rng);
+    let mut eng = engine(&rt, EngineConfig {
+        policy: Policy::GateBudget { budget_tokens: 128 },
+        ..Default::default()
+    });
+    let runner = TraceRunner { replay: Replay::Virtual };
+    let comps = runner.run(&mut eng, &trace).unwrap();
+    assert_eq!(comps.len(), 10);
+    let mut ids: Vec<u64> = comps.iter().map(|c| c.id).collect();
+    ids.sort_unstable();
+    assert_eq!(ids, (0..10).collect::<Vec<u64>>());
+    assert_eq!(eng.pool_free(), eng.pool_capacity());
+}
+
+#[test]
+fn offload_accounting_dense_vs_sparse() {
+    let Some(rt) = runtime() else { return };
+    let prompts = sample_prompts(2);
+    let mut fetched = Vec::new();
+    for policy in [Policy::Dense, Policy::GateBudget { budget_tokens: 64 }] {
+        let mut eng = engine(&rt, EngineConfig {
+            policy,
+            offload_fast_pages: 8,
+            ..Default::default()
+        });
+        gen_tokens(&mut eng, &prompts, 8);
+        let t = eng.offload.as_ref().unwrap();
+        assert!(t.bytes_fetched > 0);
+        fetched.push(t.bytes_fetched);
+    }
+    assert!(fetched[1] < fetched[0],
+            "sparse selection must fetch fewer slow-tier bytes: {fetched:?}");
+}
+
+#[test]
+fn top_p_full_mass_matches_dense_and_adapts() {
+    let Some(rt) = runtime() else { return };
+    let prompts = sample_prompts(2);
+    let dense = gen_tokens(&mut engine(&rt, EngineConfig::default()), &prompts, 8);
+    // p = 1.0 selects every block with nonzero mass -> identical to dense.
+    let got = gen_tokens(
+        &mut engine(&rt, EngineConfig {
+            policy: Policy::GateTopP { p: 1.0 },
+            ..Default::default()
+        }),
+        &prompts,
+        8,
+    );
+    assert_eq!(got, dense);
+    // A small p must reduce KV traffic below dense.
+    let mut eng = engine(&rt, EngineConfig {
+        policy: Policy::GateTopP { p: 0.5 },
+        ..Default::default()
+    });
+    gen_tokens(&mut eng, &prompts, 8);
+    assert!(eng.metrics.kv_touch_fraction() < 1.0);
+}

@@ -1,0 +1,105 @@
+//! Cross-language parity: the Rust-side gate math (K compression, gate
+//! scores, oracle ground truth) must agree with the JAX reference, via
+//! the golden values in `artifacts/fixtures.json`.
+
+use seerattn::gate;
+use seerattn::harness;
+use seerattn::model::ModelConfig;
+use seerattn::util::json::Json;
+
+fn load() -> Option<(ModelConfig, Json)> {
+    if !harness::artifacts_available() {
+        eprintln!("skipping: artifacts not built");
+        return None;
+    }
+    let fx = Json::parse_file(&harness::artifacts_dir().join("fixtures.json")).unwrap();
+    let cfg = ModelConfig::from_json(fx.get("config").unwrap()).unwrap();
+    Some((cfg, fx))
+}
+
+fn close(a: &[f32], b: &[f32], tol: f32, what: &str) {
+    assert_eq!(a.len(), b.len(), "{what}: length");
+    for (i, (x, y)) in a.iter().zip(b).enumerate() {
+        assert!(
+            (x - y).abs() <= tol * (1.0 + y.abs()),
+            "{what}[{i}]: {x} vs {y}"
+        );
+    }
+}
+
+#[test]
+fn kcomp_matches_jax() {
+    let Some((cfg, fx)) = load() else { return };
+    let kc = fx.get("kcomp").unwrap();
+    let k_pre = kc.get("k_pre").unwrap().as_f32_vec().unwrap();
+    let wk = kc.get("wk_gate").unwrap().as_f32_vec().unwrap();
+    let expect = kc.get("expected_kc").unwrap().as_f32_vec().unwrap();
+    let bs = cfg.block_size;
+    let (hkv, dh, dg) = (cfg.n_kv_heads, cfg.head_dim, cfg.d_gate);
+    // fixture layout: k_pre [1, Hkv, 2*bs, dh]; expected [1, Hkv, 2, dg]
+    let mut got = vec![0f32; hkv * 2 * dg];
+    for blk in 0..2 {
+        // extract [Hkv, bs, dh] block `blk`
+        let mut block = vec![0f32; hkv * bs * dh];
+        for h in 0..hkv {
+            for t in 0..bs {
+                let src = (h * 2 * bs + blk * bs + t) * dh;
+                let dst = (h * bs + t) * dh;
+                block[dst..dst + dh].copy_from_slice(&k_pre[src..src + dh]);
+            }
+        }
+        let entry = gate::kcomp_entry(&cfg, &wk, &block, bs, (blk * bs) as i64);
+        for h in 0..hkv {
+            let dst = (h * 2 + blk) * dg;
+            got[dst..dst + dg].copy_from_slice(&entry[h * dg..(h + 1) * dg]);
+        }
+    }
+    close(&got, &expect, 2e-4, "kcomp");
+}
+
+#[test]
+fn gate_scores_match_jax() {
+    let Some((cfg, fx)) = load() else { return };
+    let gq = fx.get("gate_query").unwrap();
+    let qg = gq.get("expected_qg").unwrap().as_f32_vec().unwrap();
+    let expect = gq.get("expected_scores").unwrap().as_f32_vec().unwrap();
+    let kcfx = fx.get("kcomp").unwrap();
+    let kc = kcfx.get("expected_kc").unwrap().as_f32_vec().unwrap();
+    // kc layout [Hkv, 2, dg]; gate_scores wants [Hkv, entries, dg].
+    let got = gate::gate_scores(&cfg, &qg, &kc, 2, 2);
+    close(&got, &expect, 2e-4, "gate_scores");
+}
+
+#[test]
+fn oracle_gt_matches_jax() {
+    let Some((cfg, fx)) = load() else { return };
+    let orc = fx.get("oracle").unwrap();
+    let q = orc.get("q_rope").unwrap().as_f32_vec().unwrap();
+    let k = orc.get("k_rope").unwrap().as_f32_vec().unwrap();
+    let len = orc.get("seq_len").unwrap().as_usize().unwrap();
+    let expect = orc.get("expected_gt").unwrap().as_f32_vec().unwrap();
+    let bs = cfg.block_size;
+    let s_total = 4 * bs;
+    let dh = cfg.head_dim;
+    // k layout [1, Hkv, S, dh]
+    let k_at = |h: usize, t: usize| -> *const f32 { k[(h * s_total + t) * dh..].as_ptr() };
+    let got = gate::oracle_scores(&cfg, &q, &k_at, len, bs);
+    // expected covers all 4 blocks; ours covers ceil(len/bs) blocks. The
+    // fixture uses len = 4*bs-3 -> same 4 blocks.
+    close(&got, &expect, 2e-4, "oracle");
+}
+
+#[test]
+fn manifest_and_config_consistency() {
+    let Some((cfg, _fx)) = load() else { return };
+    let rt = seerattn::runtime::Runtime::load(&harness::artifacts_dir()).unwrap();
+    let mcfg = ModelConfig::from_json(&rt.manifest.model).unwrap();
+    assert_eq!(cfg, mcfg, "fixtures vs manifest config");
+    // Parameter layout covers the expected tensor count.
+    assert_eq!(rt.manifest.params.len(), 2 + 8 * mcfg.n_layers + 1);
+    assert_eq!(rt.manifest.gate_params.len(), 2 * mcfg.n_layers);
+    // Every executable file exists on disk.
+    for exe in rt.manifest.executables.values() {
+        assert!(exe.file.exists(), "missing {:?}", exe.file);
+    }
+}

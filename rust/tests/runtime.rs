@@ -1,0 +1,137 @@
+//! Runtime-level integration: manifest-driven calls, shape validation,
+//! kernel executables vs Rust-computed references.
+
+use seerattn::harness;
+use seerattn::runtime::{Arg, HostTensor, Runtime};
+use seerattn::util::rng::Rng;
+
+fn runtime() -> Option<Runtime> {
+    if !harness::artifacts_available() {
+        eprintln!("skipping: artifacts not built");
+        return None;
+    }
+    Some(Runtime::load(&harness::artifacts_dir()).unwrap())
+}
+
+#[test]
+fn call_validates_arity_and_shapes() {
+    let Some(rt) = runtime() else { return };
+    // lm_head expects (x, ln_f, head).
+    let bad = HostTensor::zeros_f32(vec![1, 1]);
+    assert!(rt.call("lm_head", &[Arg::Host(&bad)]).is_err(), "arity");
+    let spec = rt.manifest.exe("lm_head").unwrap().clone();
+    let x = HostTensor::zeros_f32(spec.args[0].shape.clone());
+    let lnf = HostTensor::zeros_f32(spec.args[1].shape.clone());
+    assert!(
+        rt.call("lm_head", &[Arg::Host(&x), Arg::Host(&lnf), Arg::Host(&bad)]).is_err(),
+        "shape"
+    );
+    assert!(rt.call("nonexistent", &[]).is_err());
+}
+
+#[test]
+fn lm_head_computes_rmsnorm_matmul() {
+    let Some(rt) = runtime() else { return };
+    let spec = rt.manifest.exe("lm_head").unwrap().clone();
+    let (b, d) = (spec.args[0].shape[0], spec.args[0].shape[1]);
+    let v = spec.args[2].shape[1];
+    let mut rng = Rng::new(3);
+    let x: Vec<f32> = (0..b * d).map(|_| rng.normal() as f32).collect();
+    let lnf = vec![1.0f32; d];
+    let head: Vec<f32> = (0..d * v).map(|_| rng.normal() as f32 * 0.05).collect();
+    let outs = rt
+        .call(
+            "lm_head",
+            &[
+                Arg::Host(&HostTensor::f32(vec![b, d], x.clone())),
+                Arg::Host(&HostTensor::f32(vec![d], lnf)),
+                Arg::Host(&HostTensor::f32(vec![d, v], head.clone())),
+            ],
+        )
+        .unwrap();
+    let got = outs[0].as_f32().unwrap();
+    assert_eq!(outs[0].shape, vec![b, v]);
+    // Rust reference: rmsnorm(x) @ head.
+    let eps = 1e-5f32;
+    for bi in 0..b {
+        let row = &x[bi * d..(bi + 1) * d];
+        let ms = row.iter().map(|a| a * a).sum::<f32>() / d as f32;
+        let inv = 1.0 / (ms + eps).sqrt();
+        for vi in (0..v).step_by(97) {
+            let mut dot = 0f32;
+            for di in 0..d {
+                dot += row[di] * inv * head[di * v + vi];
+            }
+            let g = got[bi * v + vi];
+            assert!((dot - g).abs() < 2e-3 * (1.0 + g.abs()), "({bi},{vi}): {dot} vs {g}");
+        }
+    }
+}
+
+#[test]
+fn kernel_bench_sparse_full_equals_dense() {
+    let Some(rt) = runtime() else { return };
+    // Smallest kbench point: sparse with ALL blocks selected vs dense.
+    let Some(point) = rt
+        .manifest
+        .kbench_points
+        .iter()
+        .min_by_key(|p| p.seqlen * p.batch)
+        .cloned()
+    else {
+        return;
+    };
+    let kb = &rt.manifest.kbench;
+    let heads = kb.get("n_heads").unwrap().as_usize().unwrap();
+    let hkv = kb.get("n_kv_heads").unwrap().as_usize().unwrap();
+    let dh = kb.get("head_dim").unwrap().as_usize().unwrap();
+    let bs = kb.get("block_size").unwrap().as_usize().unwrap();
+    let (s, b, ksel) = (point.seqlen, point.batch, point.k_sel);
+    let nblk = s / bs;
+    let mut rng = Rng::new(5);
+    let q = HostTensor::f32(vec![b, heads, dh],
+                            (0..b * heads * dh).map(|_| rng.normal() as f32).collect());
+    let k = HostTensor::f32(vec![b, hkv, s, dh],
+                            (0..b * hkv * s * dh).map(|_| rng.normal() as f32).collect());
+    let v = HostTensor::f32(vec![b, hkv, s, dh],
+                            (0..b * hkv * s * dh).map(|_| rng.normal() as f32).collect());
+    // Restrict the valid length to ksel blocks so the sparse kernel with
+    // indices 0..ksel sees the whole valid cache.
+    let valid = (ksel * bs) as i32;
+    let sl = HostTensor::i32(vec![b], vec![valid; b]);
+    let dense = rt
+        .call(&point.dense, &[Arg::Host(&q), Arg::Host(&k), Arg::Host(&v), Arg::Host(&sl)])
+        .unwrap();
+    let mut idx = Vec::new();
+    for _ in 0..b * hkv {
+        idx.extend((0..ksel as i32).collect::<Vec<_>>());
+    }
+    let idx_t = HostTensor::i32(vec![b, hkv, ksel], idx);
+    let sparse = rt
+        .call(
+            &point.sparse,
+            &[Arg::Host(&q), Arg::Host(&k), Arg::Host(&v), Arg::Host(&idx_t), Arg::Host(&sl)],
+        )
+        .unwrap();
+    let d0 = dense[0].as_f32().unwrap();
+    let s0 = sparse[0].as_f32().unwrap();
+    assert_eq!(d0.len(), s0.len());
+    let _ = nblk;
+    for (a, c) in d0.iter().zip(s0) {
+        assert!((a - c).abs() < 1e-4 * (1.0 + a.abs()), "{a} vs {c}");
+    }
+}
+
+#[test]
+fn runtime_stats_accumulate() {
+    let Some(rt) = runtime() else { return };
+    let spec = rt.manifest.exe("lm_head").unwrap().clone();
+    let x = HostTensor::zeros_f32(spec.args[0].shape.clone());
+    let lnf = HostTensor::zeros_f32(spec.args[1].shape.clone());
+    let head = HostTensor::zeros_f32(spec.args[2].shape.clone());
+    rt.call("lm_head", &[Arg::Host(&x), Arg::Host(&lnf), Arg::Host(&head)]).unwrap();
+    let st = rt.stats();
+    assert_eq!(st.calls, 1);
+    assert!(st.compile_s > 0.0);
+    assert!(st.upload_bytes > 0 && st.download_bytes > 0);
+}
