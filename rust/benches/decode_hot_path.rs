@@ -1,0 +1,524 @@
+//! Decode hot-path benchmark: one synthetic decode step (gate scoring,
+//! block selection, staged gather) per policy, **optimized vs the seed
+//! implementation in the same run**, plus a steady-state allocation
+//! check.
+//!
+//! The paper's speedup argument is that sparse decode cost scales with
+//! the token budget, not the context; this bench measures the host-side
+//! coordinator work that must stay negligible for that to hold. The
+//! "reference" closures reproduce the seed's behaviour exactly: fresh
+//! `vec![0f32; ..]` staging per call, `Vec`-returning score/top-k paths,
+//! and per-head selection clones. The "optimized" closures use the
+//! persistent [`StagingArena`], `*_into` scoring, and
+//! `select_nth_unstable_by` partial top-k — and are asserted to perform
+//! **zero heap allocation** in steady state via a counting global
+//! allocator.
+//!
+//! Writes `BENCH_decode.json` at the repo root (next PRs diff against
+//! it). Everything is seeded; pure host code, no PJRT needed.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+
+use seerattn::coordinator::StagingArena;
+use seerattn::gate;
+use seerattn::kvcache::{KcompCache, PagedKvPool, SeqKv};
+use seerattn::model::ModelConfig;
+use seerattn::sparse::policy::{select_budget, select_budget_into,
+                               select_threshold, select_threshold_into,
+                               SelKind, SelectionBuf};
+use seerattn::sparse::quest::QuestMeta;
+use seerattn::sparse::topk::{merge_mandatory, topk_indices, TopkScratch};
+use seerattn::util::bench::bench;
+use seerattn::util::json::Json;
+use seerattn::util::rng::Rng;
+
+// ---------------------------------------------------------------------
+// Counting allocator: only counts while armed, so the harness's own
+// bookkeeping (Series pushes, JSON building) stays out of the tally.
+// ---------------------------------------------------------------------
+
+static ALLOCS: AtomicU64 = AtomicU64::new(0);
+static ARMED: AtomicBool = AtomicBool::new(false);
+
+struct CountingAlloc;
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        if ARMED.load(Ordering::Relaxed) {
+            ALLOCS.fetch_add(1, Ordering::Relaxed);
+        }
+        System.alloc(layout)
+    }
+
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        if ARMED.load(Ordering::Relaxed) {
+            ALLOCS.fetch_add(1, Ordering::Relaxed);
+        }
+        System.alloc_zeroed(layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        if ARMED.load(Ordering::Relaxed) {
+            ALLOCS.fetch_add(1, Ordering::Relaxed);
+        }
+        System.realloc(ptr, layout, new_size)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+}
+
+#[global_allocator]
+static GLOBAL: CountingAlloc = CountingAlloc;
+
+/// Run `f` with allocation counting armed; returns the allocation count.
+fn count_allocs<F: FnMut()>(mut f: F) -> u64 {
+    ARMED.store(true, Ordering::SeqCst);
+    let before = ALLOCS.load(Ordering::SeqCst);
+    f();
+    let after = ALLOCS.load(Ordering::SeqCst);
+    ARMED.store(false, Ordering::SeqCst);
+    after - before
+}
+
+// ---------------------------------------------------------------------
+// Synthetic decode-step state (mirrors one engine layer at full batch).
+// ---------------------------------------------------------------------
+
+fn cfg() -> ModelConfig {
+    ModelConfig {
+        vocab: 256, d_model: 256, n_layers: 4, n_heads: 8, n_kv_heads: 2,
+        head_dim: 32, mlp_hidden: 512, rope_theta: 10000.0, rms_eps: 1e-5,
+        d_gate: 32, block_size: 16, max_seq: 512, group_size: 4,
+    }
+}
+
+const BATCH: usize = 4;
+/// Context per slot; deliberately not a block multiple so the mandatory
+/// partial last block is exercised.
+const CTX: usize = 487;
+const BUDGET_TOKENS: usize = 128;
+/// Compiled staging variants a real manifest would carry.
+const SEL_VARIANTS: [usize; 4] = [64, 128, 256, 512];
+
+struct SlotState {
+    kv: SeqKv,
+    kcomp: KcompCache,
+    quest: QuestMeta,
+    q_gate: Vec<f32>,   // [hkv, dg]
+    q_rope: Vec<f32>,   // [h_all, dh]
+}
+
+struct Fixture {
+    c: ModelConfig,
+    pool: PagedKvPool,
+    slots: Vec<SlotState>,
+}
+
+fn build_fixture(seed: u64) -> Fixture {
+    let c = cfg();
+    let bs = c.block_size;
+    let mut rng = Rng::new(seed);
+    let pages_per_seq = c.max_seq / bs + 1;
+    let mut pool = PagedKvPool::new(BATCH * pages_per_seq, c.n_kv_heads,
+                                    c.head_dim, bs);
+    let wk: Vec<f32> = (0..c.n_kv_heads * 3 * c.head_dim * c.d_gate)
+        .map(|_| rng.normal() as f32)
+        .collect();
+    let mut slots = Vec::with_capacity(BATCH);
+    for _ in 0..BATCH {
+        let mut kv = SeqKv::new();
+        let mut kcomp = KcompCache::new(&c, bs);
+        let mut quest = QuestMeta::new(&c, bs, c.max_seq);
+        for _ in 0..CTX {
+            let k: Vec<f32> = (0..c.n_kv_heads * c.head_dim)
+                .map(|_| rng.normal() as f32)
+                .collect();
+            let v: Vec<f32> = (0..c.n_kv_heads * c.head_dim)
+                .map(|_| rng.normal() as f32)
+                .collect();
+            kv.append(&mut pool, &k, &v).unwrap();
+            quest.append(&k);
+            kcomp.append(&c, &wk, &k);
+        }
+        let q_gate: Vec<f32> = (0..c.n_kv_heads * c.d_gate)
+            .map(|_| rng.normal() as f32)
+            .collect();
+        let q_rope: Vec<f32> = (0..c.n_heads * c.head_dim)
+            .map(|_| rng.normal() as f32)
+            .collect();
+        slots.push(SlotState { kv, kcomp, quest, q_gate, q_rope });
+    }
+    Fixture { c, pool, slots }
+}
+
+fn sel_variant_for(tokens: usize) -> usize {
+    SEL_VARIANTS
+        .iter()
+        .copied()
+        .filter(|t| *t >= tokens)
+        .min()
+        .unwrap_or(SEL_VARIANTS[SEL_VARIANTS.len() - 1])
+}
+
+// ---------------------------------------------------------------------
+// Optimized step: arena staging + scratch selection (the engine's path).
+// ---------------------------------------------------------------------
+
+/// Everything the optimized step reuses across iterations.
+#[derive(Default)]
+struct HotState {
+    arena: StagingArena,
+    topk: TopkScratch,
+    scores: Vec<Vec<f32>>,
+    quest_row: Vec<f32>,
+    sel_bufs: Vec<SelectionBuf>,
+}
+
+#[derive(Clone, Copy, PartialEq)]
+enum BenchPolicy {
+    Dense,
+    GateBudget,
+    GateThreshold,
+    Quest,
+}
+
+impl BenchPolicy {
+    fn name(self) -> &'static str {
+        match self {
+            BenchPolicy::Dense => "dense",
+            BenchPolicy::GateBudget => "seer-budget",
+            BenchPolicy::GateThreshold => "seer-threshold",
+            BenchPolicy::Quest => "quest",
+        }
+    }
+}
+
+/// One optimized decode step: select per slot, then gather into the
+/// arena. Returns staged bytes (for reporting / black-boxing).
+fn hot_step(fx: &Fixture, policy: BenchPolicy, st: &mut HotState) -> u64 {
+    let c = &fx.c;
+    let bs = c.block_size;
+    let (hkv, h_all, dh, g) = (c.n_kv_heads, c.n_heads, c.head_dim, c.group_size);
+    if st.sel_bufs.len() < BATCH {
+        st.sel_bufs.resize_with(BATCH, SelectionBuf::new);
+    }
+    // Selection.
+    for (i, slot) in fx.slots.iter().enumerate() {
+        let buf = &mut st.sel_bufs[i];
+        let kc = &slot.kcomp;
+        let partial = if kc.has_partial() { Some(kc.partial_index()) } else { None };
+        let n_complete = kc.n_complete();
+        match policy {
+            BenchPolicy::Dense => buf.set_dense(),
+            BenchPolicy::GateBudget => {
+                kc.score_into(&slot.q_gate, &mut st.scores);
+                let k = (BUDGET_TOKENS / bs).max(1);
+                select_budget_into(&st.scores, k, partial, &mut st.topk, buf);
+            }
+            BenchPolicy::GateThreshold => {
+                kc.score_into(&slot.q_gate, &mut st.scores);
+                for row in &mut st.scores {
+                    let n = row.len();
+                    if n > 0 {
+                        gate::softmax_rows(row, n);
+                    }
+                }
+                select_threshold_into(&st.scores, 0.04, partial, buf);
+            }
+            BenchPolicy::Quest => {
+                let k = (BUDGET_TOKENS / bs).max(1);
+                let take = if partial.is_some() { k.saturating_sub(1) } else { k };
+                buf.begin(SelKind::PerHead, h_all);
+                for qh in 0..h_all {
+                    let kvh = qh / g;
+                    let q = &slot.q_rope[qh * dh..(qh + 1) * dh];
+                    slot.quest.scores_into(kvh, q, &mut st.quest_row);
+                    let sel = buf.row_mut(qh);
+                    let n = n_complete.min(st.quest_row.len());
+                    st.topk.topk_into(&st.quest_row[..n], take, sel);
+                    if let Some(p) = partial {
+                        merge_mandatory(sel, p);
+                    }
+                }
+            }
+        }
+    }
+    // Gather.
+    let mut staged = 0u64;
+    if policy == BenchPolicy::Dense {
+        let s = c.max_seq;
+        let set = st.arena.dense(BATCH, hkv, s, dh);
+        let (kc, vc, seq_len, dirty) = set.parts_mut();
+        for (i, slot) in fx.slots.iter().enumerate() {
+            seq_len[i] = slot.kv.len as i32;
+            for h in 0..hkv {
+                for (blk, &pg) in slot.kv.pages.iter().enumerate() {
+                    let n = slot.kv.tokens_in_block(blk, bs);
+                    let off = ((i * hkv + h) * s + blk * bs) * dh;
+                    fx.pool.gather_block(pg, h, n, &mut kc[off..off + n * dh],
+                                         &mut vc[off..off + n * dh]);
+                    staged += 2 * (n * dh * 4) as u64;
+                }
+                dirty[i * hkv + h] = slot.kv.len;
+            }
+        }
+    } else {
+        let per_head = policy == BenchPolicy::Quest;
+        let heads = if per_head { h_all } else { hkv };
+        let mut max_tokens = 1usize;
+        for (i, buf) in st.sel_bufs[..BATCH].iter().enumerate() {
+            for row in buf.rows() {
+                let t: usize = row
+                    .iter()
+                    .map(|&j| fx.slots[i].kv.tokens_in_block(j as usize, bs))
+                    .sum();
+                max_tokens = max_tokens.max(t);
+            }
+        }
+        let t_cap = sel_variant_for(max_tokens);
+        let set = st.arena.sparse(BATCH, heads, t_cap, dh);
+        let (k_sel, v_sel, mask, dirty) = set.parts_mut();
+        for (i, slot) in fx.slots.iter().enumerate() {
+            let buf = &st.sel_bufs[i];
+            for hr in 0..heads {
+                let row: &[i32] = match buf.kind() {
+                    SelKind::Shared => &buf.rows()[hr],
+                    SelKind::PerHead => &buf.rows()[hr],
+                    SelKind::Dense => unreachable!(),
+                };
+                let kv_head = if per_head { hr / g } else { hr };
+                let mut cursor = 0usize;
+                for &j in row {
+                    let n = slot.kv.tokens_in_block(j as usize, bs);
+                    let pg = slot.kv.pages[j as usize];
+                    let off = ((i * heads + hr) * t_cap + cursor) * dh;
+                    fx.pool.gather_block(pg, kv_head, n,
+                                         &mut k_sel[off..off + n * dh],
+                                         &mut v_sel[off..off + n * dh]);
+                    let moff = (i * heads + hr) * t_cap + cursor;
+                    mask[moff..moff + n].fill(1.0);
+                    cursor += n;
+                    staged += 2 * (n * dh * 4) as u64;
+                }
+                dirty[i * heads + hr] = cursor;
+            }
+        }
+    }
+    staged
+}
+
+// ---------------------------------------------------------------------
+// Reference step: the seed implementation — fresh full-size zeroed
+// staging, Vec-returning scores/top-k, per-head row clones.
+// ---------------------------------------------------------------------
+
+fn ref_step(fx: &Fixture, policy: BenchPolicy) -> u64 {
+    let c = &fx.c;
+    let bs = c.block_size;
+    let (hkv, h_all, dh, g) = (c.n_kv_heads, c.n_heads, c.head_dim, c.group_size);
+    // Selection (allocating, as in the seed engine).
+    let mut selections: Vec<(bool, Vec<Vec<i32>>)> = Vec::new();
+    for slot in &fx.slots {
+        let kc = &slot.kcomp;
+        let partial = if kc.has_partial() { Some(kc.partial_index()) } else { None };
+        let n_complete = kc.n_complete();
+        match policy {
+            BenchPolicy::Dense => selections.push((false, Vec::new())),
+            BenchPolicy::GateBudget => {
+                let scores = kc.score(c, &slot.q_gate);
+                let k = (BUDGET_TOKENS / bs).max(1);
+                selections.push((false, select_budget(&scores, k, partial)));
+            }
+            BenchPolicy::GateThreshold => {
+                let mut scores = kc.score(c, &slot.q_gate);
+                for row in &mut scores {
+                    let n = row.len();
+                    if n > 0 {
+                        gate::softmax_rows(row, n);
+                    }
+                }
+                selections.push((false, select_threshold(&scores, 0.04, partial)));
+            }
+            BenchPolicy::Quest => {
+                let k = (BUDGET_TOKENS / bs).max(1);
+                let take = if partial.is_some() { k.saturating_sub(1) } else { k };
+                let mut sel = Vec::with_capacity(h_all);
+                for qh in 0..h_all {
+                    let kvh = qh / g;
+                    let q = &slot.q_rope[qh * dh..(qh + 1) * dh];
+                    let scores = slot.quest.scores(kvh, q);
+                    let n = n_complete.min(scores.len());
+                    let mut s = topk_indices(&scores[..n], take);
+                    if let Some(p) = partial {
+                        merge_mandatory(&mut s, p);
+                    }
+                    sel.push(s);
+                }
+                selections.push((true, sel));
+            }
+        }
+    }
+    // Gather (fresh zero-filled buffers every step, as in the seed).
+    let mut staged = 0u64;
+    if policy == BenchPolicy::Dense {
+        let s = c.max_seq;
+        let mut kc = vec![0f32; BATCH * hkv * s * dh];
+        let mut vc = vec![0f32; BATCH * hkv * s * dh];
+        let mut seq_len = vec![0i32; BATCH];
+        for (i, slot) in fx.slots.iter().enumerate() {
+            seq_len[i] = slot.kv.len as i32;
+            for h in 0..hkv {
+                for (blk, &pg) in slot.kv.pages.iter().enumerate() {
+                    let n = slot.kv.tokens_in_block(blk, bs);
+                    let off = ((i * hkv + h) * s + blk * bs) * dh;
+                    fx.pool.gather_block(pg, h, n, &mut kc[off..off + n * dh],
+                                         &mut vc[off..off + n * dh]);
+                    staged += 2 * (n * dh * 4) as u64;
+                }
+            }
+        }
+        std::hint::black_box((&kc, &vc, &seq_len));
+    } else {
+        let per_head = policy == BenchPolicy::Quest;
+        let heads = if per_head { h_all } else { hkv };
+        let mut max_tokens = 1usize;
+        for (i, (_, rows)) in selections.iter().enumerate() {
+            for row in rows {
+                let t: usize = row
+                    .iter()
+                    .map(|&j| fx.slots[i].kv.tokens_in_block(j as usize, bs))
+                    .sum();
+                max_tokens = max_tokens.max(t);
+            }
+        }
+        let t_cap = sel_variant_for(max_tokens);
+        let mut k_sel = vec![0f32; BATCH * heads * t_cap * dh];
+        let mut v_sel = vec![0f32; BATCH * heads * t_cap * dh];
+        let mut mask = vec![0f32; BATCH * heads * t_cap];
+        for (i, slot) in fx.slots.iter().enumerate() {
+            // Seed behaviour: clone rows (expanding per head if needed).
+            let rows: Vec<Vec<i32>> = if selections[i].0 {
+                selections[i].1.clone()
+            } else if per_head {
+                (0..h_all).map(|qh| selections[i].1[qh / g].clone()).collect()
+            } else {
+                selections[i].1.clone()
+            };
+            for (hr, row) in rows.iter().enumerate() {
+                let kv_head = if per_head { hr / g } else { hr };
+                let mut cursor = 0usize;
+                for &j in row {
+                    let n = slot.kv.tokens_in_block(j as usize, bs);
+                    let pg = slot.kv.pages[j as usize];
+                    let off = ((i * heads + hr) * t_cap + cursor) * dh;
+                    fx.pool.gather_block(pg, kv_head, n,
+                                         &mut k_sel[off..off + n * dh],
+                                         &mut v_sel[off..off + n * dh]);
+                    let moff = (i * heads + hr) * t_cap + cursor;
+                    for m in &mut mask[moff..moff + n] {
+                        *m = 1.0;
+                    }
+                    cursor += n;
+                    staged += 2 * (n * dh * 4) as u64;
+                }
+            }
+        }
+        std::hint::black_box((&k_sel, &v_sel, &mask));
+    }
+    staged
+}
+
+// ---------------------------------------------------------------------
+
+fn main() {
+    let seed: u64 = std::env::var("SEERATTN_BENCH_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(17);
+    let fx = build_fixture(seed);
+    let policies = [
+        BenchPolicy::Dense,
+        BenchPolicy::GateBudget,
+        BenchPolicy::GateThreshold,
+        BenchPolicy::Quest,
+    ];
+
+    println!("decode hot path: synthetic step (select + gather), batch {BATCH}, \
+              ctx {CTX}, block {}, budget {BUDGET_TOKENS}\n", fx.c.block_size);
+
+    let mut policy_json: Vec<(String, Json)> = Vec::new();
+    let mut total_allocs = 0u64;
+    for policy in policies {
+        let mut st = HotState::default();
+        // Warm up: create arena sets, grow scratch to steady state.
+        for _ in 0..3 {
+            std::hint::black_box(hot_step(&fx, policy, &mut st));
+        }
+        // Steady-state allocation check: 20 full steps, zero allocs.
+        let allocs = count_allocs(|| {
+            for _ in 0..20 {
+                std::hint::black_box(hot_step(&fx, policy, &mut st));
+            }
+        });
+        total_allocs += allocs;
+        assert_eq!(
+            allocs, 0,
+            "policy {}: steady-state decode step allocated {allocs} times",
+            policy.name()
+        );
+
+        let staged = hot_step(&fx, policy, &mut st);
+        let opt = bench(&format!("{} optimized", policy.name()), 5, 30, 0.4, || {
+            std::hint::black_box(hot_step(&fx, policy, &mut st));
+        });
+        let reference = bench(&format!("{} reference", policy.name()), 5, 30, 0.4, || {
+            std::hint::black_box(ref_step(&fx, policy));
+        });
+        println!("{}", reference.report());
+        println!("{}", opt.report());
+        let speedup = reference.median_s / opt.median_s.max(1e-12);
+        println!("  -> speedup x{speedup:.2}, staged {staged} B/step, \
+                  steady-state allocs {allocs}\n");
+        policy_json.push((
+            policy.name().to_string(),
+            Json::obj(vec![
+                ("optimized_median_ms", Json::Num(opt.median_s * 1e3)),
+                ("optimized_mean_ms", Json::Num(opt.mean_s * 1e3)),
+                ("reference_median_ms", Json::Num(reference.median_s * 1e3)),
+                ("reference_mean_ms", Json::Num(reference.mean_s * 1e3)),
+                ("speedup", Json::Num(speedup)),
+                ("staged_bytes_per_step", Json::Num(staged as f64)),
+                ("steady_state_allocs", Json::Num(allocs as f64)),
+            ]),
+        ));
+    }
+
+    let out = Json::obj(vec![
+        ("bench", Json::Str("decode_hot_path".into())),
+        ("seed", Json::Num(seed as f64)),
+        ("config", Json::obj(vec![
+            ("batch", Json::Num(BATCH as f64)),
+            ("context_tokens", Json::Num(CTX as f64)),
+            ("block_size", Json::Num(fx.c.block_size as f64)),
+            ("budget_tokens", Json::Num(BUDGET_TOKENS as f64)),
+            ("n_kv_heads", Json::Num(fx.c.n_kv_heads as f64)),
+            ("n_heads", Json::Num(fx.c.n_heads as f64)),
+            ("head_dim", Json::Num(fx.c.head_dim as f64)),
+        ])),
+        ("steady_state_allocs_total", Json::Num(total_allocs as f64)),
+        ("policies", Json::Obj(
+            policy_json.into_iter().collect(),
+        )),
+    ]);
+    // BENCH_decode.json lives at the repo root (one level above the
+    // crate manifest) so successive PRs diff a stable path.
+    let root = std::env::var("CARGO_MANIFEST_DIR")
+        .map(|d| std::path::PathBuf::from(d).parent().unwrap().to_path_buf())
+        .unwrap_or_else(|_| std::path::PathBuf::from("."));
+    let path = root.join("BENCH_decode.json");
+    std::fs::write(&path, out.to_string()).expect("write BENCH_decode.json");
+    println!("wrote {}", path.display());
+}

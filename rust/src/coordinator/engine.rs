@@ -22,6 +22,7 @@ use std::time::Instant;
 
 use anyhow::{bail, Result};
 
+use super::arena::StagingArena;
 use super::metrics::Metrics;
 use super::request::{Completion, Request, SeqStats, StopReason};
 use super::sampling;
@@ -30,10 +31,10 @@ use crate::kvcache::offload::{OffloadConfig, TieredKv};
 use crate::kvcache::{KcompCache, PagedKvPool, SeqKv};
 use crate::model::{ModelConfig, ParamStore};
 use crate::runtime::{Arg, DeviceTensor, HostTensor, Runtime};
-use crate::sparse::policy::{select_budget, select_threshold, select_top_p, Policy,
-                            Selection};
+use crate::sparse::policy::{select_budget_into, select_threshold_into,
+                            select_top_p_into, Policy, SelKind, SelectionBuf};
 use crate::sparse::quest::QuestMeta;
-use crate::sparse::topk::{merge_mandatory, topk_indices};
+use crate::sparse::topk::{count_hits_sorted, merge_mandatory, TopkScratch};
 use crate::util::rng::Rng;
 use crate::workload::Vocab;
 
@@ -105,10 +106,34 @@ pub struct Engine {
     dev: HashMap<String, DeviceTensor>,
     /// Per-layer wk_gate host copies (hot in the kcomp update).
     wk_gates: Vec<Vec<f32>>,
-    /// Current decode step's q_rope (for the oracle / recall paths).
+    /// Current decode step's q_rope (for the oracle / recall paths);
+    /// cleared and refilled per layer, capacity retained.
     current_q: Vec<f32>,
     /// Optional tiered-KV offload accounting (§3.2).
     pub offload: Option<TieredKv>,
+    /// Persistent staging buffers for the gather stage — zero heap
+    /// allocation per decode step once every variant has been touched.
+    arena: StagingArena,
+    /// Selection-stage scratch (score rows, top-k index buffer, oracle
+    /// rows), reused across slots, layers, and steps.
+    scratch: SelectScratch,
+    /// One reusable selection per batch slot; `run_attention` borrows
+    /// rows from here instead of cloning per-head index lists.
+    sel_bufs: Vec<SelectionBuf>,
+}
+
+/// Reusable selection scratch (see `Engine::select`).
+#[derive(Default)]
+struct SelectScratch {
+    topk: TopkScratch,
+    /// Gate score rows [hkv][n_complete].
+    scores: Vec<Vec<f32>>,
+    /// One Quest score row (per query head, refilled in place).
+    quest_row: Vec<f32>,
+    /// Oracle score rows (oracle policy + recall diagnostics).
+    oracle: Vec<Vec<f32>>,
+    /// Oracle top-k rows (ascending) for recall accounting.
+    orc: Vec<Vec<i32>>,
 }
 
 impl Engine {
@@ -163,7 +188,16 @@ impl Engine {
             wk_gates,
             current_q: Vec::new(),
             offload,
+            arena: StagingArena::new(),
+            scratch: SelectScratch::default(),
+            sel_bufs: (0..batch).map(|_| SelectionBuf::new()).collect(),
         })
+    }
+
+    /// Staging buffer-set creations so far (constant in steady state —
+    /// exposed for allocation-regression tests).
+    pub fn arena_allocations(&self) -> usize {
+        self.arena.allocations()
     }
 
     pub fn batch_size(&self) -> usize {
@@ -364,8 +398,9 @@ impl Engine {
             let k_rope = outs[1].as_f32()?;
             let v_new = outs[2].as_f32()?;
             let k_pre = outs[3].as_f32()?;
-            let q_gate_all = outs[4].as_f32()?.to_vec();
-            self.current_q = outs[0].as_f32()?.to_vec();
+            let q_gate_all = outs[4].as_f32()?;
+            self.current_q.clear();
+            self.current_q.extend_from_slice(outs[0].as_f32()?);
 
             // 2. cache updates
             for &i in &active {
@@ -378,24 +413,22 @@ impl Engine {
                 slot.kcomp[l].append(&self.cfg, &self.wk_gates[l], prow);
             }
 
-            // 3. selection
+            // 3. selection (into the per-slot reusable buffers)
             let effective = if l < self.ecfg.dense_first_layers {
                 Policy::Dense
             } else {
                 self.ecfg.policy
             };
-            let mut selections: Vec<Option<Selection>> = vec![None; b];
             for &i in &active {
-                let qg = q_gate_all[i * hkv * dg..(i + 1) * hkv * dg].to_vec();
-                let sel = self.select(i, l, effective, &qg)?;
+                let qg = &q_gate_all[i * hkv * dg..(i + 1) * hkv * dg];
+                self.select(i, l, effective, qg)?;
                 if l == 0 {
-                    self.record_activation(i, l, &sel);
+                    self.record_activation(i, l);
                 }
-                selections[i] = Some(sel);
             }
 
             // 4+5. gather + attention
-            x_t = self.run_attention(l, &outs[0], &x_t, &active, &selections)?;
+            x_t = self.run_attention(l, &outs[0], &x_t, &active)?;
         }
 
         // lm_head + sampling
@@ -423,13 +456,16 @@ impl Engine {
     }
 
     /// Fig 9a accounting: activated tokens per head at layer 0.
-    fn record_activation(&mut self, i: usize, l: usize, sel: &Selection) {
+    fn record_activation(&mut self, i: usize, l: usize) {
         let bs = self.ecfg.block_size;
-        let slot = self.slots[i].as_ref().unwrap();
+        let Engine { slots, sel_bufs, .. } = self;
+        let slot = slots[i].as_mut().unwrap();
         let ctx = slot.kv[l].len;
-        let act = match sel {
-            Selection::Dense => ctx as f64,
-            Selection::Shared(v) | Selection::PerHead(v) => {
+        let buf = &sel_bufs[i];
+        let act = match buf.kind() {
+            SelKind::Dense => ctx as f64,
+            SelKind::Shared | SelKind::PerHead => {
+                let v = buf.rows();
                 let per: f64 = v
                     .iter()
                     .map(|row| {
@@ -441,165 +477,193 @@ impl Engine {
                 per / v.len().max(1) as f64
             }
         };
-        let slot = self.slots[i].as_mut().unwrap();
         slot.stats.activated.push((ctx, act));
     }
 
-    /// Block selection for one slot at one layer (step 3).
+    /// Block selection for one slot at one layer (step 3), written into
+    /// the slot's persistent `SelectionBuf`. Scores, top-k indices, and
+    /// selection rows all land in reused buffers: steady-state selection
+    /// performs no heap allocation.
     fn select(&mut self, i: usize, l: usize, policy: Policy,
-              q_gate: &[f32]) -> Result<Selection> {
+              q_gate: &[f32]) -> Result<()> {
         let bs = self.ecfg.block_size;
-        let (partial, n_complete) = {
-            let kc = &self.slots[i].as_ref().unwrap().kcomp[l];
+        let track = self.ecfg.track_recall;
+        // Field-level borrow split: scratch and the slot's selection buf
+        // are written while the slot caches are read.
+        let Engine { slots, pool, cfg, scratch, sel_bufs, current_q, .. } = self;
+        let slot = slots[i].as_ref().unwrap();
+        let kc = &slot.kcomp[l];
+        let buf = &mut sel_bufs[i];
+        let (partial, n_complete) =
             (if kc.has_partial() { Some(kc.partial_index()) } else { None },
-             kc.n_complete())
-        };
-        let sel = match policy {
-            Policy::Dense => Selection::Dense,
+             kc.n_complete());
+        match policy {
+            Policy::Dense => buf.set_dense(),
             Policy::GateBudget { budget_tokens } => {
-                let kc = &self.slots[i].as_ref().unwrap().kcomp[l];
-                let scores = kc.score(&self.cfg, q_gate);
+                kc.score_into(q_gate, &mut scratch.scores);
                 let k = Policy::block_budget(budget_tokens, bs);
-                Selection::Shared(select_budget(&scores, k, partial))
+                select_budget_into(&scratch.scores, k, partial,
+                                   &mut scratch.topk, buf);
             }
             Policy::GateThreshold { threshold } => {
-                let kc = &self.slots[i].as_ref().unwrap().kcomp[l];
-                let mut scores = kc.score(&self.cfg, q_gate);
-                for row in &mut scores {
+                kc.score_into(q_gate, &mut scratch.scores);
+                for row in &mut scratch.scores {
                     let n = row.len();
                     if n > 0 {
                         gate::softmax_rows(row, n);
                     }
                 }
-                Selection::Shared(select_threshold(&scores, threshold, partial))
+                select_threshold_into(&scratch.scores, threshold, partial, buf);
             }
             Policy::GateTopP { p } => {
-                let kc = &self.slots[i].as_ref().unwrap().kcomp[l];
-                let mut scores = kc.score(&self.cfg, q_gate);
-                for row in &mut scores {
+                kc.score_into(q_gate, &mut scratch.scores);
+                for row in &mut scratch.scores {
                     let n = row.len();
                     if n > 0 {
                         gate::softmax_rows(row, n);
                     }
                 }
-                Selection::Shared(select_top_p(&scores, p, partial))
+                select_top_p_into(&scratch.scores, p, partial,
+                                  &mut scratch.topk, buf);
             }
             Policy::Oracle { budget_tokens } => {
-                let rows = self.oracle_rows(i, l);
+                Self::oracle_rows_into(cfg, pool, current_q, slot, l, i, bs,
+                                       &mut scratch.oracle);
                 let k = Policy::block_budget(budget_tokens, bs);
-                let mut sel: Vec<Vec<i32>> = Vec::with_capacity(rows.len());
-                for row in &rows {
-                    let take = if partial.is_some() { k.saturating_sub(1) } else { k };
-                    let mut s = topk_indices(&row[..n_complete.min(row.len())], take);
+                let take = if partial.is_some() { k.saturating_sub(1) } else { k };
+                buf.begin(SelKind::Shared, cfg.n_kv_heads);
+                for (h, row) in scratch.oracle.iter().enumerate() {
+                    let sel = buf.row_mut(h);
+                    scratch.topk.topk_into(&row[..n_complete.min(row.len())],
+                                           take, sel);
                     if let Some(p) = partial {
-                        merge_mandatory(&mut s, p);
+                        merge_mandatory(sel, p);
                     }
-                    sel.push(s);
                 }
-                Selection::Shared(sel)
             }
             Policy::Quest { budget_tokens } => {
                 let k = Policy::block_budget(budget_tokens, bs);
-                let g = self.cfg.group_size;
-                let dh = self.cfg.head_dim;
-                let slot = self.slots[i].as_ref().unwrap();
-                let mut sel = Vec::with_capacity(self.cfg.n_heads);
-                for qh in 0..self.cfg.n_heads {
+                let take = if partial.is_some() { k.saturating_sub(1) } else { k };
+                let g = cfg.group_size;
+                let dh = cfg.head_dim;
+                buf.begin(SelKind::PerHead, cfg.n_heads);
+                for qh in 0..cfg.n_heads {
                     let kvh = qh / g;
-                    let q = &self.current_q[(i * self.cfg.n_heads + qh) * dh..][..dh];
-                    let scores = slot.quest[l].scores(kvh, q);
-                    let take = if partial.is_some() { k.saturating_sub(1) } else { k };
-                    let mut s =
-                        topk_indices(&scores[..n_complete.min(scores.len())], take);
+                    let q = &current_q[(i * cfg.n_heads + qh) * dh..][..dh];
+                    slot.quest[l].scores_into(kvh, q, &mut scratch.quest_row);
+                    let sel = buf.row_mut(qh);
+                    let n = n_complete.min(scratch.quest_row.len());
+                    scratch.topk.topk_into(&scratch.quest_row[..n], take, sel);
                     if let Some(p) = partial {
-                        merge_mandatory(&mut s, p);
+                        merge_mandatory(sel, p);
                     }
-                    sel.push(s);
                 }
-                Selection::PerHead(sel)
-            }
-        };
-        // Recall diagnostics vs the oracle.
-        if self.ecfg.track_recall {
-            if let Policy::GateBudget { budget_tokens } | Policy::Quest { budget_tokens } =
-                policy
-            {
-                let rows = self.oracle_rows(i, l);
-                let k = Policy::block_budget(budget_tokens, bs);
-                let orc: Vec<Vec<i32>> = rows
-                    .iter()
-                    .map(|r| topk_indices(&r[..n_complete.min(r.len())], k))
-                    .collect();
-                let mut rsum = 0.0;
-                let mut rn = 0u64;
-                let g = self.cfg.group_size;
-                match &sel {
-                    Selection::Shared(v) => {
-                        for (hh, row) in v.iter().enumerate() {
-                            let o = &orc[hh];
-                            if !o.is_empty() {
-                                let hit = row.iter().filter(|x| o.contains(x)).count();
-                                rsum += hit as f64 / o.len() as f64;
-                                rn += 1;
-                            }
-                        }
-                    }
-                    Selection::PerHead(v) => {
-                        for (qh, row) in v.iter().enumerate() {
-                            let o = &orc[qh / g];
-                            if !o.is_empty() {
-                                let hit = row.iter().filter(|x| o.contains(x)).count();
-                                rsum += hit as f64 / o.len() as f64;
-                                rn += 1;
-                            }
-                        }
-                    }
-                    Selection::Dense => {}
-                }
-                let slot = self.slots[i].as_mut().unwrap();
-                slot.stats.recall_sum += rsum;
-                slot.stats.recall_n += rn;
             }
         }
-        Ok(sel)
+        // Recall diagnostics vs the oracle. Oracle rows come out of
+        // `topk_into` ascending, so membership is a binary search —
+        // O(k log k) per head instead of the old O(k²) contains scan.
+        let mut recall: Option<(f64, u64)> = None;
+        if track {
+            if let Policy::GateBudget { budget_tokens }
+            | Policy::Quest { budget_tokens } = policy
+            {
+                Self::oracle_rows_into(cfg, pool, current_q, slot, l, i, bs,
+                                       &mut scratch.oracle);
+                let k = Policy::block_budget(budget_tokens, bs);
+                let hkv = cfg.n_kv_heads;
+                crate::util::buf::resize_rows(&mut scratch.orc, hkv);
+                for (h, row) in scratch.oracle.iter().enumerate() {
+                    scratch.topk.topk_into(&row[..n_complete.min(row.len())], k,
+                                           &mut scratch.orc[h]);
+                }
+                let mut rsum = 0.0;
+                let mut rn = 0u64;
+                let g = cfg.group_size;
+                match buf.kind() {
+                    SelKind::Shared => {
+                        for (hh, row) in buf.rows().iter().enumerate() {
+                            let o = &scratch.orc[hh];
+                            if !o.is_empty() {
+                                let hit = count_hits_sorted(row, o);
+                                rsum += hit as f64 / o.len() as f64;
+                                rn += 1;
+                            }
+                        }
+                    }
+                    SelKind::PerHead => {
+                        for (qh, row) in buf.rows().iter().enumerate() {
+                            let o = &scratch.orc[qh / g];
+                            if !o.is_empty() {
+                                let hit = count_hits_sorted(row, o);
+                                rsum += hit as f64 / o.len() as f64;
+                                rn += 1;
+                            }
+                        }
+                    }
+                    SelKind::Dense => {}
+                }
+                recall = Some((rsum, rn));
+            }
+        }
+        if let Some((rsum, rn)) = recall {
+            let slot = slots[i].as_mut().unwrap();
+            slot.stats.recall_sum += rsum;
+            slot.stats.recall_n += rn;
+        }
+        Ok(())
     }
 
     /// Oracle block scores (true attention over the cached keys, §4.2)
-    /// for one slot+layer: per-KV-head rows over all blocks (incl.
-    /// partial).
-    fn oracle_rows(&self, i: usize, l: usize) -> Vec<Vec<f32>> {
-        let slot = self.slots[i].as_ref().unwrap();
+    /// for one slot+layer into reusable per-KV-head rows over all blocks
+    /// (incl. partial).
+    #[allow(clippy::too_many_arguments)]
+    fn oracle_rows_into(cfg: &ModelConfig, pool: &PagedKvPool, current_q: &[f32],
+                        slot: &Slot, l: usize, i: usize, bs: usize,
+                        out: &mut Vec<Vec<f32>>) {
         let kvl = &slot.kv[l];
-        let bs = self.ecfg.block_size;
         let len = kvl.len;
-        let n = self.cfg.n_heads * self.cfg.head_dim;
-        let q = &self.current_q[i * n..(i + 1) * n];
-        let pool = &self.pool;
+        let n = cfg.n_heads * cfg.head_dim;
+        let q = &current_q[i * n..(i + 1) * n];
         let pages = &kvl.pages;
         let k_at = |h: usize, t: usize| -> *const f32 {
             pool.k_row(pages[t / bs], h, t % bs).as_ptr()
         };
-        let flat = gate::oracle_scores(&self.cfg, q, &k_at, len, bs);
+        let flat = gate::oracle_scores(cfg, q, &k_at, len, bs);
         let nblk = len.div_ceil(bs);
-        (0..self.cfg.n_kv_heads)
-            .map(|h| flat[h * nblk..(h + 1) * nblk].to_vec())
-            .collect()
+        crate::util::buf::resize_rows(out, cfg.n_kv_heads);
+        for (h, row) in out.iter_mut().enumerate() {
+            row.extend_from_slice(&flat[h * nblk..(h + 1) * nblk]);
+        }
     }
 
     /// Gather + attention executable dispatch (steps 4-5).
+    ///
+    /// Staging goes through the persistent [`StagingArena`]: buffers are
+    /// created once per compiled variant and dirty-cleared on reuse, so a
+    /// steady-state decode step performs zero heap allocation here, and
+    /// clearing cost scales with the previous step's selection, not the
+    /// staging capacity. Selection rows are borrowed from the per-slot
+    /// `SelectionBuf`s — never cloned, including the mixed
+    /// Shared/PerHead batch case, which now indexes the GQA group's
+    /// shared row directly instead of materialising an expanded copy.
     fn run_attention(&mut self, l: usize, q_rope_t: &HostTensor, x_t: &HostTensor,
-                     active: &[usize], selections: &[Option<Selection>])
-                     -> Result<HostTensor> {
+                     active: &[usize]) -> Result<HostTensor> {
         let b = self.batch;
-        let (hkv, h_all, dh) = (self.cfg.n_kv_heads, self.cfg.n_heads, self.cfg.head_dim);
+        let s = self.max_seq;
+        let (hkv, h_all, dh) =
+            (self.cfg.n_kv_heads, self.cfg.n_heads, self.cfg.head_dim);
+        let g = self.cfg.group_size;
         let bs = self.ecfg.block_size;
-        let _ = h_all;
-        let any_dense =
-            active.iter().any(|&i| matches!(selections[i], Some(Selection::Dense)));
         let wo = format!("l{l}.wo");
         let w1 = format!("l{l}.w1");
         let w2 = format!("l{l}.w2");
         let ln2 = format!("l{l}.ln2");
+
+        let Engine { slots, pool, offload, metrics, arena, sel_bufs, rt, dev, .. } =
+            self;
+        let any_dense =
+            active.iter().any(|&i| sel_bufs[i].kind() == SelKind::Dense);
 
         // Sparse staging is capped by the largest compiled variant; if a
         // selection (e.g. a low threshold) exceeds it, attending densely
@@ -607,141 +671,122 @@ impl Engine {
         let mut max_tokens = 1usize;
         if !any_dense {
             for &i in active {
-                let slot = self.slots[i].as_ref().unwrap();
+                let slot = slots[i].as_ref().unwrap();
                 let kvl = &slot.kv[l];
-                if let Some(Selection::Shared(v)) | Some(Selection::PerHead(v)) =
-                    &selections[i]
-                {
-                    for row in v {
-                        let t: usize = row
-                            .iter()
-                            .map(|&j| kvl.tokens_in_block(j as usize, bs))
-                            .sum();
-                        max_tokens = max_tokens.max(t);
-                    }
+                for row in sel_bufs[i].rows() {
+                    let t: usize = row
+                        .iter()
+                        .map(|&j| kvl.tokens_in_block(j as usize, bs))
+                        .sum();
+                    max_tokens = max_tokens.max(t);
                 }
             }
         }
-        let variant = self.rt.manifest.sel_variant_for(max_tokens);
+        let variant = rt.manifest.sel_variant_for(max_tokens);
         if any_dense || variant.is_err() {
             // Dense baseline: ship the full cache.
-            let s = self.max_seq;
-            let mut kc = vec![0f32; b * hkv * s * dh];
-            let mut vc = vec![0f32; b * hkv * s * dh];
-            let mut seq_len = vec![0i32; b];
+            let set = arena.dense(b, hkv, s, dh);
             let mut touched_total = 0u64;
-            for &i in active {
-                let mut touched = 0u64;
-                {
-                    let slot = self.slots[i].as_ref().unwrap();
-                    let kvl = &slot.kv[l];
-                    seq_len[i] = kvl.len as i32;
-                    for h in 0..hkv {
-                        for (blk, &pg) in kvl.pages.iter().enumerate() {
-                            if let Some(t) = &mut self.offload {
-                                t.touch(pg);
+            {
+                let (kc, vc, seq_len, dirty) = set.parts_mut();
+                for &i in active {
+                    let mut touched = 0u64;
+                    {
+                        let slot = slots[i].as_ref().unwrap();
+                        let kvl = &slot.kv[l];
+                        seq_len[i] = kvl.len as i32;
+                        for h in 0..hkv {
+                            for (blk, &pg) in kvl.pages.iter().enumerate() {
+                                if let Some(t) = offload.as_mut() {
+                                    t.touch(pg);
+                                }
+                                let n = kvl.tokens_in_block(blk, bs);
+                                let off = ((i * hkv + h) * s + blk * bs) * dh;
+                                pool.gather_block(
+                                    pg, h, n,
+                                    &mut kc[off..off + n * dh],
+                                    &mut vc[off..off + n * dh],
+                                );
+                                touched += 2 * (n * dh * 4) as u64;
                             }
-                            let n = kvl.tokens_in_block(blk, bs);
-                            let off = ((i * hkv + h) * s + blk * bs) * dh;
-                            self.pool.gather_block(
-                                pg, h, n,
-                                &mut kc[off..off + n * dh],
-                                &mut vc[off..off + n * dh],
-                            );
-                            touched += 2 * (n * dh * 4) as u64;
+                            dirty[i * hkv + h] = kvl.len;
                         }
                     }
+                    touched_total += touched;
+                    let slot = slots[i].as_mut().unwrap();
+                    slot.stats.kv_bytes_touched += touched;
                 }
-                touched_total += touched;
-                let slot = self.slots[i].as_mut().unwrap();
-                slot.stats.kv_bytes_touched += touched;
             }
-            self.metrics.kv_bytes_touched += touched_total;
-            self.metrics.kv_bytes_dense_equiv += touched_total;
-            let kc_t = HostTensor::f32(vec![b, hkv, s, dh], kc);
-            let vc_t = HostTensor::f32(vec![b, hkv, s, dh], vc);
-            let sl_t = HostTensor::i32(vec![b], seq_len);
+            metrics.kv_bytes_touched += touched_total;
+            metrics.kv_bytes_dense_equiv += touched_total;
             let args = [
                 Arg::Host(q_rope_t),
-                Arg::Host(&kc_t),
-                Arg::Host(&vc_t),
-                Arg::Host(&sl_t),
+                Arg::Host(&set.k),
+                Arg::Host(&set.v),
+                Arg::Host(&set.seq_len),
                 Arg::Host(x_t),
-                Arg::Dev(&self.dev[&wo]),
-                Arg::Dev(&self.dev[&w1]),
-                Arg::Dev(&self.dev[&w2]),
-                Arg::Dev(&self.dev[&ln2]),
+                Arg::Dev(&dev[&wo]),
+                Arg::Dev(&dev[&w1]),
+                Arg::Dev(&dev[&w2]),
+                Arg::Dev(&dev[&ln2]),
             ];
-            let outs = self.rt.call("layer_post_dense", &args)?;
+            let outs = rt.call("layer_post_dense", &args)?;
             return Ok(outs.into_iter().next().unwrap());
         }
 
         // Sparse: widest head-row in tokens -> staging variant.
         let per_head =
-            active.iter().any(|&i| matches!(selections[i], Some(Selection::PerHead(_))));
+            active.iter().any(|&i| sel_bufs[i].kind() == SelKind::PerHead);
         let t_cap = variant.expect("checked above");
         let heads = if per_head { h_all } else { hkv };
-        let g = self.cfg.group_size;
-        let mut k_sel = vec![0f32; b * heads * t_cap * dh];
-        let mut v_sel = vec![0f32; b * heads * t_cap * dh];
-        let mut mask = vec![0f32; b * heads * t_cap];
+        let set = arena.sparse(b, heads, t_cap, dh);
         let mut dense_equiv = 0u64;
         let mut touched_total = 0u64;
-        for &i in active {
-            let rows: Vec<Vec<i32>> = match selections[i].as_ref().unwrap() {
-                Selection::Shared(v) => {
-                    if per_head {
-                        // Mixed Shared/PerHead batch: expand to per head.
-                        let mut e = Vec::with_capacity(h_all);
-                        for qh in 0..h_all {
-                            e.push(v[qh / g].clone());
+        {
+            let (k_sel, v_sel, mask, dirty) = set.parts_mut();
+            for &i in active {
+                let mut touched = 0u64;
+                {
+                    let slot = slots[i].as_ref().unwrap();
+                    let buf = &sel_bufs[i];
+                    let kvl = &slot.kv[l];
+                    for hr in 0..heads {
+                        let row: &[i32] = match buf.kind() {
+                            SelKind::Shared if per_head => &buf.rows()[hr / g],
+                            SelKind::Shared => &buf.rows()[hr],
+                            SelKind::PerHead => &buf.rows()[hr],
+                            SelKind::Dense => unreachable!(),
+                        };
+                        let kv_head = if per_head { hr / g } else { hr };
+                        let mut cursor = 0usize;
+                        for &j in row {
+                            let n = kvl.tokens_in_block(j as usize, bs);
+                            let pg = kvl.pages[j as usize];
+                            if let Some(t) = offload.as_mut() {
+                                t.touch(pg);
+                            }
+                            let off = ((i * heads + hr) * t_cap + cursor) * dh;
+                            pool.gather_block(
+                                pg, kv_head, n,
+                                &mut k_sel[off..off + n * dh],
+                                &mut v_sel[off..off + n * dh],
+                            );
+                            let moff = (i * heads + hr) * t_cap + cursor;
+                            mask[moff..moff + n].fill(1.0);
+                            cursor += n;
+                            touched += 2 * (n * dh * 4) as u64;
                         }
-                        e
-                    } else {
-                        v.clone()
+                        dirty[i * heads + hr] = cursor;
                     }
+                    dense_equiv += 2 * (kvl.len * dh * 4) as u64 * hkv as u64;
                 }
-                Selection::PerHead(v) => v.clone(),
-                Selection::Dense => unreachable!(),
-            };
-            let mut touched = 0u64;
-            let kvl_len = self.slots[i].as_ref().unwrap().kv[l].len;
-            for (hr, row) in rows.iter().enumerate() {
-                let kv_head = if per_head { hr / g } else { hr };
-                let mut cursor = 0usize;
-                for &j in row {
-                    let (n, pg) = {
-                        let slot = self.slots[i].as_ref().unwrap();
-                        (slot.kv[l].tokens_in_block(j as usize, bs),
-                         slot.kv[l].pages[j as usize])
-                    };
-                    if let Some(t) = &mut self.offload {
-                        t.touch(pg);
-                    }
-                    let off = ((i * heads + hr) * t_cap + cursor) * dh;
-                    self.pool.gather_block(
-                        pg, kv_head, n,
-                        &mut k_sel[off..off + n * dh],
-                        &mut v_sel[off..off + n * dh],
-                    );
-                    let moff = (i * heads + hr) * t_cap + cursor;
-                    for m in &mut mask[moff..moff + n] {
-                        *m = 1.0;
-                    }
-                    cursor += n;
-                    touched += 2 * (n * dh * 4) as u64;
-                }
+                touched_total += touched;
+                let slot = slots[i].as_mut().unwrap();
+                slot.stats.kv_bytes_touched += touched;
             }
-            dense_equiv += 2 * (kvl_len * dh * 4) as u64 * hkv as u64;
-            touched_total += touched;
-            let slot = self.slots[i].as_mut().unwrap();
-            slot.stats.kv_bytes_touched += touched;
         }
-        self.metrics.kv_bytes_touched += touched_total;
-        self.metrics.kv_bytes_dense_equiv += dense_equiv;
-        let k_t = HostTensor::f32(vec![b, heads, t_cap, dh], k_sel);
-        let v_t = HostTensor::f32(vec![b, heads, t_cap, dh], v_sel);
-        let m_t = HostTensor::f32(vec![b, heads, t_cap], mask);
+        metrics.kv_bytes_touched += touched_total;
+        metrics.kv_bytes_dense_equiv += dense_equiv;
         let exe = if per_head {
             format!("layer_post_selh_t{t_cap}")
         } else {
@@ -749,16 +794,16 @@ impl Engine {
         };
         let args = [
             Arg::Host(q_rope_t),
-            Arg::Host(&k_t),
-            Arg::Host(&v_t),
-            Arg::Host(&m_t),
+            Arg::Host(&set.k),
+            Arg::Host(&set.v),
+            Arg::Host(&set.mask),
             Arg::Host(x_t),
-            Arg::Dev(&self.dev[&wo]),
-            Arg::Dev(&self.dev[&w1]),
-            Arg::Dev(&self.dev[&w2]),
-            Arg::Dev(&self.dev[&ln2]),
+            Arg::Dev(&dev[&wo]),
+            Arg::Dev(&dev[&w1]),
+            Arg::Dev(&dev[&w2]),
+            Arg::Dev(&dev[&ln2]),
         ];
-        let outs = self.rt.call(&exe, &args)?;
+        let outs = rt.call(&exe, &args)?;
         Ok(outs.into_iter().next().unwrap())
     }
 

@@ -1,13 +1,24 @@
 //! L3 coordinator: the serving engine (continuous batching over the
 //! AOT-compiled decode executables), sampling, scheduling, metrics, and
 //! the TCP server.
+//!
+//! The engine, scheduler, and server need the PJRT runtime and are gated
+//! behind the `pjrt` feature; the staging arena, sampling, request types,
+//! and metrics are pure host code and always available (the decode
+//! hot-path bench exercises them offline).
 
+pub mod arena;
+#[cfg(feature = "pjrt")]
 pub mod engine;
 pub mod metrics;
 pub mod request;
 pub mod sampling;
+#[cfg(feature = "pjrt")]
 pub mod scheduler;
+#[cfg(feature = "pjrt")]
 pub mod server;
 
+pub use arena::StagingArena;
+#[cfg(feature = "pjrt")]
 pub use engine::{Engine, EngineConfig};
 pub use request::{Completion, Request};

@@ -15,6 +15,11 @@ use crate::model::ModelConfig;
 
 /// Apply interleaved-pair RoPE in place over the trailing dim of `x`.
 /// Matches `python/compile/rope.py::apply_rope`.
+///
+/// Reference implementation: recomputes `theta^-(2i/dim)` in the inner
+/// loop. Hot paths hold a [`RopeTable`] instead and call
+/// [`RopeTable::apply`], which produces bit-identical rotations from the
+/// cached frequencies.
 pub fn rope_inplace(x: &mut [f32], dim: usize, pos: i64, theta: f64) {
     debug_assert_eq!(x.len() % dim, 0);
     debug_assert_eq!(dim % 2, 0);
@@ -32,6 +37,49 @@ pub fn rope_inplace(x: &mut [f32], dim: usize, pos: i64, theta: f64) {
     }
 }
 
+/// Precomputed RoPE frequency table for one `(dim, theta)` pair.
+///
+/// `theta.powf(...)` dominates the reference rotation's inner loop; the
+/// table hoists it to construction time so per-position application costs
+/// one `sin_cos` per frequency. Frequencies are computed with the exact
+/// expression `rope_inplace` uses, so rotations are bit-identical.
+#[derive(Debug, Clone)]
+pub struct RopeTable {
+    dim: usize,
+    inv_freq: Vec<f64>,
+}
+
+impl RopeTable {
+    pub fn new(dim: usize, theta: f64) -> RopeTable {
+        assert_eq!(dim % 2, 0, "RoPE dim must be even");
+        let inv_freq = (0..dim / 2)
+            .map(|i| 1.0 / theta.powf(2.0 * i as f64 / dim as f64))
+            .collect();
+        RopeTable { dim, inv_freq }
+    }
+
+    pub fn dim(&self) -> usize {
+        self.dim
+    }
+
+    /// In-place interleaved-pair rotation at `pos` over every `dim`-long
+    /// row of `x`. Bit-identical to `rope_inplace(x, dim, pos, theta)`.
+    pub fn apply(&self, x: &mut [f32], pos: i64) {
+        debug_assert_eq!(x.len() % self.dim, 0);
+        for row in x.chunks_exact_mut(self.dim) {
+            for (i, f) in self.inv_freq.iter().enumerate() {
+                let angle = pos as f64 * f;
+                let (sin64, cos64) = angle.sin_cos();
+                let (sin, cos) = (sin64 as f32, cos64 as f32);
+                let e = row[2 * i];
+                let o = row[2 * i + 1];
+                row[2 * i] = e * cos - o * sin;
+                row[2 * i + 1] = e * sin + o * cos;
+            }
+        }
+    }
+}
+
 /// Build one K compression cache entry from a *complete* block of pre-RoPE
 /// keys: {max,min,avg}-pool over the block, per-KV-head linear, RoPE at
 /// the block-start position.
@@ -40,11 +88,28 @@ pub fn rope_inplace(x: &mut [f32], dim: usize, pos: i64, theta: f64) {
 /// Returns [Hkv, dg].
 pub fn kcomp_entry(cfg: &ModelConfig, wk_gate: &[f32], k_block: &[f32],
                    block_size: usize, block_start: i64) -> Vec<f32> {
+    let rope = RopeTable::new(cfg.d_gate, cfg.rope_theta);
+    let mut pooled = Vec::new();
+    let mut out = vec![0f32; cfg.n_kv_heads * cfg.d_gate];
+    kcomp_entry_into(cfg, wk_gate, k_block, block_size, block_start, &rope,
+                     &mut pooled, &mut out);
+    out
+}
+
+/// Allocation-free variant of [`kcomp_entry`]: writes the [Hkv, dg] entry
+/// into `out` using the caller's cached `rope` table and `pooled` scratch
+/// (grown once, reused across flushes). The decode hot path
+/// (`KcompCache::flush_block`) calls this.
+pub fn kcomp_entry_into(cfg: &ModelConfig, wk_gate: &[f32], k_block: &[f32],
+                        block_size: usize, block_start: i64, rope: &RopeTable,
+                        pooled: &mut Vec<f32>, out: &mut [f32]) {
     let (hkv, dh, dg) = (cfg.n_kv_heads, cfg.head_dim, cfg.d_gate);
     debug_assert_eq!(k_block.len(), hkv * block_size * dh);
     debug_assert_eq!(wk_gate.len(), hkv * 3 * dh * dg);
-    let mut out = vec![0f32; hkv * dg];
-    let mut pooled = vec![0f32; 3 * dh];
+    debug_assert_eq!(out.len(), hkv * dg);
+    debug_assert_eq!(rope.dim(), dg);
+    out.fill(0.0);
+    pooled.resize(3 * dh, 0.0);
     for h in 0..hkv {
         let base = h * block_size * dh;
         for d in 0..dh {
@@ -72,9 +137,8 @@ pub fn kcomp_entry(cfg: &ModelConfig, wk_gate: &[f32], k_block: &[f32],
                 *oo += p * ww;
             }
         }
-        rope_inplace(o, dg, block_start, cfg.rope_theta);
+        rope.apply(o, block_start);
     }
-    out
 }
 
 /// Gate block scores (logits): q_gate · KC^T / sqrt(dg).
@@ -205,6 +269,47 @@ mod tests {
             qm.iter().zip(&kn).map(|(a, b)| a * b).sum::<f32>()
         };
         assert!((dot(9, 5) - dot(104, 100)).abs() < 1e-4);
+    }
+
+    #[test]
+    fn rope_table_bit_identical_to_reference() {
+        let mut rng = crate::util::rng::Rng::new(17);
+        for &dim in &[4usize, 8, 32] {
+            let table = RopeTable::new(dim, 10000.0);
+            for _ in 0..20 {
+                let mut a: Vec<f32> =
+                    (0..dim * 3).map(|_| rng.normal() as f32).collect();
+                let mut b = a.clone();
+                let pos = rng.below(100_000) as i64;
+                rope_inplace(&mut a, dim, pos, 10000.0);
+                table.apply(&mut b, pos);
+                assert_eq!(a, b, "dim={dim} pos={pos}");
+            }
+        }
+    }
+
+    #[test]
+    fn kcomp_entry_into_matches_alloc_version() {
+        let c = cfg();
+        let mut rng = crate::util::rng::Rng::new(23);
+        let bs = 4;
+        let k_block: Vec<f32> = (0..c.n_kv_heads * bs * c.head_dim)
+            .map(|_| rng.normal() as f32)
+            .collect();
+        let wk: Vec<f32> = (0..c.n_kv_heads * 3 * c.head_dim * c.d_gate)
+            .map(|_| rng.normal() as f32)
+            .collect();
+        let rope = RopeTable::new(c.d_gate, c.rope_theta);
+        let mut pooled = Vec::new();
+        let mut out = vec![0f32; c.n_kv_heads * c.d_gate];
+        for start in [0i64, 4, 12, 640] {
+            let expect = kcomp_entry(&c, &wk, &k_block, bs, start);
+            // Dirty `out` to prove the _into variant fully overwrites it.
+            out.fill(7.5);
+            kcomp_entry_into(&c, &wk, &k_block, bs, start, &rope, &mut pooled,
+                             &mut out);
+            assert_eq!(out, expect, "start={start}");
+        }
     }
 
     #[test]

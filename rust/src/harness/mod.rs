@@ -1,18 +1,33 @@
 //! Experiment harness: one runner per paper table/figure (DESIGN.md §4).
+//!
+//! Artifact/result path helpers and reporting are always available; the
+//! experiment runners and engine builders need the PJRT runtime and are
+//! gated behind the `pjrt` feature.
 
+#[cfg(feature = "pjrt")]
 pub mod experiments;
 pub mod report;
 
-use std::path::{Path, PathBuf};
+use std::path::PathBuf;
+#[cfg(feature = "pjrt")]
+use std::path::Path;
 
 use anyhow::{anyhow, Result};
 
+#[cfg(feature = "pjrt")]
 use crate::coordinator::{Engine, EngineConfig, Request};
+#[cfg(feature = "pjrt")]
 use crate::model::ParamStore;
+#[cfg(feature = "pjrt")]
 use crate::runtime::Runtime;
+#[cfg(feature = "pjrt")]
 use crate::train;
+#[cfg(feature = "pjrt")]
 use crate::util::rng::Rng;
-use crate::workload::reasoning::{generate, Episode, TaskConfig};
+#[cfg(feature = "pjrt")]
+use crate::workload::reasoning::{generate, Episode};
+use crate::workload::reasoning::TaskConfig;
+#[cfg(feature = "pjrt")]
 use crate::workload::Vocab;
 
 /// Locate the artifacts directory (env override for tests).
@@ -30,6 +45,7 @@ pub fn results_dir() -> PathBuf {
 
 /// Load the runtime + trained model parameters (falls back to the init
 /// checkpoint with a warning when no trained checkpoint exists).
+#[cfg(feature = "pjrt")]
 pub fn load_runtime_and_params(dir: &Path) -> Result<(Runtime, ParamStore)> {
     let rt = Runtime::load(dir)?;
     let trained = train::model_ckpt_path(dir);
@@ -45,6 +61,7 @@ pub fn load_runtime_and_params(dir: &Path) -> Result<(Runtime, ParamStore)> {
 }
 
 /// Load gate parameters for a block size (distilled checkpoint preferred).
+#[cfg(feature = "pjrt")]
 pub fn load_gates(rt: &Runtime, dir: &Path, block_size: usize) -> Result<ParamStore> {
     let distilled = train::gate_ckpt_path(dir, block_size);
     let path = if distilled.exists() {
@@ -76,6 +93,7 @@ pub struct EvalOutcome {
 }
 
 /// Evaluate `n` episodes of `task` on an engine (policy already set).
+#[cfg(feature = "pjrt")]
 pub fn eval_policy(engine: &mut Engine, task: TaskConfig, n: usize, seed: u64,
                    max_new: usize) -> Result<EvalOutcome> {
     let vocab = Vocab::default();
@@ -132,6 +150,7 @@ pub fn eval_policy(engine: &mut Engine, task: TaskConfig, n: usize, seed: u64,
 
 /// Build a fresh engine for one configuration. Share the `Rc<Runtime>`
 /// across engines to reuse the executable compile cache.
+#[cfg(feature = "pjrt")]
 pub fn build_engine(rt: &std::rc::Rc<Runtime>, dir: &Path,
                     ecfg: EngineConfig) -> Result<Engine> {
     let trained = train::model_ckpt_path(dir);

@@ -10,7 +10,7 @@
 //!      pre-RoPE keys pass through pooling + linear once and append one
 //!      entry.
 
-use crate::gate;
+use crate::gate::{self, RopeTable};
 use crate::model::ModelConfig;
 
 #[derive(Debug, Clone)]
@@ -20,7 +20,8 @@ pub struct KcompCache {
     dg: usize,
     block_size: usize,
     /// Completed entries, layout [n_complete, hkv, dg] (entry-major so an
-    /// append is a plain extend).
+    /// append is a plain extend). Capacity is reserved for the full
+    /// context up front so steady-state appends never reallocate.
     entries: Vec<f32>,
     n_complete: usize,
     /// Pending pre-RoPE keys of the current partial block:
@@ -28,20 +29,31 @@ pub struct KcompCache {
     pending: Vec<f32>,
     pending_tokens: usize,
     len: usize,
+    /// Cached per-(d_gate, theta) RoPE frequencies — kills the
+    /// `theta.powf(..)` in the flush inner loop.
+    rope: RopeTable,
+    /// Flush scratch: [hkv, block, dh] transpose of `pending`, plus the
+    /// 3*dh pooled row. Grown once, reused for every flushed block.
+    block_scratch: Vec<f32>,
+    pooled_scratch: Vec<f32>,
 }
 
 impl KcompCache {
     pub fn new(cfg: &ModelConfig, block_size: usize) -> KcompCache {
+        let max_blocks = cfg.max_seq.div_ceil(block_size);
         KcompCache {
             hkv: cfg.n_kv_heads,
             dh: cfg.head_dim,
             dg: cfg.d_gate,
             block_size,
-            entries: Vec::new(),
+            entries: Vec::with_capacity(max_blocks * cfg.n_kv_heads * cfg.d_gate),
             n_complete: 0,
             pending: Vec::with_capacity(block_size * cfg.n_kv_heads * cfg.head_dim),
             pending_tokens: 0,
             len: 0,
+            rope: RopeTable::new(cfg.d_gate, cfg.rope_theta),
+            block_scratch: Vec::new(),
+            pooled_scratch: Vec::new(),
         }
     }
 
@@ -83,18 +95,22 @@ impl KcompCache {
 
     fn flush_block(&mut self, cfg: &ModelConfig, wk_gate: &[f32]) {
         // Transpose pending [t, hkv, dh] -> [hkv, t, dh] for kcomp_entry.
-        let (bs, hkv, dh) = (self.block_size, self.hkv, self.dh);
-        let mut block = vec![0f32; hkv * bs * dh];
+        let (bs, hkv, dh, dg) = (self.block_size, self.hkv, self.dh, self.dg);
+        self.block_scratch.resize(hkv * bs * dh, 0.0);
         for t in 0..bs {
             for h in 0..hkv {
                 let src = (t * hkv + h) * dh;
                 let dst = (h * bs + t) * dh;
-                block[dst..dst + dh].copy_from_slice(&self.pending[src..src + dh]);
+                self.block_scratch[dst..dst + dh]
+                    .copy_from_slice(&self.pending[src..src + dh]);
             }
         }
         let start = (self.n_complete * self.block_size) as i64;
-        let entry = gate::kcomp_entry(cfg, wk_gate, &block, bs, start);
-        self.entries.extend_from_slice(&entry);
+        let off = self.entries.len();
+        self.entries.resize(off + hkv * dg, 0.0);
+        gate::kcomp_entry_into(cfg, wk_gate, &self.block_scratch, bs, start,
+                               &self.rope, &mut self.pooled_scratch,
+                               &mut self.entries[off..]);
         self.n_complete += 1;
         self.pending.clear();
         self.pending_tokens = 0;
@@ -108,8 +124,24 @@ impl KcompCache {
     /// Gate scores of `q_gate` ([hkv, dg]) against all complete entries.
     /// Returns per-head rows [hkv][n_complete].
     pub fn score(&self, cfg: &ModelConfig, q_gate: &[f32]) -> Vec<Vec<f32>> {
+        debug_assert_eq!(cfg.n_kv_heads, self.hkv);
+        let mut out = Vec::new();
+        self.score_into(q_gate, &mut out);
+        out
+    }
+
+    /// Allocation-free scoring into caller-owned rows: `out` is resized
+    /// to exactly [hkv][n_complete]; row `Vec`s retain their capacity
+    /// across calls, so a reused buffer stops allocating once the context
+    /// reaches steady state. Values are bit-identical to [`score`].
+    ///
+    /// [`score`]: KcompCache::score
+    pub fn score_into(&self, q_gate: &[f32], out: &mut Vec<Vec<f32>>) {
         let scale = 1.0 / (self.dg as f32).sqrt();
-        let mut out = vec![vec![0f32; self.n_complete]; self.hkv];
+        crate::util::buf::resize_rows(out, self.hkv);
+        for row in out.iter_mut() {
+            row.resize(self.n_complete, 0.0);
+        }
         for j in 0..self.n_complete {
             for h in 0..self.hkv {
                 let e = &self.entries[(j * self.hkv + h) * self.dg..][..self.dg];
@@ -121,8 +153,6 @@ impl KcompCache {
                 out[h][j] = dot * scale;
             }
         }
-        debug_assert_eq!(cfg.n_kv_heads, self.hkv);
-        out
     }
 
     /// Memory footprint in bytes (entries only — the paper's <1% claim).
@@ -229,6 +259,25 @@ mod tests {
             for j in 0..3 {
                 assert!((s[h][j] - flat[h * 3 + j]).abs() < 1e-6);
             }
+        }
+    }
+
+    #[test]
+    fn score_into_matches_score_and_reuses_rows() {
+        let c = cfg();
+        let mut rng = Rng::new(9);
+        let w = wk(&c, &mut rng);
+        let mut kc = KcompCache::new(&c, 4);
+        // Oversized stale buffer: must be truncated to hkv rows and the
+        // surviving rows fully overwritten.
+        let mut buf: Vec<Vec<f32>> = vec![vec![99.0; 7]; 5];
+        for t in 0..13 {
+            let k: Vec<f32> = (0..8).map(|_| rng.normal() as f32).collect();
+            kc.append(&c, &w, &k);
+            let qg: Vec<f32> = (0..8).map(|_| rng.normal() as f32).collect();
+            kc.score_into(&qg, &mut buf);
+            let expect = kc.score(&c, &qg);
+            assert_eq!(buf, expect, "t={t}");
         }
     }
 

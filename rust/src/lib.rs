@@ -18,6 +18,13 @@
 //!
 //! Python never runs on the request path: after `make artifacts` the
 //! binary is self-contained.
+//!
+//! Feature `pjrt` (off by default) enables everything that links against
+//! the PJRT CPU client via the `xla` crate: the runtime engine, the
+//! decode/serving coordinator, the training drivers, and the experiment
+//! harness. The default feature set is pure host Rust — gate math, sparse
+//! selection, KV caching, staging arenas, workloads, utilities — and
+//! builds/tests fully offline.
 
 pub mod coordinator;
 pub mod gate;
@@ -26,6 +33,7 @@ pub mod kvcache;
 pub mod model;
 pub mod runtime;
 pub mod sparse;
+#[cfg(feature = "pjrt")]
 pub mod train;
 pub mod util;
 pub mod workload;

@@ -126,7 +126,7 @@ impl Manifest {
             kbench_points,
             params: parse_param_list(j.get("params")?)?,
             gate_params: parse_param_list(j.get("gate_params")?)?,
-            executables: executables,
+            executables,
         })
     }
 

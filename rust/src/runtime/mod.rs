@@ -1,11 +1,17 @@
 //! PJRT runtime: loads `artifacts/manifest.json`, compiles the HLO-text
 //! executables on the CPU PJRT client (once per process), and provides a
 //! typed call interface over host tensors / resident device buffers.
+//!
+//! Only `engine` talks to PJRT (the `xla` crate); it is gated behind the
+//! `pjrt` feature so the pure-host layers (gate, sparse, kvcache, util,
+//! workload, staging arena) build and test fully offline by default.
 
+#[cfg(feature = "pjrt")]
 pub mod engine;
 pub mod manifest;
 pub mod tensor;
 
+#[cfg(feature = "pjrt")]
 pub use engine::{Arg, DeviceTensor, Runtime};
 pub use manifest::{ArgSpec, ExeSpec, Manifest};
 pub use tensor::{Data, HostTensor};

@@ -5,4 +5,5 @@ pub mod policy;
 pub mod quest;
 pub mod topk;
 
-pub use policy::{Policy, Selection};
+pub use policy::{Policy, SelKind, Selection, SelectionBuf};
+pub use topk::TopkScratch;

@@ -1,7 +1,7 @@
 //! Sparsity policies (§3.1) and the selection result consumed by the
 //! decode engine's gather step.
 
-use super::topk::{merge_mandatory, threshold_indices, top_p_indices, topk_indices};
+use super::topk::{merge_mandatory, threshold_into, TopkScratch};
 
 /// How KV blocks are selected at each decode step.
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -79,57 +79,152 @@ impl Selection {
     }
 }
 
+/// Discriminant of a [`SelectionBuf`] — mirrors [`Selection`] without
+/// owning row storage.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum SelKind {
+    #[default]
+    Dense,
+    Shared,
+    PerHead,
+}
+
+/// Reusable per-slot selection storage. The decode engine keeps one per
+/// batch slot: row `Vec`s retain their capacity across steps and layers,
+/// so steady-state selection performs no heap allocation, and the gather
+/// stage borrows rows as `&[i32]` instead of cloning a [`Selection`].
+#[derive(Debug, Clone, Default)]
+pub struct SelectionBuf {
+    kind: SelKind,
+    rows: Vec<Vec<i32>>,
+    n_rows: usize,
+}
+
+impl SelectionBuf {
+    pub fn new() -> SelectionBuf {
+        SelectionBuf::default()
+    }
+
+    pub fn kind(&self) -> SelKind {
+        self.kind
+    }
+
+    /// Mark this slot dense (no rows).
+    pub fn set_dense(&mut self) {
+        self.kind = SelKind::Dense;
+        self.n_rows = 0;
+    }
+
+    /// Start a Shared/PerHead selection with `n_rows` cleared rows.
+    pub fn begin(&mut self, kind: SelKind, n_rows: usize) {
+        debug_assert_ne!(kind, SelKind::Dense, "use set_dense()");
+        self.kind = kind;
+        if self.rows.len() < n_rows {
+            self.rows.resize_with(n_rows, Vec::new);
+        }
+        for row in &mut self.rows[..n_rows] {
+            row.clear();
+        }
+        self.n_rows = n_rows;
+    }
+
+    /// Active rows (ascending block indices each).
+    pub fn rows(&self) -> &[Vec<i32>] {
+        &self.rows[..self.n_rows]
+    }
+
+    pub fn row_mut(&mut self, r: usize) -> &mut Vec<i32> {
+        debug_assert!(r < self.n_rows);
+        &mut self.rows[r]
+    }
+
+    /// Max selected blocks across rows (drives the staging variant).
+    pub fn max_blocks(&self) -> usize {
+        self.rows().iter().map(|x| x.len()).max().unwrap_or(0)
+    }
+
+    /// Materialise as an owning [`Selection`] (diagnostics / tests).
+    pub fn as_selection(&self) -> Selection {
+        match self.kind {
+            SelKind::Dense => Selection::Dense,
+            SelKind::Shared => Selection::Shared(self.rows().to_vec()),
+            SelKind::PerHead => Selection::PerHead(self.rows().to_vec()),
+        }
+    }
+}
+
 /// Budget selection over per-head score rows (`scores[h]` has one entry
 /// per *complete* block). The partial-block index (if any) is always
 /// force-included (§3.2: "the last block is always activated").
 pub fn select_budget(scores: &[Vec<f32>], block_budget: usize,
                      partial_block: Option<i32>) -> Vec<Vec<i32>> {
-    scores
-        .iter()
-        .map(|row| {
-            // Reserve one slot for the mandatory partial block.
-            let k = if partial_block.is_some() {
-                block_budget.saturating_sub(1)
-            } else {
-                block_budget
-            };
-            let mut sel = topk_indices(row, k);
-            if let Some(p) = partial_block {
-                merge_mandatory(&mut sel, p);
-            }
-            sel
-        })
-        .collect()
+    let mut buf = SelectionBuf::new();
+    select_budget_into(scores, block_budget, partial_block,
+                       &mut TopkScratch::new(), &mut buf);
+    buf.rows().to_vec()
+}
+
+/// Allocation-free budget selection into a reused [`SelectionBuf`].
+pub fn select_budget_into(scores: &[Vec<f32>], block_budget: usize,
+                          partial_block: Option<i32>, topk: &mut TopkScratch,
+                          out: &mut SelectionBuf) {
+    out.begin(SelKind::Shared, scores.len());
+    // Reserve one slot for the mandatory partial block.
+    let k = if partial_block.is_some() {
+        block_budget.saturating_sub(1)
+    } else {
+        block_budget
+    };
+    for (h, row) in scores.iter().enumerate() {
+        let sel = out.row_mut(h);
+        topk.topk_into(row, k, sel);
+        if let Some(p) = partial_block {
+            merge_mandatory(sel, p);
+        }
+    }
 }
 
 /// Top-p selection over per-head softmaxed score rows.
 pub fn select_top_p(probs: &[Vec<f32>], p: f32,
                     partial_block: Option<i32>) -> Vec<Vec<i32>> {
-    probs
-        .iter()
-        .map(|row| {
-            let mut sel = top_p_indices(row, p);
-            if let Some(pb) = partial_block {
-                merge_mandatory(&mut sel, pb);
-            }
-            sel
-        })
-        .collect()
+    let mut buf = SelectionBuf::new();
+    select_top_p_into(probs, p, partial_block, &mut TopkScratch::new(), &mut buf);
+    buf.rows().to_vec()
+}
+
+/// Allocation-free top-p selection into a reused [`SelectionBuf`].
+pub fn select_top_p_into(probs: &[Vec<f32>], p: f32,
+                         partial_block: Option<i32>, topk: &mut TopkScratch,
+                         out: &mut SelectionBuf) {
+    out.begin(SelKind::Shared, probs.len());
+    for (h, row) in probs.iter().enumerate() {
+        let sel = out.row_mut(h);
+        topk.top_p_into(row, p, sel);
+        if let Some(pb) = partial_block {
+            merge_mandatory(sel, pb);
+        }
+    }
 }
 
 /// Threshold selection over per-head softmaxed score rows.
 pub fn select_threshold(probs: &[Vec<f32>], threshold: f32,
                         partial_block: Option<i32>) -> Vec<Vec<i32>> {
-    probs
-        .iter()
-        .map(|row| {
-            let mut sel = threshold_indices(row, threshold);
-            if let Some(p) = partial_block {
-                merge_mandatory(&mut sel, p);
-            }
-            sel
-        })
-        .collect()
+    let mut buf = SelectionBuf::new();
+    select_threshold_into(probs, threshold, partial_block, &mut buf);
+    buf.rows().to_vec()
+}
+
+/// Allocation-free threshold selection into a reused [`SelectionBuf`].
+pub fn select_threshold_into(probs: &[Vec<f32>], threshold: f32,
+                             partial_block: Option<i32>, out: &mut SelectionBuf) {
+    out.begin(SelKind::Shared, probs.len());
+    for (h, row) in probs.iter().enumerate() {
+        let sel = out.row_mut(h);
+        threshold_into(row, threshold, sel);
+        if let Some(p) = partial_block {
+            merge_mandatory(sel, p);
+        }
+    }
 }
 
 #[cfg(test)]
@@ -187,5 +282,50 @@ mod tests {
         let scores = vec![vec![1.0, 0.0], vec![0.0, 1.0]];
         let sel = select_budget(&scores, 1, None);
         assert_eq!(sel, vec![vec![0], vec![1]]);
+    }
+
+    #[test]
+    fn reused_buf_matches_fresh_selection() {
+        use crate::util::rng::Rng;
+        let mut rng = Rng::new(21);
+        let mut buf = SelectionBuf::new();
+        let mut topk = TopkScratch::new();
+        for step in 0..40 {
+            let heads = rng.range(1, 5);
+            let n = rng.range(1, 24);
+            let scores: Vec<Vec<f32>> = (0..heads)
+                .map(|_| (0..n).map(|_| rng.normal() as f32).collect())
+                .collect();
+            let partial = if rng.bool(0.5) { Some(n as i32) } else { None };
+            let b = rng.range(1, 8);
+            select_budget_into(&scores, b, partial, &mut topk, &mut buf);
+            assert_eq!(buf.kind(), SelKind::Shared);
+            assert_eq!(buf.rows(), &select_budget(&scores, b, partial)[..],
+                       "budget step={step}");
+            let t = rng.f32();
+            select_threshold_into(&scores, t, partial, &mut buf);
+            assert_eq!(buf.rows(), &select_threshold(&scores, t, partial)[..]);
+            let p = rng.f32();
+            select_top_p_into(&scores, p, partial, &mut topk, &mut buf);
+            assert_eq!(buf.rows(), &select_top_p(&scores, p, partial)[..]);
+        }
+    }
+
+    #[test]
+    fn selection_buf_shrinks_and_converts() {
+        let mut buf = SelectionBuf::new();
+        buf.begin(SelKind::PerHead, 4);
+        for r in 0..4 {
+            buf.row_mut(r).extend_from_slice(&[r as i32]);
+        }
+        assert_eq!(buf.max_blocks(), 1);
+        assert_eq!(buf.as_selection(),
+                   Selection::PerHead(vec![vec![0], vec![1], vec![2], vec![3]]));
+        // Fewer rows next step: stale rows must not leak into view.
+        buf.begin(SelKind::Shared, 2);
+        assert_eq!(buf.rows(), &[Vec::<i32>::new(), Vec::new()][..]);
+        buf.set_dense();
+        assert_eq!(buf.as_selection(), Selection::Dense);
+        assert_eq!(buf.max_blocks(), 0);
     }
 }

@@ -76,9 +76,21 @@ impl QuestMeta {
     /// Upper-bound scores for one *query head*'s query vector against
     /// every (partially) filled block of its kv head.
     pub fn scores(&self, kv_head: usize, q: &[f32]) -> Vec<f32> {
+        let mut out = Vec::new();
+        self.scores_into(kv_head, q, &mut out);
+        out
+    }
+
+    /// Allocation-free variant of [`scores`]: resizes `out` to the block
+    /// count and overwrites every entry, so a reused buffer stops
+    /// allocating once the context stops growing.
+    ///
+    /// [`scores`]: QuestMeta::scores
+    pub fn scores_into(&self, kv_head: usize, q: &[f32], out: &mut Vec<f32>) {
         debug_assert_eq!(q.len(), self.dh);
         let nblk = self.n_blocks();
-        let mut out = vec![0f32; nblk];
+        out.clear();
+        out.resize(nblk, 0.0);
         for (blk, o) in out.iter_mut().enumerate() {
             let base = ((kv_head * self.max_blocks + blk) * 2) * self.dh;
             let mut ub = 0f32;
@@ -171,6 +183,25 @@ mod tests {
         assert_eq!(s.len(), 2);
         assert!((s[0] - 100.0).abs() < 1e-5);
         assert!((s[1] + 1.0).abs() < 1e-5, "block 1 must not inherit block 0 max");
+    }
+
+    #[test]
+    fn scores_into_matches_scores() {
+        let c = cfg();
+        let mut rng = Rng::new(31);
+        let mut m = QuestMeta::new(&c, 4, 64);
+        let mut buf = vec![5.0f32; 3]; // stale content must be overwritten
+        for _ in 0..11 {
+            let k: Vec<f32> = (0..c.n_kv_heads * c.head_dim)
+                .map(|_| rng.normal() as f32)
+                .collect();
+            m.append(&k);
+            let q: Vec<f32> = (0..c.head_dim).map(|_| rng.normal() as f32).collect();
+            for h in 0..c.n_kv_heads {
+                m.scores_into(h, &q, &mut buf);
+                assert_eq!(buf, m.scores(h, &q));
+            }
+        }
     }
 
     #[test]

@@ -1,35 +1,140 @@
 //! Top-k / threshold block selection over gate scores.
+//!
+//! The decode hot path runs a selection per slot, per layer, per head at
+//! every token, so these are written to be allocation-free in steady
+//! state: [`TopkScratch`] owns a reusable index buffer and partitions it
+//! with `select_nth_unstable_by` (O(n) expected) instead of sorting the
+//! whole score row. The `Vec`-returning functions are thin wrappers kept
+//! for tests and callers off the hot path.
+
+use std::cmp::Ordering;
+
+/// Reusable scratch for partial top-k selection. One instance per
+/// selecting thread; the internal index buffer grows to the largest score
+/// row seen and is then reused allocation-free.
+#[derive(Debug, Default, Clone)]
+pub struct TopkScratch {
+    order: Vec<u32>,
+}
+
+/// Comparator: score descending, index ascending on ties — a total order
+/// (absent NaNs), which makes the partial-select prefix identical to the
+/// full-sort prefix.
+#[inline]
+fn by_score_desc(scores: &[f32], a: &u32, b: &u32) -> Ordering {
+    scores[*b as usize]
+        .partial_cmp(&scores[*a as usize])
+        .unwrap_or(Ordering::Equal)
+        .then(a.cmp(b))
+}
+
+impl TopkScratch {
+    pub fn new() -> TopkScratch {
+        TopkScratch::default()
+    }
+
+    fn fill_order(&mut self, n: usize) -> &mut [u32] {
+        self.order.clear();
+        self.order.extend(0..n as u32);
+        &mut self.order[..]
+    }
+
+    /// Indices of the `k` largest scores (ties broken toward lower
+    /// index), written to `out` in ascending index order. Produces
+    /// exactly what the seed's full-sort `topk_indices` produced, via an
+    /// O(n + k log k) partial selection.
+    pub fn topk_into(&mut self, scores: &[f32], k: usize, out: &mut Vec<i32>) {
+        out.clear();
+        let n = scores.len();
+        let k = k.min(n);
+        if k == 0 {
+            return;
+        }
+        let order = self.fill_order(n);
+        if k < n {
+            order.select_nth_unstable_by(k - 1, |a, b| by_score_desc(scores, a, b));
+        }
+        out.extend(order[..k].iter().map(|&i| i as i32));
+        out.sort_unstable();
+    }
+
+    /// Top-p (nucleus) selection over *softmaxed* scores: the smallest
+    /// set of blocks whose probability mass reaches `p` (at least one
+    /// block), ascending indices. Identical output to a full descending
+    /// sort + prefix scan; implemented as a doubling partial selection so
+    /// peaked distributions never sort the whole row.
+    pub fn top_p_into(&mut self, probs: &[f32], p: f32, out: &mut Vec<i32>) {
+        out.clear();
+        let n = probs.len();
+        if n == 0 {
+            return;
+        }
+        let mut k = 4.min(n);
+        loop {
+            let order = self.fill_order(n);
+            if k < n {
+                order.select_nth_unstable_by(k - 1, |a, b| by_score_desc(probs, a, b));
+            }
+            // The candidate prefix in exact descending-prob order (same
+            // order the reference accumulates in, so the f32 mass sum is
+            // bit-identical).
+            order[..k].sort_unstable_by(|a, b| by_score_desc(probs, a, b));
+            let mut mass = 0.0f32;
+            let mut taken = 0usize;
+            for &i in order[..k].iter() {
+                taken += 1;
+                mass += probs[i as usize];
+                if mass >= p {
+                    break;
+                }
+            }
+            if mass >= p || k == n {
+                out.extend(order[..taken].iter().map(|&i| i as i32));
+                out.sort_unstable();
+                return;
+            }
+            k = (k * 2).min(n);
+        }
+    }
+}
 
 /// Indices of the `k` largest scores (ties broken toward lower index),
-/// returned in ascending index order. O(n log n) on a scratch sort —
-/// n is blocks-per-context (tens), so this is never hot enough to need a
-/// partial select.
+/// returned in ascending index order.
 pub fn topk_indices(scores: &[f32], k: usize) -> Vec<i32> {
-    let k = k.min(scores.len());
-    if k == 0 {
-        return Vec::new();
-    }
-    let mut order: Vec<usize> = (0..scores.len()).collect();
-    order.sort_by(|&a, &b| {
-        scores[b]
-            .partial_cmp(&scores[a])
-            .unwrap_or(std::cmp::Ordering::Equal)
-            .then(a.cmp(&b))
-    });
-    let mut picked: Vec<i32> = order[..k].iter().map(|&i| i as i32).collect();
-    picked.sort_unstable();
-    picked
+    let mut out = Vec::new();
+    TopkScratch::new().topk_into(scores, k, &mut out);
+    out
 }
 
 /// Indices with score > threshold, ascending. The paper's threshold mode
 /// (§3.1) applies this to the softmaxed gate scores.
 pub fn threshold_indices(scores: &[f32], threshold: f32) -> Vec<i32> {
-    scores
-        .iter()
-        .enumerate()
-        .filter(|(_, s)| **s > threshold)
-        .map(|(i, _)| i as i32)
-        .collect()
+    let mut out = Vec::new();
+    threshold_into(scores, threshold, &mut out);
+    out
+}
+
+/// Allocation-free variant of [`threshold_indices`].
+pub fn threshold_into(scores: &[f32], threshold: f32, out: &mut Vec<i32>) {
+    out.clear();
+    out.extend(
+        scores
+            .iter()
+            .enumerate()
+            .filter(|(_, s)| **s > threshold)
+            .map(|(i, _)| i as i32),
+    );
+}
+
+/// Top-p (nucleus) block selection over *softmaxed* gate scores — the
+/// paper's §6.2 future-work direction (explored by Twilight/MagicPIG):
+/// pick the smallest set of blocks whose probability mass reaches `p`,
+/// adapting the sparsity ratio per head and per step. Returns ascending
+/// indices; always selects at least one block.
+pub fn top_p_indices(probs: &[f32], p: f32) -> Vec<i32> {
+    let mut out = Vec::new();
+    TopkScratch::new().top_p_into(probs, p, &mut out);
+    out
 }
 
 /// Merge a mandatory block index into a selection (keeps ascending order,
@@ -39,6 +144,14 @@ pub fn merge_mandatory(sel: &mut Vec<i32>, idx: i32) {
         Ok(_) => {}
         Err(pos) => sel.insert(pos, idx),
     }
+}
+
+/// How many entries of `sel` appear in the *ascending-sorted* `oracle`
+/// row. O(k log k) via binary search — replaces the engine's old
+/// O(k²) `contains` scan in recall accounting.
+pub fn count_hits_sorted(sel: &[i32], oracle: &[i32]) -> usize {
+    debug_assert!(oracle.windows(2).all(|w| w[0] < w[1]));
+    sel.iter().filter(|x| oracle.binary_search(x).is_ok()).count()
 }
 
 #[cfg(test)]
@@ -74,6 +187,28 @@ mod tests {
     }
 
     #[test]
+    fn topk_ties_break_toward_lower_index() {
+        // All-equal scores: partial selection must still pick the lowest
+        // indices, exactly like the seed's stable tie-break.
+        assert_eq!(topk_indices(&[1.0; 8], 3), vec![0, 1, 2]);
+        assert_eq!(topk_indices(&[2.0, 1.0, 2.0, 2.0, 1.0], 3), vec![0, 2, 3]);
+    }
+
+    #[test]
+    fn scratch_reuse_matches_fresh() {
+        let mut rng = Rng::new(12);
+        let mut scratch = TopkScratch::new();
+        let mut out = Vec::new();
+        for _ in 0..50 {
+            let n = rng.range(1, 64);
+            let k = rng.range(0, n + 2);
+            let scores: Vec<f32> = (0..n).map(|_| rng.normal() as f32).collect();
+            scratch.topk_into(&scores, k, &mut out);
+            assert_eq!(out, topk_indices(&scores, k));
+        }
+    }
+
+    #[test]
     fn threshold_selects_strictly_above() {
         let s = [0.1, 0.5, 0.5001, 0.9];
         assert_eq!(threshold_indices(&s, 0.5), vec![2, 3]);
@@ -90,40 +225,27 @@ mod tests {
         merge_mandatory(&mut v, 9);
         assert_eq!(v, vec![0, 1, 4, 7, 9]);
     }
-}
 
-/// Top-p (nucleus) block selection over *softmaxed* gate scores — the
-/// paper's §6.2 future-work direction (explored by Twilight/MagicPIG):
-/// pick the smallest set of blocks whose probability mass reaches `p`,
-/// adapting the sparsity ratio per head and per step. Returns ascending
-/// indices; always selects at least one block.
-pub fn top_p_indices(probs: &[f32], p: f32) -> Vec<i32> {
-    if probs.is_empty() {
-        return Vec::new();
-    }
-    let mut order: Vec<usize> = (0..probs.len()).collect();
-    order.sort_by(|&a, &b| {
-        probs[b]
-            .partial_cmp(&probs[a])
-            .unwrap_or(std::cmp::Ordering::Equal)
-            .then(a.cmp(&b))
-    });
-    let mut mass = 0.0f32;
-    let mut picked: Vec<i32> = Vec::new();
-    for &i in &order {
-        picked.push(i as i32);
-        mass += probs[i];
-        if mass >= p {
-            break;
+    #[test]
+    fn count_hits_sorted_matches_contains() {
+        let mut rng = Rng::new(13);
+        for _ in 0..100 {
+            let n = rng.range(1, 30);
+            let scores: Vec<f32> = (0..n).map(|_| rng.f32()).collect();
+            let k = rng.range(0, n + 1);
+            let oracle: Vec<i32> = topk_indices(&scores, k);
+            let m = rng.range(0, 12);
+            let sel: Vec<i32> = (0..m).map(|_| rng.below(n) as i32).collect();
+            let slow = sel.iter().filter(|x| oracle.contains(x)).count();
+            assert_eq!(count_hits_sorted(&sel, &oracle), slow);
         }
     }
-    picked.sort_unstable();
-    picked
 }
 
 #[cfg(test)]
 mod top_p_tests {
     use super::*;
+    use crate::util::rng::Rng;
 
     #[test]
     fn selects_minimal_prefix_of_mass() {
@@ -147,5 +269,44 @@ mod top_p_tests {
     fn always_at_least_one() {
         assert_eq!(top_p_indices(&[0.4, 0.6], 0.0), vec![1]);
         assert!(top_p_indices(&[], 0.9).is_empty());
+    }
+
+    #[test]
+    fn doubling_matches_full_sort_reference() {
+        // Reference: the seed's full-sort implementation.
+        fn reference(probs: &[f32], p: f32) -> Vec<i32> {
+            if probs.is_empty() {
+                return Vec::new();
+            }
+            let mut order: Vec<usize> = (0..probs.len()).collect();
+            order.sort_by(|&a, &b| {
+                probs[b]
+                    .partial_cmp(&probs[a])
+                    .unwrap_or(std::cmp::Ordering::Equal)
+                    .then(a.cmp(&b))
+            });
+            let mut mass = 0.0f32;
+            let mut picked: Vec<i32> = Vec::new();
+            for &i in &order {
+                picked.push(i as i32);
+                mass += probs[i];
+                if mass >= p {
+                    break;
+                }
+            }
+            picked.sort_unstable();
+            picked
+        }
+        let mut rng = Rng::new(14);
+        for _ in 0..100 {
+            let n = rng.range(1, 48);
+            let mut probs: Vec<f32> = (0..n).map(|_| rng.f32() + 1e-6).collect();
+            let total: f32 = probs.iter().sum();
+            for x in &mut probs {
+                *x /= total;
+            }
+            let p = rng.f32();
+            assert_eq!(top_p_indices(&probs, p), reference(&probs, p), "n={n} p={p}");
+        }
     }
 }

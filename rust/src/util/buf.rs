@@ -1,0 +1,37 @@
+//! Reusable-buffer idioms shared by the decode hot path.
+
+/// Resize a reusable nested-rows buffer to exactly `n` cleared rows.
+///
+/// Surviving rows keep their heap capacity, which is what makes the
+/// hot-path score/selection scratch allocation-free in steady state:
+/// with a constant `n` (e.g. the KV-head count) and stable row lengths,
+/// repeated calls never touch the allocator.
+pub fn resize_rows<T>(out: &mut Vec<Vec<T>>, n: usize) {
+    out.truncate(n);
+    while out.len() < n {
+        out.push(Vec::new());
+    }
+    for row in out.iter_mut() {
+        row.clear();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn grows_shrinks_and_retains_capacity() {
+        let mut rows: Vec<Vec<i32>> = Vec::new();
+        resize_rows(&mut rows, 3);
+        assert_eq!(rows, vec![Vec::<i32>::new(); 3]);
+        rows[0].extend_from_slice(&[1, 2, 3, 4]);
+        let cap = rows[0].capacity();
+        resize_rows(&mut rows, 2);
+        assert_eq!(rows.len(), 2);
+        assert!(rows.iter().all(|r| r.is_empty()));
+        assert_eq!(rows[0].capacity(), cap, "row capacity must survive");
+        resize_rows(&mut rows, 5);
+        assert_eq!(rows.len(), 5);
+    }
+}

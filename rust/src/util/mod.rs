@@ -2,6 +2,7 @@
 //! crate hand-rolls what would normally come from serde/rand/criterion).
 
 pub mod bench;
+pub mod buf;
 pub mod json;
 pub mod rng;
 pub mod stats;

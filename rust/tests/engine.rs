@@ -1,4 +1,6 @@
-//! Engine integration tests (need `make artifacts`; self-skip otherwise).
+//! Engine integration tests (need `make artifacts` and the `pjrt`
+//! feature; self-skip otherwise).
+#![cfg(feature = "pjrt")]
 //!
 //! The key correctness property: with the budget set to the whole
 //! context, every sparse policy must generate exactly the same tokens as

@@ -1,0 +1,320 @@
+//! Hot-path parity: the optimized decode-path implementations (partial
+//! top-k over a scratch buffer, `*_into` scoring, arena-based staged
+//! gather with dirty-extent clearing) must produce **bit-identical**
+//! results to the seed implementations, across random steps that reuse
+//! the same buffers. Pure host — runs under the default feature set.
+
+use seerattn::coordinator::StagingArena;
+use seerattn::kvcache::{PagedKvPool, SeqKv};
+use seerattn::sparse::policy::{select_budget, select_budget_into,
+                               select_threshold, select_threshold_into,
+                               select_top_p, select_top_p_into, SelKind,
+                               SelectionBuf};
+use seerattn::sparse::topk::{top_p_indices, topk_indices, TopkScratch};
+use seerattn::util::rng::Rng;
+
+// ---------------------------------------------------------------------
+// Seed reference implementations (full sort, fresh allocations) — kept
+// here verbatim so the optimized paths are checked against the original
+// behaviour, not against themselves.
+// ---------------------------------------------------------------------
+
+fn seed_topk(scores: &[f32], k: usize) -> Vec<i32> {
+    let k = k.min(scores.len());
+    if k == 0 {
+        return Vec::new();
+    }
+    let mut order: Vec<usize> = (0..scores.len()).collect();
+    order.sort_by(|&a, &b| {
+        scores[b]
+            .partial_cmp(&scores[a])
+            .unwrap_or(std::cmp::Ordering::Equal)
+            .then(a.cmp(&b))
+    });
+    let mut picked: Vec<i32> = order[..k].iter().map(|&i| i as i32).collect();
+    picked.sort_unstable();
+    picked
+}
+
+fn seed_top_p(probs: &[f32], p: f32) -> Vec<i32> {
+    if probs.is_empty() {
+        return Vec::new();
+    }
+    let mut order: Vec<usize> = (0..probs.len()).collect();
+    order.sort_by(|&a, &b| {
+        probs[b]
+            .partial_cmp(&probs[a])
+            .unwrap_or(std::cmp::Ordering::Equal)
+            .then(a.cmp(&b))
+    });
+    let mut mass = 0.0f32;
+    let mut picked: Vec<i32> = Vec::new();
+    for &i in &order {
+        picked.push(i as i32);
+        mass += probs[i];
+        if mass >= p {
+            break;
+        }
+    }
+    picked.sort_unstable();
+    picked
+}
+
+#[test]
+fn partial_select_topk_bit_identical_to_seed_sort() {
+    let mut rng = Rng::new(101);
+    let mut scratch = TopkScratch::new();
+    let mut out = Vec::new();
+    for _ in 0..300 {
+        let n = rng.range(1, 80);
+        let k = rng.range(0, n + 3);
+        // Include heavy ties to stress the tie-break.
+        let scores: Vec<f32> = (0..n)
+            .map(|_| if rng.bool(0.3) { 0.5 } else { rng.normal() as f32 })
+            .collect();
+        let expect = seed_topk(&scores, k);
+        assert_eq!(topk_indices(&scores, k), expect);
+        scratch.topk_into(&scores, k, &mut out);
+        assert_eq!(out, expect);
+    }
+}
+
+#[test]
+fn partial_select_top_p_bit_identical_to_seed_sort() {
+    let mut rng = Rng::new(102);
+    let mut scratch = TopkScratch::new();
+    let mut out = Vec::new();
+    for _ in 0..300 {
+        let n = rng.range(1, 80);
+        let mut probs: Vec<f32> = (0..n).map(|_| rng.f32() + 1e-6).collect();
+        let total: f32 = probs.iter().sum();
+        for x in &mut probs {
+            *x /= total;
+        }
+        let p = if rng.bool(0.1) { 1.5 } else { rng.f32() };
+        let expect = seed_top_p(&probs, p);
+        assert_eq!(top_p_indices(&probs, p), expect, "p={p}");
+        scratch.top_p_into(&probs, p, &mut out);
+        assert_eq!(out, expect, "p={p}");
+    }
+}
+
+#[test]
+fn select_into_reused_buffers_match_seed_selection() {
+    let mut rng = Rng::new(103);
+    let mut buf = SelectionBuf::new();
+    let mut topk = TopkScratch::new();
+    for _ in 0..200 {
+        let heads = rng.range(1, 6);
+        let n = rng.range(0, 32);
+        let scores: Vec<Vec<f32>> = (0..heads)
+            .map(|_| (0..n).map(|_| rng.normal() as f32).collect())
+            .collect();
+        let partial = if rng.bool(0.5) { Some(n as i32) } else { None };
+        let b = rng.range(1, 10);
+        select_budget_into(&scores, b, partial, &mut topk, &mut buf);
+        assert_eq!(buf.rows(), &select_budget(&scores, b, partial)[..]);
+        let t = rng.f32();
+        select_threshold_into(&scores, t, partial, &mut buf);
+        assert_eq!(buf.rows(), &select_threshold(&scores, t, partial)[..]);
+        let p = rng.f32();
+        select_top_p_into(&scores, p, partial, &mut topk, &mut buf);
+        assert_eq!(buf.rows(), &select_top_p(&scores, p, partial)[..]);
+    }
+}
+
+// ---------------------------------------------------------------------
+// Arena gather vs the seed's fresh-allocation gather.
+// ---------------------------------------------------------------------
+
+const BS: usize = 4;
+const HKV: usize = 2;
+const H_ALL: usize = 4;
+const G: usize = H_ALL / HKV;
+const DH: usize = 3;
+
+struct World {
+    pool: PagedKvPool,
+    seqs: Vec<SeqKv>,
+    rng: Rng,
+}
+
+impl World {
+    fn new(seed: u64, batch: usize) -> World {
+        let mut w = World {
+            pool: PagedKvPool::new(batch * 20, HKV, DH, BS),
+            seqs: (0..batch).map(|_| SeqKv::new()).collect(),
+            rng: Rng::new(seed),
+        };
+        for i in 0..batch {
+            let t = w.rng.range(1, 28);
+            w.grow(i, t);
+        }
+        w
+    }
+
+    fn grow(&mut self, i: usize, tokens: usize) {
+        for _ in 0..tokens {
+            let k: Vec<f32> = (0..HKV * DH).map(|_| self.rng.normal() as f32).collect();
+            let v: Vec<f32> = (0..HKV * DH).map(|_| self.rng.normal() as f32).collect();
+            self.seqs[i].append(&mut self.pool, &k, &v).unwrap();
+        }
+    }
+
+    /// Random ascending block selection that always includes the partial
+    /// last block (the §3.2 invariant the engine enforces).
+    fn random_rows(&mut self, i: usize, n_rows: usize) -> Vec<Vec<i32>> {
+        let nblk = self.seqs[i].n_blocks();
+        (0..n_rows)
+            .map(|_| {
+                let take = self.rng.range(1, nblk + 1);
+                let mut picked = self.rng.sample_distinct(nblk, take);
+                let last = nblk - 1;
+                if !picked.contains(&last) {
+                    picked.push(last);
+                }
+                picked.sort_unstable();
+                picked.into_iter().map(|b| b as i32).collect()
+            })
+            .collect()
+    }
+}
+
+/// The gather write pattern both implementations share.
+fn write_gather(pool: &PagedKvPool, seqs: &[SeqKv], sels: &[(SelKind, Vec<Vec<i32>>)],
+                per_head: bool, t_cap: usize, k: &mut [f32], v: &mut [f32],
+                mask: &mut [f32], dirty: Option<&mut [usize]>) {
+    let heads = if per_head { H_ALL } else { HKV };
+    let mut dirty = dirty;
+    for (i, seq) in seqs.iter().enumerate() {
+        let (kind, rows) = &sels[i];
+        for hr in 0..heads {
+            let row: &[i32] = match kind {
+                SelKind::Shared if per_head => &rows[hr / G],
+                SelKind::Shared | SelKind::PerHead => &rows[hr],
+                SelKind::Dense => unreachable!(),
+            };
+            let kv_head = if per_head { hr / G } else { hr };
+            let mut cursor = 0usize;
+            for &j in row {
+                let n = seq.tokens_in_block(j as usize, BS);
+                let pg = seq.pages[j as usize];
+                let off = ((i * heads + hr) * t_cap + cursor) * DH;
+                pool.gather_block(pg, kv_head, n, &mut k[off..off + n * DH],
+                                  &mut v[off..off + n * DH]);
+                let moff = (i * heads + hr) * t_cap + cursor;
+                mask[moff..moff + n].fill(1.0);
+                cursor += n;
+            }
+            if let Some(d) = dirty.as_deref_mut() {
+                d[i * heads + hr] = cursor;
+            }
+        }
+    }
+}
+
+#[test]
+fn arena_gather_bit_identical_to_fresh_alloc_gather() {
+    let batch = 2;
+    let mut w = World::new(104, batch);
+    let mut arena = StagingArena::new();
+    for step in 0..40 {
+        // Alternate Shared / PerHead / mixed batches and staging caps so
+        // the same arena sets are re-dirtied with different shapes.
+        let per_head = step % 3 == 1 || step % 3 == 2;
+        let mixed = step % 3 == 2;
+        let t_cap = if step % 2 == 0 { 8 * BS } else { 16 * BS };
+        let heads = if per_head { H_ALL } else { HKV };
+        let sels: Vec<(SelKind, Vec<Vec<i32>>)> = (0..batch)
+            .map(|i| {
+                if per_head && !(mixed && i == 0) {
+                    (SelKind::PerHead, w.random_rows(i, H_ALL))
+                } else {
+                    (SelKind::Shared, w.random_rows(i, HKV))
+                }
+            })
+            .collect();
+
+        // Reference: fresh zero-filled buffers (the seed behaviour).
+        let mut k_ref = vec![0f32; batch * heads * t_cap * DH];
+        let mut v_ref = vec![0f32; batch * heads * t_cap * DH];
+        let mut m_ref = vec![0f32; batch * heads * t_cap];
+        write_gather(&w.pool, &w.seqs, &sels, per_head, t_cap, &mut k_ref,
+                     &mut v_ref, &mut m_ref, None);
+
+        // Optimized: dirty-cleared persistent arena set. Comparing the
+        // *entire* buffers against the zero-seeded reference catches any
+        // stale bytes a buggy dirty-extent reset would leave behind.
+        let set = arena.sparse(batch, heads, t_cap, DH);
+        {
+            let (k, v, m, dirty) = set.parts_mut();
+            write_gather(&w.pool, &w.seqs, &sels, per_head, t_cap, k, v, m,
+                         Some(dirty));
+        }
+        assert_eq!(set.k.as_f32().unwrap(), &k_ref[..], "k step={step}");
+        assert_eq!(set.v.as_f32().unwrap(), &v_ref[..], "v step={step}");
+        assert_eq!(set.mask.as_f32().unwrap(), &m_ref[..], "mask step={step}");
+
+        // Contexts drift between steps (incl. across block boundaries) so
+        // partial last blocks move around. Lengths stay <= 8 blocks = 32
+        // tokens so every row fits the smallest staging cap.
+        for i in 0..batch {
+            if w.seqs[i].len < 27 {
+                let t = w.rng.range(0, 4);
+                w.grow(i, t);
+            }
+        }
+    }
+    // Two t_caps x two head counts = at most 4 sparse sets ever created.
+    assert!(arena.allocations() <= 4, "allocations {}", arena.allocations());
+}
+
+#[test]
+fn arena_dense_gather_matches_fresh_alloc() {
+    let batch = 2;
+    let s = 32;
+    let mut w = World::new(105, batch);
+    let mut arena = StagingArena::new();
+    for step in 0..20 {
+        let mut k_ref = vec![0f32; batch * HKV * s * DH];
+        let mut v_ref = vec![0f32; batch * HKV * s * DH];
+        let mut sl_ref = vec![0i32; batch];
+        for (i, seq) in w.seqs.iter().enumerate() {
+            sl_ref[i] = seq.len as i32;
+            for h in 0..HKV {
+                for (blk, &pg) in seq.pages.iter().enumerate() {
+                    let n = seq.tokens_in_block(blk, BS);
+                    let off = ((i * HKV + h) * s + blk * BS) * DH;
+                    w.pool.gather_block(pg, h, n, &mut k_ref[off..off + n * DH],
+                                        &mut v_ref[off..off + n * DH]);
+                }
+            }
+        }
+        let set = arena.dense(batch, HKV, s, DH);
+        {
+            let (k, v, sl, dirty) = set.parts_mut();
+            for (i, seq) in w.seqs.iter().enumerate() {
+                sl[i] = seq.len as i32;
+                for h in 0..HKV {
+                    for (blk, &pg) in seq.pages.iter().enumerate() {
+                        let n = seq.tokens_in_block(blk, BS);
+                        let off = ((i * HKV + h) * s + blk * BS) * DH;
+                        w.pool.gather_block(pg, h, n, &mut k[off..off + n * DH],
+                                            &mut v[off..off + n * DH]);
+                    }
+                    dirty[i * HKV + h] = seq.len;
+                }
+            }
+        }
+        assert_eq!(set.k.as_f32().unwrap(), &k_ref[..], "k step={step}");
+        assert_eq!(set.v.as_f32().unwrap(), &v_ref[..], "v step={step}");
+        assert_eq!(set.seq_len.as_i32().unwrap(), &sl_ref[..], "sl step={step}");
+        for i in 0..batch {
+            if w.seqs[i].len + 5 < s {
+                let t = w.rng.range(0, 5);
+                w.grow(i, t);
+            }
+        }
+    }
+    assert_eq!(arena.allocations(), 1);
+}

@@ -1,5 +1,7 @@
 //! Runtime-level integration: manifest-driven calls, shape validation,
-//! kernel executables vs Rust-computed references.
+//! kernel executables vs Rust-computed references. Needs the `pjrt`
+//! feature (and `make artifacts`; self-skips without the latter).
+#![cfg(feature = "pjrt")]
 
 use seerattn::harness;
 use seerattn::runtime::{Arg, HostTensor, Runtime};

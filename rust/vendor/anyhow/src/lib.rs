@@ -1,0 +1,154 @@
+//! Offline vendor stand-in for the `anyhow` crate.
+//!
+//! The build is fully offline (no registry), so this crate provides the
+//! exact subset the workspace uses — `Error`, `Result`, `anyhow!`,
+//! `bail!`, and `Context` — with the same semantics. Like the real
+//! crate, `Error` deliberately does **not** implement `std::error::Error`
+//! so the blanket `From<E: std::error::Error>` conversion (what makes
+//! `?` work on io/parse errors) does not conflict with the identity
+//! `From<Error>`. Swap this directory for the real vendored crate if a
+//! registry snapshot ever becomes available; no call sites change.
+
+use std::fmt;
+
+/// Error: an owned message plus an optional boxed source chain.
+pub struct Error {
+    msg: String,
+    source: Option<Box<dyn std::error::Error + Send + Sync + 'static>>,
+}
+
+impl Error {
+    /// Construct from a message (what `anyhow!` expands to).
+    pub fn msg<M: fmt::Display>(m: M) -> Error {
+        Error { msg: m.to_string(), source: None }
+    }
+
+    /// Construct from a concrete error value.
+    pub fn new<E: std::error::Error + Send + Sync + 'static>(e: E) -> Error {
+        Error { msg: e.to_string(), source: Some(Box::new(e)) }
+    }
+
+    fn wrap<C: fmt::Display>(self, context: C) -> Error {
+        Error { msg: format!("{context}: {}", self.msg), source: self.source }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)?;
+        if let Some(src) = &self.source {
+            let mut cur: Option<&(dyn std::error::Error + 'static)> = src.source();
+            if cur.is_some() {
+                write!(f, "\n\nCaused by:")?;
+            }
+            while let Some(e) = cur {
+                write!(f, "\n    {e}")?;
+                cur = e.source();
+            }
+        }
+        Ok(())
+    }
+}
+
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Error {
+        Error::new(e)
+    }
+}
+
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Attach lazy context to an error, exactly like anyhow's trait.
+pub trait Context<T> {
+    fn context<C: fmt::Display + Send + Sync + 'static>(self, c: C) -> Result<T>;
+    fn with_context<C, F>(self, f: F) -> Result<T>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C;
+}
+
+impl<T, E: Into<Error>> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display + Send + Sync + 'static>(self, c: C) -> Result<T> {
+        self.map_err(|e| e.into().wrap(c))
+    }
+
+    fn with_context<C, F>(self, f: F) -> Result<T>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C,
+    {
+        self.map_err(|e| e.into().wrap(f()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display + Send + Sync + 'static>(self, c: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(c))
+    }
+
+    fn with_context<C, F>(self, f: F) -> Result<T>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C,
+    {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// `anyhow!("fmt", args..)` — build an [`Error`] from a format string.
+#[macro_export]
+macro_rules! anyhow {
+    ($($arg:tt)*) => {
+        $crate::Error::msg(format!($($arg)*))
+    };
+}
+
+/// `bail!("fmt", args..)` — early-return `Err(anyhow!(..))`.
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_fail() -> Result<String> {
+        let s = std::fs::read_to_string("/definitely/not/a/file")?;
+        Ok(s)
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        let e = io_fail().unwrap_err();
+        assert!(!e.to_string().is_empty());
+    }
+
+    #[test]
+    fn bail_and_anyhow_format() {
+        fn f(x: usize) -> Result<usize> {
+            if x == 0 {
+                bail!("zero not allowed (got {x})");
+            }
+            Ok(x)
+        }
+        assert_eq!(f(3).unwrap(), 3);
+        assert_eq!(f(0).unwrap_err().to_string(), "zero not allowed (got 0)");
+    }
+
+    #[test]
+    fn context_wraps_message() {
+        let e = io_fail().with_context(|| "loading config").unwrap_err();
+        assert!(e.to_string().starts_with("loading config: "), "{e}");
+        let e = io_fail().context("plain").unwrap_err();
+        assert!(e.to_string().starts_with("plain: "));
+    }
+}

@@ -1,0 +1,131 @@
+//! Offline API stub of the `xla` (xla-rs) PJRT bindings.
+//!
+//! The container has no registry snapshot or PJRT plugin, so this crate
+//! lets the `pjrt` feature *type-check and build* offline: it mirrors the
+//! exact API surface `runtime::engine` uses and returns a descriptive
+//! [`XlaError`] from every entry point at runtime. To actually execute
+//! HLO, replace this directory with the real vendored `xla` crate — no
+//! call sites change.
+
+use std::borrow::Borrow;
+
+#[derive(Debug, Clone)]
+pub struct XlaError(pub String);
+
+type XResult<T> = std::result::Result<T, XlaError>;
+
+fn no_backend<T>(what: &str) -> XResult<T> {
+    Err(XlaError(format!(
+        "{what}: the vendored xla stub has no PJRT backend; vendor the real \
+         xla-rs crate at rust/vendor/xla to run executables"
+    )))
+}
+
+/// Element dtype of a literal. Marked non-exhaustive like the real
+/// bindings, so downstream matches keep a wildcard arm.
+#[non_exhaustive]
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ElementType {
+    Pred,
+    S32,
+    S64,
+    F32,
+    F64,
+}
+
+/// Element types transferable to/from host buffers.
+pub trait NativeType: Copy {}
+impl NativeType for f32 {}
+impl NativeType for f64 {}
+impl NativeType for i32 {}
+impl NativeType for i64 {}
+impl NativeType for u8 {}
+
+#[derive(Debug)]
+pub struct PjRtBuffer(());
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> XResult<Literal> {
+        no_backend("to_literal_sync")
+    }
+}
+
+#[derive(Debug)]
+pub struct PjRtLoadedExecutable(());
+
+impl PjRtLoadedExecutable {
+    pub fn execute_b<T: Borrow<PjRtBuffer>>(&self, _args: &[T])
+                                            -> XResult<Vec<Vec<PjRtBuffer>>> {
+        no_backend("execute_b")
+    }
+}
+
+#[derive(Debug)]
+pub struct PjRtClient(());
+
+impl PjRtClient {
+    pub fn cpu() -> XResult<PjRtClient> {
+        no_backend("PjRtClient::cpu")
+    }
+
+    pub fn buffer_from_host_buffer<T: NativeType>(
+        &self, _data: &[T], _dims: &[usize], _device: Option<usize>,
+    ) -> XResult<PjRtBuffer> {
+        no_backend("buffer_from_host_buffer")
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> XResult<PjRtLoadedExecutable> {
+        no_backend("compile")
+    }
+}
+
+#[derive(Debug)]
+pub struct HloModuleProto(());
+
+impl HloModuleProto {
+    pub fn from_text_file(_path: &str) -> XResult<HloModuleProto> {
+        no_backend("HloModuleProto::from_text_file")
+    }
+}
+
+#[derive(Debug)]
+pub struct XlaComputation(());
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation(())
+    }
+}
+
+#[derive(Debug)]
+pub struct ArrayShape {
+    dims: Vec<i64>,
+    ty: ElementType,
+}
+
+impl ArrayShape {
+    pub fn dims(&self) -> &[i64] {
+        &self.dims
+    }
+
+    pub fn ty(&self) -> ElementType {
+        self.ty
+    }
+}
+
+#[derive(Debug)]
+pub struct Literal(());
+
+impl Literal {
+    pub fn array_shape(&self) -> XResult<ArrayShape> {
+        no_backend("array_shape")
+    }
+
+    pub fn decompose_tuple(&mut self) -> XResult<Vec<Literal>> {
+        no_backend("decompose_tuple")
+    }
+
+    pub fn to_vec<T: NativeType>(&self) -> XResult<Vec<T>> {
+        no_backend("to_vec")
+    }
+}

@@ -1,0 +1,25 @@
+#!/usr/bin/env bash
+# Benchmark runner: executes the host-side benches with fixed seeds and
+# rewrites BENCH_decode.json at the repo root. Exits nonzero on failure
+# (including the decode bench's zero-steady-state-allocation assertion).
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+export SEERATTN_BENCH_SEED="${SEERATTN_BENCH_SEED:-17}"
+
+echo "== decode_hot_path (seed ${SEERATTN_BENCH_SEED}; writes BENCH_decode.json) =="
+cargo bench --manifest-path rust/Cargo.toml --bench decode_hot_path
+
+echo "== gate_overhead =="
+cargo bench --manifest-path rust/Cargo.toml --bench gate_overhead
+
+# The end-to-end coordinator bench needs the pjrt feature, a real xla
+# backend in rust/vendor/xla, and `make artifacts`; opt in explicitly.
+if [[ "${SEERATTN_PJRT_BENCH:-0}" == "1" ]]; then
+  echo "== coordinator (pjrt) =="
+  cargo bench --manifest-path rust/Cargo.toml --features pjrt --bench coordinator
+else
+  echo "== coordinator (pjrt) skipped: set SEERATTN_PJRT_BENCH=1 to run =="
+fi
+
+echo "bench.sh: done; BENCH_decode.json updated"

@@ -1,0 +1,24 @@
+#!/usr/bin/env bash
+# Repo check gate: formatting, lints (deny warnings), and the offline test
+# suite on the default feature set. Exits nonzero on any failure.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+echo "== cargo fmt --check =="
+cargo fmt --check --manifest-path rust/Cargo.toml
+
+echo "== cargo clippy (default features, -D warnings) =="
+cargo clippy --manifest-path rust/Cargo.toml --all-targets -- -D warnings
+
+echo "== cargo test -q (default features) =="
+cargo test -q --manifest-path rust/Cargo.toml
+
+# The pjrt feature compiles against the vendored xla API stub; build-check
+# it so feature-gated code cannot rot, but skip when requested (e.g. very
+# old toolchains).
+if [[ "${SEERATTN_SKIP_PJRT_CHECK:-0}" != "1" ]]; then
+  echo "== cargo check --features pjrt (API-stub build) =="
+  cargo check --manifest-path rust/Cargo.toml --features pjrt --all-targets
+fi
+
+echo "check.sh: all green"
