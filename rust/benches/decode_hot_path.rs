@@ -17,9 +17,9 @@
 //! Writes `BENCH_decode.json` at the repo root (next PRs diff against
 //! it). Everything is seeded; pure host code, no PJRT needed.
 
-use std::alloc::{GlobalAlloc, Layout, System};
-use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
-
+use seerattn::coordinator::gather::{gather_one_dense, gather_one_sparse,
+                                    gather_sparse_into, DenseGeom, GatherJob,
+                                    SparseGeom};
 use seerattn::coordinator::StagingArena;
 use seerattn::gate;
 use seerattn::kvcache::{KcompCache, PagedKvPool, SeqKv};
@@ -29,59 +29,16 @@ use seerattn::sparse::policy::{select_budget, select_budget_into,
                                SelKind, SelectionBuf};
 use seerattn::sparse::quest::QuestMeta;
 use seerattn::sparse::topk::{merge_mandatory, topk_indices, TopkScratch};
+use seerattn::util::alloc_count::{count_allocs, CountingAlloc};
 use seerattn::util::bench::bench;
 use seerattn::util::json::Json;
 use seerattn::util::rng::Rng;
 
-// ---------------------------------------------------------------------
-// Counting allocator: only counts while armed, so the harness's own
-// bookkeeping (Series pushes, JSON building) stays out of the tally.
-// ---------------------------------------------------------------------
-
-static ALLOCS: AtomicU64 = AtomicU64::new(0);
-static ARMED: AtomicBool = AtomicBool::new(false);
-
-struct CountingAlloc;
-
-unsafe impl GlobalAlloc for CountingAlloc {
-    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
-        if ARMED.load(Ordering::Relaxed) {
-            ALLOCS.fetch_add(1, Ordering::Relaxed);
-        }
-        System.alloc(layout)
-    }
-
-    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
-        if ARMED.load(Ordering::Relaxed) {
-            ALLOCS.fetch_add(1, Ordering::Relaxed);
-        }
-        System.alloc_zeroed(layout)
-    }
-
-    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
-        if ARMED.load(Ordering::Relaxed) {
-            ALLOCS.fetch_add(1, Ordering::Relaxed);
-        }
-        System.realloc(ptr, layout, new_size)
-    }
-
-    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
-        System.dealloc(ptr, layout)
-    }
-}
-
+// Counting allocator (shared harness, see util::alloc_count): only
+// counts while armed, so the bench's own bookkeeping (Series pushes,
+// JSON building) stays out of the tally.
 #[global_allocator]
 static GLOBAL: CountingAlloc = CountingAlloc;
-
-/// Run `f` with allocation counting armed; returns the allocation count.
-fn count_allocs<F: FnMut()>(mut f: F) -> u64 {
-    ARMED.store(true, Ordering::SeqCst);
-    let before = ALLOCS.load(Ordering::SeqCst);
-    f();
-    let after = ALLOCS.load(Ordering::SeqCst);
-    ARMED.store(false, Ordering::SeqCst);
-    after - before
-}
 
 // ---------------------------------------------------------------------
 // Synthetic decode-step state (mirrors one engine layer at full batch).
@@ -246,24 +203,24 @@ fn hot_step(fx: &Fixture, policy: BenchPolicy, st: &mut HotState) -> u64 {
             }
         }
     }
-    // Gather.
+    // Gather — through the exact production helpers the engine's serial
+    // path uses (coordinator::gather), so the bench times the shipped
+    // gather code, not a copy of it.
     let mut staged = 0u64;
     if policy == BenchPolicy::Dense {
         let s = c.max_seq;
         let set = st.arena.dense(BATCH, hkv, s, dh);
+        let geom = DenseGeom { hkv, block_size: bs, max_seq: s, dh };
         let (kc, vc, seq_len, dirty) = set.parts_mut();
+        let row_kv = hkv * s * dh;
         for (i, slot) in fx.slots.iter().enumerate() {
-            seq_len[i] = slot.kv.len as i32;
-            for h in 0..hkv {
-                for (blk, &pg) in slot.kv.pages.iter().enumerate() {
-                    let n = slot.kv.tokens_in_block(blk, bs);
-                    let off = ((i * hkv + h) * s + blk * bs) * dh;
-                    fx.pool.gather_block(pg, h, n, &mut kc[off..off + n * dh],
-                                         &mut vc[off..off + n * dh]);
-                    staged += 2 * (n * dh * 4) as u64;
-                }
-                dirty[i * hkv + h] = slot.kv.len;
-            }
+            let job = GatherJob { row: i, kv: &slot.kv, sel: &st.sel_bufs[i] };
+            gather_one_dense(&fx.pool, &job, &geom,
+                             &mut kc[i * row_kv..(i + 1) * row_kv],
+                             &mut vc[i * row_kv..(i + 1) * row_kv],
+                             &mut seq_len[i..i + 1],
+                             &mut dirty[i * hkv..(i + 1) * hkv]);
+            staged += 2 * (slot.kv.len * dh * 4) as u64 * hkv as u64;
         }
     } else {
         let per_head = policy == BenchPolicy::Quest;
@@ -280,31 +237,20 @@ fn hot_step(fx: &Fixture, policy: BenchPolicy, st: &mut HotState) -> u64 {
         }
         let t_cap = sel_variant_for(max_tokens);
         let set = st.arena.sparse(BATCH, heads, t_cap, dh);
+        let geom = SparseGeom { heads, group: g, per_head, block_size: bs,
+                                t_cap, dh };
         let (k_sel, v_sel, mask, dirty) = set.parts_mut();
+        let row_kv = heads * t_cap * dh;
+        let row_m = heads * t_cap;
         for (i, slot) in fx.slots.iter().enumerate() {
-            let buf = &st.sel_bufs[i];
-            for hr in 0..heads {
-                let row: &[i32] = match buf.kind() {
-                    SelKind::Shared => &buf.rows()[hr],
-                    SelKind::PerHead => &buf.rows()[hr],
-                    SelKind::Dense => unreachable!(),
-                };
-                let kv_head = if per_head { hr / g } else { hr };
-                let mut cursor = 0usize;
-                for &j in row {
-                    let n = slot.kv.tokens_in_block(j as usize, bs);
-                    let pg = slot.kv.pages[j as usize];
-                    let off = ((i * heads + hr) * t_cap + cursor) * dh;
-                    fx.pool.gather_block(pg, kv_head, n,
-                                         &mut k_sel[off..off + n * dh],
-                                         &mut v_sel[off..off + n * dh]);
-                    let moff = (i * heads + hr) * t_cap + cursor;
-                    mask[moff..moff + n].fill(1.0);
-                    cursor += n;
-                    staged += 2 * (n * dh * 4) as u64;
-                }
-                dirty[i * heads + hr] = cursor;
-            }
+            let job = GatherJob { row: i, kv: &slot.kv, sel: &st.sel_bufs[i] };
+            gather_one_sparse(&fx.pool, &job, &geom,
+                              &mut k_sel[i * row_kv..(i + 1) * row_kv],
+                              &mut v_sel[i * row_kv..(i + 1) * row_kv],
+                              &mut mask[i * row_m..(i + 1) * row_m],
+                              &mut dirty[i * heads..(i + 1) * heads]);
+            let t: usize = dirty[i * heads..(i + 1) * heads].iter().sum();
+            staged += 2 * (t * dh * 4) as u64;
         }
     }
     staged
@@ -496,6 +442,93 @@ fn main() {
         ));
     }
 
+    // ------------------------------------------------------------------
+    // Gather fan-out: serial vs scoped-thread parallel gather over the
+    // arena's disjoint per-slot rows (same inner code; see
+    // coordinator::gather). Selection state comes from one GateBudget
+    // pass; correctness (bit-identity) is asserted before timing.
+    // ------------------------------------------------------------------
+    let gather_json = {
+        let mut st = HotState::default();
+        hot_step(&fx, BenchPolicy::GateBudget, &mut st);
+        let c = &fx.c;
+        let (hkv, dh, bs) = (c.n_kv_heads, c.head_dim, c.block_size);
+        let mut max_tokens = 1usize;
+        for (i, buf) in st.sel_bufs[..BATCH].iter().enumerate() {
+            for row in buf.rows() {
+                let t: usize = row
+                    .iter()
+                    .map(|&j| fx.slots[i].kv.tokens_in_block(j as usize, bs))
+                    .sum();
+                max_tokens = max_tokens.max(t);
+            }
+        }
+        let t_cap = sel_variant_for(max_tokens);
+        let geom = SparseGeom { heads: hkv, group: c.group_size, per_head: false,
+                                block_size: bs, t_cap, dh };
+        let jobs: Vec<GatherJob> = (0..BATCH)
+            .map(|i| GatherJob { row: i, kv: &fx.slots[i].kv, sel: &st.sel_bufs[i] })
+            .collect();
+        let threads = std::thread::available_parallelism()
+            .map(|n| n.get().min(4))
+            .unwrap_or(2)
+            .max(2);
+        let mut serial_arena = StagingArena::new();
+        let mut parallel_arena = StagingArena::new();
+        let row_kv = hkv * t_cap * dh;
+        let row_m = hkv * t_cap;
+        let serial_pass = |arena: &mut StagingArena| {
+            let set = arena.sparse(BATCH, hkv, t_cap, dh);
+            let (k, v, m, d) = set.parts_mut();
+            for job in &jobs {
+                let r = job.row;
+                gather_one_sparse(&fx.pool, job, &geom,
+                                  &mut k[r * row_kv..(r + 1) * row_kv],
+                                  &mut v[r * row_kv..(r + 1) * row_kv],
+                                  &mut m[r * row_m..(r + 1) * row_m],
+                                  &mut d[r * hkv..(r + 1) * hkv]);
+            }
+        };
+        let parallel_pass = |arena: &mut StagingArena| {
+            let set = arena.sparse(BATCH, hkv, t_cap, dh);
+            let (k, v, m, d) = set.parts_mut();
+            gather_sparse_into(&fx.pool, &jobs, &geom, k, v, m, d, threads);
+        };
+        // Bit-identity before timing — runs the *same* closures the
+        // benchmark times, then compares the staged sets via the
+        // non-resetting peek accessors.
+        serial_pass(&mut serial_arena);
+        parallel_pass(&mut parallel_arena);
+        {
+            let sset = serial_arena.sparse_peek(hkv, t_cap).unwrap();
+            let pset = parallel_arena.sparse_peek(hkv, t_cap).unwrap();
+            assert_eq!(pset.k.as_f32().unwrap(), sset.k.as_f32().unwrap(),
+                       "parallel gather k diverged");
+            assert_eq!(pset.v.as_f32().unwrap(), sset.v.as_f32().unwrap(),
+                       "parallel gather v diverged");
+            assert_eq!(pset.mask.as_f32().unwrap(), sset.mask.as_f32().unwrap(),
+                       "parallel gather mask diverged");
+            assert_eq!(pset.dirty(), sset.dirty(), "parallel gather dirty diverged");
+        }
+        let serial = bench("gather serial", 5, 40, 0.3, || {
+            serial_pass(&mut serial_arena);
+        });
+        let parallel = bench(&format!("gather {threads} threads"), 5, 40, 0.3, || {
+            parallel_pass(&mut parallel_arena);
+        });
+        println!("{}", serial.report());
+        println!("{}", parallel.report());
+        let speedup = serial.median_s / parallel.median_s.max(1e-12);
+        println!("  -> gather fan-out x{speedup:.2} at {threads} threads \
+                  (batch {BATCH})\n");
+        Json::obj(vec![
+            ("threads", Json::Num(threads as f64)),
+            ("serial_median_ms", Json::Num(serial.median_s * 1e3)),
+            ("parallel_median_ms", Json::Num(parallel.median_s * 1e3)),
+            ("speedup", Json::Num(speedup)),
+        ])
+    };
+
     let out = Json::obj(vec![
         ("bench", Json::Str("decode_hot_path".into())),
         ("seed", Json::Num(seed as f64)),
@@ -509,6 +542,7 @@ fn main() {
             ("head_dim", Json::Num(fx.c.head_dim as f64)),
         ])),
         ("steady_state_allocs_total", Json::Num(total_allocs as f64)),
+        ("gather", gather_json),
         ("policies", Json::Obj(
             policy_json.into_iter().collect(),
         )),

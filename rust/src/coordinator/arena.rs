@@ -83,6 +83,12 @@ impl SparseStaging {
         let m = f32_mut(&mut self.mask);
         (k, v, m, &mut self.dirty[..])
     }
+
+    /// Staged token counts per `(b, head)` row from the last gather
+    /// (sparsity / I/O accounting reads these after the write pass).
+    pub fn dirty(&self) -> &[usize] {
+        &self.dirty
+    }
 }
 
 /// Dense staging: `k`/`v` are `[b, hkv, s, dh]`, `seq_len` is `[b]` i32.
@@ -138,6 +144,82 @@ impl DenseStaging {
         };
         (k, v, sl, &mut self.dirty[..])
     }
+
+    /// Staged token counts per `(b, kv head)` row from the last gather.
+    pub fn dirty(&self) -> &[usize] {
+        &self.dirty
+    }
+}
+
+/// Prefill staging: the padded `ids [b, s]` / `seq_len [b]` batch tensors
+/// plus the per-token `krow`/`vrow`/`prow` scatter rows the prefill loop
+/// copies layer outputs through. The seed engine allocated all five per
+/// `admit_and_prefill` call; holding them here extends the decode path's
+/// arena discipline to prefill — `ids` is dirty-extent cleared (only the
+/// token spans written for the previously admitted slots), `seq_len` is
+/// `[b]` and cleared whole, and the rows are plain reused scratch.
+pub struct PrefillStaging {
+    pub ids: HostTensor,     // [b, s] i32
+    pub seq_len: HostTensor, // [b] i32
+    krow: Vec<f32>,
+    vrow: Vec<f32>,
+    prow: Vec<f32>,
+    /// Prompt tokens written per batch row at the last use.
+    dirty: Vec<usize>,
+    s: usize,
+}
+
+impl PrefillStaging {
+    fn new(b: usize, s: usize, row_elems: usize) -> PrefillStaging {
+        PrefillStaging {
+            ids: HostTensor::i32(vec![b, s], vec![0; b * s]),
+            seq_len: HostTensor::i32(vec![b], vec![0; b]),
+            krow: vec![0.0; row_elems],
+            vrow: vec![0.0; row_elems],
+            prow: vec![0.0; row_elems],
+            dirty: vec![0; b],
+            s,
+        }
+    }
+
+    fn reset(&mut self) {
+        let s = self.s;
+        let ids = match &mut self.ids.data {
+            Data::I32(x) => x.as_mut_slice(),
+            Data::F32(_) => unreachable!("ids are i32"),
+        };
+        for (r, d) in self.dirty.iter_mut().enumerate() {
+            if *d > 0 {
+                ids[r * s..r * s + *d].fill(0);
+                *d = 0;
+            }
+        }
+        if let Data::I32(sl) = &mut self.seq_len.data {
+            sl.fill(0);
+        }
+    }
+
+    /// Mutable views `(ids, seq_len, dirty)`: the caller writes each
+    /// admitted slot's prompt into `ids[i*s..]`, its length into
+    /// `seq_len[i]`, and records the length in `dirty[i]` for the next
+    /// acquire's clear.
+    pub fn ids_mut(&mut self) -> (&mut [i32], &mut [i32], &mut [usize]) {
+        let ids = match &mut self.ids.data {
+            Data::I32(x) => x.as_mut_slice(),
+            Data::F32(_) => unreachable!("ids are i32"),
+        };
+        let sl = match &mut self.seq_len.data {
+            Data::I32(x) => x.as_mut_slice(),
+            Data::F32(_) => unreachable!("seq_len is i32"),
+        };
+        (ids, sl, &mut self.dirty[..])
+    }
+
+    /// The `(krow, vrow, prow)` per-token scatter rows (`[hkv * dh]`
+    /// each), overwritten for every token of the prefill scatter loop.
+    pub fn rows_mut(&mut self) -> (&mut [f32], &mut [f32], &mut [f32]) {
+        (&mut self.krow[..], &mut self.vrow[..], &mut self.prow[..])
+    }
 }
 
 /// Engine-owned arena: one [`SparseStaging`] per `(heads, t_cap)` shape
@@ -148,6 +230,7 @@ impl DenseStaging {
 pub struct StagingArena {
     sparse: HashMap<(usize, usize), SparseStaging>,
     dense: Option<DenseStaging>,
+    prefill: Option<PrefillStaging>,
     allocations: usize,
 }
 
@@ -185,6 +268,32 @@ impl StagingArena {
             DenseStaging::new(b, hkv, s, dh)
         });
         debug_assert_eq!(set.k.shape, [b, hkv, s, dh]);
+        set.reset();
+        set
+    }
+
+    /// Read access to a staged sparse set *without* acquiring (no
+    /// dirty-extent reset) — post-gather inspection for tests/benches.
+    pub fn sparse_peek(&self, heads: usize, t_cap: usize) -> Option<&SparseStaging> {
+        self.sparse.get(&(heads, t_cap))
+    }
+
+    /// Read access to the staged dense set without acquiring.
+    pub fn dense_peek(&self) -> Option<&DenseStaging> {
+        self.dense.as_ref()
+    }
+
+    /// The dirty-cleared prefill set (`ids [b, s]`, `seq_len [b]`, and
+    /// `row_elems`-long scatter rows).
+    pub fn prefill(&mut self, b: usize, s: usize,
+                   row_elems: usize) -> &mut PrefillStaging {
+        let allocations = &mut self.allocations;
+        let set = self.prefill.get_or_insert_with(|| {
+            *allocations += 1;
+            PrefillStaging::new(b, s, row_elems)
+        });
+        debug_assert_eq!(set.ids.shape, [b, s]);
+        debug_assert_eq!(set.krow.len(), row_elems);
         set.reset();
         set
     }
@@ -233,6 +342,52 @@ mod tests {
             arena.dense(2, 2, 32, 4);
         }
         assert_eq!(arena.allocations(), 4, "steady state must not allocate sets");
+    }
+
+    #[test]
+    fn prefill_reset_clears_only_written_spans() {
+        let mut arena = StagingArena::new();
+        let (b, s, row) = (3, 16, 8);
+        {
+            let set = arena.prefill(b, s, row);
+            let (ids, sl, dirty) = set.ids_mut();
+            // Admit prompts into rows 0 and 2.
+            for (r, plen) in [(0usize, 5usize), (2, 9)] {
+                for t in 0..plen {
+                    ids[r * s + t] = (100 + t) as i32;
+                }
+                sl[r] = plen as i32;
+                dirty[r] = plen;
+            }
+            let (kr, vr, pr) = set.rows_mut();
+            kr.fill(1.0);
+            vr.fill(2.0);
+            pr.fill(3.0);
+        }
+        // Re-acquire: ids and seq_len must be all zero again.
+        let set = arena.prefill(b, s, row);
+        assert!(set.ids.as_i32().unwrap().iter().all(|&x| x == 0));
+        assert!(set.seq_len.as_i32().unwrap().iter().all(|&x| x == 0));
+        assert_eq!(arena.allocations(), 1);
+        // Steady state: many acquires, still one buffer set.
+        for _ in 0..10 {
+            arena.prefill(b, s, row);
+        }
+        assert_eq!(arena.allocations(), 1);
+    }
+
+    #[test]
+    fn dirty_accessors_report_last_extents() {
+        let mut arena = StagingArena::new();
+        {
+            let set = arena.sparse(1, 2, 8, 4);
+            let (_, _, _, dirty) = set.parts_mut();
+            dirty[0] = 3;
+            dirty[1] = 7;
+        }
+        // Still readable without re-acquiring (which would clear them).
+        let set = arena.sparse_peek(2, 8).unwrap();
+        assert_eq!(set.dirty(), &[3, 7]);
     }
 
     #[test]

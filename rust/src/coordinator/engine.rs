@@ -23,9 +23,11 @@ use std::time::Instant;
 use anyhow::{bail, Result};
 
 use super::arena::StagingArena;
+use super::gather::{self, DenseGeom, GatherJob, SparseGeom};
 use super::metrics::Metrics;
 use super::request::{Completion, Request, SeqStats, StopReason};
 use super::sampling;
+use super::DecodeEngine;
 use crate::gate;
 use crate::kvcache::offload::{OffloadConfig, TieredKv};
 use crate::kvcache::{KcompCache, PagedKvPool, SeqKv};
@@ -55,6 +57,11 @@ pub struct EngineConfig {
     /// (0 = disabled). Pages touched by attention gathers go through an
     /// LRU fast tier; misses are charged as slow-tier fetches.
     pub offload_fast_pages: usize,
+    /// Scoped-thread fan-out for the per-slot gather stage (<= 1 =
+    /// serial). The arena's per-row dirty extents partition staging
+    /// writes disjointly by slot, so the parallel gather is bit-identical
+    /// to the serial one (see `coordinator::gather`).
+    pub gather_threads: usize,
 }
 
 impl Default for EngineConfig {
@@ -68,6 +75,7 @@ impl Default for EngineConfig {
             seed: 0,
             track_recall: false,
             offload_fast_pages: 0,
+            gather_threads: 1,
         }
     }
 }
@@ -87,6 +95,14 @@ struct Slot {
     generated: Vec<i32>,
     stats: SeqStats,
     stop: Option<StopReason>,
+}
+
+/// Stop decision after emitting `tok` into `slot` (shared by the prefill
+/// first-token path and the decode path; the rule itself lives in
+/// [`StopReason::decide`] so `SimEngine` applies the identical one).
+fn stop_for(slot: &Slot, tok: i32, eos: i32, max_seq: usize) -> Option<StopReason> {
+    StopReason::decide(tok, eos, slot.generated.len(), slot.req.max_new,
+                       slot.len, max_seq)
 }
 
 pub struct Engine {
@@ -134,6 +150,10 @@ struct SelectScratch {
     oracle: Vec<Vec<f32>>,
     /// Oracle top-k rows (ascending) for recall accounting.
     orc: Vec<Vec<i32>>,
+    /// Flat `[hkv * nblk]` score buffer + per-token logits row reused by
+    /// `gate::oracle_scores_into` (the track_recall / oracle hot loop).
+    oracle_flat: Vec<f32>,
+    oracle_logits: Vec<f32>,
 }
 
 impl Engine {
@@ -218,10 +238,17 @@ impl Engine {
     }
 
     pub fn submit(&mut self, req: Request) {
+        self.submit_at(req, Instant::now());
+    }
+
+    /// Enqueue with an externally observed arrival instant (the shard
+    /// router passes its own timestamp so channel dwell counts toward
+    /// TTFT/e2e).
+    pub fn submit_at(&mut self, req: Request, arrived: Instant) {
         assert!(req.prompt.len() + 2 < self.max_seq,
                 "prompt {} too long for context {}", req.prompt.len(), self.max_seq);
         self.metrics.start_clock();
-        self.queue.push_back((req, Instant::now()));
+        self.queue.push_back((req, arrived));
     }
 
     pub fn pending(&self) -> usize {
@@ -291,43 +318,45 @@ impl Engine {
         if new_slots.is_empty() {
             return Ok(());
         }
-        // Padded prefill batch: only new slots get nonzero len.
         let (b, s) = (self.batch, self.max_seq);
-        let mut ids = vec![0i32; b * s];
-        let mut seq_len = vec![0i32; b];
-        for &i in &new_slots {
-            let p = &self.slots[i].as_ref().unwrap().req.prompt;
-            ids[i * s..i * s + p.len()].copy_from_slice(p);
-            seq_len[i] = p.len() as i32;
-        }
-        let ids_t = HostTensor::i32(vec![b, s], ids);
-        let len_t = HostTensor::i32(vec![b], seq_len);
-        let names: Vec<String> =
-            self.params.specs.iter().map(|sp| sp.name.clone()).collect();
-        let outs = {
-            let mut args: Vec<Arg> = Vec::with_capacity(names.len() + 2);
-            for n in &names {
-                args.push(Arg::Dev(&self.dev[n.as_str()]));
+        let Engine { arena, slots, params, dev, rt, pool, cfg, ecfg, wk_gates,
+                     rng, metrics, vocab, .. } = self;
+        let (hkv, dh, l_n) = (cfg.n_kv_heads, cfg.head_dim, cfg.n_layers);
+        let nvocab = cfg.vocab;
+        // Padded prefill batch staged through the persistent arena set:
+        // `ids` is dirty-extent cleared on acquire, so only new slots get
+        // nonzero spans and no fresh buffers are allocated.
+        let set = arena.prefill(b, s, hkv * dh);
+        {
+            let (ids, seq_len, dirty) = set.ids_mut();
+            for &i in &new_slots {
+                let p = &slots[i].as_ref().unwrap().req.prompt;
+                ids[i * s..i * s + p.len()].copy_from_slice(p);
+                seq_len[i] = p.len() as i32;
+                dirty[i] = p.len();
             }
-            args.push(Arg::Host(&ids_t));
-            args.push(Arg::Host(&len_t));
-            self.rt.call("prefill", &args)?
+        }
+        let outs = {
+            let mut args: Vec<Arg> = Vec::with_capacity(params.specs.len() + 2);
+            for sp in &params.specs {
+                args.push(Arg::Dev(&dev[sp.name.as_str()]));
+            }
+            args.push(Arg::Host(&set.ids));
+            args.push(Arg::Host(&set.seq_len));
+            rt.call("prefill", &args)?
         };
         let lg = outs[0].as_f32()?;
         let kr = outs[1].as_f32()?;
         let vv = outs[2].as_f32()?;
         let kp = outs[3].as_f32()?;
-        let (hkv, dh, l_n) = (self.cfg.n_kv_heads, self.cfg.head_dim, self.cfg.n_layers);
-        let vocab = self.cfg.vocab;
         // cache layout [L, B, Hkv, S, dh]
         let idx = |l: usize, bi: usize, h: usize, t: usize| {
             (((l * b + bi) * hkv + h) * s + t) * dh
         };
-        let mut krow = vec![0f32; hkv * dh];
-        let mut vrow = vec![0f32; hkv * dh];
-        let mut prow = vec![0f32; hkv * dh];
+        // Pre-reserved per-token scatter rows (arena-owned, not per-call).
+        let (krow, vrow, prow) = set.rows_mut();
         for &i in &new_slots {
-            let plen = self.slots[i].as_ref().unwrap().req.prompt.len();
+            let plen = slots[i].as_ref().unwrap().req.prompt.len();
             for t in 0..plen {
                 for l in 0..l_n {
                     for h in 0..hkv {
@@ -336,23 +365,25 @@ impl Engine {
                         vrow[h * dh..(h + 1) * dh].copy_from_slice(&vv[o..o + dh]);
                         prow[h * dh..(h + 1) * dh].copy_from_slice(&kp[o..o + dh]);
                     }
-                    let slot = self.slots[i].as_mut().unwrap();
-                    slot.kv[l].append(&mut self.pool, &krow, &vrow)?;
-                    slot.quest[l].append(&krow);
-                    slot.kcomp[l].append(&self.cfg, &self.wk_gates[l], &prow);
+                    let slot = slots[i].as_mut().unwrap();
+                    slot.kv[l].append(pool, krow, vrow)?;
+                    slot.quest[l].append(krow);
+                    slot.kcomp[l].append(cfg, &wk_gates[l], prow);
                 }
             }
             // First generated token from logits[i, plen-1].
-            let row = &lg[(i * s + plen - 1) * vocab..(i * s + plen) * vocab];
-            let tok = sampling::sample(row, self.ecfg.temperature, &mut self.rng);
-            let slot = self.slots[i].as_mut().unwrap();
+            let row = &lg[(i * s + plen - 1) * nvocab..(i * s + plen) * nvocab];
+            let tok = sampling::sample(row, ecfg.temperature, rng);
+            let slot = slots[i].as_mut().unwrap();
             slot.len = plen;
             slot.tokens.push(tok);
             slot.generated.push(tok);
             slot.first_token = Some(Instant::now());
-            self.check_stop(i, tok);
+            if let Some(stop) = stop_for(slot, tok, vocab.eos, s) {
+                slot.stop = Some(stop);
+            }
         }
-        self.metrics.prefill_s.push(t0.elapsed().as_secs_f64());
+        metrics.prefill_s.push(t0.elapsed().as_secs_f64());
         Ok(())
     }
 
@@ -528,6 +559,8 @@ impl Engine {
             }
             Policy::Oracle { budget_tokens } => {
                 Self::oracle_rows_into(cfg, pool, current_q, slot, l, i, bs,
+                                       &mut scratch.oracle_flat,
+                                       &mut scratch.oracle_logits,
                                        &mut scratch.oracle);
                 let k = Policy::block_budget(budget_tokens, bs);
                 let take = if partial.is_some() { k.saturating_sub(1) } else { k };
@@ -569,6 +602,8 @@ impl Engine {
             | Policy::Quest { budget_tokens } = policy
             {
                 Self::oracle_rows_into(cfg, pool, current_q, slot, l, i, bs,
+                                       &mut scratch.oracle_flat,
+                                       &mut scratch.oracle_logits,
                                        &mut scratch.oracle);
                 let k = Policy::block_budget(budget_tokens, bs);
                 let hkv = cfg.n_kv_heads;
@@ -616,10 +651,13 @@ impl Engine {
 
     /// Oracle block scores (true attention over the cached keys, §4.2)
     /// for one slot+layer into reusable per-KV-head rows over all blocks
-    /// (incl. partial).
+    /// (incl. partial). `flat` and `logits` are the caller's reused
+    /// scoring buffers (`gate::oracle_scores_into`), so the recall /
+    /// oracle hot loop allocates nothing at steady state.
     #[allow(clippy::too_many_arguments)]
     fn oracle_rows_into(cfg: &ModelConfig, pool: &PagedKvPool, current_q: &[f32],
                         slot: &Slot, l: usize, i: usize, bs: usize,
+                        flat: &mut Vec<f32>, logits: &mut Vec<f32>,
                         out: &mut Vec<Vec<f32>>) {
         let kvl = &slot.kv[l];
         let len = kvl.len;
@@ -629,7 +667,7 @@ impl Engine {
         let k_at = |h: usize, t: usize| -> *const f32 {
             pool.k_row(pages[t / bs], h, t % bs).as_ptr()
         };
-        let flat = gate::oracle_scores(cfg, q, &k_at, len, bs);
+        gate::oracle_scores_into(cfg, q, &k_at, len, bs, flat, logits);
         let nblk = len.div_ceil(bs);
         crate::util::buf::resize_rows(out, cfg.n_kv_heads);
         for (h, row) in out.iter_mut().enumerate() {
@@ -655,6 +693,13 @@ impl Engine {
             (self.cfg.n_kv_heads, self.cfg.n_heads, self.cfg.head_dim);
         let g = self.cfg.group_size;
         let bs = self.ecfg.block_size;
+        // Fan the per-slot gather out over scoped threads only when
+        // configured and there is more than one slot to partition.
+        let threads = if active.len() > 1 {
+            self.ecfg.gather_threads.max(1)
+        } else {
+            1
+        };
         let wo = format!("l{l}.wo");
         let w1 = format!("l{l}.w1");
         let w2 = format!("l{l}.w2");
@@ -686,36 +731,55 @@ impl Engine {
         if any_dense || variant.is_err() {
             // Dense baseline: ship the full cache.
             let set = arena.dense(b, hkv, s, dh);
-            let mut touched_total = 0u64;
-            {
-                let (kc, vc, seq_len, dirty) = set.parts_mut();
+            let geom = DenseGeom { hkv, block_size: bs, max_seq: s, dh };
+            if let Some(t) = offload.as_mut() {
                 for &i in active {
-                    let mut touched = 0u64;
-                    {
-                        let slot = slots[i].as_ref().unwrap();
-                        let kvl = &slot.kv[l];
-                        seq_len[i] = kvl.len as i32;
-                        for h in 0..hkv {
-                            for (blk, &pg) in kvl.pages.iter().enumerate() {
-                                if let Some(t) = offload.as_mut() {
-                                    t.touch(pg);
-                                }
-                                let n = kvl.tokens_in_block(blk, bs);
-                                let off = ((i * hkv + h) * s + blk * bs) * dh;
-                                pool.gather_block(
-                                    pg, h, n,
-                                    &mut kc[off..off + n * dh],
-                                    &mut vc[off..off + n * dh],
-                                );
-                                touched += 2 * (n * dh * 4) as u64;
-                            }
-                            dirty[i * hkv + h] = kvl.len;
+                    let kvl = &slots[i].as_ref().unwrap().kv[l];
+                    for _h in 0..hkv {
+                        for &pg in &kvl.pages {
+                            t.touch(pg);
                         }
                     }
-                    touched_total += touched;
-                    let slot = slots[i].as_mut().unwrap();
-                    slot.stats.kv_bytes_touched += touched;
                 }
+            }
+            {
+                let (kc, vc, seq_len, dirty) = set.parts_mut();
+                if threads > 1 {
+                    let jobs: Vec<GatherJob> = active
+                        .iter()
+                        .map(|&i| GatherJob {
+                            row: i,
+                            kv: &slots[i].as_ref().unwrap().kv[l],
+                            sel: &sel_bufs[i],
+                        })
+                        .collect();
+                    gather::gather_dense_into(pool, &jobs, &geom, kc, vc,
+                                              seq_len, dirty, threads);
+                } else {
+                    let row_kv = hkv * s * dh;
+                    for &i in active {
+                        let job = GatherJob {
+                            row: i,
+                            kv: &slots[i].as_ref().unwrap().kv[l],
+                            sel: &sel_bufs[i],
+                        };
+                        gather::gather_one_dense(
+                            pool, &job, &geom,
+                            &mut kc[i * row_kv..(i + 1) * row_kv],
+                            &mut vc[i * row_kv..(i + 1) * row_kv],
+                            &mut seq_len[i..i + 1],
+                            &mut dirty[i * hkv..(i + 1) * hkv],
+                        );
+                    }
+                }
+            }
+            // I/O accounting straight from the staged dirty extents.
+            let mut touched_total = 0u64;
+            for &i in active {
+                let staged: usize = set.dirty()[i * hkv..(i + 1) * hkv].iter().sum();
+                let touched = 2 * (staged * dh * 4) as u64;
+                slots[i].as_mut().unwrap().stats.kv_bytes_touched += touched;
+                touched_total += touched;
             }
             metrics.kv_bytes_touched += touched_total;
             metrics.kv_bytes_dense_equiv += touched_total;
@@ -740,50 +804,60 @@ impl Engine {
         let t_cap = variant.expect("checked above");
         let heads = if per_head { h_all } else { hkv };
         let set = arena.sparse(b, heads, t_cap, dh);
-        let mut dense_equiv = 0u64;
-        let mut touched_total = 0u64;
+        let geom = SparseGeom { heads, group: g, per_head, block_size: bs,
+                                t_cap, dh };
+        if let Some(t) = offload.as_mut() {
+            for &i in active {
+                let kvl = &slots[i].as_ref().unwrap().kv[l];
+                let buf = &sel_bufs[i];
+                for hr in 0..heads {
+                    for &j in gather::selected_row(buf, hr, per_head, g) {
+                        t.touch(kvl.pages[j as usize]);
+                    }
+                }
+            }
+        }
         {
             let (k_sel, v_sel, mask, dirty) = set.parts_mut();
-            for &i in active {
-                let mut touched = 0u64;
-                {
-                    let slot = slots[i].as_ref().unwrap();
-                    let buf = &sel_bufs[i];
-                    let kvl = &slot.kv[l];
-                    for hr in 0..heads {
-                        let row: &[i32] = match buf.kind() {
-                            SelKind::Shared if per_head => &buf.rows()[hr / g],
-                            SelKind::Shared => &buf.rows()[hr],
-                            SelKind::PerHead => &buf.rows()[hr],
-                            SelKind::Dense => unreachable!(),
-                        };
-                        let kv_head = if per_head { hr / g } else { hr };
-                        let mut cursor = 0usize;
-                        for &j in row {
-                            let n = kvl.tokens_in_block(j as usize, bs);
-                            let pg = kvl.pages[j as usize];
-                            if let Some(t) = offload.as_mut() {
-                                t.touch(pg);
-                            }
-                            let off = ((i * heads + hr) * t_cap + cursor) * dh;
-                            pool.gather_block(
-                                pg, kv_head, n,
-                                &mut k_sel[off..off + n * dh],
-                                &mut v_sel[off..off + n * dh],
-                            );
-                            let moff = (i * heads + hr) * t_cap + cursor;
-                            mask[moff..moff + n].fill(1.0);
-                            cursor += n;
-                            touched += 2 * (n * dh * 4) as u64;
-                        }
-                        dirty[i * heads + hr] = cursor;
-                    }
-                    dense_equiv += 2 * (kvl.len * dh * 4) as u64 * hkv as u64;
+            if threads > 1 {
+                let jobs: Vec<GatherJob> = active
+                    .iter()
+                    .map(|&i| GatherJob {
+                        row: i,
+                        kv: &slots[i].as_ref().unwrap().kv[l],
+                        sel: &sel_bufs[i],
+                    })
+                    .collect();
+                gather::gather_sparse_into(pool, &jobs, &geom, k_sel, v_sel,
+                                           mask, dirty, threads);
+            } else {
+                let row_kv = heads * t_cap * dh;
+                let row_mask = heads * t_cap;
+                for &i in active {
+                    let job = GatherJob {
+                        row: i,
+                        kv: &slots[i].as_ref().unwrap().kv[l],
+                        sel: &sel_bufs[i],
+                    };
+                    gather::gather_one_sparse(
+                        pool, &job, &geom,
+                        &mut k_sel[i * row_kv..(i + 1) * row_kv],
+                        &mut v_sel[i * row_kv..(i + 1) * row_kv],
+                        &mut mask[i * row_mask..(i + 1) * row_mask],
+                        &mut dirty[i * heads..(i + 1) * heads],
+                    );
                 }
-                touched_total += touched;
-                let slot = slots[i].as_mut().unwrap();
-                slot.stats.kv_bytes_touched += touched;
             }
+        }
+        let mut dense_equiv = 0u64;
+        let mut touched_total = 0u64;
+        for &i in active {
+            let ctx = slots[i].as_ref().unwrap().kv[l].len;
+            let staged: usize = set.dirty()[i * heads..(i + 1) * heads].iter().sum();
+            let touched = 2 * (staged * dh * 4) as u64;
+            dense_equiv += 2 * (ctx * dh * 4) as u64 * hkv as u64;
+            touched_total += touched;
+            slots[i].as_mut().unwrap().stats.kv_bytes_touched += touched;
         }
         metrics.kv_bytes_touched += touched_total;
         metrics.kv_bytes_dense_equiv += dense_equiv;
@@ -811,12 +885,8 @@ impl Engine {
         let max_seq = self.max_seq;
         let eos = self.vocab.eos;
         let slot = self.slots[i].as_mut().unwrap();
-        if tok == eos {
-            slot.stop = Some(StopReason::Eos);
-        } else if slot.generated.len() >= slot.req.max_new {
-            slot.stop = Some(StopReason::MaxNewTokens);
-        } else if slot.len + 2 >= max_seq {
-            slot.stop = Some(StopReason::ContextFull);
+        if let Some(stop) = stop_for(slot, tok, eos, max_seq) {
+            slot.stop = Some(stop);
         }
     }
 
@@ -857,5 +927,42 @@ impl Engine {
             }
         }
         out
+    }
+}
+
+/// The serving-layer contract ([`EngineGroup`] shards, `TraceRunner`,
+/// the TCP server) delegated to the inherent methods. The engine stays
+/// `!Send` (it holds `Rc<Runtime>`), so a shard factory must construct
+/// it on the shard thread — see `coordinator::shard`.
+///
+/// [`EngineGroup`]: super::shard::EngineGroup
+impl DecodeEngine for Engine {
+    fn submit_at(&mut self, req: Request, arrived: Instant) {
+        Engine::submit_at(self, req, arrived);
+    }
+
+    fn step(&mut self) -> Result<Vec<Completion>> {
+        Engine::step(self)
+    }
+
+    fn pending(&self) -> usize {
+        Engine::pending(self)
+    }
+
+    fn active(&self) -> usize {
+        Engine::active(self)
+    }
+
+    fn batch_size(&self) -> usize {
+        Engine::batch_size(self)
+    }
+
+    fn max_prompt_len(&self) -> usize {
+        // submit asserts prompt.len() + 2 < max_seq.
+        self.max_seq.saturating_sub(3)
+    }
+
+    fn take_metrics(&mut self) -> Metrics {
+        std::mem::take(&mut self.metrics)
     }
 }

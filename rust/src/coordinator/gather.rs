@@ -1,0 +1,203 @@
+//! The gather stage of the decode hot path, factored out of the engine
+//! so the serial and scoped-thread parallel variants share one
+//! implementation and are testable without PJRT.
+//!
+//! Staging buffers are laid out batch-row-major, so each slot's writes
+//! (K/V rows, mask, dirty extents) land in a disjoint contiguous chunk of
+//! the [`StagingArena`] set. That partition is exactly what makes the
+//! parallel variant safe: the chunks are split with `chunks_mut` and each
+//! scoped thread owns a distinct set of slots — bit-identical output to
+//! the serial loop, no synchronisation beyond the scope join.
+//!
+//! The serial entry points (`gather_one_sparse` / `gather_one_dense`)
+//! take the slot's chunk directly and allocate nothing, preserving the
+//! zero-allocation steady-state invariant. The parallel entry points
+//! build a small per-call work list (one slice tuple per active slot) —
+//! that allocation is the explicit price of fanning out, paid only when
+//! `threads > 1`.
+//!
+//! [`StagingArena`]: super::arena::StagingArena
+
+use crate::kvcache::{PagedKvPool, SeqKv};
+use crate::sparse::policy::{SelKind, SelectionBuf};
+
+/// One slot's gather work: its staging row index, KV block table, and
+/// block selection. The dense gathers stage the whole cache and ignore
+/// `sel` (dense slots carry a `SelKind::Dense` buf anyway); one job type
+/// keeps the engine's job construction identical across both branches.
+pub struct GatherJob<'a> {
+    /// Batch row in the staging set (= slot index).
+    pub row: usize,
+    pub kv: &'a SeqKv,
+    /// Block selection; read only by the sparse gathers.
+    pub sel: &'a SelectionBuf,
+}
+
+/// Geometry of a sparse staging set `[b, heads, t_cap, dh]`.
+#[derive(Debug, Clone, Copy)]
+pub struct SparseGeom {
+    pub heads: usize,
+    /// GQA group size (query heads per KV head).
+    pub group: usize,
+    /// Staging is per query head (Quest) rather than per KV head.
+    pub per_head: bool,
+    pub block_size: usize,
+    pub t_cap: usize,
+    pub dh: usize,
+}
+
+/// Geometry of a dense staging set `[b, hkv, max_seq, dh]`.
+#[derive(Debug, Clone, Copy)]
+pub struct DenseGeom {
+    pub hkv: usize,
+    pub block_size: usize,
+    pub max_seq: usize,
+    pub dh: usize,
+}
+
+/// The selection row feeding staging head-row `hr` — a Shared selection
+/// is indexed by the GQA group when staging is per query head.
+pub fn selected_row<'a>(sel: &'a SelectionBuf, hr: usize, per_head: bool,
+                        group: usize) -> &'a [i32] {
+    match sel.kind() {
+        SelKind::Shared if per_head => &sel.rows()[hr / group],
+        SelKind::Shared | SelKind::PerHead => &sel.rows()[hr],
+        SelKind::Dense => unreachable!("dense slots use the dense gather"),
+    }
+}
+
+/// Gather one slot's selected blocks into its chunk of a sparse staging
+/// set. `k`/`v` are the slot's `[heads, t_cap, dh]` chunk, `mask` its
+/// `[heads, t_cap]` chunk, `dirty` its `[heads]` extents. Allocation-free.
+pub fn gather_one_sparse(pool: &PagedKvPool, job: &GatherJob, geom: &SparseGeom,
+                         k: &mut [f32], v: &mut [f32], mask: &mut [f32],
+                         dirty: &mut [usize]) {
+    let SparseGeom { heads, group, per_head, block_size, t_cap, dh } = *geom;
+    for hr in 0..heads {
+        let row = selected_row(job.sel, hr, per_head, group);
+        let kv_head = if per_head { hr / group } else { hr };
+        let mut cursor = 0usize;
+        for &j in row {
+            let n = job.kv.tokens_in_block(j as usize, block_size);
+            let pg = job.kv.pages[j as usize];
+            let off = (hr * t_cap + cursor) * dh;
+            pool.gather_block(pg, kv_head, n, &mut k[off..off + n * dh],
+                              &mut v[off..off + n * dh]);
+            let moff = hr * t_cap + cursor;
+            mask[moff..moff + n].fill(1.0);
+            cursor += n;
+        }
+        dirty[hr] = cursor;
+    }
+}
+
+/// Gather one slot's full cache into its chunk of a dense staging set.
+/// `seq_len` is the slot's single-element chunk. Allocation-free.
+pub fn gather_one_dense(pool: &PagedKvPool, job: &GatherJob, geom: &DenseGeom,
+                        k: &mut [f32], v: &mut [f32], seq_len: &mut [i32],
+                        dirty: &mut [usize]) {
+    let DenseGeom { hkv, block_size, max_seq, dh } = *geom;
+    seq_len[0] = job.kv.len as i32;
+    for h in 0..hkv {
+        for (blk, &pg) in job.kv.pages.iter().enumerate() {
+            let n = job.kv.tokens_in_block(blk, block_size);
+            let off = (h * max_seq + blk * block_size) * dh;
+            pool.gather_block(pg, h, n, &mut k[off..off + n * dh],
+                              &mut v[off..off + n * dh]);
+        }
+        dirty[h] = job.kv.len;
+    }
+}
+
+/// Split per-row chunks of a staging set and pair them with the jobs
+/// writing them. Jobs must be sorted ascending by `row`.
+macro_rules! build_work {
+    ($jobs:expr, $row_kv:expr, $row_aux:expr, $row_dirty:expr,
+     $k:expr, $v:expr, $aux:expr, $dirty:expr) => {{
+        let mut work = Vec::with_capacity($jobs.len());
+        let mut jobs = $jobs.iter().peekable();
+        let iter = $k
+            .chunks_mut($row_kv)
+            .zip($v.chunks_mut($row_kv))
+            .zip($aux.chunks_mut($row_aux))
+            .zip($dirty.chunks_mut($row_dirty))
+            .enumerate();
+        for (r, (((kc, vc), ac), dc)) in iter {
+            if jobs.peek().map(|j| j.row) == Some(r) {
+                work.push((jobs.next().unwrap(), kc, vc, ac, dc));
+            }
+        }
+        // Hard assert: an unmatched job means rows were unsorted or out
+        // of range, and silently skipping one would leave its staging
+        // rows zeroed — attention over an empty selection, no error.
+        assert!(jobs.next().is_none(),
+                "gather jobs must be sorted ascending by row and in range");
+        work
+    }};
+}
+
+/// Sparse gather over many slots, fanned out over up to `threads` scoped
+/// threads (serial when `threads <= 1` or there is one job). Output is
+/// bit-identical to calling [`gather_one_sparse`] per job.
+#[allow(clippy::too_many_arguments)]
+pub fn gather_sparse_into(pool: &PagedKvPool, jobs: &[GatherJob],
+                          geom: &SparseGeom, k: &mut [f32], v: &mut [f32],
+                          mask: &mut [f32], dirty: &mut [usize],
+                          threads: usize) {
+    let row_kv = geom.heads * geom.t_cap * geom.dh;
+    let row_mask = geom.heads * geom.t_cap;
+    if threads <= 1 || jobs.len() <= 1 {
+        for job in jobs {
+            let r = job.row;
+            gather_one_sparse(pool, job, geom,
+                              &mut k[r * row_kv..(r + 1) * row_kv],
+                              &mut v[r * row_kv..(r + 1) * row_kv],
+                              &mut mask[r * row_mask..(r + 1) * row_mask],
+                              &mut dirty[r * geom.heads..(r + 1) * geom.heads]);
+        }
+        return;
+    }
+    let mut work = build_work!(jobs, row_kv, row_mask, geom.heads, k, v, mask, dirty);
+    let per = work.len().div_ceil(threads.min(work.len()));
+    std::thread::scope(|s| {
+        for chunk in work.chunks_mut(per) {
+            s.spawn(move || {
+                for (job, kc, vc, mc, dc) in chunk.iter_mut() {
+                    gather_one_sparse(pool, job, geom, kc, vc, mc, dc);
+                }
+            });
+        }
+    });
+}
+
+/// Dense gather over many slots; same contract as [`gather_sparse_into`]
+/// but staging the full cache per slot (`seq_len` is `[b]`).
+#[allow(clippy::too_many_arguments)]
+pub fn gather_dense_into(pool: &PagedKvPool, jobs: &[GatherJob],
+                         geom: &DenseGeom, k: &mut [f32], v: &mut [f32],
+                         seq_len: &mut [i32], dirty: &mut [usize],
+                         threads: usize) {
+    let row_kv = geom.hkv * geom.max_seq * geom.dh;
+    if threads <= 1 || jobs.len() <= 1 {
+        for job in jobs {
+            let r = job.row;
+            gather_one_dense(pool, job, geom,
+                             &mut k[r * row_kv..(r + 1) * row_kv],
+                             &mut v[r * row_kv..(r + 1) * row_kv],
+                             &mut seq_len[r..r + 1],
+                             &mut dirty[r * geom.hkv..(r + 1) * geom.hkv]);
+        }
+        return;
+    }
+    let mut work = build_work!(jobs, row_kv, 1, geom.hkv, k, v, seq_len, dirty);
+    let per = work.len().div_ceil(threads.min(work.len()));
+    std::thread::scope(|s| {
+        for chunk in work.chunks_mut(per) {
+            s.spawn(move || {
+                for (job, kc, vc, sc, dc) in chunk.iter_mut() {
+                    gather_one_dense(pool, job, geom, kc, vc, sc, dc);
+                }
+            });
+        }
+    });
+}

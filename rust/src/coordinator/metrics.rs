@@ -35,6 +35,21 @@ impl Metrics {
         self.requests_completed += 1;
     }
 
+    /// Fold another engine's metrics into this one (shard -> fleet).
+    /// Latency series concatenate; counters add. The wall clock is *not*
+    /// merged — fleet throughput is computed against the group's own
+    /// clock (see [`GroupMetrics`]), since per-shard clocks overlap.
+    pub fn merge_from(&mut self, other: &Metrics) {
+        self.ttft_s.extend_from(&other.ttft_s);
+        self.e2e_s.extend_from(&other.e2e_s);
+        self.decode_step_s.extend_from(&other.decode_step_s);
+        self.prefill_s.extend_from(&other.prefill_s);
+        self.tokens_generated += other.tokens_generated;
+        self.requests_completed += other.requests_completed;
+        self.kv_bytes_touched += other.kv_bytes_touched;
+        self.kv_bytes_dense_equiv += other.kv_bytes_dense_equiv;
+    }
+
     /// Generated tokens per wall-clock second since start_clock().
     pub fn throughput_tps(&self) -> f64 {
         match self.wall_start {
@@ -66,6 +81,79 @@ impl Metrics {
     }
 }
 
+/// Aggregated serving metrics for an [`EngineGroup`]: the per-shard
+/// [`Metrics`] snapshots plus the group's own wall-clock span, from which
+/// fleet throughput and latency percentiles are derived.
+///
+/// [`EngineGroup`]: super::shard::EngineGroup
+#[derive(Debug, Default)]
+pub struct GroupMetrics {
+    /// One snapshot per shard, indexed by shard id. A panicked shard
+    /// contributes an empty snapshot (its metrics died with it).
+    pub shards: Vec<Metrics>,
+    /// Group wall-clock seconds from first submit to shutdown.
+    pub wall_s: f64,
+    /// Shards whose threads panicked instead of shutting down cleanly;
+    /// their metrics are lost but the healthy shards' survive.
+    pub panicked: Vec<usize>,
+}
+
+impl GroupMetrics {
+    /// Merge all shard snapshots into one fleet-level [`Metrics`].
+    pub fn fleet(&self) -> Metrics {
+        let mut m = Metrics::new();
+        for s in &self.shards {
+            m.merge_from(s);
+        }
+        m
+    }
+
+    /// Generated tokens per wall-clock second across the whole fleet.
+    pub fn fleet_tps(&self) -> f64 {
+        let tokens: u64 = self.shards.iter().map(|s| s.tokens_generated).sum();
+        tokens as f64 / self.wall_s.max(1e-9)
+    }
+
+    /// Per-shard + fleet report: request counts, throughput, and
+    /// TTFT / e2e p50/p95/p99.
+    pub fn report(&self) -> String {
+        let mut out = String::new();
+        for &i in &self.panicked {
+            out.push_str(&format!("shard {i}: PANICKED (metrics lost)\n"));
+        }
+        for (i, s) in self.shards.iter().enumerate() {
+            out.push_str(&format!(
+                "shard {i}: requests={} tokens={} ttft p50={:.4}s p95={:.4}s \
+                 e2e p50={:.4}s p95={:.4}s\n",
+                s.requests_completed,
+                s.tokens_generated,
+                s.ttft_s.median(),
+                s.ttft_s.percentile(95.0),
+                s.e2e_s.median(),
+                s.e2e_s.percentile(95.0),
+            ));
+        }
+        let f = self.fleet();
+        out.push_str(&format!(
+            "fleet ({} shards): requests={} tokens={} tps={:.1} \
+             ttft p50={:.4}s p95={:.4}s p99={:.4}s \
+             e2e p50={:.4}s p95={:.4}s p99={:.4}s kv-touch {:.3}",
+            self.shards.len(),
+            f.requests_completed,
+            f.tokens_generated,
+            self.fleet_tps(),
+            f.ttft_s.median(),
+            f.ttft_s.percentile(95.0),
+            f.ttft_s.percentile(99.0),
+            f.e2e_s.median(),
+            f.e2e_s.percentile(95.0),
+            f.e2e_s.percentile(99.0),
+            f.kv_touch_fraction(),
+        ));
+        out
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -87,5 +175,48 @@ mod tests {
     fn touch_fraction_defaults_to_dense() {
         let m = Metrics::new();
         assert_eq!(m.kv_touch_fraction(), 1.0);
+    }
+
+    #[test]
+    fn merge_concatenates_series_and_adds_counters() {
+        let mut a = Metrics::new();
+        let mut b = Metrics::new();
+        a.record_completion(Duration::from_millis(10), Duration::from_millis(100), 4);
+        b.record_completion(Duration::from_millis(30), Duration::from_millis(300), 6);
+        b.kv_bytes_touched = 8;
+        b.kv_bytes_dense_equiv = 16;
+        a.merge_from(&b);
+        assert_eq!(a.requests_completed, 2);
+        assert_eq!(a.tokens_generated, 10);
+        assert_eq!(a.ttft_s.len(), 2);
+        assert_eq!(a.kv_bytes_touched, 8);
+        assert!((a.ttft_s.mean() - 0.02).abs() < 1e-9);
+    }
+
+    #[test]
+    fn group_metrics_fleet_percentiles_span_shards() {
+        let mut g = GroupMetrics::default();
+        for shard in 0..3 {
+            let mut m = Metrics::new();
+            for k in 0..4 {
+                let ms = 10 * (shard * 4 + k + 1);
+                m.record_completion(
+                    Duration::from_millis(ms),
+                    Duration::from_millis(10 * ms),
+                    3,
+                );
+            }
+            g.shards.push(m);
+        }
+        g.wall_s = 2.0;
+        let f = g.fleet();
+        assert_eq!(f.requests_completed, 12);
+        assert_eq!(f.tokens_generated, 36);
+        // Samples 10ms..120ms across shards: fleet median = 65ms.
+        assert!((f.ttft_s.median() - 0.065).abs() < 1e-9);
+        assert!((g.fleet_tps() - 18.0).abs() < 1e-9);
+        let r = g.report();
+        assert!(r.contains("shard 0"));
+        assert!(r.contains("fleet (3 shards)"));
     }
 }

@@ -1,24 +1,75 @@
 //! L3 coordinator: the serving engine (continuous batching over the
-//! AOT-compiled decode executables), sampling, scheduling, metrics, and
+//! AOT-compiled decode executables), sampling, scheduling, sharding, and
 //! the TCP server.
 //!
-//! The engine, scheduler, and server need the PJRT runtime and are gated
-//! behind the `pjrt` feature; the staging arena, sampling, request types,
-//! and metrics are pure host code and always available (the decode
-//! hot-path bench exercises them offline).
+//! The PJRT-backed [`Engine`] is gated behind the `pjrt` feature; the
+//! serving layer above it — [`EngineGroup`] sharding, the trace-driven
+//! scheduler, the JSON-lines TCP server, the staging arena, sampling,
+//! request types, and metrics — is pure host code, generic over the
+//! [`DecodeEngine`] trait, and always available. [`SimEngine`] is the
+//! deterministic host-only reference engine the end-to-end serving tests
+//! drive through the exact same scheduler/router/server code paths the
+//! PJRT engine uses in production.
 
 pub mod arena;
 #[cfg(feature = "pjrt")]
 pub mod engine;
+pub mod gather;
 pub mod metrics;
 pub mod request;
 pub mod sampling;
-#[cfg(feature = "pjrt")]
 pub mod scheduler;
-#[cfg(feature = "pjrt")]
 pub mod server;
+pub mod shard;
+pub mod sim;
 
 pub use arena::StagingArena;
 #[cfg(feature = "pjrt")]
 pub use engine::{Engine, EngineConfig};
+pub use metrics::{GroupMetrics, Metrics};
 pub use request::{Completion, Request};
+pub use shard::EngineGroup;
+pub use sim::{SimConfig, SimEngine};
+
+/// The contract between a decode engine (one continuous-batching loop
+/// over one device) and the serving layer above it (shard router, trace
+/// scheduler, TCP server). The PJRT [`Engine`] and the host-only
+/// [`SimEngine`] both implement it, so every serving code path is
+/// testable under the default feature set.
+pub trait DecodeEngine {
+    /// Enqueue a request (admitted into a batch slot on a later `step`).
+    fn submit(&mut self, req: Request) {
+        self.submit_at(req, std::time::Instant::now());
+    }
+
+    /// Enqueue a request whose arrival was observed at `arrived` —
+    /// TTFT/e2e are measured from that instant. The shard router uses
+    /// this so time spent in the router-to-shard channel counts toward
+    /// latency, exactly as client-visible queueing should.
+    fn submit_at(&mut self, req: Request, arrived: std::time::Instant);
+
+    /// One engine iteration: admit+prefill if possible, else decode one
+    /// token for the running batch. Returns finished completions.
+    fn step(&mut self) -> anyhow::Result<Vec<Completion>>;
+
+    /// Requests queued but not yet admitted.
+    fn pending(&self) -> usize;
+
+    /// Requests currently occupying batch slots.
+    fn active(&self) -> usize;
+
+    /// Concurrent batch capacity (slots).
+    fn batch_size(&self) -> usize;
+
+    /// Longest prompt `submit` accepts (the context window minus room
+    /// for generation bookkeeping). Front-ends must reject longer
+    /// prompts instead of submitting them.
+    fn max_prompt_len(&self) -> usize;
+
+    fn idle(&self) -> bool {
+        self.pending() == 0 && self.active() == 0
+    }
+
+    /// Move the engine's metrics out (shard shutdown snapshot).
+    fn take_metrics(&mut self) -> Metrics;
+}

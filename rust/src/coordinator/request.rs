@@ -19,6 +19,26 @@ pub enum StopReason {
     ContextFull,
 }
 
+impl StopReason {
+    /// The one stop decision every decode engine applies after emitting
+    /// `tok` (the PJRT engine and `SimEngine` both call this, so their
+    /// stop semantics cannot diverge — the N-shard parity tests rely on
+    /// that). `cached_len` counts tokens whose KV is in cache: the
+    /// just-emitted token is not yet cached.
+    pub fn decide(tok: i32, eos: i32, n_generated: usize, max_new: usize,
+                  cached_len: usize, max_seq: usize) -> Option<StopReason> {
+        if tok == eos {
+            Some(StopReason::Eos)
+        } else if n_generated >= max_new {
+            Some(StopReason::MaxNewTokens)
+        } else if cached_len + 2 >= max_seq {
+            Some(StopReason::ContextFull)
+        } else {
+            None
+        }
+    }
+}
+
 /// Per-request sparsity / accuracy diagnostics collected by the engine.
 #[derive(Debug, Clone, Default)]
 pub struct SeqStats {

@@ -1,22 +1,28 @@
-//! Trace-driven scheduling: replays a timed arrival trace against the
-//! engine (continuous batching happens inside `Engine::step`), used by
-//! the serving benchmark. Arrivals can be replayed in real time or in
-//! virtual time (as fast as the engine can go, arrival order preserved).
+//! Trace-driven scheduling: replays a timed arrival trace against a
+//! decode engine or a sharded [`EngineGroup`] (continuous batching
+//! happens inside the engines), used by the serving benchmark and the
+//! end-to-end serving tests. Arrivals can be replayed in real time or in
+//! virtual time (as fast as the fleet can go, arrival order preserved).
+//!
+//! Requests are numbered `0..n` in arrival order in both modes, so runs
+//! over the same trace are comparable per-request across replay modes,
+//! shard counts, and engine implementations.
 
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use anyhow::Result;
 
-use super::engine::Engine;
 use super::request::{Completion, Request};
+use super::shard::EngineGroup;
+use super::DecodeEngine;
 use crate::workload::trace::TracedRequest;
 
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Replay {
     /// Honour wall-clock arrival times (sleeps while idle).
     RealTime,
-    /// Submit each request as soon as the engine has consumed everything
-    /// that arrived earlier (throughput-oriented).
+    /// Submit each request as soon as the fleet has admission headroom
+    /// (throughput-oriented; arrival order preserved).
     Virtual,
 }
 
@@ -25,12 +31,23 @@ pub struct TraceRunner {
 }
 
 impl TraceRunner {
-    pub fn run(&self, engine: &mut Engine, trace: &[TracedRequest])
-               -> Result<Vec<Completion>> {
+    /// Replay against a single engine on the caller's thread (the
+    /// pre-sharding behaviour; equivalent to a 1-shard group).
+    pub fn run<E: DecodeEngine>(&self, engine: &mut E, trace: &[TracedRequest])
+                                -> Result<Vec<Completion>> {
         let mut completions = Vec::new();
         let start = Instant::now();
         let mut next = 0usize;
         let mut id = 0u64;
+        // Same up-front guard as run_group: a clean error beats the
+        // engine's submit assert.
+        let max_prompt = engine.max_prompt_len();
+        if let Some(t) = trace.iter().find(|t| t.episode.prompt.len() > max_prompt)
+        {
+            anyhow::bail!("trace prompt of {} tokens exceeds the engine's \
+                           max prompt length {max_prompt}",
+                          t.episode.prompt.len());
+        }
         while next < trace.len() || !engine.idle() {
             // Admit everything whose arrival time has passed.
             while next < trace.len() {
@@ -53,17 +70,70 @@ impl TraceRunner {
                 next += 1;
                 // In virtual mode admit at most one burst per step so the
                 // queue still exercises batching decisions.
-                if self.replay == Replay::Virtual && engine.pending() >= engine.batch_size()
+                if self.replay == Replay::Virtual
+                    && engine.pending() >= engine.batch_size()
                 {
                     break;
                 }
             }
             if engine.idle() {
                 // Real-time replay with nothing due yet: wait briefly.
-                std::thread::sleep(std::time::Duration::from_millis(1));
+                std::thread::sleep(Duration::from_millis(1));
                 continue;
             }
             completions.extend(engine.step()?);
+        }
+        Ok(completions)
+    }
+
+    /// Replay against a sharded [`EngineGroup`]: the router dispatches
+    /// admitted requests, shards decode concurrently, and completions
+    /// fan back in. A 1-shard group reproduces `run`'s per-request
+    /// output exactly (content-deterministic engines), which the serving
+    /// tests assert.
+    pub fn run_group<E: DecodeEngine>(&self, group: &mut EngineGroup<E>,
+                                      trace: &[TracedRequest])
+                                      -> Result<Vec<Completion>> {
+        let mut completions = Vec::with_capacity(trace.len());
+        let start = Instant::now();
+        let mut next = 0usize;
+        let mut id = 0u64;
+        let window = group.admission_window();
+        // Fail on the caller's thread with a clear message instead of
+        // assert-panicking inside a shard (which would only surface as
+        // "shard exited with requests in flight").
+        let max_prompt = group.max_prompt_len();
+        if let Some(t) = trace.iter().find(|t| t.episode.prompt.len() > max_prompt)
+        {
+            anyhow::bail!("trace prompt of {} tokens exceeds the engines' \
+                           max prompt length {max_prompt}",
+                          t.episode.prompt.len());
+        }
+        while next < trace.len() || group.inflight() > 0 {
+            while next < trace.len() {
+                let due = match self.replay {
+                    Replay::RealTime => {
+                        start.elapsed().as_secs_f64() >= trace[next].arrival_s
+                    }
+                    // Keep a bounded backlog so shard queues stay warm
+                    // without submitting the whole trace up front.
+                    Replay::Virtual => group.inflight() < window,
+                };
+                if !due {
+                    break;
+                }
+                let t = &trace[next];
+                group.submit(Request {
+                    id,
+                    prompt: t.episode.prompt.clone(),
+                    max_new: t.max_new,
+                })?;
+                id += 1;
+                next += 1;
+            }
+            if let Some(c) = group.poll(Duration::from_millis(1))? {
+                completions.push(c);
+            }
         }
         Ok(completions)
     }

@@ -1,26 +1,29 @@
-//! TCP JSON-lines serving front-end.
+//! TCP JSON-lines serving front-end over a sharded [`EngineGroup`].
 //!
 //! Protocol (one JSON object per line):
 //!   request:  {"id": 1, "prompt": [tok, ...], "max_new": 32}
 //!   response: {"id": 1, "generated": [tok, ...], "stop": "eos",
 //!              "ttft_ms": 12.3, "e2e_ms": 45.6}
 //!
-//! The engine is single-threaded (one PJRT CPU device); the server
-//! thread-pool handles connection I/O and funnels requests through a
-//! channel into the engine loop, which batches them continuously. (The
-//! offline vendor set has no tokio; std::net + threads provide the same
-//! architecture.)
+//! Connection I/O runs on per-connection reader threads that funnel
+//! parsed requests through a channel into the serving loop, which routes
+//! them across the group's engine shards and fans completions back to
+//! the owning connection. Ids are rewritten internally so concurrent
+//! clients cannot collide. (The offline vendor set has no tokio;
+//! std::net + threads provide the same architecture.)
 
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::{Arc, Mutex};
 use std::time::Duration;
 
 use anyhow::{anyhow, Result};
 
-use super::engine::Engine;
 use super::request::{Completion, Request, StopReason};
+use super::shard::EngineGroup;
+use super::DecodeEngine;
 use crate::util::json::Json;
 
 /// Parse one request line.
@@ -60,75 +63,211 @@ struct Inflight {
     client_id: u64,
 }
 
-/// Serve forever on `addr`. Each connection may pipeline requests; ids
-/// are rewritten internally so concurrent clients cannot collide.
-pub fn serve(mut engine: Engine, addr: &str) -> Result<()> {
+/// Write one completion back to its owning connection, restoring the
+/// client's id.
+fn reply(inflight: &mut std::collections::HashMap<u64, Inflight>,
+         mut c: Completion) {
+    if let Some(fl) = inflight.remove(&c.id) {
+        c.id = fl.client_id;
+        let line = encode_completion(&c);
+        if let Ok(mut s) = fl.conn.lock() {
+            let _ = writeln!(s, "{line}");
+        }
+    }
+}
+
+/// Serve forever on `addr` across the group's shards.
+pub fn serve<E: DecodeEngine>(group: EngineGroup<E>, addr: &str) -> Result<()> {
     let listener = TcpListener::bind(addr).map_err(|e| anyhow!("bind {addr}: {e}"))?;
+    eprintln!("[seerattn] serving on {addr} ({} shard{})", group.n_shards(),
+              if group.n_shards() == 1 { "" } else { "s" });
+    serve_on(listener, group, None)
+}
+
+/// Serve on an already-bound listener; with `limit = Some(n)` the loop
+/// returns after writing `n` completions (tests bind port 0 and pass a
+/// limit), printing the aggregated fleet metrics on the way out.
+pub fn serve_on<E: DecodeEngine>(listener: TcpListener,
+                                 mut group: EngineGroup<E>,
+                                 limit: Option<usize>) -> Result<()> {
     listener.set_nonblocking(true)?;
-    eprintln!("[seerattn] serving on {addr} (policy {})", engine.ecfg.policy.name());
+    let stop = Arc::new(AtomicBool::new(false));
+    let acceptor_stop = stop.clone();
+    // Live connections, so shutdown can close them all — a client
+    // mid-pipeline at exit gets EOF instead of blocking forever. Each
+    // reader thread removes its entry on disconnect, so the registry
+    // (and its duplicated fds) tracks only *live* connections.
+    let conns: Arc<Mutex<std::collections::HashMap<u64, TcpStream>>> =
+        Arc::new(Mutex::new(std::collections::HashMap::new()));
+    let acceptor_conns = conns.clone();
     let (tx, rx): (Sender<(Request, Arc<Mutex<TcpStream>>)>, Receiver<_>) = channel();
     // Acceptor thread: spawns a reader thread per connection.
-    std::thread::spawn(move || loop {
-        match listener.accept() {
-            Ok((stream, _)) => {
-                let tx = tx.clone();
-                std::thread::spawn(move || {
-                    let shared = Arc::new(Mutex::new(stream.try_clone().unwrap()));
-                    let reader = BufReader::new(stream);
-                    for line in reader.lines() {
-                        let line = match line {
-                            Ok(l) => l,
-                            Err(_) => break,
-                        };
-                        if line.trim().is_empty() {
-                            continue;
-                        }
-                        match parse_request(&line) {
-                            Ok(req) => {
-                                let _ = tx.send((req, shared.clone()));
-                            }
-                            Err(e) => {
-                                let mut s = shared.lock().unwrap();
-                                let _ = writeln!(s, "{{\"error\": \"{e}\"}}");
-                            }
-                        }
+    std::thread::spawn(move || {
+        let mut next_conn = 0u64;
+        loop {
+            match listener.accept() {
+                Ok((stream, _)) => {
+                    if acceptor_stop.load(Ordering::Relaxed) {
+                        break;
                     }
-                });
+                    let cid = next_conn;
+                    next_conn += 1;
+                    match stream.try_clone() {
+                        Ok(clone) => {
+                            acceptor_conns.lock().unwrap().insert(cid, clone);
+                        }
+                        // Untracked connections could never be closed at
+                        // shutdown — refuse rather than serve one.
+                        Err(_) => continue,
+                    }
+                    let tx = tx.clone();
+                    let reader_conns = acceptor_conns.clone();
+                    std::thread::spawn(move || {
+                        let shared =
+                            Arc::new(Mutex::new(stream.try_clone().unwrap()));
+                        let reader = BufReader::new(stream);
+                        for line in reader.lines() {
+                            let line = match line {
+                                Ok(l) => l,
+                                Err(_) => break,
+                            };
+                            if line.trim().is_empty() {
+                                continue;
+                            }
+                            match parse_request(&line) {
+                                Ok(req) => {
+                                    let _ = tx.send((req, shared.clone()));
+                                }
+                                Err(e) => {
+                                    // Through Json so the message is
+                                    // escaped (parse errors quote the
+                                    // missing key).
+                                    let reply = Json::obj(vec![
+                                        ("error", Json::Str(format!("{e}"))),
+                                    ])
+                                    .to_string();
+                                    let mut s = shared.lock().unwrap();
+                                    let _ = writeln!(s, "{reply}");
+                                }
+                            }
+                        }
+                        // Disconnect: release this connection's registry
+                        // entry (and its duplicated fd).
+                        reader_conns.lock().unwrap().remove(&cid);
+                    });
+                }
+                Err(ref e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                    if acceptor_stop.load(Ordering::Relaxed) {
+                        break;
+                    }
+                    std::thread::sleep(Duration::from_millis(5));
+                }
+                Err(_) => break,
             }
-            Err(ref e) if e.kind() == std::io::ErrorKind::WouldBlock => {
-                std::thread::sleep(Duration::from_millis(5));
-            }
-            Err(_) => break,
         }
     });
 
-    // Engine loop: admit from the channel, step, push completions back.
+    // Serving loop: route newly arrived requests across the shards, fan
+    // completed generations back to their connections. Any exit path —
+    // limit reached or a shard failure — must stop the acceptor and
+    // shut the group down, so errors are collected rather than
+    // early-returned.
+    let max_prompt = group.max_prompt_len();
     let mut inflight: std::collections::HashMap<u64, Inflight> =
         std::collections::HashMap::new();
     let mut next_id = 0u64;
-    loop {
-        // Drain newly arrived requests.
+    let mut served = 0usize;
+    let mut failure: Option<anyhow::Error> = None;
+    'serve: loop {
+        // Checked at loop entry so limit = Some(0) terminates without
+        // waiting for a completion that will never be counted.
+        if let Some(n) = limit {
+            if served >= n {
+                break 'serve;
+            }
+        }
         while let Ok((mut req, conn)) = rx.try_recv() {
+            // Reject instead of submitting: an over-long prompt would
+            // panic the target shard's engine (context overflow).
+            if req.prompt.len() > max_prompt {
+                let reply = Json::obj(vec![
+                    ("id", Json::Num(req.id as f64)),
+                    ("error",
+                     Json::Str(format!("prompt too long ({} > {max_prompt} tokens)",
+                                       req.prompt.len()))),
+                ])
+                .to_string();
+                if let Ok(mut s) = conn.lock() {
+                    let _ = writeln!(s, "{reply}");
+                }
+                continue;
+            }
             let client_id = req.id;
             req.id = next_id;
             inflight.insert(next_id, Inflight { conn, client_id });
             next_id += 1;
-            engine.submit(req);
+            if let Err(e) = group.submit(req) {
+                failure = Some(e);
+                break 'serve;
+            }
         }
-        if engine.idle() {
-            std::thread::sleep(Duration::from_millis(2));
-            continue;
+        match group.poll(Duration::from_millis(2)) {
+            Ok(Some(c)) => {
+                reply(&mut inflight, c);
+                served += 1;
+            }
+            Ok(None) => {}
+            Err(e) => {
+                failure = Some(e);
+                break 'serve;
+            }
         }
-        for mut c in engine.step()? {
-            if let Some(fl) = inflight.remove(&c.id) {
-                c.id = fl.client_id;
-                let line = encode_completion(&c);
-                if let Ok(mut s) = fl.conn.lock() {
-                    let _ = writeln!(s, "{line}");
+    }
+    stop.store(true, Ordering::Relaxed);
+    // Requests still sitting in the parse channel were accepted but
+    // never routed — tell their clients instead of going silent.
+    while let Ok((req, conn)) = rx.try_recv() {
+        let msg = Json::obj(vec![
+            ("id", Json::Num(req.id as f64)),
+            ("error", Json::Str("server shutting down".to_string())),
+        ])
+        .to_string();
+        if let Ok(mut s) = conn.lock() {
+            let _ = writeln!(s, "{msg}");
+        }
+    }
+    // The limit counts served replies: anything already routed to a
+    // shard still gets its reply before shutdown, so no accepted
+    // request is silently dropped — and a shard failure during this
+    // drain is surfaced exactly like one during the main loop.
+    if failure.is_none() {
+        while group.inflight() > 0 {
+            match group.poll(Duration::from_millis(5)) {
+                Ok(Some(c)) => reply(&mut inflight, c),
+                Ok(None) => {}
+                Err(e) => {
+                    failure = Some(e);
+                    break;
                 }
             }
         }
     }
+    let result = match failure {
+        None => group.shutdown().map(|gm| eprintln!("{}", gm.report())),
+        Some(e) => {
+            // Best-effort teardown; the original failure is the story.
+            let _ = group.shutdown();
+            Err(e)
+        }
+    };
+    // A reader thread may have parsed a request after the drain above —
+    // closing every connection turns "blocked forever on read_line"
+    // into an EOF for any such client (queued replies still flush:
+    // TCP sends the write queue before FIN).
+    for s in conns.lock().unwrap().values() {
+        let _ = s.shutdown(std::net::Shutdown::Both);
+    }
+    result
 }
 
 #[cfg(test)]

@@ -1,0 +1,332 @@
+//! Deterministic host-only decode engine for the serving test harness.
+//!
+//! [`SimEngine`] mirrors the PJRT engine's continuous-batching control
+//! flow exactly — bounded batch slots, admit+prefill when slots free up,
+//! one decode token per step for every running slot, stop on EOS /
+//! max-new / context-full, completion reaping, metrics recording — but
+//! replaces the device model with a pure token function: every generated
+//! token is a deterministic mix of the engine seed and the request's
+//! prompt. The output for a request therefore depends **only** on the
+//! request content and the engine configuration, never on batch
+//! placement, admission order, or shard assignment — which is precisely
+//! the property that makes 1-shard vs N-shard completion parity provable
+//! in `rust/tests/serving.rs`. (The real engine has the same property
+//! under greedy sampling; see `rust/tests/engine.rs`.)
+
+use std::collections::VecDeque;
+use std::time::Instant;
+
+use anyhow::Result;
+
+use super::metrics::Metrics;
+use super::request::{Completion, Request, SeqStats, StopReason};
+use super::DecodeEngine;
+use crate::workload::Vocab;
+
+/// Domain-separation tag folded into every slot's initial state, so a
+/// seed of 0 still produces a non-trivial token stream.
+const SIM_TAG: u64 = 0x5EE7_A77E_0DEC_0DE5;
+
+/// SplitMix64 finalizer — the per-token mixing function.
+fn mix(mut z: u64) -> u64 {
+    z = z.wrapping_add(0x9e3779b97f4a7c15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xbf58476d1ce4e5b9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94d049bb133111eb);
+    z ^ (z >> 31)
+}
+
+#[derive(Debug, Clone, Copy)]
+pub struct SimConfig {
+    /// Concurrent batch slots.
+    pub batch: usize,
+    /// Context window (tokens); mirrors the engine's ContextFull stop.
+    pub max_seq: usize,
+    /// Engine seed; part of every slot's token-function state.
+    pub seed: u64,
+    /// Minimum generated tokens before EOS may fire.
+    pub min_gen: usize,
+    /// EOS fires when `state % eos_every == 0` (0 disables EOS).
+    pub eos_every: u64,
+}
+
+impl Default for SimConfig {
+    fn default() -> Self {
+        SimConfig { batch: 4, max_seq: 512, seed: 0, min_gen: 4, eos_every: 23 }
+    }
+}
+
+struct SimSlot {
+    req: Request,
+    admitted: Instant,
+    first_token: Option<Instant>,
+    /// Rolling token-function state (seed + prompt hash + emitted tokens).
+    state: u64,
+    /// Tokens whose KV would be cached: prompt + generated minus the
+    /// just-emitted token (exactly the engine's `Slot::len` semantics,
+    /// so ContextFull fires on the same step).
+    len: usize,
+    generated: Vec<i32>,
+    stop: Option<StopReason>,
+}
+
+pub struct SimEngine {
+    pub cfg: SimConfig,
+    slots: Vec<Option<SimSlot>>,
+    queue: VecDeque<(Request, Instant)>,
+    pub metrics: Metrics,
+    pub vocab: Vocab,
+}
+
+impl SimEngine {
+    pub fn new(cfg: SimConfig) -> SimEngine {
+        SimEngine {
+            slots: (0..cfg.batch).map(|_| None).collect(),
+            queue: VecDeque::new(),
+            metrics: Metrics::new(),
+            vocab: Vocab::default(),
+            cfg,
+        }
+    }
+
+    /// The deterministic generation a request would produce, computed
+    /// directly (tests compare engine output against this).
+    pub fn expected_generation(cfg: &SimConfig, prompt: &[i32],
+                               max_new: usize) -> (Vec<i32>, StopReason) {
+        let vocab = Vocab::default();
+        let mut state = cfg.seed ^ SIM_TAG;
+        for &t in prompt {
+            state = mix(state ^ t as u64);
+        }
+        let mut generated = Vec::new();
+        let mut len = prompt.len();
+        loop {
+            if !generated.is_empty() {
+                // The previous token enters the cache before the next
+                // decode step (engine decode semantics).
+                len += 1;
+            }
+            state = mix(state);
+            let tok = Self::token_from(cfg, &vocab, state, generated.len());
+            generated.push(tok);
+            if let Some(stop) = StopReason::decide(tok, vocab.eos, generated.len(),
+                                                   max_new, len, cfg.max_seq) {
+                return (generated, stop);
+            }
+        }
+    }
+
+    fn token_from(cfg: &SimConfig, vocab: &Vocab, state: u64,
+                  n_generated: usize) -> i32 {
+        if cfg.eos_every > 0 && n_generated >= cfg.min_gen
+            && state % cfg.eos_every == 0
+        {
+            return vocab.eos;
+        }
+        // Keep clear of the control-token range (ids 0..8).
+        8 + (state % 200) as i32
+    }
+
+    fn admit_and_prefill(&mut self) {
+        let t0 = Instant::now();
+        let cfg = self.cfg;
+        let vocab = self.vocab;
+        let mut admitted_any = false;
+        for entry in self.slots.iter_mut() {
+            if entry.is_none() {
+                if let Some((req, admitted)) = self.queue.pop_front() {
+                    // "Prefill": fold the prompt into the token-function
+                    // state and emit the first token.
+                    let mut state = cfg.seed ^ SIM_TAG;
+                    for &t in &req.prompt {
+                        state = mix(state ^ t as u64);
+                    }
+                    let mut slot = SimSlot {
+                        state,
+                        len: req.prompt.len(),
+                        generated: Vec::new(),
+                        stop: None,
+                        first_token: None,
+                        admitted,
+                        req,
+                    };
+                    Self::emit(&cfg, &vocab, &mut slot);
+                    slot.first_token = Some(Instant::now());
+                    *entry = Some(slot);
+                    admitted_any = true;
+                }
+            }
+        }
+        if admitted_any {
+            self.metrics.prefill_s.push(t0.elapsed().as_secs_f64());
+        }
+    }
+
+    /// Generate one token. `slot.len` is NOT advanced here — the caller
+    /// accounts cache growth (decode caches the previous token first),
+    /// mirroring the engine's prefill/decode split.
+    fn emit(cfg: &SimConfig, vocab: &Vocab, slot: &mut SimSlot) {
+        slot.state = mix(slot.state);
+        let tok = Self::token_from(cfg, vocab, slot.state, slot.generated.len());
+        slot.generated.push(tok);
+        slot.stop = StopReason::decide(tok, vocab.eos, slot.generated.len(),
+                                       slot.req.max_new, slot.len, cfg.max_seq);
+    }
+
+    fn decode_step(&mut self) {
+        let t0 = Instant::now();
+        let cfg = self.cfg;
+        let vocab = self.vocab;
+        for slot in self.slots.iter_mut().flatten() {
+            // The previous step's token enters the cache, then the next
+            // token is generated (engine decode order).
+            slot.len += 1;
+            Self::emit(&cfg, &vocab, slot);
+        }
+        self.metrics.decode_step_s.push(t0.elapsed().as_secs_f64());
+    }
+
+    fn reap(&mut self) -> Vec<Completion> {
+        let mut out = Vec::new();
+        for entry in self.slots.iter_mut() {
+            let finished = entry
+                .as_ref()
+                .map(|s| s.stop.is_some())
+                .unwrap_or(false);
+            if finished {
+                let slot = entry.take().unwrap();
+                let now = Instant::now();
+                let ttft = slot
+                    .first_token
+                    .map(|t| t - slot.admitted)
+                    .unwrap_or_default();
+                let e2e = now - slot.admitted;
+                self.metrics.record_completion(ttft, e2e, slot.generated.len());
+                out.push(Completion {
+                    id: slot.req.id,
+                    prompt_len: slot.req.prompt.len(),
+                    generated: slot.generated,
+                    stop: slot.stop.unwrap(),
+                    ttft,
+                    e2e,
+                    stats: SeqStats::default(),
+                });
+            }
+        }
+        out
+    }
+
+    /// Run everything currently queued to completion.
+    pub fn run_to_completion(&mut self) -> Result<Vec<Completion>> {
+        let mut out = Vec::new();
+        while !DecodeEngine::idle(self) {
+            out.extend(DecodeEngine::step(self)?);
+        }
+        Ok(out)
+    }
+}
+
+impl DecodeEngine for SimEngine {
+    fn submit_at(&mut self, req: Request, arrived: Instant) {
+        assert!(req.prompt.len() + 2 < self.cfg.max_seq,
+                "prompt {} too long for context {}", req.prompt.len(),
+                self.cfg.max_seq);
+        self.metrics.start_clock();
+        self.queue.push_back((req, arrived));
+    }
+
+    fn step(&mut self) -> Result<Vec<Completion>> {
+        if !self.queue.is_empty() && self.slots.iter().any(|s| s.is_none()) {
+            self.admit_and_prefill();
+        } else if self.active() > 0 {
+            self.decode_step();
+        }
+        Ok(self.reap())
+    }
+
+    fn pending(&self) -> usize {
+        self.queue.len()
+    }
+
+    fn active(&self) -> usize {
+        self.slots.iter().filter(|s| s.is_some()).count()
+    }
+
+    fn batch_size(&self) -> usize {
+        self.cfg.batch
+    }
+
+    fn max_prompt_len(&self) -> usize {
+        // submit asserts prompt.len() + 2 < max_seq.
+        self.cfg.max_seq.saturating_sub(3)
+    }
+
+    fn take_metrics(&mut self) -> Metrics {
+        std::mem::take(&mut self.metrics)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn req(id: u64, prompt: Vec<i32>, max_new: usize) -> Request {
+        Request { id, prompt, max_new }
+    }
+
+    #[test]
+    fn generation_is_pure_function_of_prompt_and_seed() {
+        let cfg = SimConfig::default();
+        let p = vec![1, 42, 99, 7];
+        let (a, sa) = SimEngine::expected_generation(&cfg, &p, 16);
+        let (b, sb) = SimEngine::expected_generation(&cfg, &p, 16);
+        assert_eq!(a, b);
+        assert_eq!(sa, sb);
+        let other = SimConfig { seed: 1, ..cfg };
+        let (c, _) = SimEngine::expected_generation(&other, &p, 16);
+        assert_ne!(a, c, "seed must matter");
+    }
+
+    #[test]
+    fn engine_matches_expected_generation_regardless_of_batching() {
+        let cfg = SimConfig { batch: 2, ..Default::default() };
+        let prompts: Vec<Vec<i32>> =
+            (0..5).map(|i| vec![1, 10 + i, 20 + i, 3]).collect();
+        let mut eng = SimEngine::new(cfg);
+        for (i, p) in prompts.iter().enumerate() {
+            DecodeEngine::submit(&mut eng, req(i as u64, p.clone(), 24));
+        }
+        let comps = eng.run_to_completion().unwrap();
+        assert_eq!(comps.len(), 5);
+        for c in comps {
+            let (want, stop) =
+                SimEngine::expected_generation(&cfg, &prompts[c.id as usize], 24);
+            assert_eq!(c.generated, want, "id {}", c.id);
+            assert_eq!(c.stop, stop);
+        }
+        assert_eq!(eng.metrics.requests_completed, 5);
+        assert!(eng.metrics.tokens_generated > 0);
+    }
+
+    #[test]
+    fn stop_reasons_cover_eos_and_max_new() {
+        let cfg = SimConfig::default();
+        let mut saw_eos = false;
+        let mut saw_max = false;
+        for i in 0..40 {
+            let (g, stop) =
+                SimEngine::expected_generation(&cfg, &[i, i + 1, i + 2], 12);
+            match stop {
+                StopReason::Eos => {
+                    saw_eos = true;
+                    assert_eq!(*g.last().unwrap(), Vocab::default().eos);
+                }
+                StopReason::MaxNewTokens => {
+                    saw_max = true;
+                    assert_eq!(g.len(), 12);
+                }
+                StopReason::ContextFull => {}
+            }
+        }
+        assert!(saw_eos && saw_max, "eos={saw_eos} max={saw_max}");
+    }
+}

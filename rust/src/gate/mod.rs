@@ -194,12 +194,29 @@ pub fn softmax_rows(scores: &mut [f32], n: usize) {
 pub fn oracle_scores(cfg: &ModelConfig, q_rope: &[f32],
                      k_at: &dyn Fn(usize, usize) -> *const f32, len: usize,
                      block_size: usize) -> Vec<f32> {
+    let mut out = Vec::new();
+    let mut logits = Vec::new();
+    oracle_scores_into(cfg, q_rope, k_at, len, block_size, &mut out, &mut logits);
+    out
+}
+
+/// Allocation-free variant of [`oracle_scores`]: writes the
+/// `[Hkv, n_blocks]` scores into `out` and uses `logits` as the per-token
+/// scratch row, both grown once and reused across calls. Bit-identical to
+/// [`oracle_scores`] (same operations in the same order); the
+/// `track_recall` / oracle selection hot loop calls this every step.
+pub fn oracle_scores_into(cfg: &ModelConfig, q_rope: &[f32],
+                          k_at: &dyn Fn(usize, usize) -> *const f32, len: usize,
+                          block_size: usize, out: &mut Vec<f32>,
+                          logits: &mut Vec<f32>) {
     let (h_all, hkv, g, dh) = (cfg.n_heads, cfg.n_kv_heads, cfg.group_size,
                                cfg.head_dim);
     let nblk = len.div_ceil(block_size);
     let scale = 1.0 / (dh as f32).sqrt();
-    let mut out = vec![0f32; hkv * nblk];
-    let mut logits = vec![0f32; len];
+    out.clear();
+    out.resize(hkv * nblk, 0.0);
+    logits.clear();
+    logits.resize(len, 0.0);
     for qh in 0..h_all {
         let kvh = qh / g;
         let q = &q_rope[qh * dh..(qh + 1) * dh];
@@ -230,7 +247,6 @@ pub fn oracle_scores(cfg: &ModelConfig, q_rope: &[f32],
             }
         }
     }
-    out
 }
 
 #[cfg(test)]
@@ -354,6 +370,38 @@ mod tests {
             let sum: f32 = row.iter().sum();
             assert!((sum - 1.0).abs() < 1e-5);
             assert!(row.windows(2).all(|w| w[0] < w[1]));
+        }
+    }
+
+    #[test]
+    fn oracle_scores_into_bit_identical_with_dirty_reused_buffers() {
+        let c = cfg();
+        let mut rng = crate::util::rng::Rng::new(41);
+        let mut out = Vec::new();
+        let mut logits = Vec::new();
+        let max_tokens = 24;
+        for step in 0..60 {
+            // Context length drifts across block boundaries so both the
+            // partial-last-block and shrinking-buffer cases are hit.
+            let len = rng.range(1, max_tokens + 1);
+            let kdata: Vec<f32> = (0..c.n_kv_heads * max_tokens * c.head_dim)
+                .map(|_| rng.normal() as f32)
+                .collect();
+            let q: Vec<f32> = (0..c.n_heads * c.head_dim)
+                .map(|_| rng.normal() as f32)
+                .collect();
+            let dh = c.head_dim;
+            let k_at = |h: usize, t: usize| -> *const f32 {
+                kdata[(h * max_tokens + t) * dh..].as_ptr()
+            };
+            let expect = oracle_scores(&c, &q, &k_at, len, c.block_size);
+            // Poison the reused buffers to prove they are fully rewritten.
+            out.resize(out.len().max(7), 0.0);
+            out.fill(9.25);
+            logits.fill(-3.5);
+            oracle_scores_into(&c, &q, &k_at, len, c.block_size, &mut out,
+                               &mut logits);
+            assert_eq!(out, expect, "step={step} len={len}");
         }
     }
 

@@ -5,7 +5,7 @@ use std::rc::Rc;
 
 use anyhow::{anyhow, bail, Result};
 
-use seerattn::coordinator::{server, Engine, EngineConfig};
+use seerattn::coordinator::{server, Engine, EngineConfig, EngineGroup};
 use seerattn::harness::{self, experiments};
 use seerattn::model::ParamStore;
 use seerattn::runtime::Runtime;
@@ -22,7 +22,7 @@ USAGE:
   seerattn repro   <fig4|fig5|fig6|fig7|fig8|fig9|table1|table2|recall|offload|all>
                    [--n EPISODES] [--bench-budget SECONDS]
   seerattn serve   [--addr HOST:PORT] [--policy P] [--budget TOKENS]
-                   [--block-size B]
+                   [--block-size B] [--shards N] [--gather-threads T]
   seerattn generate [--task easy|hard] [--policy P] [--budget TOKENS] [--n N]
 
 POLICIES: dense | seer | seer-threshold:T | seer-topp:P | oracle | quest
@@ -216,13 +216,22 @@ fn cmd_serve(args: &Args, dir: &PathBuf) -> Result<()> {
         policy,
         block_size: args.usize_flag("block-size", 16),
         max_new: args.usize_flag("max-new", 64),
+        gather_threads: args.usize_flag("gather-threads", 1),
         ..Default::default()
     };
-    let (rt, params) = harness::load_runtime_and_params(dir)?;
-    let rt = Rc::new(rt);
-    let gates = harness::load_gates(&rt, dir, ecfg.block_size)?;
-    let engine = Engine::new(rt, params, gates, ecfg)?;
-    server::serve(engine, &args.str_flag("addr", "127.0.0.1:7077"))
+    let shards = args.usize_flag("shards", 1);
+    // Each shard thread constructs its own runtime + engine (the engine
+    // holds an Rc and never crosses threads); the factory just captures
+    // the artifact dir and the shared config.
+    let dir = dir.clone();
+    let group = EngineGroup::new(shards, move |_shard| {
+        let (rt, params) = harness::load_runtime_and_params(&dir)?;
+        let rt = Rc::new(rt);
+        let gates = harness::load_gates(&rt, &dir, ecfg.block_size)?;
+        Engine::new(rt, params, gates, ecfg)
+    })?;
+    eprintln!("[seerattn] {} engine shard(s), policy {}", shards, policy.name());
+    server::serve(group, &args.str_flag("addr", "127.0.0.1:7077"))
 }
 
 fn cmd_generate(args: &Args, dir: &PathBuf) -> Result<()> {

@@ -1,0 +1,69 @@
+//! Armed counting allocator for allocation-regression gates.
+//!
+//! One shared implementation for every binary that asserts
+//! zero-steady-state allocations (`benches/decode_hot_path.rs`,
+//! `tests/prefill_alloc.rs`), so the two gates can never diverge in what
+//! they measure. Each binary registers its own instance:
+//!
+//! ```ignore
+//! use seerattn::util::alloc_count::{count_allocs, CountingAlloc};
+//!
+//! #[global_allocator]
+//! static GLOBAL: CountingAlloc = CountingAlloc;
+//!
+//! let allocs = count_allocs(|| hot_path());
+//! assert_eq!(allocs, 0);
+//! ```
+//!
+//! Counting is gated on an armed flag so the harness's own bookkeeping
+//! (result series, JSON building) stays out of the tally. `dealloc` is
+//! deliberately uncounted: the gates assert "no heap traffic acquired",
+//! and frees of pre-warm buffers are not a regression. Arm from a single
+//! thread only — concurrent allocating threads would pollute the count.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+
+static ALLOCS: AtomicU64 = AtomicU64::new(0);
+static ARMED: AtomicBool = AtomicBool::new(false);
+
+pub struct CountingAlloc;
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        if ARMED.load(Ordering::Relaxed) {
+            ALLOCS.fetch_add(1, Ordering::Relaxed);
+        }
+        System.alloc(layout)
+    }
+
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        if ARMED.load(Ordering::Relaxed) {
+            ALLOCS.fetch_add(1, Ordering::Relaxed);
+        }
+        System.alloc_zeroed(layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        if ARMED.load(Ordering::Relaxed) {
+            ALLOCS.fetch_add(1, Ordering::Relaxed);
+        }
+        System.realloc(ptr, layout, new_size)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+}
+
+/// Run `f` with allocation counting armed; returns the allocation count.
+/// Only meaningful when [`CountingAlloc`] is the registered global
+/// allocator of the running binary.
+pub fn count_allocs<F: FnMut()>(mut f: F) -> u64 {
+    ARMED.store(true, Ordering::SeqCst);
+    let before = ALLOCS.load(Ordering::SeqCst);
+    f();
+    let after = ALLOCS.load(Ordering::SeqCst);
+    ARMED.store(false, Ordering::SeqCst);
+    after - before
+}

@@ -1,6 +1,7 @@
 //! Small self-contained utilities (the build is fully offline, so the
 //! crate hand-rolls what would normally come from serde/rand/criterion).
 
+pub mod alloc_count;
 pub mod bench;
 pub mod buf;
 pub mod json;

@@ -16,6 +16,18 @@ impl Series {
         self.samples.push(x);
     }
 
+    /// Raw samples, in insertion order (merging goes through
+    /// [`Series::extend_from`]; this is the read-side accessor for
+    /// callers that need the underlying data, e.g. tests / exporters).
+    pub fn samples(&self) -> &[f64] {
+        &self.samples
+    }
+
+    /// Append every sample of `other` (per-shard -> fleet merging).
+    pub fn extend_from(&mut self, other: &Series) {
+        self.samples.extend_from_slice(&other.samples);
+    }
+
     pub fn len(&self) -> usize {
         self.samples.len()
     }
@@ -115,6 +127,22 @@ mod tests {
         assert!((s.percentile(0.0) - 1.0).abs() < 1e-9);
         assert!((s.percentile(100.0) - 100.0).abs() < 1e-9);
         assert!((s.percentile(95.0) - 95.05).abs() < 1e-9);
+    }
+
+    #[test]
+    fn extend_from_merges_samples() {
+        let mut a = Series::new();
+        let mut b = Series::new();
+        for x in [1.0, 2.0] {
+            a.push(x);
+        }
+        for x in [3.0, 4.0] {
+            b.push(x);
+        }
+        a.extend_from(&b);
+        assert_eq!(a.len(), 4);
+        assert_eq!(a.samples(), &[1.0, 2.0, 3.0, 4.0]);
+        assert!((a.mean() - 2.5).abs() < 1e-12);
     }
 
     #[test]

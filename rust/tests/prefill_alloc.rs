@@ -1,0 +1,145 @@
+//! Allocation-regression test for the prefill staging path (same
+//! counting-allocator harness as `benches/decode_hot_path.rs`, same
+//! synthetic-replica approach as `tests/hot_path_parity.rs`).
+//!
+//! The seed engine allocated five buffers per `admit_and_prefill` call:
+//! the padded `ids [b, s]` / `seq_len [b]` batch tensors and the
+//! per-token `krow`/`vrow`/`prow` scatter rows. All five now live in the
+//! engine-owned `StagingArena` (`PrefillStaging`), so the staging + row
+//! scatter work of a steady-state admission — including the paged-cache
+//! appends, whose page tables and pool free-list retain capacity across
+//! release/re-admit — performs **zero** heap allocations after warm-up.
+//!
+//! (Per-request cache *state* — fresh `KcompCache`/`QuestMeta` per
+//! admitted sequence — is intentionally out of scope: it is new state
+//! per request, not staging; see PERF.md.)
+//!
+//! This file holds exactly one test so no concurrent test thread can
+//! allocate while the counter is armed.
+
+use seerattn::coordinator::StagingArena;
+use seerattn::kvcache::{PagedKvPool, SeqKv};
+use seerattn::util::alloc_count::{count_allocs, CountingAlloc};
+use seerattn::util::rng::Rng;
+
+#[global_allocator]
+static GLOBAL: CountingAlloc = CountingAlloc;
+
+// Fixture geometry (mirrors one engine prefill batch).
+const B: usize = 4;
+const S: usize = 64;
+const HKV: usize = 2;
+const DH: usize = 4;
+const LAYERS: usize = 2;
+const BS: usize = 4;
+
+struct Fixture {
+    /// Fake prefill executable outputs, layout [L, B, Hkv, S, dh] (one
+    /// array standing in for each of k_rope / v / k_pre).
+    kr: Vec<f32>,
+    vv: Vec<f32>,
+    kp: Vec<f32>,
+    /// Two admission waves with different prompt lengths (dirty extents
+    /// must churn between acquires).
+    prompt_sets: [Vec<Vec<i32>>; 2],
+}
+
+fn fixture(seed: u64) -> Fixture {
+    let mut rng = Rng::new(seed);
+    let n = LAYERS * B * HKV * S * DH;
+    let mut gen = |_: usize| (0..n).map(|_| rng.normal() as f32).collect::<Vec<_>>();
+    let kr = gen(0);
+    let vv = gen(1);
+    let kp = gen(2);
+    let mut prompts = |lo: usize| {
+        (0..B)
+            .map(|i| (0..lo + 7 * i % 40 + 5).map(|t| (t % 97) as i32).collect())
+            .collect::<Vec<Vec<i32>>>()
+    };
+    let prompt_sets = [prompts(9), prompts(23)];
+    Fixture { kr, vv, kp, prompt_sets }
+}
+
+/// One synthetic `admit_and_prefill`: stage the padded batch through the
+/// arena, then scatter the per-token rows into the paged KV caches —
+/// exactly the host-side work the engine's prefill performs around the
+/// device call.
+fn prefill_step(fx: &Fixture, wave: usize, arena: &mut StagingArena,
+                pool: &mut PagedKvPool, kv: &mut [Vec<SeqKv>]) {
+    let prompts = &fx.prompt_sets[wave];
+    // Steady-state re-admission: finished sequences release their pages
+    // (page tables and the pool free list retain capacity).
+    for per_layer in kv.iter_mut() {
+        for seq in per_layer.iter_mut() {
+            seq.release(pool);
+        }
+    }
+    let set = arena.prefill(B, S, HKV * DH);
+    {
+        let (ids, seq_len, dirty) = set.ids_mut();
+        for (i, p) in prompts.iter().enumerate() {
+            ids[i * S..i * S + p.len()].copy_from_slice(p);
+            seq_len[i] = p.len() as i32;
+            dirty[i] = p.len();
+        }
+    }
+    let idx = |l: usize, bi: usize, h: usize, t: usize| {
+        (((l * B + bi) * HKV + h) * S + t) * DH
+    };
+    let (krow, vrow, prow) = set.rows_mut();
+    for (i, p) in prompts.iter().enumerate() {
+        for t in 0..p.len() {
+            for l in 0..LAYERS {
+                for h in 0..HKV {
+                    let o = idx(l, i, h, t);
+                    krow[h * DH..(h + 1) * DH].copy_from_slice(&fx.kr[o..o + DH]);
+                    vrow[h * DH..(h + 1) * DH].copy_from_slice(&fx.vv[o..o + DH]);
+                    prow[h * DH..(h + 1) * DH].copy_from_slice(&fx.kp[o..o + DH]);
+                }
+                kv[i][l].append(pool, krow, vrow).unwrap();
+            }
+        }
+    }
+}
+
+#[test]
+fn prefill_staging_zero_steady_state_allocations() {
+    let fx = fixture(19);
+    let mut arena = StagingArena::new();
+    let pages_per_seq = S / BS + 1;
+    let mut pool = PagedKvPool::new(B * LAYERS * pages_per_seq, HKV, DH, BS);
+    let mut kv: Vec<Vec<SeqKv>> =
+        (0..B).map(|_| (0..LAYERS).map(|_| SeqKv::new()).collect()).collect();
+
+    // Warm-up: create the prefill set, grow page tables to max extent.
+    for wave in [0, 1, 0, 1] {
+        prefill_step(&fx, wave, &mut arena, &mut pool, &mut kv);
+    }
+    assert_eq!(arena.allocations(), 1, "one prefill staging set ever");
+
+    // Steady state: admissions alternate between prompt-length waves;
+    // the staging path must not touch the heap at all.
+    let allocs = count_allocs(|| {
+        for step in 0..20 {
+            prefill_step(&fx, step % 2, &mut arena, &mut pool, &mut kv);
+        }
+    });
+    assert_eq!(allocs, 0,
+               "steady-state admit_and_prefill staging allocated {allocs} times");
+    assert_eq!(arena.allocations(), 1);
+
+    // Sanity: the caches really were refilled (not skipped).
+    for per_layer in &kv {
+        for seq in per_layer {
+            assert!(seq.len > 0);
+            assert_eq!(seq.n_blocks(), seq.len.div_ceil(BS));
+        }
+    }
+    // And all pages flow back on release (no leaks across waves).
+    for per_layer in kv.iter_mut() {
+        for seq in per_layer.iter_mut() {
+            seq.release(&mut pool);
+        }
+    }
+    assert_eq!(pool.free_pages(), pool.capacity());
+}

@@ -1,0 +1,389 @@
+//! End-to-end serving golden tests (pure host, default feature set).
+//!
+//! These drive the *production* serving code paths — `EngineGroup` shard
+//! threads + router + completion fan-in, `TraceRunner` replay, and the
+//! JSON-lines TCP server — with the deterministic `SimEngine` backend,
+//! pinning the properties the sharded serving layer promises:
+//!
+//!  1. N-shard `TraceRunner` output is per-request identical to
+//!     single-engine output on a seeded mixed Poisson trace (the
+//!     ISSUE 2 acceptance criterion).
+//!  2. Virtual-time replay is deterministic under a fixed rng seed.
+//!  3. The JSON-lines protocol round-trips over a real TCP socket.
+//!  4. The scoped-thread parallel gather is bit-identical to the serial
+//!     gather over the arena's disjoint dirty-extent rows.
+
+use std::collections::BTreeMap;
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+
+use seerattn::coordinator::request::StopReason;
+use seerattn::coordinator::scheduler::{Replay, TraceRunner};
+use seerattn::coordinator::server;
+use seerattn::coordinator::{Completion, EngineGroup, SimConfig, SimEngine};
+use seerattn::util::json::Json;
+use seerattn::util::rng::Rng;
+use seerattn::workload::trace::{poisson_trace, TracedRequest};
+use seerattn::workload::{TaskConfig, Vocab};
+
+fn mixed_trace(n: usize, seed: u64) -> Vec<TracedRequest> {
+    let vocab = Vocab::default();
+    let mixture = [TaskConfig::easy(), TaskConfig::hard()];
+    let mut rng = Rng::new(seed);
+    poisson_trace(&vocab, &mixture, n, 200.0, 24, &mut rng)
+}
+
+fn sim_group(shards: usize) -> EngineGroup<SimEngine> {
+    EngineGroup::new(shards, |_| Ok(SimEngine::new(SimConfig::default()))).unwrap()
+}
+
+/// Key completions by request id for order-independent comparison.
+fn by_id(comps: Vec<Completion>) -> BTreeMap<u64, (usize, Vec<i32>, StopReason)> {
+    let n = comps.len();
+    let map: BTreeMap<_, _> = comps
+        .into_iter()
+        .map(|c| (c.id, (c.prompt_len, c.generated, c.stop)))
+        .collect();
+    assert_eq!(map.len(), n, "duplicate completion ids");
+    map
+}
+
+// ---------------------------------------------------------------------
+// 1-shard vs N-shard parity (the acceptance criterion).
+// ---------------------------------------------------------------------
+
+#[test]
+fn four_shards_match_single_engine_per_request() {
+    let trace = mixed_trace(48, 7);
+    let runner = TraceRunner { replay: Replay::Virtual };
+
+    // Today's behaviour: one engine on the caller's thread.
+    let mut single = SimEngine::new(SimConfig::default());
+    let base = by_id(runner.run(&mut single, &trace).unwrap());
+    assert_eq!(base.len(), 48);
+
+    for shards in [1usize, 4] {
+        let mut group = sim_group(shards);
+        let comps = by_id(runner.run_group(&mut group, &trace).unwrap());
+        assert_eq!(comps.len(), base.len(), "{shards} shards: completion count");
+        for (id, want) in &base {
+            let got = comps.get(id).expect("missing id");
+            assert_eq!(got, want, "{shards} shards: request {id} diverged");
+        }
+        let gm = group.shutdown().unwrap();
+        assert_eq!(gm.fleet().requests_completed, 48);
+        if shards == 4 {
+            // The Poisson mix must actually have exercised every shard.
+            assert!(gm.shards.iter().all(|m| m.requests_completed > 0),
+                    "a shard sat idle: {:?}",
+                    gm.shards.iter().map(|m| m.requests_completed).collect::<Vec<_>>());
+        }
+    }
+}
+
+#[test]
+fn real_time_replay_matches_virtual_per_request() {
+    // Short trace at a high rate so the real-time run stays fast.
+    let trace = mixed_trace(8, 11);
+    let virt = {
+        let mut group = sim_group(2);
+        let out = by_id(TraceRunner { replay: Replay::Virtual }
+            .run_group(&mut group, &trace)
+            .unwrap());
+        group.shutdown().unwrap();
+        out
+    };
+    let real = {
+        let mut group = sim_group(2);
+        let out = by_id(TraceRunner { replay: Replay::RealTime }
+            .run_group(&mut group, &trace)
+            .unwrap());
+        group.shutdown().unwrap();
+        out
+    };
+    assert_eq!(virt, real, "replay mode must not change per-request output");
+}
+
+// ---------------------------------------------------------------------
+// Virtual-replay determinism under a fixed seed.
+// ---------------------------------------------------------------------
+
+#[test]
+fn virtual_replay_is_deterministic_under_fixed_seed() {
+    let runner = TraceRunner { replay: Replay::Virtual };
+    let mut outputs = Vec::new();
+    for _ in 0..2 {
+        // Regenerate the trace from the same seed each time: trace
+        // generation + replay + engines must all be deterministic.
+        let trace = mixed_trace(32, 23);
+        let mut group = sim_group(3);
+        outputs.push(by_id(runner.run_group(&mut group, &trace).unwrap()));
+        group.shutdown().unwrap();
+    }
+    assert_eq!(outputs[0], outputs[1]);
+    // And the generations really are the sim's pure function of the
+    // request content.
+    let trace = mixed_trace(32, 23);
+    let cfg = SimConfig::default();
+    for (id, (plen, generated, stop)) in &outputs[0] {
+        let t = &trace[*id as usize];
+        assert_eq!(*plen, t.episode.prompt.len());
+        let (want, want_stop) =
+            SimEngine::expected_generation(&cfg, &t.episode.prompt, t.max_new);
+        assert_eq!(generated, &want, "id {id}");
+        assert_eq!(stop, &want_stop, "id {id}");
+    }
+}
+
+// ---------------------------------------------------------------------
+// JSON-lines protocol over a real socket.
+// ---------------------------------------------------------------------
+
+#[test]
+fn tcp_server_round_trips_pipelined_requests() {
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    let n_requests = 6usize;
+    let group = sim_group(2);
+    let srv = std::thread::spawn(move || {
+        server::serve_on(listener, group, Some(n_requests)).unwrap();
+    });
+
+    let prompts: Vec<Vec<i32>> = (0..n_requests)
+        .map(|i| vec![1, 40 + i as i32, 41 + i as i32, 3])
+        .collect();
+    let mut conn = TcpStream::connect(addr).unwrap();
+    for (i, p) in prompts.iter().enumerate() {
+        let toks: Vec<String> = p.iter().map(|t| t.to_string()).collect();
+        // Client ids deliberately offset from the server's internal ones.
+        writeln!(conn,
+                 "{{\"id\": {}, \"prompt\": [{}], \"max_new\": 10}}",
+                 100 + i,
+                 toks.join(", "))
+            .unwrap();
+    }
+    conn.flush().unwrap();
+    let mut reader = BufReader::new(conn.try_clone().unwrap());
+    let cfg = SimConfig::default();
+    let mut seen = BTreeMap::new();
+    for _ in 0..n_requests {
+        let mut line = String::new();
+        reader.read_line(&mut line).unwrap();
+        let j = Json::parse(&line).unwrap();
+        let id = j.get("id").unwrap().as_i64().unwrap() as usize;
+        let generated: Vec<i32> = j
+            .get("generated")
+            .unwrap()
+            .as_arr()
+            .unwrap()
+            .iter()
+            .map(|t| t.as_i64().unwrap() as i32)
+            .collect();
+        assert!(j.get("ttft_ms").unwrap().as_f64().unwrap() >= 0.0);
+        assert!(j.get("e2e_ms").unwrap().as_f64().unwrap() >= 0.0);
+        seen.insert(id, (generated, j.get("stop").unwrap().as_str().unwrap().to_string()));
+    }
+    srv.join().unwrap();
+    assert_eq!(seen.len(), n_requests, "client ids restored uniquely");
+    for (i, p) in prompts.iter().enumerate() {
+        let (generated, stop) = seen.get(&(100 + i)).expect("client id");
+        let (want, want_stop) = SimEngine::expected_generation(&cfg, p, 10);
+        assert_eq!(generated, &want, "request {i}");
+        let want_stop = match want_stop {
+            StopReason::Eos => "eos",
+            StopReason::MaxNewTokens => "max_new",
+            StopReason::ContextFull => "context_full",
+        };
+        assert_eq!(stop, want_stop);
+    }
+}
+
+#[test]
+fn malformed_request_line_gets_error_reply() {
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    let group = sim_group(1);
+    let srv = std::thread::spawn(move || {
+        server::serve_on(listener, group, Some(1)).unwrap();
+    });
+    let mut conn = TcpStream::connect(addr).unwrap();
+    writeln!(conn, "{{\"id\": 1}}").unwrap(); // no prompt -> parse error
+    // Over-long prompt (SimConfig max_seq = 512): must be rejected at
+    // the server edge, not panic a shard.
+    let long: Vec<String> = (0..600).map(|t| (t % 90).to_string()).collect();
+    writeln!(conn, "{{\"id\": 9, \"prompt\": [{}]}}", long.join(", ")).unwrap();
+    writeln!(conn, "{{\"id\": 2, \"prompt\": [1, 2, 3], \"max_new\": 6}}").unwrap();
+    conn.flush().unwrap();
+    let mut reader = BufReader::new(conn);
+    let mut line = String::new();
+    reader.read_line(&mut line).unwrap();
+    // Error replies must be *valid* JSON even when the error message
+    // itself contains quotes (e.g. `missing key "prompt"`).
+    let j = Json::parse(&line).unwrap_or_else(|_| panic!("bad reply {line:?}"));
+    assert!(j.get("error").is_ok(), "got {line:?}");
+    line.clear();
+    reader.read_line(&mut line).unwrap();
+    let j = Json::parse(&line).unwrap_or_else(|_| panic!("bad reply {line:?}"));
+    assert_eq!(j.get("id").unwrap().as_i64().unwrap(), 9);
+    assert!(j.get("error").unwrap().as_str().unwrap().contains("too long"));
+    line.clear();
+    reader.read_line(&mut line).unwrap();
+    let j = Json::parse(&line).unwrap();
+    assert_eq!(j.get("id").unwrap().as_i64().unwrap(), 2);
+    srv.join().unwrap();
+}
+
+// ---------------------------------------------------------------------
+// Parallel gather == serial gather over disjoint arena rows.
+// ---------------------------------------------------------------------
+
+mod gather_parity {
+    use seerattn::coordinator::gather::{gather_dense_into, gather_one_dense,
+                                        gather_one_sparse, gather_sparse_into,
+                                        DenseGeom, GatherJob, SparseGeom};
+    use seerattn::coordinator::StagingArena;
+    use seerattn::kvcache::{PagedKvPool, SeqKv};
+    use seerattn::sparse::policy::{SelKind, SelectionBuf};
+    use seerattn::util::rng::Rng;
+
+    const BS: usize = 4;
+    const HKV: usize = 2;
+    const H_ALL: usize = 4;
+    const G: usize = H_ALL / HKV;
+    const DH: usize = 3;
+    const BATCH: usize = 5;
+
+    struct World {
+        pool: PagedKvPool,
+        seqs: Vec<SeqKv>,
+        sels: Vec<SelectionBuf>,
+        rng: Rng,
+    }
+
+    impl World {
+        fn new(seed: u64) -> World {
+            let mut w = World {
+                pool: PagedKvPool::new(BATCH * 20, HKV, DH, BS),
+                seqs: (0..BATCH).map(|_| SeqKv::new()).collect(),
+                sels: (0..BATCH).map(|_| SelectionBuf::new()).collect(),
+                rng: Rng::new(seed),
+            };
+            for i in 0..BATCH {
+                let t = w.rng.range(3, 30);
+                for _ in 0..t {
+                    let k: Vec<f32> =
+                        (0..HKV * DH).map(|_| w.rng.normal() as f32).collect();
+                    let v: Vec<f32> =
+                        (0..HKV * DH).map(|_| w.rng.normal() as f32).collect();
+                    w.seqs[i].append(&mut w.pool, &k, &v).unwrap();
+                }
+            }
+            w
+        }
+
+        /// Fill slot `i`'s SelectionBuf with random ascending rows that
+        /// include the (possibly partial) last block.
+        fn randomize_selection(&mut self, i: usize, per_head: bool) {
+            let nblk = self.seqs[i].n_blocks();
+            let (kind, rows) = if per_head {
+                (SelKind::PerHead, H_ALL)
+            } else {
+                (SelKind::Shared, HKV)
+            };
+            self.sels[i].begin(kind, rows);
+            for r in 0..rows {
+                let take = self.rng.range(1, nblk + 1);
+                let mut picked = self.rng.sample_distinct(nblk, take);
+                let last = nblk - 1;
+                if !picked.contains(&last) {
+                    picked.push(last);
+                }
+                picked.sort_unstable();
+                let row = self.sels[i].row_mut(r);
+                row.clear();
+                row.extend(picked.into_iter().map(|b| b as i32));
+            }
+        }
+    }
+
+    #[test]
+    fn sparse_parallel_gather_bit_identical_to_serial() {
+        let mut w = World::new(301);
+        let mut serial_arena = StagingArena::new();
+        let mut parallel_arena = StagingArena::new();
+        for step in 0..25 {
+            let per_head = step % 2 == 1;
+            let heads = if per_head { H_ALL } else { HKV };
+            let t_cap = 8 * BS;
+            for i in 0..BATCH {
+                w.randomize_selection(i, per_head);
+            }
+            let geom = SparseGeom { heads, group: G, per_head, block_size: BS,
+                                    t_cap, dh: DH };
+            let jobs: Vec<GatherJob> = (0..BATCH)
+                .map(|i| GatherJob { row: i, kv: &w.seqs[i], sel: &w.sels[i] })
+                .collect();
+
+            let sset = serial_arena.sparse(BATCH, heads, t_cap, DH);
+            {
+                let (k, v, m, d) = sset.parts_mut();
+                let row_kv = heads * t_cap * DH;
+                let row_m = heads * t_cap;
+                for job in &jobs {
+                    let r = job.row;
+                    gather_one_sparse(&w.pool, job, &geom,
+                                      &mut k[r * row_kv..(r + 1) * row_kv],
+                                      &mut v[r * row_kv..(r + 1) * row_kv],
+                                      &mut m[r * row_m..(r + 1) * row_m],
+                                      &mut d[r * heads..(r + 1) * heads]);
+                }
+            }
+            let pset = parallel_arena.sparse(BATCH, heads, t_cap, DH);
+            {
+                let (k, v, m, d) = pset.parts_mut();
+                gather_sparse_into(&w.pool, &jobs, &geom, k, v, m, d, 4);
+            }
+            assert_eq!(pset.k.as_f32().unwrap(), sset.k.as_f32().unwrap(),
+                       "k step={step}");
+            assert_eq!(pset.v.as_f32().unwrap(), sset.v.as_f32().unwrap(),
+                       "v step={step}");
+            assert_eq!(pset.mask.as_f32().unwrap(), sset.mask.as_f32().unwrap(),
+                       "mask step={step}");
+            assert_eq!(pset.dirty(), sset.dirty(), "dirty step={step}");
+        }
+    }
+
+    #[test]
+    fn dense_parallel_gather_bit_identical_to_serial() {
+        let w = World::new(302);
+        let s = 32;
+        let geom = DenseGeom { hkv: HKV, block_size: BS, max_seq: s, dh: DH };
+        let jobs: Vec<GatherJob> = (0..BATCH)
+            .map(|i| GatherJob { row: i, kv: &w.seqs[i], sel: &w.sels[i] })
+            .collect();
+        let mut serial_arena = StagingArena::new();
+        let mut parallel_arena = StagingArena::new();
+        let sset = serial_arena.dense(BATCH, HKV, s, DH);
+        {
+            let (k, v, sl, d) = sset.parts_mut();
+            let row_kv = HKV * s * DH;
+            for job in &jobs {
+                let r = job.row;
+                gather_one_dense(&w.pool, job, &geom,
+                                 &mut k[r * row_kv..(r + 1) * row_kv],
+                                 &mut v[r * row_kv..(r + 1) * row_kv],
+                                 &mut sl[r..r + 1],
+                                 &mut d[r * HKV..(r + 1) * HKV]);
+            }
+        }
+        let pset = parallel_arena.dense(BATCH, HKV, s, DH);
+        {
+            let (k, v, sl, d) = pset.parts_mut();
+            gather_dense_into(&w.pool, &jobs, &geom, k, v, sl, d, 3);
+        }
+        assert_eq!(pset.k.as_f32().unwrap(), sset.k.as_f32().unwrap());
+        assert_eq!(pset.v.as_f32().unwrap(), sset.v.as_f32().unwrap());
+        assert_eq!(pset.seq_len.as_i32().unwrap(), sset.seq_len.as_i32().unwrap());
+        assert_eq!(pset.dirty(), sset.dirty());
+    }
+}
