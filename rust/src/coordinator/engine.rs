@@ -57,10 +57,10 @@ pub struct EngineConfig {
     /// (0 = disabled). Pages touched by attention gathers go through an
     /// LRU fast tier; misses are charged as slow-tier fetches.
     pub offload_fast_pages: usize,
-    /// Scoped-thread fan-out for the per-slot gather stage (<= 1 =
-    /// serial). The arena's per-row dirty extents partition staging
-    /// writes disjointly by slot, so the parallel gather is bit-identical
-    /// to the serial one (see `coordinator::gather`).
+    /// Persistent worker-pool fan-out for the per-slot gather stage
+    /// (<= 1 = serial). The arena's per-row dirty extents partition
+    /// staging writes disjointly by slot, so the parallel gather is
+    /// bit-identical to the serial one (see `coordinator::gather`).
     pub gather_threads: usize,
 }
 
@@ -136,6 +136,9 @@ pub struct Engine {
     /// One reusable selection per batch slot; `run_attention` borrows
     /// rows from here instead of cloning per-head index lists.
     sel_bufs: Vec<SelectionBuf>,
+    /// Persistent gather fan-out lanes (`gather_threads > 1`); spawned
+    /// once here instead of a scoped-thread spawn per decode step.
+    gather_pool: Option<gather::GatherPool>,
 }
 
 /// Reusable selection scratch (see `Engine::select`).
@@ -211,6 +214,8 @@ impl Engine {
             arena: StagingArena::new(),
             scratch: SelectScratch::default(),
             sel_bufs: (0..batch).map(|_| SelectionBuf::new()).collect(),
+            gather_pool: (ecfg.gather_threads > 1)
+                .then(|| gather::GatherPool::new(ecfg.gather_threads)),
         })
     }
 
@@ -693,20 +698,26 @@ impl Engine {
             (self.cfg.n_kv_heads, self.cfg.n_heads, self.cfg.head_dim);
         let g = self.cfg.group_size;
         let bs = self.ecfg.block_size;
-        // Fan the per-slot gather out over scoped threads only when
-        // configured and there is more than one slot to partition.
-        let threads = if active.len() > 1 {
-            self.ecfg.gather_threads.max(1)
-        } else {
-            1
-        };
         let wo = format!("l{l}.wo");
         let w1 = format!("l{l}.w1");
         let w2 = format!("l{l}.w2");
         let ln2 = format!("l{l}.ln2");
 
-        let Engine { slots, pool, offload, metrics, arena, sel_bufs, rt, dev, .. } =
-            self;
+        let Engine { slots, pool, offload, metrics, arena, sel_bufs, rt, dev,
+                     gather_pool, .. } = self;
+        // Fan the per-slot gather out over the persistent pool lanes only
+        // when configured and there is more than one slot to partition.
+        let par = if active.len() > 1 { gather_pool.as_ref() } else { None };
+        // Jobs are produced on demand by index (ascending `active` order),
+        // so neither gather branch builds a per-call work list.
+        let job_at = |idx: usize| {
+            let i = active[idx];
+            GatherJob {
+                row: i,
+                kv: &slots[i].as_ref().unwrap().kv[l],
+                sel: &sel_bufs[i],
+            }
+        };
         let any_dense =
             active.iter().any(|&i| sel_bufs[i].kind() == SelKind::Dense);
 
@@ -744,34 +755,8 @@ impl Engine {
             }
             {
                 let (kc, vc, seq_len, dirty) = set.parts_mut();
-                if threads > 1 {
-                    let jobs: Vec<GatherJob> = active
-                        .iter()
-                        .map(|&i| GatherJob {
-                            row: i,
-                            kv: &slots[i].as_ref().unwrap().kv[l],
-                            sel: &sel_bufs[i],
-                        })
-                        .collect();
-                    gather::gather_dense_into(pool, &jobs, &geom, kc, vc,
-                                              seq_len, dirty, threads);
-                } else {
-                    let row_kv = hkv * s * dh;
-                    for &i in active {
-                        let job = GatherJob {
-                            row: i,
-                            kv: &slots[i].as_ref().unwrap().kv[l],
-                            sel: &sel_bufs[i],
-                        };
-                        gather::gather_one_dense(
-                            pool, &job, &geom,
-                            &mut kc[i * row_kv..(i + 1) * row_kv],
-                            &mut vc[i * row_kv..(i + 1) * row_kv],
-                            &mut seq_len[i..i + 1],
-                            &mut dirty[i * hkv..(i + 1) * hkv],
-                        );
-                    }
-                }
+                gather::gather_dense_into(pool, active.len(), &job_at, &geom,
+                                          kc, vc, seq_len, dirty, par);
             }
             // I/O accounting straight from the staged dirty extents.
             let mut touched_total = 0u64;
@@ -819,35 +804,8 @@ impl Engine {
         }
         {
             let (k_sel, v_sel, mask, dirty) = set.parts_mut();
-            if threads > 1 {
-                let jobs: Vec<GatherJob> = active
-                    .iter()
-                    .map(|&i| GatherJob {
-                        row: i,
-                        kv: &slots[i].as_ref().unwrap().kv[l],
-                        sel: &sel_bufs[i],
-                    })
-                    .collect();
-                gather::gather_sparse_into(pool, &jobs, &geom, k_sel, v_sel,
-                                           mask, dirty, threads);
-            } else {
-                let row_kv = heads * t_cap * dh;
-                let row_mask = heads * t_cap;
-                for &i in active {
-                    let job = GatherJob {
-                        row: i,
-                        kv: &slots[i].as_ref().unwrap().kv[l],
-                        sel: &sel_bufs[i],
-                    };
-                    gather::gather_one_sparse(
-                        pool, &job, &geom,
-                        &mut k_sel[i * row_kv..(i + 1) * row_kv],
-                        &mut v_sel[i * row_kv..(i + 1) * row_kv],
-                        &mut mask[i * row_mask..(i + 1) * row_mask],
-                        &mut dirty[i * heads..(i + 1) * heads],
-                    );
-                }
-            }
+            gather::gather_sparse_into(pool, active.len(), &job_at, &geom,
+                                       k_sel, v_sel, mask, dirty, par);
         }
         let mut dense_equiv = 0u64;
         let mut touched_total = 0u64;

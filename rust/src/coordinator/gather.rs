@@ -1,22 +1,28 @@
 //! The gather stage of the decode hot path, factored out of the engine
-//! so the serial and scoped-thread parallel variants share one
-//! implementation and are testable without PJRT.
+//! so the serial and parallel variants share one implementation and are
+//! testable without PJRT.
 //!
 //! Staging buffers are laid out batch-row-major, so each slot's writes
 //! (K/V rows, mask, dirty extents) land in a disjoint contiguous chunk of
-//! the [`StagingArena`] set. That partition is exactly what makes the
-//! parallel variant safe: the chunks are split with `chunks_mut` and each
-//! scoped thread owns a distinct set of slots — bit-identical output to
-//! the serial loop, no synchronisation beyond the scope join.
+//! the [`StagingArena`] set. That partition is what makes the parallel
+//! variant safe: jobs are validated to target strictly-ascending,
+//! in-range rows, and each worker carves its own chunk out of the shared
+//! buffers by row index — bit-identical output to the serial loop.
 //!
-//! The serial entry points (`gather_one_sparse` / `gather_one_dense`)
-//! take the slot's chunk directly and allocate nothing, preserving the
-//! zero-allocation steady-state invariant. The parallel entry points
-//! build a small per-call work list (one slice tuple per active slot) —
-//! that allocation is the explicit price of fanning out, paid only when
-//! `threads > 1`.
+//! Parallelism runs on a persistent [`GatherPool`]: worker threads are
+//! spawned once (engine lifetime) and woken per call, replacing the
+//! per-step `thread::scope` spawn of the previous design. Work is
+//! claimed item-by-item under the pool mutex (jobs are coarse — one
+//! slot's full gather — so claim overhead is noise), and the caller
+//! participates too, so `threads = n` means `n` lanes, not `n + 1`.
+//! Neither the serial nor the parallel path allocates: the old per-call
+//! work-list `Vec` is gone, which keeps the steady-state
+//! zero-allocation invariant across both paths.
 //!
 //! [`StagingArena`]: super::arena::StagingArena
+
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
 
 use crate::kvcache::{PagedKvPool, SeqKv};
 use crate::sparse::policy::{SelKind, SelectionBuf};
@@ -25,6 +31,7 @@ use crate::sparse::policy::{SelKind, SelectionBuf};
 /// block selection. The dense gathers stage the whole cache and ignore
 /// `sel` (dense slots carry a `SelKind::Dense` buf anyway); one job type
 /// keeps the engine's job construction identical across both branches.
+#[derive(Clone, Copy)]
 pub struct GatherJob<'a> {
     /// Batch row in the staging set (= slot index).
     pub row: usize,
@@ -109,95 +116,349 @@ pub fn gather_one_dense(pool: &PagedKvPool, job: &GatherJob, geom: &DenseGeom,
     }
 }
 
-/// Split per-row chunks of a staging set and pair them with the jobs
-/// writing them. Jobs must be sorted ascending by `row`.
-macro_rules! build_work {
-    ($jobs:expr, $row_kv:expr, $row_aux:expr, $row_dirty:expr,
-     $k:expr, $v:expr, $aux:expr, $dirty:expr) => {{
-        let mut work = Vec::with_capacity($jobs.len());
-        let mut jobs = $jobs.iter().peekable();
-        let iter = $k
-            .chunks_mut($row_kv)
-            .zip($v.chunks_mut($row_kv))
-            .zip($aux.chunks_mut($row_aux))
-            .zip($dirty.chunks_mut($row_dirty))
-            .enumerate();
-        for (r, (((kc, vc), ac), dc)) in iter {
-            if jobs.peek().map(|j| j.row) == Some(r) {
-                work.push((jobs.next().unwrap(), kc, vc, ac, dc));
-            }
-        }
-        // Hard assert: an unmatched job means rows were unsorted or out
-        // of range, and silently skipping one would leave its staging
-        // rows zeroed — attention over an empty selection, no error.
-        assert!(jobs.next().is_none(),
-                "gather jobs must be sorted ascending by row and in range");
-        work
-    }};
+// ---------------------------------------------------------------------
+// Persistent worker pool.
+// ---------------------------------------------------------------------
+
+/// A type-erased borrow of the current call's `Fn(usize)` item closure.
+/// Only alive while [`GatherPool::run`] is on the caller's stack: workers
+/// touch it strictly between the task being installed and the caller
+/// observing "all items claimed, no lane executing" (both under the pool
+/// mutex), and `run` does not return — or unwind — before that point.
+#[derive(Clone, Copy)]
+struct TaskRef {
+    data: *const (),
+    call: unsafe fn(*const (), usize),
 }
 
-/// Sparse gather over many slots, fanned out over up to `threads` scoped
-/// threads (serial when `threads <= 1` or there is one job). Output is
-/// bit-identical to calling [`gather_one_sparse`] per job.
+// The raw pointer crosses into worker threads; validity is guaranteed by
+// the run() protocol above.
+unsafe impl Send for TaskRef {}
+
+unsafe fn call_erased<F: Fn(usize) + Sync>(data: *const (), i: usize) {
+    (*(data as *const F))(i)
+}
+
+struct PoolState {
+    task: Option<TaskRef>,
+    n_items: usize,
+    /// Next unclaimed item index (forced to `n_items` on a lane panic so
+    /// no further claims touch a possibly-dead closure).
+    next: usize,
+    /// Lanes currently inside the item closure.
+    executing: usize,
+    /// Some lane's item closure panicked during the current task.
+    panicked: bool,
+    shutdown: bool,
+}
+
+struct PoolShared {
+    state: Mutex<PoolState>,
+    /// Signalled when a task is installed (or shutdown begins).
+    start: Condvar,
+    /// Signalled when the last item of a task completes.
+    done: Condvar,
+}
+
+/// Persistent gather fan-out pool: `threads - 1` worker threads plus the
+/// calling thread cooperatively claim item indices per [`run`] call.
+/// Spawned once, reused every decode step — no per-call thread spawn,
+/// no per-call allocation.
+///
+/// [`run`]: GatherPool::run
+pub struct GatherPool {
+    shared: Arc<PoolShared>,
+    workers: Vec<JoinHandle<()>>,
+}
+
+impl GatherPool {
+    /// A pool delivering `threads` concurrent lanes (the caller counts
+    /// as one, so this spawns `threads - 1` workers).
+    pub fn new(threads: usize) -> GatherPool {
+        let shared = Arc::new(PoolShared {
+            state: Mutex::new(PoolState {
+                task: None,
+                n_items: 0,
+                next: 0,
+                executing: 0,
+                panicked: false,
+                shutdown: false,
+            }),
+            start: Condvar::new(),
+            done: Condvar::new(),
+        });
+        let workers = (1..threads.max(1))
+            .map(|i| {
+                let sh = shared.clone();
+                std::thread::Builder::new()
+                    .name(format!("gather-{i}"))
+                    .spawn(move || Self::worker_main(&sh))
+                    .expect("spawn gather worker")
+            })
+            .collect();
+        GatherPool { shared, workers }
+    }
+
+    /// Concurrent lanes including the caller.
+    pub fn threads(&self) -> usize {
+        self.workers.len() + 1
+    }
+
+    fn worker_main(shared: &PoolShared) {
+        let mut st = shared.state.lock().unwrap();
+        loop {
+            if st.shutdown {
+                return;
+            }
+            if let Some(task) = st.task {
+                if st.next < st.n_items {
+                    let i = st.next;
+                    st.next += 1;
+                    st.executing += 1;
+                    drop(st);
+                    // Catch panics so a failing item cannot leave the
+                    // caller blocked on `done` forever; the caller
+                    // re-raises after the task drains.
+                    let r = std::panic::catch_unwind(
+                        std::panic::AssertUnwindSafe(|| unsafe {
+                            (task.call)(task.data, i)
+                        }));
+                    st = shared.state.lock().unwrap();
+                    st.executing -= 1;
+                    if r.is_err() {
+                        st.panicked = true;
+                        st.next = st.n_items;
+                    }
+                    shared.done.notify_all();
+                    continue;
+                }
+            }
+            st = shared.start.wait(st).unwrap();
+        }
+    }
+
+    /// Run `f(0..n)` across the pool's lanes; returns once every call
+    /// has completed. `f` borrows from the caller's stack — the erased
+    /// pointer never outlives this frame: every exit path (including a
+    /// panicking item, which is caught on all lanes and re-raised here)
+    /// waits until no lane is still inside `f` before the task is
+    /// cleared and the frame unwinds.
+    pub fn run<F: Fn(usize) + Sync>(&self, n: usize, f: &F) {
+        if n == 0 {
+            return;
+        }
+        let task = TaskRef { data: f as *const F as *const (), call: call_erased::<F> };
+        {
+            let mut st = self.shared.state.lock().unwrap();
+            debug_assert!(st.task.is_none(), "GatherPool::run re-entered");
+            st.task = Some(task);
+            st.n_items = n;
+            st.next = 0;
+            st.executing = 0;
+            st.panicked = false;
+            self.shared.start.notify_all();
+        }
+        // The caller is a lane too: claim items alongside the workers.
+        let mut caller_panic = None;
+        loop {
+            let i = {
+                let mut st = self.shared.state.lock().unwrap();
+                if st.next >= st.n_items {
+                    break;
+                }
+                let i = st.next;
+                st.next += 1;
+                st.executing += 1;
+                i
+            };
+            let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| f(i)));
+            let mut st = self.shared.state.lock().unwrap();
+            st.executing -= 1;
+            if r.is_err() {
+                st.panicked = true;
+                st.next = st.n_items;
+                caller_panic = r.err();
+            }
+            self.shared.done.notify_all();
+        }
+        // Task is finished when every item is claimed (or skipped after
+        // a panic) and no lane is still running one.
+        let mut st = self.shared.state.lock().unwrap();
+        while st.next < st.n_items || st.executing > 0 {
+            st = self.shared.done.wait(st).unwrap();
+        }
+        st.task = None;
+        let panicked = st.panicked;
+        drop(st);
+        if let Some(p) = caller_panic {
+            std::panic::resume_unwind(p);
+        }
+        assert!(!panicked, "a gather pool worker lane panicked");
+    }
+}
+
+impl Drop for GatherPool {
+    fn drop(&mut self) {
+        {
+            let mut st = self.shared.state.lock().unwrap();
+            st.shutdown = true;
+            self.shared.start.notify_all();
+        }
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+/// Validate that jobs target strictly-ascending, in-range staging rows —
+/// the disjointness invariant the parallel chunk-carving relies on. A
+/// violated invariant would silently leave staging rows zeroed
+/// (attention over an empty selection), so it is a hard assert.
+fn check_rows<'a, F: Fn(usize) -> GatherJob<'a>>(n_jobs: usize, job_at: &F,
+                                                 n_rows: usize) {
+    let mut prev: Option<usize> = None;
+    for idx in 0..n_jobs {
+        let r = job_at(idx).row;
+        assert!(r < n_rows && prev.map(|p| p < r).unwrap_or(true),
+                "gather jobs must target ascending staging rows < {n_rows}");
+        prev = Some(r);
+    }
+}
+
+/// Sparse gather over `n_jobs` slots (`job_at(i)` yields each job),
+/// fanned out over `par`'s persistent lanes when given (serial when
+/// `None` or there is one job). Output is bit-identical to calling
+/// [`gather_one_sparse`] per job; neither path allocates.
 #[allow(clippy::too_many_arguments)]
-pub fn gather_sparse_into(pool: &PagedKvPool, jobs: &[GatherJob],
-                          geom: &SparseGeom, k: &mut [f32], v: &mut [f32],
-                          mask: &mut [f32], dirty: &mut [usize],
-                          threads: usize) {
+pub fn gather_sparse_into<'a, F>(pool: &PagedKvPool, n_jobs: usize, job_at: &F,
+                                 geom: &SparseGeom, k: &mut [f32],
+                                 v: &mut [f32], mask: &mut [f32],
+                                 dirty: &mut [usize], par: Option<&GatherPool>)
+where
+    F: Fn(usize) -> GatherJob<'a> + Sync,
+{
     let row_kv = geom.heads * geom.t_cap * geom.dh;
     let row_mask = geom.heads * geom.t_cap;
-    if threads <= 1 || jobs.len() <= 1 {
-        for job in jobs {
-            let r = job.row;
-            gather_one_sparse(pool, job, geom,
-                              &mut k[r * row_kv..(r + 1) * row_kv],
-                              &mut v[r * row_kv..(r + 1) * row_kv],
-                              &mut mask[r * row_mask..(r + 1) * row_mask],
-                              &mut dirty[r * geom.heads..(r + 1) * geom.heads]);
+    let row_dirty = geom.heads;
+    match par {
+        Some(gp) if n_jobs > 1 => {
+            check_rows(n_jobs, job_at, k.len() / row_kv);
+            let (kb, vb) = (k.as_mut_ptr() as usize, v.as_mut_ptr() as usize);
+            let (mb, db) = (mask.as_mut_ptr() as usize, dirty.as_mut_ptr() as usize);
+            let worker = |idx: usize| {
+                let job = job_at(idx);
+                let r = job.row;
+                // Safe: rows are validated distinct and in range, so
+                // each lane writes a disjoint chunk of the buffers the
+                // caller exclusively borrows across this call.
+                let (kc, vc, mc, dc) = unsafe {
+                    (std::slice::from_raw_parts_mut(
+                         (kb as *mut f32).add(r * row_kv), row_kv),
+                     std::slice::from_raw_parts_mut(
+                         (vb as *mut f32).add(r * row_kv), row_kv),
+                     std::slice::from_raw_parts_mut(
+                         (mb as *mut f32).add(r * row_mask), row_mask),
+                     std::slice::from_raw_parts_mut(
+                         (db as *mut usize).add(r * row_dirty), row_dirty))
+                };
+                gather_one_sparse(pool, &job, geom, kc, vc, mc, dc);
+            };
+            gp.run(n_jobs, &worker);
         }
-        return;
+        _ => {
+            for idx in 0..n_jobs {
+                let job = job_at(idx);
+                let r = job.row;
+                gather_one_sparse(pool, &job, geom,
+                                  &mut k[r * row_kv..(r + 1) * row_kv],
+                                  &mut v[r * row_kv..(r + 1) * row_kv],
+                                  &mut mask[r * row_mask..(r + 1) * row_mask],
+                                  &mut dirty[r * row_dirty..(r + 1) * row_dirty]);
+            }
+        }
     }
-    let mut work = build_work!(jobs, row_kv, row_mask, geom.heads, k, v, mask, dirty);
-    let per = work.len().div_ceil(threads.min(work.len()));
-    std::thread::scope(|s| {
-        for chunk in work.chunks_mut(per) {
-            s.spawn(move || {
-                for (job, kc, vc, mc, dc) in chunk.iter_mut() {
-                    gather_one_sparse(pool, job, geom, kc, vc, mc, dc);
-                }
-            });
-        }
-    });
 }
 
 /// Dense gather over many slots; same contract as [`gather_sparse_into`]
 /// but staging the full cache per slot (`seq_len` is `[b]`).
 #[allow(clippy::too_many_arguments)]
-pub fn gather_dense_into(pool: &PagedKvPool, jobs: &[GatherJob],
-                         geom: &DenseGeom, k: &mut [f32], v: &mut [f32],
-                         seq_len: &mut [i32], dirty: &mut [usize],
-                         threads: usize) {
+pub fn gather_dense_into<'a, F>(pool: &PagedKvPool, n_jobs: usize, job_at: &F,
+                                geom: &DenseGeom, k: &mut [f32], v: &mut [f32],
+                                seq_len: &mut [i32], dirty: &mut [usize],
+                                par: Option<&GatherPool>)
+where
+    F: Fn(usize) -> GatherJob<'a> + Sync,
+{
     let row_kv = geom.hkv * geom.max_seq * geom.dh;
-    if threads <= 1 || jobs.len() <= 1 {
-        for job in jobs {
-            let r = job.row;
-            gather_one_dense(pool, job, geom,
-                             &mut k[r * row_kv..(r + 1) * row_kv],
-                             &mut v[r * row_kv..(r + 1) * row_kv],
-                             &mut seq_len[r..r + 1],
-                             &mut dirty[r * geom.hkv..(r + 1) * geom.hkv]);
+    let row_dirty = geom.hkv;
+    match par {
+        Some(gp) if n_jobs > 1 => {
+            check_rows(n_jobs, job_at, k.len() / row_kv);
+            let (kb, vb) = (k.as_mut_ptr() as usize, v.as_mut_ptr() as usize);
+            let (sb, db) =
+                (seq_len.as_mut_ptr() as usize, dirty.as_mut_ptr() as usize);
+            let worker = |idx: usize| {
+                let job = job_at(idx);
+                let r = job.row;
+                let (kc, vc, sc, dc) = unsafe {
+                    (std::slice::from_raw_parts_mut(
+                         (kb as *mut f32).add(r * row_kv), row_kv),
+                     std::slice::from_raw_parts_mut(
+                         (vb as *mut f32).add(r * row_kv), row_kv),
+                     std::slice::from_raw_parts_mut((sb as *mut i32).add(r), 1),
+                     std::slice::from_raw_parts_mut(
+                         (db as *mut usize).add(r * row_dirty), row_dirty))
+                };
+                gather_one_dense(pool, &job, geom, kc, vc, sc, dc);
+            };
+            gp.run(n_jobs, &worker);
         }
-        return;
+        _ => {
+            for idx in 0..n_jobs {
+                let job = job_at(idx);
+                let r = job.row;
+                gather_one_dense(pool, &job, geom,
+                                 &mut k[r * row_kv..(r + 1) * row_kv],
+                                 &mut v[r * row_kv..(r + 1) * row_kv],
+                                 &mut seq_len[r..r + 1],
+                                 &mut dirty[r * row_dirty..(r + 1) * row_dirty]);
+            }
+        }
     }
-    let mut work = build_work!(jobs, row_kv, 1, geom.hkv, k, v, seq_len, dirty);
-    let per = work.len().div_ceil(threads.min(work.len()));
-    std::thread::scope(|s| {
-        for chunk in work.chunks_mut(per) {
-            s.spawn(move || {
-                for (job, kc, vc, sc, dc) in chunk.iter_mut() {
-                    gather_one_dense(pool, job, geom, kc, vc, sc, dc);
-                }
-            });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn pool_runs_every_item_exactly_once() {
+        let pool = GatherPool::new(3);
+        assert_eq!(pool.threads(), 3);
+        let hits: Vec<AtomicUsize> = (0..64).map(|_| AtomicUsize::new(0)).collect();
+        for round in 0..50 {
+            let f = |i: usize| {
+                hits[i].fetch_add(1, Ordering::SeqCst);
+            };
+            pool.run(hits.len(), &f);
+            for (i, h) in hits.iter().enumerate() {
+                assert_eq!(h.load(Ordering::SeqCst), round + 1, "item {i}");
+            }
         }
-    });
+    }
+
+    #[test]
+    fn pool_of_one_degenerates_to_caller_only() {
+        let pool = GatherPool::new(1);
+        assert_eq!(pool.threads(), 1);
+        let sum = AtomicUsize::new(0);
+        let f = |i: usize| {
+            sum.fetch_add(i + 1, Ordering::SeqCst);
+        };
+        pool.run(10, &f);
+        assert_eq!(sum.load(Ordering::SeqCst), 55);
+        pool.run(0, &f); // empty call is a no-op, not a hang
+        assert_eq!(sum.load(Ordering::SeqCst), 55);
+    }
 }

@@ -14,6 +14,11 @@ pub struct Metrics {
     pub requests_completed: u64,
     pub kv_bytes_touched: u64,
     pub kv_bytes_dense_equiv: u64,
+    /// Requests this shard pulled from other shards' overflow queues
+    /// (work stealing; set by the shard thread at shutdown).
+    pub requests_stolen: u64,
+    /// Peak overflow-queue length observed at this shard.
+    pub queue_peak: u64,
     wall_start: Option<std::time::Instant>,
 }
 
@@ -48,6 +53,9 @@ impl Metrics {
         self.requests_completed += other.requests_completed;
         self.kv_bytes_touched += other.kv_bytes_touched;
         self.kv_bytes_dense_equiv += other.kv_bytes_dense_equiv;
+        self.requests_stolen += other.requests_stolen;
+        // A fleet's "peak queue" is the worst shard's, not a sum.
+        self.queue_peak = self.queue_peak.max(other.queue_peak);
     }
 
     /// Generated tokens per wall-clock second since start_clock().
@@ -96,6 +104,12 @@ pub struct GroupMetrics {
     /// Shards whose threads panicked instead of shutting down cleanly;
     /// their metrics are lost but the healthy shards' survive.
     pub panicked: Vec<usize>,
+    /// Requests the router rejected under admission backpressure (every
+    /// shard at `batch + queue_depth` load).
+    pub rejected: u64,
+    /// The configured per-shard overflow-queue bound the rejections were
+    /// measured against.
+    pub queue_depth: usize,
 }
 
 impl GroupMetrics {
@@ -123,10 +137,12 @@ impl GroupMetrics {
         }
         for (i, s) in self.shards.iter().enumerate() {
             out.push_str(&format!(
-                "shard {i}: requests={} tokens={} ttft p50={:.4}s p95={:.4}s \
-                 e2e p50={:.4}s p95={:.4}s\n",
+                "shard {i}: requests={} tokens={} stolen={} queue-peak={} \
+                 ttft p50={:.4}s p95={:.4}s e2e p50={:.4}s p95={:.4}s\n",
                 s.requests_completed,
                 s.tokens_generated,
+                s.requests_stolen,
+                s.queue_peak,
                 s.ttft_s.median(),
                 s.ttft_s.percentile(95.0),
                 s.e2e_s.median(),
@@ -136,12 +152,16 @@ impl GroupMetrics {
         let f = self.fleet();
         out.push_str(&format!(
             "fleet ({} shards): requests={} tokens={} tps={:.1} \
+             rejected={} stolen={} queue-depth={} \
              ttft p50={:.4}s p95={:.4}s p99={:.4}s \
              e2e p50={:.4}s p95={:.4}s p99={:.4}s kv-touch {:.3}",
             self.shards.len(),
             f.requests_completed,
             f.tokens_generated,
             self.fleet_tps(),
+            self.rejected,
+            f.requests_stolen,
+            self.queue_depth,
             f.ttft_s.median(),
             f.ttft_s.percentile(95.0),
             f.ttft_s.percentile(99.0),
@@ -185,11 +205,17 @@ mod tests {
         b.record_completion(Duration::from_millis(30), Duration::from_millis(300), 6);
         b.kv_bytes_touched = 8;
         b.kv_bytes_dense_equiv = 16;
+        a.requests_stolen = 2;
+        a.queue_peak = 7;
+        b.requests_stolen = 3;
+        b.queue_peak = 4;
         a.merge_from(&b);
         assert_eq!(a.requests_completed, 2);
         assert_eq!(a.tokens_generated, 10);
         assert_eq!(a.ttft_s.len(), 2);
         assert_eq!(a.kv_bytes_touched, 8);
+        assert_eq!(a.requests_stolen, 5, "steal counts add");
+        assert_eq!(a.queue_peak, 7, "fleet queue peak is the worst shard's");
         assert!((a.ttft_s.mean() - 0.02).abs() < 1e-9);
     }
 
@@ -209,6 +235,8 @@ mod tests {
             g.shards.push(m);
         }
         g.wall_s = 2.0;
+        g.rejected = 5;
+        g.queue_depth = 8;
         let f = g.fleet();
         assert_eq!(f.requests_completed, 12);
         assert_eq!(f.tokens_generated, 36);
@@ -218,5 +246,7 @@ mod tests {
         let r = g.report();
         assert!(r.contains("shard 0"));
         assert!(r.contains("fleet (3 shards)"));
+        assert!(r.contains("rejected=5"));
+        assert!(r.contains("queue-depth=8"));
     }
 }

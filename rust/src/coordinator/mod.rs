@@ -16,6 +16,7 @@ pub mod arena;
 pub mod engine;
 pub mod gather;
 pub mod metrics;
+pub mod reactor;
 pub mod request;
 pub mod sampling;
 pub mod scheduler;
@@ -28,7 +29,8 @@ pub use arena::StagingArena;
 pub use engine::{Engine, EngineConfig};
 pub use metrics::{GroupMetrics, Metrics};
 pub use request::{Completion, Request};
-pub use shard::EngineGroup;
+pub use server::ServeConfig;
+pub use shard::{EngineGroup, GroupConfig, SubmitOutcome};
 pub use sim::{SimConfig, SimEngine};
 
 /// The contract between a decode engine (one continuous-batching loop

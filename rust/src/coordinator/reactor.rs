@@ -1,0 +1,242 @@
+//! Minimal single-threaded epoll reactor for the serving front-end.
+//!
+//! The offline vendor set has no `mio`/`tokio`/`libc` crate, so this
+//! wraps the four raw syscalls the front-end needs — `epoll_create1`,
+//! `epoll_ctl`, `epoll_wait`, `close` — behind direct `extern "C"`
+//! declarations (they resolve against the C library `std` already links;
+//! no new dependency). Everything above the fd level stays in safe std:
+//! sockets are `TcpListener`/`TcpStream` in non-blocking mode and the
+//! reactor only ever sees their raw fds, which it neither duplicates nor
+//! owns — callers keep the socket alive for as long as it is registered,
+//! and closing the socket removes it from the interest set.
+//!
+//! Linux-only by construction (epoll is the production serving target;
+//! CI runs on Linux). The API is deliberately tiny: register / modify /
+//! deregister an fd with a `u64` token and read/write interest, then
+//! `wait` for a batch of [`Event`]s.
+
+use std::io;
+use std::os::unix::io::RawFd;
+use std::time::Duration;
+
+use anyhow::{anyhow, Result};
+
+const EPOLL_CLOEXEC: i32 = 0o2000000;
+const EPOLL_CTL_ADD: i32 = 1;
+const EPOLL_CTL_DEL: i32 = 2;
+const EPOLL_CTL_MOD: i32 = 3;
+
+const EPOLLIN: u32 = 0x001;
+const EPOLLOUT: u32 = 0x004;
+const EPOLLERR: u32 = 0x008;
+const EPOLLHUP: u32 = 0x010;
+const EPOLLRDHUP: u32 = 0x2000;
+
+/// Mirror of the kernel's `struct epoll_event`. x86_64 is the one ABI
+/// where the kernel declares it packed.
+#[cfg_attr(target_arch = "x86_64", repr(C, packed))]
+#[cfg_attr(not(target_arch = "x86_64"), repr(C))]
+#[derive(Clone, Copy)]
+struct EpollEvent {
+    events: u32,
+    data: u64,
+}
+
+extern "C" {
+    fn epoll_create1(flags: i32) -> i32;
+    fn epoll_ctl(epfd: i32, op: i32, fd: i32, event: *mut EpollEvent) -> i32;
+    fn epoll_wait(epfd: i32, events: *mut EpollEvent, maxevents: i32,
+                  timeout_ms: i32) -> i32;
+    fn close(fd: i32) -> i32;
+}
+
+/// What a registered fd wants to be woken for.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Interest {
+    pub readable: bool,
+    pub writable: bool,
+}
+
+impl Interest {
+    pub const READ: Interest = Interest { readable: true, writable: false };
+    pub const READ_WRITE: Interest = Interest { readable: true, writable: true };
+
+    fn bits(self) -> u32 {
+        let mut e = 0;
+        if self.readable {
+            // RDHUP only alongside read interest: a half-closed peer we
+            // are still writing replies to must not level-trigger wakeups
+            // forever.
+            e |= EPOLLIN | EPOLLRDHUP;
+        }
+        if self.writable {
+            e |= EPOLLOUT;
+        }
+        e
+    }
+}
+
+/// One readiness notification. `readable` includes error/hangup states so
+/// a dead peer always surfaces through the read path (as EOF or an I/O
+/// error) rather than being silently dropped.
+#[derive(Debug, Clone, Copy)]
+pub struct Event {
+    pub token: u64,
+    pub readable: bool,
+    pub writable: bool,
+}
+
+/// A thin owner of one epoll instance.
+pub struct Reactor {
+    epfd: i32,
+    buf: Vec<EpollEvent>,
+}
+
+impl Reactor {
+    pub fn new() -> Result<Reactor> {
+        let epfd = unsafe { epoll_create1(EPOLL_CLOEXEC) };
+        if epfd < 0 {
+            return Err(anyhow!("epoll_create1: {}", io::Error::last_os_error()));
+        }
+        Ok(Reactor { epfd, buf: vec![EpollEvent { events: 0, data: 0 }; 64] })
+    }
+
+    fn ctl(&self, op: i32, fd: RawFd, ev: Option<EpollEvent>) -> Result<()> {
+        let mut ev = ev;
+        let ptr = match ev.as_mut() {
+            Some(e) => e as *mut EpollEvent,
+            None => std::ptr::null_mut(),
+        };
+        let rc = unsafe { epoll_ctl(self.epfd, op, fd, ptr) };
+        if rc < 0 {
+            return Err(anyhow!("epoll_ctl(op={op}, fd={fd}): {}",
+                               io::Error::last_os_error()));
+        }
+        Ok(())
+    }
+
+    /// Start watching `fd`; events for it carry `token`.
+    pub fn register(&self, fd: RawFd, token: u64, interest: Interest) -> Result<()> {
+        self.ctl(EPOLL_CTL_ADD, fd,
+                 Some(EpollEvent { events: interest.bits(), data: token }))
+    }
+
+    /// Change the interest set of an already-registered fd.
+    pub fn modify(&self, fd: RawFd, token: u64, interest: Interest) -> Result<()> {
+        self.ctl(EPOLL_CTL_MOD, fd,
+                 Some(EpollEvent { events: interest.bits(), data: token }))
+    }
+
+    /// Stop watching `fd`. Harmless to call right before closing it (the
+    /// kernel also drops closed fds from the interest set on its own when
+    /// no duplicate remains).
+    pub fn deregister(&self, fd: RawFd) -> Result<()> {
+        self.ctl(EPOLL_CTL_DEL, fd, None)
+    }
+
+    /// Block up to `timeout` and append one [`Event`] per ready fd to
+    /// `out` (cleared first). Retries on EINTR.
+    pub fn wait(&mut self, timeout: Duration, out: &mut Vec<Event>) -> Result<()> {
+        out.clear();
+        let ms = timeout.as_millis().min(i32::MAX as u128) as i32;
+        let n = loop {
+            let n = unsafe {
+                epoll_wait(self.epfd, self.buf.as_mut_ptr(),
+                           self.buf.len() as i32, ms)
+            };
+            if n >= 0 {
+                break n as usize;
+            }
+            let err = io::Error::last_os_error();
+            if err.kind() == io::ErrorKind::Interrupted {
+                continue;
+            }
+            return Err(anyhow!("epoll_wait: {err}"));
+        };
+        for ev in self.buf.iter().take(n).copied() {
+            let bits = ev.events;
+            out.push(Event {
+                token: ev.data,
+                readable: bits & (EPOLLIN | EPOLLRDHUP | EPOLLHUP | EPOLLERR) != 0,
+                writable: bits & EPOLLOUT != 0,
+            });
+        }
+        // A full batch means there may be more ready fds than the buffer
+        // holds; grow so the next wait sees them all at once.
+        if n == self.buf.len() {
+            let len = self.buf.len() * 2;
+            self.buf.resize(len, EpollEvent { events: 0, data: 0 });
+        }
+        Ok(())
+    }
+}
+
+impl Drop for Reactor {
+    fn drop(&mut self) {
+        unsafe {
+            close(self.epfd);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Write;
+    use std::net::{TcpListener, TcpStream};
+    use std::os::unix::io::AsRawFd;
+
+    #[test]
+    fn reports_accept_and_read_readiness() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        listener.set_nonblocking(true).unwrap();
+        let addr = listener.local_addr().unwrap();
+        let mut r = Reactor::new().unwrap();
+        r.register(listener.as_raw_fd(), 1, Interest::READ).unwrap();
+
+        let mut events = Vec::new();
+        r.wait(Duration::from_millis(1), &mut events).unwrap();
+        assert!(events.is_empty(), "nothing connected yet");
+
+        let mut client = TcpStream::connect(addr).unwrap();
+        // The pending connection must surface as readability on the
+        // listener within a generous deadline.
+        let mut accepted = None;
+        for _ in 0..500 {
+            r.wait(Duration::from_millis(10), &mut events).unwrap();
+            if events.iter().any(|e| e.token == 1 && e.readable) {
+                let (s, _) = listener.accept().unwrap();
+                s.set_nonblocking(true).unwrap();
+                accepted = Some(s);
+                break;
+            }
+        }
+        let accepted = accepted.expect("listener never became readable");
+        r.register(accepted.as_raw_fd(), 2, Interest::READ_WRITE).unwrap();
+
+        client.write_all(b"ping\n").unwrap();
+        let mut saw_read = false;
+        let mut saw_write = false;
+        for _ in 0..500 {
+            r.wait(Duration::from_millis(10), &mut events).unwrap();
+            for e in &events {
+                if e.token == 2 {
+                    saw_read |= e.readable;
+                    saw_write |= e.writable;
+                }
+            }
+            if saw_read && saw_write {
+                break;
+            }
+        }
+        assert!(saw_read, "conn never readable after client write");
+        assert!(saw_write, "fresh conn never writable");
+
+        // Dropping write interest must stop writable notifications.
+        r.modify(accepted.as_raw_fd(), 2, Interest::READ).unwrap();
+        r.wait(Duration::from_millis(20), &mut events).unwrap();
+        assert!(events.iter().all(|e| e.token != 2 || !e.writable),
+                "writable after interest dropped: {events:?}");
+        r.deregister(accepted.as_raw_fd()).unwrap();
+    }
+}

@@ -13,7 +13,7 @@ use std::time::{Duration, Instant};
 use anyhow::Result;
 
 use super::request::{Completion, Request};
-use super::shard::EngineGroup;
+use super::shard::{EngineGroup, SubmitOutcome};
 use super::DecodeEngine;
 use crate::workload::trace::TracedRequest;
 
@@ -90,7 +90,9 @@ impl TraceRunner {
     /// admitted requests, shards decode concurrently, and completions
     /// fan back in. A 1-shard group reproduces `run`'s per-request
     /// output exactly (content-deterministic engines), which the serving
-    /// tests assert.
+    /// tests assert. Admission backpressure ([`SubmitOutcome::Rejected`])
+    /// is handled as a well-behaved client would: hold the request and
+    /// retry once completions free capacity, so no trace entry is lost.
     pub fn run_group<E: DecodeEngine>(&self, group: &mut EngineGroup<E>,
                                       trace: &[TracedRequest])
                                       -> Result<Vec<Completion>> {
@@ -123,13 +125,20 @@ impl TraceRunner {
                     break;
                 }
                 let t = &trace[next];
-                group.submit(Request {
+                match group.submit(Request {
                     id,
                     prompt: t.episode.prompt.clone(),
                     max_new: t.max_new,
-                })?;
-                id += 1;
-                next += 1;
+                })? {
+                    SubmitOutcome::Routed(_) => {
+                        id += 1;
+                        next += 1;
+                    }
+                    // Every shard is at capacity: poll below, retry this
+                    // entry on the next pass (capacity frees as
+                    // completions land, so this cannot livelock).
+                    SubmitOutcome::Rejected => break,
+                }
             }
             if let Some(c) = group.poll(Duration::from_millis(1))? {
                 completions.push(c);

@@ -1,30 +1,88 @@
-//! TCP JSON-lines serving front-end over a sharded [`EngineGroup`].
+//! Event-driven TCP JSON-lines serving front-end over a sharded
+//! [`EngineGroup`].
 //!
 //! Protocol (one JSON object per line):
 //!   request:  {"id": 1, "prompt": [tok, ...], "max_new": 32}
 //!   response: {"id": 1, "generated": [tok, ...], "stop": "eos",
 //!              "ttft_ms": 12.3, "e2e_ms": 45.6}
+//!   errors:   {"error": "..."} (parse) / {"id": N, "error": "..."}
+//!             (per-request: prompt too long, overloaded)
 //!
-//! Connection I/O runs on per-connection reader threads that funnel
-//! parsed requests through a channel into the serving loop, which routes
-//! them across the group's engine shards and fans completions back to
-//! the owning connection. Ids are rewritten internally so concurrent
-//! clients cannot collide. (The offline vendor set has no tokio;
-//! std::net + threads provide the same architecture.)
+//! The front-end is a **single-threaded reactor** over raw epoll (see
+//! [`super::reactor`]): one thread drives non-blocking accept, reads,
+//! writes, and engine-completion fan-out over per-connection state
+//! machines with partial-read/partial-write buffers. Compared to the
+//! previous thread-per-connection design this caps front-end cost at one
+//! thread regardless of connection count and makes hard limits
+//! enforceable:
+//!
+//! - **connection cap** (`max_conns`): excess clients get a structured
+//!   error reply and are closed immediately — no unbounded thread spawn.
+//! - **idle timeout** (`idle_timeout`): a connection with no in-flight
+//!   work and no *completed request line* inside the window is evicted
+//!   with a structured goodbye. Raw bytes do not refresh the clock, so
+//!   a slow-loris dripping a partial line cannot hold a slot.
+//! - **admission backpressure**: when the router reports every shard at
+//!   `batch + queue_depth` load, the request is answered with an
+//!   `overloaded` error instead of queueing unboundedly.
+//!
+//! Ids are rewritten internally so concurrent clients cannot collide.
+//! (The offline vendor set has no tokio; epoll + std::net provides the
+//! same architecture.)
 
-use std::io::{BufRead, BufReader, Write};
+use std::collections::HashMap;
+use std::io::{Read, Write};
 use std::net::{TcpListener, TcpStream};
-use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::mpsc::{channel, Receiver, Sender};
-use std::sync::{Arc, Mutex};
-use std::time::Duration;
+use std::os::unix::io::AsRawFd;
+use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, Result};
 
+use super::reactor::{Event, Interest, Reactor};
 use super::request::{Completion, Request, StopReason};
-use super::shard::EngineGroup;
+use super::shard::{EngineGroup, SubmitOutcome};
 use super::DecodeEngine;
 use crate::util::json::Json;
+
+/// Reactor token reserved for the listener; connections get tokens
+/// starting at 1.
+const LISTENER: u64 = 0;
+
+/// A request line longer than this (no newline seen yet) is answered
+/// with an error and the connection closed — a reasonable bound for a
+/// token-id array protocol, and a guard against memory exhaustion.
+const MAX_LINE_BYTES: usize = 1 << 20;
+
+/// Pending-reply bytes beyond this mean the client is not draining its
+/// socket; the connection is dropped rather than buffering without
+/// bound (the blocking write this design replaced applied the same
+/// pressure by stalling the writer).
+const MAX_WR_BYTES: usize = 8 << 20;
+
+/// Front-end limits; `Default` gives production-ish values, tests
+/// override.
+#[derive(Debug, Clone, Copy)]
+pub struct ServeConfig {
+    /// Hard cap on concurrently open connections; excess accepts get a
+    /// structured error reply and an immediate close.
+    pub max_conns: usize,
+    /// Connections with no in-flight work and no traffic for this long
+    /// are evicted (structured goodbye, then close).
+    pub idle_timeout: Duration,
+    /// Stop after this many completions have been collected (tests bind
+    /// port 0 and set a limit); `None` serves forever.
+    pub limit: Option<usize>,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        ServeConfig {
+            max_conns: 256,
+            idle_timeout: Duration::from_secs(30),
+            limit: None,
+        }
+    }
+}
 
 /// Parse one request line.
 pub fn parse_request(line: &str) -> Result<Request> {
@@ -58,216 +116,549 @@ pub fn encode_completion(c: &Completion) -> String {
     .to_string()
 }
 
-struct Inflight {
-    conn: Arc<Mutex<TcpStream>>,
-    client_id: u64,
+fn error_line(id: Option<u64>, msg: &str) -> String {
+    let mut fields = Vec::new();
+    if let Some(id) = id {
+        fields.push(("id", Json::Num(id as f64)));
+    }
+    fields.push(("error", Json::Str(msg.to_string())));
+    Json::obj(fields).to_string()
 }
 
-/// Write one completion back to its owning connection, restoring the
-/// client's id.
-fn reply(inflight: &mut std::collections::HashMap<u64, Inflight>,
-         mut c: Completion) {
-    if let Some(fl) = inflight.remove(&c.id) {
-        c.id = fl.client_id;
-        let line = encode_completion(&c);
-        if let Ok(mut s) = fl.conn.lock() {
-            let _ = writeln!(s, "{line}");
-        }
-    }
+/// One connection's state machine: accumulated partial line, pending
+/// output, liveness bookkeeping.
+struct Conn {
+    stream: TcpStream,
+    /// Bytes read but not yet terminated by a newline.
+    rd: Vec<u8>,
+    /// Encoded replies not yet accepted by the socket.
+    wr: Vec<u8>,
+    /// Last *useful* activity: accept, a completed request line, or a
+    /// delivered reply. Raw bytes deliberately do not refresh it, so a
+    /// byte-dripping slow-loris still ages out.
+    last_activity: Instant,
+    /// Requests submitted on this connection whose completions are owed.
+    inflight: usize,
+    /// Write interest currently registered with the reactor.
+    want_write: bool,
+    /// Flush `wr`, then close (goodbye messages).
+    closing: bool,
+    /// Peer half-closed its write side (we read EOF). Replies for
+    /// in-flight work still flush; the conn closes once nothing is owed.
+    read_closed: bool,
 }
 
 /// Serve forever on `addr` across the group's shards.
-pub fn serve<E: DecodeEngine>(group: EngineGroup<E>, addr: &str) -> Result<()> {
+pub fn serve<E: DecodeEngine>(group: EngineGroup<E>, addr: &str,
+                              cfg: ServeConfig) -> Result<()> {
     let listener = TcpListener::bind(addr).map_err(|e| anyhow!("bind {addr}: {e}"))?;
-    eprintln!("[seerattn] serving on {addr} ({} shard{})", group.n_shards(),
-              if group.n_shards() == 1 { "" } else { "s" });
-    serve_on(listener, group, None)
+    eprintln!("[seerattn] serving on {addr} ({} shard{}, max-conns {}, \
+               idle-timeout {:?}, queue-depth {})",
+              group.n_shards(),
+              if group.n_shards() == 1 { "" } else { "s" },
+              cfg.max_conns, cfg.idle_timeout, group.queue_depth());
+    serve_on(listener, group, cfg)
 }
 
-/// Serve on an already-bound listener; with `limit = Some(n)` the loop
-/// returns after writing `n` completions (tests bind port 0 and pass a
-/// limit), printing the aggregated fleet metrics on the way out.
-pub fn serve_on<E: DecodeEngine>(listener: TcpListener,
-                                 mut group: EngineGroup<E>,
-                                 limit: Option<usize>) -> Result<()> {
-    listener.set_nonblocking(true)?;
-    let stop = Arc::new(AtomicBool::new(false));
-    let acceptor_stop = stop.clone();
-    // Live connections, so shutdown can close them all — a client
-    // mid-pipeline at exit gets EOF instead of blocking forever. Each
-    // reader thread removes its entry on disconnect, so the registry
-    // (and its duplicated fds) tracks only *live* connections.
-    let conns: Arc<Mutex<std::collections::HashMap<u64, TcpStream>>> =
-        Arc::new(Mutex::new(std::collections::HashMap::new()));
-    let acceptor_conns = conns.clone();
-    let (tx, rx): (Sender<(Request, Arc<Mutex<TcpStream>>)>, Receiver<_>) = channel();
-    // Acceptor thread: spawns a reader thread per connection.
-    std::thread::spawn(move || {
-        let mut next_conn = 0u64;
+/// Serve on an already-bound listener. With `cfg.limit = Some(n)` the
+/// loop exits after collecting `n` completions, drains in-flight work,
+/// and prints the aggregated fleet metrics on the way out.
+pub fn serve_on<E: DecodeEngine>(listener: TcpListener, group: EngineGroup<E>,
+                                 cfg: ServeConfig) -> Result<()> {
+    FrontEnd::new(listener, group, cfg)?.run()
+}
+
+struct FrontEnd<E: DecodeEngine> {
+    reactor: Reactor,
+    listener: TcpListener,
+    group: EngineGroup<E>,
+    cfg: ServeConfig,
+    max_prompt: usize,
+    conns: HashMap<u64, Conn>,
+    /// Internal request id -> (connection token, client-visible id).
+    inflight: HashMap<u64, (u64, u64)>,
+    next_token: u64,
+    next_req: u64,
+    served: usize,
+    conns_rejected: u64,
+    conns_evicted: u64,
+    failure: Option<anyhow::Error>,
+}
+
+impl<E: DecodeEngine> FrontEnd<E> {
+    fn new(listener: TcpListener, group: EngineGroup<E>,
+           cfg: ServeConfig) -> Result<FrontEnd<E>> {
+        listener.set_nonblocking(true)?;
+        let reactor = Reactor::new()?;
+        reactor.register(listener.as_raw_fd(), LISTENER, Interest::READ)?;
+        let max_prompt = group.max_prompt_len();
+        Ok(FrontEnd {
+            reactor,
+            listener,
+            group,
+            cfg,
+            max_prompt,
+            conns: HashMap::new(),
+            inflight: HashMap::new(),
+            next_token: 1,
+            next_req: 0,
+            served: 0,
+            conns_rejected: 0,
+            conns_evicted: 0,
+            failure: None,
+        })
+    }
+
+    fn run(mut self) -> Result<()> {
+        let mut events: Vec<Event> = Vec::new();
         loop {
-            match listener.accept() {
+            if let Some(n) = self.cfg.limit {
+                // Checked at loop entry so limit = Some(0) terminates
+                // without waiting for a completion.
+                if self.served >= n {
+                    break;
+                }
+            }
+            if self.failure.is_some() {
+                break;
+            }
+            // Completions can only arrive while work is in flight; when
+            // nothing is, wait longer per syscall (idle eviction still
+            // ticks, just at coarser granularity).
+            let timeout = if self.group.inflight() > 0 {
+                Duration::from_millis(1)
+            } else {
+                Duration::from_millis(20)
+            };
+            if let Err(e) = self.reactor.wait(timeout, &mut events) {
+                // Route through the failure path so the shard fleet is
+                // still torn down and connections closed.
+                self.failure = Some(e);
+                break;
+            }
+            for ev in &events {
+                if ev.token == LISTENER {
+                    self.accept_ready();
+                } else {
+                    if ev.readable {
+                        self.conn_readable(ev.token);
+                    }
+                    if ev.writable {
+                        self.conn_writable(ev.token);
+                    }
+                }
+                if self.failure.is_some() {
+                    break;
+                }
+            }
+            self.pump_completions();
+            self.evict_idle();
+        }
+        self.finish()
+    }
+
+    /// Accept everything pending; over-cap clients get a structured
+    /// reply and an immediate close.
+    fn accept_ready(&mut self) {
+        loop {
+            match self.listener.accept() {
                 Ok((stream, _)) => {
-                    if acceptor_stop.load(Ordering::Relaxed) {
-                        break;
+                    if stream.set_nonblocking(true).is_err() {
+                        continue;
                     }
-                    let cid = next_conn;
-                    next_conn += 1;
-                    match stream.try_clone() {
-                        Ok(clone) => {
-                            acceptor_conns.lock().unwrap().insert(cid, clone);
-                        }
-                        // Untracked connections could never be closed at
-                        // shutdown — refuse rather than serve one.
-                        Err(_) => continue,
+                    if self.conns.len() >= self.cfg.max_conns {
+                        self.conns_rejected += 1;
+                        let line = error_line(
+                            None,
+                            &format!("server at connection capacity \
+                                      (max-conns {})", self.cfg.max_conns),
+                        );
+                        // Best effort: a fresh socket's send buffer is
+                        // empty, so this short line lands unless the
+                        // peer is already gone.
+                        let mut s = stream;
+                        let _ = s.write_all(line.as_bytes());
+                        let _ = s.write_all(b"\n");
+                        let _ = s.shutdown(std::net::Shutdown::Both);
+                        continue;
                     }
-                    let tx = tx.clone();
-                    let reader_conns = acceptor_conns.clone();
-                    std::thread::spawn(move || {
-                        let shared =
-                            Arc::new(Mutex::new(stream.try_clone().unwrap()));
-                        let reader = BufReader::new(stream);
-                        for line in reader.lines() {
-                            let line = match line {
-                                Ok(l) => l,
-                                Err(_) => break,
-                            };
-                            if line.trim().is_empty() {
-                                continue;
-                            }
-                            match parse_request(&line) {
-                                Ok(req) => {
-                                    let _ = tx.send((req, shared.clone()));
-                                }
-                                Err(e) => {
-                                    // Through Json so the message is
-                                    // escaped (parse errors quote the
-                                    // missing key).
-                                    let reply = Json::obj(vec![
-                                        ("error", Json::Str(format!("{e}"))),
-                                    ])
-                                    .to_string();
-                                    let mut s = shared.lock().unwrap();
-                                    let _ = writeln!(s, "{reply}");
-                                }
-                            }
-                        }
-                        // Disconnect: release this connection's registry
-                        // entry (and its duplicated fd).
-                        reader_conns.lock().unwrap().remove(&cid);
+                    let token = self.next_token;
+                    self.next_token += 1;
+                    if self
+                        .reactor
+                        .register(stream.as_raw_fd(), token, Interest::READ)
+                        .is_err()
+                    {
+                        continue;
+                    }
+                    self.conns.insert(token, Conn {
+                        stream,
+                        rd: Vec::new(),
+                        wr: Vec::new(),
+                        last_activity: Instant::now(),
+                        inflight: 0,
+                        want_write: false,
+                        closing: false,
+                        read_closed: false,
                     });
                 }
-                Err(ref e) if e.kind() == std::io::ErrorKind::WouldBlock => {
-                    if acceptor_stop.load(Ordering::Relaxed) {
-                        break;
-                    }
-                    std::thread::sleep(Duration::from_millis(5));
-                }
+                Err(ref e) if e.kind() == std::io::ErrorKind::WouldBlock => break,
+                Err(ref e) if e.kind() == std::io::ErrorKind::Interrupted => {}
                 Err(_) => break,
             }
         }
-    });
+    }
 
-    // Serving loop: route newly arrived requests across the shards, fan
-    // completed generations back to their connections. Any exit path —
-    // limit reached or a shard failure — must stop the acceptor and
-    // shut the group down, so errors are collected rather than
-    // early-returned.
-    let max_prompt = group.max_prompt_len();
-    let mut inflight: std::collections::HashMap<u64, Inflight> =
-        std::collections::HashMap::new();
-    let mut next_id = 0u64;
-    let mut served = 0usize;
-    let mut failure: Option<anyhow::Error> = None;
-    'serve: loop {
-        // Checked at loop entry so limit = Some(0) terminates without
-        // waiting for a completion that will never be counted.
-        if let Some(n) = limit {
-            if served >= n {
-                break 'serve;
-            }
+    fn conn_readable(&mut self, token: u64) {
+        let Some(conn) = self.conns.get_mut(&token) else { return };
+        if conn.read_closed {
+            // Interest no longer includes IN/RDHUP, so a "readable"
+            // event here can only be EPOLLHUP/EPOLLERR (always reported
+            // by the kernel regardless of mask): the peer is fully gone,
+            // replies are undeliverable, and leaving the fd registered
+            // would level-trigger this event every wait — close now.
+            self.close_conn(token);
+            return;
         }
-        while let Ok((mut req, conn)) = rx.try_recv() {
-            // Reject instead of submitting: an over-long prompt would
-            // panic the target shard's engine (context overflow).
-            if req.prompt.len() > max_prompt {
-                let reply = Json::obj(vec![
-                    ("id", Json::Num(req.id as f64)),
-                    ("error",
-                     Json::Str(format!("prompt too long ({} > {max_prompt} tokens)",
-                                       req.prompt.len()))),
-                ])
-                .to_string();
-                if let Ok(mut s) = conn.lock() {
-                    let _ = writeln!(s, "{reply}");
+        let mut eof = false;
+        let mut dead = false;
+        let mut buf = [0u8; 4096];
+        loop {
+            match conn.stream.read(&mut buf) {
+                Ok(0) => {
+                    eof = true;
+                    break;
                 }
-                continue;
-            }
-            let client_id = req.id;
-            req.id = next_id;
-            inflight.insert(next_id, Inflight { conn, client_id });
-            next_id += 1;
-            if let Err(e) = group.submit(req) {
-                failure = Some(e);
-                break 'serve;
+                Ok(n) => {
+                    conn.rd.extend_from_slice(&buf[..n]);
+                    // Cap intake per event: bounds `rd` against a
+                    // newline-free flood, and yields to other
+                    // connections (level-triggered epoll re-fires for
+                    // whatever the kernel still holds).
+                    if conn.rd.len() > MAX_LINE_BYTES {
+                        break;
+                    }
+                }
+                Err(ref e) if e.kind() == std::io::ErrorKind::WouldBlock => break,
+                Err(ref e) if e.kind() == std::io::ErrorKind::Interrupted => {}
+                Err(_) => {
+                    // Hard socket error (e.g. RST): unlike a clean EOF
+                    // there is nothing left to deliver to this peer.
+                    dead = true;
+                    break;
+                }
             }
         }
-        match group.poll(Duration::from_millis(2)) {
-            Ok(Some(c)) => {
-                reply(&mut inflight, c);
-                served += 1;
-            }
-            Ok(None) => {}
+        // Split out complete lines, then release the borrow before
+        // dispatching (dispatch needs &mut self for the router).
+        let mut lines: Vec<String> = Vec::new();
+        while let Some(pos) = conn.rd.iter().position(|&b| b == b'\n') {
+            let line: Vec<u8> = conn.rd.drain(..=pos).collect();
+            lines.push(String::from_utf8_lossy(&line).into_owned());
+        }
+        if eof && !conn.rd.is_empty() {
+            // Clean EOF terminates a final unterminated line (matches
+            // the BufRead::lines behaviour of the old front-end —
+            // `printf <req> | nc` without a trailing newline is served).
+            let tail: Vec<u8> = conn.rd.drain(..).collect();
+            lines.push(String::from_utf8_lossy(&tail).into_owned());
+        }
+        let overlong = conn.rd.len() > MAX_LINE_BYTES;
+        for line in &lines {
+            self.handle_line(token, line);
+        }
+        if dead {
+            self.close_conn(token);
+        } else if overlong {
+            self.queue_reply(token, &error_line(None, "request line too long"));
+            self.close_after_flush(token);
+        } else if eof {
+            self.read_side_closed(token);
+        }
+    }
+
+    /// The peer closed its write side (or errored). Keep the connection
+    /// for as long as replies are owed — a client that pipelines
+    /// requests then shutdowns its write half still gets every answer —
+    /// and stop watching readability so a level-triggered EOF cannot
+    /// spin the loop.
+    fn read_side_closed(&mut self, token: u64) {
+        let Some(conn) = self.conns.get_mut(&token) else { return };
+        conn.read_closed = true;
+        if conn.inflight == 0 && conn.wr.is_empty() {
+            self.close_conn(token);
+            return;
+        }
+        let wants = !conn.wr.is_empty();
+        conn.want_write = wants;
+        let fd = conn.stream.as_raw_fd();
+        let interest = Interest { readable: false, writable: wants };
+        if self.reactor.modify(fd, token, interest).is_err() {
+            self.close_conn(token);
+        }
+    }
+
+    /// Parse and route one request line, queueing any reply.
+    fn handle_line(&mut self, token: u64, line: &str) {
+        if line.trim().is_empty() {
+            return;
+        }
+        // A completed *non-empty* line is useful activity; raw bytes —
+        // and bare newlines — are not (slow-loris defense).
+        if let Some(conn) = self.conns.get_mut(&token) {
+            conn.last_activity = Instant::now();
+        }
+        let req = match parse_request(line) {
+            Ok(r) => r,
             Err(e) => {
-                failure = Some(e);
-                break 'serve;
+                // Through Json so the message is escaped (parse errors
+                // quote the missing key).
+                self.queue_reply(token, &error_line(None, &format!("{e}")));
+                return;
             }
+        };
+        // Reject instead of submitting: an over-long prompt would panic
+        // the target shard's engine (context overflow).
+        if req.prompt.len() > self.max_prompt {
+            let msg = format!("prompt too long ({} > {} tokens)",
+                              req.prompt.len(), self.max_prompt);
+            self.queue_reply(token, &error_line(Some(req.id), &msg));
+            return;
+        }
+        let client_id = req.id;
+        let internal = self.next_req;
+        let routed = self.group.submit(Request {
+            id: internal,
+            prompt: req.prompt,
+            max_new: req.max_new,
+        });
+        match routed {
+            Ok(SubmitOutcome::Routed(_)) => {
+                self.next_req += 1;
+                self.inflight.insert(internal, (token, client_id));
+                if let Some(conn) = self.conns.get_mut(&token) {
+                    conn.inflight += 1;
+                }
+            }
+            Ok(SubmitOutcome::Rejected) => {
+                let msg = format!("overloaded: every shard at capacity \
+                                   (queue-depth {}), retry later",
+                                  self.group.queue_depth());
+                self.queue_reply(token, &error_line(Some(client_id), &msg));
+            }
+            Err(e) => self.failure = Some(e),
         }
     }
-    stop.store(true, Ordering::Relaxed);
-    // Requests still sitting in the parse channel were accepted but
-    // never routed — tell their clients instead of going silent.
-    while let Ok((req, conn)) = rx.try_recv() {
-        let msg = Json::obj(vec![
-            ("id", Json::Num(req.id as f64)),
-            ("error", Json::Str("server shutting down".to_string())),
-        ])
-        .to_string();
-        if let Ok(mut s) = conn.lock() {
-            let _ = writeln!(s, "{msg}");
-        }
-    }
-    // The limit counts served replies: anything already routed to a
-    // shard still gets its reply before shutdown, so no accepted
-    // request is silently dropped — and a shard failure during this
-    // drain is surfaced exactly like one during the main loop.
-    if failure.is_none() {
-        while group.inflight() > 0 {
-            match group.poll(Duration::from_millis(5)) {
-                Ok(Some(c)) => reply(&mut inflight, c),
-                Ok(None) => {}
+
+    /// Collect every completion the fleet has ready and fan the replies
+    /// out to their owning connections.
+    fn pump_completions(&mut self) {
+        loop {
+            match self.group.poll(Duration::ZERO) {
+                Ok(Some(c)) => {
+                    self.served += 1;
+                    self.deliver(c);
+                }
+                Ok(None) => break,
                 Err(e) => {
-                    failure = Some(e);
+                    self.failure = Some(e);
                     break;
                 }
             }
         }
     }
-    let result = match failure {
-        None => group.shutdown().map(|gm| eprintln!("{}", gm.report())),
-        Some(e) => {
-            // Best-effort teardown; the original failure is the story.
-            let _ = group.shutdown();
-            Err(e)
+
+    fn deliver(&mut self, mut c: Completion) {
+        let Some((token, client_id)) = self.inflight.remove(&c.id) else {
+            return;
+        };
+        c.id = client_id;
+        let line = encode_completion(&c);
+        if let Some(conn) = self.conns.get_mut(&token) {
+            conn.inflight = conn.inflight.saturating_sub(1);
+            conn.last_activity = Instant::now();
         }
-    };
-    // A reader thread may have parsed a request after the drain above —
-    // closing every connection turns "blocked forever on read_line"
-    // into an EOF for any such client (queued replies still flush:
-    // TCP sends the write queue before FIN).
-    for s in conns.lock().unwrap().values() {
-        let _ = s.shutdown(std::net::Shutdown::Both);
+        // The owning connection may be gone (client hung up mid-decode);
+        // the completion is then dropped, like the old front-end did.
+        self.queue_reply(token, &line);
     }
-    result
+
+    /// Evict connections with no in-flight work and no traffic inside
+    /// the idle window. In-flight work keeps a connection alive no
+    /// matter how long decode takes.
+    fn evict_idle(&mut self) {
+        let cutoff = self.cfg.idle_timeout;
+        let stale: Vec<u64> = self
+            .conns
+            .iter()
+            .filter(|(_, c)| {
+                c.inflight == 0 && !c.closing && c.last_activity.elapsed() > cutoff
+            })
+            .map(|(&t, _)| t)
+            .collect();
+        for token in stale {
+            self.conns_evicted += 1;
+            let line = error_line(
+                None,
+                &format!("idle timeout ({} ms), closing",
+                         cutoff.as_millis()),
+            );
+            self.queue_reply(token, &line);
+            self.close_after_flush(token);
+        }
+        // A closing connection whose peer stopped reading can never
+        // drain its goodbye; don't let it linger past a second window.
+        let stuck: Vec<u64> = self
+            .conns
+            .iter()
+            .filter(|(_, c)| c.closing && c.last_activity.elapsed() > cutoff * 2)
+            .map(|(&t, _)| t)
+            .collect();
+        for token in stuck {
+            self.close_conn(token);
+        }
+    }
+
+    /// Queue `line` on the connection and push as much as the socket
+    /// accepts right now. A client whose pending output exceeds
+    /// [`MAX_WR_BYTES`] is a slow consumer and is dropped.
+    fn queue_reply(&mut self, token: u64, line: &str) {
+        let Some(conn) = self.conns.get_mut(&token) else { return };
+        if conn.wr.len() + line.len() + 1 > MAX_WR_BYTES {
+            self.conns_evicted += 1;
+            self.close_conn(token);
+            return;
+        }
+        conn.wr.extend_from_slice(line.as_bytes());
+        conn.wr.push(b'\n');
+        self.flush_conn(token);
+    }
+
+    fn conn_writable(&mut self, token: u64) {
+        self.flush_conn(token);
+    }
+
+    /// Write pending bytes; manage EPOLLOUT interest; close on error or
+    /// when a `closing` connection fully drains.
+    fn flush_conn(&mut self, token: u64) {
+        let Some(conn) = self.conns.get_mut(&token) else { return };
+        let mut written = 0usize;
+        let mut dead = false;
+        while written < conn.wr.len() {
+            match conn.stream.write(&conn.wr[written..]) {
+                Ok(0) => {
+                    dead = true;
+                    break;
+                }
+                Ok(n) => written += n,
+                Err(ref e) if e.kind() == std::io::ErrorKind::WouldBlock => break,
+                Err(ref e) if e.kind() == std::io::ErrorKind::Interrupted => {}
+                Err(_) => {
+                    dead = true;
+                    break;
+                }
+            }
+        }
+        if written > 0 {
+            conn.wr.drain(..written);
+        }
+        if dead {
+            self.close_conn(token);
+            return;
+        }
+        let wants = !conn.wr.is_empty();
+        if wants != conn.want_write {
+            conn.want_write = wants;
+            let interest = Interest { readable: !conn.read_closed, writable: wants };
+            let fd = conn.stream.as_raw_fd();
+            if self.reactor.modify(fd, token, interest).is_err() {
+                self.close_conn(token);
+                return;
+            }
+        }
+        if conn.wr.is_empty()
+            && (conn.closing || (conn.read_closed && conn.inflight == 0))
+        {
+            self.close_conn(token);
+        }
+    }
+
+    /// Mark the connection for close once its output drains (goodbye
+    /// lines); closes immediately when nothing is pending.
+    fn close_after_flush(&mut self, token: u64) {
+        if let Some(conn) = self.conns.get_mut(&token) {
+            conn.closing = true;
+            if conn.wr.is_empty() {
+                self.close_conn(token);
+            }
+        }
+    }
+
+    fn close_conn(&mut self, token: u64) {
+        if let Some(conn) = self.conns.remove(&token) {
+            let _ = self.reactor.deregister(conn.stream.as_raw_fd());
+            let _ = conn.stream.shutdown(std::net::Shutdown::Both);
+            // Completions owed to this connection will be dropped on
+            // delivery (their inflight entries resolve to a dead token).
+        }
+    }
+
+    /// Exit path: drain in-flight work (its replies still flush), report
+    /// fleet metrics, close every connection.
+    fn finish(mut self) -> Result<()> {
+        if self.failure.is_none() {
+            // The limit counts served replies: anything already routed
+            // to a shard still gets its reply before shutdown, so no
+            // accepted request is silently dropped — and a shard failure
+            // during this drain is surfaced exactly like one during the
+            // main loop.
+            while self.group.inflight() > 0 && self.failure.is_none() {
+                match self.group.poll(Duration::from_millis(5)) {
+                    Ok(Some(c)) => {
+                        self.served += 1;
+                        self.deliver(c);
+                    }
+                    Ok(None) => {}
+                    Err(e) => self.failure = Some(e),
+                }
+            }
+        }
+        // Push queued replies out before closing; bounded patience so a
+        // stalled peer cannot wedge shutdown.
+        let deadline = Instant::now() + Duration::from_secs(2);
+        while Instant::now() < deadline {
+            let tokens: Vec<u64> = self
+                .conns
+                .iter()
+                .filter(|(_, c)| !c.wr.is_empty())
+                .map(|(&t, _)| t)
+                .collect();
+            if tokens.is_empty() {
+                break;
+            }
+            for t in tokens {
+                self.flush_conn(t);
+            }
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        let tokens: Vec<u64> = self.conns.keys().copied().collect();
+        for t in tokens {
+            self.close_conn(t);
+        }
+        if self.conns_rejected + self.conns_evicted > 0 {
+            eprintln!("[seerattn] front-end: {} connection(s) rejected at cap, \
+                       {} evicted idle",
+                      self.conns_rejected, self.conns_evicted);
+        }
+        match self.failure {
+            None => self.group.shutdown().map(|gm| eprintln!("{}", gm.report())),
+            Some(e) => {
+                // Best-effort teardown; the original failure is the story.
+                let _ = self.group.shutdown();
+                Err(e)
+            }
+        }
+    }
 }
 
 #[cfg(test)]
@@ -303,5 +694,15 @@ mod tests {
         assert_eq!(j.get("id").unwrap().as_i64().unwrap(), 3);
         assert_eq!(j.get("stop").unwrap().as_str().unwrap(), "eos");
         assert_eq!(j.get("generated").unwrap().as_arr().unwrap().len(), 2);
+    }
+
+    #[test]
+    fn error_lines_carry_optional_ids() {
+        let j = Json::parse(&error_line(None, "nope")).unwrap();
+        assert_eq!(j.get("error").unwrap().as_str().unwrap(), "nope");
+        assert!(j.get("id").is_err());
+        let j = Json::parse(&error_line(Some(9), "msg \"quoted\"")).unwrap();
+        assert_eq!(j.get("id").unwrap().as_i64().unwrap(), 9);
+        assert!(j.get("error").unwrap().as_str().unwrap().contains("quoted"));
     }
 }

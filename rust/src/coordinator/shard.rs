@@ -5,32 +5,45 @@
 //! Engines are deliberately **not** `Send` (the PJRT engine holds
 //! `Rc<Runtime>`), so each shard thread *constructs* its own engine from
 //! a `Send + Sync` factory and the engine never crosses a thread
-//! boundary. The group side talks to shards over per-shard command
-//! channels and a shared mpsc completion fan-in:
+//! boundary. Requests flow through **shared per-shard overflow queues**
+//! (bounded by `queue_depth`) with a control channel per shard for
+//! wakeups; completions fan in over one mpsc channel:
 //!
 //! ```text
-//!                 submit ──► router (least-loaded + affinity)
-//!                                │ ShardCmd::Submit
-//!            ┌───────────┬───────┴────┬───────────┐
-//!         shard 0     shard 1      shard 2     shard 3     (threads)
-//!         Engine      Engine       Engine      Engine
-//!            └───────────┴─────┬──────┴───────────┘
-//!                              │ ShardEvent::Done(Completion)
-//!                    poll / drain ──► caller
+//!            submit ──► router (least-loaded + affinity, bounded)
+//!                │ push + Wake             │ all shards full
+//!                ▼                         ▼
+//!        overflow queues            SubmitOutcome::Rejected
+//!     ┌────────┬───┴────┬────────┐   (front-end replies "overloaded")
+//!  shard 0  shard 1  shard 2  shard 3          (threads)
+//!  Engine   Engine   Engine   Engine
+//!     └──← an idle shard steals from the most-loaded queue ←──┘
+//!                │ ShardEvent::Done(Completion)
+//!        poll / drain ──► caller
 //! ```
 //!
-//! Routing prefers the request's *affinity shard* (a deterministic hash
-//! of its prompt) while that shard's in-flight load is within
-//! `affinity_slack` of the least-loaded shard, and falls back to the
-//! least-loaded shard (lowest index on ties) otherwise. With
-//! content-deterministic engines (greedy decoding; see `SimEngine`),
-//! per-request output is independent of shard placement, so an N-shard
-//! group produces byte-identical completions to a single engine —
-//! `rust/tests/serving.rs` pins that property.
+//! **Admission backpressure**: each shard holds at most
+//! `batch + queue_depth` requests (active + queued). When every shard is
+//! at capacity, [`EngineGroup::submit`] returns
+//! [`SubmitOutcome::Rejected`] instead of enqueueing unboundedly — the
+//! front-end turns that into a structured `overloaded` reply.
+//!
+//! **Work stealing**: requests wait in shared `Mutex<VecDeque>` overflow
+//! queues rather than private channels, so a shard with free batch slots
+//! and an empty queue of its own pulls work from the most-loaded shard's
+//! queue. Routing still prefers the request's *affinity shard* (a
+//! deterministic hash of its prompt) while that shard's load is within
+//! `affinity_slack` of the fleet minimum — the prompt-affinity fast path
+//! is untouched; stealing only rebalances what affinity left queued.
+//! With content-deterministic engines (greedy decoding; see `SimEngine`)
+//! per-request output is independent of placement, so stealing cannot
+//! change completions — `rust/tests/serving.rs` pins that property.
 
+use std::collections::VecDeque;
 use std::marker::PhantomData;
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
@@ -46,21 +59,31 @@ pub struct GroupConfig {
     /// Number of engine shards (threads).
     pub shards: usize,
     /// A request may follow its affinity shard while that shard's
-    /// in-flight count is at most this much above the fleet minimum.
+    /// load is at most this much above the fleet minimum.
     pub affinity_slack: usize,
+    /// Bounded overflow queue per shard: a shard admits at most
+    /// `batch + queue_depth` requests (active + queued); beyond that on
+    /// every shard, `submit` rejects.
+    pub queue_depth: usize,
 }
 
 impl Default for GroupConfig {
     fn default() -> Self {
-        GroupConfig { shards: 1, affinity_slack: 1 }
+        GroupConfig { shards: 1, affinity_slack: 1, queue_depth: 32 }
     }
 }
 
+/// Result of [`EngineGroup::submit`]: routed to a shard, or rejected
+/// because every shard is at `batch + queue_depth` load.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SubmitOutcome {
+    Routed(usize),
+    Rejected,
+}
+
 enum ShardCmd {
-    /// A routed request plus the instant the group observed it — the
-    /// shard engine measures TTFT/e2e from that instant, so time spent
-    /// in this channel counts as queueing latency.
-    Submit(Request, Instant),
+    /// A request was pushed to this shard's overflow queue.
+    Wake,
     /// Finish all in-flight work, then exit and snapshot metrics.
     Shutdown,
 }
@@ -68,9 +91,57 @@ enum ShardCmd {
 enum ShardEvent {
     /// Sent once per shard after its engine constructed successfully.
     Ready { shard: usize, batch: usize, max_prompt: usize },
-    Done { shard: usize, completion: Completion },
+    Done(Completion),
     /// Engine construction or `step` failed; the shard thread has exited.
     Fatal { shard: usize, msg: String },
+}
+
+/// The state shards and the router share: overflow queues, per-shard
+/// load (queued + active, the router's placement signal), and the
+/// steal / queue-peak counters that feed [`GroupMetrics`].
+struct ShardQueues {
+    queues: Vec<Mutex<VecDeque<(Request, Instant)>>>,
+    /// Requests accepted for shard `i` and not yet completed. Maintained
+    /// by the router (push), thieves (transfer), and shards (completion),
+    /// so it stays accurate across steals.
+    load: Vec<AtomicUsize>,
+    /// Requests shard `i` stole from other shards' queues.
+    steals: Vec<AtomicU64>,
+    /// Peak overflow-queue length seen at shard `i`.
+    queue_peak: Vec<AtomicUsize>,
+}
+
+impl ShardQueues {
+    fn new(n: usize) -> ShardQueues {
+        ShardQueues {
+            queues: (0..n).map(|_| Mutex::new(VecDeque::new())).collect(),
+            load: (0..n).map(|_| AtomicUsize::new(0)).collect(),
+            steals: (0..n).map(|_| AtomicU64::new(0)).collect(),
+            queue_peak: (0..n).map(|_| AtomicUsize::new(0)).collect(),
+        }
+    }
+
+    /// Pop one queued request from the most-loaded *other* shard's
+    /// overflow queue, transferring its load accounting to `me`.
+    fn steal_for(&self, me: usize) -> Option<(Request, Instant)> {
+        let mut victim: Option<(usize, usize)> = None;
+        for s in 0..self.queues.len() {
+            if s == me {
+                continue;
+            }
+            let qlen = self.queues[s].lock().unwrap().len();
+            if qlen > 0 && victim.map(|(_, l)| qlen > l).unwrap_or(true) {
+                victim = Some((s, qlen));
+            }
+        }
+        let (v, _) = victim?;
+        // Re-lock and re-check: another thief may have raced us here.
+        let item = self.queues[v].lock().unwrap().pop_front()?;
+        self.load[v].fetch_sub(1, Ordering::SeqCst);
+        self.load[me].fetch_add(1, Ordering::SeqCst);
+        self.steals[me].fetch_add(1, Ordering::SeqCst);
+        Some(item)
+    }
 }
 
 struct ShardHandle {
@@ -80,17 +151,21 @@ struct ShardHandle {
     max_prompt: usize,
 }
 
-/// N decode-engine shards behind a least-loaded router with affinity.
-/// `E` itself never leaves its shard thread, so the group is `Send`
-/// even for non-`Send` engines.
+/// N decode-engine shards behind a bounded least-loaded router with
+/// affinity and cross-shard work stealing. `E` itself never leaves its
+/// shard thread, so the group is `Send` even for non-`Send` engines.
 pub struct EngineGroup<E: DecodeEngine> {
     shards: Vec<ShardHandle>,
+    shared: Arc<ShardQueues>,
     events: Receiver<ShardEvent>,
-    /// Requests submitted to each shard and not yet collected here.
-    inflight: Vec<usize>,
+    /// Requests accepted and not yet collected via `poll`/`drain`.
+    inflight: usize,
     affinity_slack: usize,
-    /// Serving-clock start: set by the first `submit`, so idle time
-    /// between construction and traffic does not skew fleet throughput.
+    queue_depth: usize,
+    /// Requests `submit` rejected because every shard was at capacity.
+    rejected: u64,
+    /// Serving-clock start: set by the first accepted `submit`, so idle
+    /// time between construction and traffic does not skew throughput.
     first_submit: Option<Instant>,
     /// Last completion observed via `poll` — the serving-clock end when
     /// the group is already drained at `shutdown` (caller dwell between
@@ -109,8 +184,8 @@ fn affinity_hash(prompt: &[i32]) -> u64 {
     h
 }
 
-fn shard_main<E, F>(shard: usize, factory: Arc<F>, rx: Receiver<ShardCmd>,
-                    tx: Sender<ShardEvent>) -> Metrics
+fn shard_main<E, F>(shard: usize, factory: Arc<F>, shared: Arc<ShardQueues>,
+                    rx: Receiver<ShardCmd>, tx: Sender<ShardEvent>) -> Metrics
 where
     E: DecodeEngine + 'static,
     F: Fn(usize) -> Result<E> + Send + Sync + 'static,
@@ -129,45 +204,77 @@ where
             return Metrics::new();
         }
     };
+    const IDLE_WAIT_FLOOR: Duration = Duration::from_millis(1);
+    const IDLE_WAIT_CEIL: Duration = Duration::from_millis(20);
     let mut shutting_down = false;
+    let mut idle_wait = IDLE_WAIT_FLOOR;
+    let finish = |mut m: Metrics| {
+        m.requests_stolen = shared.steals[shard].load(Ordering::SeqCst);
+        m.queue_peak = shared.queue_peak[shard].load(Ordering::SeqCst) as u64;
+        m
+    };
     loop {
-        // Block for work when idle; otherwise drain opportunistically so
-        // submits interleave with decode steps (continuous batching).
+        // Admit from the own overflow queue only up to the engine's free
+        // batch capacity — the remainder stays in the shared queue where
+        // an idle shard can steal it.
+        while engine.active() + engine.pending() < engine.batch_size() {
+            let item = shared.queues[shard].lock().unwrap().pop_front();
+            match item {
+                Some((req, at)) => engine.submit_at(req, at),
+                None => break,
+            }
+        }
+        // Free capacity left and nothing queued locally: steal from the
+        // most-loaded shard.
+        while engine.active() + engine.pending() < engine.batch_size() {
+            match shared.steal_for(shard) {
+                Some((req, at)) => engine.submit_at(req, at),
+                None => break,
+            }
+        }
         if engine.idle() {
-            if shutting_down {
+            if shutting_down && shared.queues[shard].lock().unwrap().is_empty() {
                 break;
             }
-            match rx.recv() {
-                Ok(cmd) => match cmd {
-                    ShardCmd::Submit(req, at) => engine.submit_at(req, at),
-                    ShardCmd::Shutdown => shutting_down = true,
-                },
-                Err(_) => break, // group dropped
-            }
-        }
-        loop {
-            match rx.try_recv() {
-                Ok(ShardCmd::Submit(req, at)) => engine.submit_at(req, at),
+            // Blocking wait with exponential backoff: a Wake for this
+            // shard's own queue lands instantly, while the timeout
+            // bounds how stale a *steal* opportunity (queued on another
+            // shard) can go unnoticed. Backoff keeps a fully idle fleet
+            // near-free instead of polling at 1 kHz per shard, and any
+            // activity resets it to the floor.
+            match rx.recv_timeout(idle_wait) {
+                Ok(ShardCmd::Wake) => idle_wait = IDLE_WAIT_FLOOR,
+                Err(RecvTimeoutError::Timeout) => {
+                    idle_wait = (idle_wait * 2).min(IDLE_WAIT_CEIL);
+                }
                 Ok(ShardCmd::Shutdown) => shutting_down = true,
-                Err(_) => break,
+                Err(RecvTimeoutError::Disconnected) => break, // group dropped
             }
-        }
-        if engine.idle() {
             continue;
+        }
+        idle_wait = IDLE_WAIT_FLOOR;
+        // Drain control opportunistically so shutdown interleaves with
+        // decode steps (Wakes are level-triggered hints; the queue check
+        // above is the source of truth).
+        while let Ok(cmd) = rx.try_recv() {
+            if let ShardCmd::Shutdown = cmd {
+                shutting_down = true;
+            }
         }
         match engine.step() {
             Ok(completions) => {
                 for completion in completions {
-                    let _ = tx.send(ShardEvent::Done { shard, completion });
+                    shared.load[shard].fetch_sub(1, Ordering::SeqCst);
+                    let _ = tx.send(ShardEvent::Done(completion));
                 }
             }
             Err(e) => {
                 let _ = tx.send(ShardEvent::Fatal { shard, msg: format!("{e}") });
-                return engine.take_metrics();
+                return finish(engine.take_metrics());
             }
         }
     }
-    engine.take_metrics()
+    finish(engine.take_metrics())
 }
 
 impl<E: DecodeEngine> EngineGroup<E> {
@@ -192,15 +299,17 @@ impl<E: DecodeEngine> EngineGroup<E> {
             bail!("engine group needs at least one shard");
         }
         let factory = Arc::new(factory);
+        let shared = Arc::new(ShardQueues::new(cfg.shards));
         let (etx, erx) = channel();
         let mut shards = Vec::with_capacity(cfg.shards);
         for i in 0..cfg.shards {
             let (ctx, crx) = channel();
             let f = factory.clone();
             let tx = etx.clone();
+            let sq = shared.clone();
             let join = std::thread::Builder::new()
                 .name(format!("shard-{i}"))
-                .spawn(move || shard_main(i, f, crx, tx))
+                .spawn(move || shard_main(i, f, sq, crx, tx))
                 .map_err(|e| anyhow!("spawn shard {i}: {e}"))?;
             shards.push(ShardHandle { tx: ctx, join, batch: 0, max_prompt: 0 });
         }
@@ -222,7 +331,7 @@ impl<E: DecodeEngine> EngineGroup<E> {
                 Ok(ShardEvent::Fatal { shard, msg }) => {
                     failure = Some(format!("shard {shard} failed to start: {msg}"));
                 }
-                Ok(ShardEvent::Done { .. }) => unreachable!("done before submit"),
+                Ok(ShardEvent::Done(_)) => unreachable!("done before submit"),
                 Err(RecvTimeoutError::Timeout) => {
                     if let Some((i, _)) = shards
                         .iter()
@@ -250,12 +359,14 @@ impl<E: DecodeEngine> EngineGroup<E> {
             }
             bail!("{msg}");
         }
-        let n = shards.len();
         Ok(EngineGroup {
             shards,
+            shared,
             events: erx,
-            inflight: vec![0; n],
+            inflight: 0,
             affinity_slack: cfg.affinity_slack,
+            queue_depth: cfg.queue_depth,
+            rejected: 0,
             first_submit: None,
             last_done: None,
             _engine: PhantomData,
@@ -271,14 +382,29 @@ impl<E: DecodeEngine> EngineGroup<E> {
         self.shards.iter().map(|s| s.batch).sum()
     }
 
-    /// Requests submitted and not yet collected via `poll`/`drain`.
-    pub fn inflight(&self) -> usize {
-        self.inflight.iter().sum()
+    /// Configured per-shard overflow bound.
+    pub fn queue_depth(&self) -> usize {
+        self.queue_depth
     }
 
-    /// Per-shard in-flight counts (router introspection for tests).
-    pub fn inflight_per_shard(&self) -> &[usize] {
-        &self.inflight
+    /// Requests accepted and not yet collected via `poll`/`drain`.
+    pub fn inflight(&self) -> usize {
+        self.inflight
+    }
+
+    /// Per-shard load (queued + active) snapshot — router introspection
+    /// for tests; changes concurrently with shard progress.
+    pub fn loads(&self) -> Vec<usize> {
+        self.shared
+            .load
+            .iter()
+            .map(|l| l.load(Ordering::SeqCst))
+            .collect()
+    }
+
+    /// Requests rejected by admission backpressure so far.
+    pub fn rejected(&self) -> u64 {
+        self.rejected
     }
 
     /// Virtual-replay admission window: keep up to one extra batch per
@@ -295,48 +421,77 @@ impl<E: DecodeEngine> EngineGroup<E> {
     }
 
     /// Pick the shard for a request: the prompt's affinity shard while
-    /// its load is within `affinity_slack` of the minimum, else the
-    /// least-loaded shard (lowest index on ties).
-    fn route(&self, req: &Request) -> usize {
+    /// its load is within `affinity_slack` of the minimum and below
+    /// capacity, else the least-loaded shard with headroom (lowest index
+    /// on ties). `None` when every shard is at `batch + queue_depth`.
+    /// One pass over the load atomics, no allocation — this sits on the
+    /// admission path of every request.
+    fn route(&self, req: &Request) -> Option<usize> {
         let n = self.shards.len();
+        let load = |i: usize| self.shared.load[i].load(Ordering::SeqCst);
+        let cap = |i: usize| self.shards[i].batch + self.queue_depth;
         if n == 1 {
-            return 0;
+            return (load(0) < cap(0)).then_some(0);
         }
         let aff = (affinity_hash(&req.prompt) % n as u64) as usize;
-        let min = *self.inflight.iter().min().unwrap();
-        if self.inflight[aff] <= min + self.affinity_slack {
-            aff
-        } else {
-            self.inflight
-                .iter()
-                .enumerate()
-                .min_by_key(|&(_, &c)| c)
-                .map(|(i, _)| i)
-                .unwrap()
+        let mut min = usize::MAX;
+        let mut aff_load = usize::MAX;
+        let mut best = None;
+        let mut best_load = usize::MAX;
+        for i in 0..n {
+            let l = load(i);
+            if i == aff {
+                aff_load = l;
+            }
+            min = min.min(l);
+            if l < cap(i) && l < best_load {
+                best = Some(i);
+                best_load = l;
+            }
         }
+        if aff_load < cap(aff) && aff_load <= min + self.affinity_slack {
+            return Some(aff);
+        }
+        best
     }
 
-    /// Route and dispatch a request; returns the chosen shard index.
-    /// Latency clocks start here, so router/channel dwell is part of
-    /// the reported TTFT.
-    pub fn submit(&mut self, req: Request) -> Result<usize> {
+    /// Route and dispatch a request. Latency clocks start here, so
+    /// router/queue dwell is part of the reported TTFT. Returns
+    /// [`SubmitOutcome::Rejected`] — without enqueueing — when every
+    /// shard is at `batch + queue_depth` load; `Err` only on a dead
+    /// shard (fleet failure, not backpressure).
+    pub fn submit(&mut self, req: Request) -> Result<SubmitOutcome> {
+        let Some(shard) = self.route(&req) else {
+            self.rejected += 1;
+            return Ok(SubmitOutcome::Rejected);
+        };
         let now = Instant::now();
         if self.first_submit.is_none() {
             self.first_submit = Some(now);
         }
-        let shard = self.route(&req);
+        // Count the load BEFORE the request becomes visible in the
+        // queue: a fast shard (or thief) could otherwise pop + complete
+        // it and fetch_sub before this add, underflowing the counter
+        // and wedging admission forever.
+        self.shared.load[shard].fetch_add(1, Ordering::SeqCst);
+        let qlen = {
+            let mut q = self.shared.queues[shard].lock().unwrap();
+            q.push_back((req, now));
+            q.len()
+        };
+        self.shared.queue_peak[shard].fetch_max(qlen, Ordering::SeqCst);
+        self.inflight += 1;
         self.shards[shard]
             .tx
-            .send(ShardCmd::Submit(req, now))
+            .send(ShardCmd::Wake)
             .map_err(|_| anyhow!("shard {shard} is gone"))?;
-        self.inflight[shard] += 1;
-        Ok(shard)
+        Ok(SubmitOutcome::Routed(shard))
     }
 
     fn handle_event(&mut self, ev: ShardEvent) -> Result<Option<Completion>> {
         match ev {
-            ShardEvent::Done { shard, completion } => {
-                self.inflight[shard] = self.inflight[shard].saturating_sub(1);
+            ShardEvent::Done(completion) => {
+                self.inflight = self.inflight.saturating_sub(1);
                 self.last_done = Some(Instant::now());
                 Ok(Some(completion))
             }
@@ -359,17 +514,34 @@ impl<E: DecodeEngine> EngineGroup<E> {
                     return self.handle_event(ev);
                 }
                 // A shard that exited while still owing completions would
-                // hang drain() forever; surface it instead. (A shard
-                // sends Fatal before exiting on engine *errors* — so one
-                // more drain here still prefers that root cause — but a
-                // *panicked* shard dies silently and lands here.)
-                for (i, s) in self.shards.iter().enumerate() {
-                    if self.inflight[i] > 0 && s.join.is_finished() {
-                        if let Ok(ev) = self.events.try_recv() {
-                            return self.handle_event(ev);
+                // hang drain() forever; surface it instead. Work still
+                // sitting in a dead shard's *queue* can be rescued by a
+                // thief — but only if some other shard thread is still
+                // alive to steal it; requests active inside the dead
+                // engine (queue empty, load > 0) are always lost.
+                if self.inflight > 0 {
+                    for (i, s) in self.shards.iter().enumerate() {
+                        if !s.join.is_finished()
+                            || self.shared.load[i].load(Ordering::SeqCst) == 0
+                        {
+                            continue;
                         }
-                        bail!("shard {i} exited with {} requests in flight",
-                              self.inflight[i]);
+                        let rescuable = !self.shared.queues[i]
+                            .lock()
+                            .unwrap()
+                            .is_empty()
+                            && self
+                                .shards
+                                .iter()
+                                .enumerate()
+                                .any(|(j, sj)| j != i && !sj.join.is_finished());
+                        if !rescuable {
+                            if let Ok(ev) = self.events.try_recv() {
+                                return self.handle_event(ev);
+                            }
+                            bail!("shard {i} exited with {} requests in flight",
+                                  self.shared.load[i].load(Ordering::SeqCst));
+                        }
                     }
                 }
                 Ok(None)
@@ -403,11 +575,7 @@ impl<E: DecodeEngine> EngineGroup<E> {
         // dwell before shutdown is not serving time). Work still in
         // flight: the clock runs through the joins below, which wait
         // for the shards to finish it.
-        let drained_end = if self.inflight.iter().all(|&c| c == 0) {
-            self.last_done
-        } else {
-            None
-        };
+        let drained_end = if self.inflight == 0 { self.last_done } else { None };
         let mut shard_metrics = Vec::with_capacity(self.shards.len());
         let mut panicked = Vec::new();
         for (i, s) in self.shards.into_iter().enumerate() {
@@ -426,7 +594,13 @@ impl<E: DecodeEngine> EngineGroup<E> {
             (Some(t0), None) => t0.elapsed().as_secs_f64(),
             _ => 0.0,
         };
-        Ok(GroupMetrics { shards: shard_metrics, wall_s, panicked })
+        Ok(GroupMetrics {
+            shards: shard_metrics,
+            wall_s,
+            panicked,
+            rejected: self.rejected,
+            queue_depth: self.queue_depth,
+        })
     }
 }
 
@@ -443,16 +617,30 @@ mod tests {
         Request { id, prompt, max_new }
     }
 
+    /// Single-slot SimEngine slowed to a 2ms step, so queues stay
+    /// populated long enough for admission / stealing to be observable.
+    fn slow_sim() -> SimConfig {
+        SimConfig { batch: 1, step_delay_ms: 2, ..Default::default() }
+    }
+
+    fn routed(o: SubmitOutcome) -> usize {
+        match o {
+            SubmitOutcome::Routed(s) => s,
+            SubmitOutcome::Rejected => panic!("unexpected rejection"),
+        }
+    }
+
     #[test]
     fn single_shard_runs_requests_to_completion() {
         let mut g = group(1);
         for i in 0..6u64 {
-            g.submit(req(i, vec![1, i as i32 + 10, 3], 8)).unwrap();
+            routed(g.submit(req(i, vec![1, i as i32 + 10, 3], 8)).unwrap());
         }
         let comps = g.drain().unwrap();
         assert_eq!(comps.len(), 6);
         let gm = g.shutdown().unwrap();
         assert_eq!(gm.fleet().requests_completed, 6);
+        assert_eq!(gm.rejected, 0);
     }
 
     #[test]
@@ -460,7 +648,7 @@ mod tests {
         let mut g = group(4);
         let mut seen = vec![0usize; 4];
         for i in 0..64u64 {
-            let s = g.submit(req(i, vec![1, i as i32, 2, 7], 6)).unwrap();
+            let s = routed(g.submit(req(i, vec![1, i as i32, 2, 7], 6)).unwrap());
             seen[s] += 1;
         }
         let comps = g.drain().unwrap();
@@ -492,9 +680,65 @@ mod tests {
         let prompt = vec![5, 6, 7, 8];
         let aff = (affinity_hash(&prompt) % 4) as usize;
         let mut g = g1;
-        let s = g.submit(req(0, prompt, 4)).unwrap();
+        let s = routed(g.submit(req(0, prompt, 4)).unwrap());
         assert_eq!(s, aff, "idle group must honour affinity");
         g.drain().unwrap();
         g.shutdown().unwrap();
+    }
+
+    #[test]
+    fn router_rejects_when_every_shard_is_at_capacity() {
+        // One slow shard, batch 1, queue_depth 1 -> capacity 2. The third
+        // submit must be rejected (the first can't have completed: each
+        // request needs several 2ms steps).
+        let cfg = GroupConfig { shards: 1, affinity_slack: 1, queue_depth: 1 };
+        let mut g: EngineGroup<SimEngine> =
+            EngineGroup::with_config(cfg, |_| Ok(SimEngine::new(slow_sim())))
+                .unwrap();
+        assert_eq!(g.submit(req(0, vec![1, 2, 3], 16)).unwrap(),
+                   SubmitOutcome::Routed(0));
+        assert_eq!(g.submit(req(1, vec![4, 5, 6], 16)).unwrap(),
+                   SubmitOutcome::Routed(0));
+        assert_eq!(g.submit(req(2, vec![7, 8, 9], 16)).unwrap(),
+                   SubmitOutcome::Rejected);
+        assert_eq!(g.rejected(), 1);
+        let comps = g.drain().unwrap();
+        assert_eq!(comps.len(), 2, "accepted requests still complete");
+        let gm = g.shutdown().unwrap();
+        assert_eq!(gm.rejected, 1);
+        assert_eq!(gm.queue_depth, 1);
+        assert_eq!(gm.fleet().requests_completed, 2);
+    }
+
+    #[test]
+    fn idle_shard_steals_from_loaded_shards_queue() {
+        // Two slow single-slot shards; a huge affinity slack pins every
+        // request (identical prompt -> one affinity shard) onto the same
+        // queue. The other shard must pull from it.
+        let cfg = GroupConfig { shards: 2, affinity_slack: 1000, queue_depth: 64 };
+        let mut g: EngineGroup<SimEngine> =
+            EngineGroup::with_config(cfg, |_| Ok(SimEngine::new(slow_sim())))
+                .unwrap();
+        let prompt = vec![3, 14, 15, 92];
+        let aff = (affinity_hash(&prompt) % 2) as usize;
+        for i in 0..8u64 {
+            let s = routed(g.submit(req(i, prompt.clone(), 12)).unwrap());
+            assert_eq!(s, aff, "slack must pin routing to the affinity shard");
+        }
+        let comps = g.drain().unwrap();
+        assert_eq!(comps.len(), 8);
+        // Stealing cannot change output: identical prompts, identical
+        // generations regardless of which shard served them.
+        for c in &comps {
+            assert_eq!(c.generated, comps[0].generated);
+        }
+        let gm = g.shutdown().unwrap();
+        let f = gm.fleet();
+        assert_eq!(f.requests_completed, 8);
+        assert!(f.requests_stolen > 0, "idle shard never stole: {}",
+                gm.report());
+        assert!(gm.shards.iter().all(|m| m.requests_completed > 0),
+                "both shards must serve: {}", gm.report());
+        assert!(f.queue_peak > 0, "queue peak untracked");
     }
 }

@@ -47,11 +47,18 @@ pub struct SimConfig {
     pub min_gen: usize,
     /// EOS fires when `state % eos_every == 0` (0 disables EOS).
     pub eos_every: u64,
+    /// Test-harness knob: sleep this long per `step` (0 = off), so
+    /// requests stay in flight long enough for timing-dependent serving
+    /// behaviour (idle timeouts, admission backpressure, work stealing)
+    /// to be observable deterministically. Not part of the token
+    /// function — output parity is unaffected.
+    pub step_delay_ms: u64,
 }
 
 impl Default for SimConfig {
     fn default() -> Self {
-        SimConfig { batch: 4, max_seq: 512, seed: 0, min_gen: 4, eos_every: 23 }
+        SimConfig { batch: 4, max_seq: 512, seed: 0, min_gen: 4, eos_every: 23,
+                    step_delay_ms: 0 }
     }
 }
 
@@ -235,6 +242,10 @@ impl DecodeEngine for SimEngine {
     }
 
     fn step(&mut self) -> Result<Vec<Completion>> {
+        if self.cfg.step_delay_ms > 0 {
+            std::thread::sleep(std::time::Duration::from_millis(
+                self.cfg.step_delay_ms));
+        }
         if !self.queue.is_empty() && self.slots.iter().any(|s| s.is_none()) {
             self.admit_and_prefill();
         } else if self.active() > 0 {

@@ -5,7 +5,8 @@ use std::rc::Rc;
 
 use anyhow::{anyhow, bail, Result};
 
-use seerattn::coordinator::{server, Engine, EngineConfig, EngineGroup};
+use seerattn::coordinator::{server, Engine, EngineConfig, EngineGroup,
+                            GroupConfig, ServeConfig};
 use seerattn::harness::{self, experiments};
 use seerattn::model::ParamStore;
 use seerattn::runtime::Runtime;
@@ -23,6 +24,7 @@ USAGE:
                    [--n EPISODES] [--bench-budget SECONDS]
   seerattn serve   [--addr HOST:PORT] [--policy P] [--budget TOKENS]
                    [--block-size B] [--shards N] [--gather-threads T]
+                   [--max-conns N] [--idle-timeout-ms MS] [--queue-depth N]
   seerattn generate [--task easy|hard] [--policy P] [--budget TOKENS] [--n N]
 
 POLICIES: dense | seer | seer-threshold:T | seer-topp:P | oracle | quest
@@ -219,19 +221,32 @@ fn cmd_serve(args: &Args, dir: &PathBuf) -> Result<()> {
         gather_threads: args.usize_flag("gather-threads", 1),
         ..Default::default()
     };
-    let shards = args.usize_flag("shards", 1);
+    let gcfg = GroupConfig {
+        shards: args.usize_flag("shards", 1),
+        // Bounded per-shard overflow queue; beyond `batch + queue_depth`
+        // on every shard, clients get a structured `overloaded` reply.
+        queue_depth: args.usize_flag("queue-depth", 32),
+        ..Default::default()
+    };
+    let scfg = ServeConfig {
+        max_conns: args.usize_flag("max-conns", 256),
+        idle_timeout: std::time::Duration::from_millis(
+            args.usize_flag("idle-timeout-ms", 30_000) as u64),
+        limit: None,
+    };
     // Each shard thread constructs its own runtime + engine (the engine
     // holds an Rc and never crosses threads); the factory just captures
     // the artifact dir and the shared config.
     let dir = dir.clone();
-    let group = EngineGroup::new(shards, move |_shard| {
+    let group = EngineGroup::with_config(gcfg, move |_shard| {
         let (rt, params) = harness::load_runtime_and_params(&dir)?;
         let rt = Rc::new(rt);
         let gates = harness::load_gates(&rt, &dir, ecfg.block_size)?;
         Engine::new(rt, params, gates, ecfg)
     })?;
-    eprintln!("[seerattn] {} engine shard(s), policy {}", shards, policy.name());
-    server::serve(group, &args.str_flag("addr", "127.0.0.1:7077"))
+    eprintln!("[seerattn] {} engine shard(s), policy {}", gcfg.shards,
+              policy.name());
+    server::serve(group, &args.str_flag("addr", "127.0.0.1:7077"), scfg)
 }
 
 fn cmd_generate(args: &Args, dir: &PathBuf) -> Result<()> {

@@ -1,26 +1,34 @@
 //! End-to-end serving golden tests (pure host, default feature set).
 //!
 //! These drive the *production* serving code paths — `EngineGroup` shard
-//! threads + router + completion fan-in, `TraceRunner` replay, and the
-//! JSON-lines TCP server — with the deterministic `SimEngine` backend,
-//! pinning the properties the sharded serving layer promises:
+//! threads + bounded router + work stealing + completion fan-in,
+//! `TraceRunner` replay, and the epoll-reactor JSON-lines TCP server —
+//! with the deterministic `SimEngine` backend, pinning the properties
+//! the serving layer promises:
 //!
 //!  1. N-shard `TraceRunner` output is per-request identical to
-//!     single-engine output on a seeded mixed Poisson trace (the
-//!     ISSUE 2 acceptance criterion).
-//!  2. Virtual-time replay is deterministic under a fixed rng seed.
-//!  3. The JSON-lines protocol round-trips over a real TCP socket.
-//!  4. The scoped-thread parallel gather is bit-identical to the serial
-//!     gather over the arena's disjoint dirty-extent rows.
+//!     single-engine output on a seeded mixed Poisson trace.
+//!  2. The reactor front-end serves that same trace over real sockets
+//!     with per-request output identical to the single-engine blocking
+//!     baseline (the ISSUE 3 acceptance criterion).
+//!  3. Virtual-time replay is deterministic under a fixed rng seed.
+//!  4. The failure surfaces behave: idle/slow-loris connections are
+//!     evicted while in-flight work completes, over-cap connections get
+//!     structured rejections, and bursts beyond `queue_depth` get
+//!     structured `overloaded` replies — no hangs, no panics.
+//!  5. The persistent-pool parallel gather is bit-identical to the
+//!     serial gather over the arena's disjoint dirty-extent rows.
 
 use std::collections::BTreeMap;
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
+use std::time::{Duration, Instant};
 
 use seerattn::coordinator::request::StopReason;
 use seerattn::coordinator::scheduler::{Replay, TraceRunner};
 use seerattn::coordinator::server;
-use seerattn::coordinator::{Completion, EngineGroup, SimConfig, SimEngine};
+use seerattn::coordinator::{Completion, EngineGroup, GroupConfig, ServeConfig,
+                            SimConfig, SimEngine};
 use seerattn::util::json::Json;
 use seerattn::util::rng::Rng;
 use seerattn::workload::trace::{poisson_trace, TracedRequest};
@@ -48,8 +56,14 @@ fn by_id(comps: Vec<Completion>) -> BTreeMap<u64, (usize, Vec<i32>, StopReason)>
     map
 }
 
+fn request_line(id: usize, prompt: &[i32], max_new: usize) -> String {
+    let toks: Vec<String> = prompt.iter().map(|t| t.to_string()).collect();
+    format!("{{\"id\": {id}, \"prompt\": [{}], \"max_new\": {max_new}}}",
+            toks.join(", "))
+}
+
 // ---------------------------------------------------------------------
-// 1-shard vs N-shard parity (the acceptance criterion).
+// 1-shard vs N-shard parity.
 // ---------------------------------------------------------------------
 
 #[test]
@@ -57,7 +71,7 @@ fn four_shards_match_single_engine_per_request() {
     let trace = mixed_trace(48, 7);
     let runner = TraceRunner { replay: Replay::Virtual };
 
-    // Today's behaviour: one engine on the caller's thread.
+    // Baseline: one engine on the caller's thread.
     let mut single = SimEngine::new(SimConfig::default());
     let base = by_id(runner.run(&mut single, &trace).unwrap());
     assert_eq!(base.len(), 48);
@@ -105,6 +119,86 @@ fn real_time_replay_matches_virtual_per_request() {
 }
 
 // ---------------------------------------------------------------------
+// Reactor front-end vs the single-engine blocking baseline (the
+// acceptance criterion): a seeded 4-shard mixed Poisson trace served
+// over real sockets, multiple pipelined connections, arrivals honoured.
+// ---------------------------------------------------------------------
+
+#[test]
+fn reactor_front_end_matches_blocking_baseline_on_poisson_trace() {
+    let trace = mixed_trace(48, 7);
+    let runner = TraceRunner { replay: Replay::Virtual };
+    let mut single = SimEngine::new(SimConfig::default());
+    let base = by_id(runner.run(&mut single, &trace).unwrap());
+
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    let group = sim_group(4);
+    let cfg = ServeConfig { limit: Some(trace.len()), ..Default::default() };
+    let srv = std::thread::spawn(move || {
+        server::serve_on(listener, group, cfg).unwrap();
+    });
+
+    // Three pipelined client connections, requests fanned round-robin in
+    // arrival order, arrival times honoured against one shared clock.
+    const CLIENTS: usize = 3;
+    let mut conns: Vec<TcpStream> = (0..CLIENTS)
+        .map(|_| TcpStream::connect(addr).unwrap())
+        .collect();
+    let mut sent: Vec<usize> = vec![0; CLIENTS];
+    let t0 = Instant::now();
+    for (i, t) in trace.iter().enumerate() {
+        let due = Duration::from_secs_f64(t.arrival_s);
+        if let Some(wait) = due.checked_sub(t0.elapsed()) {
+            std::thread::sleep(wait);
+        }
+        let c = i % CLIENTS;
+        writeln!(conns[c], "{}", request_line(i, &t.episode.prompt, t.max_new))
+            .unwrap();
+        sent[c] += 1;
+    }
+    for c in &mut conns {
+        c.flush().unwrap();
+    }
+
+    let mut got: BTreeMap<u64, (Vec<i32>, String)> = BTreeMap::new();
+    for (c, conn) in conns.into_iter().enumerate() {
+        let mut reader = BufReader::new(conn);
+        for _ in 0..sent[c] {
+            let mut line = String::new();
+            reader.read_line(&mut line).unwrap();
+            let j = Json::parse(&line).unwrap_or_else(|_| panic!("bad {line:?}"));
+            assert!(j.get("error").is_err(), "unexpected error reply {line:?}");
+            let id = j.get("id").unwrap().as_i64().unwrap() as u64;
+            let generated: Vec<i32> = j
+                .get("generated")
+                .unwrap()
+                .as_arr()
+                .unwrap()
+                .iter()
+                .map(|t| t.as_i64().unwrap() as i32)
+                .collect();
+            let stop = j.get("stop").unwrap().as_str().unwrap().to_string();
+            assert!(got.insert(id, (generated, stop)).is_none(),
+                    "duplicate reply for {id}");
+        }
+    }
+    srv.join().unwrap();
+
+    assert_eq!(got.len(), base.len());
+    for (id, (_plen, want_gen, want_stop)) in &base {
+        let (gen, stop) = got.get(id).expect("missing reply");
+        assert_eq!(gen, want_gen, "request {id} diverged from blocking baseline");
+        let want_stop = match want_stop {
+            StopReason::Eos => "eos",
+            StopReason::MaxNewTokens => "max_new",
+            StopReason::ContextFull => "context_full",
+        };
+        assert_eq!(stop, want_stop, "request {id} stop reason");
+    }
+}
+
+// ---------------------------------------------------------------------
 // Virtual-replay determinism under a fixed seed.
 // ---------------------------------------------------------------------
 
@@ -145,8 +239,9 @@ fn tcp_server_round_trips_pipelined_requests() {
     let addr = listener.local_addr().unwrap();
     let n_requests = 6usize;
     let group = sim_group(2);
+    let cfg = ServeConfig { limit: Some(n_requests), ..Default::default() };
     let srv = std::thread::spawn(move || {
-        server::serve_on(listener, group, Some(n_requests)).unwrap();
+        server::serve_on(listener, group, cfg).unwrap();
     });
 
     let prompts: Vec<Vec<i32>> = (0..n_requests)
@@ -154,13 +249,8 @@ fn tcp_server_round_trips_pipelined_requests() {
         .collect();
     let mut conn = TcpStream::connect(addr).unwrap();
     for (i, p) in prompts.iter().enumerate() {
-        let toks: Vec<String> = p.iter().map(|t| t.to_string()).collect();
         // Client ids deliberately offset from the server's internal ones.
-        writeln!(conn,
-                 "{{\"id\": {}, \"prompt\": [{}], \"max_new\": 10}}",
-                 100 + i,
-                 toks.join(", "))
-            .unwrap();
+        writeln!(conn, "{}", request_line(100 + i, p, 10)).unwrap();
     }
     conn.flush().unwrap();
     let mut reader = BufReader::new(conn.try_clone().unwrap());
@@ -203,8 +293,9 @@ fn malformed_request_line_gets_error_reply() {
     let listener = TcpListener::bind("127.0.0.1:0").unwrap();
     let addr = listener.local_addr().unwrap();
     let group = sim_group(1);
+    let cfg = ServeConfig { limit: Some(1), ..Default::default() };
     let srv = std::thread::spawn(move || {
-        server::serve_on(listener, group, Some(1)).unwrap();
+        server::serve_on(listener, group, cfg).unwrap();
     });
     let mut conn = TcpStream::connect(addr).unwrap();
     writeln!(conn, "{{\"id\": 1}}").unwrap(); // no prompt -> parse error
@@ -234,13 +325,209 @@ fn malformed_request_line_gets_error_reply() {
 }
 
 // ---------------------------------------------------------------------
+// New failure surfaces: idle/slow-loris eviction, connection cap, and
+// admission overload — in-flight work must complete throughout.
+// ---------------------------------------------------------------------
+
+#[test]
+fn slow_loris_is_evicted_while_inflight_request_completes() {
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    // eos_every = 0 disables EOS: the busy request decodes exactly
+    // max_new tokens -> ~100 steps x 2ms, far beyond the idle window.
+    let sim_cfg = SimConfig { batch: 2, eos_every: 0, step_delay_ms: 2,
+                              ..Default::default() };
+    let group: EngineGroup<SimEngine> =
+        EngineGroup::new(1, move |_| Ok(SimEngine::new(sim_cfg))).unwrap();
+    let cfg = ServeConfig {
+        max_conns: 8,
+        idle_timeout: Duration::from_millis(150),
+        limit: Some(1),
+    };
+    let srv = std::thread::spawn(move || {
+        server::serve_on(listener, group, cfg).unwrap();
+    });
+
+    // The slow-loris: a partial request line, never finished.
+    let mut loris = TcpStream::connect(addr).unwrap();
+    loris.write_all(b"{\"id\": 5, \"prompt\": [1, ").unwrap();
+    loris.flush().unwrap();
+
+    // The busy client: one long-decoding request.
+    let prompt = vec![2, 7, 18, 28];
+    let mut busy = TcpStream::connect(addr).unwrap();
+    writeln!(busy, "{}", request_line(3, &prompt, 100)).unwrap();
+    busy.flush().unwrap();
+
+    // The loris gets a structured goodbye, then EOF — while the busy
+    // request is still decoding.
+    let mut loris_reader = BufReader::new(loris);
+    let mut line = String::new();
+    loris_reader.read_line(&mut line).unwrap();
+    let j = Json::parse(&line).unwrap_or_else(|_| panic!("bad goodbye {line:?}"));
+    assert!(j.get("error").unwrap().as_str().unwrap().contains("idle timeout"),
+            "got {line:?}");
+    line.clear();
+    assert_eq!(loris_reader.read_line(&mut line).unwrap(), 0,
+               "loris must see EOF after the goodbye");
+
+    // The in-flight request still completes, output exact.
+    let mut busy_reader = BufReader::new(busy);
+    line.clear();
+    busy_reader.read_line(&mut line).unwrap();
+    let j = Json::parse(&line).unwrap_or_else(|_| panic!("bad reply {line:?}"));
+    assert_eq!(j.get("id").unwrap().as_i64().unwrap(), 3);
+    let generated: Vec<i32> = j
+        .get("generated")
+        .unwrap()
+        .as_arr()
+        .unwrap()
+        .iter()
+        .map(|t| t.as_i64().unwrap() as i32)
+        .collect();
+    let (want, _) = SimEngine::expected_generation(&sim_cfg, &prompt, 100);
+    assert_eq!(generated, want, "eviction must not disturb in-flight decode");
+    srv.join().unwrap();
+}
+
+#[test]
+fn connection_cap_rejects_excess_clients_while_decode_continues() {
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    let sim_cfg = SimConfig { batch: 1, eos_every: 0, step_delay_ms: 2,
+                              ..Default::default() };
+    let group: EngineGroup<SimEngine> =
+        EngineGroup::new(1, move |_| Ok(SimEngine::new(sim_cfg))).unwrap();
+    let cfg = ServeConfig {
+        max_conns: 1,
+        idle_timeout: Duration::from_secs(10),
+        limit: Some(1),
+    };
+    let srv = std::thread::spawn(move || {
+        server::serve_on(listener, group, cfg).unwrap();
+    });
+
+    // First client occupies the single slot with a long-running request.
+    let prompt = vec![9, 4, 31];
+    let mut first = TcpStream::connect(addr).unwrap();
+    writeln!(first, "{}", request_line(1, &prompt, 60)).unwrap();
+    first.flush().unwrap();
+    // Give the reactor time to accept the first connection before the
+    // second arrives (acceptance order = arrival order on one thread,
+    // but the connect itself races the accept loop).
+    std::thread::sleep(Duration::from_millis(50));
+
+    // Second client: over the cap -> structured rejection + close.
+    let second = TcpStream::connect(addr).unwrap();
+    let mut second_reader = BufReader::new(second);
+    let mut line = String::new();
+    second_reader.read_line(&mut line).unwrap();
+    let j = Json::parse(&line).unwrap_or_else(|_| panic!("bad reject {line:?}"));
+    assert!(j.get("error").unwrap().as_str().unwrap()
+             .contains("connection capacity"),
+            "got {line:?}");
+    line.clear();
+    assert_eq!(second_reader.read_line(&mut line).unwrap(), 0,
+               "rejected client must see EOF");
+
+    // The first client's decode was never disturbed.
+    let mut first_reader = BufReader::new(first);
+    line.clear();
+    first_reader.read_line(&mut line).unwrap();
+    let j = Json::parse(&line).unwrap_or_else(|_| panic!("bad reply {line:?}"));
+    assert_eq!(j.get("id").unwrap().as_i64().unwrap(), 1);
+    let generated: Vec<i32> = j
+        .get("generated")
+        .unwrap()
+        .as_arr()
+        .unwrap()
+        .iter()
+        .map(|t| t.as_i64().unwrap() as i32)
+        .collect();
+    let (want, _) = SimEngine::expected_generation(&sim_cfg, &prompt, 60);
+    assert_eq!(generated, want);
+    srv.join().unwrap();
+}
+
+#[test]
+fn burst_beyond_queue_depth_gets_structured_overloaded_replies() {
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    // Capacity = batch(1) + queue_depth(1) = 2 in-flight requests; the
+    // slow engine guarantees neither completes while the burst lands.
+    let sim_cfg = SimConfig { batch: 1, eos_every: 0, step_delay_ms: 2,
+                              ..Default::default() };
+    let gcfg = GroupConfig { shards: 1, affinity_slack: 1, queue_depth: 1 };
+    let group: EngineGroup<SimEngine> =
+        EngineGroup::with_config(gcfg, move |_| Ok(SimEngine::new(sim_cfg)))
+            .unwrap();
+    let cfg = ServeConfig {
+        max_conns: 8,
+        idle_timeout: Duration::from_secs(10),
+        limit: Some(2),
+    };
+    let srv = std::thread::spawn(move || {
+        server::serve_on(listener, group, cfg).unwrap();
+    });
+
+    let n_burst = 8usize;
+    let mut conn = TcpStream::connect(addr).unwrap();
+    for i in 0..n_burst {
+        writeln!(conn, "{}", request_line(i, &[5, 6, 7 + i as i32], 40)).unwrap();
+    }
+    conn.flush().unwrap();
+
+    let mut reader = BufReader::new(conn);
+    let mut served: BTreeMap<usize, Vec<i32>> = BTreeMap::new();
+    let mut overloaded: Vec<usize> = Vec::new();
+    for _ in 0..n_burst {
+        let mut line = String::new();
+        reader.read_line(&mut line).unwrap();
+        let j = Json::parse(&line).unwrap_or_else(|_| panic!("bad reply {line:?}"));
+        let id = j.get("id").unwrap().as_i64().unwrap() as usize;
+        if let Ok(err) = j.get("error") {
+            let msg = err.as_str().unwrap();
+            assert!(msg.contains("overloaded"), "got {line:?}");
+            assert!(msg.contains("queue-depth 1"), "got {line:?}");
+            overloaded.push(id);
+        } else {
+            let generated: Vec<i32> = j
+                .get("generated")
+                .unwrap()
+                .as_arr()
+                .unwrap()
+                .iter()
+                .map(|t| t.as_i64().unwrap() as i32)
+                .collect();
+            served.insert(id, generated);
+        }
+    }
+    let mut line = String::new();
+    assert_eq!(reader.read_line(&mut line).unwrap(), 0, "server must close");
+    srv.join().unwrap();
+
+    // Exactly the fleet capacity was admitted; the rest were refused
+    // with structured errors, in burst order.
+    assert_eq!(served.len(), 2, "capacity 2 must admit exactly 2: {served:?}");
+    assert_eq!(overloaded.len(), n_burst - 2);
+    assert_eq!(served.keys().copied().collect::<Vec<_>>(), vec![0, 1],
+               "admission is FIFO over the burst");
+    for (id, generated) in &served {
+        let (want, _) = SimEngine::expected_generation(
+            &sim_cfg, &[5, 6, 7 + *id as i32], 40);
+        assert_eq!(generated, &want, "request {id}");
+    }
+}
+
+// ---------------------------------------------------------------------
 // Parallel gather == serial gather over disjoint arena rows.
 // ---------------------------------------------------------------------
 
 mod gather_parity {
     use seerattn::coordinator::gather::{gather_dense_into, gather_one_dense,
                                         gather_one_sparse, gather_sparse_into,
-                                        DenseGeom, GatherJob, SparseGeom};
+                                        DenseGeom, GatherJob, GatherPool,
+                                        SparseGeom};
     use seerattn::coordinator::StagingArena;
     use seerattn::kvcache::{PagedKvPool, SeqKv};
     use seerattn::sparse::policy::{SelKind, SelectionBuf};
@@ -309,6 +596,7 @@ mod gather_parity {
     #[test]
     fn sparse_parallel_gather_bit_identical_to_serial() {
         let mut w = World::new(301);
+        let gpool = GatherPool::new(4);
         let mut serial_arena = StagingArena::new();
         let mut parallel_arena = StagingArena::new();
         for step in 0..25 {
@@ -341,7 +629,8 @@ mod gather_parity {
             let pset = parallel_arena.sparse(BATCH, heads, t_cap, DH);
             {
                 let (k, v, m, d) = pset.parts_mut();
-                gather_sparse_into(&w.pool, &jobs, &geom, k, v, m, d, 4);
+                gather_sparse_into(&w.pool, jobs.len(), &|i| jobs[i], &geom,
+                                   k, v, m, d, Some(&gpool));
             }
             assert_eq!(pset.k.as_f32().unwrap(), sset.k.as_f32().unwrap(),
                        "k step={step}");
@@ -356,6 +645,7 @@ mod gather_parity {
     #[test]
     fn dense_parallel_gather_bit_identical_to_serial() {
         let w = World::new(302);
+        let gpool = GatherPool::new(3);
         let s = 32;
         let geom = DenseGeom { hkv: HKV, block_size: BS, max_seq: s, dh: DH };
         let jobs: Vec<GatherJob> = (0..BATCH)
@@ -379,7 +669,8 @@ mod gather_parity {
         let pset = parallel_arena.dense(BATCH, HKV, s, DH);
         {
             let (k, v, sl, d) = pset.parts_mut();
-            gather_dense_into(&w.pool, &jobs, &geom, k, v, sl, d, 3);
+            gather_dense_into(&w.pool, jobs.len(), &|i| jobs[i], &geom,
+                              k, v, sl, d, Some(&gpool));
         }
         assert_eq!(pset.k.as_f32().unwrap(), sset.k.as_f32().unwrap());
         assert_eq!(pset.v.as_f32().unwrap(), sset.v.as_f32().unwrap());

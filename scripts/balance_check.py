@@ -1,0 +1,83 @@
+#!/usr/bin/env python3
+# Crude Rust syntax sanity check for toolchain-less containers: verifies
+# brace/paren/bracket balance, aware of strings, raw strings, char
+# literals, lifetimes, and line/block comments. Not a parser - catches
+# gross structural slips only. Usage: scripts/balance_check.py FILES...
+import sys
+
+def check(path):
+    src = open(path).read()
+    stack = []
+    i, n = 0, len(src)
+    line = 1
+    state = 'code'  # code, str, rawstr, char, lcomment, bcomment
+    raw_hashes = 0
+    depth_block = 0
+    pairs = {'}': '{', ')': '(', ']': '['}
+    while i < n:
+        c = src[i]
+        if c == '\n':
+            line += 1
+        if state == 'code':
+            if c == '/' and i+1 < n and src[i+1] == '/':
+                state = 'lcomment'; i += 2; continue
+            if c == '/' and i+1 < n and src[i+1] == '*':
+                state = 'bcomment'; depth_block = 1; i += 2; continue
+            if c == '"':
+                state = 'str'; i += 1; continue
+            if c == 'r' and i+1 < n and src[i+1] in '#"':
+                j = i+1; h = 0
+                while j < n and src[j] == '#':
+                    h += 1; j += 1
+                if j < n and src[j] == '"':
+                    state = 'rawstr'; raw_hashes = h; i = j+1; continue
+            if c == "'":
+                # char literal or lifetime; char if closing quote within 3 (handle \x)
+                j = i+1
+                if j < n and src[j] == '\\':
+                    k = src.find("'", j+1)
+                    if k != -1 and k - i < 12:
+                        i = k+1; continue
+                elif j+1 < n and src[j+1] == "'":
+                    i = j+2; continue
+                # lifetime: skip
+                i += 1; continue
+            if c in '{([':
+                stack.append((c, line))
+            elif c in '})]':
+                if not stack or stack[-1][0] != pairs[c]:
+                    print(f"{path}:{line}: unmatched {c!r} (stack top {stack[-1] if stack else None})")
+                    return False
+                stack.pop()
+            i += 1
+        elif state == 'lcomment':
+            if c == '\n':
+                state = 'code'
+            i += 1
+        elif state == 'bcomment':
+            if c == '/' and i+1 < n and src[i+1] == '*':
+                depth_block += 1; i += 2; continue
+            if c == '*' and i+1 < n and src[i+1] == '/':
+                depth_block -= 1; i += 2
+                if depth_block == 0:
+                    state = 'code'
+                continue
+            i += 1
+        elif state == 'str':
+            if c == '\\':
+                i += 2; continue
+            if c == '"':
+                state = 'code'
+            i += 1
+        elif state == 'rawstr':
+            if c == '"' and src[i+1:i+1+raw_hashes] == '#'*raw_hashes:
+                state = 'code'; i += 1 + raw_hashes; continue
+            i += 1
+    if stack:
+        print(f"{path}: unclosed {stack[-3:]}")
+        return False
+    print(f"{path}: balanced")
+    return True
+
+ok = all([check(p) for p in sys.argv[1:]])
+sys.exit(0 if ok else 1)

@@ -1,13 +1,25 @@
 #!/usr/bin/env bash
 # Benchmark runner: executes the host-side benches with fixed seeds and
 # rewrites BENCH_decode.json at the repo root. Exits nonzero on failure
-# (including the decode bench's zero-steady-state-allocation assertion).
+# (including the decode bench's zero-steady-state-allocation and
+# gather-parity assertions).
+#
+# `--smoke` (or SEERATTN_BENCH_SMOKE=1) runs every bench with minimal
+# timed iterations: all correctness asserts still fire, timings are
+# indicative only, and BENCH_decode.json is NOT rewritten. CI uses this
+# so the bench binaries can never rot uncompiled.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
 export SEERATTN_BENCH_SEED="${SEERATTN_BENCH_SEED:-17}"
+if [[ "${1:-}" == "--smoke" ]]; then
+  export SEERATTN_BENCH_SMOKE=1
+fi
+if [[ "${SEERATTN_BENCH_SMOKE:-0}" == "1" ]]; then
+  echo "== smoke mode: asserts only, timings ignored, no JSON rewrite =="
+fi
 
-echo "== decode_hot_path (seed ${SEERATTN_BENCH_SEED}; writes BENCH_decode.json) =="
+echo "== decode_hot_path (seed ${SEERATTN_BENCH_SEED}) =="
 cargo bench --manifest-path rust/Cargo.toml --bench decode_hot_path
 
 echo "== gate_overhead =="
@@ -22,4 +34,8 @@ else
   echo "== coordinator (pjrt) skipped: set SEERATTN_PJRT_BENCH=1 to run =="
 fi
 
-echo "bench.sh: done; BENCH_decode.json updated"
+if [[ "${SEERATTN_BENCH_SMOKE:-0}" == "1" ]]; then
+  echo "bench.sh: smoke done (BENCH_decode.json untouched)"
+else
+  echo "bench.sh: done; BENCH_decode.json updated"
+fi
