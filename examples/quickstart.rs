@@ -31,7 +31,7 @@ fn main() -> Result<()> {
     ] {
         let ecfg = EngineConfig { policy, block_size: 16, ..Default::default() };
         let mut eng = harness::build_engine(&rt, &dir, ecfg)?;
-        eng.submit(Request { id: 0, prompt: ep.prompt.clone(), max_new: 32 });
+        eng.submit(Request::new(0, ep.prompt.clone(), 32));
         let c = eng.run_to_completion()?.remove(0);
         let verdict = match ep.score(&vocab, &c.generated) {
             Some(true) => "correct",

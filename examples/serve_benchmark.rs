@@ -38,7 +38,7 @@ fn main() -> Result<()> {
         let trace = poisson_trace(&vocab, &mixture, n, 50.0, 48, &mut rng);
         let ecfg = EngineConfig { policy, block_size: 16, ..Default::default() };
         let mut eng = harness::build_engine(&rt, &dir, ecfg)?;
-        let runner = TraceRunner { replay: Replay::Virtual };
+        let runner = TraceRunner { replay: Replay::Virtual, ..Default::default() };
         let t0 = std::time::Instant::now();
         let comps = runner.run(&mut eng, &trace)?;
         let wall = t0.elapsed().as_secs_f64();

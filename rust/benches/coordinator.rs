@@ -38,7 +38,7 @@ fn main() {
         let task = TaskConfig::hard();
         for i in 0..eng.batch_size() {
             let ep = generate(&vocab, &task, &mut rng);
-            eng.submit(Request { id: i as u64, prompt: ep.prompt, max_new: 40 });
+            eng.submit(Request::new(i as u64, ep.prompt, 40));
         }
         let xla0 = eng.rt.stats().execute_s;
         let t0 = std::time::Instant::now();

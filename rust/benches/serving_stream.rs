@@ -1,0 +1,84 @@
+//! Streaming-request end-to-end smoke bench: drives one
+//! `{"stream": true}` request through the real reactor front-end +
+//! shard + `SimEngine` stack over a real socket, asserting the event
+//! path works (≥1 delta frame before the terminal reply, concatenated
+//! deltas byte-identical to `generated`, which equals the sim
+//! reference), and reports time-to-first-delta and end-to-end time.
+//!
+//! Runs identically under `scripts/bench.sh --smoke` — it is cheap by
+//! construction — so the streaming event path can never rot uncompiled
+//! or unexercised in CI.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::time::Instant;
+
+use seerattn::coordinator::{server, EngineGroup, ServeConfig, SimConfig,
+                            SimEngine};
+use seerattn::util::json::Json;
+
+fn main() {
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    let group: EngineGroup<SimEngine> =
+        EngineGroup::new(1, |_| Ok(SimEngine::new(SimConfig::default())))
+            .unwrap();
+    let cfg = ServeConfig { limit: Some(1), ..Default::default() };
+    let srv = std::thread::spawn(move || {
+        server::serve_on(listener, group, cfg).unwrap();
+    });
+
+    let prompt = vec![1, 17, 29, 3];
+    let max_new = 32usize;
+    let mut conn = TcpStream::connect(addr).unwrap();
+    let t0 = Instant::now();
+    writeln!(conn,
+             "{{\"id\": 1, \"prompt\": [1, 17, 29, 3], \"max_new\": {max_new}, \
+              \"stream\": true}}")
+        .unwrap();
+    conn.flush().unwrap();
+
+    let mut reader = BufReader::new(conn);
+    let mut deltas: Vec<i32> = Vec::new();
+    let mut first_delta = None;
+    let terminal = loop {
+        let mut line = String::new();
+        assert!(reader.read_line(&mut line).unwrap() > 0,
+                "EOF before terminal reply");
+        let j = Json::parse(&line)
+            .unwrap_or_else(|_| panic!("bad frame {line:?}"));
+        assert!(j.get("error").is_err(), "unexpected error {line:?}");
+        if j.opt("stop").is_some() {
+            break j;
+        }
+        if first_delta.is_none() {
+            first_delta = Some(t0.elapsed());
+        }
+        for t in j.get("delta").unwrap().as_arr().unwrap() {
+            deltas.push(t.as_i64().unwrap() as i32);
+        }
+    };
+    let e2e = t0.elapsed();
+    srv.join().unwrap();
+
+    let generated: Vec<i32> = terminal
+        .get("generated")
+        .unwrap()
+        .as_arr()
+        .unwrap()
+        .iter()
+        .map(|t| t.as_i64().unwrap() as i32)
+        .collect();
+    let (want, _) =
+        SimEngine::expected_generation(&SimConfig::default(), &prompt, max_new);
+    assert!(!deltas.is_empty(), "no delta frame arrived before Finished");
+    assert_eq!(deltas, generated, "concatenated deltas != final generated");
+    assert_eq!(generated, want, "generation != sim reference");
+    println!(
+        "serving_stream: {} delta tokens, time-to-first-delta {:.3} ms, \
+         e2e {:.3} ms",
+        deltas.len(),
+        first_delta.unwrap().as_secs_f64() * 1e3,
+        e2e.as_secs_f64() * 1e3
+    );
+}

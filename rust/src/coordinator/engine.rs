@@ -16,7 +16,7 @@
 //!      block-sparse attention + the rest of the layer.
 //! Then `lm_head` + sampling, once per token for the whole batch.
 
-use std::collections::{HashMap, VecDeque};
+use std::collections::{HashMap, HashSet, VecDeque};
 use std::rc::Rc;
 use std::time::Instant;
 
@@ -25,7 +25,7 @@ use anyhow::{bail, Result};
 use super::arena::StagingArena;
 use super::gather::{self, DenseGeom, GatherJob, SparseGeom};
 use super::metrics::Metrics;
-use super::request::{Completion, Request, SeqStats, StopReason};
+use super::request::{Completion, EngineEvent, Request, SeqStats, StopReason};
 use super::sampling;
 use super::DecodeEngine;
 use crate::gate;
@@ -139,6 +139,12 @@ pub struct Engine {
     /// Persistent gather fan-out lanes (`gather_threads > 1`); spawned
     /// once here instead of a scoped-thread spawn per decode step.
     gather_pool: Option<gather::GatherPool>,
+    /// Ids flagged for cancellation, applied at the next step boundary
+    /// (the slot's pages are freed in the reap that follows).
+    cancels: HashSet<u64>,
+    /// Completions synthesized off-slot (cancelled or deadline-expired
+    /// while still queued), drained by the next reap.
+    done_early: Vec<Completion>,
 }
 
 /// Reusable selection scratch (see `Engine::select`).
@@ -216,6 +222,8 @@ impl Engine {
             sel_bufs: (0..batch).map(|_| SelectionBuf::new()).collect(),
             gather_pool: (ecfg.gather_threads > 1)
                 .then(|| gather::GatherPool::new(ecfg.gather_threads)),
+            cancels: HashSet::new(),
+            done_early: Vec::new(),
         })
     }
 
@@ -265,7 +273,9 @@ impl Engine {
     }
 
     pub fn idle(&self) -> bool {
-        self.queue.is_empty() && self.active() == 0
+        // Off-slot completions still owed count as work: a step must run
+        // to emit them.
+        self.queue.is_empty() && self.active() == 0 && self.done_early.is_empty()
     }
 
     /// Run everything currently queued to completion.
@@ -280,19 +290,77 @@ impl Engine {
     /// One engine iteration: admit+prefill if there are waiting requests
     /// and free slots, otherwise decode one token for the running batch.
     pub fn step(&mut self) -> Result<Vec<Completion>> {
+        let mut out = Vec::new();
+        self.step_core(&mut |ev| {
+            if let EngineEvent::Finished(c) = ev {
+                out.push(c);
+            }
+        })?;
+        Ok(out)
+    }
+
+    /// One engine iteration over the event sink — shared by `step` and
+    /// `step_events`, and the control-flow mirror of `SimEngine`'s
+    /// `step_core`: control stops (cancel / deadline, the shared
+    /// [`StopReason::control`] rule), an immediate reap so a stopped
+    /// slot's KV pages are freed *this* step, then admit-or-decode, then
+    /// the regular reap.
+    fn step_core(&mut self, sink: &mut dyn FnMut(EngineEvent)) -> Result<()> {
+        self.apply_control_stops();
+        self.reap_into(sink);
         if !self.queue.is_empty() && self.slots.iter().any(|s| s.is_none()) {
-            self.admit_and_prefill()?;
+            self.admit_and_prefill(sink)?;
         } else if self.active() > 0 {
-            self.decode_step()?;
+            self.decode_step(sink)?;
         }
-        Ok(self.reap())
+        self.reap_into(sink);
+        Ok(())
+    }
+
+    /// Flag request `id` for cancellation; `true` iff this engine owns it
+    /// (queued or mid-decode). Applied at the next step boundary.
+    pub fn cancel(&mut self, id: u64) -> bool {
+        let known = self
+            .slots
+            .iter()
+            .flatten()
+            .any(|s| s.stop.is_none() && s.req.id == id)
+            || self.queue.iter().any(|(r, _)| r.id == id);
+        if known {
+            self.cancels.insert(id);
+        }
+        known
+    }
+
+    /// Step-boundary control stops (shared rule: [`StopReason::control`]):
+    /// flag cancelled / deadline-expired active slots for the reap that
+    /// follows, and complete cancelled or expired requests still waiting
+    /// in the queue (shared code: [`request::expire_queued`]) without
+    /// ever occupying a slot.
+    ///
+    /// [`request::expire_queued`]: super::request::expire_queued
+    fn apply_control_stops(&mut self) {
+        let now = Instant::now();
+        for slot in self.slots.iter_mut().flatten() {
+            if slot.stop.is_none() {
+                let cancelled = self.cancels.remove(&slot.req.id);
+                if let Some(stop) =
+                    StopReason::control(cancelled, slot.req.deadline, now)
+                {
+                    slot.stop = Some(stop);
+                }
+            }
+        }
+        super::request::expire_queued(&mut self.queue, &mut self.cancels,
+                                      &mut self.done_early, now);
     }
 
     // ------------------------------------------------------------------
     // Prefill
     // ------------------------------------------------------------------
 
-    fn admit_and_prefill(&mut self) -> Result<()> {
+    fn admit_and_prefill(&mut self,
+                         sink: &mut dyn FnMut(EngineEvent)) -> Result<()> {
         let t0 = Instant::now();
         let mut new_slots: Vec<usize> = Vec::new();
         for i in 0..self.batch {
@@ -387,6 +455,9 @@ impl Engine {
             if let Some(stop) = stop_for(slot, tok, vocab.eos, s) {
                 slot.stop = Some(stop);
             }
+            let id = slot.req.id;
+            sink(EngineEvent::Started { id });
+            sink(EngineEvent::Token { id, tok, index: 0 });
         }
         metrics.prefill_s.push(t0.elapsed().as_secs_f64());
         Ok(())
@@ -396,7 +467,8 @@ impl Engine {
     // Decode
     // ------------------------------------------------------------------
 
-    fn decode_step(&mut self) -> Result<()> {
+    fn decode_step(&mut self,
+                   sink: &mut dyn FnMut(EngineEvent)) -> Result<()> {
         let t0 = Instant::now();
         let (b, d) = (self.batch, self.cfg.d_model);
         let (hkv, _h_all, dh, dg) = (self.cfg.n_kv_heads, self.cfg.n_heads,
@@ -485,7 +557,10 @@ impl Engine {
             slot.len += 1;
             slot.tokens.push(tok);
             slot.generated.push(tok);
+            let id = slot.req.id;
+            let index = slot.generated.len() - 1;
             self.check_stop(i, tok);
+            sink(EngineEvent::Token { id, tok, index });
         }
         self.metrics.decode_step_s.push(t0.elapsed().as_secs_f64());
         Ok(())
@@ -848,9 +923,14 @@ impl Engine {
         }
     }
 
-    /// Collect finished slots into completions, releasing their pages.
-    fn reap(&mut self) -> Vec<Completion> {
-        let mut out = Vec::new();
+    /// Emit finished slots as `Finished` events, releasing their pages
+    /// (off-slot early completions first).
+    fn reap_into(&mut self, sink: &mut dyn FnMut(EngineEvent)) {
+        for c in self.done_early.drain(..) {
+            self.metrics.record_completion(c.ttft, c.e2e, c.generated.len(),
+                                           c.stop);
+            sink(EngineEvent::Finished(c));
+        }
         for i in 0..self.batch {
             let finished = self.slots[i]
                 .as_ref()
@@ -872,19 +952,20 @@ impl Engine {
                     .map(|t| t - slot.admitted)
                     .unwrap_or_default();
                 let e2e = now - slot.admitted;
-                self.metrics.record_completion(ttft, e2e, slot.generated.len());
-                out.push(Completion {
+                let stop = slot.stop.unwrap();
+                self.metrics.record_completion(ttft, e2e, slot.generated.len(),
+                                               stop);
+                sink(EngineEvent::Finished(Completion {
                     id: slot.req.id,
                     prompt_len: slot.req.prompt.len(),
                     generated: slot.generated,
-                    stop: slot.stop.unwrap(),
+                    stop,
                     ttft,
                     e2e,
                     stats: slot.stats,
-                });
+                }));
             }
         }
-        out
     }
 }
 
@@ -901,6 +982,18 @@ impl DecodeEngine for Engine {
 
     fn step(&mut self) -> Result<Vec<Completion>> {
         Engine::step(self)
+    }
+
+    fn step_events(&mut self, sink: &mut dyn FnMut(EngineEvent)) -> Result<()> {
+        Engine::step_core(self, sink)
+    }
+
+    fn cancel(&mut self, id: u64) -> bool {
+        Engine::cancel(self, id)
+    }
+
+    fn idle(&self) -> bool {
+        Engine::idle(self)
     }
 
     fn pending(&self) -> usize {

@@ -1,7 +1,9 @@
-//! Serving metrics: latency histograms, throughput, sparsity counters.
+//! Serving metrics: latency histograms, throughput, sparsity counters,
+//! and lifecycle-control counters (cancelled / deadline-expired).
 
 use std::time::Duration;
 
+use super::request::StopReason;
 use crate::util::stats::Series;
 
 #[derive(Debug, Default)]
@@ -12,6 +14,15 @@ pub struct Metrics {
     pub prefill_s: Series,
     pub tokens_generated: u64,
     pub requests_completed: u64,
+    /// Requests stopped by [`StopReason::Cancelled`] (client disconnect,
+    /// eviction, or explicit cancel). Not counted in
+    /// `requests_completed`, and excluded from the latency series — a
+    /// cancelled request was never served, so it must not skew TTFT/e2e
+    /// percentiles. Its generated tokens still count as work done.
+    pub requests_cancelled: u64,
+    /// Requests stopped by [`StopReason::DeadlineExceeded`]; same
+    /// accounting rules as `requests_cancelled`.
+    pub requests_deadline_expired: u64,
     pub kv_bytes_touched: u64,
     pub kv_bytes_dense_equiv: u64,
     /// Requests this shard pulled from other shards' overflow queues
@@ -33,11 +44,18 @@ impl Metrics {
         }
     }
 
-    pub fn record_completion(&mut self, ttft: Duration, e2e: Duration, tokens: usize) {
-        self.ttft_s.push(ttft.as_secs_f64());
-        self.e2e_s.push(e2e.as_secs_f64());
+    pub fn record_completion(&mut self, ttft: Duration, e2e: Duration,
+                             tokens: usize, stop: StopReason) {
+        match stop {
+            StopReason::Cancelled => self.requests_cancelled += 1,
+            StopReason::DeadlineExceeded => self.requests_deadline_expired += 1,
+            _ => {
+                self.ttft_s.push(ttft.as_secs_f64());
+                self.e2e_s.push(e2e.as_secs_f64());
+                self.requests_completed += 1;
+            }
+        }
         self.tokens_generated += tokens as u64;
-        self.requests_completed += 1;
     }
 
     /// Fold another engine's metrics into this one (shard -> fleet).
@@ -51,6 +69,8 @@ impl Metrics {
         self.prefill_s.extend_from(&other.prefill_s);
         self.tokens_generated += other.tokens_generated;
         self.requests_completed += other.requests_completed;
+        self.requests_cancelled += other.requests_cancelled;
+        self.requests_deadline_expired += other.requests_deadline_expired;
         self.kv_bytes_touched += other.kv_bytes_touched;
         self.kv_bytes_dense_equiv += other.kv_bytes_dense_equiv;
         self.requests_stolen += other.requests_stolen;
@@ -77,10 +97,12 @@ impl Metrics {
 
     pub fn report(&self) -> String {
         format!(
-            "requests={} tokens={} tps={:.1}\n  ttft    {}\n  e2e     {}\n  decode  {}\n  kv-touch fraction {:.3}",
+            "requests={} tokens={} tps={:.1} cancelled={} deadline-expired={}\n  ttft    {}\n  e2e     {}\n  decode  {}\n  kv-touch fraction {:.3}",
             self.requests_completed,
             self.tokens_generated,
             self.throughput_tps(),
+            self.requests_cancelled,
+            self.requests_deadline_expired,
             self.ttft_s.summary("s"),
             self.e2e_s.summary("s"),
             self.decode_step_s.summary("s"),
@@ -128,8 +150,8 @@ impl GroupMetrics {
         tokens as f64 / self.wall_s.max(1e-9)
     }
 
-    /// Per-shard + fleet report: request counts, throughput, and
-    /// TTFT / e2e p50/p95/p99.
+    /// Per-shard + fleet report: request counts, cancelled /
+    /// deadline-expired counts, throughput, and TTFT / e2e p50/p95/p99.
     pub fn report(&self) -> String {
         let mut out = String::new();
         for &i in &self.panicked {
@@ -137,14 +159,19 @@ impl GroupMetrics {
         }
         for (i, s) in self.shards.iter().enumerate() {
             out.push_str(&format!(
-                "shard {i}: requests={} tokens={} stolen={} queue-peak={} \
-                 ttft p50={:.4}s p95={:.4}s e2e p50={:.4}s p95={:.4}s\n",
+                "shard {i}: requests={} tokens={} cancelled={} deadline={} \
+                 stolen={} queue-peak={} \
+                 ttft p50={:.4}s p95={:.4}s p99={:.4}s \
+                 e2e p50={:.4}s p95={:.4}s\n",
                 s.requests_completed,
                 s.tokens_generated,
+                s.requests_cancelled,
+                s.requests_deadline_expired,
                 s.requests_stolen,
                 s.queue_peak,
                 s.ttft_s.median(),
                 s.ttft_s.percentile(95.0),
+                s.ttft_s.percentile(99.0),
                 s.e2e_s.median(),
                 s.e2e_s.percentile(95.0),
             ));
@@ -152,7 +179,8 @@ impl GroupMetrics {
         let f = self.fleet();
         out.push_str(&format!(
             "fleet ({} shards): requests={} tokens={} tps={:.1} \
-             rejected={} stolen={} queue-depth={} \
+             rejected={} cancelled={} deadline-expired={} stolen={} \
+             queue-depth={} \
              ttft p50={:.4}s p95={:.4}s p99={:.4}s \
              e2e p50={:.4}s p95={:.4}s p99={:.4}s kv-touch {:.3}",
             self.shards.len(),
@@ -160,6 +188,8 @@ impl GroupMetrics {
             f.tokens_generated,
             self.fleet_tps(),
             self.rejected,
+            f.requests_cancelled,
+            f.requests_deadline_expired,
             f.requests_stolen,
             self.queue_depth,
             f.ttft_s.median(),
@@ -182,13 +212,50 @@ mod tests {
     fn record_and_report() {
         let mut m = Metrics::new();
         m.start_clock();
-        m.record_completion(Duration::from_millis(50), Duration::from_millis(500), 16);
-        m.record_completion(Duration::from_millis(70), Duration::from_millis(700), 24);
+        m.record_completion(Duration::from_millis(50), Duration::from_millis(500),
+                            16, StopReason::Eos);
+        m.record_completion(Duration::from_millis(70), Duration::from_millis(700),
+                            24, StopReason::MaxNewTokens);
         assert_eq!(m.requests_completed, 2);
         assert_eq!(m.tokens_generated, 40);
         assert!(m.throughput_tps() > 0.0);
         let r = m.report();
         assert!(r.contains("requests=2"));
+        assert!(r.contains("cancelled=0"));
+    }
+
+    #[test]
+    fn control_stops_count_separately_and_skip_latency_series() {
+        let mut m = Metrics::new();
+        m.record_completion(Duration::from_millis(10), Duration::from_millis(100),
+                            8, StopReason::Eos);
+        // Cancelled / expired requests: counted, tokens accounted as work
+        // done, but excluded from the served-latency percentiles.
+        m.record_completion(Duration::from_millis(5), Duration::from_millis(50),
+                            3, StopReason::Cancelled);
+        m.record_completion(Duration::ZERO, Duration::from_millis(70),
+                            0, StopReason::DeadlineExceeded);
+        assert_eq!(m.requests_completed, 1);
+        assert_eq!(m.requests_cancelled, 1);
+        assert_eq!(m.requests_deadline_expired, 1);
+        assert_eq!(m.tokens_generated, 11);
+        assert_eq!(m.ttft_s.len(), 1, "control stops must not skew TTFT");
+        assert_eq!(m.e2e_s.len(), 1);
+
+        let mut other = Metrics::new();
+        other.record_completion(Duration::ZERO, Duration::from_millis(30),
+                                2, StopReason::Cancelled);
+        m.merge_from(&other);
+        assert_eq!(m.requests_cancelled, 2, "cancel counts add on merge");
+        assert_eq!(m.requests_deadline_expired, 1);
+
+        let mut g = GroupMetrics { queue_depth: 4, ..Default::default() };
+        g.shards.push(m);
+        let r = g.report();
+        assert!(r.contains("cancelled=2"), "{r}");
+        assert!(r.contains("deadline-expired=1"), "{r}");
+        assert!(r.contains("ttft p50="), "{r}");
+        assert!(r.contains("p99="), "{r}");
     }
 
     #[test]
@@ -201,8 +268,10 @@ mod tests {
     fn merge_concatenates_series_and_adds_counters() {
         let mut a = Metrics::new();
         let mut b = Metrics::new();
-        a.record_completion(Duration::from_millis(10), Duration::from_millis(100), 4);
-        b.record_completion(Duration::from_millis(30), Duration::from_millis(300), 6);
+        a.record_completion(Duration::from_millis(10), Duration::from_millis(100),
+                            4, StopReason::Eos);
+        b.record_completion(Duration::from_millis(30), Duration::from_millis(300),
+                            6, StopReason::Eos);
         b.kv_bytes_touched = 8;
         b.kv_bytes_dense_equiv = 16;
         a.requests_stolen = 2;
@@ -230,6 +299,7 @@ mod tests {
                     Duration::from_millis(ms),
                     Duration::from_millis(10 * ms),
                     3,
+                    StopReason::Eos,
                 );
             }
             g.shards.push(m);

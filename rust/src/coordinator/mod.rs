@@ -28,9 +28,9 @@ pub use arena::StagingArena;
 #[cfg(feature = "pjrt")]
 pub use engine::{Engine, EngineConfig};
 pub use metrics::{GroupMetrics, Metrics};
-pub use request::{Completion, Request};
+pub use request::{Completion, EngineEvent, Request, StopReason};
 pub use server::ServeConfig;
-pub use shard::{EngineGroup, GroupConfig, SubmitOutcome};
+pub use shard::{EngineGroup, GroupConfig, GroupEvent, SubmitOutcome};
 pub use sim::{SimConfig, SimEngine};
 
 /// The contract between a decode engine (one continuous-batching loop
@@ -53,6 +53,33 @@ pub trait DecodeEngine {
     /// One engine iteration: admit+prefill if possible, else decode one
     /// token for the running batch. Returns finished completions.
     fn step(&mut self) -> anyhow::Result<Vec<Completion>>;
+
+    /// One engine iteration as an **event stream**: every lifecycle event
+    /// ([`EngineEvent::Started`] / [`Token`](EngineEvent::Token) /
+    /// [`Finished`](EngineEvent::Finished)) is pushed into `sink` in
+    /// order. The default implementation wraps [`step`](Self::step) and
+    /// emits only `Finished` events, so pre-existing engine impls keep
+    /// compiling (and keep working behind non-streaming callers); the
+    /// PJRT `Engine` and [`SimEngine`] override it to emit token-level
+    /// events natively.
+    fn step_events(&mut self,
+                   sink: &mut dyn FnMut(EngineEvent)) -> anyhow::Result<()> {
+        for c in self.step()? {
+            sink(EngineEvent::Finished(c));
+        }
+        Ok(())
+    }
+
+    /// Flag request `id` for cancellation. Returns `true` when this
+    /// engine owns the request (queued or mid-decode): it will stop at
+    /// the next step boundary, release its slot and KV pages, and emit
+    /// `Finished` with [`StopReason::Cancelled`] carrying the tokens
+    /// generated so far. Returns `false` when the id is unknown here
+    /// (already completed, or owned by another shard). The default —
+    /// for external impls that predate cancellation — refuses.
+    fn cancel(&mut self, _id: u64) -> bool {
+        false
+    }
 
     /// Requests queued but not yet admitted.
     fn pending(&self) -> usize;

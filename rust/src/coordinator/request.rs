@@ -1,6 +1,18 @@
-//! Request / completion types flowing through the coordinator.
+//! Request / completion / event types flowing through the coordinator.
+//!
+//! A request's lifecycle is an **event stream**, not a single terminal
+//! completion: engines emit [`EngineEvent::Started`] at admission, one
+//! [`EngineEvent::Token`] per generated token, and a final
+//! [`EngineEvent::Finished`] carrying the [`Completion`]. The legacy
+//! `step() -> Vec<Completion>` view is derived from the stream (see
+//! [`DecodeEngine::step_events`]), so non-streaming callers are
+//! unaffected while the serving layer can stream deltas and act on a
+//! request *mid-decode* (cancellation, deadlines).
+//!
+//! [`DecodeEngine::step_events`]: super::DecodeEngine::step_events
 
-use std::time::Duration;
+use std::collections::{HashSet, VecDeque};
+use std::time::{Duration, Instant};
 
 /// A generation request (token-level; the workload layer produces the
 //  prompts).
@@ -9,6 +21,32 @@ pub struct Request {
     pub id: u64,
     pub prompt: Vec<i32>,
     pub max_new: usize,
+    /// Absolute per-request deadline. A request still decoding (or still
+    /// queued) past this instant is stopped at the next engine step
+    /// boundary with [`StopReason::DeadlineExceeded`], returning whatever
+    /// it generated so far. `None` = no deadline.
+    pub deadline: Option<Instant>,
+    /// The caller wants per-token [`EngineEvent::Token`] deltas. Engines
+    /// emit token events natively either way; this flag gates whether
+    /// the shard layer forwards them across the completion channel, so
+    /// non-streaming traffic pays no per-token cross-thread cost.
+    pub stream: bool,
+}
+
+impl Request {
+    pub fn new(id: u64, prompt: Vec<i32>, max_new: usize) -> Request {
+        Request { id, prompt, max_new, deadline: None, stream: false }
+    }
+
+    pub fn with_deadline(mut self, deadline: Instant) -> Request {
+        self.deadline = Some(deadline);
+        self
+    }
+
+    pub fn with_stream(mut self) -> Request {
+        self.stream = true;
+        self
+    }
 }
 
 /// Why a generation stopped.
@@ -17,6 +55,13 @@ pub enum StopReason {
     Eos,
     MaxNewTokens,
     ContextFull,
+    /// Cancelled in flight (client disconnect, eviction, or an explicit
+    /// cancel); the completion carries the tokens generated so far.
+    Cancelled,
+    /// The request's deadline passed before it finished; the completion
+    /// carries the tokens generated so far (possibly none, if it expired
+    /// while still queued).
+    DeadlineExceeded,
 }
 
 impl StopReason {
@@ -37,6 +82,86 @@ impl StopReason {
             None
         }
     }
+
+    /// The one *control* stop decision, applied at every engine step
+    /// boundary before any decode work (again shared by the PJRT engine
+    /// and `SimEngine` so the two cannot diverge): an explicit cancel
+    /// wins over a deadline, and both free the request's slot and KV
+    /// pages in the reap that immediately follows.
+    pub fn control(cancelled: bool, deadline: Option<Instant>,
+                   now: Instant) -> Option<StopReason> {
+        if cancelled {
+            Some(StopReason::Cancelled)
+        } else if deadline.map(|d| now >= d).unwrap_or(false) {
+            Some(StopReason::DeadlineExceeded)
+        } else {
+            None
+        }
+    }
+
+    /// Wire name used by the JSON-lines protocol and reports.
+    pub fn as_str(self) -> &'static str {
+        match self {
+            StopReason::Eos => "eos",
+            StopReason::MaxNewTokens => "max_new",
+            StopReason::ContextFull => "context_full",
+            StopReason::Cancelled => "cancelled",
+            StopReason::DeadlineExceeded => "deadline",
+        }
+    }
+}
+
+/// Queue-side control scan, shared **verbatim** by the PJRT engine and
+/// `SimEngine` so their queued-request cancel/deadline semantics cannot
+/// diverge (the slot-side scan differs only in slot types and stays
+/// per-engine): remove cancelled or deadline-expired requests still
+/// waiting in the engine's internal queue and append their empty
+/// completions to `done_early` for the next reap — they never occupy a
+/// slot. E2e is measured from the original arrival; TTFT stays zero
+/// (no token was ever produced).
+pub(crate) fn expire_queued(queue: &mut VecDeque<(Request, Instant)>,
+                            cancels: &mut HashSet<u64>,
+                            done_early: &mut Vec<Completion>,
+                            now: Instant) {
+    let mut i = 0;
+    while i < queue.len() {
+        let (ref req, arrived) = queue[i];
+        let cancelled = cancels.contains(&req.id);
+        match StopReason::control(cancelled, req.deadline, now) {
+            Some(stop) => {
+                let (req, _) = queue.remove(i).unwrap();
+                cancels.remove(&req.id);
+                done_early.push(Completion {
+                    id: req.id,
+                    prompt_len: req.prompt.len(),
+                    generated: Vec::new(),
+                    stop,
+                    ttft: Duration::ZERO,
+                    e2e: now.saturating_duration_since(arrived),
+                    stats: SeqStats::default(),
+                });
+            }
+            None => i += 1,
+        }
+    }
+}
+
+/// One step of a request's lifecycle, emitted by
+/// [`DecodeEngine::step_events`]. Events for a given request id always
+/// arrive in order: `Started`, then `Token` with consecutive `index`es
+/// starting at 0, then exactly one `Finished` (whose completion's
+/// `generated` is the concatenation of the tokens — the streaming-parity
+/// tests pin that).
+///
+/// [`DecodeEngine::step_events`]: super::DecodeEngine::step_events
+#[derive(Debug, Clone)]
+pub enum EngineEvent {
+    /// The request was admitted into a batch slot (prefill begins).
+    Started { id: u64 },
+    /// One generated token; `index` is its position in the generation.
+    Token { id: u64, tok: i32, index: usize },
+    /// Terminal: the request finished, was cancelled, or expired.
+    Finished(Completion),
 }
 
 /// Per-request sparsity / accuracy diagnostics collected by the engine.
@@ -100,5 +225,70 @@ mod tests {
         s.recall_n = 2;
         assert_eq!(s.mean_activated(), Some(5.0));
         assert_eq!(s.mean_recall(), Some(0.75));
+    }
+
+    #[test]
+    fn control_stop_orders_cancel_over_deadline() {
+        let now = Instant::now();
+        let past = now - Duration::from_millis(10);
+        let future = now + Duration::from_secs(10);
+        assert_eq!(StopReason::control(false, None, now), None);
+        assert_eq!(StopReason::control(false, Some(future), now), None);
+        assert_eq!(StopReason::control(false, Some(past), now),
+                   Some(StopReason::DeadlineExceeded));
+        assert_eq!(StopReason::control(true, Some(past), now),
+                   Some(StopReason::Cancelled), "cancel beats deadline");
+        assert_eq!(StopReason::control(true, None, now),
+                   Some(StopReason::Cancelled));
+        // The deadline boundary itself counts as expired.
+        assert_eq!(StopReason::control(false, Some(now), now),
+                   Some(StopReason::DeadlineExceeded));
+    }
+
+    #[test]
+    fn request_builder_sets_deadline_and_stream() {
+        let r = Request::new(3, vec![1, 2], 8);
+        assert!(r.deadline.is_none());
+        assert!(!r.stream);
+        let d = Instant::now();
+        let r = r.with_deadline(d).with_stream();
+        assert_eq!(r.deadline, Some(d));
+        assert!(r.stream);
+    }
+
+    #[test]
+    fn expire_queued_removes_cancelled_and_expired_only() {
+        let now = Instant::now();
+        let mut queue: VecDeque<(Request, Instant)> = VecDeque::new();
+        queue.push_back((Request::new(0, vec![1], 4), now)); // survives
+        queue.push_back((Request::new(1, vec![2], 4), now)); // cancelled
+        queue.push_back((Request::new(2, vec![3], 4)
+                             .with_deadline(now - Duration::from_millis(1)),
+                         now)); // expired
+        let mut cancels: HashSet<u64> = [1].into_iter().collect();
+        let mut done = Vec::new();
+        expire_queued(&mut queue, &mut cancels, &mut done,
+                      now + Duration::from_millis(1));
+        assert_eq!(queue.len(), 1);
+        assert_eq!(queue[0].0.id, 0);
+        assert!(cancels.is_empty(), "handled cancel marks are consumed");
+        assert_eq!(done.len(), 2);
+        let stop_of = |id: u64| done.iter().find(|c| c.id == id).unwrap().stop;
+        assert_eq!(stop_of(1), StopReason::Cancelled);
+        assert_eq!(stop_of(2), StopReason::DeadlineExceeded);
+        assert!(done.iter().all(|c| c.generated.is_empty()));
+    }
+
+    #[test]
+    fn stop_reason_wire_names() {
+        for (s, name) in [
+            (StopReason::Eos, "eos"),
+            (StopReason::MaxNewTokens, "max_new"),
+            (StopReason::ContextFull, "context_full"),
+            (StopReason::Cancelled, "cancelled"),
+            (StopReason::DeadlineExceeded, "deadline"),
+        ] {
+            assert_eq!(s.as_str(), name);
+        }
     }
 }

@@ -28,9 +28,29 @@ pub enum Replay {
 
 pub struct TraceRunner {
     pub replay: Replay,
+    /// Per-request deadline applied at submission (`None` = unbounded):
+    /// each request must finish within this much time of entering the
+    /// fleet or it is stopped with `StopReason::DeadlineExceeded` and
+    /// returns its partial generation. Lets overload replays bound
+    /// tail latency the way a deadline-aware client would.
+    pub deadline: Option<Duration>,
+}
+
+impl Default for TraceRunner {
+    fn default() -> Self {
+        TraceRunner { replay: Replay::Virtual, deadline: None }
+    }
 }
 
 impl TraceRunner {
+    fn request(&self, id: u64, t: &TracedRequest) -> Request {
+        let mut req = Request::new(id, t.episode.prompt.clone(), t.max_new);
+        if let Some(d) = self.deadline {
+            req.deadline = Some(Instant::now() + d);
+        }
+        req
+    }
+
     /// Replay against a single engine on the caller's thread (the
     /// pre-sharding behaviour; equivalent to a 1-shard group).
     pub fn run<E: DecodeEngine>(&self, engine: &mut E, trace: &[TracedRequest])
@@ -60,12 +80,7 @@ impl TraceRunner {
                 if !due {
                     break;
                 }
-                let t = &trace[next];
-                engine.submit(Request {
-                    id,
-                    prompt: t.episode.prompt.clone(),
-                    max_new: t.max_new,
-                });
+                engine.submit(self.request(id, &trace[next]));
                 id += 1;
                 next += 1;
                 // In virtual mode admit at most one burst per step so the
@@ -124,12 +139,7 @@ impl TraceRunner {
                 if !due {
                     break;
                 }
-                let t = &trace[next];
-                match group.submit(Request {
-                    id,
-                    prompt: t.episode.prompt.clone(),
-                    max_new: t.max_new,
-                })? {
+                match group.submit(self.request(id, &trace[next]))? {
                     SubmitOutcome::Routed(_) => {
                         id += 1;
                         next += 1;

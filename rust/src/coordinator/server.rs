@@ -3,10 +3,22 @@
 //!
 //! Protocol (one JSON object per line):
 //!   request:  {"id": 1, "prompt": [tok, ...], "max_new": 32}
+//!             optional: "stream": true|false (overrides the server
+//!             default), "deadline_ms": N (per-request deadline from
+//!             arrival; overrides --deadline-ms)
 //!   response: {"id": 1, "generated": [tok, ...], "stop": "eos",
 //!              "ttft_ms": 12.3, "e2e_ms": 45.6}
+//!   deltas:   streaming requests additionally get one
+//!             {"delta": [tok], "id": 1, "index": K} frame per generated
+//!             token *before* the terminal response line; the
+//!             concatenated deltas equal the final "generated" array
+//!             byte-for-byte (pinned by the streaming-parity test).
 //!   errors:   {"error": "..."} (parse) / {"id": N, "error": "..."}
 //!             (per-request: prompt too long, overloaded)
+//!
+//! "stop" may also be "cancelled" (the client went away mid-decode) or
+//! "deadline" (the per-request deadline expired); both carry whatever
+//! was generated up to that point.
 //!
 //! The front-end is a **single-threaded reactor** over raw epoll (see
 //! [`super::reactor`]): one thread drives non-blocking accept, reads,
@@ -25,6 +37,18 @@
 //! - **admission backpressure**: when the router reports every shard at
 //!   `batch + queue_depth` load, the request is answered with an
 //!   `overloaded` error instead of queueing unboundedly.
+//! - **cancel propagation**: a connection that goes away — read-side
+//!   EOF, hard socket error, slow-consumer drop, or eviction — has its
+//!   in-flight requests *cancelled* at the owning shard instead of
+//!   orphaning the decode: the engine frees the slot and KV pages at its
+//!   next step boundary. (Read-side EOF therefore means "client is
+//!   done": the cancelled partial replies still flush on the write half,
+//!   but EOF no longer lets a departed client's decode run to
+//!   completion.)
+//! - **streaming backpressure**: delta frames accumulate (coalesce) in
+//!   the bounded per-connection write buffer and drain under EPOLLOUT; a
+//!   reader that falls [`MAX_WR_BYTES`] behind is dropped — which, per
+//!   the above, cancels its in-flight decodes. Never unbounded.
 //!
 //! Ids are rewritten internally so concurrent clients cannot collide.
 //! (The offline vendor set has no tokio; epoll + std::net provides the
@@ -39,8 +63,8 @@ use std::time::{Duration, Instant};
 use anyhow::{anyhow, Result};
 
 use super::reactor::{Event, Interest, Reactor};
-use super::request::{Completion, Request, StopReason};
-use super::shard::{EngineGroup, SubmitOutcome};
+use super::request::{Completion, Request};
+use super::shard::{EngineGroup, GroupEvent, SubmitOutcome};
 use super::DecodeEngine;
 use crate::util::json::Json;
 
@@ -72,6 +96,14 @@ pub struct ServeConfig {
     /// Stop after this many completions have been collected (tests bind
     /// port 0 and set a limit); `None` serves forever.
     pub limit: Option<usize>,
+    /// Stream token deltas for every request unless it says
+    /// `"stream": false` (CLI `--stream`). Off by default: requests
+    /// opt in with `"stream": true`.
+    pub stream_by_default: bool,
+    /// Server-imposed default deadline applied to every request that
+    /// does not carry its own `deadline_ms` (CLI `--deadline-ms`);
+    /// `None` = unbounded.
+    pub deadline: Option<Duration>,
 }
 
 impl Default for ServeConfig {
@@ -80,12 +112,25 @@ impl Default for ServeConfig {
             max_conns: 256,
             idle_timeout: Duration::from_secs(30),
             limit: None,
+            stream_by_default: false,
+            deadline: None,
         }
     }
 }
 
+/// One parsed request line: the request itself plus the per-request
+/// protocol options that belong to the front-end, not the engine.
+pub struct WireRequest {
+    pub req: Request,
+    /// `"stream"` field: `Some` overrides
+    /// [`ServeConfig::stream_by_default`].
+    pub stream: Option<bool>,
+    /// `"deadline_ms"` field: `Some` overrides [`ServeConfig::deadline`].
+    pub deadline_ms: Option<u64>,
+}
+
 /// Parse one request line.
-pub fn parse_request(line: &str) -> Result<Request> {
+pub fn parse_request(line: &str) -> Result<WireRequest> {
     let j = Json::parse(line)?;
     let id = j.get("id")?.as_i64()? as u64;
     let prompt: Vec<i32> = j
@@ -95,23 +140,34 @@ pub fn parse_request(line: &str) -> Result<Request> {
         .map(|t| Ok(t.as_i64()? as i32))
         .collect::<Result<_>>()?;
     let max_new = j.opt("max_new").map(|v| v.as_usize()).transpose()?.unwrap_or(32);
-    Ok(Request { id, prompt, max_new })
+    let stream = j.opt("stream").map(|v| v.as_bool()).transpose()?;
+    let deadline_ms = j
+        .opt("deadline_ms")
+        .map(|v| v.as_usize())
+        .transpose()?
+        .map(|ms| ms as u64);
+    Ok(WireRequest { req: Request::new(id, prompt, max_new), stream, deadline_ms })
 }
 
 /// Encode one completion line.
 pub fn encode_completion(c: &Completion) -> String {
-    let stop = match c.stop {
-        StopReason::Eos => "eos",
-        StopReason::MaxNewTokens => "max_new",
-        StopReason::ContextFull => "context_full",
-    };
     Json::obj(vec![
         ("id", Json::Num(c.id as f64)),
         ("generated",
          Json::Arr(c.generated.iter().map(|&t| Json::Num(t as f64)).collect())),
-        ("stop", Json::Str(stop.to_string())),
+        ("stop", Json::Str(c.stop.as_str().to_string())),
         ("ttft_ms", Json::Num(c.ttft.as_secs_f64() * 1e3)),
         ("e2e_ms", Json::Num(c.e2e.as_secs_f64() * 1e3)),
+    ])
+    .to_string()
+}
+
+/// Encode one streaming delta frame.
+fn encode_delta(client_id: u64, tok: i32, index: usize) -> String {
+    Json::obj(vec![
+        ("id", Json::Num(client_id as f64)),
+        ("delta", Json::Arr(vec![Json::Num(tok as f64)])),
+        ("index", Json::Num(index as f64)),
     ])
     .to_string()
 }
@@ -143,8 +199,10 @@ struct Conn {
     want_write: bool,
     /// Flush `wr`, then close (goodbye messages).
     closing: bool,
-    /// Peer half-closed its write side (we read EOF). Replies for
-    /// in-flight work still flush; the conn closes once nothing is owed.
+    /// Peer half-closed its write side (we read EOF) — treated as
+    /// departure: in-flight work is cancelled at its shard, and the
+    /// (partial) replies still flush; the conn closes once nothing is
+    /// owed.
     read_closed: bool,
 }
 
@@ -168,6 +226,16 @@ pub fn serve_on<E: DecodeEngine>(listener: TcpListener, group: EngineGroup<E>,
     FrontEnd::new(listener, group, cfg)?.run()
 }
 
+/// Front-end bookkeeping for one accepted request.
+struct InflightReq {
+    /// Owning connection token.
+    conn: u64,
+    /// Client-visible id (internal ids are rewritten; see `next_req`).
+    client_id: u64,
+    /// Stream token deltas to the client as they are generated.
+    stream: bool,
+}
+
 struct FrontEnd<E: DecodeEngine> {
     reactor: Reactor,
     listener: TcpListener,
@@ -175,8 +243,8 @@ struct FrontEnd<E: DecodeEngine> {
     cfg: ServeConfig,
     max_prompt: usize,
     conns: HashMap<u64, Conn>,
-    /// Internal request id -> (connection token, client-visible id).
-    inflight: HashMap<u64, (u64, u64)>,
+    /// Internal request id -> per-request front-end state.
+    inflight: HashMap<u64, InflightReq>,
     next_token: u64,
     next_req: u64,
     served: usize,
@@ -251,7 +319,7 @@ impl<E: DecodeEngine> FrontEnd<E> {
                     break;
                 }
             }
-            self.pump_completions();
+            self.pump_events();
             self.evict_idle();
         }
         self.finish()
@@ -357,9 +425,11 @@ impl<E: DecodeEngine> FrontEnd<E> {
             lines.push(String::from_utf8_lossy(&line).into_owned());
         }
         if eof && !conn.rd.is_empty() {
-            // Clean EOF terminates a final unterminated line (matches
-            // the BufRead::lines behaviour of the old front-end —
-            // `printf <req> | nc` without a trailing newline is served).
+            // Clean EOF terminates a final unterminated line (the
+            // BufRead::lines convention). Note that EOF also signals
+            // departure: a request arriving *with* the EOF is submitted
+            // and then immediately cancelled below — a client that wants
+            // its reply must keep its write half open until it reads it.
             let tail: Vec<u8> = conn.rd.drain(..).collect();
             lines.push(String::from_utf8_lossy(&tail).into_owned());
         }
@@ -377,12 +447,16 @@ impl<E: DecodeEngine> FrontEnd<E> {
         }
     }
 
-    /// The peer closed its write side (or errored). Keep the connection
-    /// for as long as replies are owed — a client that pipelines
-    /// requests then shutdowns its write half still gets every answer —
-    /// and stop watching readability so a level-triggered EOF cannot
-    /// spin the loop.
+    /// The peer closed its write side (or errored): the client is
+    /// treated as departed. In-flight decodes for this connection are
+    /// **cancelled** at their owning shards (freeing slots and KV pages
+    /// at the next step boundary) instead of running orphaned to
+    /// completion; the resulting partial `"stop": "cancelled"` replies —
+    /// and anything already buffered — still flush on the write half
+    /// before the connection closes. Readability interest is dropped so
+    /// a level-triggered EOF cannot spin the loop.
     fn read_side_closed(&mut self, token: u64) {
+        self.cancel_owned(token);
         let Some(conn) = self.conns.get_mut(&token) else { return };
         conn.read_closed = true;
         if conn.inflight == 0 && conn.wr.is_empty() {
@@ -408,7 +482,7 @@ impl<E: DecodeEngine> FrontEnd<E> {
         if let Some(conn) = self.conns.get_mut(&token) {
             conn.last_activity = Instant::now();
         }
-        let req = match parse_request(line) {
+        let wire = match parse_request(line) {
             Ok(r) => r,
             Err(e) => {
                 // Through Json so the message is escaped (parse errors
@@ -417,6 +491,7 @@ impl<E: DecodeEngine> FrontEnd<E> {
                 return;
             }
         };
+        let req = wire.req;
         // Reject instead of submitting: an over-long prompt would panic
         // the target shard's engine (context overflow).
         if req.prompt.len() > self.max_prompt {
@@ -425,17 +500,29 @@ impl<E: DecodeEngine> FrontEnd<E> {
             self.queue_reply(token, &error_line(Some(req.id), &msg));
             return;
         }
+        let stream = wire.stream.unwrap_or(self.cfg.stream_by_default);
+        let deadline = wire
+            .deadline_ms
+            .map(Duration::from_millis)
+            .or(self.cfg.deadline)
+            .map(|d| Instant::now() + d);
         let client_id = req.id;
         let internal = self.next_req;
         let routed = self.group.submit(Request {
             id: internal,
             prompt: req.prompt,
             max_new: req.max_new,
+            deadline,
+            stream,
         });
         match routed {
             Ok(SubmitOutcome::Routed(_)) => {
                 self.next_req += 1;
-                self.inflight.insert(internal, (token, client_id));
+                self.inflight.insert(internal, InflightReq {
+                    conn: token,
+                    client_id,
+                    stream,
+                });
                 if let Some(conn) = self.conns.get_mut(&token) {
                     conn.inflight += 1;
                 }
@@ -450,36 +537,57 @@ impl<E: DecodeEngine> FrontEnd<E> {
         }
     }
 
-    /// Collect every completion the fleet has ready and fan the replies
-    /// out to their owning connections.
-    fn pump_completions(&mut self) {
+    /// Collect every lifecycle event the fleet has ready and fan the
+    /// frames out to their owning connections: token deltas for
+    /// streaming requests, the terminal reply line for everyone.
+    fn pump_events(&mut self) {
         loop {
-            match self.group.poll(Duration::ZERO) {
-                Ok(Some(c)) => {
-                    self.served += 1;
-                    self.deliver(c);
-                }
+            match self.group.poll_event(Duration::ZERO) {
+                Ok(Some(ev)) => self.handle_group_event(ev),
                 Ok(None) => break,
                 Err(e) => {
                     self.failure = Some(e);
                     break;
                 }
             }
+            if self.failure.is_some() {
+                break;
+            }
+        }
+    }
+
+    fn handle_group_event(&mut self, ev: GroupEvent) {
+        match ev {
+            GroupEvent::Token { id, tok, index } => {
+                // Non-streaming requests (and requests whose connection
+                // died) drop their deltas here; the terminal reply is
+                // unaffected.
+                let Some(entry) = self.inflight.get(&id) else { return };
+                if entry.stream {
+                    let (conn, client_id) = (entry.conn, entry.client_id);
+                    self.queue_reply(conn, &encode_delta(client_id, tok, index));
+                }
+            }
+            GroupEvent::Done(c) => {
+                self.served += 1;
+                self.deliver(c);
+            }
         }
     }
 
     fn deliver(&mut self, mut c: Completion) {
-        let Some((token, client_id)) = self.inflight.remove(&c.id) else {
+        let Some(entry) = self.inflight.remove(&c.id) else {
             return;
         };
-        c.id = client_id;
+        let token = entry.conn;
+        c.id = entry.client_id;
         let line = encode_completion(&c);
         if let Some(conn) = self.conns.get_mut(&token) {
             conn.inflight = conn.inflight.saturating_sub(1);
             conn.last_activity = Instant::now();
         }
-        // The owning connection may be gone (client hung up mid-decode);
-        // the completion is then dropped, like the old front-end did.
+        // The owning connection may be gone (client hung up mid-decode;
+        // its work was cancelled at close): the completion is dropped.
         self.queue_reply(token, &line);
     }
 
@@ -594,12 +702,32 @@ impl<E: DecodeEngine> FrontEnd<E> {
         }
     }
 
+    /// Cancel every in-flight request owned by `token` at its shard —
+    /// the decode is abandoned work once the client is gone, so its slot
+    /// and KV pages are reclaimed at the next engine step instead of
+    /// burning to completion. The `Finished(Cancelled)` completions
+    /// still flow back and settle the inflight bookkeeping (and, if the
+    /// write half survives, a partial reply).
+    fn cancel_owned(&mut self, token: u64) {
+        let ids: Vec<u64> = self
+            .inflight
+            .iter()
+            .filter(|(_, e)| e.conn == token)
+            .map(|(&id, _)| id)
+            .collect();
+        for id in ids {
+            self.group.cancel(id);
+        }
+    }
+
     fn close_conn(&mut self, token: u64) {
         if let Some(conn) = self.conns.remove(&token) {
             let _ = self.reactor.deregister(conn.stream.as_raw_fd());
             let _ = conn.stream.shutdown(std::net::Shutdown::Both);
-            // Completions owed to this connection will be dropped on
-            // delivery (their inflight entries resolve to a dead token).
+            // Cancel the dead connection's decodes; their completions
+            // are dropped on delivery (the inflight entries resolve to
+            // a dead token).
+            self.cancel_owned(token);
         }
     }
 
@@ -608,16 +736,13 @@ impl<E: DecodeEngine> FrontEnd<E> {
     fn finish(mut self) -> Result<()> {
         if self.failure.is_none() {
             // The limit counts served replies: anything already routed
-            // to a shard still gets its reply before shutdown, so no
-            // accepted request is silently dropped — and a shard failure
-            // during this drain is surfaced exactly like one during the
-            // main loop.
+            // to a shard still gets its reply (and its delta frames)
+            // before shutdown, so no accepted request is silently
+            // dropped — and a shard failure during this drain is
+            // surfaced exactly like one during the main loop.
             while self.group.inflight() > 0 && self.failure.is_none() {
-                match self.group.poll(Duration::from_millis(5)) {
-                    Ok(Some(c)) => {
-                        self.served += 1;
-                        self.deliver(c);
-                    }
+                match self.group.poll_event(Duration::from_millis(5)) {
+                    Ok(Some(ev)) => self.handle_group_event(ev),
                     Ok(None) => {}
                     Err(e) => self.failure = Some(e),
                 }
@@ -664,18 +789,52 @@ impl<E: DecodeEngine> FrontEnd<E> {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::coordinator::request::SeqStats;
+    use crate::coordinator::request::{SeqStats, StopReason};
 
     #[test]
     fn parse_roundtrip() {
         let r = parse_request(r#"{"id": 7, "prompt": [1, 2, 3], "max_new": 16}"#).unwrap();
-        assert_eq!(r.id, 7);
-        assert_eq!(r.prompt, vec![1, 2, 3]);
-        assert_eq!(r.max_new, 16);
+        assert_eq!(r.req.id, 7);
+        assert_eq!(r.req.prompt, vec![1, 2, 3]);
+        assert_eq!(r.req.max_new, 16);
+        assert_eq!(r.stream, None);
+        assert_eq!(r.deadline_ms, None);
         // default max_new
         let r = parse_request(r#"{"id": 1, "prompt": []}"#).unwrap();
-        assert_eq!(r.max_new, 32);
+        assert_eq!(r.req.max_new, 32);
         assert!(parse_request("{\"id\": 1}").is_err());
+    }
+
+    #[test]
+    fn parse_stream_and_deadline_options() {
+        let r = parse_request(
+            r#"{"id": 2, "prompt": [4], "stream": true, "deadline_ms": 250}"#,
+        )
+        .unwrap();
+        assert_eq!(r.stream, Some(true));
+        assert_eq!(r.deadline_ms, Some(250));
+        let r = parse_request(r#"{"id": 2, "prompt": [4], "stream": false}"#)
+            .unwrap();
+        assert_eq!(r.stream, Some(false));
+        // Malformed option values are parse errors, not silent defaults.
+        assert!(parse_request(r#"{"id": 2, "prompt": [4], "stream": 1}"#)
+            .is_err());
+        assert!(
+            parse_request(r#"{"id": 2, "prompt": [4], "deadline_ms": -5}"#)
+                .is_err()
+        );
+    }
+
+    #[test]
+    fn delta_frames_are_valid_json() {
+        let line = encode_delta(9, 42, 3);
+        let j = Json::parse(&line).unwrap();
+        assert_eq!(j.get("id").unwrap().as_i64().unwrap(), 9);
+        assert_eq!(j.get("index").unwrap().as_i64().unwrap(), 3);
+        let d = j.get("delta").unwrap().as_arr().unwrap();
+        assert_eq!(d.len(), 1);
+        assert_eq!(d[0].as_i64().unwrap(), 42);
+        assert!(j.get("stop").is_err(), "deltas must not look terminal");
     }
 
     #[test]

@@ -7,7 +7,8 @@
 //! a `Send + Sync` factory and the engine never crosses a thread
 //! boundary. Requests flow through **shared per-shard overflow queues**
 //! (bounded by `queue_depth`) with a control channel per shard for
-//! wakeups; completions fan in over one mpsc channel:
+//! wakeups, cancellation, and shutdown; token events and completions fan
+//! in over one mpsc channel:
 //!
 //! ```text
 //!            submit ──► router (least-loaded + affinity, bounded)
@@ -38,8 +39,22 @@
 //! With content-deterministic engines (greedy decoding; see `SimEngine`)
 //! per-request output is independent of placement, so stealing cannot
 //! change completions — `rust/tests/serving.rs` pins that property.
+//!
+//! **In-flight control**: [`EngineGroup::cancel`] marks the id in a
+//! shared cancel set and broadcasts to every shard (stealing means a
+//! queued request can live anywhere). The owning engine stops the
+//! request at its next step boundary — freeing its slot and KV pages —
+//! and a still-queued request is removed from its overflow queue with
+//! the same load-transfer discipline stealing uses; the submit-time set
+//! check closes the pop-vs-cancel race. Token-level events
+//! ([`GroupEvent::Token`]) ride the completion channel for requests
+//! submitted with `Request::stream`, giving the front-end streamed
+//! deltas without a second fan-in path — and costing non-streaming
+//! traffic nothing per token. Deadline-expired requests are pulled out
+//! of the overflow queues even while every slot is busy, so their
+//! replies land at the deadline instead of whenever a slot frees.
 
-use std::collections::VecDeque;
+use std::collections::{HashSet, VecDeque};
 use std::marker::PhantomData;
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
@@ -50,7 +65,7 @@ use std::time::{Duration, Instant};
 use anyhow::{anyhow, bail, Result};
 
 use super::metrics::{GroupMetrics, Metrics};
-use super::request::{Completion, Request};
+use super::request::{Completion, EngineEvent, Request};
 use super::DecodeEngine;
 
 /// Router configuration for an [`EngineGroup`].
@@ -84,6 +99,11 @@ pub enum SubmitOutcome {
 enum ShardCmd {
     /// A request was pushed to this shard's overflow queue.
     Wake,
+    /// Cancel request `id` if this shard holds it (engine or any
+    /// reachable overflow queue) — broadcast to every shard, because
+    /// work stealing means the submitting-time placement is not where a
+    /// queued request necessarily lives.
+    Cancel(u64),
     /// Finish all in-flight work, then exit and snapshot metrics.
     Shutdown,
 }
@@ -91,9 +111,22 @@ enum ShardCmd {
 enum ShardEvent {
     /// Sent once per shard after its engine constructed successfully.
     Ready { shard: usize, batch: usize, max_prompt: usize },
+    /// One generated token for an in-flight request (streamed replies).
+    Token { id: u64, tok: i32, index: usize },
     Done(Completion),
     /// Engine construction or `step` failed; the shard thread has exited.
     Fatal { shard: usize, msg: String },
+}
+
+/// What [`EngineGroup::poll_event`] yields: a token delta for an
+/// in-flight request submitted with `stream = true` (non-streaming
+/// requests generate no channel traffic per token), or any request's
+/// terminal completion. Per request id, every `Token` precedes the
+/// `Done` (the per-shard event channel preserves emission order).
+#[derive(Debug)]
+pub enum GroupEvent {
+    Token { id: u64, tok: i32, index: usize },
+    Done(Completion),
 }
 
 /// The state shards and the router share: overflow queues, per-shard
@@ -109,6 +142,15 @@ struct ShardQueues {
     steals: Vec<AtomicU64>,
     /// Peak overflow-queue length seen at shard `i`.
     queue_peak: Vec<AtomicUsize>,
+    /// Ids with a cancel pending that no engine has acknowledged yet.
+    /// Closes the steal-in-progress race: a request popped from a queue
+    /// *after* the cancel broadcast (by its own shard or a thief) is
+    /// checked against this set at submit time, so the cancel cannot be
+    /// lost in the window between queue-pop and engine-submit. Entries
+    /// are removed when an engine takes ownership of the cancel, or by
+    /// the router when the request's completion flows back (cancel
+    /// raced a natural finish).
+    cancelled: Mutex<HashSet<u64>>,
 }
 
 impl ShardQueues {
@@ -118,6 +160,7 @@ impl ShardQueues {
             load: (0..n).map(|_| AtomicUsize::new(0)).collect(),
             steals: (0..n).map(|_| AtomicU64::new(0)).collect(),
             queue_peak: (0..n).map(|_| AtomicUsize::new(0)).collect(),
+            cancelled: Mutex::new(HashSet::new()),
         }
     }
 
@@ -141,6 +184,44 @@ impl ShardQueues {
         self.load[me].fetch_add(1, Ordering::SeqCst);
         self.steals[me].fetch_add(1, Ordering::SeqCst);
         Some(item)
+    }
+
+    /// Remove the first deadline-expired request from `me`'s own
+    /// overflow queue (load accounting unchanged — the request stays
+    /// this shard's). A busy shard calls this every loop iteration and
+    /// routes the hit through its engine, whose step-boundary control
+    /// scan completes it immediately *without* a slot — so an expired
+    /// request queued behind a long decode answers at its deadline, not
+    /// when a slot finally frees.
+    fn pop_expired(&self, me: usize, now: Instant) -> Option<(Request, Instant)> {
+        let mut q = self.queues[me].lock().unwrap();
+        let pos = q
+            .iter()
+            .position(|(r, _)| r.deadline.map(|d| now >= d).unwrap_or(false))?;
+        q.remove(pos)
+    }
+
+    /// Remove request `id` from whichever overflow queue holds it (own
+    /// queue first) — the cancel analog of `steal_for`: the removal
+    /// happens under the queue lock and the load accounting transfers to
+    /// `me` right after, exactly like a steal, so a raced normal pop /
+    /// steal and a cancel removal can never double-take the request.
+    fn remove_queued(&self, me: usize, id: u64) -> Option<(Request, Instant)> {
+        let n = self.queues.len();
+        for off in 0..n {
+            let s = (me + off) % n;
+            let mut q = self.queues[s].lock().unwrap();
+            if let Some(pos) = q.iter().position(|(r, _)| r.id == id) {
+                let item = q.remove(pos)?;
+                drop(q);
+                if s != me {
+                    self.load[s].fetch_sub(1, Ordering::SeqCst);
+                    self.load[me].fetch_add(1, Ordering::SeqCst);
+                }
+                return Some(item);
+            }
+        }
+        None
     }
 }
 
@@ -184,6 +265,46 @@ fn affinity_hash(prompt: &[i32]) -> u64 {
     h
 }
 
+/// Submit a popped request, applying any cancel that raced the pop: the
+/// window between a queue-pop (normal admit or steal) and the engine
+/// submit is exactly where a broadcast `Cancel` could otherwise be lost
+/// — the shared `cancelled` set closes it, and the engine then applies
+/// the uniform cancel semantics (Finished + `StopReason::Cancelled` +
+/// metrics) at its next step boundary. `streaming` is the shard-local
+/// set of ids whose token events cross the completion channel.
+fn submit_checked<E: DecodeEngine>(engine: &mut E, shared: &ShardQueues,
+                                   streaming: &mut HashSet<u64>,
+                                   req: Request, at: Instant) {
+    let id = req.id;
+    if req.stream {
+        streaming.insert(id);
+    }
+    engine.submit_at(req, at);
+    if shared.cancelled.lock().unwrap().remove(&id) {
+        engine.cancel(id);
+    }
+}
+
+/// Apply a broadcast cancel on this shard: the engine first (it owns
+/// active and engine-queued requests), then the overflow queues — a
+/// still-queued request is removed and run through this shard's engine
+/// as an immediately-cancelled submit (`submit_checked` sees the id
+/// still marked in the cancel set and applies it), so every cancelled
+/// request produces exactly one `Finished` with uniform metrics,
+/// whichever stage it was caught in. Ids owned by no stage here are
+/// left for the sibling broadcasts (or the submit-time check) to claim.
+fn apply_cancel<E: DecodeEngine>(shard: usize, engine: &mut E,
+                                 shared: &ShardQueues,
+                                 streaming: &mut HashSet<u64>, id: u64) {
+    if engine.cancel(id) {
+        shared.cancelled.lock().unwrap().remove(&id);
+        return;
+    }
+    if let Some((req, at)) = shared.remove_queued(shard, id) {
+        submit_checked(engine, shared, streaming, req, at);
+    }
+}
+
 fn shard_main<E, F>(shard: usize, factory: Arc<F>, shared: Arc<ShardQueues>,
                     rx: Receiver<ShardCmd>, tx: Sender<ShardEvent>) -> Metrics
 where
@@ -208,6 +329,10 @@ where
     const IDLE_WAIT_CEIL: Duration = Duration::from_millis(20);
     let mut shutting_down = false;
     let mut idle_wait = IDLE_WAIT_FLOOR;
+    // Ids whose token events are forwarded over the completion channel
+    // (requests submitted with `stream = true`); shard-thread-local, so
+    // no locking on the per-token path.
+    let mut streaming: HashSet<u64> = HashSet::new();
     let finish = |mut m: Metrics| {
         m.requests_stolen = shared.steals[shard].load(Ordering::SeqCst);
         m.queue_peak = shared.queue_peak[shard].load(Ordering::SeqCst) as u64;
@@ -220,7 +345,9 @@ where
         while engine.active() + engine.pending() < engine.batch_size() {
             let item = shared.queues[shard].lock().unwrap().pop_front();
             match item {
-                Some((req, at)) => engine.submit_at(req, at),
+                Some((req, at)) => {
+                    submit_checked(&mut engine, &shared, &mut streaming, req, at)
+                }
                 None => break,
             }
         }
@@ -228,8 +355,20 @@ where
         // most-loaded shard.
         while engine.active() + engine.pending() < engine.batch_size() {
             match shared.steal_for(shard) {
-                Some((req, at)) => engine.submit_at(req, at),
+                Some((req, at)) => {
+                    submit_checked(&mut engine, &shared, &mut streaming, req, at)
+                }
                 None => break,
+            }
+        }
+        // Deadline-expired requests must not wait for a slot: pull them
+        // out of the overflow queue even when the batch is full — the
+        // engine's control scan completes them at the next step without
+        // occupying a slot.
+        {
+            let now = Instant::now();
+            while let Some((req, at)) = shared.pop_expired(shard, now) {
+                submit_checked(&mut engine, &shared, &mut streaming, req, at);
             }
         }
         if engine.idle() {
@@ -244,6 +383,11 @@ where
             // activity resets it to the floor.
             match rx.recv_timeout(idle_wait) {
                 Ok(ShardCmd::Wake) => idle_wait = IDLE_WAIT_FLOOR,
+                Ok(ShardCmd::Cancel(id)) => {
+                    idle_wait = IDLE_WAIT_FLOOR;
+                    apply_cancel(shard, &mut engine, &shared, &mut streaming,
+                                 id);
+                }
                 Err(RecvTimeoutError::Timeout) => {
                     idle_wait = (idle_wait * 2).min(IDLE_WAIT_CEIL);
                 }
@@ -253,25 +397,47 @@ where
             continue;
         }
         idle_wait = IDLE_WAIT_FLOOR;
-        // Drain control opportunistically so shutdown interleaves with
-        // decode steps (Wakes are level-triggered hints; the queue check
-        // above is the source of truth).
+        // Drain control opportunistically so shutdown and cancellation
+        // interleave with decode steps (Wakes are level-triggered hints;
+        // the queue check above is the source of truth) — a cancel is
+        // therefore applied at the latest one engine step after it
+        // arrives.
         while let Ok(cmd) = rx.try_recv() {
-            if let ShardCmd::Shutdown = cmd {
-                shutting_down = true;
+            match cmd {
+                ShardCmd::Shutdown => shutting_down = true,
+                ShardCmd::Cancel(id) => {
+                    apply_cancel(shard, &mut engine, &shared, &mut streaming,
+                                 id);
+                }
+                ShardCmd::Wake => {}
             }
         }
-        match engine.step() {
-            Ok(completions) => {
-                for completion in completions {
+        // One engine step, fanned out as events: tokens stream to the
+        // front-end (streaming requests only — non-streaming traffic
+        // pays no per-token channel cost), completions settle the load
+        // accounting.
+        let step = {
+            let tx = &tx;
+            let shared = &shared;
+            let streaming = &mut streaming;
+            let mut sink = |ev: EngineEvent| match ev {
+                EngineEvent::Token { id, tok, index } => {
+                    if streaming.contains(&id) {
+                        let _ = tx.send(ShardEvent::Token { id, tok, index });
+                    }
+                }
+                EngineEvent::Finished(completion) => {
+                    streaming.remove(&completion.id);
                     shared.load[shard].fetch_sub(1, Ordering::SeqCst);
                     let _ = tx.send(ShardEvent::Done(completion));
                 }
-            }
-            Err(e) => {
-                let _ = tx.send(ShardEvent::Fatal { shard, msg: format!("{e}") });
-                return finish(engine.take_metrics());
-            }
+                EngineEvent::Started { .. } => {}
+            };
+            engine.step_events(&mut sink)
+        };
+        if let Err(e) = step {
+            let _ = tx.send(ShardEvent::Fatal { shard, msg: format!("{e}") });
+            return finish(engine.take_metrics());
         }
     }
     finish(engine.take_metrics())
@@ -332,6 +498,9 @@ impl<E: DecodeEngine> EngineGroup<E> {
                     failure = Some(format!("shard {shard} failed to start: {msg}"));
                 }
                 Ok(ShardEvent::Done(_)) => unreachable!("done before submit"),
+                Ok(ShardEvent::Token { .. }) => {
+                    unreachable!("token before submit")
+                }
                 Err(RecvTimeoutError::Timeout) => {
                     if let Some((i, _)) = shards
                         .iter()
@@ -488,12 +657,38 @@ impl<E: DecodeEngine> EngineGroup<E> {
         Ok(SubmitOutcome::Routed(shard))
     }
 
-    fn handle_event(&mut self, ev: ShardEvent) -> Result<Option<Completion>> {
+    /// Request cancellation of an accepted request by id. The id is
+    /// marked in the shared cancel set (so a queue-pop racing this call
+    /// cannot lose the cancel) and the cancel is broadcast to every
+    /// shard — work stealing means a queued request may live on any
+    /// shard's queue, and only the owning engine knows an active one.
+    /// The request resolves through the normal completion path with
+    /// [`StopReason::Cancelled`], freeing its slot and KV pages at the
+    /// owning engine's next step boundary; cancelling an id that already
+    /// completed is a harmless no-op. (Its cancel mark can linger until
+    /// that id is seen again, so ids must not be recycled across
+    /// requests — every built-in caller allocates them monotonically.)
+    ///
+    /// [`StopReason::Cancelled`]: super::request::StopReason::Cancelled
+    pub fn cancel(&mut self, id: u64) {
+        self.shared.cancelled.lock().unwrap().insert(id);
+        for s in &self.shards {
+            let _ = s.tx.send(ShardCmd::Cancel(id));
+        }
+    }
+
+    fn handle_event(&mut self, ev: ShardEvent) -> Result<Option<GroupEvent>> {
         match ev {
+            ShardEvent::Token { id, tok, index } => {
+                Ok(Some(GroupEvent::Token { id, tok, index }))
+            }
             ShardEvent::Done(completion) => {
                 self.inflight = self.inflight.saturating_sub(1);
                 self.last_done = Some(Instant::now());
-                Ok(Some(completion))
+                // A cancel that raced the natural finish leaves its mark
+                // unclaimed; clear it here so the set cannot grow.
+                self.shared.cancelled.lock().unwrap().remove(&completion.id);
+                Ok(Some(GroupEvent::Done(completion)))
             }
             ShardEvent::Fatal { shard, msg } => {
                 bail!("shard {shard} died: {msg}")
@@ -502,8 +697,9 @@ impl<E: DecodeEngine> EngineGroup<E> {
         }
     }
 
-    /// Wait up to `timeout` for one completion. `Ok(None)` on timeout.
-    pub fn poll(&mut self, timeout: Duration) -> Result<Option<Completion>> {
+    /// Wait up to `timeout` for one lifecycle event (a token delta or a
+    /// completion). `Ok(None)` on timeout.
+    pub fn poll_event(&mut self, timeout: Duration) -> Result<Option<GroupEvent>> {
         match self.events.recv_timeout(timeout) {
             Ok(ev) => self.handle_event(ev),
             Err(RecvTimeoutError::Timeout) => {
@@ -548,6 +744,23 @@ impl<E: DecodeEngine> EngineGroup<E> {
             }
             Err(RecvTimeoutError::Disconnected) => {
                 bail!("all shards exited unexpectedly")
+            }
+        }
+    }
+
+    /// Wait up to `timeout` for one completion, discarding token deltas
+    /// (the non-streaming view of the event stream). `Ok(None)` on
+    /// timeout.
+    pub fn poll(&mut self, timeout: Duration) -> Result<Option<Completion>> {
+        let deadline = Instant::now() + timeout;
+        loop {
+            let left = deadline.saturating_duration_since(Instant::now());
+            match self.poll_event(left)? {
+                Some(GroupEvent::Done(c)) => return Ok(Some(c)),
+                // Each discarded token is channel progress, so this
+                // drains rather than spins once the deadline passes.
+                Some(GroupEvent::Token { .. }) => continue,
+                None => return Ok(None),
             }
         }
     }
@@ -614,7 +827,7 @@ mod tests {
     }
 
     fn req(id: u64, prompt: Vec<i32>, max_new: usize) -> Request {
-        Request { id, prompt, max_new }
+        Request::new(id, prompt, max_new)
     }
 
     /// Single-slot SimEngine slowed to a 2ms step, so queues stay
@@ -708,6 +921,173 @@ mod tests {
         assert_eq!(gm.rejected, 1);
         assert_eq!(gm.queue_depth, 1);
         assert_eq!(gm.fleet().requests_completed, 2);
+    }
+
+    #[test]
+    fn cancel_resolves_active_and_queued_requests() {
+        use crate::coordinator::request::StopReason;
+        // One slow single-slot shard, deep queue: req 0 becomes active,
+        // reqs 1 and 2 wait in the shared overflow queue.
+        let cfg = GroupConfig { shards: 1, affinity_slack: 1, queue_depth: 8 };
+        let slow = SimConfig { batch: 1, eos_every: 0, step_delay_ms: 2,
+                               ..Default::default() };
+        let mut g: EngineGroup<SimEngine> =
+            EngineGroup::with_config(cfg, move |_| Ok(SimEngine::new(slow)))
+                .unwrap();
+        // Request 0 streams so the test can observe it mid-decode.
+        routed(g.submit(req(0, vec![1, 2], 400).with_stream()).unwrap());
+        for i in 1..3u64 {
+            routed(g.submit(req(i, vec![1, 2 + i as i32], 400)).unwrap());
+        }
+        // Wait until request 0 is demonstrably mid-decode (its token
+        // events are flowing) before cancelling — no timing guesswork.
+        loop {
+            match g.poll_event(Duration::from_secs(5)).unwrap() {
+                Some(GroupEvent::Token { id: 0, .. }) => break,
+                Some(_) => {}
+                None => panic!("request 0 never started decoding"),
+            }
+        }
+        g.cancel(0); // active mid-decode
+        g.cancel(2); // still queued (shard capacity is 1)
+        let comps = g.drain().unwrap();
+        assert_eq!(comps.len(), 3, "cancelled requests still complete");
+        let by_id = |id: u64| comps.iter().find(|c| c.id == id).unwrap();
+        assert_eq!(by_id(0).stop, StopReason::Cancelled);
+        assert!(!by_id(0).generated.is_empty(), "partial output returned");
+        assert!(by_id(0).generated.len() < 400, "stopped well before max_new");
+        assert_eq!(by_id(2).stop, StopReason::Cancelled);
+        assert!(by_id(2).generated.is_empty(), "never admitted");
+        // Request 1 unaffected: the exact deterministic generation.
+        let (want, _) = SimEngine::expected_generation(&slow, &[1, 3], 400);
+        assert_eq!(by_id(1).generated, want);
+        let gm = g.shutdown().unwrap();
+        let f = gm.fleet();
+        assert_eq!(f.requests_cancelled, 2, "{}", gm.report());
+        assert_eq!(f.requests_completed, 1);
+        assert!(gm.report().contains("cancelled=2"), "{}", gm.report());
+    }
+
+    #[test]
+    fn cancelling_unknown_or_finished_ids_is_harmless() {
+        let mut g = group(1);
+        routed(g.submit(req(0, vec![1, 2, 3], 6)).unwrap());
+        let comps = g.drain().unwrap();
+        assert_eq!(comps.len(), 1);
+        g.cancel(0); // already finished
+        g.cancel(42); // never existed
+        routed(g.submit(req(7, vec![4, 5, 6], 6)).unwrap());
+        let comps = g.drain().unwrap();
+        assert_eq!(comps.len(), 1, "group still serves after stray cancels");
+        assert_eq!(comps[0].id, 7);
+        g.shutdown().unwrap();
+    }
+
+    #[test]
+    fn deadline_expires_mid_decode_across_the_group() {
+        use crate::coordinator::request::StopReason;
+        let slow = SimConfig { batch: 1, eos_every: 0, step_delay_ms: 2,
+                               ..Default::default() };
+        let mut g: EngineGroup<SimEngine> =
+            EngineGroup::new(1, move |_| Ok(SimEngine::new(slow))).unwrap();
+        let r = req(0, vec![9, 8, 7], 100_000)
+            .with_deadline(Instant::now() + Duration::from_millis(30));
+        routed(g.submit(r).unwrap());
+        let comps = g.drain().unwrap();
+        assert_eq!(comps.len(), 1);
+        assert_eq!(comps[0].stop, StopReason::DeadlineExceeded);
+        assert!(comps[0].generated.len() < 100_000, "stopped early");
+        let gm = g.shutdown().unwrap();
+        assert_eq!(gm.fleet().requests_deadline_expired, 1);
+        assert!(gm.report().contains("deadline-expired=1"), "{}", gm.report());
+    }
+
+    #[test]
+    fn nonstreaming_requests_send_no_token_events() {
+        let mut g = group(1);
+        routed(g.submit(req(0, vec![4, 4, 4], 10)).unwrap());
+        loop {
+            match g.poll_event(Duration::from_secs(5)).unwrap() {
+                Some(GroupEvent::Token { .. }) => {
+                    panic!("token event for a non-streaming request")
+                }
+                Some(GroupEvent::Done(_)) => break,
+                None => panic!("timed out"),
+            }
+        }
+        g.shutdown().unwrap();
+    }
+
+    #[test]
+    fn queued_request_deadline_fires_while_shard_is_busy() {
+        use crate::coordinator::request::StopReason;
+        // One slow single-slot shard: request 0 occupies the slot for
+        // ~600ms; request 1 waits in the overflow queue with a 30ms
+        // deadline and must be answered at the deadline, not when the
+        // slot frees.
+        let slow = SimConfig { batch: 1, eos_every: 0, step_delay_ms: 2,
+                               ..Default::default() };
+        let cfg = GroupConfig { shards: 1, affinity_slack: 1, queue_depth: 8 };
+        let mut g: EngineGroup<SimEngine> =
+            EngineGroup::with_config(cfg, move |_| Ok(SimEngine::new(slow)))
+                .unwrap();
+        routed(g.submit(req(0, vec![1, 2], 300).with_stream()).unwrap());
+        // Ensure request 0 holds the slot before queueing request 1.
+        loop {
+            match g.poll_event(Duration::from_secs(5)).unwrap() {
+                Some(GroupEvent::Token { id: 0, .. }) => break,
+                Some(_) => {}
+                None => panic!("request 0 never started decoding"),
+            }
+        }
+        let r = req(1, vec![3, 4], 300)
+            .with_deadline(Instant::now() + Duration::from_millis(30));
+        routed(g.submit(r).unwrap());
+        // The FIRST completion must be the expired queued request —
+        // request 0 keeps decoding for hundreds of ms after it.
+        let first = loop {
+            match g.poll_event(Duration::from_secs(5)).unwrap() {
+                Some(GroupEvent::Done(c)) => break c,
+                Some(_) => {}
+                None => panic!("no completion"),
+            }
+        };
+        assert_eq!(first.id, 1,
+                   "expired queued request must not wait for the slot");
+        assert_eq!(first.stop, StopReason::DeadlineExceeded);
+        assert!(first.generated.is_empty(), "never admitted to a slot");
+        let comps = g.drain().unwrap();
+        assert_eq!(comps.len(), 1);
+        assert_eq!(comps[0].id, 0, "the busy request still completes");
+        let gm = g.shutdown().unwrap();
+        assert_eq!(gm.fleet().requests_deadline_expired, 1);
+    }
+
+    #[test]
+    fn token_events_precede_their_completion() {
+        use crate::coordinator::request::StopReason;
+        let mut g = group(1);
+        routed(g.submit(req(3, vec![5, 6, 7], 10).with_stream()).unwrap());
+        let mut toks = Vec::new();
+        let done = loop {
+            match g.poll_event(Duration::from_secs(5)).unwrap() {
+                Some(GroupEvent::Token { id, tok, index }) => {
+                    assert_eq!(id, 3);
+                    assert_eq!(index, toks.len(), "in-order delivery");
+                    toks.push(tok);
+                }
+                Some(GroupEvent::Done(c)) => break c,
+                None => panic!("timed out waiting for events"),
+            }
+        };
+        assert_eq!(done.generated, toks,
+                   "completion equals concatenated token events");
+        let (want, stop) = SimEngine::expected_generation(
+            &SimConfig::default(), &[5, 6, 7], 10);
+        assert_eq!(toks, want);
+        assert_eq!(done.stop, stop);
+        assert_ne!(stop, StopReason::Cancelled);
+        g.shutdown().unwrap();
     }
 
     #[test]

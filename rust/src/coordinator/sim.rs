@@ -3,7 +3,9 @@
 //! [`SimEngine`] mirrors the PJRT engine's continuous-batching control
 //! flow exactly — bounded batch slots, admit+prefill when slots free up,
 //! one decode token per step for every running slot, stop on EOS /
-//! max-new / context-full, completion reaping, metrics recording — but
+//! max-new / context-full, step-boundary control stops (cancellation,
+//! deadlines) via the shared [`StopReason::control`] rule, completion
+//! reaping, metrics recording, and the [`EngineEvent`] stream — but
 //! replaces the device model with a pure token function: every generated
 //! token is a deterministic mix of the engine seed and the request's
 //! prompt. The output for a request therefore depends **only** on the
@@ -12,14 +14,26 @@
 //! the property that makes 1-shard vs N-shard completion parity provable
 //! in `rust/tests/serving.rs`. (The real engine has the same property
 //! under greedy sampling; see `rust/tests/engine.rs`.)
+//!
+//! KV-page accounting is simulated too: each admitted slot takes
+//! [`SimConfig::pages_per_slot`] pages from a pool gauge and returns
+//! them when the slot is reaped — for any stop reason, including
+//! [`StopReason::Cancelled`] — so the serving tests can assert that
+//! cancelling a mid-decode request releases its pages, through the exact
+//! code path the real engine uses (stop flag at the step boundary, pages
+//! freed in the reap that follows). The gauge is an `Arc<AtomicUsize>`
+//! so a test can watch it from outside the shard thread
+//! ([`SimEngine::with_pool_gauge`]).
 
-use std::collections::VecDeque;
+use std::collections::{HashSet, VecDeque};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
 use std::time::Instant;
 
 use anyhow::Result;
 
 use super::metrics::Metrics;
-use super::request::{Completion, Request, SeqStats, StopReason};
+use super::request::{Completion, EngineEvent, Request, SeqStats, StopReason};
 use super::DecodeEngine;
 use crate::workload::Vocab;
 
@@ -49,16 +63,20 @@ pub struct SimConfig {
     pub eos_every: u64,
     /// Test-harness knob: sleep this long per `step` (0 = off), so
     /// requests stay in flight long enough for timing-dependent serving
-    /// behaviour (idle timeouts, admission backpressure, work stealing)
-    /// to be observable deterministically. Not part of the token
-    /// function — output parity is unaffected.
+    /// behaviour (idle timeouts, admission backpressure, work stealing,
+    /// mid-decode cancellation) to be observable deterministically. Not
+    /// part of the token function — output parity is unaffected.
     pub step_delay_ms: u64,
+    /// Simulated KV pages an active slot holds (pool capacity =
+    /// `batch * pages_per_slot`); purely an accounting mirror of the
+    /// real engine's paged pool, with no effect on generation.
+    pub pages_per_slot: usize,
 }
 
 impl Default for SimConfig {
     fn default() -> Self {
         SimConfig { batch: 4, max_seq: 512, seed: 0, min_gen: 4, eos_every: 23,
-                    step_delay_ms: 0 }
+                    step_delay_ms: 0, pages_per_slot: 4 }
     }
 }
 
@@ -82,17 +100,46 @@ pub struct SimEngine {
     queue: VecDeque<(Request, Instant)>,
     pub metrics: Metrics,
     pub vocab: Vocab,
+    /// Ids flagged for cancellation, applied at the next step boundary.
+    cancels: HashSet<u64>,
+    /// Completions synthesized off-slot (cancelled or deadline-expired
+    /// while still queued), drained by the next reap.
+    done_early: Vec<Completion>,
+    /// Free simulated KV pages (see [`SimConfig::pages_per_slot`]).
+    pool_free: Arc<AtomicUsize>,
 }
 
 impl SimEngine {
     pub fn new(cfg: SimConfig) -> SimEngine {
+        Self::with_pool_gauge(cfg, Arc::new(AtomicUsize::new(0)))
+    }
+
+    /// Like [`new`](Self::new), but publishing the free-page count
+    /// through a caller-owned gauge, so tests can observe page
+    /// allocate/release from outside the shard thread. The gauge is
+    /// (re)set to the pool capacity here.
+    pub fn with_pool_gauge(cfg: SimConfig,
+                           gauge: Arc<AtomicUsize>) -> SimEngine {
+        gauge.store(cfg.batch * cfg.pages_per_slot, Ordering::SeqCst);
         SimEngine {
             slots: (0..cfg.batch).map(|_| None).collect(),
             queue: VecDeque::new(),
             metrics: Metrics::new(),
             vocab: Vocab::default(),
+            cancels: HashSet::new(),
+            done_early: Vec::new(),
+            pool_free: gauge,
             cfg,
         }
+    }
+
+    /// Free pages in the simulated KV pool (leak detection in tests).
+    pub fn pool_free(&self) -> usize {
+        self.pool_free.load(Ordering::SeqCst)
+    }
+
+    pub fn pool_capacity(&self) -> usize {
+        self.cfg.batch * self.cfg.pages_per_slot
     }
 
     /// The deterministic generation a request would produce, computed
@@ -133,7 +180,28 @@ impl SimEngine {
         8 + (state % 200) as i32
     }
 
-    fn admit_and_prefill(&mut self) {
+    /// Step-boundary control stops (shared rule: [`StopReason::control`]):
+    /// flag cancelled / deadline-expired active slots for the reap that
+    /// follows, and complete cancelled or expired requests still waiting
+    /// in the queue (shared code: [`super::request::expire_queued`])
+    /// without ever occupying a slot.
+    fn apply_control_stops(&mut self) {
+        let now = Instant::now();
+        for slot in self.slots.iter_mut().flatten() {
+            if slot.stop.is_none() {
+                let cancelled = self.cancels.remove(&slot.req.id);
+                if let Some(stop) =
+                    StopReason::control(cancelled, slot.req.deadline, now)
+                {
+                    slot.stop = Some(stop);
+                }
+            }
+        }
+        super::request::expire_queued(&mut self.queue, &mut self.cancels,
+                                      &mut self.done_early, now);
+    }
+
+    fn admit_and_prefill(&mut self, sink: &mut dyn FnMut(EngineEvent)) {
         let t0 = Instant::now();
         let cfg = self.cfg;
         let vocab = self.vocab;
@@ -141,12 +209,15 @@ impl SimEngine {
         for entry in self.slots.iter_mut() {
             if entry.is_none() {
                 if let Some((req, admitted)) = self.queue.pop_front() {
+                    self.pool_free.fetch_sub(cfg.pages_per_slot,
+                                             Ordering::SeqCst);
                     // "Prefill": fold the prompt into the token-function
                     // state and emit the first token.
                     let mut state = cfg.seed ^ SIM_TAG;
                     for &t in &req.prompt {
                         state = mix(state ^ t as u64);
                     }
+                    sink(EngineEvent::Started { id: req.id });
                     let mut slot = SimSlot {
                         state,
                         len: req.prompt.len(),
@@ -156,7 +227,7 @@ impl SimEngine {
                         admitted,
                         req,
                     };
-                    Self::emit(&cfg, &vocab, &mut slot);
+                    Self::emit(&cfg, &vocab, &mut slot, sink);
                     slot.first_token = Some(Instant::now());
                     *entry = Some(slot);
                     admitted_any = true;
@@ -171,15 +242,21 @@ impl SimEngine {
     /// Generate one token. `slot.len` is NOT advanced here — the caller
     /// accounts cache growth (decode caches the previous token first),
     /// mirroring the engine's prefill/decode split.
-    fn emit(cfg: &SimConfig, vocab: &Vocab, slot: &mut SimSlot) {
+    fn emit(cfg: &SimConfig, vocab: &Vocab, slot: &mut SimSlot,
+            sink: &mut dyn FnMut(EngineEvent)) {
         slot.state = mix(slot.state);
         let tok = Self::token_from(cfg, vocab, slot.state, slot.generated.len());
         slot.generated.push(tok);
         slot.stop = StopReason::decide(tok, vocab.eos, slot.generated.len(),
                                        slot.req.max_new, slot.len, cfg.max_seq);
+        sink(EngineEvent::Token {
+            id: slot.req.id,
+            tok,
+            index: slot.generated.len() - 1,
+        });
     }
 
-    fn decode_step(&mut self) {
+    fn decode_step(&mut self, sink: &mut dyn FnMut(EngineEvent)) {
         let t0 = Instant::now();
         let cfg = self.cfg;
         let vocab = self.vocab;
@@ -187,13 +264,17 @@ impl SimEngine {
             // The previous step's token enters the cache, then the next
             // token is generated (engine decode order).
             slot.len += 1;
-            Self::emit(&cfg, &vocab, slot);
+            Self::emit(&cfg, &vocab, slot, sink);
         }
         self.metrics.decode_step_s.push(t0.elapsed().as_secs_f64());
     }
 
-    fn reap(&mut self) -> Vec<Completion> {
-        let mut out = Vec::new();
+    fn reap_into(&mut self, sink: &mut dyn FnMut(EngineEvent)) {
+        for c in self.done_early.drain(..) {
+            self.metrics.record_completion(c.ttft, c.e2e, c.generated.len(),
+                                           c.stop);
+            sink(EngineEvent::Finished(c));
+        }
         for entry in self.slots.iter_mut() {
             let finished = entry
                 .as_ref()
@@ -201,25 +282,50 @@ impl SimEngine {
                 .unwrap_or(false);
             if finished {
                 let slot = entry.take().unwrap();
+                self.pool_free.fetch_add(self.cfg.pages_per_slot,
+                                         Ordering::SeqCst);
                 let now = Instant::now();
                 let ttft = slot
                     .first_token
                     .map(|t| t - slot.admitted)
                     .unwrap_or_default();
                 let e2e = now - slot.admitted;
-                self.metrics.record_completion(ttft, e2e, slot.generated.len());
-                out.push(Completion {
+                let stop = slot.stop.unwrap();
+                self.metrics.record_completion(ttft, e2e, slot.generated.len(),
+                                               stop);
+                sink(EngineEvent::Finished(Completion {
                     id: slot.req.id,
                     prompt_len: slot.req.prompt.len(),
                     generated: slot.generated,
-                    stop: slot.stop.unwrap(),
+                    stop,
                     ttft,
                     e2e,
                     stats: SeqStats::default(),
-                });
+                }));
             }
         }
-        out
+    }
+
+    /// One engine iteration over the event sink — the single
+    /// implementation both trait entry points (`step`, `step_events`)
+    /// share, and a control-flow mirror of the PJRT engine's
+    /// `step_core`: control stops, an immediate reap (so a cancelled /
+    /// expired slot frees its pages *this* step), then admit-or-decode,
+    /// then the regular reap.
+    fn step_core(&mut self, sink: &mut dyn FnMut(EngineEvent)) -> Result<()> {
+        if self.cfg.step_delay_ms > 0 {
+            std::thread::sleep(std::time::Duration::from_millis(
+                self.cfg.step_delay_ms));
+        }
+        self.apply_control_stops();
+        self.reap_into(sink);
+        if !self.queue.is_empty() && self.slots.iter().any(|s| s.is_none()) {
+            self.admit_and_prefill(sink);
+        } else if DecodeEngine::active(self) > 0 {
+            self.decode_step(sink);
+        }
+        self.reap_into(sink);
+        Ok(())
     }
 
     /// Run everything currently queued to completion.
@@ -242,16 +348,30 @@ impl DecodeEngine for SimEngine {
     }
 
     fn step(&mut self) -> Result<Vec<Completion>> {
-        if self.cfg.step_delay_ms > 0 {
-            std::thread::sleep(std::time::Duration::from_millis(
-                self.cfg.step_delay_ms));
+        let mut out = Vec::new();
+        self.step_core(&mut |ev| {
+            if let EngineEvent::Finished(c) = ev {
+                out.push(c);
+            }
+        })?;
+        Ok(out)
+    }
+
+    fn step_events(&mut self, sink: &mut dyn FnMut(EngineEvent)) -> Result<()> {
+        self.step_core(sink)
+    }
+
+    fn cancel(&mut self, id: u64) -> bool {
+        let known = self
+            .slots
+            .iter()
+            .flatten()
+            .any(|s| s.stop.is_none() && s.req.id == id)
+            || self.queue.iter().any(|(r, _)| r.id == id);
+        if known {
+            self.cancels.insert(id);
         }
-        if !self.queue.is_empty() && self.slots.iter().any(|s| s.is_none()) {
-            self.admit_and_prefill();
-        } else if self.active() > 0 {
-            self.decode_step();
-        }
-        Ok(self.reap())
+        known
     }
 
     fn pending(&self) -> usize {
@@ -271,6 +391,13 @@ impl DecodeEngine for SimEngine {
         self.cfg.max_seq.saturating_sub(3)
     }
 
+    fn idle(&self) -> bool {
+        // Off-slot completions still owed count as work: a step must run
+        // to emit them.
+        self.queue.is_empty() && DecodeEngine::active(self) == 0
+            && self.done_early.is_empty()
+    }
+
     fn take_metrics(&mut self) -> Metrics {
         std::mem::take(&mut self.metrics)
     }
@@ -279,9 +406,10 @@ impl DecodeEngine for SimEngine {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use std::time::Duration;
 
     fn req(id: u64, prompt: Vec<i32>, max_new: usize) -> Request {
-        Request { id, prompt, max_new }
+        Request::new(id, prompt, max_new)
     }
 
     #[test]
@@ -316,6 +444,7 @@ mod tests {
         }
         assert_eq!(eng.metrics.requests_completed, 5);
         assert!(eng.metrics.tokens_generated > 0);
+        assert_eq!(eng.pool_free(), eng.pool_capacity(), "page leak");
     }
 
     #[test]
@@ -336,8 +465,132 @@ mod tests {
                     assert_eq!(g.len(), 12);
                 }
                 StopReason::ContextFull => {}
+                StopReason::Cancelled | StopReason::DeadlineExceeded => {
+                    unreachable!("control stops never come from decide()")
+                }
             }
         }
         assert!(saw_eos && saw_max, "eos={saw_eos} max={saw_max}");
+    }
+
+    #[test]
+    fn step_events_stream_started_tokens_finished_in_order() {
+        let cfg = SimConfig::default();
+        let prompt = vec![4, 9, 13];
+        let mut eng = SimEngine::new(cfg);
+        DecodeEngine::submit(&mut eng, req(7, prompt.clone(), 16));
+        let mut events = Vec::new();
+        while !DecodeEngine::idle(&eng) {
+            eng.step_events(&mut |ev| events.push(ev)).unwrap();
+        }
+        assert!(matches!(events[0], EngineEvent::Started { id: 7 }),
+                "first event must be Started, got {:?}", events[0]);
+        let mut toks = Vec::new();
+        let mut finished = None;
+        for ev in &events[1..] {
+            match ev {
+                EngineEvent::Token { id, tok, index } => {
+                    assert_eq!(*id, 7);
+                    assert!(finished.is_none(), "token after Finished");
+                    assert_eq!(*index, toks.len(), "token indices contiguous");
+                    toks.push(*tok);
+                }
+                EngineEvent::Finished(c) => {
+                    assert!(finished.is_none(), "duplicate Finished");
+                    finished = Some(c.clone());
+                }
+                EngineEvent::Started { .. } => panic!("duplicate Started"),
+            }
+        }
+        let c = finished.expect("no Finished event");
+        assert_eq!(c.generated, toks,
+                   "completion must equal the concatenated token events");
+        let (want, stop) = SimEngine::expected_generation(&cfg, &prompt, 16);
+        assert_eq!(toks, want);
+        assert_eq!(c.stop, stop);
+    }
+
+    #[test]
+    fn cancel_active_request_stops_within_one_step_and_frees_pages() {
+        let cfg = SimConfig { batch: 1, eos_every: 0, ..Default::default() };
+        let mut eng = SimEngine::new(cfg);
+        DecodeEngine::submit(&mut eng, req(1, vec![2, 3, 5], 1000));
+        // Admit + a few decode steps.
+        for _ in 0..4 {
+            DecodeEngine::step(&mut eng).unwrap();
+        }
+        assert_eq!(eng.pool_free(),
+                   eng.pool_capacity() - cfg.pages_per_slot,
+                   "active slot must hold pages");
+        assert!(DecodeEngine::cancel(&mut eng, 1), "engine owns request 1");
+        assert!(!DecodeEngine::cancel(&mut eng, 99), "unknown id refused");
+        let comps = DecodeEngine::step(&mut eng).unwrap();
+        assert_eq!(comps.len(), 1, "cancel resolves at the next step");
+        assert_eq!(comps[0].stop, StopReason::Cancelled);
+        assert_eq!(comps[0].generated.len(), 4,
+                   "partial generation is returned");
+        assert_eq!(eng.pool_free(), eng.pool_capacity(),
+                   "cancelled slot must release its pages");
+        assert_eq!(eng.metrics.requests_cancelled, 1);
+        assert_eq!(eng.metrics.requests_completed, 0,
+                   "cancelled requests are not served completions");
+        assert!(DecodeEngine::idle(&eng));
+    }
+
+    #[test]
+    fn cancel_queued_request_completes_empty_without_taking_a_slot() {
+        // batch 1: the second request stays in the engine queue.
+        let cfg = SimConfig { batch: 1, eos_every: 0, ..Default::default() };
+        let mut eng = SimEngine::new(cfg);
+        DecodeEngine::submit(&mut eng, req(1, vec![2, 3], 6));
+        DecodeEngine::submit(&mut eng, req(2, vec![4, 5], 6));
+        DecodeEngine::step(&mut eng).unwrap(); // admits 1 only
+        assert_eq!(DecodeEngine::pending(&eng), 1);
+        assert!(DecodeEngine::cancel(&mut eng, 2));
+        let comps = DecodeEngine::step(&mut eng).unwrap();
+        let c = comps.iter().find(|c| c.id == 2).expect("cancelled done");
+        assert_eq!(c.stop, StopReason::Cancelled);
+        assert!(c.generated.is_empty(), "never admitted, nothing generated");
+        assert_eq!(DecodeEngine::pending(&eng), 0, "removed from queue");
+        // Request 1 is untouched.
+        let rest = eng.run_to_completion().unwrap();
+        let c1 = rest.iter().find(|c| c.id == 1).expect("request 1 done");
+        let (want, _) = SimEngine::expected_generation(&cfg, &[2, 3], 6);
+        assert_eq!(c1.generated, want);
+        assert_eq!(eng.pool_free(), eng.pool_capacity());
+    }
+
+    #[test]
+    fn deadline_exceeded_stops_mid_decode_with_partial_output() {
+        let cfg = SimConfig { batch: 1, eos_every: 0, step_delay_ms: 2,
+                              ..Default::default() };
+        let mut eng = SimEngine::new(cfg);
+        let deadline = Instant::now() + Duration::from_millis(20);
+        let r = req(5, vec![1, 2, 3], 100_000).with_deadline(deadline);
+        DecodeEngine::submit(&mut eng, r);
+        let comps = eng.run_to_completion().unwrap();
+        assert_eq!(comps.len(), 1);
+        assert_eq!(comps[0].stop, StopReason::DeadlineExceeded);
+        assert!(!comps[0].generated.is_empty(), "ran until the deadline");
+        assert!(comps[0].generated.len() < 100_000, "stopped early");
+        assert_eq!(eng.metrics.requests_deadline_expired, 1);
+        assert_eq!(eng.pool_free(), eng.pool_capacity());
+    }
+
+    #[test]
+    fn deadline_expired_while_queued_completes_without_admission() {
+        let cfg = SimConfig { batch: 1, eos_every: 0, ..Default::default() };
+        let mut eng = SimEngine::new(cfg);
+        DecodeEngine::submit(&mut eng, req(1, vec![7, 8], 4));
+        // Already expired when submitted; batch 1 keeps it queued.
+        let expired = Instant::now() - Duration::from_millis(1);
+        DecodeEngine::submit(&mut eng,
+                             req(2, vec![9, 10], 4).with_deadline(expired));
+        let comps = eng.run_to_completion().unwrap();
+        let c = comps.iter().find(|c| c.id == 2).unwrap();
+        assert_eq!(c.stop, StopReason::DeadlineExceeded);
+        assert!(c.generated.is_empty());
+        assert_eq!(comps.iter().filter(|c| c.id == 1).count(), 1);
+        assert_eq!(eng.metrics.requests_deadline_expired, 1);
     }
 }

@@ -102,7 +102,7 @@ pub fn eval_policy(engine: &mut Engine, task: TaskConfig, n: usize, seed: u64,
         (0..n).map(|_| generate(&vocab, &task, &mut rng)).collect();
     let t0 = std::time::Instant::now();
     for (i, ep) in episodes.iter().enumerate() {
-        engine.submit(Request { id: i as u64, prompt: ep.prompt.clone(), max_new });
+        engine.submit(Request::new(i as u64, ep.prompt.clone(), max_new));
     }
     let completions = engine.run_to_completion()?;
     let mut correct = 0usize;

@@ -25,6 +25,7 @@ USAGE:
   seerattn serve   [--addr HOST:PORT] [--policy P] [--budget TOKENS]
                    [--block-size B] [--shards N] [--gather-threads T]
                    [--max-conns N] [--idle-timeout-ms MS] [--queue-depth N]
+                   [--stream] [--deadline-ms MS]
   seerattn generate [--task easy|hard] [--policy P] [--budget TOKENS] [--n N]
 
 POLICIES: dense | seer | seer-threshold:T | seer-topp:P | oracle | quest
@@ -233,6 +234,15 @@ fn cmd_serve(args: &Args, dir: &PathBuf) -> Result<()> {
         idle_timeout: std::time::Duration::from_millis(
             args.usize_flag("idle-timeout-ms", 30_000) as u64),
         limit: None,
+        // Stream token deltas unless a request opts out with
+        // {"stream": false}; without the flag, requests opt in.
+        stream_by_default: args.flags.contains_key("stream"),
+        // Fleet-wide default deadline; 0 (the default) = unbounded.
+        // Requests may override with {"deadline_ms": N}.
+        deadline: match args.usize_flag("deadline-ms", 0) {
+            0 => None,
+            ms => Some(std::time::Duration::from_millis(ms as u64)),
+        },
     };
     // Each shard thread constructs its own runtime + engine (the engine
     // holds an Rc and never crosses threads); the factory just captures

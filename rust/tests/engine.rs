@@ -30,7 +30,7 @@ fn engine(rt: &Rc<Runtime>, ecfg: EngineConfig) -> Engine {
 
 fn gen_tokens(eng: &mut Engine, prompts: &[Vec<i32>], max_new: usize) -> Vec<Vec<i32>> {
     for (i, p) in prompts.iter().enumerate() {
-        eng.submit(Request { id: i as u64, prompt: p.clone(), max_new });
+        eng.submit(Request::new(i as u64, p.clone(), max_new));
     }
     let mut out = vec![Vec::new(); prompts.len()];
     for c in eng.run_to_completion().unwrap() {
@@ -160,7 +160,7 @@ fn recall_tracking_produces_values() {
         ..Default::default()
     });
     for (i, p) in prompts.iter().enumerate() {
-        eng.submit(Request { id: i as u64, prompt: p.clone(), max_new: 8 });
+        eng.submit(Request::new(i as u64, p.clone(), 8));
     }
     let comps = eng.run_to_completion().unwrap();
     for c in comps {
@@ -198,7 +198,7 @@ fn trace_runner_serves_poisson_trace() {
         policy: Policy::GateBudget { budget_tokens: 128 },
         ..Default::default()
     });
-    let runner = TraceRunner { replay: Replay::Virtual };
+    let runner = TraceRunner { replay: Replay::Virtual, ..Default::default() };
     let comps = runner.run(&mut eng, &trace).unwrap();
     assert_eq!(comps.len(), 10);
     let mut ids: Vec<u64> = comps.iter().map(|c| c.id).collect();

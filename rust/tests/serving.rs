@@ -18,6 +18,13 @@
 //!     structured `overloaded` replies — no hangs, no panics.
 //!  5. The persistent-pool parallel gather is bit-identical to the
 //!     serial gather over the arena's disjoint dirty-extent rows.
+//!  6. The streaming lifecycle (ISSUE 4): a `{"stream": true}` request's
+//!     concatenated delta frames are byte-identical to the non-streaming
+//!     reply for the same prompt, over real sockets with adversarial
+//!     frame segmentation; a client disconnect mid-decode *cancels* the
+//!     decode at its shard and releases its KV pages; a per-request
+//!     deadline stops a decode with `"stop": "deadline"` and a partial
+//!     generation.
 
 use std::collections::BTreeMap;
 use std::io::{BufRead, BufReader, Write};
@@ -69,7 +76,7 @@ fn request_line(id: usize, prompt: &[i32], max_new: usize) -> String {
 #[test]
 fn four_shards_match_single_engine_per_request() {
     let trace = mixed_trace(48, 7);
-    let runner = TraceRunner { replay: Replay::Virtual };
+    let runner = TraceRunner { replay: Replay::Virtual, ..Default::default() };
 
     // Baseline: one engine on the caller's thread.
     let mut single = SimEngine::new(SimConfig::default());
@@ -101,7 +108,8 @@ fn real_time_replay_matches_virtual_per_request() {
     let trace = mixed_trace(8, 11);
     let virt = {
         let mut group = sim_group(2);
-        let out = by_id(TraceRunner { replay: Replay::Virtual }
+        let out = by_id(TraceRunner { replay: Replay::Virtual,
+                                      ..Default::default() }
             .run_group(&mut group, &trace)
             .unwrap());
         group.shutdown().unwrap();
@@ -109,7 +117,8 @@ fn real_time_replay_matches_virtual_per_request() {
     };
     let real = {
         let mut group = sim_group(2);
-        let out = by_id(TraceRunner { replay: Replay::RealTime }
+        let out = by_id(TraceRunner { replay: Replay::RealTime,
+                                      ..Default::default() }
             .run_group(&mut group, &trace)
             .unwrap());
         group.shutdown().unwrap();
@@ -127,7 +136,7 @@ fn real_time_replay_matches_virtual_per_request() {
 #[test]
 fn reactor_front_end_matches_blocking_baseline_on_poisson_trace() {
     let trace = mixed_trace(48, 7);
-    let runner = TraceRunner { replay: Replay::Virtual };
+    let runner = TraceRunner { replay: Replay::Virtual, ..Default::default() };
     let mut single = SimEngine::new(SimConfig::default());
     let base = by_id(runner.run(&mut single, &trace).unwrap());
 
@@ -189,12 +198,7 @@ fn reactor_front_end_matches_blocking_baseline_on_poisson_trace() {
     for (id, (_plen, want_gen, want_stop)) in &base {
         let (gen, stop) = got.get(id).expect("missing reply");
         assert_eq!(gen, want_gen, "request {id} diverged from blocking baseline");
-        let want_stop = match want_stop {
-            StopReason::Eos => "eos",
-            StopReason::MaxNewTokens => "max_new",
-            StopReason::ContextFull => "context_full",
-        };
-        assert_eq!(stop, want_stop, "request {id} stop reason");
+        assert_eq!(stop, want_stop.as_str(), "request {id} stop reason");
     }
 }
 
@@ -204,7 +208,7 @@ fn reactor_front_end_matches_blocking_baseline_on_poisson_trace() {
 
 #[test]
 fn virtual_replay_is_deterministic_under_fixed_seed() {
-    let runner = TraceRunner { replay: Replay::Virtual };
+    let runner = TraceRunner { replay: Replay::Virtual, ..Default::default() };
     let mut outputs = Vec::new();
     for _ in 0..2 {
         // Regenerate the trace from the same seed each time: trace
@@ -279,12 +283,7 @@ fn tcp_server_round_trips_pipelined_requests() {
         let (generated, stop) = seen.get(&(100 + i)).expect("client id");
         let (want, want_stop) = SimEngine::expected_generation(&cfg, p, 10);
         assert_eq!(generated, &want, "request {i}");
-        let want_stop = match want_stop {
-            StopReason::Eos => "eos",
-            StopReason::MaxNewTokens => "max_new",
-            StopReason::ContextFull => "context_full",
-        };
-        assert_eq!(stop, want_stop);
+        assert_eq!(stop, want_stop.as_str());
     }
 }
 
@@ -343,6 +342,7 @@ fn slow_loris_is_evicted_while_inflight_request_completes() {
         max_conns: 8,
         idle_timeout: Duration::from_millis(150),
         limit: Some(1),
+        ..Default::default()
     };
     let srv = std::thread::spawn(move || {
         server::serve_on(listener, group, cfg).unwrap();
@@ -402,6 +402,7 @@ fn connection_cap_rejects_excess_clients_while_decode_continues() {
         max_conns: 1,
         idle_timeout: Duration::from_secs(10),
         limit: Some(1),
+        ..Default::default()
     };
     let srv = std::thread::spawn(move || {
         server::serve_on(listener, group, cfg).unwrap();
@@ -465,6 +466,7 @@ fn burst_beyond_queue_depth_gets_structured_overloaded_replies() {
         max_conns: 8,
         idle_timeout: Duration::from_secs(10),
         limit: Some(2),
+        ..Default::default()
     };
     let srv = std::thread::spawn(move || {
         server::serve_on(listener, group, cfg).unwrap();
@@ -517,6 +519,189 @@ fn burst_beyond_queue_depth_gets_structured_overloaded_replies() {
             &sim_cfg, &[5, 6, 7 + *id as i32], 40);
         assert_eq!(generated, &want, "request {id}");
     }
+}
+
+// ---------------------------------------------------------------------
+// Streaming lifecycle: delta parity, cancel-on-disconnect KV release,
+// and per-request deadlines (ISSUE 4).
+// ---------------------------------------------------------------------
+
+/// Split `line` into `chunk`-byte writes with small pauses — adversarial
+/// segmentation: the reactor must reassemble the frame from arbitrary
+/// fragments.
+fn write_segmented(conn: &mut TcpStream, line: &str, chunk: usize) {
+    let bytes = line.as_bytes();
+    let mut i = 0;
+    while i < bytes.len() {
+        let end = (i + chunk).min(bytes.len());
+        conn.write_all(&bytes[i..end]).unwrap();
+        conn.flush().unwrap();
+        std::thread::sleep(Duration::from_millis(1));
+        i = end;
+    }
+    conn.write_all(b"\n").unwrap();
+    conn.flush().unwrap();
+}
+
+#[test]
+fn streaming_deltas_concatenate_to_the_nonstreaming_reply() {
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    let group = sim_group(2);
+    let cfg = ServeConfig { limit: Some(2), ..Default::default() };
+    let srv = std::thread::spawn(move || {
+        server::serve_on(listener, group, cfg).unwrap();
+    });
+
+    let prompt = vec![6, 28, 496, 3];
+    // Non-streaming baseline request on its own connection.
+    let mut plain = TcpStream::connect(addr).unwrap();
+    writeln!(plain, "{}", request_line(10, &prompt, 24)).unwrap();
+    plain.flush().unwrap();
+
+    // Streaming request, same prompt, written in 3-byte fragments.
+    let mut stream = TcpStream::connect(addr).unwrap();
+    let toks: Vec<String> = prompt.iter().map(|t| t.to_string()).collect();
+    let line = format!(
+        "{{\"id\": 11, \"prompt\": [{}], \"max_new\": 24, \"stream\": true}}",
+        toks.join(", "));
+    write_segmented(&mut stream, &line, 3);
+
+    // Drain the streaming connection: delta frames, then the terminal
+    // reply (the only line carrying "stop").
+    let mut deltas: Vec<i32> = Vec::new();
+    let mut reader = BufReader::new(stream);
+    let terminal = loop {
+        let mut l = String::new();
+        assert!(reader.read_line(&mut l).unwrap() > 0,
+                "EOF before terminal reply");
+        let j = Json::parse(&l).unwrap_or_else(|_| panic!("bad frame {l:?}"));
+        assert!(j.get("error").is_err(), "unexpected error {l:?}");
+        assert_eq!(j.get("id").unwrap().as_i64().unwrap(), 11,
+                   "client id restored on every frame");
+        if j.opt("stop").is_some() {
+            break j;
+        }
+        assert_eq!(j.get("index").unwrap().as_i64().unwrap() as usize,
+                   deltas.len(), "delta frames arrive in order");
+        for t in j.get("delta").unwrap().as_arr().unwrap() {
+            deltas.push(t.as_i64().unwrap() as i32);
+        }
+    };
+    assert!(!deltas.is_empty(), "at least one delta before Finished");
+
+    let mut plain_reader = BufReader::new(plain);
+    let mut l = String::new();
+    plain_reader.read_line(&mut l).unwrap();
+    let j = Json::parse(&l).unwrap();
+    assert_eq!(j.get("id").unwrap().as_i64().unwrap(), 10);
+    let plain_gen: Vec<i32> = j
+        .get("generated").unwrap().as_arr().unwrap()
+        .iter().map(|t| t.as_i64().unwrap() as i32).collect();
+    srv.join().unwrap();
+
+    let stream_gen: Vec<i32> = terminal
+        .get("generated").unwrap().as_arr().unwrap()
+        .iter().map(|t| t.as_i64().unwrap() as i32).collect();
+    assert_eq!(deltas, stream_gen,
+               "concatenated deltas != streaming terminal reply");
+    assert_eq!(stream_gen, plain_gen,
+               "streaming and non-streaming replies diverged");
+    assert_eq!(terminal.get("stop").unwrap().as_str().unwrap(),
+               j.get("stop").unwrap().as_str().unwrap());
+    let (want, _) =
+        SimEngine::expected_generation(&SimConfig::default(), &prompt, 24);
+    assert_eq!(plain_gen, want, "both must equal the sim reference");
+}
+
+#[test]
+fn disconnect_mid_decode_cancels_and_releases_kv_pages() {
+    use std::sync::atomic::{AtomicUsize, Ordering};
+    use std::sync::Arc;
+
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    // Slow single-slot engine: the request decodes for ~1s unless
+    // cancelled. The shared gauge watches its simulated KV pool from
+    // outside the shard thread.
+    let sim_cfg = SimConfig { batch: 1, eos_every: 0, step_delay_ms: 2,
+                              ..Default::default() };
+    let capacity = sim_cfg.batch * sim_cfg.pages_per_slot;
+    let gauge = Arc::new(AtomicUsize::new(0));
+    let factory_gauge = gauge.clone();
+    let group: EngineGroup<SimEngine> = EngineGroup::new(1, move |_| {
+        Ok(SimEngine::with_pool_gauge(sim_cfg, factory_gauge.clone()))
+    })
+    .unwrap();
+    // limit 1: the cancelled completion is the only one the server needs
+    // to collect before draining and shutting down.
+    let cfg = ServeConfig {
+        max_conns: 4,
+        idle_timeout: Duration::from_secs(10),
+        limit: Some(1),
+        ..Default::default()
+    };
+    let srv = std::thread::spawn(move || {
+        server::serve_on(listener, group, cfg).unwrap();
+    });
+
+    // Streaming request so the client *knows* decode is in progress
+    // before disconnecting.
+    let conn = TcpStream::connect(addr).unwrap();
+    {
+        let mut w = conn.try_clone().unwrap();
+        writeln!(w, "{{\"id\": 1, \"prompt\": [3, 7, 9], \"max_new\": 500, \
+                     \"stream\": true}}")
+            .unwrap();
+        w.flush().unwrap();
+    }
+    let mut reader = BufReader::new(conn);
+    let mut l = String::new();
+    reader.read_line(&mut l).unwrap();
+    let j = Json::parse(&l).unwrap_or_else(|_| panic!("bad frame {l:?}"));
+    assert!(j.get("delta").is_ok(), "expected a delta frame, got {l:?}");
+    assert_eq!(gauge.load(Ordering::SeqCst), capacity - sim_cfg.pages_per_slot,
+               "mid-decode the slot must hold its pages");
+
+    // Disconnect mid-generation: both socket halves close; the server
+    // reads EOF and must propagate a cancel instead of orphaning the
+    // ~1s decode (limit=1 means the server only exits if the cancel
+    // produces the completion).
+    drop(reader);
+    srv.join().unwrap();
+    assert_eq!(gauge.load(Ordering::SeqCst), capacity,
+               "cancelled request must release its KV pages");
+}
+
+#[test]
+fn per_request_deadline_returns_partial_generation_over_socket() {
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    let sim_cfg = SimConfig { batch: 1, eos_every: 0, step_delay_ms: 2,
+                              ..Default::default() };
+    let group: EngineGroup<SimEngine> =
+        EngineGroup::new(1, move |_| Ok(SimEngine::new(sim_cfg))).unwrap();
+    let cfg = ServeConfig { limit: Some(1), ..Default::default() };
+    let srv = std::thread::spawn(move || {
+        server::serve_on(listener, group, cfg).unwrap();
+    });
+
+    let mut conn = TcpStream::connect(addr).unwrap();
+    // Without the deadline this would decode for ~100000 steps; the
+    // 40ms deadline must cut it short with a partial reply.
+    writeln!(conn, "{{\"id\": 4, \"prompt\": [2, 4, 8], \"max_new\": 100000, \
+                   \"deadline_ms\": 40}}")
+        .unwrap();
+    conn.flush().unwrap();
+    let mut reader = BufReader::new(conn);
+    let mut l = String::new();
+    reader.read_line(&mut l).unwrap();
+    let j = Json::parse(&l).unwrap_or_else(|_| panic!("bad reply {l:?}"));
+    assert_eq!(j.get("id").unwrap().as_i64().unwrap(), 4);
+    assert_eq!(j.get("stop").unwrap().as_str().unwrap(), "deadline");
+    let n = j.get("generated").unwrap().as_arr().unwrap().len();
+    assert!(n < 100_000, "deadline must stop the decode early (got {n})");
+    srv.join().unwrap();
 }
 
 // ---------------------------------------------------------------------

@@ -25,6 +25,13 @@ cargo bench --manifest-path rust/Cargo.toml --bench decode_hot_path
 echo "== gate_overhead =="
 cargo bench --manifest-path rust/Cargo.toml --bench gate_overhead
 
+# Streaming lifecycle smoke: one {"stream": true} request through the
+# real reactor + shard + SimEngine stack over a socket (asserts delta
+# parity; cheap by construction, so it runs in --smoke too and the
+# event path can never rot uncompiled).
+echo "== serving_stream (streaming e2e smoke) =="
+cargo bench --manifest-path rust/Cargo.toml --bench serving_stream
+
 # The end-to-end coordinator bench needs the pjrt feature, a real xla
 # backend in rust/vendor/xla, and `make artifacts`; opt in explicitly.
 if [[ "${SEERATTN_PJRT_BENCH:-0}" == "1" ]]; then
