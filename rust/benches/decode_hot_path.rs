@@ -1,7 +1,9 @@
 //! Decode hot-path benchmark: one synthetic decode step (gate scoring,
 //! block selection, staged gather) per policy, **optimized vs the seed
-//! implementation in the same run**, plus a steady-state allocation
-//! check.
+//! implementation in the same run**, a per-stage breakdown
+//! (score / softmax / select / gather), a same-run **SIMD vs
+//! forced-scalar** comparison per policy, plus a steady-state
+//! allocation check.
 //!
 //! The paper's speedup argument is that sparse decode cost scales with
 //! the token budget, not the context; this bench measures the host-side
@@ -9,13 +11,18 @@
 //! "reference" closures reproduce the seed's behaviour exactly: fresh
 //! `vec![0f32; ..]` staging per call, `Vec`-returning score/top-k paths,
 //! and per-head selection clones. The "optimized" closures use the
-//! persistent [`StagingArena`], `*_into` scoring, and
+//! persistent [`StagingArena`], `*_into` scoring over the
+//! runtime-dispatched SIMD kernels (`util::simd`), and
 //! `select_nth_unstable_by` partial top-k — and are asserted to perform
 //! **zero heap allocation** in steady state via a counting global
-//! allocator.
+//! allocator. Before timing the SIMD section, scores, selections, and
+//! staged buffers are asserted **bit-identical** between auto-dispatch
+//! and the forced-scalar path.
 //!
 //! Writes `BENCH_decode.json` at the repo root (next PRs diff against
-//! it). Everything is seeded; pure host code, no PJRT needed.
+//! it); the `config.simd` block records the CPU features and dispatch
+//! target so numbers are comparable across machines. Everything is
+//! seeded; pure host code, no PJRT needed.
 
 use seerattn::coordinator::gather::{gather_one_dense, gather_one_sparse,
                                     gather_sparse_into, DenseGeom, GatherJob,
@@ -30,9 +37,10 @@ use seerattn::sparse::policy::{select_budget, select_budget_into,
 use seerattn::sparse::quest::QuestMeta;
 use seerattn::sparse::topk::{merge_mandatory, topk_indices, TopkScratch};
 use seerattn::util::alloc_count::{count_allocs, CountingAlloc};
-use seerattn::util::bench::bench;
+use seerattn::util::bench::{bench, BenchResult};
 use seerattn::util::json::Json;
 use seerattn::util::rng::Rng;
+use seerattn::util::simd;
 
 // Counting allocator (shared harness, see util::alloc_count): only
 // counts while armed, so the bench's own bookkeeping (Series pushes,
@@ -57,6 +65,9 @@ const BATCH: usize = 4;
 /// partial last block is exercised.
 const CTX: usize = 487;
 const BUDGET_TOKENS: usize = 128;
+/// Threshold-mode cutoff, shared by the fused step, the stage-isolated
+/// select closure, and the seed reference so they measure one workload.
+const THRESHOLD: f32 = 0.04;
 /// Compiled staging variants a real manifest would carry.
 const SEL_VARIANTS: [usize; 4] = [64, 128, 256, 512];
 
@@ -158,7 +169,7 @@ impl BenchPolicy {
 fn hot_step(fx: &Fixture, policy: BenchPolicy, st: &mut HotState) -> u64 {
     let c = &fx.c;
     let bs = c.block_size;
-    let (hkv, h_all, dh, g) = (c.n_kv_heads, c.n_heads, c.head_dim, c.group_size);
+    let (h_all, dh, g) = (c.n_heads, c.head_dim, c.group_size);
     if st.sel_bufs.len() < BATCH {
         st.sel_bufs.resize_with(BATCH, SelectionBuf::new);
     }
@@ -183,7 +194,7 @@ fn hot_step(fx: &Fixture, policy: BenchPolicy, st: &mut HotState) -> u64 {
                         gate::softmax_rows(row, n);
                     }
                 }
-                select_threshold_into(&st.scores, 0.04, partial, buf);
+                select_threshold_into(&st.scores, THRESHOLD, partial, buf);
             }
             BenchPolicy::Quest => {
                 let k = (BUDGET_TOKENS / bs).max(1);
@@ -203,9 +214,17 @@ fn hot_step(fx: &Fixture, policy: BenchPolicy, st: &mut HotState) -> u64 {
             }
         }
     }
-    // Gather — through the exact production helpers the engine's serial
-    // path uses (coordinator::gather), so the bench times the shipped
-    // gather code, not a copy of it.
+    gather_stage(fx, policy, st)
+}
+
+/// The gather half of [`hot_step`] — also timed in isolation for the
+/// per-stage breakdown. Goes through the exact production helpers the
+/// engine's serial path uses (coordinator::gather), so the bench times
+/// the shipped gather code, not a copy of it.
+fn gather_stage(fx: &Fixture, policy: BenchPolicy, st: &mut HotState) -> u64 {
+    let c = &fx.c;
+    let bs = c.block_size;
+    let (hkv, h_all, dh, g) = (c.n_kv_heads, c.n_heads, c.head_dim, c.group_size);
     let mut staged = 0u64;
     if policy == BenchPolicy::Dense {
         let s = c.max_seq;
@@ -257,6 +276,212 @@ fn hot_step(fx: &Fixture, policy: BenchPolicy, st: &mut HotState) -> u64 {
 }
 
 // ---------------------------------------------------------------------
+// Stage-isolated closures for the per-stage breakdown. Each is
+// idempotent (safe to call repeatedly under the timer) and
+// allocation-free once warmed.
+// ---------------------------------------------------------------------
+
+/// Pristine per-slot score rows, computed once outside the timers:
+/// raw gate rows, softmaxed gate rows, and per-query-head Quest rows.
+struct PreparedScores {
+    raw: Vec<Vec<Vec<f32>>>,
+    softmaxed: Vec<Vec<Vec<f32>>>,
+    quest: Vec<Vec<Vec<f32>>>,
+}
+
+fn prepare_scores(fx: &Fixture) -> PreparedScores {
+    let c = &fx.c;
+    let (h_all, dh, g) = (c.n_heads, c.head_dim, c.group_size);
+    let mut raw = Vec::new();
+    let mut softmaxed = Vec::new();
+    let mut quest = Vec::new();
+    for slot in &fx.slots {
+        let mut rows = Vec::new();
+        slot.kcomp.score_into(&slot.q_gate, &mut rows);
+        raw.push(rows.clone());
+        for row in &mut rows {
+            let n = row.len();
+            if n > 0 {
+                gate::softmax_rows(row, n);
+            }
+        }
+        softmaxed.push(rows);
+        let mut qrows = Vec::new();
+        for qh in 0..h_all {
+            let mut out = Vec::new();
+            let q = &slot.q_rope[qh * dh..(qh + 1) * dh];
+            slot.quest.scores_into(qh / g, q, &mut out);
+            qrows.push(out);
+        }
+        quest.push(qrows);
+    }
+    PreparedScores { raw, softmaxed, quest }
+}
+
+/// Scoring only: gate dot-product sweeps (or Quest min/max bounds).
+/// This is the stage the SIMD kernels accelerate most directly.
+fn stage_score(fx: &Fixture, policy: BenchPolicy, st: &mut HotState) {
+    let c = &fx.c;
+    let (h_all, dh, g) = (c.n_heads, c.head_dim, c.group_size);
+    match policy {
+        BenchPolicy::Dense => {}
+        BenchPolicy::GateBudget | BenchPolicy::GateThreshold => {
+            for slot in &fx.slots {
+                slot.kcomp.score_into(&slot.q_gate, &mut st.scores);
+            }
+        }
+        BenchPolicy::Quest => {
+            for slot in &fx.slots {
+                for qh in 0..h_all {
+                    let q = &slot.q_rope[qh * dh..(qh + 1) * dh];
+                    slot.quest.scores_into(qh / g, q, &mut st.quest_row);
+                    std::hint::black_box(&st.quest_row);
+                }
+            }
+        }
+    }
+}
+
+/// Softmax only (threshold mode): refill scratch from the pristine raw
+/// rows, then softmax in place. The refill copy is part of the timed
+/// closure (it is what makes repeated timing possible) but is a small
+/// fraction of the exp-dominated stage.
+fn stage_softmax(prep: &PreparedScores, st: &mut HotState) {
+    for src in &prep.raw {
+        seerattn::util::buf::resize_rows(&mut st.scores, src.len());
+        for (dst, s) in st.scores.iter_mut().zip(src) {
+            dst.resize(s.len(), 0.0);
+            dst.copy_from_slice(s);
+            let n = dst.len();
+            if n > 0 {
+                gate::softmax_rows(dst, n);
+            }
+        }
+    }
+}
+
+/// Selection only, over pristine (pre-scored, pre-softmaxed) rows.
+fn stage_select(fx: &Fixture, policy: BenchPolicy, prep: &PreparedScores,
+                st: &mut HotState) {
+    let c = &fx.c;
+    let bs = c.block_size;
+    let h_all = c.n_heads;
+    if st.sel_bufs.len() < BATCH {
+        st.sel_bufs.resize_with(BATCH, SelectionBuf::new);
+    }
+    for (i, slot) in fx.slots.iter().enumerate() {
+        let kc = &slot.kcomp;
+        let partial = if kc.has_partial() { Some(kc.partial_index()) } else { None };
+        let n_complete = kc.n_complete();
+        let buf = &mut st.sel_bufs[i];
+        match policy {
+            BenchPolicy::Dense => buf.set_dense(),
+            BenchPolicy::GateBudget => {
+                let k = (BUDGET_TOKENS / bs).max(1);
+                select_budget_into(&prep.raw[i], k, partial, &mut st.topk, buf);
+            }
+            BenchPolicy::GateThreshold => {
+                select_threshold_into(&prep.softmaxed[i], THRESHOLD, partial, buf);
+            }
+            BenchPolicy::Quest => {
+                let k = (BUDGET_TOKENS / bs).max(1);
+                let take = if partial.is_some() { k.saturating_sub(1) } else { k };
+                buf.begin(SelKind::PerHead, h_all);
+                for qh in 0..h_all {
+                    let row = &prep.quest[i][qh];
+                    let sel = buf.row_mut(qh);
+                    let n = n_complete.min(row.len());
+                    st.topk.topk_into(&row[..n], take, sel);
+                    if let Some(p) = partial {
+                        merge_mandatory(sel, p);
+                    }
+                }
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// SIMD-vs-scalar bit identity: scores, selections, staged buffers.
+// ---------------------------------------------------------------------
+
+fn bits(x: &[f32]) -> Vec<u32> {
+    x.iter().map(|v| v.to_bits()).collect()
+}
+
+struct Snapshot {
+    scores: Vec<Vec<u32>>,
+    sels: Vec<Vec<Vec<i32>>>,
+    staged_k: Vec<u32>,
+    staged_v: Vec<u32>,
+    staged_mask: Vec<u32>,
+    dirty: Vec<usize>,
+}
+
+/// One full step in the *current* dispatch mode, capturing everything
+/// the acceptance criteria require to be mode-invariant.
+fn snapshot(fx: &Fixture, policy: BenchPolicy) -> Snapshot {
+    let c = &fx.c;
+    let (hkv, h_all, bs) = (c.n_kv_heads, c.n_heads, c.block_size);
+    let mut st = HotState::default();
+    hot_step(fx, policy, &mut st);
+    let prep = prepare_scores(fx);
+    let mut scores = Vec::new();
+    for i in 0..BATCH {
+        let rows = match policy {
+            BenchPolicy::Dense => continue,
+            BenchPolicy::GateBudget => &prep.raw[i],
+            BenchPolicy::GateThreshold => &prep.softmaxed[i],
+            BenchPolicy::Quest => &prep.quest[i],
+        };
+        for row in rows {
+            scores.push(bits(row));
+        }
+    }
+    let sels: Vec<Vec<Vec<i32>>> = st.sel_bufs[..BATCH]
+        .iter()
+        .map(|b| b.rows().to_vec())
+        .collect();
+    let (staged_k, staged_v, staged_mask, dirty) = if policy == BenchPolicy::Dense {
+        let set = st.arena.dense_peek().expect("dense set staged");
+        (bits(set.k.as_f32().unwrap()), bits(set.v.as_f32().unwrap()),
+         Vec::new(), set.dirty().to_vec())
+    } else {
+        let per_head = policy == BenchPolicy::Quest;
+        let heads = if per_head { h_all } else { hkv };
+        let mut max_tokens = 1usize;
+        for (i, buf) in st.sel_bufs[..BATCH].iter().enumerate() {
+            for row in buf.rows() {
+                let t: usize = row
+                    .iter()
+                    .map(|&j| fx.slots[i].kv.tokens_in_block(j as usize, bs))
+                    .sum();
+                max_tokens = max_tokens.max(t);
+            }
+        }
+        let t_cap = sel_variant_for(max_tokens);
+        let set = st.arena.sparse_peek(heads, t_cap).expect("sparse set staged");
+        (bits(set.k.as_f32().unwrap()), bits(set.v.as_f32().unwrap()),
+         bits(set.mask.as_f32().unwrap()), set.dirty().to_vec())
+    };
+    Snapshot { scores, sels, staged_k, staged_v, staged_mask, dirty }
+}
+
+fn assert_dispatch_bit_identity(fx: &Fixture, policy: BenchPolicy) {
+    simd::set_scalar(true);
+    let s = snapshot(fx, policy);
+    simd::set_scalar(false);
+    let v = snapshot(fx, policy);
+    let name = policy.name();
+    assert_eq!(s.scores, v.scores, "{name}: scores diverged across dispatch");
+    assert_eq!(s.sels, v.sels, "{name}: selections diverged across dispatch");
+    assert_eq!(s.staged_k, v.staged_k, "{name}: staged K diverged");
+    assert_eq!(s.staged_v, v.staged_v, "{name}: staged V diverged");
+    assert_eq!(s.staged_mask, v.staged_mask, "{name}: staged mask diverged");
+    assert_eq!(s.dirty, v.dirty, "{name}: dirty extents diverged");
+}
+
+// ---------------------------------------------------------------------
 // Reference step: the seed implementation — fresh full-size zeroed
 // staging, Vec-returning scores/top-k, per-head row clones.
 // ---------------------------------------------------------------------
@@ -286,7 +511,7 @@ fn ref_step(fx: &Fixture, policy: BenchPolicy) -> u64 {
                         gate::softmax_rows(row, n);
                     }
                 }
-                selections.push((false, select_threshold(&scores, 0.04, partial)));
+                selections.push((false, select_threshold(&scores, THRESHOLD, partial)));
             }
             BenchPolicy::Quest => {
                 let k = (BUDGET_TOKENS / bs).max(1);
@@ -379,6 +604,10 @@ fn ref_step(fx: &Fixture, policy: BenchPolicy) -> u64 {
 
 // ---------------------------------------------------------------------
 
+fn ms(r: &BenchResult) -> Json {
+    Json::Num(r.median_s * 1e3)
+}
+
 fn main() {
     let seed: u64 = std::env::var("SEERATTN_BENCH_SEED")
         .ok()
@@ -399,19 +628,30 @@ fn main() {
         BenchPolicy::GateThreshold,
         BenchPolicy::Quest,
     ];
+    let feats = simd::cpu_features();
 
     println!("decode hot path: synthetic step (select + gather), batch {BATCH}, \
-              ctx {CTX}, block {}, budget {BUDGET_TOKENS}\n", fx.c.block_size);
+              ctx {CTX}, block {}, budget {BUDGET_TOKENS}", fx.c.block_size);
+    println!("simd dispatch: {} (detected {}; avx2={} fma={} neon={})\n",
+             simd::target_name(), simd::detected().name(), feats.avx2,
+             feats.fma, feats.neon);
 
     let mut policy_json: Vec<(String, Json)> = Vec::new();
     let mut total_allocs = 0u64;
     for policy in policies {
+        // Scores / selections / staged buffers must be bit-identical
+        // between auto-dispatch and the forced-scalar fallback before
+        // anything is timed.
+        assert_dispatch_bit_identity(&fx, policy);
+
         let mut st = HotState::default();
         // Warm up: create arena sets, grow scratch to steady state.
         for _ in 0..3 {
             std::hint::black_box(hot_step(&fx, policy, &mut st));
         }
-        // Steady-state allocation check: 20 full steps, zero allocs.
+        // Steady-state allocation check: 20 full steps, zero allocs
+        // (the SIMD kernels are stack-only, so this gate holds across
+        // dispatch targets).
         let allocs = count_allocs(|| {
             for _ in 0..20 {
                 std::hint::black_box(hot_step(&fx, policy, &mut st));
@@ -437,7 +677,92 @@ fn main() {
         println!("{}", opt.report());
         let speedup = reference.median_s / opt.median_s.max(1e-12);
         println!("  -> speedup x{speedup:.2}, staged {staged} B/step, \
-                  steady-state allocs {allocs}\n");
+                  steady-state allocs {allocs}");
+
+        // Per-stage breakdown (auto dispatch). Dense has no scoring or
+        // softmax stage — those fields are null rather than a timing of
+        // an empty closure.
+        let prep = prepare_scores(&fx);
+        let score = (policy != BenchPolicy::Dense).then(|| {
+            bench(&format!("{} stage: score", policy.name()), warmup, iters,
+                  budget, || {
+                stage_score(&fx, policy, &mut st);
+            })
+        });
+        let softmax = (policy == BenchPolicy::GateThreshold).then(|| {
+            bench(&format!("{} stage: softmax", policy.name()), warmup, iters,
+                  budget, || {
+                stage_softmax(&prep, &mut st);
+            })
+        });
+        let select = bench(&format!("{} stage: select", policy.name()), warmup,
+                           iters, budget, || {
+            stage_select(&fx, policy, &prep, &mut st);
+        });
+        // Re-run a full step so sel_bufs match the policy again before
+        // the gather-only timer (stage_select leaves them consistent,
+        // but be explicit).
+        hot_step(&fx, policy, &mut st);
+        let gather = bench(&format!("{} stage: gather", policy.name()), warmup,
+                           iters, budget, || {
+            std::hint::black_box(gather_stage(&fx, policy, &mut st));
+        });
+        if let Some(sc) = &score {
+            println!("{}", sc.report());
+        }
+        if let Some(sm) = &softmax {
+            println!("{}", sm.report());
+        }
+        println!("{}", select.report());
+        println!("{}", gather.report());
+
+        // Same-run SIMD vs forced-scalar: full step and scoring stage.
+        simd::set_scalar(true);
+        let step_scalar = bench(&format!("{} step (scalar)", policy.name()),
+                                warmup, iters, budget, || {
+            std::hint::black_box(hot_step(&fx, policy, &mut st));
+        });
+        let score_scalar = score.as_ref().map(|_| {
+            bench(&format!("{} score (scalar)", policy.name()), warmup, iters,
+                  budget, || {
+                stage_score(&fx, policy, &mut st);
+            })
+        });
+        simd::set_scalar(false);
+        let simd_speedup = step_scalar.median_s / opt.median_s.max(1e-12);
+        println!("{}", step_scalar.report());
+        match (&score, &score_scalar) {
+            (Some(sa), Some(ss)) => {
+                let score_speedup = ss.median_s / sa.median_s.max(1e-12);
+                println!("{}", ss.report());
+                println!("  -> simd step x{simd_speedup:.2}, \
+                          scoring stage x{score_speedup:.2}\n");
+            }
+            _ => println!("  -> simd step x{simd_speedup:.2} \
+                           (no scoring stage)\n"),
+        }
+
+        let stages = Json::obj(vec![
+            ("score_ms", score.as_ref().map(ms).unwrap_or(Json::Null)),
+            ("softmax_ms", softmax.as_ref().map(ms).unwrap_or(Json::Null)),
+            ("select_ms", ms(&select)),
+            ("gather_ms", ms(&gather)),
+        ]);
+        let score_speedup_json = match (&score, &score_scalar) {
+            (Some(sa), Some(ss)) => {
+                Json::Num(ss.median_s / sa.median_s.max(1e-12))
+            }
+            _ => Json::Null,
+        };
+        let simd_json = Json::obj(vec![
+            ("step_auto_ms", ms(&opt)),
+            ("step_scalar_ms", ms(&step_scalar)),
+            ("simd_speedup", Json::Num(simd_speedup)),
+            ("score_auto_ms", score.as_ref().map(ms).unwrap_or(Json::Null)),
+            ("score_scalar_ms",
+             score_scalar.as_ref().map(ms).unwrap_or(Json::Null)),
+            ("score_speedup", score_speedup_json),
+        ]);
         policy_json.push((
             policy.name().to_string(),
             Json::obj(vec![
@@ -448,6 +773,8 @@ fn main() {
                 ("speedup", Json::Num(speedup)),
                 ("staged_bytes_per_step", Json::Num(staged as f64)),
                 ("steady_state_allocs", Json::Num(allocs as f64)),
+                ("stages", stages),
+                ("simd", simd_json),
             ]),
         ));
     }
@@ -546,9 +873,11 @@ fn main() {
         println!("{}", parallel.report());
         let speedup = serial.median_s / parallel.median_s.max(1e-12);
         println!("  -> gather fan-out x{speedup:.2} at {threads} threads \
-                  (batch {BATCH})\n");
+                  (batch {BATCH}; default lanes would be {})\n",
+                 GatherPool::default_lanes());
         Json::obj(vec![
             ("threads", Json::Num(threads as f64)),
+            ("default_lanes", Json::Num(GatherPool::default_lanes() as f64)),
             ("serial_median_ms", Json::Num(serial.median_s * 1e3)),
             ("parallel_median_ms", Json::Num(parallel.median_s * 1e3)),
             ("speedup", Json::Num(speedup)),
@@ -566,6 +895,16 @@ fn main() {
             ("n_kv_heads", Json::Num(fx.c.n_kv_heads as f64)),
             ("n_heads", Json::Num(fx.c.n_heads as f64)),
             ("head_dim", Json::Num(fx.c.head_dim as f64)),
+            // CPU feature + dispatch provenance: numbers are only
+            // comparable across machines with the same target.
+            ("simd", Json::obj(vec![
+                ("target", Json::Str(simd::target_name().into())),
+                ("detected", Json::Str(simd::detected().name().into())),
+                ("avx2", Json::Bool(feats.avx2)),
+                ("fma", Json::Bool(feats.fma)),
+                ("neon", Json::Bool(feats.neon)),
+                ("forced_scalar", Json::Bool(simd::scalar_forced())),
+            ])),
         ])),
         ("steady_state_allocs_total", Json::Num(total_allocs as f64)),
         ("gather", gather_json),

@@ -57,11 +57,21 @@ pub struct EngineConfig {
     /// (0 = disabled). Pages touched by attention gathers go through an
     /// LRU fast tier; misses are charged as slow-tier fetches.
     pub offload_fast_pages: usize,
-    /// Persistent worker-pool fan-out for the per-slot gather stage
-    /// (<= 1 = serial). The arena's per-row dirty extents partition
-    /// staging writes disjointly by slot, so the parallel gather is
-    /// bit-identical to the serial one (see `coordinator::gather`).
+    /// Persistent worker-pool fan-out for the per-slot gather stage:
+    /// `0` = auto ([`gather::GatherPool::default_lanes`] — half the
+    /// cores, capped at 4), `1` = serial, `n > 1` = exactly `n` lanes.
+    /// The arena's per-row dirty extents partition staging writes
+    /// disjointly by slot, so the parallel gather is bit-identical to
+    /// the serial one (see `coordinator::gather`).
     pub gather_threads: usize,
+    /// Use the runtime-dispatched SIMD kernels (`util::simd`) for the
+    /// host hot path (default). `false` pins the **process-global**
+    /// dispatch to the bit-identical scalar fallback (CLI `--no-simd`) —
+    /// global because the kernels are free functions shared by every
+    /// engine in the process, so mixed-mode shards are not expressible
+    /// (nor useful: both modes produce identical output, only speed
+    /// differs).
+    pub simd: bool,
 }
 
 impl Default for EngineConfig {
@@ -75,7 +85,8 @@ impl Default for EngineConfig {
             seed: 0,
             track_recall: false,
             offload_fast_pages: 0,
-            gather_threads: 1,
+            gather_threads: 0,
+            simd: true,
         }
     }
 }
@@ -168,6 +179,10 @@ struct SelectScratch {
 impl Engine {
     pub fn new(rt: Rc<Runtime>, params: ParamStore, gates: ParamStore,
                ecfg: EngineConfig) -> Result<Engine> {
+        // Process-global (see the field docs), last-writer-wins: an
+        // unconditional write means a later simd=true engine un-pins a
+        // prior simd=false one instead of the flag sticking off.
+        crate::util::simd::set_scalar(!ecfg.simd);
         let cfg = ModelConfig::from_json(&rt.manifest.model)?;
         let batch = rt.manifest.aot.get("decode_batch")?.as_usize()?;
         let max_seq = rt.manifest.aot.get("prefill_len")?.as_usize()?;
@@ -220,8 +235,14 @@ impl Engine {
             arena: StagingArena::new(),
             scratch: SelectScratch::default(),
             sel_bufs: (0..batch).map(|_| SelectionBuf::new()).collect(),
-            gather_pool: (ecfg.gather_threads > 1)
-                .then(|| gather::GatherPool::new(ecfg.gather_threads)),
+            gather_pool: {
+                let lanes = if ecfg.gather_threads == 0 {
+                    gather::GatherPool::default_lanes()
+                } else {
+                    ecfg.gather_threads
+                };
+                (lanes > 1).then(|| gather::GatherPool::new(lanes))
+            },
             cancels: HashSet::new(),
             done_early: Vec::new(),
         })
@@ -371,7 +392,8 @@ impl Engine {
                         len: 0,
                         kv: (0..self.cfg.n_layers).map(|_| SeqKv::new()).collect(),
                         kcomp: (0..self.cfg.n_layers)
-                            .map(|_| KcompCache::new(&self.cfg, self.ecfg.block_size))
+                            .map(|_| KcompCache::with_max_seq(
+                                &self.cfg, self.ecfg.block_size, self.max_seq))
                             .collect(),
                         quest: (0..self.cfg.n_layers)
                             .map(|_| QuestMeta::new(&self.cfg, self.ecfg.block_size,

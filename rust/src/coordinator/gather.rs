@@ -91,7 +91,7 @@ pub fn gather_one_sparse(pool: &PagedKvPool, job: &GatherJob, geom: &SparseGeom,
             pool.gather_block(pg, kv_head, n, &mut k[off..off + n * dh],
                               &mut v[off..off + n * dh]);
             let moff = hr * t_cap + cursor;
-            mask[moff..moff + n].fill(1.0);
+            crate::util::simd::fill(&mut mask[moff..moff + n], 1.0);
             cursor += n;
         }
         dirty[hr] = cursor;
@@ -202,6 +202,19 @@ impl GatherPool {
     /// Concurrent lanes including the caller.
     pub fn threads(&self) -> usize {
         self.workers.len() + 1
+    }
+
+    /// Default lane count for `EngineConfig::gather_threads = 0` (auto):
+    /// half the logical cores, clamped to `[1, 4]`. Gather jobs are
+    /// coarse (one slot's full staged copy) and memory-bandwidth-bound,
+    /// so lanes beyond ~4 mostly contend on the memory bus; half the
+    /// cores leaves room for the serving reactor and sibling shards.
+    /// See PERF.md "Gather fan-out default" for the measurement
+    /// protocol behind this choice.
+    pub fn default_lanes() -> usize {
+        std::thread::available_parallelism()
+            .map(|n| (n.get() / 2).clamp(1, 4))
+            .unwrap_or(1)
     }
 
     fn worker_main(shared: &PoolShared) {

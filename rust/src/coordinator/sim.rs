@@ -49,6 +49,29 @@ fn mix(mut z: u64) -> u64 {
     z ^ (z >> 31)
 }
 
+/// Per-token state advance: SplitMix64 plus a fingerprint of the
+/// runtime-dispatched SIMD kernel layer. The 13-tap dot product runs
+/// through [`crate::util::simd::dot`] — the same kernel the real
+/// engine's gate scoring uses — and its result bits fold into the token
+/// state, so every served token *depends on kernel output*. That is
+/// what lets the serving tests assert the end-to-end acceptance
+/// property "auto-dispatch and `--no-simd` produce identical tokens":
+/// any bitwise divergence between the SIMD and scalar kernels changes
+/// the token stream here. The odd tap count exercises the kernels'
+/// tail path on every token; taps are exact small binary fractions so
+/// the only rounding is inside the kernel's own reduction.
+fn gate_mix(mut z: u64) -> u64 {
+    const TAPS: usize = 13;
+    let mut a = [0f32; TAPS];
+    let mut b = [0f32; TAPS];
+    for i in 0..TAPS {
+        z = mix(z);
+        a[i] = ((z & 0xffff) as i64 - 0x8000) as f32 / 256.0;
+        b[i] = (((z >> 16) & 0xffff) as i64 - 0x8000) as f32 / 256.0;
+    }
+    mix(z ^ crate::util::simd::dot(&a, &b).to_bits() as u64)
+}
+
 #[derive(Debug, Clone, Copy)]
 pub struct SimConfig {
     /// Concurrent batch slots.
@@ -159,7 +182,7 @@ impl SimEngine {
                 // decode step (engine decode semantics).
                 len += 1;
             }
-            state = mix(state);
+            state = gate_mix(state);
             let tok = Self::token_from(cfg, &vocab, state, generated.len());
             generated.push(tok);
             if let Some(stop) = StopReason::decide(tok, vocab.eos, generated.len(),
@@ -244,7 +267,7 @@ impl SimEngine {
     /// mirroring the engine's prefill/decode split.
     fn emit(cfg: &SimConfig, vocab: &Vocab, slot: &mut SimSlot,
             sink: &mut dyn FnMut(EngineEvent)) {
-        slot.state = mix(slot.state);
+        slot.state = gate_mix(slot.state);
         let tok = Self::token_from(cfg, vocab, slot.state, slot.generated.len());
         slot.generated.push(tok);
         slot.stop = StopReason::decide(tok, vocab.eos, slot.generated.len(),

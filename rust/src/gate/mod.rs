@@ -12,6 +12,12 @@
 //! `artifacts/fixtures.json` (see `rust/tests/parity.rs`).
 
 use crate::model::ModelConfig;
+use crate::util::simd;
+
+/// Stack capacity for the per-call RoPE sin/cos pattern rows
+/// (`RopeTable::apply`); dims above this take the reference per-row
+/// path, which is bit-identical anyway.
+const ROPE_PATTERN_CAP: usize = 512;
 
 /// Apply interleaved-pair RoPE in place over the trailing dim of `x`.
 /// Matches `python/compile/rope.py::apply_rope`.
@@ -64,18 +70,48 @@ impl RopeTable {
 
     /// In-place interleaved-pair rotation at `pos` over every `dim`-long
     /// row of `x`. Bit-identical to `rope_inplace(x, dim, pos, theta)`.
+    ///
+    /// The `sin_cos` per frequency is hoisted out of the row loop into
+    /// stack-resident interleaved patterns (`[c,c,..]`, `[-s,s,..]` —
+    /// the exact f64 computation the reference performs, so the values
+    /// are identical), then each row rotates through the runtime-
+    /// dispatched [`simd::rope_rotate`] kernel, whose scalar fallback
+    /// computes the same unfused mul/add expression as the reference.
     pub fn apply(&self, x: &mut [f32], pos: i64) {
         debug_assert_eq!(x.len() % self.dim, 0);
-        for row in x.chunks_exact_mut(self.dim) {
-            for (i, f) in self.inv_freq.iter().enumerate() {
-                let angle = pos as f64 * f;
-                let (sin64, cos64) = angle.sin_cos();
-                let (sin, cos) = (sin64 as f32, cos64 as f32);
-                let e = row[2 * i];
-                let o = row[2 * i + 1];
-                row[2 * i] = e * cos - o * sin;
-                row[2 * i + 1] = e * sin + o * cos;
+        if self.dim > ROPE_PATTERN_CAP {
+            for row in x.chunks_exact_mut(self.dim) {
+                self.apply_row_reference(row, pos);
             }
+            return;
+        }
+        let mut cos2 = [0f32; ROPE_PATTERN_CAP];
+        let mut nsin2 = [0f32; ROPE_PATTERN_CAP];
+        for (i, f) in self.inv_freq.iter().enumerate() {
+            let angle = pos as f64 * f;
+            let (sin64, cos64) = angle.sin_cos();
+            let (sin, cos) = (sin64 as f32, cos64 as f32);
+            cos2[2 * i] = cos;
+            cos2[2 * i + 1] = cos;
+            nsin2[2 * i] = -sin;
+            nsin2[2 * i + 1] = sin;
+        }
+        for row in x.chunks_exact_mut(self.dim) {
+            simd::rope_rotate(row, &cos2[..self.dim], &nsin2[..self.dim]);
+        }
+    }
+
+    /// One-row reference rotation (the pre-SIMD loop), kept for dims
+    /// beyond the stack pattern capacity.
+    fn apply_row_reference(&self, row: &mut [f32], pos: i64) {
+        for (i, f) in self.inv_freq.iter().enumerate() {
+            let angle = pos as f64 * f;
+            let (sin64, cos64) = angle.sin_cos();
+            let (sin, cos) = (sin64 as f32, cos64 as f32);
+            let e = row[2 * i];
+            let o = row[2 * i + 1];
+            row[2 * i] = e * cos - o * sin;
+            row[2 * i + 1] = e * sin + o * cos;
         }
     }
 }
@@ -132,13 +168,13 @@ pub fn kcomp_entry_into(cfg: &ModelConfig, wk_gate: &[f32], k_block: &[f32],
             if *p == 0.0 {
                 continue;
             }
-            let wrow = &w[i * dg..(i + 1) * dg];
-            for (oo, ww) in o.iter_mut().zip(wrow) {
-                *oo += p * ww;
-            }
+            simd::axpy(o, &w[i * dg..(i + 1) * dg], *p);
         }
-        rope.apply(o, block_start);
     }
+    // Every head rotates at the same block-start position, so one apply
+    // over the whole [hkv, dg] entry amortizes the per-call sin/cos
+    // pattern setup across heads (per-row rotation is unchanged).
+    rope.apply(out, block_start);
 }
 
 /// Gate block scores (logits): q_gate · KC^T / sqrt(dg).
@@ -150,37 +186,29 @@ pub fn gate_scores(cfg: &ModelConfig, q_gate: &[f32], kc: &[f32],
     let (hkv, dg) = (cfg.n_kv_heads, cfg.d_gate);
     let scale = 1.0 / (dg as f32).sqrt();
     let mut out = vec![0f32; hkv * n_complete];
+    if n_complete == 0 {
+        return out;
+    }
     for h in 0..hkv {
         let q = &q_gate[h * dg..(h + 1) * dg];
-        for j in 0..n_complete {
-            let e = &kc[(h * entries_stride + j) * dg..][..dg];
-            let mut dot = 0f32;
-            for (a, b) in q.iter().zip(e) {
-                dot += a * b;
-            }
-            out[h * n_complete + j] = dot * scale;
-        }
+        // Head-major entries: one contiguous multi-block FMA sweep.
+        let rows = &kc[h * entries_stride * dg..][..n_complete * dg];
+        simd::dot_rows(q, rows, dg, scale,
+                       &mut out[h * n_complete..(h + 1) * n_complete]);
     }
     out
 }
 
 /// In-place softmax over each row of an [rows, n] matrix (threshold mode,
-/// §3.1: the paper thresholds softmaxed scores).
+/// §3.1: the paper thresholds softmaxed scores). Max / sum / normalize
+/// run on the dispatched SIMD kernels (fixed 8-lane reduction order on
+/// every target, so SIMD and forced-scalar results are bit-identical).
 pub fn softmax_rows(scores: &mut [f32], n: usize) {
     if n == 0 {
         return;
     }
     for row in scores.chunks_exact_mut(n) {
-        let m = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
-        let mut sum = 0f32;
-        for x in row.iter_mut() {
-            *x = (*x - m).exp();
-            sum += *x;
-        }
-        let inv = 1.0 / sum.max(1e-30);
-        for x in row.iter_mut() {
-            *x *= inv;
-        }
+        simd::softmax_row(row);
     }
 }
 
@@ -225,11 +253,7 @@ pub fn oracle_scores_into(cfg: &ModelConfig, q_rope: &[f32],
             // SAFETY: k_at returns a pointer to a dh-long row that outlives
             // this call (the paged cache is not mutated during scoring).
             let krow = unsafe { std::slice::from_raw_parts(k_at(kvh, t), dh) };
-            let mut dot = 0f32;
-            for (a, b) in q.iter().zip(krow) {
-                dot += a * b;
-            }
-            *lg = dot * scale;
+            *lg = simd::dot(q, krow) * scale;
             m = m.max(*lg);
         }
         let mut denom = 0f32;

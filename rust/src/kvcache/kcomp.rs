@@ -12,6 +12,7 @@
 
 use crate::gate::{self, RopeTable};
 use crate::model::ModelConfig;
+use crate::util::simd;
 
 #[derive(Debug, Clone)]
 pub struct KcompCache {
@@ -19,10 +20,16 @@ pub struct KcompCache {
     dh: usize,
     dg: usize,
     block_size: usize,
-    /// Completed entries, layout [n_complete, hkv, dg] (entry-major so an
-    /// append is a plain extend). Capacity is reserved for the full
-    /// context up front so steady-state appends never reallocate.
+    /// Completed entries, **head-major** layout `[hkv, cap, dg]` with
+    /// `cap = max_blocks`, fully allocated up front. Per head, the
+    /// leading `n_complete` entries are valid and contiguous, so decode
+    /// scoring (`score_into`) is one multi-block FMA sweep per head over
+    /// sequential memory — the layout the SIMD kernels want. An append
+    /// scatters one `dg`-row per head (hkv strided writes per flushed
+    /// block; amortized over `block_size` tokens).
     entries: Vec<f32>,
+    /// Entry capacity per head (the `cap` stride of `entries`).
+    cap: usize,
     n_complete: usize,
     /// Pending pre-RoPE keys of the current partial block:
     /// [t_in_block, hkv, dh].
@@ -36,17 +43,31 @@ pub struct KcompCache {
     /// 3*dh pooled row. Grown once, reused for every flushed block.
     block_scratch: Vec<f32>,
     pooled_scratch: Vec<f32>,
+    /// Flush scratch: the contiguous `[hkv, dg]` entry `kcomp_entry_into`
+    /// produces before the per-head scatter into `entries`.
+    entry_scratch: Vec<f32>,
 }
 
 impl KcompCache {
     pub fn new(cfg: &ModelConfig, block_size: usize) -> KcompCache {
-        let max_blocks = cfg.max_seq.div_ceil(block_size);
+        Self::with_max_seq(cfg, block_size, cfg.max_seq)
+    }
+
+    /// Like [`new`](KcompCache::new) but sized for an explicit context
+    /// length — the engine passes its manifest context (`prefill_len`),
+    /// which may exceed `cfg.max_seq`. The head-major entry store is
+    /// capacity-allocated, so the cap must cover every block the
+    /// sequence can ever complete.
+    pub fn with_max_seq(cfg: &ModelConfig, block_size: usize,
+                        max_seq: usize) -> KcompCache {
+        let max_blocks = max_seq.max(cfg.max_seq).div_ceil(block_size);
         KcompCache {
             hkv: cfg.n_kv_heads,
             dh: cfg.head_dim,
             dg: cfg.d_gate,
             block_size,
-            entries: Vec::with_capacity(max_blocks * cfg.n_kv_heads * cfg.d_gate),
+            entries: vec![0.0; max_blocks * cfg.n_kv_heads * cfg.d_gate],
+            cap: max_blocks,
             n_complete: 0,
             pending: Vec::with_capacity(block_size * cfg.n_kv_heads * cfg.head_dim),
             pending_tokens: 0,
@@ -54,6 +75,7 @@ impl KcompCache {
             rope: RopeTable::new(cfg.d_gate, cfg.rope_theta),
             block_scratch: Vec::new(),
             pooled_scratch: Vec::new(),
+            entry_scratch: vec![0.0; cfg.n_kv_heads * cfg.d_gate],
         }
     }
 
@@ -106,19 +128,42 @@ impl KcompCache {
             }
         }
         let start = (self.n_complete * self.block_size) as i64;
-        let off = self.entries.len();
-        self.entries.resize(off + hkv * dg, 0.0);
+        assert!(self.n_complete < self.cap, "kcomp entry overflow");
         gate::kcomp_entry_into(cfg, wk_gate, &self.block_scratch, bs, start,
                                &self.rope, &mut self.pooled_scratch,
-                               &mut self.entries[off..]);
+                               &mut self.entry_scratch);
+        // Scatter the contiguous [hkv, dg] entry into the head-major
+        // store: head h's entry j lands at [(h * cap + j) * dg ..].
+        let j = self.n_complete;
+        for h in 0..hkv {
+            let dst = (h * self.cap + j) * dg;
+            simd::copy(&mut self.entries[dst..dst + dg],
+                       &self.entry_scratch[h * dg..(h + 1) * dg]);
+        }
         self.n_complete += 1;
         self.pending.clear();
         self.pending_tokens = 0;
     }
 
-    /// Completed entries as [n_complete, hkv, dg].
-    pub fn entries(&self) -> &[f32] {
+    /// Raw head-major entry storage `[hkv, capacity, dg]`; per head, only
+    /// the leading [`n_complete`](KcompCache::n_complete) entries are
+    /// valid. Pair with [`entries_stride`](KcompCache::entries_stride)
+    /// for indexing (it is also exactly the `kc`/`entries_stride` layout
+    /// [`gate::gate_scores`] consumes).
+    pub fn entries_raw(&self) -> &[f32] {
         &self.entries
+    }
+
+    /// The per-head entry stride (capacity in entries) of
+    /// [`entries_raw`](KcompCache::entries_raw).
+    pub fn entries_stride(&self) -> usize {
+        self.cap
+    }
+
+    /// One completed entry (`[dg]`) of head `h`.
+    pub fn entry(&self, h: usize, j: usize) -> &[f32] {
+        debug_assert!(j < self.n_complete);
+        &self.entries[(h * self.cap + j) * self.dg..][..self.dg]
     }
 
     /// Gate scores of `q_gate` ([hkv, dg]) against all complete entries.
@@ -135,29 +180,29 @@ impl KcompCache {
     /// across calls, so a reused buffer stops allocating once the context
     /// reaches steady state. Values are bit-identical to [`score`].
     ///
+    /// Per head, the head-major entry store makes this one contiguous
+    /// multi-block sweep through the dispatched [`simd::dot_rows`]
+    /// kernel (fixed 8-lane FMA reduction — SIMD and forced-scalar
+    /// dispatch produce bit-identical scores).
+    ///
     /// [`score`]: KcompCache::score
     pub fn score_into(&self, q_gate: &[f32], out: &mut Vec<Vec<f32>>) {
         let scale = 1.0 / (self.dg as f32).sqrt();
         crate::util::buf::resize_rows(out, self.hkv);
-        for row in out.iter_mut() {
+        for (h, row) in out.iter_mut().enumerate() {
             row.resize(self.n_complete, 0.0);
-        }
-        for j in 0..self.n_complete {
-            for h in 0..self.hkv {
-                let e = &self.entries[(j * self.hkv + h) * self.dg..][..self.dg];
-                let q = &q_gate[h * self.dg..(h + 1) * self.dg];
-                let mut dot = 0f32;
-                for (a, b) in q.iter().zip(e) {
-                    dot += a * b;
-                }
-                out[h][j] = dot * scale;
-            }
+            let q = &q_gate[h * self.dg..(h + 1) * self.dg];
+            let rows =
+                &self.entries[h * self.cap * self.dg..][..self.n_complete * self.dg];
+            simd::dot_rows(q, rows, self.dg, scale, row);
         }
     }
 
-    /// Memory footprint in bytes (entries only — the paper's <1% claim).
+    /// Memory footprint in bytes of the *valid* entries (the paper's
+    /// <1% claim; the head-major store is capacity-allocated but only
+    /// `n_complete` entries per head hold data).
     pub fn bytes(&self) -> usize {
-        self.entries.len() * 4
+        self.n_complete * self.hkv * self.dg * 4
     }
 }
 
@@ -225,9 +270,11 @@ mod tests {
             }
         }
         let expect = gate::kcomp_entry(&c, &w, &block, 4, 4);
-        let got = &kc.entries()[1 * 2 * 4..2 * 2 * 4];
-        for (a, b) in got.iter().zip(&expect) {
-            assert!((a - b).abs() < 1e-6);
+        for h in 0..2 {
+            let got = kc.entry(h, 1);
+            for (a, b) in got.iter().zip(&expect[h * 4..(h + 1) * 4]) {
+                assert!((a - b).abs() < 1e-6);
+            }
         }
     }
 
@@ -245,16 +292,10 @@ mod tests {
         let s = kc.score(&c, &qg);
         assert_eq!(s.len(), 2);
         assert_eq!(s[0].len(), 3);
-        // Agrees with gate::gate_scores on a transposed copy.
-        let mut kc_t = vec![0f32; 3 * 2 * 4];
-        for j in 0..3 {
-            for h in 0..2 {
-                let src = (j * 2 + h) * 4;
-                let dst = (h * 3 + j) * 4;
-                kc_t[dst..dst + 4].copy_from_slice(&kc.entries()[src..src + 4]);
-            }
-        }
-        let flat = gate::gate_scores(&c, &qg, &kc_t, 3, 3);
+        // Agrees with gate::gate_scores over the head-major store (the
+        // entry layout and the scorer's expected layout now coincide).
+        let flat = gate::gate_scores(&c, &qg, kc.entries_raw(),
+                                     kc.entries_stride(), 3);
         for h in 0..2 {
             for j in 0..3 {
                 assert!((s[h][j] - flat[h * 3 + j]).abs() < 1e-6);

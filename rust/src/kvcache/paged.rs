@@ -78,15 +78,16 @@ impl PagedKvPool {
     }
 
     /// Copy `n_tokens` of one KV head's K and V from a page into staging
-    /// slices (each of len n_tokens * dh).
+    /// slices (each of len n_tokens * dh) — the decode gather's block
+    /// copy, routed through the dispatched SIMD copy kernel.
     pub fn gather_block(&self, id: PageId, h: usize, n_tokens: usize,
                         k_out: &mut [f32], v_out: &mut [f32]) {
         debug_assert!(n_tokens <= self.block_size);
         let page = &self.pages[id as usize];
         let off = h * self.block_size * self.dh;
         let n = n_tokens * self.dh;
-        k_out[..n].copy_from_slice(&page.k[off..off + n]);
-        v_out[..n].copy_from_slice(&page.v[off..off + n]);
+        crate::util::simd::copy(&mut k_out[..n], &page.k[off..off + n]);
+        crate::util::simd::copy(&mut v_out[..n], &page.v[off..off + n]);
     }
 }
 

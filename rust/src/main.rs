@@ -25,10 +25,14 @@ USAGE:
   seerattn serve   [--addr HOST:PORT] [--policy P] [--budget TOKENS]
                    [--block-size B] [--shards N] [--gather-threads T]
                    [--max-conns N] [--idle-timeout-ms MS] [--queue-depth N]
-                   [--stream] [--deadline-ms MS]
+                   [--stream] [--deadline-ms MS] [--no-simd]
   seerattn generate [--task easy|hard] [--policy P] [--budget TOKENS] [--n N]
+                   [--no-simd]
 
 POLICIES: dense | seer | seer-threshold:T | seer-topp:P | oracle | quest
+--gather-threads: 0 = auto (half the cores, max 4), 1 = serial.
+--no-simd pins the host hot path to the bit-identical scalar kernels
+(auto-dispatch picks AVX2+FMA / NEON when the CPU has them).
 Artifacts are read from ./artifacts (override: SEERATTN_ARTIFACTS).";
 
 struct Args {
@@ -219,7 +223,11 @@ fn cmd_serve(args: &Args, dir: &PathBuf) -> Result<()> {
         policy,
         block_size: args.usize_flag("block-size", 16),
         max_new: args.usize_flag("max-new", 64),
-        gather_threads: args.usize_flag("gather-threads", 1),
+        // 0 = auto (GatherPool::default_lanes), 1 = serial.
+        gather_threads: args.usize_flag("gather-threads", 0),
+        // Single carrier for --no-simd: Engine::new pins the
+        // process-global dispatch when this is false.
+        simd: !args.flags.contains_key("no-simd"),
         ..Default::default()
     };
     let gcfg = GroupConfig {
@@ -254,8 +262,15 @@ fn cmd_serve(args: &Args, dir: &PathBuf) -> Result<()> {
         let gates = harness::load_gates(&rt, &dir, ecfg.block_size)?;
         Engine::new(rt, params, gates, ecfg)
     })?;
-    eprintln!("[seerattn] {} engine shard(s), policy {}", gcfg.shards,
-              policy.name());
+    // Shard threads apply ecfg.simd in Engine::new; derive the label
+    // from the config rather than racing the global dispatch state.
+    let simd_label = if ecfg.simd {
+        seerattn::util::simd::target_name()
+    } else {
+        "scalar (--no-simd)"
+    };
+    eprintln!("[seerattn] {} engine shard(s), policy {}, simd {}", gcfg.shards,
+              policy.name(), simd_label);
     server::serve(group, &args.str_flag("addr", "127.0.0.1:7077"), scfg)
 }
 
@@ -271,6 +286,7 @@ fn cmd_generate(args: &Args, dir: &PathBuf) -> Result<()> {
     let ecfg = EngineConfig {
         policy,
         block_size: args.usize_flag("block-size", 16),
+        simd: !args.flags.contains_key("no-simd"),
         ..Default::default()
     };
     let (rt, params) = harness::load_runtime_and_params(dir)?;

@@ -9,6 +9,7 @@
 //! all layers.
 
 use crate::model::ModelConfig;
+use crate::util::simd;
 
 /// Incrementally-maintained per-block min/max key metadata for one layer
 /// of one sequence. Layout: per kv head, per block, min[dh] ++ max[dh].
@@ -83,7 +84,10 @@ impl QuestMeta {
 
     /// Allocation-free variant of [`scores`]: resizes `out` to the block
     /// count and overwrites every entry, so a reused buffer stops
-    /// allocating once the context stops growing.
+    /// allocating once the context stops growing. Each block's
+    /// `Σ_d max(q·min, q·max)` bound runs through the dispatched
+    /// [`simd::quest_ub`] kernel (fixed 8-lane reduction on every
+    /// target, so SIMD and forced-scalar dispatch agree bitwise).
     ///
     /// [`scores`]: QuestMeta::scores
     pub fn scores_into(&self, kv_head: usize, q: &[f32], out: &mut Vec<f32>) {
@@ -92,16 +96,11 @@ impl QuestMeta {
         out.clear();
         out.resize(nblk, 0.0);
         for (blk, o) in out.iter_mut().enumerate() {
+            // Per-block metadata is `min[dh] ++ max[dh]` — exactly the
+            // kernel's operand layout.
             let base = ((kv_head * self.max_blocks + blk) * 2) * self.dh;
-            let mut ub = 0f32;
-            for d in 0..self.dh {
-                let a = q[d] * self.data[base + d]; // q*min
-                let b = q[d] * self.data[base + self.dh + d]; // q*max
-                ub += a.max(b);
-            }
-            *o = ub;
+            *o = simd::quest_ub(q, &self.data[base..base + 2 * self.dh]);
         }
-        out
     }
 
     /// The provable invariant: ub >= q·k for every cached key in the

@@ -6,4 +6,5 @@ pub mod bench;
 pub mod buf;
 pub mod json;
 pub mod rng;
+pub mod simd;
 pub mod stats;

@@ -1,0 +1,851 @@
+//! Runtime-dispatched SIMD kernels for the decode hot path.
+//!
+//! Every inner loop the coordinator runs per decode token — gate dot
+//! products (`KcompCache::score_into`, `gate::gate_scores`), Quest
+//! min/max upper bounds, softmax rows, RoPE rotation, and the staged
+//! gather copies — funnels through this module. Dispatch is resolved at
+//! runtime: AVX2+FMA via `std::arch` on x86_64 (checked once with
+//! `is_x86_feature_detected!`), NEON on aarch64, and a scalar fallback
+//! everywhere else.
+//!
+//! ## Determinism contract
+//!
+//! All dispatch targets produce **bit-identical** results. The scalar
+//! fallback is not a naive sequential loop — it emulates the exact
+//! 8-lane reduction the vector paths perform:
+//!
+//! - Reductions (dot, sum, max, Quest upper bound) accumulate into 8
+//!   fixed lanes (`lanes[l]` holds elements `≡ l (mod 8)`), tail
+//!   elements fold into lanes `0..tail`, and the final horizontal
+//!   reduction is the fixed tree [`hsum8`]/[`hmax8`] — the vector paths
+//!   store their accumulator lanes and run the *same* scalar tree.
+//! - Fused multiply-adds use `f32::mul_add` in the scalar path and the
+//!   hardware FMA in the vector paths — both correctly rounded, so
+//!   identical. Plain mul/add kernels (`axpy`, `quest_ub`, `rope_rotate`)
+//!   use unfused mul+add on every target.
+//! - `max` uses select semantics `a > b ? a : b` on every target
+//!   (matching x86 `maxps`; NEON emulates it with compare+select), so
+//!   even the `±0.0` tie cases agree bitwise.
+//! - Elementwise kernels (scale, axpy, rotate, copy, fill) are trivially
+//!   order-independent.
+//!
+//! The serving consequence: `--no-simd` (or `SEERATTN_SIMD=scalar`) and
+//! auto-dispatch produce identical scores, selections, and served
+//! tokens — asserted end-to-end by `rust/tests/simd_parity.rs` and the
+//! `decode_hot_path` bench.
+//!
+//! ## Forcing the scalar path
+//!
+//! Dispatch honours, in order: the `SEERATTN_SIMD=scalar` environment
+//! variable (read once per process — CI pins the forced-scalar job with
+//! it), then the process-wide [`set_scalar`] flag (the CLI `--no-simd`
+//! flag and `EngineConfig::simd = false` set it). Every kernel is
+//! allocation-free (fixed stack arrays only), preserving the hot path's
+//! zero-steady-state-allocation invariant.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::OnceLock;
+
+/// Fixed logical lane count of the reduction contract (one AVX2 vector;
+/// two NEON quads; eight scalar accumulators).
+pub const LANES: usize = 8;
+
+/// Resolved dispatch target.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Target {
+    /// 8-lane emulation in scalar code (bit-identical to the vector
+    /// paths by construction).
+    Scalar,
+    /// x86_64 AVX2 + FMA.
+    Avx2Fma,
+    /// aarch64 NEON (two 4-lane quads emulate the 8-lane contract).
+    Neon,
+}
+
+static FORCE_SCALAR: AtomicBool = AtomicBool::new(false);
+
+fn env_scalar() -> bool {
+    static ENV: OnceLock<bool> = OnceLock::new();
+    *ENV.get_or_init(|| std::env::var("SEERATTN_SIMD").as_deref() == Ok("scalar"))
+}
+
+/// Force (or un-force) the scalar path process-wide. The
+/// `SEERATTN_SIMD=scalar` environment variable cannot be un-forced.
+pub fn set_scalar(force: bool) {
+    FORCE_SCALAR.store(force, Ordering::SeqCst);
+}
+
+/// Whether dispatch is currently pinned to the scalar path.
+pub fn scalar_forced() -> bool {
+    env_scalar() || FORCE_SCALAR.load(Ordering::Relaxed)
+}
+
+fn detect() -> Target {
+    #[cfg(target_arch = "x86_64")]
+    {
+        if std::arch::is_x86_feature_detected!("avx2")
+            && std::arch::is_x86_feature_detected!("fma")
+        {
+            return Target::Avx2Fma;
+        }
+    }
+    #[cfg(target_arch = "aarch64")]
+    {
+        if std::arch::is_aarch64_feature_detected!("neon") {
+            return Target::Neon;
+        }
+    }
+    Target::Scalar
+}
+
+/// The hardware's best target (cached detection; ignores forcing).
+pub fn detected() -> Target {
+    static DETECTED: OnceLock<Target> = OnceLock::new();
+    *DETECTED.get_or_init(detect)
+}
+
+/// The target kernels dispatch to right now (detection + forcing).
+pub fn target() -> Target {
+    if scalar_forced() {
+        Target::Scalar
+    } else {
+        detected()
+    }
+}
+
+impl Target {
+    /// Stable wire name (bench provenance / metrics reporting).
+    pub fn name(self) -> &'static str {
+        match self {
+            Target::Scalar => "scalar",
+            Target::Avx2Fma => "avx2+fma",
+            Target::Neon => "neon",
+        }
+    }
+}
+
+/// Stable wire name of the active target (bench/metrics reporting).
+pub fn target_name() -> &'static str {
+    target().name()
+}
+
+/// Raw CPU feature detection, for bench provenance
+/// (`BENCH_decode.json`'s `config.simd` block).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct CpuFeatures {
+    pub avx2: bool,
+    pub fma: bool,
+    pub neon: bool,
+}
+
+pub fn cpu_features() -> CpuFeatures {
+    #[allow(unused_mut)]
+    let mut f = CpuFeatures::default();
+    #[cfg(target_arch = "x86_64")]
+    {
+        f.avx2 = std::arch::is_x86_feature_detected!("avx2");
+        f.fma = std::arch::is_x86_feature_detected!("fma");
+    }
+    #[cfg(target_arch = "aarch64")]
+    {
+        f.neon = std::arch::is_aarch64_feature_detected!("neon");
+    }
+    f
+}
+
+// ---------------------------------------------------------------------
+// Shared fixed-order reduction helpers (every target funnels its 8
+// accumulator lanes through these, which is what makes the targets
+// bit-identical).
+// ---------------------------------------------------------------------
+
+/// Fixed horizontal-sum tree over the 8 lanes.
+#[inline]
+fn hsum8(l: [f32; LANES]) -> f32 {
+    ((l[0] + l[1]) + (l[2] + l[3])) + ((l[4] + l[5]) + (l[6] + l[7]))
+}
+
+/// Fixed horizontal-max tree over the 8 lanes (select semantics).
+#[inline]
+fn hmax8(l: [f32; LANES]) -> f32 {
+    sel_max(
+        sel_max(sel_max(l[0], l[1]), sel_max(l[2], l[3])),
+        sel_max(sel_max(l[4], l[5]), sel_max(l[6], l[7])),
+    )
+}
+
+/// `a > b ? a : b` — the exact semantics of x86 `maxps(a, b)` (returns
+/// `b` on ties and NaN), emulated on every target.
+#[inline]
+fn sel_max(a: f32, b: f32) -> f32 {
+    if a > b {
+        a
+    } else {
+        b
+    }
+}
+
+macro_rules! dispatch {
+    ($name:ident ( $($arg:expr),* )) => {
+        match target() {
+            #[cfg(target_arch = "x86_64")]
+            Target::Avx2Fma => unsafe { x86::$name($($arg),*) },
+            #[cfg(target_arch = "aarch64")]
+            Target::Neon => unsafe { neon::$name($($arg),*) },
+            _ => scalar::$name($($arg),*),
+        }
+    };
+}
+
+// ---------------------------------------------------------------------
+// Public kernels.
+// ---------------------------------------------------------------------
+
+/// Dot product with the fixed 8-lane FMA reduction.
+pub fn dot(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    dispatch!(dot(a, b))
+}
+
+/// `out[j] = dot(q, rows[j*d..][..d]) * scale` over `out.len()`
+/// contiguous rows — the gate-scoring multi-block sweep. Bit-identical
+/// to calling [`dot`] per row.
+pub fn dot_rows(q: &[f32], rows: &[f32], d: usize, scale: f32, out: &mut [f32]) {
+    debug_assert_eq!(q.len(), d);
+    debug_assert!(rows.len() >= out.len() * d);
+    dispatch!(dot_rows(q, rows, d, scale, out))
+}
+
+/// Sum with the fixed 8-lane reduction.
+pub fn sum(x: &[f32]) -> f32 {
+    dispatch!(sum(x))
+}
+
+/// Max with the fixed 8-lane select-max reduction
+/// (`f32::NEG_INFINITY` for an empty slice).
+pub fn max(x: &[f32]) -> f32 {
+    dispatch!(max(x))
+}
+
+/// In-place `x[i] *= s` (elementwise; identical on every target).
+pub fn scale(x: &mut [f32], s: f32) {
+    dispatch!(scale(x, s))
+}
+
+/// In-place `out[i] += a * x[i]` with *unfused* mul+add on every target
+/// (matches the pre-SIMD K-compression projection exactly).
+pub fn axpy(out: &mut [f32], x: &[f32], a: f32) {
+    debug_assert_eq!(out.len(), x.len());
+    dispatch!(axpy(out, x, a))
+}
+
+/// Quest block upper bound `Σ_d max(q_d·min_d, q_d·max_d)` over a
+/// `[min(d), max(d)]` metadata block (`minmax.len() == 2 * q.len()`),
+/// with the fixed 8-lane reduction.
+pub fn quest_ub(q: &[f32], minmax: &[f32]) -> f32 {
+    debug_assert_eq!(minmax.len(), 2 * q.len());
+    dispatch!(quest_ub(q, minmax))
+}
+
+/// In-place interleaved-pair RoPE rotation of one even-length row from
+/// precomputed patterns: `cos2 = [c0,c0,c1,c1,..]`,
+/// `nsin2 = [-s0,s0,-s1,s1,..]`. Computes
+/// `row[2i] = e·c + o·(−s)` and `row[2i+1] = o·c + e·s` with unfused
+/// mul+add — bitwise equal to the reference `e·c − o·s` / `e·s + o·c`
+/// (IEEE: `x + (−y) ≡ x − y`, and addition is commutative bitwise).
+pub fn rope_rotate(row: &mut [f32], cos2: &[f32], nsin2: &[f32]) {
+    debug_assert_eq!(row.len() % 2, 0);
+    debug_assert_eq!(row.len(), cos2.len());
+    debug_assert_eq!(row.len(), nsin2.len());
+    dispatch!(rope_rotate(row, cos2, nsin2))
+}
+
+/// The gather stage's block copy, routed through the kernel layer for
+/// uniformity but resolved to `copy_from_slice` (= `memcpy`) on every
+/// target: memcpy is already alignment-aware, unrolled vector code and
+/// a copy is bit-identical by definition, so dispatching here would
+/// only add a branch to the bandwidth-bound stage.
+pub fn copy(dst: &mut [f32], src: &[f32]) {
+    dst.copy_from_slice(src);
+}
+
+/// Mask fill; same reasoning as [`copy`] — `fill` (= `memset`-class
+/// splat) on every target.
+pub fn fill(dst: &mut [f32], v: f32) {
+    dst.fill(v);
+}
+
+/// In-place softmax of one row: 8-lane max, scalar `exp` (elementwise —
+/// identical on every target), 8-lane sum, vectorized normalize.
+pub fn softmax_row(row: &mut [f32]) {
+    if row.is_empty() {
+        return;
+    }
+    let m = max(row);
+    for x in row.iter_mut() {
+        *x = (*x - m).exp();
+    }
+    let s = sum(row);
+    let inv = 1.0 / s.max(1e-30);
+    scale(row, inv);
+}
+
+// ---------------------------------------------------------------------
+// Scalar fallback: 8-lane emulation, bit-identical to the vector paths.
+// ---------------------------------------------------------------------
+
+mod scalar {
+    use super::{hmax8, hsum8, sel_max, LANES};
+
+    pub fn dot(a: &[f32], b: &[f32]) -> f32 {
+        let n = a.len();
+        let chunks = n / LANES;
+        let mut lanes = [0f32; LANES];
+        for c in 0..chunks {
+            let o = c * LANES;
+            for (l, lane) in lanes.iter_mut().enumerate() {
+                *lane = a[o + l].mul_add(b[o + l], *lane);
+            }
+        }
+        for (l, t) in (chunks * LANES..n).enumerate() {
+            lanes[l] = a[t].mul_add(b[t], lanes[l]);
+        }
+        hsum8(lanes)
+    }
+
+    pub fn dot_rows(q: &[f32], rows: &[f32], d: usize, scale: f32,
+                    out: &mut [f32]) {
+        for (j, o) in out.iter_mut().enumerate() {
+            *o = dot(q, &rows[j * d..(j + 1) * d]) * scale;
+        }
+    }
+
+    pub fn sum(x: &[f32]) -> f32 {
+        let n = x.len();
+        let chunks = n / LANES;
+        let mut lanes = [0f32; LANES];
+        for c in 0..chunks {
+            let o = c * LANES;
+            for (l, lane) in lanes.iter_mut().enumerate() {
+                *lane += x[o + l];
+            }
+        }
+        for (l, t) in (chunks * LANES..n).enumerate() {
+            lanes[l] += x[t];
+        }
+        hsum8(lanes)
+    }
+
+    pub fn max(x: &[f32]) -> f32 {
+        let n = x.len();
+        let chunks = n / LANES;
+        let mut lanes = [f32::NEG_INFINITY; LANES];
+        for c in 0..chunks {
+            let o = c * LANES;
+            for (l, lane) in lanes.iter_mut().enumerate() {
+                *lane = sel_max(*lane, x[o + l]);
+            }
+        }
+        for (l, t) in (chunks * LANES..n).enumerate() {
+            lanes[l] = sel_max(lanes[l], x[t]);
+        }
+        hmax8(lanes)
+    }
+
+    pub fn scale(x: &mut [f32], s: f32) {
+        for v in x.iter_mut() {
+            *v *= s;
+        }
+    }
+
+    pub fn axpy(out: &mut [f32], x: &[f32], a: f32) {
+        for (o, xv) in out.iter_mut().zip(x) {
+            *o += a * *xv;
+        }
+    }
+
+    pub fn quest_ub(q: &[f32], minmax: &[f32]) -> f32 {
+        let d = q.len();
+        let (mn, mx) = minmax.split_at(d);
+        let chunks = d / LANES;
+        let mut lanes = [0f32; LANES];
+        for c in 0..chunks {
+            let o = c * LANES;
+            for (l, lane) in lanes.iter_mut().enumerate() {
+                let j = o + l;
+                *lane += sel_max(q[j] * mn[j], q[j] * mx[j]);
+            }
+        }
+        for (l, t) in (chunks * LANES..d).enumerate() {
+            lanes[l] += sel_max(q[t] * mn[t], q[t] * mx[t]);
+        }
+        hsum8(lanes)
+    }
+
+    /// Rotate an even-length run of interleaved pairs (also the vector
+    /// paths' tail handler, so tails are identical by construction).
+    pub fn rope_rotate(row: &mut [f32], cos2: &[f32], nsin2: &[f32]) {
+        for i in 0..row.len() / 2 {
+            let (e, o) = (row[2 * i], row[2 * i + 1]);
+            row[2 * i] = e * cos2[2 * i] + o * nsin2[2 * i];
+            row[2 * i + 1] = o * cos2[2 * i + 1] + e * nsin2[2 * i + 1];
+        }
+    }
+
+}
+
+// ---------------------------------------------------------------------
+// x86_64: AVX2 + FMA.
+// ---------------------------------------------------------------------
+
+#[cfg(target_arch = "x86_64")]
+mod x86 {
+    use std::arch::x86_64::*;
+
+    use super::{hmax8, hsum8, sel_max, LANES};
+
+    #[target_feature(enable = "avx2,fma")]
+    pub unsafe fn dot(a: &[f32], b: &[f32]) -> f32 {
+        let n = a.len();
+        let chunks = n / LANES;
+        let mut acc = _mm256_setzero_ps();
+        for c in 0..chunks {
+            let o = c * LANES;
+            acc = _mm256_fmadd_ps(_mm256_loadu_ps(a.as_ptr().add(o)),
+                                  _mm256_loadu_ps(b.as_ptr().add(o)), acc);
+        }
+        let mut lanes = [0f32; LANES];
+        _mm256_storeu_ps(lanes.as_mut_ptr(), acc);
+        for (l, t) in (chunks * LANES..n).enumerate() {
+            lanes[l] = a[t].mul_add(b[t], lanes[l]);
+        }
+        hsum8(lanes)
+    }
+
+    #[target_feature(enable = "avx2,fma")]
+    pub unsafe fn dot_rows(q: &[f32], rows: &[f32], d: usize, scale: f32,
+                           out: &mut [f32]) {
+        for (j, o) in out.iter_mut().enumerate() {
+            *o = dot(q, &rows[j * d..(j + 1) * d]) * scale;
+        }
+    }
+
+    #[target_feature(enable = "avx2,fma")]
+    pub unsafe fn sum(x: &[f32]) -> f32 {
+        let n = x.len();
+        let chunks = n / LANES;
+        let mut acc = _mm256_setzero_ps();
+        for c in 0..chunks {
+            acc = _mm256_add_ps(acc, _mm256_loadu_ps(x.as_ptr().add(c * LANES)));
+        }
+        let mut lanes = [0f32; LANES];
+        _mm256_storeu_ps(lanes.as_mut_ptr(), acc);
+        for (l, t) in (chunks * LANES..n).enumerate() {
+            lanes[l] += x[t];
+        }
+        hsum8(lanes)
+    }
+
+    #[target_feature(enable = "avx2,fma")]
+    pub unsafe fn max(x: &[f32]) -> f32 {
+        let n = x.len();
+        let chunks = n / LANES;
+        let mut acc = _mm256_set1_ps(f32::NEG_INFINITY);
+        for c in 0..chunks {
+            // maxps(acc, v) = acc > v ? acc : v — sel_max semantics.
+            acc = _mm256_max_ps(acc, _mm256_loadu_ps(x.as_ptr().add(c * LANES)));
+        }
+        let mut lanes = [0f32; LANES];
+        _mm256_storeu_ps(lanes.as_mut_ptr(), acc);
+        for (l, t) in (chunks * LANES..n).enumerate() {
+            lanes[l] = sel_max(lanes[l], x[t]);
+        }
+        hmax8(lanes)
+    }
+
+    #[target_feature(enable = "avx2,fma")]
+    pub unsafe fn scale(x: &mut [f32], s: f32) {
+        let n = x.len();
+        let chunks = n / LANES;
+        let vs = _mm256_set1_ps(s);
+        for c in 0..chunks {
+            let p = x.as_mut_ptr().add(c * LANES);
+            _mm256_storeu_ps(p, _mm256_mul_ps(_mm256_loadu_ps(p), vs));
+        }
+        for v in &mut x[chunks * LANES..] {
+            *v *= s;
+        }
+    }
+
+    #[target_feature(enable = "avx2,fma")]
+    pub unsafe fn axpy(out: &mut [f32], x: &[f32], a: f32) {
+        let n = out.len();
+        let chunks = n / LANES;
+        let va = _mm256_set1_ps(a);
+        for c in 0..chunks {
+            let o = c * LANES;
+            let p = out.as_mut_ptr().add(o);
+            // Unfused mul + add, matching the scalar `*o += a * x`.
+            let prod = _mm256_mul_ps(va, _mm256_loadu_ps(x.as_ptr().add(o)));
+            _mm256_storeu_ps(p, _mm256_add_ps(_mm256_loadu_ps(p), prod));
+        }
+        for (o, xv) in out[chunks * LANES..].iter_mut().zip(&x[chunks * LANES..]) {
+            *o += a * *xv;
+        }
+    }
+
+    #[target_feature(enable = "avx2,fma")]
+    pub unsafe fn quest_ub(q: &[f32], minmax: &[f32]) -> f32 {
+        let d = q.len();
+        let (mn, mx) = minmax.split_at(d);
+        let chunks = d / LANES;
+        let mut acc = _mm256_setzero_ps();
+        for c in 0..chunks {
+            let o = c * LANES;
+            let vq = _mm256_loadu_ps(q.as_ptr().add(o));
+            let a = _mm256_mul_ps(vq, _mm256_loadu_ps(mn.as_ptr().add(o)));
+            let b = _mm256_mul_ps(vq, _mm256_loadu_ps(mx.as_ptr().add(o)));
+            acc = _mm256_add_ps(acc, _mm256_max_ps(a, b));
+        }
+        let mut lanes = [0f32; LANES];
+        _mm256_storeu_ps(lanes.as_mut_ptr(), acc);
+        for (l, t) in (chunks * LANES..d).enumerate() {
+            lanes[l] += sel_max(q[t] * mn[t], q[t] * mx[t]);
+        }
+        hsum8(lanes)
+    }
+
+    #[target_feature(enable = "avx2,fma")]
+    pub unsafe fn rope_rotate(row: &mut [f32], cos2: &[f32], nsin2: &[f32]) {
+        let n = row.len();
+        let chunks = n / LANES;
+        for c in 0..chunks {
+            let o = c * LANES;
+            let p = row.as_mut_ptr().add(o);
+            let v = _mm256_loadu_ps(p);
+            // Swap each interleaved (even, odd) pair: [1,0,3,2] per lane.
+            let sw = _mm256_permute_ps::<0b1011_0001>(v);
+            let t1 = _mm256_mul_ps(v, _mm256_loadu_ps(cos2.as_ptr().add(o)));
+            let t2 = _mm256_mul_ps(sw, _mm256_loadu_ps(nsin2.as_ptr().add(o)));
+            _mm256_storeu_ps(p, _mm256_add_ps(t1, t2));
+        }
+        let o = chunks * LANES;
+        super::scalar::rope_rotate(&mut row[o..], &cos2[o..], &nsin2[o..]);
+    }
+
+}
+
+// ---------------------------------------------------------------------
+// aarch64: NEON (two 4-lane quads = the 8-lane contract).
+// ---------------------------------------------------------------------
+
+#[cfg(target_arch = "aarch64")]
+mod neon {
+    use std::arch::aarch64::*;
+
+    use super::{hmax8, hsum8, sel_max, LANES};
+
+    /// `a > b ? a : b` per lane — emulates x86 `maxps` exactly (NEON's
+    /// own `vmaxq_f32` differs on NaN propagation).
+    #[inline]
+    unsafe fn vmax_sel(a: float32x4_t, b: float32x4_t) -> float32x4_t {
+        vbslq_f32(vcgtq_f32(a, b), a, b)
+    }
+
+    #[inline]
+    unsafe fn store8(lanes: &mut [f32; LANES], lo: float32x4_t, hi: float32x4_t) {
+        vst1q_f32(lanes.as_mut_ptr(), lo);
+        vst1q_f32(lanes.as_mut_ptr().add(4), hi);
+    }
+
+    #[target_feature(enable = "neon")]
+    pub unsafe fn dot(a: &[f32], b: &[f32]) -> f32 {
+        let n = a.len();
+        let chunks = n / LANES;
+        let mut acc0 = vdupq_n_f32(0.0);
+        let mut acc1 = vdupq_n_f32(0.0);
+        for c in 0..chunks {
+            let o = c * LANES;
+            acc0 = vfmaq_f32(acc0, vld1q_f32(a.as_ptr().add(o)),
+                             vld1q_f32(b.as_ptr().add(o)));
+            acc1 = vfmaq_f32(acc1, vld1q_f32(a.as_ptr().add(o + 4)),
+                             vld1q_f32(b.as_ptr().add(o + 4)));
+        }
+        let mut lanes = [0f32; LANES];
+        store8(&mut lanes, acc0, acc1);
+        for (l, t) in (chunks * LANES..n).enumerate() {
+            lanes[l] = a[t].mul_add(b[t], lanes[l]);
+        }
+        hsum8(lanes)
+    }
+
+    #[target_feature(enable = "neon")]
+    pub unsafe fn dot_rows(q: &[f32], rows: &[f32], d: usize, scale: f32,
+                           out: &mut [f32]) {
+        for (j, o) in out.iter_mut().enumerate() {
+            *o = dot(q, &rows[j * d..(j + 1) * d]) * scale;
+        }
+    }
+
+    #[target_feature(enable = "neon")]
+    pub unsafe fn sum(x: &[f32]) -> f32 {
+        let n = x.len();
+        let chunks = n / LANES;
+        let mut acc0 = vdupq_n_f32(0.0);
+        let mut acc1 = vdupq_n_f32(0.0);
+        for c in 0..chunks {
+            let o = c * LANES;
+            acc0 = vaddq_f32(acc0, vld1q_f32(x.as_ptr().add(o)));
+            acc1 = vaddq_f32(acc1, vld1q_f32(x.as_ptr().add(o + 4)));
+        }
+        let mut lanes = [0f32; LANES];
+        store8(&mut lanes, acc0, acc1);
+        for (l, t) in (chunks * LANES..n).enumerate() {
+            lanes[l] += x[t];
+        }
+        hsum8(lanes)
+    }
+
+    #[target_feature(enable = "neon")]
+    pub unsafe fn max(x: &[f32]) -> f32 {
+        let n = x.len();
+        let chunks = n / LANES;
+        let mut acc0 = vdupq_n_f32(f32::NEG_INFINITY);
+        let mut acc1 = vdupq_n_f32(f32::NEG_INFINITY);
+        for c in 0..chunks {
+            let o = c * LANES;
+            acc0 = vmax_sel(acc0, vld1q_f32(x.as_ptr().add(o)));
+            acc1 = vmax_sel(acc1, vld1q_f32(x.as_ptr().add(o + 4)));
+        }
+        let mut lanes = [f32::NEG_INFINITY; LANES];
+        store8(&mut lanes, acc0, acc1);
+        for (l, t) in (chunks * LANES..n).enumerate() {
+            lanes[l] = sel_max(lanes[l], x[t]);
+        }
+        hmax8(lanes)
+    }
+
+    #[target_feature(enable = "neon")]
+    pub unsafe fn scale(x: &mut [f32], s: f32) {
+        let n = x.len();
+        let chunks = n / LANES;
+        let vs = vdupq_n_f32(s);
+        for c in 0..chunks {
+            let o = c * LANES;
+            let p = x.as_mut_ptr().add(o);
+            vst1q_f32(p, vmulq_f32(vld1q_f32(p), vs));
+            let p4 = p.add(4);
+            vst1q_f32(p4, vmulq_f32(vld1q_f32(p4), vs));
+        }
+        for v in &mut x[chunks * LANES..] {
+            *v *= s;
+        }
+    }
+
+    #[target_feature(enable = "neon")]
+    pub unsafe fn axpy(out: &mut [f32], x: &[f32], a: f32) {
+        let n = out.len();
+        let chunks = n / LANES;
+        let va = vdupq_n_f32(a);
+        for c in 0..chunks {
+            let o = c * LANES;
+            let p = out.as_mut_ptr().add(o);
+            let prod = vmulq_f32(va, vld1q_f32(x.as_ptr().add(o)));
+            vst1q_f32(p, vaddq_f32(vld1q_f32(p), prod));
+            let p4 = p.add(4);
+            let prod4 = vmulq_f32(va, vld1q_f32(x.as_ptr().add(o + 4)));
+            vst1q_f32(p4, vaddq_f32(vld1q_f32(p4), prod4));
+        }
+        for (o, xv) in out[chunks * LANES..].iter_mut().zip(&x[chunks * LANES..]) {
+            *o += a * *xv;
+        }
+    }
+
+    #[target_feature(enable = "neon")]
+    pub unsafe fn quest_ub(q: &[f32], minmax: &[f32]) -> f32 {
+        let d = q.len();
+        let (mn, mx) = minmax.split_at(d);
+        let chunks = d / LANES;
+        let mut acc0 = vdupq_n_f32(0.0);
+        let mut acc1 = vdupq_n_f32(0.0);
+        for c in 0..chunks {
+            let o = c * LANES;
+            let vq0 = vld1q_f32(q.as_ptr().add(o));
+            let a0 = vmulq_f32(vq0, vld1q_f32(mn.as_ptr().add(o)));
+            let b0 = vmulq_f32(vq0, vld1q_f32(mx.as_ptr().add(o)));
+            acc0 = vaddq_f32(acc0, vmax_sel(a0, b0));
+            let vq1 = vld1q_f32(q.as_ptr().add(o + 4));
+            let a1 = vmulq_f32(vq1, vld1q_f32(mn.as_ptr().add(o + 4)));
+            let b1 = vmulq_f32(vq1, vld1q_f32(mx.as_ptr().add(o + 4)));
+            acc1 = vaddq_f32(acc1, vmax_sel(a1, b1));
+        }
+        let mut lanes = [0f32; LANES];
+        store8(&mut lanes, acc0, acc1);
+        for (l, t) in (chunks * LANES..d).enumerate() {
+            lanes[l] += sel_max(q[t] * mn[t], q[t] * mx[t]);
+        }
+        hsum8(lanes)
+    }
+
+    #[target_feature(enable = "neon")]
+    pub unsafe fn rope_rotate(row: &mut [f32], cos2: &[f32], nsin2: &[f32]) {
+        let n = row.len();
+        let quads = n / 4;
+        for c in 0..quads {
+            let o = c * 4;
+            let p = row.as_mut_ptr().add(o);
+            let v = vld1q_f32(p);
+            // Swap each interleaved (even, odd) pair within the quad.
+            let sw = vrev64q_f32(v);
+            let t1 = vmulq_f32(v, vld1q_f32(cos2.as_ptr().add(o)));
+            let t2 = vmulq_f32(sw, vld1q_f32(nsin2.as_ptr().add(o)));
+            vst1q_f32(p, vaddq_f32(t1, t2));
+        }
+        let o = quads * 4;
+        super::scalar::rope_rotate(&mut row[o..], &cos2[o..], &nsin2[o..]);
+    }
+
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    /// Serializes the tests that read or write the process-global
+    /// dispatch flag: without it, `force_scalar_flag_pins_target`
+    /// toggling scalar mid-run would silently turn the vector-vs-scalar
+    /// comparisons below into scalar-vs-scalar (vacuously green).
+    static MODE_LOCK: std::sync::Mutex<()> = std::sync::Mutex::new(());
+
+    fn mode_lock() -> std::sync::MutexGuard<'static, ()> {
+        MODE_LOCK.lock().unwrap_or_else(|e| e.into_inner())
+    }
+
+    fn vecs(rng: &mut Rng, n: usize) -> (Vec<f32>, Vec<f32>) {
+        ((0..n).map(|_| rng.normal() as f32).collect(),
+         (0..n).map(|_| rng.normal() as f32).collect())
+    }
+
+    #[test]
+    fn scalar_dot_close_to_naive() {
+        let mut rng = Rng::new(1);
+        for n in [0usize, 1, 5, 8, 9, 16, 17, 100] {
+            let (a, b) = vecs(&mut rng, n);
+            let naive: f64 = a.iter().zip(&b).map(|(x, y)| *x as f64 * *y as f64).sum();
+            let got = scalar::dot(&a, &b) as f64;
+            assert!((got - naive).abs() <= 1e-4 * (1.0 + naive.abs()),
+                    "n={n}: {got} vs {naive}");
+        }
+    }
+
+    #[test]
+    fn active_target_matches_scalar_emulation_bitwise() {
+        // On AVX2/NEON hardware this compares vector vs scalar; on other
+        // machines it is a self-check. The cross-mode dispatch tests live
+        // in rust/tests/simd_parity.rs (they toggle the global flag).
+        let _g = mode_lock();
+        let mut rng = Rng::new(2);
+        for n in 0..=2 * LANES + 3 {
+            let (a, b) = vecs(&mut rng, n);
+            assert_eq!(dot(&a, &b).to_bits(), scalar::dot(&a, &b).to_bits(), "dot n={n}");
+            assert_eq!(sum(&a).to_bits(), scalar::sum(&a).to_bits(), "sum n={n}");
+            assert_eq!(max(&a).to_bits(), scalar::max(&a).to_bits(), "max n={n}");
+            let (q, _) = vecs(&mut rng, n);
+            let mm: Vec<f32> = {
+                let (lo, hi) = vecs(&mut rng, n);
+                let mut m = Vec::new();
+                // min row then max row (values need not be ordered for
+                // the kernel arithmetic itself).
+                m.extend_from_slice(&lo);
+                m.extend_from_slice(&hi);
+                m
+            };
+            assert_eq!(quest_ub(&q, &mm).to_bits(),
+                       scalar::quest_ub(&q, &mm).to_bits(), "quest n={n}");
+            let mut x1 = a.clone();
+            let mut x2 = a.clone();
+            scale(&mut x1, 1.7);
+            scalar::scale(&mut x2, 1.7);
+            assert_eq!(x1, x2, "scale n={n}");
+            let mut o1 = b.clone();
+            let mut o2 = b.clone();
+            axpy(&mut o1, &a, -0.3);
+            scalar::axpy(&mut o2, &a, -0.3);
+            assert_eq!(o1, o2, "axpy n={n}");
+            let mut c1 = vec![9.0; n];
+            copy(&mut c1, &a);
+            assert_eq!(c1, a, "copy n={n}");
+            fill(&mut c1, 3.25);
+            assert!(c1.iter().all(|&x| x == 3.25), "fill n={n}");
+        }
+        // RoPE: even lengths only.
+        for half in 0..=LANES + 2 {
+            let n = 2 * half;
+            let (mut r1, _) = vecs(&mut rng, n);
+            let mut r2 = r1.clone();
+            let (c2v, s2v) = vecs(&mut rng, n);
+            rope_rotate(&mut r1, &c2v, &s2v);
+            scalar::rope_rotate(&mut r2, &c2v, &s2v);
+            assert_eq!(r1, r2, "rope n={n}");
+        }
+    }
+
+    #[test]
+    fn dot_rows_matches_per_row_dot() {
+        let _g = mode_lock();
+        let mut rng = Rng::new(3);
+        for d in [1usize, 3, 8, 13, 32] {
+            let (q, _) = vecs(&mut rng, d);
+            let (rows, _) = vecs(&mut rng, 5 * d);
+            let mut out = vec![0f32; 5];
+            dot_rows(&q, &rows, d, 0.5, &mut out);
+            for j in 0..5 {
+                let want = dot(&q, &rows[j * d..(j + 1) * d]) * 0.5;
+                assert_eq!(out[j].to_bits(), want.to_bits(), "d={d} j={j}");
+            }
+        }
+    }
+
+    #[test]
+    fn softmax_row_sums_to_one_and_orders() {
+        let mut row = vec![1.0f32, 2.0, 3.0, -1.0, 0.5];
+        softmax_row(&mut row);
+        let s: f32 = row.iter().sum();
+        assert!((s - 1.0).abs() < 1e-5);
+        assert!(row[2] > row[1] && row[1] > row[0]);
+        let mut empty: Vec<f32> = Vec::new();
+        softmax_row(&mut empty); // no panic
+    }
+
+    #[test]
+    fn max_of_empty_is_neg_infinity() {
+        assert_eq!(max(&[]), f32::NEG_INFINITY);
+    }
+
+    #[test]
+    fn force_scalar_flag_pins_target() {
+        let _g = mode_lock();
+        set_scalar(true);
+        assert_eq!(target(), Target::Scalar);
+        assert_eq!(target_name(), "scalar");
+        set_scalar(false);
+        if std::env::var("SEERATTN_SIMD").as_deref() == Ok("scalar") {
+            // Env override (the CI forced-scalar job) cannot be un-forced.
+            assert_eq!(target(), Target::Scalar);
+        } else {
+            assert_eq!(target(), detected(),
+                       "set_scalar(false) must un-pin dispatch");
+        }
+    }
+
+    #[test]
+    fn detection_is_consistent() {
+        let f = cpu_features();
+        match detected() {
+            Target::Avx2Fma => assert!(f.avx2 && f.fma),
+            Target::Neon => assert!(f.neon),
+            Target::Scalar => {}
+        }
+    }
+}

@@ -1,0 +1,331 @@
+//! SIMD dispatch parity: every runtime-dispatched kernel must produce
+//! **bit-identical** results on the active vector target (AVX2+FMA /
+//! NEON) and the forced-scalar fallback — including every tail length —
+//! and that identity must propagate end-to-end: identical gate scores,
+//! Quest bounds, softmaxed rows, RoPE rotations, and served tokens on a
+//! serving trace. Pure host, default feature set.
+//!
+//! Every test here toggles the process-global dispatch flag, so they
+//! serialize on one mutex and always restore auto-dispatch before
+//! releasing it. (Under `SEERATTN_SIMD=scalar` — the CI forced-scalar
+//! job — both sides of each comparison run the scalar path and the
+//! tests degenerate to self-checks, which is the intent: that job is
+//! about the fallback not rotting.)
+
+use std::sync::Mutex;
+
+use seerattn::coordinator::{DecodeEngine, EngineGroup, GroupConfig, Request,
+                            SimConfig, SimEngine, SubmitOutcome};
+use seerattn::gate::{self, RopeTable};
+use seerattn::kvcache::KcompCache;
+use seerattn::model::ModelConfig;
+use seerattn::sparse::quest::QuestMeta;
+use seerattn::util::rng::Rng;
+use seerattn::util::simd;
+
+static MODE_LOCK: Mutex<()> = Mutex::new(());
+
+fn lock() -> std::sync::MutexGuard<'static, ()> {
+    MODE_LOCK.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// Run `f` with dispatch pinned to scalar (true) or auto (false),
+/// restoring auto afterwards. Caller must hold [`MODE_LOCK`].
+fn with_mode<R>(scalar: bool, f: impl FnOnce() -> R) -> R {
+    simd::set_scalar(scalar);
+    let r = f();
+    simd::set_scalar(false);
+    r
+}
+
+fn randv(rng: &mut Rng, n: usize) -> Vec<f32> {
+    (0..n).map(|_| rng.normal() as f32).collect()
+}
+
+fn bits(x: &[f32]) -> Vec<u32> {
+    x.iter().map(|v| v.to_bits()).collect()
+}
+
+/// Odd `head_dim`, non-multiple-of-8 even `d_gate`: every kernel's tail
+/// path is live on every call.
+fn odd_cfg() -> ModelConfig {
+    ModelConfig {
+        vocab: 16, d_model: 16, n_layers: 1, n_heads: 4, n_kv_heads: 2,
+        head_dim: 13, mlp_hidden: 16, rope_theta: 10000.0, rms_eps: 1e-5,
+        d_gate: 20, block_size: 4, max_seq: 64, group_size: 2,
+    }
+}
+
+// ---------------------------------------------------------------------
+// Raw kernels: every length through 2*LANES+1 (both tails exercised).
+// ---------------------------------------------------------------------
+
+#[test]
+fn kernels_bitwise_identical_across_dispatch_at_every_tail_length() {
+    let _g = lock();
+    let mut rng = Rng::new(901);
+    for n in 0..=2 * simd::LANES + 1 {
+        let a = randv(&mut rng, n);
+        let b = randv(&mut rng, n);
+        let mm = randv(&mut rng, 2 * n);
+
+        let scalar = with_mode(true, || {
+            (simd::dot(&a, &b), simd::sum(&a), simd::max(&a),
+             simd::quest_ub(&a, &mm))
+        });
+        let auto = with_mode(false, || {
+            (simd::dot(&a, &b), simd::sum(&a), simd::max(&a),
+             simd::quest_ub(&a, &mm))
+        });
+        assert_eq!(scalar.0.to_bits(), auto.0.to_bits(), "dot n={n}");
+        assert_eq!(scalar.1.to_bits(), auto.1.to_bits(), "sum n={n}");
+        assert_eq!(scalar.2.to_bits(), auto.2.to_bits(), "max n={n}");
+        assert_eq!(scalar.3.to_bits(), auto.3.to_bits(), "quest_ub n={n}");
+
+        // In-place kernels: run each mode on its own copy.
+        let run_inplace = |scalar_mode: bool| {
+            with_mode(scalar_mode, || {
+                let mut sc = a.clone();
+                simd::scale(&mut sc, -1.625);
+                let mut ax = b.clone();
+                simd::axpy(&mut ax, &a, 0.375);
+                let mut sm = a.clone();
+                simd::softmax_row(&mut sm);
+                let mut cp = vec![7.5f32; n];
+                simd::copy(&mut cp, &b);
+                let mut fl = a.clone();
+                simd::fill(&mut fl, 0.1);
+                (sc, ax, sm, cp, fl)
+            })
+        };
+        let s = run_inplace(true);
+        let v = run_inplace(false);
+        assert_eq!(bits(&s.0), bits(&v.0), "scale n={n}");
+        assert_eq!(bits(&s.1), bits(&v.1), "axpy n={n}");
+        assert_eq!(bits(&s.2), bits(&v.2), "softmax n={n}");
+        assert_eq!(bits(&s.3), bits(&v.3), "copy n={n}");
+        assert_eq!(bits(&s.4), bits(&v.4), "fill n={n}");
+    }
+    // RoPE rotation: even lengths only (interleaved pairs).
+    for half in 0..=simd::LANES + 1 {
+        let n = 2 * half;
+        let row = randv(&mut rng, n);
+        let cos2 = randv(&mut rng, n);
+        let nsin2 = randv(&mut rng, n);
+        let run = |scalar_mode: bool| {
+            with_mode(scalar_mode, || {
+                let mut r = row.clone();
+                simd::rope_rotate(&mut r, &cos2, &nsin2);
+                r
+            })
+        };
+        assert_eq!(bits(&run(true)), bits(&run(false)), "rope n={n}");
+    }
+}
+
+#[test]
+fn dot_rows_bitwise_identical_across_dispatch_at_odd_dims() {
+    let _g = lock();
+    let mut rng = Rng::new(902);
+    for d in [1usize, 3, 7, 8, 9, 13, 17, 20] {
+        let q = randv(&mut rng, d);
+        let rows = randv(&mut rng, 6 * d);
+        let run = |scalar_mode: bool| {
+            with_mode(scalar_mode, || {
+                let mut out = vec![0f32; 6];
+                simd::dot_rows(&q, &rows, d, 0.25, &mut out);
+                out
+            })
+        };
+        assert_eq!(bits(&run(true)), bits(&run(false)), "dot_rows d={d}");
+    }
+}
+
+// ---------------------------------------------------------------------
+// Module level: gate scoring, Quest, softmax, RoPE through their real
+// call sites, at odd dims, across dispatch modes.
+// ---------------------------------------------------------------------
+
+#[test]
+fn kcomp_scores_bitwise_identical_across_dispatch() {
+    let _g = lock();
+    let c = odd_cfg();
+    let mut rng = Rng::new(903);
+    let wk = randv(&mut rng, c.n_kv_heads * 3 * c.head_dim * c.d_gate);
+    let tokens: Vec<Vec<f32>> =
+        (0..23).map(|_| randv(&mut rng, c.n_kv_heads * c.head_dim)).collect();
+    let queries: Vec<Vec<f32>> =
+        (0..23).map(|_| randv(&mut rng, c.n_kv_heads * c.d_gate)).collect();
+    let run = |scalar_mode: bool| {
+        with_mode(scalar_mode, || {
+            // Build the cache inside the mode too: flushes (pool +
+            // axpy projection + RoPE) must also be mode-invariant.
+            let mut kc = KcompCache::new(&c, c.block_size);
+            let mut all_scores: Vec<Vec<u32>> = Vec::new();
+            let mut buf: Vec<Vec<f32>> = Vec::new();
+            for (k, q) in tokens.iter().zip(&queries) {
+                kc.append(&c, &wk, k);
+                kc.score_into(q, &mut buf);
+                for row in &buf {
+                    all_scores.push(bits(row));
+                }
+            }
+            (all_scores, bits(kc.entries_raw()))
+        })
+    };
+    let (s_scores, s_entries) = run(true);
+    let (v_scores, v_entries) = run(false);
+    assert_eq!(s_entries, v_entries, "kcomp entries diverged across dispatch");
+    assert_eq!(s_scores, v_scores, "gate scores diverged across dispatch");
+}
+
+#[test]
+fn quest_scores_bitwise_identical_across_dispatch() {
+    let _g = lock();
+    let c = odd_cfg();
+    let mut rng = Rng::new(904);
+    let tokens: Vec<Vec<f32>> =
+        (0..19).map(|_| randv(&mut rng, c.n_kv_heads * c.head_dim)).collect();
+    let q = randv(&mut rng, c.head_dim);
+    let run = |scalar_mode: bool| {
+        with_mode(scalar_mode, || {
+            let mut m = QuestMeta::new(&c, c.block_size, c.max_seq);
+            let mut out = Vec::new();
+            let mut all = Vec::new();
+            for k in &tokens {
+                m.append(k);
+                for h in 0..c.n_kv_heads {
+                    m.scores_into(h, &q, &mut out);
+                    all.push(bits(&out));
+                }
+            }
+            all
+        })
+    };
+    assert_eq!(run(true), run(false), "quest bounds diverged across dispatch");
+}
+
+#[test]
+fn softmax_rows_bitwise_identical_across_dispatch() {
+    let _g = lock();
+    let mut rng = Rng::new(905);
+    for n in 1..=2 * simd::LANES + 1 {
+        let rows = randv(&mut rng, 3 * n);
+        let run = |scalar_mode: bool| {
+            with_mode(scalar_mode, || {
+                let mut x = rows.clone();
+                gate::softmax_rows(&mut x, n);
+                x
+            })
+        };
+        assert_eq!(bits(&run(true)), bits(&run(false)), "softmax n={n}");
+    }
+}
+
+#[test]
+fn rope_table_bitwise_identical_across_dispatch_and_to_reference() {
+    let _g = lock();
+    let mut rng = Rng::new(906);
+    for &dim in &[2usize, 4, 10, 16, 20, 26] {
+        let table = RopeTable::new(dim, 10000.0);
+        for _ in 0..8 {
+            let x = randv(&mut rng, dim * 3);
+            let pos = rng.below(100_000) as i64;
+            let run = |scalar_mode: bool| {
+                with_mode(scalar_mode, || {
+                    let mut y = x.clone();
+                    table.apply(&mut y, pos);
+                    y
+                })
+            };
+            let s = run(true);
+            let v = run(false);
+            assert_eq!(bits(&s), bits(&v), "rope dim={dim} pos={pos}");
+            // And both equal the freq-recomputing reference.
+            let mut r = x.clone();
+            gate::rope_inplace(&mut r, dim, pos, 10000.0);
+            assert_eq!(bits(&s), bits(&r), "rope vs reference dim={dim}");
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// End to end: a serving trace through the real shard/group machinery
+// must serve bit-identical tokens under --no-simd and auto-dispatch
+// (the SimEngine token function folds a simd::dot fingerprint into
+// every token, so kernel divergence would change the stream).
+// ---------------------------------------------------------------------
+
+#[test]
+fn serving_trace_tokens_identical_with_and_without_simd() {
+    let _g = lock();
+    let sim_cfg = SimConfig { batch: 2, ..Default::default() };
+    let prompts: Vec<Vec<i32>> =
+        (0..10).map(|i| vec![3, 40 + i, 80 + 3 * i, 9]).collect();
+
+    let run = |scalar_mode: bool| {
+        with_mode(scalar_mode, || {
+            // Direct engine pass (single-threaded determinism check).
+            let mut eng = SimEngine::new(sim_cfg);
+            for (i, p) in prompts.iter().enumerate() {
+                DecodeEngine::submit(&mut eng, Request::new(i as u64, p.clone(), 24));
+            }
+            let mut direct: Vec<(u64, Vec<i32>)> = eng
+                .run_to_completion()
+                .unwrap()
+                .into_iter()
+                .map(|c| (c.id, c.generated))
+                .collect();
+            direct.sort();
+
+            // Group pass: 2 shards, real router/steal/completion fan-in.
+            let gcfg = GroupConfig { shards: 2, affinity_slack: 1,
+                                     queue_depth: 16 };
+            let mut group: EngineGroup<SimEngine> =
+                EngineGroup::with_config(gcfg, move |_| Ok(SimEngine::new(sim_cfg)))
+                    .unwrap();
+            for (i, p) in prompts.iter().enumerate() {
+                let out = group
+                    .submit(Request::new(100 + i as u64, p.clone(), 24))
+                    .unwrap();
+                assert!(matches!(out, SubmitOutcome::Routed(_)),
+                        "queue_depth 16 must admit the whole trace");
+            }
+            let mut grouped: Vec<(u64, Vec<i32>)> = Vec::new();
+            while grouped.len() < prompts.len() {
+                if let Some(c) =
+                    group.poll(std::time::Duration::from_millis(200)).unwrap()
+                {
+                    grouped.push((c.id, c.generated));
+                }
+            }
+            group.shutdown().unwrap();
+            grouped.sort();
+            (direct, grouped)
+        })
+    };
+
+    let (scalar_direct, scalar_grouped) = run(true);
+    let (auto_direct, auto_grouped) = run(false);
+    assert_eq!(scalar_direct, auto_direct,
+               "served tokens diverged between --no-simd and auto dispatch");
+    assert_eq!(scalar_grouped, auto_grouped,
+               "sharded serving tokens diverged between dispatch modes");
+    // Shard placement must not matter either (same content, offset ids).
+    for ((da, dg), (ga, gg)) in scalar_direct.iter().zip(&scalar_grouped) {
+        assert_eq!(da + 100, *ga);
+        assert_eq!(dg, gg, "group output differs from direct engine");
+    }
+}
+
+#[test]
+fn expected_generation_is_dispatch_invariant() {
+    let _g = lock();
+    let cfg = SimConfig::default();
+    for i in 0..12 {
+        let prompt = vec![1 + i, 7, 2 * i];
+        let s = with_mode(true, || SimEngine::expected_generation(&cfg, &prompt, 20));
+        let v = with_mode(false, || SimEngine::expected_generation(&cfg, &prompt, 20));
+        assert_eq!(s, v, "prompt {prompt:?}");
+    }
+}

@@ -18,6 +18,12 @@ fi
 if [[ "${SEERATTN_BENCH_SMOKE:-0}" == "1" ]]; then
   echo "== smoke mode: asserts only, timings ignored, no JSON rewrite =="
 fi
+# SIMD dispatch: auto unless SEERATTN_SIMD=scalar pins the fallback.
+# The decode bench records CPU features (avx2/fma/neon) and the resolved
+# dispatch target in BENCH_decode.json's config.simd block, and measures
+# simd-vs-scalar in the same run — so numbers stay comparable across
+# machines and modes.
+echo "== simd dispatch: ${SEERATTN_SIMD:-auto} =="
 
 echo "== decode_hot_path (seed ${SEERATTN_BENCH_SEED}) =="
 cargo bench --manifest-path rust/Cargo.toml --bench decode_hot_path
