@@ -24,8 +24,10 @@ use anyhow::{bail, Result};
 
 use super::arena::StagingArena;
 use super::gather::{self, DenseGeom, GatherJob, SparseGeom};
+use super::memory::PageGeometry;
 use super::metrics::Metrics;
-use super::request::{Completion, EngineEvent, Request, SeqStats, StopReason};
+use super::request::{Completion, EngineEvent, Priority, QueuedReq, Request,
+                     SeqStats, StopReason};
 use super::sampling;
 use super::DecodeEngine;
 use crate::gate;
@@ -72,6 +74,10 @@ pub struct EngineConfig {
     /// (nor useful: both modes produce identical output, only speed
     /// differs).
     pub simd: bool,
+    /// Times a request may be preempted (pages dropped, requeued for
+    /// re-prefill) before it is terminated with
+    /// [`StopReason::ResourceExhausted`].
+    pub preempt_retries: u32,
 }
 
 impl Default for EngineConfig {
@@ -87,6 +93,7 @@ impl Default for EngineConfig {
             offload_fast_pages: 0,
             gather_threads: 0,
             simd: true,
+            preempt_retries: 3,
         }
     }
 }
@@ -106,6 +113,8 @@ struct Slot {
     generated: Vec<i32>,
     stats: SeqStats,
     stop: Option<StopReason>,
+    /// Times this request has been preempted so far.
+    retries: u32,
 }
 
 /// Stop decision after emitting `tok` into `slot` (shared by the prefill
@@ -123,7 +132,7 @@ pub struct Engine {
     params: ParamStore,
     pool: PagedKvPool,
     slots: Vec<Option<Slot>>,
-    queue: VecDeque<(Request, Instant)>,
+    queue: VecDeque<QueuedReq>,
     rng: Rng,
     pub metrics: Metrics,
     pub vocab: Vocab,
@@ -279,10 +288,18 @@ impl Engine {
     /// router passes its own timestamp so channel dwell counts toward
     /// TTFT/e2e).
     pub fn submit_at(&mut self, req: Request, arrived: Instant) {
-        assert!(req.prompt.len() + 2 < self.max_seq,
-                "prompt {} too long for context {}", req.prompt.len(), self.max_seq);
+        self.submit_queued(QueuedReq::fresh(req, arrived));
+    }
+
+    /// Enqueue a queued-request record, preserving resume state (partial
+    /// generation from a preemption, original arrival, first-token
+    /// instant, retry count).
+    pub fn submit_queued(&mut self, q: QueuedReq) {
+        assert!(q.req.prompt.len() + 2 < self.max_seq,
+                "prompt {} too long for context {}", q.req.prompt.len(),
+                self.max_seq);
         self.metrics.start_clock();
-        self.queue.push_back((req, arrived));
+        self.queue.push_back(q);
     }
 
     pub fn pending(&self) -> usize {
@@ -329,6 +346,12 @@ impl Engine {
     fn step_core(&mut self, sink: &mut dyn FnMut(EngineEvent)) -> Result<()> {
         self.apply_control_stops();
         self.reap_into(sink);
+        // Priority preemption: a strictly-higher-priority request waiting
+        // in the queue evicts the weakest occupant of a full batch at
+        // this step boundary (its pages released through the same reap
+        // path cancellation uses).
+        self.preempt_for_priority(sink);
+        self.reap_into(sink);
         if !self.queue.is_empty() && self.slots.iter().any(|s| s.is_none()) {
             self.admit_and_prefill(sink)?;
         } else if self.active() > 0 {
@@ -336,6 +359,85 @@ impl Engine {
         }
         self.reap_into(sink);
         Ok(())
+    }
+
+    /// Evict the weakest active request (lowest priority, youngest on
+    /// ties) when the batch is full and the queue holds a strictly
+    /// higher-priority request. The victim's pages are dropped and it
+    /// requeues at the front carrying its partial generation for
+    /// re-prefill; a victim whose retry budget is spent is terminated
+    /// with [`StopReason::ResourceExhausted`] instead (through the same
+    /// reap path, so its pages free identically).
+    fn preempt_for_priority(&mut self, sink: &mut dyn FnMut(EngineEvent)) {
+        let Some(best) = self.queue.iter().map(|q| q.req.priority).max() else {
+            return;
+        };
+        if self.slots.iter().any(|s| s.is_none()) {
+            return; // a free slot admits without eviction
+        }
+        let mut victim: Option<usize> = None;
+        for i in 0..self.batch {
+            let Some(c) = self.slots[i].as_ref() else { continue };
+            if c.stop.is_some() {
+                return; // a slot is already freeing this step
+            }
+            victim = Some(match victim {
+                None => i,
+                Some(v) => {
+                    let cur = self.slots[v].as_ref().unwrap();
+                    if c.req.priority < cur.req.priority
+                        || (c.req.priority == cur.req.priority
+                            && c.admitted >= cur.admitted)
+                    {
+                        i
+                    } else {
+                        v
+                    }
+                }
+            });
+        }
+        let Some(v) = victim else { return };
+        if self.slots[v].as_ref().unwrap().req.priority >= best {
+            return; // never evict an equal-or-higher-priority occupant
+        }
+        let mut slot = self.slots[v].take().unwrap();
+        if slot.retries >= self.ecfg.preempt_retries {
+            // Retry budget spent: terminal, pages freed by the reap.
+            slot.stop = Some(StopReason::ResourceExhausted);
+            self.slots[v] = Some(slot);
+            return;
+        }
+        for kv in &mut slot.kv {
+            if let Some(t) = &mut self.offload {
+                for &pg in &kv.pages {
+                    t.invalidate(pg);
+                }
+            }
+            kv.release(&mut self.pool);
+        }
+        self.metrics.requests_preempted += 1;
+        sink(EngineEvent::Preempted { id: slot.req.id });
+        self.queue.push_front(QueuedReq {
+            req: slot.req,
+            arrived: slot.admitted,
+            resume: slot.generated,
+            first_token_at: slot.first_token,
+            retries: slot.retries + 1,
+        });
+    }
+
+    /// Remove the best queued request: highest priority, front-most
+    /// (oldest) among equals.
+    fn pop_best_queued(&mut self) -> Option<QueuedReq> {
+        let mut best: Option<usize> = None;
+        for (j, q) in self.queue.iter().enumerate() {
+            best = Some(match best {
+                None => j,
+                Some(b) if q.req.priority > self.queue[b].req.priority => j,
+                Some(b) => b,
+            });
+        }
+        best.and_then(|j| self.queue.remove(j))
     }
 
     /// Flag request `id` for cancellation; `true` iff this engine owns it
@@ -346,7 +448,7 @@ impl Engine {
             .iter()
             .flatten()
             .any(|s| s.stop.is_none() && s.req.id == id)
-            || self.queue.iter().any(|(r, _)| r.id == id);
+            || self.queue.iter().any(|q| q.req.id == id);
         if known {
             self.cancels.insert(id);
         }
@@ -386,9 +488,16 @@ impl Engine {
         let mut new_slots: Vec<usize> = Vec::new();
         for i in 0..self.batch {
             if self.slots[i].is_none() {
-                if let Some((req, admitted)) = self.queue.pop_front() {
+                if let Some(q) = self.pop_best_queued() {
+                    let QueuedReq { req, arrived, resume, first_token_at,
+                                    retries } = q;
+                    // Resume replay: the effective prefill input is
+                    // prompt ++ resume[..k-1]; the last resume token
+                    // plays the sampled-first-token role below.
+                    let mut tokens = req.prompt.clone();
+                    tokens.extend_from_slice(&resume);
                     self.slots[i] = Some(Slot {
-                        tokens: req.prompt.clone(),
+                        tokens,
                         len: 0,
                         kv: (0..self.cfg.n_layers).map(|_| SeqKv::new()).collect(),
                         kcomp: (0..self.cfg.n_layers)
@@ -399,12 +508,13 @@ impl Engine {
                             .map(|_| QuestMeta::new(&self.cfg, self.ecfg.block_size,
                                                     self.max_seq))
                             .collect(),
-                        generated: Vec::new(),
+                        generated: resume,
                         stats: SeqStats::default(),
                         stop: None,
                         req,
-                        admitted,
-                        first_token: None,
+                        admitted: arrived,
+                        first_token: first_token_at,
+                        retries,
                     });
                     new_slots.push(i);
                 }
@@ -422,13 +532,21 @@ impl Engine {
         // `ids` is dirty-extent cleared on acquire, so only new slots get
         // nonzero spans and no fresh buffers are allocated.
         let set = arena.prefill(b, s, hkv * dh);
+        // Effective prefill length: the whole token history for fresh
+        // requests (= the prompt), all but the trailing resume token for
+        // preempted ones (it is not yet in KV, exactly like a freshly
+        // sampled first token).
+        let eff_len = |slot: &Slot| {
+            slot.tokens.len() - usize::from(!slot.generated.is_empty())
+        };
         {
             let (ids, seq_len, dirty) = set.ids_mut();
             for &i in &new_slots {
-                let p = &slots[i].as_ref().unwrap().req.prompt;
-                ids[i * s..i * s + p.len()].copy_from_slice(p);
-                seq_len[i] = p.len() as i32;
-                dirty[i] = p.len();
+                let slot = slots[i].as_ref().unwrap();
+                let n = eff_len(slot);
+                ids[i * s..i * s + n].copy_from_slice(&slot.tokens[..n]);
+                seq_len[i] = n as i32;
+                dirty[i] = n;
             }
         }
         let outs = {
@@ -451,7 +569,7 @@ impl Engine {
         // Pre-reserved per-token scatter rows (arena-owned, not per-call).
         let (krow, vrow, prow) = set.rows_mut();
         for &i in &new_slots {
-            let plen = slots[i].as_ref().unwrap().req.prompt.len();
+            let plen = eff_len(slots[i].as_ref().unwrap());
             for t in 0..plen {
                 for l in 0..l_n {
                     for h in 0..hkv {
@@ -465,6 +583,21 @@ impl Engine {
                     slot.quest[l].append(krow);
                     slot.kcomp[l].append(cfg, &wk_gates[l], prow);
                 }
+            }
+            if !slots[i].as_ref().unwrap().generated.is_empty() {
+                // Resume replay: the trailing resume token already sits
+                // in `tokens`/`generated`; with greedy decoding the
+                // logits at plen-1 would reproduce it exactly, so no
+                // sampling and — crucially — no re-emitted events
+                // (indices 0..k-1 reached the client before the
+                // preemption; decode continues at index k).
+                let slot = slots[i].as_mut().unwrap();
+                slot.len = plen;
+                let tok = *slot.tokens.last().unwrap();
+                if let Some(stop) = stop_for(slot, tok, vocab.eos, s) {
+                    slot.stop = Some(stop);
+                }
+                continue;
             }
             // First generated token from logits[i, plen-1].
             let row = &lg[(i * s + plen - 1) * nvocab..(i * s + plen) * nvocab];
@@ -481,6 +614,8 @@ impl Engine {
             sink(EngineEvent::Started { id });
             sink(EngineEvent::Token { id, tok, index: 0 });
         }
+        metrics.pages_peak =
+            metrics.pages_peak.max(pool.capacity() - pool.free_pages());
         metrics.prefill_s.push(t0.elapsed().as_secs_f64());
         Ok(())
     }
@@ -584,6 +719,10 @@ impl Engine {
             self.check_stop(i, tok);
             sink(EngineEvent::Token { id, tok, index });
         }
+        self.metrics.pages_peak = self
+            .metrics
+            .pages_peak
+            .max(self.pool.capacity() - self.pool.free_pages());
         self.metrics.decode_step_s.push(t0.elapsed().as_secs_f64());
         Ok(())
     }
@@ -1000,6 +1139,30 @@ impl Engine {
 impl DecodeEngine for Engine {
     fn submit_at(&mut self, req: Request, arrived: Instant) {
         Engine::submit_at(self, req, arrived);
+    }
+
+    fn submit_queued(&mut self, q: QueuedReq) {
+        Engine::submit_queued(self, q);
+    }
+
+    fn page_geometry(&self) -> PageGeometry {
+        PageGeometry {
+            pool_pages: self.pool.capacity(),
+            tokens_per_page: self.ecfg.block_size,
+            rows_per_seq: self.cfg.n_layers,
+            fixed_pages_per_seq: 0,
+            slots: self.batch,
+        }
+    }
+
+    fn min_priority(&self) -> Option<Priority> {
+        self.slots
+            .iter()
+            .flatten()
+            .filter(|s| s.stop.is_none())
+            .map(|s| s.req.priority)
+            .chain(self.queue.iter().map(|q| q.req.priority))
+            .min()
     }
 
     fn step(&mut self) -> Result<Vec<Completion>> {

@@ -1,0 +1,264 @@
+//! Per-shard KV memory planning.
+//!
+//! Admission today is gated only by a *count* (`batch + queue_depth`
+//! requests per shard), which says nothing about whether those requests
+//! *fit in KV memory*: a burst of long prompts can be admitted and then
+//! starve each other's pages mid-decode. This module makes the
+//! `queue_depth` knob principled by planning in the same unit the
+//! engines allocate in — pages.
+//!
+//! Two pieces:
+//!
+//! - [`PageGeometry`] — how an engine's page pool maps request shapes to
+//!   pages. Reported once per shard at startup (in the `Ready` event) so
+//!   the router can project a request's **peak** page demand (prompt +
+//!   `max_new`, page-rounded) without asking the engine.
+//! - [`MemoryPlan`] — an atomic ledger of pages the router has promised
+//!   to requests routed to a shard (admitted *or* still queued). A
+//!   request reserves its projected peak at submit and releases it when
+//!   its completion is observed, so the plan bounds *future* demand, not
+//!   just current usage. When a reservation would overflow the shard's
+//!   budget on every shard, the router answers `Deferred` (retry later —
+//!   memory, not compute, is the bottleneck) instead of `Rejected`.
+//!
+//! The plan is deliberately conservative (peak projection assumes every
+//! request decodes to `max_new`) and deliberately over-committed (the
+//! budget covers the queue as well as the pool, since queued requests
+//! only need their pages once a slot frees). Mid-decode shortfalls that
+//! slip through — or are injected by the fault harness — are handled by
+//! preemption in the engines, not here.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+/// How an engine's KV page pool maps request shapes to page counts.
+/// `Default` (all zeros) means "no page accounting": the plan stays
+/// disabled and admission falls back to pure count gating.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct PageGeometry {
+    /// Total pages in the engine's pool.
+    pub pool_pages: usize,
+    /// Tokens covered by one page row (0 = token count does not matter;
+    /// use `fixed_pages_per_seq`).
+    pub tokens_per_page: usize,
+    /// Page rows allocated per sequence per token-page (e.g. one per
+    /// layer for the PJRT engine). Treated as 1 when 0.
+    pub rows_per_seq: usize,
+    /// Flat per-sequence page cost for engines whose allocation does not
+    /// depend on sequence length (the sim's legacy `pages_per_slot`
+    /// model). Takes precedence over the token model when non-zero.
+    pub fixed_pages_per_seq: usize,
+    /// Concurrent batch slots the pool serves.
+    pub slots: usize,
+}
+
+impl PageGeometry {
+    /// Projected peak pages for a request: its full KV footprint if it
+    /// decodes all the way to `max_new` (+1 for the trailing token whose
+    /// KV lands after the stop decision), page-rounded.
+    pub fn project(&self, prompt_len: usize, max_new: usize) -> usize {
+        if self.fixed_pages_per_seq > 0 {
+            return self.fixed_pages_per_seq;
+        }
+        if self.tokens_per_page == 0 {
+            return 0;
+        }
+        let tokens = prompt_len + max_new + 1;
+        tokens.div_ceil(self.tokens_per_page) * self.rows_per_seq.max(1)
+    }
+
+    /// Page budget the router may promise against this shard: the pool
+    /// itself plus one average-sequence share per overflow-queue slot
+    /// (queued requests need their pages only once a batch slot frees,
+    /// so a full pool with a full queue is an intended 1x+queue
+    /// overcommit — *unbounded* overcommit is what the plan prevents).
+    pub fn budget(&self, queue_depth: usize) -> usize {
+        if self.pool_pages == 0 {
+            return 0;
+        }
+        let share = if self.fixed_pages_per_seq > 0 {
+            self.fixed_pages_per_seq
+        } else {
+            self.pool_pages.div_ceil(self.slots.max(1))
+        };
+        self.pool_pages + queue_depth * share
+    }
+}
+
+/// Atomic ledger of pages promised to one shard. Created disabled
+/// (budget 0) and armed by the router once the shard reports its
+/// [`PageGeometry`]; a disabled plan admits everything, preserving
+/// pre-memory-planning behaviour for engines that report no geometry.
+#[derive(Debug, Default)]
+pub struct MemoryPlan {
+    budget: AtomicUsize,
+    planned: AtomicUsize,
+    peak: AtomicUsize,
+}
+
+impl MemoryPlan {
+    pub fn set_budget(&self, budget: usize) {
+        self.budget.store(budget, Ordering::Relaxed);
+    }
+
+    pub fn enabled(&self) -> bool {
+        self.budget.load(Ordering::Relaxed) > 0
+    }
+
+    pub fn budget(&self) -> usize {
+        self.budget.load(Ordering::Relaxed)
+    }
+
+    pub fn planned(&self) -> usize {
+        self.planned.load(Ordering::Relaxed)
+    }
+
+    /// High-water mark of `planned` (pages promised at once).
+    pub fn peak(&self) -> usize {
+        self.peak.load(Ordering::Relaxed)
+    }
+
+    /// Would `pages` more fit under the budget right now? (Advisory —
+    /// racy by design; the authoritative check is `try_reserve`.)
+    pub fn fits(&self, pages: usize) -> bool {
+        !self.enabled()
+            || self.planned.load(Ordering::Relaxed) + pages
+                <= self.budget.load(Ordering::Relaxed)
+    }
+
+    /// Reserve `pages`, failing (and rolling back) if that would exceed
+    /// the budget. Always succeeds on a disabled plan.
+    pub fn try_reserve(&self, pages: usize) -> bool {
+        if !self.enabled() || pages == 0 {
+            return true;
+        }
+        let prev = self.planned.fetch_add(pages, Ordering::Relaxed);
+        if prev + pages > self.budget.load(Ordering::Relaxed) {
+            self.planned.fetch_sub(pages, Ordering::Relaxed);
+            return false;
+        }
+        self.peak.fetch_max(prev + pages, Ordering::Relaxed);
+        true
+    }
+
+    /// Reserve without a budget check — used when a reservation is
+    /// *transferred* from another shard (work stealing moves the request
+    /// whether or not the thief's plan has headroom; the thief chose to
+    /// take the work).
+    pub fn force_reserve(&self, pages: usize) {
+        if !self.enabled() || pages == 0 {
+            return;
+        }
+        let prev = self.planned.fetch_add(pages, Ordering::Relaxed);
+        self.peak.fetch_max(prev + pages, Ordering::Relaxed);
+    }
+
+    /// Release a reservation (on completion, cancellation, or transfer).
+    /// Saturates at zero so a release racing a budget re-arm can't
+    /// underflow.
+    pub fn release(&self, pages: usize) {
+        if pages == 0 {
+            return;
+        }
+        let _ = self.planned.fetch_update(
+            Ordering::Relaxed,
+            Ordering::Relaxed,
+            |p| Some(p.saturating_sub(pages)),
+        );
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn token_model_projection_rounds_up_pages() {
+        let g = PageGeometry {
+            pool_pages: 64,
+            tokens_per_page: 16,
+            rows_per_seq: 2,
+            fixed_pages_per_seq: 0,
+            slots: 4,
+        };
+        // 10 prompt + 5 new + 1 trailing = 16 tokens = 1 page * 2 rows.
+        assert_eq!(g.project(10, 5), 2);
+        // 17 tokens -> 2 pages * 2 rows.
+        assert_eq!(g.project(10, 6), 4);
+        assert_eq!(g.project(0, 0), 2, "even an empty request costs a page");
+    }
+
+    #[test]
+    fn fixed_model_projection_ignores_lengths() {
+        let g = PageGeometry {
+            pool_pages: 16,
+            tokens_per_page: 0,
+            rows_per_seq: 0,
+            fixed_pages_per_seq: 4,
+            slots: 4,
+        };
+        assert_eq!(g.project(1, 1), 4);
+        assert_eq!(g.project(500, 100), 4);
+    }
+
+    #[test]
+    fn budget_adds_one_share_per_queue_slot() {
+        let fixed = PageGeometry {
+            pool_pages: 16,
+            fixed_pages_per_seq: 4,
+            slots: 4,
+            ..Default::default()
+        };
+        assert_eq!(fixed.budget(0), 16);
+        assert_eq!(fixed.budget(2), 24);
+        let tokens = PageGeometry {
+            pool_pages: 10,
+            tokens_per_page: 8,
+            rows_per_seq: 1,
+            fixed_pages_per_seq: 0,
+            slots: 4,
+        };
+        // share = ceil(10/4) = 3.
+        assert_eq!(tokens.budget(2), 16);
+        assert_eq!(PageGeometry::default().budget(32), 0, "no pool, no budget");
+    }
+
+    #[test]
+    fn disabled_plan_admits_everything() {
+        let p = MemoryPlan::default();
+        assert!(!p.enabled());
+        assert!(p.fits(usize::MAX / 2));
+        assert!(p.try_reserve(1_000_000));
+        assert_eq!(p.planned(), 0, "disabled plan keeps no ledger");
+    }
+
+    #[test]
+    fn reserve_release_tracks_budget_and_peak() {
+        let p = MemoryPlan::default();
+        p.set_budget(10);
+        assert!(p.enabled());
+        assert!(p.try_reserve(6));
+        assert!(p.try_reserve(4));
+        assert_eq!(p.planned(), 10);
+        assert!(!p.try_reserve(1), "budget exhausted");
+        assert_eq!(p.planned(), 10, "failed reserve rolls back");
+        p.release(4);
+        assert_eq!(p.planned(), 6);
+        assert!(p.try_reserve(3));
+        assert_eq!(p.peak(), 10, "peak survives releases");
+        p.release(100);
+        assert_eq!(p.planned(), 0, "release saturates at zero");
+    }
+
+    #[test]
+    fn force_reserve_ignores_budget_but_moves_peak() {
+        let p = MemoryPlan::default();
+        p.set_budget(4);
+        assert!(p.try_reserve(4));
+        p.force_reserve(3);
+        assert_eq!(p.planned(), 7, "transfers land even over budget");
+        assert_eq!(p.peak(), 7);
+        assert!(!p.try_reserve(1));
+        p.release(7);
+        assert!(p.try_reserve(4));
+    }
+}

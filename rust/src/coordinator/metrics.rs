@@ -23,6 +23,16 @@ pub struct Metrics {
     /// Requests stopped by [`StopReason::DeadlineExceeded`]; same
     /// accounting rules as `requests_cancelled`.
     pub requests_deadline_expired: u64,
+    /// Requests stopped by [`StopReason::ResourceExhausted`] (preemption
+    /// retry budget spent, or infeasible against the page pool); same
+    /// accounting rules as `requests_cancelled`.
+    pub requests_exhausted: u64,
+    /// Times a request was preempted mid-decode and requeued (one
+    /// request may count several times). Preemption is not terminal, so
+    /// this is a churn gauge, not a request outcome.
+    pub requests_preempted: u64,
+    /// Peak KV pages in use at once on this engine.
+    pub pages_peak: usize,
     pub kv_bytes_touched: u64,
     pub kv_bytes_dense_equiv: u64,
     /// Requests this shard pulled from other shards' overflow queues
@@ -49,6 +59,7 @@ impl Metrics {
         match stop {
             StopReason::Cancelled => self.requests_cancelled += 1,
             StopReason::DeadlineExceeded => self.requests_deadline_expired += 1,
+            StopReason::ResourceExhausted => self.requests_exhausted += 1,
             _ => {
                 self.ttft_s.push(ttft.as_secs_f64());
                 self.e2e_s.push(e2e.as_secs_f64());
@@ -71,11 +82,15 @@ impl Metrics {
         self.requests_completed += other.requests_completed;
         self.requests_cancelled += other.requests_cancelled;
         self.requests_deadline_expired += other.requests_deadline_expired;
+        self.requests_exhausted += other.requests_exhausted;
+        self.requests_preempted += other.requests_preempted;
         self.kv_bytes_touched += other.kv_bytes_touched;
         self.kv_bytes_dense_equiv += other.kv_bytes_dense_equiv;
         self.requests_stolen += other.requests_stolen;
-        // A fleet's "peak queue" is the worst shard's, not a sum.
+        // A fleet's "peak queue" is the worst shard's, not a sum; same
+        // for peak pages (per-shard pools are independent).
         self.queue_peak = self.queue_peak.max(other.queue_peak);
+        self.pages_peak = self.pages_peak.max(other.pages_peak);
     }
 
     /// Generated tokens per wall-clock second since start_clock().
@@ -97,12 +112,15 @@ impl Metrics {
 
     pub fn report(&self) -> String {
         format!(
-            "requests={} tokens={} tps={:.1} cancelled={} deadline-expired={}\n  ttft    {}\n  e2e     {}\n  decode  {}\n  kv-touch fraction {:.3}",
+            "requests={} tokens={} tps={:.1} cancelled={} deadline-expired={} preempted={} exhausted={} pages-peak={}\n  ttft    {}\n  e2e     {}\n  decode  {}\n  kv-touch fraction {:.3}",
             self.requests_completed,
             self.tokens_generated,
             self.throughput_tps(),
             self.requests_cancelled,
             self.requests_deadline_expired,
+            self.requests_preempted,
+            self.requests_exhausted,
+            self.pages_peak,
             self.ttft_s.summary("s"),
             self.e2e_s.summary("s"),
             self.decode_step_s.summary("s"),
@@ -129,6 +147,10 @@ pub struct GroupMetrics {
     /// Requests the router rejected under admission backpressure (every
     /// shard at `batch + queue_depth` load).
     pub rejected: u64,
+    /// Requests the router deferred because no shard's page budget could
+    /// fit their projected peak KV demand (count headroom existed;
+    /// memory, not compute, was the bottleneck — a retry can succeed).
+    pub deferred: u64,
     /// The configured per-shard overflow-queue bound the rejections were
     /// measured against.
     pub queue_depth: usize,
@@ -160,15 +182,19 @@ impl GroupMetrics {
         for (i, s) in self.shards.iter().enumerate() {
             out.push_str(&format!(
                 "shard {i}: requests={} tokens={} cancelled={} deadline={} \
-                 stolen={} queue-peak={} \
+                 preempted={} exhausted={} stolen={} queue-peak={} \
+                 pages-peak={} \
                  ttft p50={:.4}s p95={:.4}s p99={:.4}s \
                  e2e p50={:.4}s p95={:.4}s\n",
                 s.requests_completed,
                 s.tokens_generated,
                 s.requests_cancelled,
                 s.requests_deadline_expired,
+                s.requests_preempted,
+                s.requests_exhausted,
                 s.requests_stolen,
                 s.queue_peak,
+                s.pages_peak,
                 s.ttft_s.median(),
                 s.ttft_s.percentile(95.0),
                 s.ttft_s.percentile(99.0),
@@ -179,8 +205,9 @@ impl GroupMetrics {
         let f = self.fleet();
         out.push_str(&format!(
             "fleet ({} shards): requests={} tokens={} tps={:.1} \
-             rejected={} cancelled={} deadline-expired={} stolen={} \
-             queue-depth={} \
+             rejected={} deferred={} cancelled={} deadline-expired={} \
+             preempted={} exhausted={} stolen={} \
+             queue-depth={} pages-peak={} \
              ttft p50={:.4}s p95={:.4}s p99={:.4}s \
              e2e p50={:.4}s p95={:.4}s p99={:.4}s kv-touch {:.3}",
             self.shards.len(),
@@ -188,10 +215,14 @@ impl GroupMetrics {
             f.tokens_generated,
             self.fleet_tps(),
             self.rejected,
+            self.deferred,
             f.requests_cancelled,
             f.requests_deadline_expired,
+            f.requests_preempted,
+            f.requests_exhausted,
             f.requests_stolen,
             self.queue_depth,
+            f.pages_peak,
             f.ttft_s.median(),
             f.ttft_s.percentile(95.0),
             f.ttft_s.percentile(99.0),
@@ -262,6 +293,45 @@ mod tests {
     fn touch_fraction_defaults_to_dense() {
         let m = Metrics::new();
         assert_eq!(m.kv_touch_fraction(), 1.0);
+    }
+
+    #[test]
+    fn exhausted_requests_skip_latency_series_and_counters_merge() {
+        let mut m = Metrics::new();
+        m.record_completion(Duration::from_millis(10), Duration::from_millis(100),
+                            8, StopReason::Eos);
+        m.record_completion(Duration::from_millis(5), Duration::from_millis(90),
+                            3, StopReason::ResourceExhausted);
+        assert_eq!(m.requests_completed, 1);
+        assert_eq!(m.requests_exhausted, 1);
+        assert_eq!(m.tokens_generated, 11, "partial tokens still count as work");
+        assert_eq!(m.ttft_s.len(), 1, "exhausted must not skew TTFT");
+        assert_eq!(m.e2e_s.len(), 1);
+
+        m.requests_preempted = 2;
+        m.pages_peak = 9;
+        let mut other = Metrics::new();
+        other.record_completion(Duration::ZERO, Duration::from_millis(40),
+                                1, StopReason::ResourceExhausted);
+        other.requests_preempted = 3;
+        other.pages_peak = 12;
+        m.merge_from(&other);
+        assert_eq!(m.requests_exhausted, 2, "exhausted counts add on merge");
+        assert_eq!(m.requests_preempted, 5, "preempt counts add on merge");
+        assert_eq!(m.pages_peak, 12, "fleet pages peak is the worst shard's");
+
+        let r = m.report();
+        assert!(r.contains("preempted=5"), "{r}");
+        assert!(r.contains("exhausted=2"), "{r}");
+        assert!(r.contains("pages-peak=12"), "{r}");
+
+        let mut g = GroupMetrics { deferred: 4, ..Default::default() };
+        g.shards.push(m);
+        let r = g.report();
+        assert!(r.contains("deferred=4"), "{r}");
+        assert!(r.contains("preempted=5"), "{r}");
+        assert!(r.contains("exhausted=2"), "{r}");
+        assert!(r.contains("pages-peak=12"), "{r}");
     }
 
     #[test]

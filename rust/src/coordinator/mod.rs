@@ -15,6 +15,7 @@ pub mod arena;
 #[cfg(feature = "pjrt")]
 pub mod engine;
 pub mod gather;
+pub mod memory;
 pub mod metrics;
 pub mod reactor;
 pub mod request;
@@ -27,11 +28,12 @@ pub mod sim;
 pub use arena::StagingArena;
 #[cfg(feature = "pjrt")]
 pub use engine::{Engine, EngineConfig};
+pub use memory::{MemoryPlan, PageGeometry};
 pub use metrics::{GroupMetrics, Metrics};
-pub use request::{Completion, EngineEvent, Request, StopReason};
+pub use request::{Completion, EngineEvent, Priority, QueuedReq, Request, StopReason};
 pub use server::ServeConfig;
 pub use shard::{EngineGroup, GroupConfig, GroupEvent, SubmitOutcome};
-pub use sim::{SimConfig, SimEngine};
+pub use sim::{Fault, FaultSchedule, SimConfig, SimEngine};
 
 /// The contract between a decode engine (one continuous-batching loop
 /// over one device) and the serving layer above it (shard router, trace
@@ -49,6 +51,15 @@ pub trait DecodeEngine {
     /// this so time spent in the router-to-shard channel counts toward
     /// latency, exactly as client-visible queueing should.
     fn submit_at(&mut self, req: Request, arrived: std::time::Instant);
+
+    /// Enqueue a queued-request record, preserving any resume state it
+    /// carries (partial generation from a preemption, original arrival,
+    /// first-token instant, retry count). The default drops resume state
+    /// and submits fresh — correct only for engines that never preempt;
+    /// preempting engines override it.
+    fn submit_queued(&mut self, q: QueuedReq) {
+        self.submit_at(q.req, q.arrived);
+    }
 
     /// One engine iteration: admit+prefill if possible, else decode one
     /// token for the running batch. Returns finished completions.
@@ -97,6 +108,23 @@ pub trait DecodeEngine {
 
     fn idle(&self) -> bool {
         self.pending() == 0 && self.active() == 0
+    }
+
+    /// The engine's KV page pool shape, used by the shard router to
+    /// project a request's peak page demand at admission. The default
+    /// (all-zero geometry) disables page planning for this engine.
+    fn page_geometry(&self) -> PageGeometry {
+        PageGeometry::default()
+    }
+
+    /// The lowest priority among requests this engine currently holds
+    /// (active and not yet stopping, or waiting in its internal queue).
+    /// `None` when the engine holds nothing. The shard loop uses this to
+    /// force-feed a strictly-higher-priority overflow request into a
+    /// full engine so pressure preemption can evict a weaker occupant in
+    /// its favour.
+    fn min_priority(&self) -> Option<Priority> {
+        None
     }
 
     /// Move the engine's metrics out (shard shutdown snapshot).

@@ -14,6 +14,43 @@
 use std::collections::{HashSet, VecDeque};
 use std::time::{Duration, Instant};
 
+/// Scheduling class for a request. Ordering is by urgency: `Batch` sorts
+/// below `Interactive`, so "lowest priority" (`min`) picks the batch
+/// traffic first when a preemption victim must be chosen.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum Priority {
+    /// Throughput traffic: first to be preempted under memory pressure.
+    Batch,
+    /// Latency-sensitive traffic (the default, matching pre-priority
+    /// behaviour where every request was implicitly interactive).
+    Interactive,
+}
+
+impl Default for Priority {
+    fn default() -> Priority {
+        Priority::Interactive
+    }
+}
+
+impl Priority {
+    /// Wire name used by the JSON-lines protocol and reports.
+    pub fn as_str(self) -> &'static str {
+        match self {
+            Priority::Batch => "batch",
+            Priority::Interactive => "interactive",
+        }
+    }
+
+    /// Parse a wire name (`"batch"` / `"interactive"`).
+    pub fn from_wire(s: &str) -> Option<Priority> {
+        match s {
+            "batch" => Some(Priority::Batch),
+            "interactive" => Some(Priority::Interactive),
+            _ => None,
+        }
+    }
+}
+
 /// A generation request (token-level; the workload layer produces the
 //  prompts).
 #[derive(Debug, Clone)]
@@ -31,11 +68,22 @@ pub struct Request {
     /// the shard layer forwards them across the completion channel, so
     /// non-streaming traffic pays no per-token cross-thread cost.
     pub stream: bool,
+    /// Scheduling class: under KV memory pressure, lower-priority
+    /// requests are preempted (pages dropped, requeued for re-prefill)
+    /// before higher-priority ones are ever touched.
+    pub priority: Priority,
 }
 
 impl Request {
     pub fn new(id: u64, prompt: Vec<i32>, max_new: usize) -> Request {
-        Request { id, prompt, max_new, deadline: None, stream: false }
+        Request {
+            id,
+            prompt,
+            max_new,
+            deadline: None,
+            stream: false,
+            priority: Priority::default(),
+        }
     }
 
     pub fn with_deadline(mut self, deadline: Instant) -> Request {
@@ -46,6 +94,39 @@ impl Request {
     pub fn with_stream(mut self) -> Request {
         self.stream = true;
         self
+    }
+
+    pub fn with_priority(mut self, priority: Priority) -> Request {
+        self.priority = priority;
+        self
+    }
+}
+
+/// A request waiting in a queue (shard overflow queue or an engine's
+/// internal queue), together with the state needed to resume it if it
+/// was preempted mid-decode. Fresh requests carry an empty `resume`;
+/// preempted ones carry everything generated so far so a re-prefill
+/// reproduces the exact token stream (and so a cancel/deadline that
+/// lands while requeued still returns the partial generation).
+#[derive(Debug, Clone)]
+pub struct QueuedReq {
+    pub req: Request,
+    /// Original arrival instant (preserved across preemptions so e2e
+    /// latency and deadline checks measure from first submission).
+    pub arrived: Instant,
+    /// Tokens already generated (and already streamed) before a
+    /// preemption; empty for fresh requests.
+    pub resume: Vec<i32>,
+    /// When the first token was produced, if any (preserved across
+    /// preemptions so TTFT is measured once).
+    pub first_token_at: Option<Instant>,
+    /// How many times this request has been preempted-and-requeued.
+    pub retries: u32,
+}
+
+impl QueuedReq {
+    pub fn fresh(req: Request, arrived: Instant) -> QueuedReq {
+        QueuedReq { req, arrived, resume: Vec::new(), first_token_at: None, retries: 0 }
     }
 }
 
@@ -62,6 +143,10 @@ pub enum StopReason {
     /// carries the tokens generated so far (possibly none, if it expired
     /// while still queued).
     DeadlineExceeded,
+    /// The request was preempted under KV memory pressure more times
+    /// than its retry budget allows, or could never fit the shard's page
+    /// pool at all; the completion carries the tokens generated so far.
+    ResourceExhausted,
 }
 
 impl StopReason {
@@ -107,6 +192,7 @@ impl StopReason {
             StopReason::ContextFull => "context_full",
             StopReason::Cancelled => "cancelled",
             StopReason::DeadlineExceeded => "deadline",
+            StopReason::ResourceExhausted => "resource_exhausted",
         }
     }
 }
@@ -115,29 +201,32 @@ impl StopReason {
 /// `SimEngine` so their queued-request cancel/deadline semantics cannot
 /// diverge (the slot-side scan differs only in slot types and stays
 /// per-engine): remove cancelled or deadline-expired requests still
-/// waiting in the engine's internal queue and append their empty
-/// completions to `done_early` for the next reap — they never occupy a
-/// slot. E2e is measured from the original arrival; TTFT stays zero
-/// (no token was ever produced).
-pub(crate) fn expire_queued(queue: &mut VecDeque<(Request, Instant)>,
+/// waiting in the engine's internal queue and append their completions
+/// to `done_early` for the next reap — they never occupy a slot. E2e is
+/// measured from the original arrival. Fresh requests report zero TTFT
+/// and an empty generation; a preempted-then-requeued request returns
+/// its partial generation and the TTFT it already achieved.
+pub(crate) fn expire_queued(queue: &mut VecDeque<QueuedReq>,
                             cancels: &mut HashSet<u64>,
                             done_early: &mut Vec<Completion>,
                             now: Instant) {
     let mut i = 0;
     while i < queue.len() {
-        let (ref req, arrived) = queue[i];
-        let cancelled = cancels.contains(&req.id);
-        match StopReason::control(cancelled, req.deadline, now) {
+        let q = &queue[i];
+        let cancelled = cancels.contains(&q.req.id);
+        match StopReason::control(cancelled, q.req.deadline, now) {
             Some(stop) => {
-                let (req, _) = queue.remove(i).unwrap();
-                cancels.remove(&req.id);
+                let q = queue.remove(i).unwrap();
+                cancels.remove(&q.req.id);
                 done_early.push(Completion {
-                    id: req.id,
-                    prompt_len: req.prompt.len(),
-                    generated: Vec::new(),
+                    id: q.req.id,
+                    prompt_len: q.req.prompt.len(),
+                    generated: q.resume,
                     stop,
-                    ttft: Duration::ZERO,
-                    e2e: now.saturating_duration_since(arrived),
+                    ttft: q.first_token_at
+                        .map(|t| t.saturating_duration_since(q.arrived))
+                        .unwrap_or(Duration::ZERO),
+                    e2e: now.saturating_duration_since(q.arrived),
                     stats: SeqStats::default(),
                 });
             }
@@ -160,6 +249,12 @@ pub enum EngineEvent {
     Started { id: u64 },
     /// One generated token; `index` is its position in the generation.
     Token { id: u64, tok: i32, index: usize },
+    /// The request was preempted mid-decode (pages dropped, requeued for
+    /// re-prefill). Not terminal: tokens already streamed stay valid and
+    /// the stream resumes at the next `index` after re-admission, so a
+    /// request may see several `Preempted` events but never a gap or a
+    /// repeat in its token indices.
+    Preempted { id: u64 },
     /// Terminal: the request finished, was cancelled, or expired.
     Finished(Completion),
 }
@@ -259,24 +354,52 @@ mod tests {
     #[test]
     fn expire_queued_removes_cancelled_and_expired_only() {
         let now = Instant::now();
-        let mut queue: VecDeque<(Request, Instant)> = VecDeque::new();
-        queue.push_back((Request::new(0, vec![1], 4), now)); // survives
-        queue.push_back((Request::new(1, vec![2], 4), now)); // cancelled
-        queue.push_back((Request::new(2, vec![3], 4)
-                             .with_deadline(now - Duration::from_millis(1)),
-                         now)); // expired
+        let mut queue: VecDeque<QueuedReq> = VecDeque::new();
+        queue.push_back(QueuedReq::fresh(Request::new(0, vec![1], 4), now)); // survives
+        queue.push_back(QueuedReq::fresh(Request::new(1, vec![2], 4), now)); // cancelled
+        queue.push_back(QueuedReq::fresh(
+            Request::new(2, vec![3], 4)
+                .with_deadline(now - Duration::from_millis(1)),
+            now,
+        )); // expired
         let mut cancels: HashSet<u64> = [1].into_iter().collect();
         let mut done = Vec::new();
         expire_queued(&mut queue, &mut cancels, &mut done,
                       now + Duration::from_millis(1));
         assert_eq!(queue.len(), 1);
-        assert_eq!(queue[0].0.id, 0);
+        assert_eq!(queue[0].req.id, 0);
         assert!(cancels.is_empty(), "handled cancel marks are consumed");
         assert_eq!(done.len(), 2);
         let stop_of = |id: u64| done.iter().find(|c| c.id == id).unwrap().stop;
         assert_eq!(stop_of(1), StopReason::Cancelled);
         assert_eq!(stop_of(2), StopReason::DeadlineExceeded);
         assert!(done.iter().all(|c| c.generated.is_empty()));
+        assert!(done.iter().all(|c| c.ttft == Duration::ZERO));
+    }
+
+    #[test]
+    fn expire_queued_returns_partial_generation_for_preempted_requests() {
+        let start = Instant::now();
+        let first_tok = start + Duration::from_millis(5);
+        let now = start + Duration::from_millis(20);
+        let mut queue: VecDeque<QueuedReq> = VecDeque::new();
+        queue.push_back(QueuedReq {
+            req: Request::new(7, vec![1, 2, 3], 16),
+            arrived: start,
+            resume: vec![10, 11, 12],
+            first_token_at: Some(first_tok),
+            retries: 1,
+        });
+        let mut cancels: HashSet<u64> = [7].into_iter().collect();
+        let mut done = Vec::new();
+        expire_queued(&mut queue, &mut cancels, &mut done, now);
+        assert_eq!(done.len(), 1);
+        let c = &done[0];
+        assert_eq!(c.stop, StopReason::Cancelled);
+        assert_eq!(c.generated, vec![10, 11, 12],
+                   "a preempted request returns its partial generation");
+        assert_eq!(c.ttft, Duration::from_millis(5));
+        assert_eq!(c.e2e, Duration::from_millis(20));
     }
 
     #[test]
@@ -287,8 +410,24 @@ mod tests {
             (StopReason::ContextFull, "context_full"),
             (StopReason::Cancelled, "cancelled"),
             (StopReason::DeadlineExceeded, "deadline"),
+            (StopReason::ResourceExhausted, "resource_exhausted"),
         ] {
             assert_eq!(s.as_str(), name);
         }
+    }
+
+    #[test]
+    fn priority_orders_batch_below_interactive() {
+        assert!(Priority::Batch < Priority::Interactive);
+        assert_eq!(Priority::default(), Priority::Interactive);
+        assert_eq!(Priority::from_wire("batch"), Some(Priority::Batch));
+        assert_eq!(Priority::from_wire("interactive"),
+                   Some(Priority::Interactive));
+        assert_eq!(Priority::from_wire("urgent"), None);
+        assert_eq!(Priority::Batch.as_str(), "batch");
+        assert_eq!(Priority::Interactive.as_str(), "interactive");
+        let r = Request::new(1, vec![1], 4);
+        assert_eq!(r.priority, Priority::Interactive);
+        assert_eq!(r.with_priority(Priority::Batch).priority, Priority::Batch);
     }
 }

@@ -105,9 +105,12 @@ impl TraceRunner {
     /// admitted requests, shards decode concurrently, and completions
     /// fan back in. A 1-shard group reproduces `run`'s per-request
     /// output exactly (content-deterministic engines), which the serving
-    /// tests assert. Admission backpressure ([`SubmitOutcome::Rejected`])
-    /// is handled as a well-behaved client would: hold the request and
-    /// retry once completions free capacity, so no trace entry is lost.
+    /// tests assert. Admission backpressure is handled as a well-behaved
+    /// client would: hold the request and retry with jittered
+    /// exponential backoff — [`SubmitOutcome::Deferred`] seeds the
+    /// backoff with the router's `retry_after_ms` hint,
+    /// [`SubmitOutcome::Rejected`] with a short fixed base — so no trace
+    /// entry is lost and the router is not hammered while saturated.
     pub fn run_group<E: DecodeEngine>(&self, group: &mut EngineGroup<E>,
                                       trace: &[TracedRequest])
                                       -> Result<Vec<Completion>> {
@@ -116,6 +119,19 @@ impl TraceRunner {
         let mut next = 0usize;
         let mut id = 0u64;
         let window = group.admission_window();
+        // Client-side backoff state. The RNG seed is fixed: jitter
+        // decorrelates retries *within* a run, and runs stay
+        // reproducible.
+        let mut rng = crate::util::rng::Rng::new(0xBAC0_FF5E);
+        let mut retry_at: Option<Instant> = None;
+        let mut streak: u32 = 0;
+        let mut backoff = |base_ms: u64, streak: &mut u32,
+                           rng: &mut crate::util::rng::Rng| {
+            let exp = 1u64 << (*streak).min(6);
+            let wait_ms = (base_ms.max(1) * exp) as f64 * (0.5 + rng.f64());
+            *streak += 1;
+            Instant::now() + Duration::from_micros((wait_ms * 1000.0) as u64)
+        };
         // Fail on the caller's thread with a clear message instead of
         // assert-panicking inside a shard (which would only surface as
         // "shard exited with requests in flight").
@@ -128,6 +144,15 @@ impl TraceRunner {
         }
         while next < trace.len() || group.inflight() > 0 {
             while next < trace.len() {
+                // Still inside a backoff window: poll below instead of
+                // resubmitting (completions landing meanwhile free the
+                // capacity the retry needs).
+                if let Some(t) = retry_at {
+                    if Instant::now() < t {
+                        break;
+                    }
+                    retry_at = None;
+                }
                 let due = match self.replay {
                     Replay::RealTime => {
                         start.elapsed().as_secs_f64() >= trace[next].arrival_s
@@ -143,11 +168,24 @@ impl TraceRunner {
                     SubmitOutcome::Routed(_) => {
                         id += 1;
                         next += 1;
+                        streak = 0;
+                        retry_at = None;
                     }
-                    // Every shard is at capacity: poll below, retry this
-                    // entry on the next pass (capacity frees as
+                    // Memory headroom, not compute, is what's missing:
+                    // honour the router's retry hint (with jitter and an
+                    // escalating multiplier for repeat deferrals).
+                    SubmitOutcome::Deferred { retry_after_ms } => {
+                        retry_at =
+                            Some(backoff(retry_after_ms, &mut streak, &mut rng));
+                        break;
+                    }
+                    // Every shard is at capacity: back off briefly, poll
+                    // below, retry this entry (capacity frees as
                     // completions land, so this cannot livelock).
-                    SubmitOutcome::Rejected => break,
+                    SubmitOutcome::Rejected => {
+                        retry_at = Some(backoff(2, &mut streak, &mut rng));
+                        break;
+                    }
                 }
             }
             if let Some(c) = group.poll(Duration::from_millis(1))? {

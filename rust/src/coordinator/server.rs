@@ -5,7 +5,9 @@
 //!   request:  {"id": 1, "prompt": [tok, ...], "max_new": 32}
 //!             optional: "stream": true|false (overrides the server
 //!             default), "deadline_ms": N (per-request deadline from
-//!             arrival; overrides --deadline-ms)
+//!             arrival; overrides --deadline-ms), "priority":
+//!             "interactive"|"batch" (scheduling class; overrides
+//!             --default-priority)
 //!   response: {"id": 1, "generated": [tok, ...], "stop": "eos",
 //!              "ttft_ms": 12.3, "e2e_ms": 45.6}
 //!   deltas:   streaming requests additionally get one
@@ -13,12 +15,21 @@
 //!             token *before* the terminal response line; the
 //!             concatenated deltas equal the final "generated" array
 //!             byte-for-byte (pinned by the streaming-parity test).
+//!             A streaming request preempted mid-decode gets one
+//!             {"id": 1, "event": "preempted"} frame; its delta stream
+//!             resumes at the next index after re-admission (no token is
+//!             repeated or lost).
 //!   errors:   {"error": "..."} (parse) / {"id": N, "error": "..."}
-//!             (per-request: prompt too long, overloaded)
+//!             (per-request: prompt too long, overloaded). Backpressure
+//!             errors additionally carry "retry_after_ms": N — when the
+//!             router *deferred* the request for KV page headroom the
+//!             hint is its configured retry window; a capacity
+//!             rejection uses a short fixed hint.
 //!
-//! "stop" may also be "cancelled" (the client went away mid-decode) or
-//! "deadline" (the per-request deadline expired); both carry whatever
-//! was generated up to that point.
+//! "stop" may also be "cancelled" (the client went away mid-decode),
+//! "deadline" (the per-request deadline expired), or
+//! "resource_exhausted" (preempted for memory and out of retry budget);
+//! all carry whatever was generated up to that point.
 //!
 //! The front-end is a **single-threaded reactor** over raw epoll (see
 //! [`super::reactor`]): one thread drives non-blocking accept, reads,
@@ -63,7 +74,7 @@ use std::time::{Duration, Instant};
 use anyhow::{anyhow, Result};
 
 use super::reactor::{Event, Interest, Reactor};
-use super::request::{Completion, Request};
+use super::request::{Completion, Priority, Request};
 use super::shard::{EngineGroup, GroupEvent, SubmitOutcome};
 use super::DecodeEngine;
 use crate::util::json::Json;
@@ -104,6 +115,9 @@ pub struct ServeConfig {
     /// does not carry its own `deadline_ms` (CLI `--deadline-ms`);
     /// `None` = unbounded.
     pub deadline: Option<Duration>,
+    /// Scheduling class for requests that carry no `"priority"` field
+    /// (CLI `--default-priority`).
+    pub default_priority: Priority,
 }
 
 impl Default for ServeConfig {
@@ -114,6 +128,7 @@ impl Default for ServeConfig {
             limit: None,
             stream_by_default: false,
             deadline: None,
+            default_priority: Priority::default(),
         }
     }
 }
@@ -127,6 +142,9 @@ pub struct WireRequest {
     pub stream: Option<bool>,
     /// `"deadline_ms"` field: `Some` overrides [`ServeConfig::deadline`].
     pub deadline_ms: Option<u64>,
+    /// `"priority"` field: `Some` overrides
+    /// [`ServeConfig::default_priority`].
+    pub priority: Option<Priority>,
 }
 
 /// Parse one request line.
@@ -146,7 +164,22 @@ pub fn parse_request(line: &str) -> Result<WireRequest> {
         .map(|v| v.as_usize())
         .transpose()?
         .map(|ms| ms as u64);
-    Ok(WireRequest { req: Request::new(id, prompt, max_new), stream, deadline_ms })
+    let priority = j
+        .opt("priority")
+        .map(|v| {
+            let s = v.as_str()?;
+            Priority::from_wire(s).ok_or_else(|| {
+                anyhow!("unknown priority {s:?} (want \"interactive\" or \
+                         \"batch\")")
+            })
+        })
+        .transpose()?;
+    Ok(WireRequest {
+        req: Request::new(id, prompt, max_new),
+        stream,
+        deadline_ms,
+        priority,
+    })
 }
 
 /// Encode one completion line.
@@ -179,6 +212,26 @@ fn error_line(id: Option<u64>, msg: &str) -> String {
     }
     fields.push(("error", Json::Str(msg.to_string())));
     Json::obj(fields).to_string()
+}
+
+/// Encode a backpressure error reply: an error line that additionally
+/// tells the client when to retry.
+fn backpressure_line(id: u64, msg: &str, retry_after_ms: u64) -> String {
+    Json::obj(vec![
+        ("id", Json::Num(id as f64)),
+        ("error", Json::Str(msg.to_string())),
+        ("retry_after_ms", Json::Num(retry_after_ms as f64)),
+    ])
+    .to_string()
+}
+
+/// Encode the non-terminal preemption notice for a streaming request.
+fn encode_preempted(client_id: u64) -> String {
+    Json::obj(vec![
+        ("id", Json::Num(client_id as f64)),
+        ("event", Json::Str("preempted".to_string())),
+    ])
+    .to_string()
 }
 
 /// One connection's state machine: accumulated partial line, pending
@@ -506,6 +559,7 @@ impl<E: DecodeEngine> FrontEnd<E> {
             .map(Duration::from_millis)
             .or(self.cfg.deadline)
             .map(|d| Instant::now() + d);
+        let priority = wire.priority.unwrap_or(self.cfg.default_priority);
         let client_id = req.id;
         let internal = self.next_req;
         let routed = self.group.submit(Request {
@@ -514,6 +568,7 @@ impl<E: DecodeEngine> FrontEnd<E> {
             max_new: req.max_new,
             deadline,
             stream,
+            priority,
         });
         match routed {
             Ok(SubmitOutcome::Routed(_)) => {
@@ -531,7 +586,16 @@ impl<E: DecodeEngine> FrontEnd<E> {
                 let msg = format!("overloaded: every shard at capacity \
                                    (queue-depth {}), retry later",
                                   self.group.queue_depth());
-                self.queue_reply(token, &error_line(Some(client_id), &msg));
+                self.queue_reply(token,
+                                 &backpressure_line(client_id, &msg, 2));
+            }
+            Ok(SubmitOutcome::Deferred { retry_after_ms }) => {
+                let msg = "deferred: no KV page headroom for this request \
+                           right now, retry later";
+                self.queue_reply(
+                    token,
+                    &backpressure_line(client_id, msg, retry_after_ms),
+                );
             }
             Err(e) => self.failure = Some(e),
         }
@@ -566,6 +630,16 @@ impl<E: DecodeEngine> FrontEnd<E> {
                 if entry.stream {
                     let (conn, client_id) = (entry.conn, entry.client_id);
                     self.queue_reply(conn, &encode_delta(client_id, tok, index));
+                }
+            }
+            GroupEvent::Preempted { id } => {
+                // Non-terminal: tell a streaming client its delta stream
+                // paused (it resumes at the next index); non-streaming
+                // requests see nothing.
+                let Some(entry) = self.inflight.get(&id) else { return };
+                if entry.stream {
+                    let (conn, client_id) = (entry.conn, entry.client_id);
+                    self.queue_reply(conn, &encode_preempted(client_id));
                 }
             }
             GroupEvent::Done(c) => {
@@ -823,6 +897,48 @@ mod tests {
             parse_request(r#"{"id": 2, "prompt": [4], "deadline_ms": -5}"#)
                 .is_err()
         );
+    }
+
+    #[test]
+    fn parse_priority_option() {
+        let r = parse_request(
+            r#"{"id": 2, "prompt": [4], "priority": "batch"}"#,
+        )
+        .unwrap();
+        assert_eq!(r.priority, Some(Priority::Batch));
+        let r = parse_request(
+            r#"{"id": 2, "prompt": [4], "priority": "interactive"}"#,
+        )
+        .unwrap();
+        assert_eq!(r.priority, Some(Priority::Interactive));
+        let r = parse_request(r#"{"id": 2, "prompt": [4]}"#).unwrap();
+        assert_eq!(r.priority, None);
+        // Unknown classes are errors, not silent defaults.
+        assert!(
+            parse_request(r#"{"id": 2, "prompt": [4], "priority": "vip"}"#)
+                .is_err()
+        );
+        assert!(parse_request(r#"{"id": 2, "prompt": [4], "priority": 3}"#)
+            .is_err());
+    }
+
+    #[test]
+    fn backpressure_lines_carry_retry_hint() {
+        let j = Json::parse(&backpressure_line(7, "deferred: no headroom", 25))
+            .unwrap();
+        assert_eq!(j.get("id").unwrap().as_i64().unwrap(), 7);
+        assert_eq!(j.get("retry_after_ms").unwrap().as_i64().unwrap(), 25);
+        assert!(j.get("error").unwrap().as_str().unwrap().starts_with("deferred"));
+        assert!(j.get("stop").is_err(), "backpressure is not terminal");
+    }
+
+    #[test]
+    fn preempted_frames_are_non_terminal_json() {
+        let j = Json::parse(&encode_preempted(11)).unwrap();
+        assert_eq!(j.get("id").unwrap().as_i64().unwrap(), 11);
+        assert_eq!(j.get("event").unwrap().as_str().unwrap(), "preempted");
+        assert!(j.get("stop").is_err());
+        assert!(j.get("error").is_err());
     }
 
     #[test]

@@ -29,6 +29,25 @@
 //! [`SubmitOutcome::Rejected`] instead of enqueueing unboundedly — the
 //! front-end turns that into a structured `overloaded` reply.
 //!
+//! **Memory-planned admission**: each shard also carries a
+//! [`MemoryPlan`] budgeting KV pages against the engine's reported
+//! [`PageGeometry`]. `submit` projects a request's *peak* page demand
+//! (prompt + `max_new`, page-rounded) and reserves it against the target
+//! shard's plan; when count headroom exists but no shard's page budget
+//! fits, the outcome is [`SubmitOutcome::Deferred`] (retry later —
+//! memory, not compute, is the bottleneck), distinct from `Rejected`.
+//! Reservations follow the request across steals and cancel-removals
+//! with the same under-lock transfer discipline as load accounting, and
+//! release when the completion flows back.
+//!
+//! **Priority preemption**: requests carry a [`Priority`]; when an
+//! engine is full and a strictly-higher-priority request waits in the
+//! overflow queue, the shard loop force-feeds it into the engine (see
+//! [`DecodeEngine::min_priority`]) so the engine can preempt its weakest
+//! occupant at a step boundary. Preempted requests requeue inside the
+//! engine carrying their partial generation; [`GroupEvent::Preempted`]
+//! surfaces the event to streaming front-ends.
+//!
 //! **Work stealing**: requests wait in shared `Mutex<VecDeque>` overflow
 //! queues rather than private channels, so a shard with free batch slots
 //! and an empty queue of its own pulls work from the most-loaded shard's
@@ -54,7 +73,7 @@
 //! of the overflow queues even while every slot is busy, so their
 //! replies land at the deadline instead of whenever a slot frees.
 
-use std::collections::{HashSet, VecDeque};
+use std::collections::{HashMap, HashSet, VecDeque};
 use std::marker::PhantomData;
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
@@ -64,8 +83,9 @@ use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, bail, Result};
 
+use super::memory::{MemoryPlan, PageGeometry};
 use super::metrics::{GroupMetrics, Metrics};
-use super::request::{Completion, EngineEvent, Request};
+use super::request::{Completion, EngineEvent, Priority, QueuedReq, Request};
 use super::DecodeEngine;
 
 /// Router configuration for an [`EngineGroup`].
@@ -80,20 +100,38 @@ pub struct GroupConfig {
     /// `batch + queue_depth` requests (active + queued); beyond that on
     /// every shard, `submit` rejects.
     pub queue_depth: usize,
+    /// Retry hint (milliseconds) carried by [`SubmitOutcome::Deferred`]
+    /// replies — how long a client should wait before resubmitting a
+    /// request deferred for page-budget headroom.
+    pub defer_retry_ms: u64,
 }
 
 impl Default for GroupConfig {
     fn default() -> Self {
-        GroupConfig { shards: 1, affinity_slack: 1, queue_depth: 32 }
+        GroupConfig { shards: 1, affinity_slack: 1, queue_depth: 32,
+                      defer_retry_ms: 25 }
     }
 }
 
-/// Result of [`EngineGroup::submit`]: routed to a shard, or rejected
-/// because every shard is at `batch + queue_depth` load.
+/// Result of [`EngineGroup::submit`]: routed to a shard, deferred
+/// because no shard's page budget fits the request's projected peak KV
+/// demand right now (count headroom exists — retry after
+/// `retry_after_ms`), or rejected because every shard is at
+/// `batch + queue_depth` load (or the request can never fit any shard's
+/// page pool at all).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum SubmitOutcome {
     Routed(usize),
+    Deferred { retry_after_ms: u64 },
     Rejected,
+}
+
+/// Internal routing verdict (see [`EngineGroup::submit`] for the
+/// client-visible mapping).
+enum Route {
+    To(usize),
+    Defer,
+    Full,
 }
 
 enum ShardCmd {
@@ -110,9 +148,12 @@ enum ShardCmd {
 
 enum ShardEvent {
     /// Sent once per shard after its engine constructed successfully.
-    Ready { shard: usize, batch: usize, max_prompt: usize },
+    Ready { shard: usize, batch: usize, max_prompt: usize,
+            geometry: PageGeometry },
     /// One generated token for an in-flight request (streamed replies).
     Token { id: u64, tok: i32, index: usize },
+    /// A streaming request was preempted mid-decode (not terminal).
+    Preempted { id: u64 },
     Done(Completion),
     /// Engine construction or `step` failed; the shard thread has exited.
     Fatal { shard: usize, msg: String },
@@ -120,12 +161,15 @@ enum ShardEvent {
 
 /// What [`EngineGroup::poll_event`] yields: a token delta for an
 /// in-flight request submitted with `stream = true` (non-streaming
-/// requests generate no channel traffic per token), or any request's
-/// terminal completion. Per request id, every `Token` precedes the
-/// `Done` (the per-shard event channel preserves emission order).
+/// requests generate no channel traffic per token), a preemption notice
+/// for a streaming request (not terminal — its token stream resumes at
+/// the next index after re-admission), or any request's terminal
+/// completion. Per request id, every `Token` precedes the `Done` (the
+/// per-shard event channel preserves emission order).
 #[derive(Debug)]
 pub enum GroupEvent {
     Token { id: u64, tok: i32, index: usize },
+    Preempted { id: u64 },
     Done(Completion),
 }
 
@@ -133,7 +177,7 @@ pub enum GroupEvent {
 /// load (queued + active, the router's placement signal), and the
 /// steal / queue-peak counters that feed [`GroupMetrics`].
 struct ShardQueues {
-    queues: Vec<Mutex<VecDeque<(Request, Instant)>>>,
+    queues: Vec<Mutex<VecDeque<QueuedReq>>>,
     /// Requests accepted for shard `i` and not yet completed. Maintained
     /// by the router (push), thieves (transfer), and shards (completion),
     /// so it stays accurate across steals.
@@ -151,6 +195,14 @@ struct ShardQueues {
     /// the router when the request's completion flows back (cancel
     /// raced a natural finish).
     cancelled: Mutex<HashSet<u64>>,
+    /// Per-shard page-budget ledgers (disabled until the shard's engine
+    /// reports a non-trivial [`PageGeometry`] at startup).
+    plans: Vec<MemoryPlan>,
+    /// Pages reserved per in-flight request id: `(owner shard, pages)`.
+    /// Inserted by the router *before* the request becomes visible in a
+    /// queue (so a thief's transfer always finds it), re-owned on steal
+    /// / cancel-removal, and released when the completion flows back.
+    reservations: Mutex<HashMap<u64, (usize, usize)>>,
 }
 
 impl ShardQueues {
@@ -161,12 +213,38 @@ impl ShardQueues {
             steals: (0..n).map(|_| AtomicU64::new(0)).collect(),
             queue_peak: (0..n).map(|_| AtomicUsize::new(0)).collect(),
             cancelled: Mutex::new(HashSet::new()),
+            plans: (0..n).map(|_| MemoryPlan::default()).collect(),
+            reservations: Mutex::new(HashMap::new()),
+        }
+    }
+
+    /// Move request `id`'s page reservation to shard `to` (steal /
+    /// cancel-removal took the request there). The thief chose to take
+    /// the work, so the transfer lands even over its budget
+    /// (`force_reserve`); the victim's plan gets its headroom back.
+    fn transfer_reservation(&self, id: u64, to: usize) {
+        let mut res = self.reservations.lock().unwrap();
+        if let Some(e) = res.get_mut(&id) {
+            let (from, pages) = *e;
+            if from != to {
+                self.plans[from].release(pages);
+                self.plans[to].force_reserve(pages);
+                e.0 = to;
+            }
+        }
+    }
+
+    /// Drop request `id`'s reservation (its completion was observed).
+    fn release_reservation(&self, id: u64) {
+        if let Some((owner, pages)) = self.reservations.lock().unwrap().remove(&id) {
+            self.plans[owner].release(pages);
         }
     }
 
     /// Pop one queued request from the most-loaded *other* shard's
-    /// overflow queue, transferring its load accounting to `me`.
-    fn steal_for(&self, me: usize) -> Option<(Request, Instant)> {
+    /// overflow queue, transferring its load accounting (and page
+    /// reservation) to `me`.
+    fn steal_for(&self, me: usize) -> Option<QueuedReq> {
         let mut victim: Option<(usize, usize)> = None;
         for s in 0..self.queues.len() {
             if s == me {
@@ -183,6 +261,7 @@ impl ShardQueues {
         self.load[v].fetch_sub(1, Ordering::SeqCst);
         self.load[me].fetch_add(1, Ordering::SeqCst);
         self.steals[me].fetch_add(1, Ordering::SeqCst);
+        self.transfer_reservation(item.req.id, me);
         Some(item)
     }
 
@@ -193,11 +272,23 @@ impl ShardQueues {
     /// scan completes it immediately *without* a slot — so an expired
     /// request queued behind a long decode answers at its deadline, not
     /// when a slot finally frees.
-    fn pop_expired(&self, me: usize, now: Instant) -> Option<(Request, Instant)> {
+    fn pop_expired(&self, me: usize, now: Instant) -> Option<QueuedReq> {
         let mut q = self.queues[me].lock().unwrap();
         let pos = q
             .iter()
-            .position(|(r, _)| r.deadline.map(|d| now >= d).unwrap_or(false))?;
+            .position(|q| q.req.deadline.map(|d| now >= d).unwrap_or(false))?;
+        q.remove(pos)
+    }
+
+    /// Pop the first request in `me`'s own overflow queue whose priority
+    /// is *strictly above* `floor` — the force-feed path that lets a
+    /// waiting interactive request displace a batch occupant of a full
+    /// engine (the engine preempts its weakest request at the next step
+    /// boundary to make room). Load accounting is unchanged: the request
+    /// stays this shard's.
+    fn pop_higher(&self, me: usize, floor: Priority) -> Option<QueuedReq> {
+        let mut q = self.queues[me].lock().unwrap();
+        let pos = q.iter().position(|q| q.req.priority > floor)?;
         q.remove(pos)
     }
 
@@ -206,17 +297,18 @@ impl ShardQueues {
     /// happens under the queue lock and the load accounting transfers to
     /// `me` right after, exactly like a steal, so a raced normal pop /
     /// steal and a cancel removal can never double-take the request.
-    fn remove_queued(&self, me: usize, id: u64) -> Option<(Request, Instant)> {
+    fn remove_queued(&self, me: usize, id: u64) -> Option<QueuedReq> {
         let n = self.queues.len();
         for off in 0..n {
             let s = (me + off) % n;
             let mut q = self.queues[s].lock().unwrap();
-            if let Some(pos) = q.iter().position(|(r, _)| r.id == id) {
+            if let Some(pos) = q.iter().position(|q| q.req.id == id) {
                 let item = q.remove(pos)?;
                 drop(q);
                 if s != me {
                     self.load[s].fetch_sub(1, Ordering::SeqCst);
                     self.load[me].fetch_add(1, Ordering::SeqCst);
+                    self.transfer_reservation(id, me);
                 }
                 return Some(item);
             }
@@ -230,6 +322,10 @@ struct ShardHandle {
     join: JoinHandle<Metrics>,
     batch: usize,
     max_prompt: usize,
+    /// The shard engine's page-pool shape (reported in `Ready`); used by
+    /// the router to project page demand at admission. All-zero when the
+    /// engine does no page accounting.
+    geometry: PageGeometry,
 }
 
 /// N decode-engine shards behind a bounded least-loaded router with
@@ -245,6 +341,10 @@ pub struct EngineGroup<E: DecodeEngine> {
     queue_depth: usize,
     /// Requests `submit` rejected because every shard was at capacity.
     rejected: u64,
+    /// Requests `submit` deferred because no shard's page budget fit.
+    deferred: u64,
+    /// Retry hint carried by `Deferred` outcomes.
+    defer_retry_ms: u64,
     /// Serving-clock start: set by the first accepted `submit`, so idle
     /// time between construction and traffic does not skew throughput.
     first_submit: Option<Instant>,
@@ -274,12 +374,12 @@ fn affinity_hash(prompt: &[i32]) -> u64 {
 /// set of ids whose token events cross the completion channel.
 fn submit_checked<E: DecodeEngine>(engine: &mut E, shared: &ShardQueues,
                                    streaming: &mut HashSet<u64>,
-                                   req: Request, at: Instant) {
-    let id = req.id;
-    if req.stream {
+                                   q: QueuedReq) {
+    let id = q.req.id;
+    if q.req.stream {
         streaming.insert(id);
     }
-    engine.submit_at(req, at);
+    engine.submit_queued(q);
     if shared.cancelled.lock().unwrap().remove(&id) {
         engine.cancel(id);
     }
@@ -300,8 +400,8 @@ fn apply_cancel<E: DecodeEngine>(shard: usize, engine: &mut E,
         shared.cancelled.lock().unwrap().remove(&id);
         return;
     }
-    if let Some((req, at)) = shared.remove_queued(shard, id) {
-        submit_checked(engine, shared, streaming, req, at);
+    if let Some(q) = shared.remove_queued(shard, id) {
+        submit_checked(engine, shared, streaming, q);
     }
 }
 
@@ -317,6 +417,7 @@ where
                 shard,
                 batch: e.batch_size(),
                 max_prompt: e.max_prompt_len(),
+                geometry: e.page_geometry(),
             });
             e
         }
@@ -345,8 +446,8 @@ where
         while engine.active() + engine.pending() < engine.batch_size() {
             let item = shared.queues[shard].lock().unwrap().pop_front();
             match item {
-                Some((req, at)) => {
-                    submit_checked(&mut engine, &shared, &mut streaming, req, at)
+                Some(q) => {
+                    submit_checked(&mut engine, &shared, &mut streaming, q)
                 }
                 None => break,
             }
@@ -355,8 +456,8 @@ where
         // most-loaded shard.
         while engine.active() + engine.pending() < engine.batch_size() {
             match shared.steal_for(shard) {
-                Some((req, at)) => {
-                    submit_checked(&mut engine, &shared, &mut streaming, req, at)
+                Some(q) => {
+                    submit_checked(&mut engine, &shared, &mut streaming, q)
                 }
                 None => break,
             }
@@ -367,8 +468,21 @@ where
         // occupying a slot.
         {
             let now = Instant::now();
-            while let Some((req, at)) = shared.pop_expired(shard, now) {
-                submit_checked(&mut engine, &shared, &mut streaming, req, at);
+            while let Some(q) = shared.pop_expired(shard, now) {
+                submit_checked(&mut engine, &shared, &mut streaming, q);
+            }
+        }
+        // Priority fast path: a full engine never drains the overflow
+        // queue on its own, so a waiting higher-priority request would
+        // starve behind lower-priority occupants. Force-feed any queued
+        // request strictly above the engine's current floor — the engine
+        // preempts its weakest request at the next step boundary.
+        while let Some(floor) = engine.min_priority() {
+            match shared.pop_higher(shard, floor) {
+                Some(q) => {
+                    submit_checked(&mut engine, &shared, &mut streaming, q)
+                }
+                None => break,
             }
         }
         if engine.idle() {
@@ -426,8 +540,18 @@ where
                         let _ = tx.send(ShardEvent::Token { id, tok, index });
                     }
                 }
+                EngineEvent::Preempted { id } => {
+                    // Not terminal: the request requeued inside the
+                    // engine with its partial generation. Streaming
+                    // front-ends get a notice; load / reservations are
+                    // untouched (the request is still this shard's).
+                    if streaming.contains(&id) {
+                        let _ = tx.send(ShardEvent::Preempted { id });
+                    }
+                }
                 EngineEvent::Finished(completion) => {
                     streaming.remove(&completion.id);
+                    shared.release_reservation(completion.id);
                     shared.load[shard].fetch_sub(1, Ordering::SeqCst);
                     let _ = tx.send(ShardEvent::Done(completion));
                 }
@@ -477,7 +601,8 @@ impl<E: DecodeEngine> EngineGroup<E> {
                 .name(format!("shard-{i}"))
                 .spawn(move || shard_main(i, f, sq, crx, tx))
                 .map_err(|e| anyhow!("spawn shard {i}: {e}"))?;
-            shards.push(ShardHandle { tx: ctx, join, batch: 0, max_prompt: 0 });
+            shards.push(ShardHandle { tx: ctx, join, batch: 0, max_prompt: 0,
+                                      geometry: PageGeometry::default() });
         }
         drop(etx);
         // Wait for every shard's engine to come up (or fail fast). A
@@ -489,9 +614,13 @@ impl<E: DecodeEngine> EngineGroup<E> {
         let mut failure: Option<String> = None;
         while ready < shards.len() && failure.is_none() {
             match erx.recv_timeout(Duration::from_secs(1)) {
-                Ok(ShardEvent::Ready { shard, batch, max_prompt }) => {
+                Ok(ShardEvent::Ready { shard, batch, max_prompt, geometry }) => {
                     shards[shard].batch = batch;
                     shards[shard].max_prompt = max_prompt;
+                    shards[shard].geometry = geometry;
+                    // Arm the shard's page plan (stays disabled — admit
+                    // everything — when the engine reports no geometry).
+                    shared.plans[shard].set_budget(geometry.budget(cfg.queue_depth));
                     ready += 1;
                 }
                 Ok(ShardEvent::Fatal { shard, msg }) => {
@@ -500,6 +629,9 @@ impl<E: DecodeEngine> EngineGroup<E> {
                 Ok(ShardEvent::Done(_)) => unreachable!("done before submit"),
                 Ok(ShardEvent::Token { .. }) => {
                     unreachable!("token before submit")
+                }
+                Ok(ShardEvent::Preempted { .. }) => {
+                    unreachable!("preemption before submit")
                 }
                 Err(RecvTimeoutError::Timeout) => {
                     if let Some((i, _)) = shards
@@ -536,6 +668,8 @@ impl<E: DecodeEngine> EngineGroup<E> {
             affinity_slack: cfg.affinity_slack,
             queue_depth: cfg.queue_depth,
             rejected: 0,
+            deferred: 0,
+            defer_retry_ms: cfg.defer_retry_ms,
             first_submit: None,
             last_done: None,
             _engine: PhantomData,
@@ -576,6 +710,11 @@ impl<E: DecodeEngine> EngineGroup<E> {
         self.rejected
     }
 
+    /// Requests deferred for page-budget headroom so far.
+    pub fn deferred(&self) -> u64 {
+        self.deferred
+    }
+
     /// Virtual-replay admission window: keep up to one extra batch per
     /// shard queued so admission decisions are still exercised.
     pub fn admission_window(&self) -> usize {
@@ -590,53 +729,125 @@ impl<E: DecodeEngine> EngineGroup<E> {
     }
 
     /// Pick the shard for a request: the prompt's affinity shard while
-    /// its load is within `affinity_slack` of the minimum and below
-    /// capacity, else the least-loaded shard with headroom (lowest index
-    /// on ties). `None` when every shard is at `batch + queue_depth`.
-    /// One pass over the load atomics, no allocation — this sits on the
-    /// admission path of every request.
-    fn route(&self, req: &Request) -> Option<usize> {
+    /// its load is within `affinity_slack` of the minimum, below
+    /// capacity, and its page plan fits the request's projected demand;
+    /// else the least-loaded fitting shard with headroom (lowest index
+    /// on ties). `Route::Defer` when count headroom exists somewhere but
+    /// no shard's page budget fits (memory is the bottleneck — retry
+    /// later); `Route::Full` when every shard is at
+    /// `batch + queue_depth`. One pass over the load atomics, no
+    /// allocation — this sits on the admission path of every request.
+    fn route(&self, req: &Request) -> Route {
         let n = self.shards.len();
         let load = |i: usize| self.shared.load[i].load(Ordering::SeqCst);
         let cap = |i: usize| self.shards[i].batch + self.queue_depth;
+        let fits = |i: usize| {
+            self.shared.plans[i].fits(
+                self.shards[i].geometry.project(req.prompt.len(), req.max_new))
+        };
         if n == 1 {
-            return (load(0) < cap(0)).then_some(0);
+            if load(0) >= cap(0) {
+                return Route::Full;
+            }
+            return if fits(0) { Route::To(0) } else { Route::Defer };
         }
         let aff = (affinity_hash(&req.prompt) % n as u64) as usize;
         let mut min = usize::MAX;
+        let mut aff_ok = false;
         let mut aff_load = usize::MAX;
+        let mut count_open = false;
         let mut best = None;
         let mut best_load = usize::MAX;
         for i in 0..n {
             let l = load(i);
+            if l >= cap(i) {
+                continue;
+            }
+            count_open = true;
+            min = min.min(l);
+            if !fits(i) {
+                continue;
+            }
             if i == aff {
+                aff_ok = true;
                 aff_load = l;
             }
-            min = min.min(l);
-            if l < cap(i) && l < best_load {
+            if l < best_load {
                 best = Some(i);
                 best_load = l;
             }
         }
-        if aff_load < cap(aff) && aff_load <= min + self.affinity_slack {
-            return Some(aff);
+        if aff_ok && aff_load <= min + self.affinity_slack {
+            return Route::To(aff);
         }
-        best
+        match best {
+            Some(i) => Route::To(i),
+            None if count_open => Route::Defer,
+            None => Route::Full,
+        }
     }
 
     /// Route and dispatch a request. Latency clocks start here, so
     /// router/queue dwell is part of the reported TTFT. Returns
     /// [`SubmitOutcome::Rejected`] — without enqueueing — when every
-    /// shard is at `batch + queue_depth` load; `Err` only on a dead
-    /// shard (fleet failure, not backpressure).
+    /// shard is at `batch + queue_depth` load (or the request can never
+    /// fit any shard's page pool at all), [`SubmitOutcome::Deferred`]
+    /// when count headroom exists but no shard's page budget fits right
+    /// now; `Err` only on a dead shard (fleet failure, not
+    /// backpressure).
     pub fn submit(&mut self, req: Request) -> Result<SubmitOutcome> {
-        let Some(shard) = self.route(&req) else {
+        // A request whose projected peak exceeds every shard's *whole
+        // pool* can never be admitted — deferral would retry forever.
+        // (Engines detect the same condition post-admission — e.g. after
+        // a pool-shrink fault — and answer `ResourceExhausted`.)
+        if !self.shards.is_empty()
+            && self.shards.iter().all(|s| {
+                s.geometry.pool_pages > 0
+                    && s.geometry.project(req.prompt.len(), req.max_new)
+                        > s.geometry.pool_pages
+            })
+        {
             self.rejected += 1;
             return Ok(SubmitOutcome::Rejected);
+        }
+        let shard = match self.route(&req) {
+            Route::To(s) => s,
+            Route::Defer => {
+                self.deferred += 1;
+                return Ok(SubmitOutcome::Deferred {
+                    retry_after_ms: self.defer_retry_ms,
+                });
+            }
+            Route::Full => {
+                self.rejected += 1;
+                return Ok(SubmitOutcome::Rejected);
+            }
         };
+        // Reserve the projected peak page demand against the shard's
+        // plan. `route` checked `fits` advisorily; `try_reserve` is the
+        // authoritative (atomic) check, so a concurrent reservation can
+        // still turn the answer into a deferral here.
+        let need =
+            self.shards[shard].geometry.project(req.prompt.len(), req.max_new);
+        if !self.shared.plans[shard].try_reserve(need) {
+            self.deferred += 1;
+            return Ok(SubmitOutcome::Deferred {
+                retry_after_ms: self.defer_retry_ms,
+            });
+        }
         let now = Instant::now();
         if self.first_submit.is_none() {
             self.first_submit = Some(now);
+        }
+        // Record the reservation BEFORE the request becomes visible in
+        // the queue, so a thief's transfer always finds it.
+        let id = req.id;
+        if self.shared.plans[shard].enabled() && need > 0 {
+            self.shared
+                .reservations
+                .lock()
+                .unwrap()
+                .insert(id, (shard, need));
         }
         // Count the load BEFORE the request becomes visible in the
         // queue: a fast shard (or thief) could otherwise pop + complete
@@ -645,7 +856,7 @@ impl<E: DecodeEngine> EngineGroup<E> {
         self.shared.load[shard].fetch_add(1, Ordering::SeqCst);
         let qlen = {
             let mut q = self.shared.queues[shard].lock().unwrap();
-            q.push_back((req, now));
+            q.push_back(QueuedReq::fresh(req, now));
             q.len()
         };
         self.shared.queue_peak[shard].fetch_max(qlen, Ordering::SeqCst);
@@ -681,6 +892,9 @@ impl<E: DecodeEngine> EngineGroup<E> {
         match ev {
             ShardEvent::Token { id, tok, index } => {
                 Ok(Some(GroupEvent::Token { id, tok, index }))
+            }
+            ShardEvent::Preempted { id } => {
+                Ok(Some(GroupEvent::Preempted { id }))
             }
             ShardEvent::Done(completion) => {
                 self.inflight = self.inflight.saturating_sub(1);
@@ -757,9 +971,9 @@ impl<E: DecodeEngine> EngineGroup<E> {
             let left = deadline.saturating_duration_since(Instant::now());
             match self.poll_event(left)? {
                 Some(GroupEvent::Done(c)) => return Ok(Some(c)),
-                // Each discarded token is channel progress, so this
+                // Each discarded event is channel progress, so this
                 // drains rather than spins once the deadline passes.
-                Some(GroupEvent::Token { .. }) => continue,
+                Some(_) => continue,
                 None => return Ok(None),
             }
         }
@@ -812,6 +1026,7 @@ impl<E: DecodeEngine> EngineGroup<E> {
             wall_s,
             panicked,
             rejected: self.rejected,
+            deferred: self.deferred,
             queue_depth: self.queue_depth,
         })
     }
@@ -839,6 +1054,7 @@ mod tests {
     fn routed(o: SubmitOutcome) -> usize {
         match o {
             SubmitOutcome::Routed(s) => s,
+            SubmitOutcome::Deferred { .. } => panic!("unexpected deferral"),
             SubmitOutcome::Rejected => panic!("unexpected rejection"),
         }
     }
@@ -904,7 +1120,8 @@ mod tests {
         // One slow shard, batch 1, queue_depth 1 -> capacity 2. The third
         // submit must be rejected (the first can't have completed: each
         // request needs several 2ms steps).
-        let cfg = GroupConfig { shards: 1, affinity_slack: 1, queue_depth: 1 };
+        let cfg = GroupConfig { shards: 1, affinity_slack: 1, queue_depth: 1,
+                                ..Default::default() };
         let mut g: EngineGroup<SimEngine> =
             EngineGroup::with_config(cfg, |_| Ok(SimEngine::new(slow_sim())))
                 .unwrap();
@@ -928,7 +1145,8 @@ mod tests {
         use crate::coordinator::request::StopReason;
         // One slow single-slot shard, deep queue: req 0 becomes active,
         // reqs 1 and 2 wait in the shared overflow queue.
-        let cfg = GroupConfig { shards: 1, affinity_slack: 1, queue_depth: 8 };
+        let cfg = GroupConfig { shards: 1, affinity_slack: 1, queue_depth: 8,
+                                ..Default::default() };
         let slow = SimConfig { batch: 1, eos_every: 0, step_delay_ms: 2,
                                ..Default::default() };
         let mut g: EngineGroup<SimEngine> =
@@ -1027,7 +1245,8 @@ mod tests {
         // slot frees.
         let slow = SimConfig { batch: 1, eos_every: 0, step_delay_ms: 2,
                                ..Default::default() };
-        let cfg = GroupConfig { shards: 1, affinity_slack: 1, queue_depth: 8 };
+        let cfg = GroupConfig { shards: 1, affinity_slack: 1, queue_depth: 8,
+                                ..Default::default() };
         let mut g: EngineGroup<SimEngine> =
             EngineGroup::with_config(cfg, move |_| Ok(SimEngine::new(slow)))
                 .unwrap();
@@ -1095,7 +1314,8 @@ mod tests {
         // Two slow single-slot shards; a huge affinity slack pins every
         // request (identical prompt -> one affinity shard) onto the same
         // queue. The other shard must pull from it.
-        let cfg = GroupConfig { shards: 2, affinity_slack: 1000, queue_depth: 64 };
+        let cfg = GroupConfig { shards: 2, affinity_slack: 1000, queue_depth: 64,
+                                ..Default::default() };
         let mut g: EngineGroup<SimEngine> =
             EngineGroup::with_config(cfg, |_| Ok(SimEngine::new(slow_sim())))
                 .unwrap();
@@ -1120,5 +1340,39 @@ mod tests {
         assert!(gm.shards.iter().all(|m| m.requests_completed > 0),
                 "both shards must serve: {}", gm.report());
         assert!(f.queue_peak > 0, "queue peak untracked");
+    }
+
+    #[test]
+    fn page_budget_defers_when_count_headroom_remains() {
+        // Token-paged sim: pool = batch * pages_per_slot = 8 pages,
+        // share = ceil(8/2) = 4, queue_depth 2 -> budget 16. Each
+        // request projects (8 prompt + 55 new + 1) / 8 = 8 pages, so two
+        // reservations exhaust the budget while the count cap
+        // (batch + queue_depth = 4) still has room: the third submit
+        // must be *deferred*, not rejected.
+        let sim = SimConfig { batch: 2, pages_per_slot: 4, page_tokens: 8,
+                              eos_every: 0, step_delay_ms: 2,
+                              ..Default::default() };
+        let cfg = GroupConfig { shards: 1, queue_depth: 2,
+                                ..Default::default() };
+        let mut g: EngineGroup<SimEngine> =
+            EngineGroup::with_config(cfg, move |_| Ok(SimEngine::new(sim)))
+                .unwrap();
+        let prompt: Vec<i32> = (1..=8).collect();
+        routed(g.submit(req(0, prompt.clone(), 55)).unwrap());
+        routed(g.submit(req(1, prompt.clone(), 55)).unwrap());
+        assert_eq!(g.submit(req(2, prompt.clone(), 55)).unwrap(),
+                   SubmitOutcome::Deferred { retry_after_ms: 25 });
+        assert_eq!(g.deferred(), 1);
+        assert_eq!(g.rejected(), 0, "deferral is not rejection");
+        let comps = g.drain().unwrap();
+        assert_eq!(comps.len(), 2, "reserved requests run to completion");
+        // Completions released their reservations: the same shape is
+        // admissible again.
+        routed(g.submit(req(3, prompt, 55)).unwrap());
+        g.drain().unwrap();
+        let gm = g.shutdown().unwrap();
+        assert_eq!(gm.deferred, 1);
+        assert!(gm.report().contains("deferred=1"), "{}", gm.report());
     }
 }

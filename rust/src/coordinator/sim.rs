@@ -15,8 +15,9 @@
 //! in `rust/tests/serving.rs`. (The real engine has the same property
 //! under greedy sampling; see `rust/tests/engine.rs`.)
 //!
-//! KV-page accounting is simulated too: each admitted slot takes
-//! [`SimConfig::pages_per_slot`] pages from a pool gauge and returns
+//! KV-page accounting is simulated too: each admitted slot takes pages
+//! from a pool gauge ([`SimConfig::pages_per_slot`] flat, or
+//! length-projected when [`SimConfig::page_tokens`] is set) and returns
 //! them when the slot is reaped — for any stop reason, including
 //! [`StopReason::Cancelled`] — so the serving tests can assert that
 //! cancelling a mid-decode request releases its pages, through the exact
@@ -24,6 +25,25 @@
 //! freed in the reap that follows). The gauge is an `Arc<AtomicUsize>`
 //! so a test can watch it from outside the shard thread
 //! ([`SimEngine::with_pool_gauge`]).
+//!
+//! On top of that sits the robustness machinery the oversubscription
+//! tests drive:
+//!
+//! - **Priority preemption.** When the pool runs dry mid-decode (a
+//!   fault shrank it, or a higher-priority request is waiting while the
+//!   engine is full), the lowest-priority / youngest active slot is
+//!   preempted at a step boundary: its pages are freed through the same
+//!   reap bookkeeping cancellation uses, and the request is requeued
+//!   carrying its partial generation. Re-admission *replays* the token
+//!   function over the already-emitted tokens, so the resumed stream is
+//!   bit-identical and token events continue at the next index — no
+//!   gaps, no repeats. A bounded retry budget
+//!   ([`SimConfig::preempt_retries`]) converts thrashing into a
+//!   [`StopReason::ResourceExhausted`] terminal.
+//! - **Deterministic fault injection.** [`SimConfig::faults`] holds a
+//!   [`FaultSchedule`] of (step, [`Fault`]) pairs — pool shrinks, step
+//!   stalls, transient admit failures — applied at exact step numbers,
+//!   so adversarial end-to-end tests are reproducible from a seed.
 
 use std::collections::{HashSet, VecDeque};
 use std::sync::atomic::{AtomicUsize, Ordering};
@@ -32,8 +52,10 @@ use std::time::Instant;
 
 use anyhow::Result;
 
+use super::memory::PageGeometry;
 use super::metrics::Metrics;
-use super::request::{Completion, EngineEvent, Request, SeqStats, StopReason};
+use super::request::{Completion, EngineEvent, Priority, QueuedReq, Request,
+                     SeqStats, StopReason};
 use super::DecodeEngine;
 use crate::workload::Vocab;
 
@@ -72,6 +94,80 @@ fn gate_mix(mut z: u64) -> u64 {
     mix(z ^ crate::util::simd::dot(&a, &b).to_bits() as u64)
 }
 
+/// One injected fault, applied when the engine's step counter reaches
+/// the scheduled step (see [`FaultSchedule`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Fault {
+    /// Clamp the page-pool capacity to at most `pages` (a pool shrink:
+    /// capacity never grows back). Active slots whose pages no longer
+    /// fit are preempted at the same step boundary.
+    ShrinkPool { pages: usize },
+    /// The engine does no work (no admit, no decode, no reap) for the
+    /// next `steps` steps — a device hiccup. Bounded, so liveness is
+    /// only delayed, never lost.
+    Stall { steps: u64 },
+    /// The next `count` admission opportunities fail transiently: the
+    /// request stays queued and the step decodes instead.
+    FailAdmits { count: u32 },
+}
+
+/// A deterministic schedule of up to 8 `(step, fault)` pairs. `Copy` so
+/// [`SimConfig`] stays `Copy`. Steps are the engine's 1-based step
+/// counter (first `step()` call is step 1); several faults may share a
+/// step.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct FaultSchedule {
+    entries: [Option<(u64, Fault)>; 8],
+}
+
+impl FaultSchedule {
+    /// No faults (the default).
+    pub fn none() -> FaultSchedule {
+        FaultSchedule::default()
+    }
+
+    /// Builder: add `fault` at `step`. Panics when all 8 slots are used.
+    pub fn at(mut self, step: u64, fault: Fault) -> FaultSchedule {
+        for e in self.entries.iter_mut() {
+            if e.is_none() {
+                *e = Some((step, fault));
+                return self;
+            }
+        }
+        panic!("fault schedule full (max 8 entries)");
+    }
+
+    /// A reproducible adversarial schedule derived from `seed`: one pool
+    /// shrink (to between half and three-quarters of `pool_pages`, so a
+    /// single average sequence still fits), one short stall, and a burst
+    /// of transient admit failures, each at a seed-chosen early step.
+    pub fn seeded(seed: u64, pool_pages: usize) -> FaultSchedule {
+        let mut rng = crate::util::rng::Rng::new(seed ^ 0xFA_17_5C_ED);
+        let floor = (pool_pages / 2).max(1);
+        let hi = (pool_pages.saturating_mul(3) / 4).max(floor + 1);
+        FaultSchedule::none()
+            .at(rng.range(4, 40) as u64,
+                Fault::ShrinkPool { pages: rng.range(floor, hi) })
+            .at(rng.range(2, 30) as u64,
+                Fault::Stall { steps: rng.range(1, 4) as u64 })
+            .at(rng.range(2, 30) as u64,
+                Fault::FailAdmits { count: rng.range(1, 3) as u32 })
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.iter().all(|e| e.is_none())
+    }
+
+    /// Faults scheduled for `step`.
+    pub fn due(&self, step: u64) -> impl Iterator<Item = Fault> + '_ {
+        self.entries
+            .iter()
+            .flatten()
+            .filter(move |(s, _)| *s == step)
+            .map(|(_, f)| *f)
+    }
+}
+
 #[derive(Debug, Clone, Copy)]
 pub struct SimConfig {
     /// Concurrent batch slots.
@@ -94,12 +190,26 @@ pub struct SimConfig {
     /// `batch * pages_per_slot`); purely an accounting mirror of the
     /// real engine's paged pool, with no effect on generation.
     pub pages_per_slot: usize,
+    /// When non-zero, switch page accounting from the flat
+    /// `pages_per_slot`-per-sequence model to a length-projected one: an
+    /// admitted sequence holds `ceil((prompt + max_new + 1) /
+    /// page_tokens)` pages for its whole slot lifetime (its projected
+    /// peak — the conservative shape the admission planner budgets
+    /// with). Pool capacity stays `batch * pages_per_slot`. 0 (the
+    /// default) preserves the legacy flat model exactly.
+    pub page_tokens: usize,
+    /// How many times a request may be preempted-and-requeued before it
+    /// is terminated with [`StopReason::ResourceExhausted`].
+    pub preempt_retries: u32,
+    /// Deterministic fault injection schedule (default: none).
+    pub faults: FaultSchedule,
 }
 
 impl Default for SimConfig {
     fn default() -> Self {
         SimConfig { batch: 4, max_seq: 512, seed: 0, min_gen: 4, eos_every: 23,
-                    step_delay_ms: 0, pages_per_slot: 4 }
+                    step_delay_ms: 0, pages_per_slot: 4, page_tokens: 0,
+                    preempt_retries: 3, faults: FaultSchedule::none() }
     }
 }
 
@@ -115,21 +225,38 @@ struct SimSlot {
     len: usize,
     generated: Vec<i32>,
     stop: Option<StopReason>,
+    /// Pages this slot holds (returned to the pool on reap or preempt).
+    pages: usize,
+    /// Times this request has been preempted before this admission.
+    retries: u32,
 }
 
 pub struct SimEngine {
     pub cfg: SimConfig,
     slots: Vec<Option<SimSlot>>,
-    queue: VecDeque<(Request, Instant)>,
+    queue: VecDeque<QueuedReq>,
     pub metrics: Metrics,
     pub vocab: Vocab,
     /// Ids flagged for cancellation, applied at the next step boundary.
     cancels: HashSet<u64>,
     /// Completions synthesized off-slot (cancelled or deadline-expired
-    /// while still queued), drained by the next reap.
+    /// while still queued, or resource-exhausted), drained by the next
+    /// reap.
     done_early: Vec<Completion>,
-    /// Free simulated KV pages (see [`SimConfig::pages_per_slot`]).
+    /// Free simulated KV pages, published as
+    /// `capacity_pages - held_pages` (see [`SimConfig::pages_per_slot`]).
     pool_free: Arc<AtomicUsize>,
+    /// Current pool capacity; starts at `batch * pages_per_slot`, only
+    /// ever shrunk by [`Fault::ShrinkPool`].
+    capacity_pages: usize,
+    /// Pages held by active slots.
+    held_pages: usize,
+    /// 1-based step counter driving the fault schedule.
+    step_no: u64,
+    /// Remaining [`Fault::Stall`] steps.
+    stall_left: u64,
+    /// Remaining [`Fault::FailAdmits`] admission failures.
+    fail_admits_left: u32,
 }
 
 impl SimEngine {
@@ -143,7 +270,8 @@ impl SimEngine {
     /// (re)set to the pool capacity here.
     pub fn with_pool_gauge(cfg: SimConfig,
                            gauge: Arc<AtomicUsize>) -> SimEngine {
-        gauge.store(cfg.batch * cfg.pages_per_slot, Ordering::SeqCst);
+        let capacity = cfg.batch * cfg.pages_per_slot;
+        gauge.store(capacity, Ordering::SeqCst);
         SimEngine {
             slots: (0..cfg.batch).map(|_| None).collect(),
             queue: VecDeque::new(),
@@ -152,6 +280,11 @@ impl SimEngine {
             cancels: HashSet::new(),
             done_early: Vec::new(),
             pool_free: gauge,
+            capacity_pages: capacity,
+            held_pages: 0,
+            step_no: 0,
+            stall_left: 0,
+            fail_admits_left: 0,
             cfg,
         }
     }
@@ -161,8 +294,23 @@ impl SimEngine {
         self.pool_free.load(Ordering::SeqCst)
     }
 
+    /// Current pool capacity (shrinks under [`Fault::ShrinkPool`]).
     pub fn pool_capacity(&self) -> usize {
-        self.cfg.batch * self.cfg.pages_per_slot
+        self.capacity_pages
+    }
+
+    fn publish_gauge(&self) {
+        self.pool_free.store(self.capacity_pages.saturating_sub(self.held_pages),
+                             Ordering::SeqCst);
+    }
+
+    /// Pages a sequence holds for its slot lifetime (projected peak).
+    fn seq_pages(cfg: &SimConfig, prompt_len: usize, max_new: usize) -> usize {
+        if cfg.page_tokens == 0 {
+            cfg.pages_per_slot
+        } else {
+            (prompt_len + max_new + 1).div_ceil(cfg.page_tokens)
+        }
     }
 
     /// The deterministic generation a request would produce, computed
@@ -203,6 +351,21 @@ impl SimEngine {
         8 + (state % 200) as i32
     }
 
+    /// Apply faults scheduled for the current step.
+    fn apply_faults(&mut self) {
+        let faults = self.cfg.faults;
+        for f in faults.due(self.step_no) {
+            match f {
+                Fault::ShrinkPool { pages } => {
+                    self.capacity_pages = self.capacity_pages.min(pages);
+                    self.publish_gauge();
+                }
+                Fault::Stall { steps } => self.stall_left += steps,
+                Fault::FailAdmits { count } => self.fail_admits_left += count,
+            }
+        }
+    }
+
     /// Step-boundary control stops (shared rule: [`StopReason::control`]):
     /// flag cancelled / deadline-expired active slots for the reap that
     /// follows, and complete cancelled or expired requests still waiting
@@ -224,38 +387,99 @@ impl SimEngine {
                                       &mut self.done_early, now);
     }
 
+    /// Index of the queued request admission should take next: highest
+    /// priority, front-most among equals. Strict head-of-line within a
+    /// priority class — admission never skips ahead to a smaller
+    /// lower-priority request.
+    fn best_queued(&self) -> Option<usize> {
+        let mut best: Option<usize> = None;
+        for (i, q) in self.queue.iter().enumerate() {
+            match best {
+                None => best = Some(i),
+                Some(b) => {
+                    if q.req.priority > self.queue[b].req.priority {
+                        best = Some(i);
+                    }
+                }
+            }
+        }
+        best
+    }
+
+    /// Can the next admission candidate actually be admitted right now
+    /// (free slot + pages fit)?
+    fn admit_ready(&self) -> bool {
+        match self.best_queued() {
+            None => false,
+            Some(qi) => {
+                let q = &self.queue[qi];
+                let need = Self::seq_pages(&self.cfg, q.req.prompt.len(),
+                                           q.req.max_new);
+                self.slots.iter().any(|s| s.is_none())
+                    && self.held_pages + need <= self.capacity_pages
+            }
+        }
+    }
+
     fn admit_and_prefill(&mut self, sink: &mut dyn FnMut(EngineEvent)) {
         let t0 = Instant::now();
         let cfg = self.cfg;
         let vocab = self.vocab;
         let mut admitted_any = false;
-        for entry in self.slots.iter_mut() {
-            if entry.is_none() {
-                if let Some((req, admitted)) = self.queue.pop_front() {
-                    self.pool_free.fetch_sub(cfg.pages_per_slot,
-                                             Ordering::SeqCst);
-                    // "Prefill": fold the prompt into the token-function
-                    // state and emit the first token.
-                    let mut state = cfg.seed ^ SIM_TAG;
-                    for &t in &req.prompt {
-                        state = mix(state ^ t as u64);
-                    }
-                    sink(EngineEvent::Started { id: req.id });
-                    let mut slot = SimSlot {
-                        state,
-                        len: req.prompt.len(),
-                        generated: Vec::new(),
-                        stop: None,
-                        first_token: None,
-                        admitted,
-                        req,
-                    };
-                    Self::emit(&cfg, &vocab, &mut slot, sink);
-                    slot.first_token = Some(Instant::now());
-                    *entry = Some(slot);
-                    admitted_any = true;
-                }
+        while let Some(qi) = self.best_queued() {
+            let Some(si) = self.slots.iter().position(|s| s.is_none()) else {
+                break;
+            };
+            let need = Self::seq_pages(&cfg, self.queue[qi].req.prompt.len(),
+                                       self.queue[qi].req.max_new);
+            if self.held_pages + need > self.capacity_pages {
+                break;
             }
+            let QueuedReq { req, arrived, resume, first_token_at, retries } =
+                self.queue.remove(qi).unwrap();
+            self.held_pages += need;
+            self.publish_gauge();
+            self.metrics.pages_peak = self.metrics.pages_peak.max(self.held_pages);
+            // "Prefill": fold the prompt into the token-function state.
+            let mut state = cfg.seed ^ SIM_TAG;
+            for &t in &req.prompt {
+                state = mix(state ^ t as u64);
+            }
+            let mut slot = SimSlot {
+                state,
+                len: req.prompt.len(),
+                generated: Vec::new(),
+                stop: None,
+                first_token: first_token_at,
+                admitted: arrived,
+                pages: need,
+                retries,
+                req,
+            };
+            if resume.is_empty() {
+                sink(EngineEvent::Started { id: slot.req.id });
+                Self::emit(&cfg, &vocab, &mut slot, sink);
+                slot.first_token = Some(Instant::now());
+            } else {
+                // Resume after preemption: replay the token function
+                // over the already-emitted tokens with a suppressed
+                // sink. The stream is a pure function of (seed, prompt),
+                // so the replay is bit-identical and the slot lands in
+                // the exact state it was preempted from — the next
+                // decode emits the next index, no Started / Token
+                // re-emission, no gaps, no repeats.
+                let mut quiet = |_: EngineEvent| {};
+                for j in 0..resume.len() {
+                    if j > 0 {
+                        slot.len += 1;
+                    }
+                    Self::emit(&cfg, &vocab, &mut slot, &mut quiet);
+                }
+                debug_assert_eq!(slot.generated, resume,
+                                 "resume replay must be bit-identical");
+            }
+            self.slots[si] = Some(slot);
+            admitted_any = true;
         }
         if admitted_any {
             self.metrics.prefill_s.push(t0.elapsed().as_secs_f64());
@@ -292,6 +516,125 @@ impl SimEngine {
         self.metrics.decode_step_s.push(t0.elapsed().as_secs_f64());
     }
 
+    /// Preempt one active slot: the lowest-priority victim, youngest
+    /// (latest-admitted) among equals. With `only_if_below = Some(p)`,
+    /// only a victim of priority strictly below `p` is taken — the rule
+    /// that makes "a lower-priority request never survives while a
+    /// higher-priority one is starved" hold without ever letting
+    /// equal-priority requests churn each other. A victim whose retry
+    /// budget is spent is terminated with `ResourceExhausted` instead of
+    /// requeued; either way its pages return to the pool at this step
+    /// boundary. Returns whether a slot was freed.
+    fn preempt_one(&mut self, sink: &mut dyn FnMut(EngineEvent),
+                   only_if_below: Option<Priority>) -> bool {
+        let mut victim: Option<usize> = None;
+        for (i, slot) in self.slots.iter().enumerate() {
+            let Some(s) = slot else { continue };
+            if s.stop.is_some() {
+                continue; // already terminating; its pages free this step
+            }
+            match victim {
+                None => victim = Some(i),
+                Some(v) => {
+                    let cur = self.slots[v].as_ref().unwrap();
+                    let weaker = s.req.priority < cur.req.priority
+                        || (s.req.priority == cur.req.priority
+                            && s.admitted >= cur.admitted);
+                    if weaker {
+                        victim = Some(i);
+                    }
+                }
+            }
+        }
+        let Some(vi) = victim else { return false };
+        if let Some(floor) = only_if_below {
+            if self.slots[vi].as_ref().unwrap().req.priority >= floor {
+                return false;
+            }
+        }
+        let slot = self.slots[vi].take().unwrap();
+        self.held_pages -= slot.pages;
+        self.publish_gauge();
+        if slot.retries >= self.cfg.preempt_retries {
+            let now = Instant::now();
+            self.done_early.push(Completion {
+                id: slot.req.id,
+                prompt_len: slot.req.prompt.len(),
+                generated: slot.generated,
+                stop: StopReason::ResourceExhausted,
+                ttft: slot.first_token
+                    .map(|t| t.saturating_duration_since(slot.admitted))
+                    .unwrap_or_default(),
+                e2e: now.saturating_duration_since(slot.admitted),
+                stats: SeqStats::default(),
+            });
+        } else {
+            sink(EngineEvent::Preempted { id: slot.req.id });
+            self.metrics.requests_preempted += 1;
+            self.queue.push_front(QueuedReq {
+                req: slot.req,
+                arrived: slot.admitted,
+                resume: slot.generated,
+                first_token_at: slot.first_token,
+                retries: slot.retries + 1,
+            });
+        }
+        true
+    }
+
+    /// After a pool shrink: preempt until held pages fit capacity again.
+    fn shed_deficit(&mut self, sink: &mut dyn FnMut(EngineEvent)) {
+        while self.held_pages > self.capacity_pages {
+            if !self.preempt_one(sink, None) {
+                break;
+            }
+        }
+    }
+
+    /// Terminate queued requests that can never fit the (possibly
+    /// shrunken) pool — without this sweep they would starve forever.
+    fn expire_infeasible(&mut self) {
+        let now = Instant::now();
+        let cfg = self.cfg;
+        let cap = self.capacity_pages;
+        let mut i = 0;
+        while i < self.queue.len() {
+            let q = &self.queue[i];
+            if Self::seq_pages(&cfg, q.req.prompt.len(), q.req.max_new) > cap {
+                let q = self.queue.remove(i).unwrap();
+                self.cancels.remove(&q.req.id);
+                self.done_early.push(Completion {
+                    id: q.req.id,
+                    prompt_len: q.req.prompt.len(),
+                    generated: q.resume,
+                    stop: StopReason::ResourceExhausted,
+                    ttft: q.first_token_at
+                        .map(|t| t.saturating_duration_since(q.arrived))
+                        .unwrap_or_default(),
+                    e2e: now.saturating_duration_since(q.arrived),
+                    stats: SeqStats::default(),
+                });
+            } else {
+                i += 1;
+            }
+        }
+    }
+
+    /// When the best queued request cannot be admitted (engine full, or
+    /// pages short), evict one strictly-lower-priority occupant in its
+    /// favour. One victim per step keeps preemption at step-boundary
+    /// granularity.
+    fn pressure_preempt(&mut self, sink: &mut dyn FnMut(EngineEvent)) {
+        let Some(qi) = self.best_queued() else { return };
+        let q = &self.queue[qi];
+        let need = Self::seq_pages(&self.cfg, q.req.prompt.len(), q.req.max_new);
+        if need > self.capacity_pages {
+            return; // infeasible; expire_infeasible handles it
+        }
+        let floor = q.req.priority;
+        self.preempt_one(sink, Some(floor));
+    }
+
     fn reap_into(&mut self, sink: &mut dyn FnMut(EngineEvent)) {
         for c in self.done_early.drain(..) {
             self.metrics.record_completion(c.ttft, c.e2e, c.generated.len(),
@@ -305,8 +648,8 @@ impl SimEngine {
                 .unwrap_or(false);
             if finished {
                 let slot = entry.take().unwrap();
-                self.pool_free.fetch_add(self.cfg.pages_per_slot,
-                                         Ordering::SeqCst);
+                self.held_pages -= slot.pages;
+                self.publish_gauge();
                 let now = Instant::now();
                 let ttft = slot
                     .first_token
@@ -332,20 +675,42 @@ impl SimEngine {
     /// One engine iteration over the event sink — the single
     /// implementation both trait entry points (`step`, `step_events`)
     /// share, and a control-flow mirror of the PJRT engine's
-    /// `step_core`: control stops, an immediate reap (so a cancelled /
-    /// expired slot frees its pages *this* step), then admit-or-decode,
-    /// then the regular reap.
+    /// `step_core`: faults, control stops, an immediate reap (so a
+    /// cancelled / expired slot frees its pages *this* step), deficit
+    /// shedding + infeasibility sweep, then admit-or-decode (with
+    /// pressure preemption when admission is blocked), then the regular
+    /// reap. With no faults scheduled and the flat page model, the
+    /// admit-or-decode decision reduces exactly to the pre-preemption
+    /// rule "admit iff a request is queued and a slot is free".
     fn step_core(&mut self, sink: &mut dyn FnMut(EngineEvent)) -> Result<()> {
         if self.cfg.step_delay_ms > 0 {
             std::thread::sleep(std::time::Duration::from_millis(
                 self.cfg.step_delay_ms));
         }
+        self.step_no += 1;
+        self.apply_faults();
+        if self.stall_left > 0 {
+            self.stall_left -= 1;
+            return Ok(());
+        }
         self.apply_control_stops();
         self.reap_into(sink);
-        if !self.queue.is_empty() && self.slots.iter().any(|s| s.is_none()) {
-            self.admit_and_prefill(sink);
-        } else if DecodeEngine::active(self) > 0 {
-            self.decode_step(sink);
+        self.shed_deficit(sink);
+        self.expire_infeasible();
+        if self.admit_ready() {
+            if self.fail_admits_left > 0 {
+                self.fail_admits_left -= 1;
+                if DecodeEngine::active(self) > 0 {
+                    self.decode_step(sink);
+                }
+            } else {
+                self.admit_and_prefill(sink);
+            }
+        } else {
+            self.pressure_preempt(sink);
+            if DecodeEngine::active(self) > 0 {
+                self.decode_step(sink);
+            }
         }
         self.reap_into(sink);
         Ok(())
@@ -363,11 +728,15 @@ impl SimEngine {
 
 impl DecodeEngine for SimEngine {
     fn submit_at(&mut self, req: Request, arrived: Instant) {
-        assert!(req.prompt.len() + 2 < self.cfg.max_seq,
-                "prompt {} too long for context {}", req.prompt.len(),
+        self.submit_queued(QueuedReq::fresh(req, arrived));
+    }
+
+    fn submit_queued(&mut self, q: QueuedReq) {
+        assert!(q.req.prompt.len() + 2 < self.cfg.max_seq,
+                "prompt {} too long for context {}", q.req.prompt.len(),
                 self.cfg.max_seq);
         self.metrics.start_clock();
-        self.queue.push_back((req, arrived));
+        self.queue.push_back(q);
     }
 
     fn step(&mut self) -> Result<Vec<Completion>> {
@@ -390,7 +759,7 @@ impl DecodeEngine for SimEngine {
             .iter()
             .flatten()
             .any(|s| s.stop.is_none() && s.req.id == id)
-            || self.queue.iter().any(|(r, _)| r.id == id);
+            || self.queue.iter().any(|q| q.req.id == id);
         if known {
             self.cancels.insert(id);
         }
@@ -419,6 +788,37 @@ impl DecodeEngine for SimEngine {
         // to emit them.
         self.queue.is_empty() && DecodeEngine::active(self) == 0
             && self.done_early.is_empty()
+    }
+
+    fn page_geometry(&self) -> PageGeometry {
+        let pool_pages = self.cfg.batch * self.cfg.pages_per_slot;
+        if self.cfg.page_tokens == 0 {
+            PageGeometry {
+                pool_pages,
+                tokens_per_page: 0,
+                rows_per_seq: 0,
+                fixed_pages_per_seq: self.cfg.pages_per_slot,
+                slots: self.cfg.batch,
+            }
+        } else {
+            PageGeometry {
+                pool_pages,
+                tokens_per_page: self.cfg.page_tokens,
+                rows_per_seq: 1,
+                fixed_pages_per_seq: 0,
+                slots: self.cfg.batch,
+            }
+        }
+    }
+
+    fn min_priority(&self) -> Option<Priority> {
+        self.slots
+            .iter()
+            .flatten()
+            .filter(|s| s.stop.is_none())
+            .map(|s| s.req.priority)
+            .chain(self.queue.iter().map(|q| q.req.priority))
+            .min()
     }
 
     fn take_metrics(&mut self) -> Metrics {
@@ -488,7 +888,9 @@ mod tests {
                     assert_eq!(g.len(), 12);
                 }
                 StopReason::ContextFull => {}
-                StopReason::Cancelled | StopReason::DeadlineExceeded => {
+                StopReason::Cancelled
+                | StopReason::DeadlineExceeded
+                | StopReason::ResourceExhausted => {
                     unreachable!("control stops never come from decide()")
                 }
             }
@@ -523,6 +925,9 @@ mod tests {
                     finished = Some(c.clone());
                 }
                 EngineEvent::Started { .. } => panic!("duplicate Started"),
+                EngineEvent::Preempted { .. } => {
+                    panic!("no preemption without memory pressure")
+                }
             }
         }
         let c = finished.expect("no Finished event");
@@ -615,5 +1020,212 @@ mod tests {
         assert!(c.generated.is_empty());
         assert_eq!(comps.iter().filter(|c| c.id == 1).count(), 1);
         assert_eq!(eng.metrics.requests_deadline_expired, 1);
+    }
+
+    #[test]
+    fn fault_schedule_builder_and_due() {
+        let s = FaultSchedule::none();
+        assert!(s.is_empty());
+        assert_eq!(s.due(1).count(), 0);
+        let s = s
+            .at(3, Fault::Stall { steps: 2 })
+            .at(3, Fault::FailAdmits { count: 1 })
+            .at(9, Fault::ShrinkPool { pages: 4 });
+        assert!(!s.is_empty());
+        assert_eq!(s.due(3).count(), 2);
+        assert_eq!(s.due(9).collect::<Vec<_>>(),
+                   vec![Fault::ShrinkPool { pages: 4 }]);
+        assert_eq!(s.due(4).count(), 0);
+        // Seeded schedules are deterministic and non-empty.
+        let a = FaultSchedule::seeded(11, 16);
+        let b = FaultSchedule::seeded(11, 16);
+        assert_eq!(a, b);
+        assert!(!a.is_empty());
+        assert_ne!(a, FaultSchedule::seeded(12, 16));
+    }
+
+    #[test]
+    fn interactive_request_preempts_batch_and_stream_resumes_bit_identical() {
+        // batch 1: the interactive arrival finds the engine full and must
+        // evict the batch-priority occupant mid-decode.
+        let cfg = SimConfig { batch: 1, eos_every: 0, ..Default::default() };
+        let mut eng = SimEngine::new(cfg);
+        let pa: Vec<i32> = vec![2, 3, 5];
+        let pb: Vec<i32> = vec![7, 11];
+        DecodeEngine::submit(&mut eng,
+                             req(1, pa.clone(), 12)
+                                 .with_priority(Priority::Batch));
+        let mut events = Vec::new();
+        for _ in 0..4 {
+            eng.step_events(&mut |ev| events.push(ev)).unwrap(); // 4 tokens
+        }
+        assert_eq!(DecodeEngine::min_priority(&eng), Some(Priority::Batch));
+        DecodeEngine::submit(&mut eng, req(2, pb.clone(), 6));
+        while !DecodeEngine::idle(&eng) {
+            eng.step_events(&mut |ev| events.push(ev)).unwrap();
+        }
+        // The batch request was preempted exactly once, then resumed.
+        let preempts: Vec<u64> = events.iter().filter_map(|e| match e {
+            EngineEvent::Preempted { id } => Some(*id),
+            _ => None,
+        }).collect();
+        assert_eq!(preempts, vec![1], "batch victim preempted once");
+        assert_eq!(eng.metrics.requests_preempted, 1);
+        // Per-request token events: contiguous indices, bit-identical to
+        // the unconstrained pure generation, exactly one Started each.
+        for (id, prompt, max_new) in [(1u64, &pa, 12usize), (2, &pb, 6)] {
+            let toks: Vec<i32> = events.iter().filter_map(|e| match e {
+                EngineEvent::Token { id: i, tok, .. } if *i == id => Some(*tok),
+                _ => None,
+            }).collect();
+            let idxs: Vec<usize> = events.iter().filter_map(|e| match e {
+                EngineEvent::Token { id: i, index, .. } if *i == id => {
+                    Some(*index)
+                }
+                _ => None,
+            }).collect();
+            assert_eq!(idxs, (0..toks.len()).collect::<Vec<_>>(),
+                       "id {id}: indices contiguous across preemption");
+            let starts = events.iter().filter(|e| {
+                matches!(e, EngineEvent::Started { id: i } if *i == id)
+            }).count();
+            assert_eq!(starts, 1, "id {id}: resume must not re-emit Started");
+            let (want, _) = SimEngine::expected_generation(&cfg, prompt, max_new);
+            assert_eq!(toks, want, "id {id}: stream bit-identical");
+            let done = events.iter().find_map(|e| match e {
+                EngineEvent::Finished(c) if c.id == id => Some(c.clone()),
+                _ => None,
+            }).unwrap();
+            assert_eq!(done.generated, want);
+        }
+        assert_eq!(eng.pool_free(), eng.pool_capacity(), "page leak");
+    }
+
+    #[test]
+    fn spent_retry_budget_terminates_with_resource_exhausted() {
+        let cfg = SimConfig { batch: 1, eos_every: 0, preempt_retries: 0,
+                              ..Default::default() };
+        let mut eng = SimEngine::new(cfg);
+        DecodeEngine::submit(&mut eng,
+                             req(1, vec![2, 3], 50)
+                                 .with_priority(Priority::Batch));
+        for _ in 0..3 {
+            DecodeEngine::step(&mut eng).unwrap();
+        }
+        DecodeEngine::submit(&mut eng, req(2, vec![4, 5], 6));
+        let comps = eng.run_to_completion().unwrap();
+        let c1 = comps.iter().find(|c| c.id == 1).unwrap();
+        assert_eq!(c1.stop, StopReason::ResourceExhausted);
+        assert_eq!(c1.generated.len(), 3,
+                   "partial generation survives exhaustion");
+        assert_eq!(eng.metrics.requests_exhausted, 1);
+        assert_eq!(eng.metrics.requests_preempted, 0,
+                   "exhaustion is terminal, not a requeue");
+        let c2 = comps.iter().find(|c| c.id == 2).unwrap();
+        let (want, _) = SimEngine::expected_generation(&cfg, &[4, 5], 6);
+        assert_eq!(c2.generated, want, "the interactive winner is unharmed");
+        assert_eq!(eng.pool_free(), eng.pool_capacity());
+    }
+
+    #[test]
+    fn pool_shrink_fault_sheds_pages_and_everyone_still_terminates() {
+        // Two active slots hold 8 pages; at step 5 the pool shrinks to 6,
+        // forcing a deficit preemption of the youngest. Both requests
+        // must still produce their exact streams.
+        let cfg = SimConfig {
+            batch: 2,
+            eos_every: 0,
+            faults: FaultSchedule::none()
+                .at(5, Fault::ShrinkPool { pages: 6 }),
+            ..Default::default()
+        };
+        let mut eng = SimEngine::new(cfg);
+        let pa: Vec<i32> = vec![1, 2];
+        let pb: Vec<i32> = vec![3, 4];
+        DecodeEngine::submit(&mut eng, req(1, pa.clone(), 20));
+        DecodeEngine::submit(&mut eng, req(2, pb.clone(), 20));
+        let comps = eng.run_to_completion().unwrap();
+        assert_eq!(comps.len(), 2);
+        assert!(eng.metrics.requests_preempted >= 1, "shrink forced a preempt");
+        for (id, prompt) in [(1u64, &pa), (2, &pb)] {
+            let c = comps.iter().find(|c| c.id == id).unwrap();
+            let (want, stop) = SimEngine::expected_generation(&cfg, prompt, 20);
+            assert_eq!(c.generated, want, "id {id}");
+            assert_eq!(c.stop, stop);
+        }
+        assert_eq!(eng.pool_capacity(), 6, "capacity stays shrunk");
+        assert_eq!(eng.pool_free(), 6, "all pages back after drain");
+        assert!(eng.metrics.pages_peak >= 8, "peak saw the full pool in use");
+    }
+
+    #[test]
+    fn infeasible_request_is_resource_exhausted_not_starved() {
+        // Length-projected paging: the long request can never fit the
+        // pool, so it must terminate instead of queueing forever.
+        let cfg = SimConfig { batch: 1, pages_per_slot: 2, page_tokens: 4,
+                              eos_every: 0, ..Default::default() };
+        let mut eng = SimEngine::new(cfg);
+        // needs ceil((10 + 20 + 1) / 4) = 8 pages > 2.
+        DecodeEngine::submit(&mut eng, req(1, vec![9; 10], 20));
+        let comps = eng.run_to_completion().unwrap();
+        assert_eq!(comps.len(), 1);
+        assert_eq!(comps[0].stop, StopReason::ResourceExhausted);
+        assert!(comps[0].generated.is_empty());
+        assert_eq!(eng.metrics.requests_exhausted, 1);
+        // A fitting request still runs: ceil((2 + 4 + 1) / 4) = 2 pages.
+        DecodeEngine::submit(&mut eng, req(2, vec![1, 2], 4));
+        let comps = eng.run_to_completion().unwrap();
+        let (want, _) = SimEngine::expected_generation(&cfg, &[1, 2], 4);
+        assert_eq!(comps[0].generated, want);
+        assert_eq!(eng.pool_free(), eng.pool_capacity());
+    }
+
+    #[test]
+    fn stall_and_admit_faults_delay_but_do_not_change_output() {
+        let faulty = SimConfig {
+            batch: 1,
+            eos_every: 0,
+            faults: FaultSchedule::none()
+                .at(1, Fault::Stall { steps: 2 })
+                .at(4, Fault::FailAdmits { count: 1 }),
+            ..Default::default()
+        };
+        let clean = SimConfig { faults: FaultSchedule::none(), ..faulty };
+        let run = |cfg: SimConfig| {
+            let mut eng = SimEngine::new(cfg);
+            DecodeEngine::submit(&mut eng, req(1, vec![5, 6], 8));
+            DecodeEngine::submit(&mut eng, req(2, vec![7, 8], 8));
+            let mut comps = eng.run_to_completion().unwrap();
+            comps.sort_by_key(|c| c.id);
+            (comps, eng.pool_free(), eng.pool_capacity())
+        };
+        let (fa, ffree, fcap) = run(faulty);
+        let (ca, _, _) = run(clean);
+        assert_eq!(fa.len(), 2);
+        assert_eq!(ffree, fcap);
+        for (f, c) in fa.iter().zip(ca.iter()) {
+            assert_eq!(f.id, c.id);
+            assert_eq!(f.generated, c.generated,
+                       "faults may delay but never change tokens");
+            assert_eq!(f.stop, c.stop);
+        }
+    }
+
+    #[test]
+    fn page_geometry_reflects_paging_model() {
+        let flat = SimEngine::new(SimConfig { batch: 2, pages_per_slot: 4,
+                                              ..Default::default() });
+        let g = DecodeEngine::page_geometry(&flat);
+        assert_eq!(g.pool_pages, 8);
+        assert_eq!(g.fixed_pages_per_seq, 4);
+        assert_eq!(g.slots, 2);
+        assert_eq!(g.project(100, 100), 4, "flat model ignores lengths");
+        let tok = SimEngine::new(SimConfig { batch: 2, pages_per_slot: 4,
+                                             page_tokens: 8,
+                                             ..Default::default() });
+        let g = DecodeEngine::page_geometry(&tok);
+        assert_eq!(g.pool_pages, 8);
+        assert_eq!(g.tokens_per_page, 8);
+        assert_eq!(g.project(8, 55), 8, "64 tokens over 8-token pages");
     }
 }

@@ -26,6 +26,8 @@ USAGE:
                    [--block-size B] [--shards N] [--gather-threads T]
                    [--max-conns N] [--idle-timeout-ms MS] [--queue-depth N]
                    [--stream] [--deadline-ms MS] [--no-simd]
+                   [--defer-retry-ms MS] [--preempt-retries N]
+                   [--default-priority interactive|batch]
   seerattn generate [--task easy|hard] [--policy P] [--budget TOKENS] [--n N]
                    [--no-simd]
 
@@ -228,6 +230,9 @@ fn cmd_serve(args: &Args, dir: &PathBuf) -> Result<()> {
         // Single carrier for --no-simd: Engine::new pins the
         // process-global dispatch when this is false.
         simd: !args.flags.contains_key("no-simd"),
+        // Preemptions a request survives (requeue + re-prefill) before
+        // it is terminated with "resource_exhausted".
+        preempt_retries: args.usize_flag("preempt-retries", 3) as u32,
         ..Default::default()
     };
     let gcfg = GroupConfig {
@@ -235,7 +240,15 @@ fn cmd_serve(args: &Args, dir: &PathBuf) -> Result<()> {
         // Bounded per-shard overflow queue; beyond `batch + queue_depth`
         // on every shard, clients get a structured `overloaded` reply.
         queue_depth: args.usize_flag("queue-depth", 32),
+        // Retry hint carried on "deferred" (KV page headroom) replies.
+        defer_retry_ms: args.usize_flag("defer-retry-ms", 25) as u64,
         ..Default::default()
+    };
+    let default_priority = {
+        let s = args.str_flag("default-priority", "interactive");
+        seerattn::coordinator::Priority::from_wire(&s)
+            .ok_or_else(|| anyhow!("unknown --default-priority {s:?} \
+                                    (want interactive|batch)"))?
     };
     let scfg = ServeConfig {
         max_conns: args.usize_flag("max-conns", 256),
@@ -251,6 +264,8 @@ fn cmd_serve(args: &Args, dir: &PathBuf) -> Result<()> {
             0 => None,
             ms => Some(std::time::Duration::from_millis(ms as u64)),
         },
+        // Scheduling class for requests without a "priority" field.
+        default_priority,
     };
     // Each shard thread constructs its own runtime + engine (the engine
     // holds an Rc and never crosses threads); the factory just captures

@@ -25,6 +25,13 @@
 //!     decode at its shard and releases its KV pages; a per-request
 //!     deadline stops a decode with `"stop": "deadline"` and a partial
 //!     generation.
+//!  7. Memory-planned admission + priority preemption (ISSUE 6): under
+//!     2x page oversubscription and seeded fault injection, no request
+//!     is ever lost or duplicated, preempted-then-resumed requests stay
+//!     bit-identical to the unconstrained token function, deferred
+//!     submissions carry retry hints the trace runner honours with
+//!     backoff, and cancel/disconnect storms leave every shard's page
+//!     pool gauge at full capacity.
 
 use std::collections::BTreeMap;
 use std::io::{BufRead, BufReader, Write};
@@ -34,12 +41,13 @@ use std::time::{Duration, Instant};
 use seerattn::coordinator::request::StopReason;
 use seerattn::coordinator::scheduler::{Replay, TraceRunner};
 use seerattn::coordinator::server;
-use seerattn::coordinator::{Completion, EngineGroup, GroupConfig, ServeConfig,
-                            SimConfig, SimEngine};
+use seerattn::coordinator::{Completion, EngineGroup, FaultSchedule, GroupConfig,
+                            Request, ServeConfig, SimConfig, SimEngine,
+                            SubmitOutcome};
 use seerattn::util::json::Json;
 use seerattn::util::rng::Rng;
 use seerattn::workload::trace::{poisson_trace, TracedRequest};
-use seerattn::workload::{TaskConfig, Vocab};
+use seerattn::workload::{Episode, TaskConfig, Vocab};
 
 fn mixed_trace(n: usize, seed: u64) -> Vec<TracedRequest> {
     let vocab = Vocab::default();
@@ -458,7 +466,8 @@ fn burst_beyond_queue_depth_gets_structured_overloaded_replies() {
     // slow engine guarantees neither completes while the burst lands.
     let sim_cfg = SimConfig { batch: 1, eos_every: 0, step_delay_ms: 2,
                               ..Default::default() };
-    let gcfg = GroupConfig { shards: 1, affinity_slack: 1, queue_depth: 1 };
+    let gcfg = GroupConfig { shards: 1, affinity_slack: 1, queue_depth: 1,
+                             ..Default::default() };
     let group: EngineGroup<SimEngine> =
         EngineGroup::with_config(gcfg, move |_| Ok(SimEngine::new(sim_cfg)))
             .unwrap();
@@ -702,6 +711,433 @@ fn per_request_deadline_returns_partial_generation_over_socket() {
     let n = j.get("generated").unwrap().as_arr().unwrap().len();
     assert!(n < 100_000, "deadline must stop the decode early (got {n})");
     srv.join().unwrap();
+}
+
+// ---------------------------------------------------------------------
+// Memory-planned admission, priority preemption, and deterministic
+// fault injection (ISSUE 6).
+// ---------------------------------------------------------------------
+
+/// Seeds for the chaos sweep: `SEERATTN_CHAOS_SEEDS` (comma-separated)
+/// lets CI pin its matrix; the fallback keeps local runs fast and fixed.
+fn chaos_seeds() -> Vec<u64> {
+    match std::env::var("SEERATTN_CHAOS_SEEDS") {
+        Ok(s) => {
+            let seeds: Vec<u64> =
+                s.split(',').filter_map(|t| t.trim().parse().ok()).collect();
+            assert!(!seeds.is_empty(), "SEERATTN_CHAOS_SEEDS set but unusable");
+            seeds
+        }
+        Err(_) => vec![3, 17, 1999],
+    }
+}
+
+/// A trace whose every request is individually servable (projected peak
+/// of 3-4 pages, at most half the 8-page per-shard pool, so it survives
+/// the worst seeded `ShrinkPool`) while the aggregate in-flight demand
+/// oversubscribes the fleet's page pools ~2x.
+fn chaos_trace(n: usize, seed: u64) -> Vec<TracedRequest> {
+    let mut rng = Rng::new(seed ^ 0x00C0_FFEE);
+    (0..n)
+        .map(|_| {
+            let plen = rng.range(4, 15);
+            let prompt: Vec<i32> =
+                (0..plen).map(|_| rng.range(4, 90) as i32).collect();
+            TracedRequest {
+                arrival_s: 0.0,
+                episode: Episode { prompt, target: Vec::new(), answer: 0,
+                                   cfg: TaskConfig::easy() },
+                max_new: 16,
+            }
+        })
+        .collect()
+}
+
+#[test]
+fn chaos_oversubscribed_group_never_loses_a_request() {
+    for seed in chaos_seeds() {
+        let n = 24usize;
+        let trace = chaos_trace(n, seed);
+        let sim_cfg = SimConfig {
+            batch: 2,
+            pages_per_slot: 4, // pool = 8 pages per shard
+            page_tokens: 8,
+            eos_every: 0,
+            step_delay_ms: 1,
+            preempt_retries: 2,
+            faults: FaultSchedule::seeded(seed, 8),
+            ..Default::default()
+        };
+        let gcfg = GroupConfig { shards: 4, queue_depth: 2,
+                                 ..Default::default() };
+        // Run under a watchdog: the property under test is liveness, so
+        // a regression would hang the suite instead of failing it.
+        let expect = trace.clone();
+        let worker = std::thread::spawn(move || {
+            let mut group: EngineGroup<SimEngine> =
+                EngineGroup::with_config(gcfg,
+                                         move |_| Ok(SimEngine::new(sim_cfg)))
+                    .unwrap();
+            let runner =
+                TraceRunner { replay: Replay::Virtual, ..Default::default() };
+            let comps = runner.run_group(&mut group, &trace).unwrap();
+            let gm = group.shutdown().unwrap();
+            (comps, gm)
+        });
+        let deadline = Instant::now() + Duration::from_secs(60);
+        while !worker.is_finished() {
+            assert!(Instant::now() < deadline,
+                    "seed {seed}: chaos replay deadlocked");
+            std::thread::sleep(Duration::from_millis(10));
+        }
+        let (comps, _gm) = worker.join().unwrap();
+        let comps = by_id(comps); // also asserts no duplicated ids
+        assert_eq!(comps.len(), n, "seed {seed}: a request was lost");
+        for (id, (plen, generated, stop)) in &comps {
+            let t = &expect[*id as usize];
+            assert_eq!(*plen, t.episode.prompt.len(), "seed {seed} id {id}");
+            let (want, want_stop) = SimEngine::expected_generation(
+                &sim_cfg, &t.episode.prompt, t.max_new);
+            match stop {
+                StopReason::Eos | StopReason::MaxNewTokens
+                | StopReason::ContextFull => {
+                    assert_eq!(stop, &want_stop, "seed {seed} id {id}");
+                    assert_eq!(generated, &want,
+                               "seed {seed} id {id}: preempt/resume broke \
+                                bit-identity");
+                }
+                // Retry budget spent under injected pressure: terminal,
+                // partial, and still a prefix of the pure token function.
+                StopReason::ResourceExhausted => {
+                    assert!(want.starts_with(generated),
+                            "seed {seed} id {id}: exhausted completion \
+                             diverged from the token function");
+                }
+                StopReason::Cancelled | StopReason::DeadlineExceeded => {
+                    panic!("seed {seed} id {id}: stop {stop:?} without a \
+                            cancel or deadline")
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn page_pressure_defers_then_serves_every_request() {
+    // One shard, pool = 8 pages, 6-page requests: admission count
+    // headroom (batch 2 + queue_depth 2 = 4) outlives the page budget
+    // (pool 8 + 2 queue shares of 4 = 16 pages, so two 6-page
+    // reservations fit and the third defers). The trace runner must
+    // absorb `Deferred` via its backoff loop without losing an entry.
+    let sim_cfg = SimConfig { batch: 2, pages_per_slot: 4, page_tokens: 8,
+                              eos_every: 0, step_delay_ms: 1,
+                              ..Default::default() };
+    let gcfg = GroupConfig { shards: 1, queue_depth: 2, ..Default::default() };
+    let trace: Vec<TracedRequest> = (0..10)
+        .map(|i| TracedRequest {
+            arrival_s: 0.0,
+            episode: Episode { prompt: vec![2, 5 + i as i32, 9],
+                               target: Vec::new(), answer: 0,
+                               cfg: TaskConfig::easy() },
+            max_new: 44, // ceil((3 + 44 + 1) / 8) = 6 pages
+        })
+        .collect();
+    let mut group: EngineGroup<SimEngine> =
+        EngineGroup::with_config(gcfg, move |_| Ok(SimEngine::new(sim_cfg)))
+            .unwrap();
+    let runner = TraceRunner { replay: Replay::Virtual, ..Default::default() };
+    let comps = by_id(runner.run_group(&mut group, &trace).unwrap());
+    let deferred = group.deferred();
+    let gm = group.shutdown().unwrap();
+    assert_eq!(comps.len(), trace.len());
+    for (id, (_plen, generated, stop)) in &comps {
+        let t = &trace[*id as usize];
+        let (want, want_stop) = SimEngine::expected_generation(
+            &sim_cfg, &t.episode.prompt, t.max_new);
+        assert_eq!(generated, &want, "id {id}");
+        assert_eq!(stop, &want_stop, "id {id}");
+    }
+    assert!(deferred >= 1,
+            "the 16-page budget must defer a third 6-page reservation");
+    assert_eq!(gm.deferred, deferred, "deferral count must reach the report");
+}
+
+#[test]
+fn cancel_storm_on_oversubscribed_group_leaks_no_pages() {
+    use std::sync::atomic::{AtomicUsize, Ordering};
+    use std::sync::Arc;
+
+    let shards = 4usize;
+    let sim_cfg = SimConfig { batch: 2, pages_per_slot: 4, page_tokens: 8,
+                              eos_every: 0, step_delay_ms: 2,
+                              ..Default::default() };
+    let capacity = sim_cfg.batch * sim_cfg.pages_per_slot;
+    let gauges: Vec<Arc<AtomicUsize>> =
+        (0..shards).map(|_| Arc::new(AtomicUsize::new(0))).collect();
+    let factory_gauges = gauges.clone();
+    let gcfg = GroupConfig { shards, queue_depth: 2, ..Default::default() };
+    let mut group: EngineGroup<SimEngine> =
+        EngineGroup::with_config(gcfg, move |shard| {
+            Ok(SimEngine::with_pool_gauge(sim_cfg,
+                                          factory_gauges[shard].clone()))
+        })
+        .unwrap();
+
+    // 16 six-page requests against 4 pools of 8 pages: submission has to
+    // ride the deferral/backpressure loop, and then every request —
+    // active, queued at a shard, or queued in an engine — is cancelled.
+    let mut settled = Vec::new();
+    let n = 16u64;
+    for i in 0..n {
+        let prompt = vec![3, 1 + i as i32, 7];
+        loop {
+            match group.submit(Request::new(i, prompt.clone(), 44)).unwrap() {
+                SubmitOutcome::Routed(_) => break,
+                SubmitOutcome::Deferred { .. } | SubmitOutcome::Rejected => {
+                    // Saturated: let decode free budget, keep the
+                    // completion channel drained.
+                    if let Some(c) =
+                        group.poll(Duration::from_millis(1)).unwrap()
+                    {
+                        settled.push(c);
+                    }
+                }
+            }
+        }
+    }
+    for id in 0..n {
+        group.cancel(id);
+    }
+    settled.extend(group.drain().unwrap());
+    let comps = by_id(settled); // also asserts no duplicated ids
+    assert_eq!(comps.len(), n as usize, "a cancelled request went missing");
+    for (id, (_plen, _generated, stop)) in &comps {
+        assert!(matches!(stop, StopReason::Cancelled | StopReason::Eos
+                               | StopReason::MaxNewTokens),
+                "request {id}: unexpected stop {stop:?}");
+    }
+    group.shutdown().unwrap();
+    for (i, g) in gauges.iter().enumerate() {
+        assert_eq!(g.load(Ordering::SeqCst), capacity,
+                   "shard {i} leaked simulated KV pages");
+    }
+}
+
+#[test]
+fn disconnect_storm_releases_pages_on_every_shard() {
+    use std::sync::atomic::{AtomicUsize, Ordering};
+    use std::sync::Arc;
+
+    let shards = 2usize;
+    let sim_cfg = SimConfig { batch: 1, pages_per_slot: 8, page_tokens: 16,
+                              eos_every: 0, step_delay_ms: 2,
+                              ..Default::default() };
+    let capacity = sim_cfg.batch * sim_cfg.pages_per_slot;
+    let gauges: Vec<Arc<AtomicUsize>> =
+        (0..shards).map(|_| Arc::new(AtomicUsize::new(0))).collect();
+    let factory_gauges = gauges.clone();
+    let gcfg = GroupConfig { shards, ..Default::default() };
+    let group: EngineGroup<SimEngine> =
+        EngineGroup::with_config(gcfg, move |shard| {
+            Ok(SimEngine::with_pool_gauge(sim_cfg,
+                                          factory_gauges[shard].clone()))
+        })
+        .unwrap();
+    let n_clients = 6usize;
+    let cfg = ServeConfig {
+        max_conns: 16,
+        idle_timeout: Duration::from_secs(10),
+        limit: Some(n_clients),
+        ..Default::default()
+    };
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    let srv = std::thread::spawn(move || {
+        server::serve_on(listener, group, cfg).unwrap();
+    });
+
+    // Six streaming clients, each wanting ceil((3 + 60 + 1) / 16) = 4
+    // pages for a ~120ms decode; one decodes per shard, the rest queue.
+    // Read one delta from the first client so decode is provably in
+    // progress, then slam every connection shut at once.
+    let mut conns: Vec<TcpStream> = Vec::new();
+    for i in 0..n_clients {
+        let mut c = TcpStream::connect(addr).unwrap();
+        writeln!(c,
+                 "{{\"id\": {}, \"prompt\": [2, {}, 5], \"max_new\": 60, \
+                  \"stream\": true}}",
+                 30 + i, 10 + i)
+            .unwrap();
+        c.flush().unwrap();
+        conns.push(c);
+    }
+    {
+        let mut reader = BufReader::new(conns[0].try_clone().unwrap());
+        let mut l = String::new();
+        reader.read_line(&mut l).unwrap();
+        let j = Json::parse(&l).unwrap_or_else(|_| panic!("bad frame {l:?}"));
+        assert!(j.get("delta").is_ok(), "expected a delta frame, got {l:?}");
+    }
+    drop(conns); // the storm: every client vanishes at once
+
+    // limit = n_clients: the server can only exit if every request —
+    // decoding or still queued — resolves to a completion.
+    srv.join().unwrap();
+    for (i, g) in gauges.iter().enumerate() {
+        assert_eq!(g.load(Ordering::SeqCst), capacity,
+                   "shard {i} leaked simulated KV pages");
+    }
+}
+
+#[test]
+fn page_deferral_and_priority_errors_are_structured_over_sockets() {
+    let sim_cfg = SimConfig { batch: 2, pages_per_slot: 4, page_tokens: 8,
+                              eos_every: 0, step_delay_ms: 2,
+                              ..Default::default() };
+    let gcfg = GroupConfig { shards: 1, queue_depth: 2, ..Default::default() };
+    let group: EngineGroup<SimEngine> =
+        EngineGroup::with_config(gcfg, move |_| Ok(SimEngine::new(sim_cfg)))
+            .unwrap();
+    let cfg = ServeConfig { limit: Some(2), ..Default::default() };
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    let srv = std::thread::spawn(move || {
+        server::serve_on(listener, group, cfg).unwrap();
+    });
+
+    let mut conn = TcpStream::connect(addr).unwrap();
+    // An unknown priority class is a parse error, not a shard panic.
+    writeln!(conn, "{{\"id\": 90, \"prompt\": [1, 2], \"max_new\": 4, \
+                   \"priority\": \"urgent\"}}")
+        .unwrap();
+    // Two 6-page requests fit the 16-page budget; the third must come
+    // back `deferred`, carrying the router's retry hint.
+    for id in [91, 92, 93] {
+        writeln!(conn, "{{\"id\": {id}, \"prompt\": [3, {id}, 8], \
+                       \"max_new\": 44, \"priority\": \"batch\"}}")
+            .unwrap();
+    }
+    conn.flush().unwrap();
+
+    let mut replies: BTreeMap<i64, Json> = BTreeMap::new();
+    let mut reader = BufReader::new(conn);
+    for _ in 0..4 {
+        let mut l = String::new();
+        reader.read_line(&mut l).unwrap();
+        let j = Json::parse(&l).unwrap_or_else(|_| panic!("bad reply {l:?}"));
+        replies.insert(j.get("id").unwrap().as_i64().unwrap(), j);
+    }
+    srv.join().unwrap();
+
+    let bad = &replies[&90];
+    assert!(bad.get("error").unwrap().as_str().unwrap().contains("priority"),
+            "unknown priority class must fail at parse");
+    let deferred = &replies[&93];
+    let msg = deferred.get("error").unwrap().as_str().unwrap();
+    assert!(msg.contains("deferred"), "got {msg:?}");
+    assert_eq!(deferred.get("retry_after_ms").unwrap().as_i64().unwrap(), 25,
+               "deferred replies must carry the router's retry hint");
+    for id in [91i64, 92] {
+        let j = &replies[&id];
+        let generated: Vec<i32> = j
+            .get("generated").unwrap().as_arr().unwrap()
+            .iter().map(|t| t.as_i64().unwrap() as i32).collect();
+        let (want, _) = SimEngine::expected_generation(
+            &sim_cfg, &[3, id as i32, 8], 44);
+        assert_eq!(generated, &want, "request {id}");
+    }
+}
+
+#[test]
+fn batch_stream_is_preempted_resumed_and_bit_identical_over_sockets() {
+    let sim_cfg = SimConfig { batch: 1, eos_every: 0, step_delay_ms: 2,
+                              ..Default::default() };
+    let group: EngineGroup<SimEngine> =
+        EngineGroup::new(1, move |_| Ok(SimEngine::new(sim_cfg))).unwrap();
+    let cfg = ServeConfig { limit: Some(2), ..Default::default() };
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    let srv = std::thread::spawn(move || {
+        server::serve_on(listener, group, cfg).unwrap();
+    });
+
+    // A batch-class streaming request occupies the single slot...
+    let prompt = vec![4, 9, 2];
+    let batch_conn = TcpStream::connect(addr).unwrap();
+    {
+        let mut w = batch_conn.try_clone().unwrap();
+        writeln!(w, "{{\"id\": 70, \"prompt\": [4, 9, 2], \"max_new\": 120, \
+                     \"stream\": true, \"priority\": \"batch\"}}")
+            .unwrap();
+        w.flush().unwrap();
+    }
+    let mut reader = BufReader::new(batch_conn);
+    let mut l = String::new();
+    reader.read_line(&mut l).unwrap();
+    let first = Json::parse(&l).unwrap_or_else(|_| panic!("bad frame {l:?}"));
+    assert!(first.get("delta").is_ok(), "expected a delta, got {l:?}");
+    let mut deltas: Vec<i32> = Vec::new();
+    for t in first.get("delta").unwrap().as_arr().unwrap() {
+        deltas.push(t.as_i64().unwrap() as i32);
+    }
+
+    // ...then an interactive request arrives: the engine must evict the
+    // batch slot for it at a step boundary, announce the preemption on
+    // the stream, and resume the stream with no gap and no repeat.
+    let other = vec![8, 1, 5];
+    let mut inter = TcpStream::connect(addr).unwrap();
+    writeln!(inter, "{}", request_line(71, &other, 8)).unwrap();
+    inter.flush().unwrap();
+
+    let mut preemptions = 0usize;
+    let terminal = loop {
+        l.clear();
+        assert!(reader.read_line(&mut l).unwrap() > 0,
+                "EOF before the batch request's terminal reply");
+        let j = Json::parse(&l).unwrap_or_else(|_| panic!("bad frame {l:?}"));
+        assert_eq!(j.get("id").unwrap().as_i64().unwrap(), 70);
+        if j.opt("stop").is_some() {
+            break j;
+        }
+        if let Some(ev) = j.opt("event") {
+            assert_eq!(ev.as_str().unwrap(), "preempted");
+            preemptions += 1;
+            continue;
+        }
+        assert_eq!(j.get("index").unwrap().as_i64().unwrap() as usize,
+                   deltas.len(),
+                   "token indices must stay contiguous across preemption");
+        for t in j.get("delta").unwrap().as_arr().unwrap() {
+            deltas.push(t.as_i64().unwrap() as i32);
+        }
+    };
+
+    // The interactive request was served from under the batch stream.
+    let mut inter_reader = BufReader::new(inter);
+    l.clear();
+    inter_reader.read_line(&mut l).unwrap();
+    let j = Json::parse(&l).unwrap_or_else(|_| panic!("bad reply {l:?}"));
+    assert_eq!(j.get("id").unwrap().as_i64().unwrap(), 71);
+    let inter_gen: Vec<i32> = j
+        .get("generated").unwrap().as_arr().unwrap()
+        .iter().map(|t| t.as_i64().unwrap() as i32).collect();
+    srv.join().unwrap();
+
+    assert!(preemptions >= 1,
+            "the interactive arrival must preempt the batch stream");
+    let (want, want_stop) =
+        SimEngine::expected_generation(&sim_cfg, &prompt, 120);
+    let term_gen: Vec<i32> = terminal
+        .get("generated").unwrap().as_arr().unwrap()
+        .iter().map(|t| t.as_i64().unwrap() as i32).collect();
+    assert_eq!(deltas, term_gen,
+               "concatenated deltas != terminal generation");
+    assert_eq!(term_gen, want,
+               "preempt/resume must keep the stream bit-identical");
+    assert_eq!(terminal.get("stop").unwrap().as_str().unwrap(),
+               want_stop.as_str());
+    let (want_inter, _) = SimEngine::expected_generation(&sim_cfg, &other, 8);
+    assert_eq!(inter_gen, want_inter);
 }
 
 // ---------------------------------------------------------------------
