@@ -158,6 +158,15 @@ impl DenseStaging {
 /// arena discipline to prefill — `ids` is dirty-extent cleared (only the
 /// token spans written for the previously admitted slots), `seq_len` is
 /// `[b]` and cleared whole, and the rows are plain reused scratch.
+///
+/// Chunked prefill (PR 7) adds a per-row resume `cursor`: a row whose
+/// cursor is nonzero is mid-chunk — its staged token prefix must survive
+/// the next acquire so the following chunk only writes the new span. A
+/// cursor returns to zero when the slot's prefill completes (or via
+/// [`PrefillStaging::abort_row`] when the slot is reaped/preempted
+/// half-prefilled), after which the ordinary dirty-extent clear reclaims
+/// the row. All bookkeeping lives in vectors sized at construction, so
+/// the zero-steady-state-allocation invariant is untouched.
 pub struct PrefillStaging {
     pub ids: HostTensor,     // [b, s] i32
     pub seq_len: HostTensor, // [b] i32
@@ -166,6 +175,9 @@ pub struct PrefillStaging {
     prow: Vec<f32>,
     /// Prompt tokens written per batch row at the last use.
     dirty: Vec<usize>,
+    /// Tokens of row `i` already staged by an unfinished chunked prefill;
+    /// `0` = row is free to clear on acquire.
+    cursor: Vec<usize>,
     s: usize,
 }
 
@@ -178,6 +190,7 @@ impl PrefillStaging {
             vrow: vec![0.0; row_elems],
             prow: vec![0.0; row_elems],
             dirty: vec![0; b],
+            cursor: vec![0; b],
             s,
         }
     }
@@ -189,7 +202,8 @@ impl PrefillStaging {
             Data::F32(_) => unreachable!("ids are i32"),
         };
         for (r, d) in self.dirty.iter_mut().enumerate() {
-            if *d > 0 {
+            // Mid-chunk rows keep their staged prefix across acquires.
+            if *d > 0 && self.cursor[r] == 0 {
                 ids[r * s..r * s + *d].fill(0);
                 *d = 0;
             }
@@ -219,6 +233,37 @@ impl PrefillStaging {
     /// each), overwritten for every token of the prefill scatter loop.
     pub fn rows_mut(&mut self) -> (&mut [f32], &mut [f32], &mut [f32]) {
         (&mut self.krow[..], &mut self.vrow[..], &mut self.prow[..])
+    }
+
+    /// Mutable views `(ids, seq_len, dirty, cursor)` for the chunked
+    /// prefill loop: same contract as [`PrefillStaging::ids_mut`], plus
+    /// the per-row resume cursor. A chunk writes tokens
+    /// `[cursor[i], end)` into `ids[i*s..]`, advances `cursor[i] = end`
+    /// (and `dirty[i] = end`), and zeroes `cursor[i]` once the slot's
+    /// prefill completes so the next acquire clears the row.
+    pub fn chunk_mut(
+        &mut self,
+    ) -> (&mut [i32], &mut [i32], &mut [usize], &mut [usize]) {
+        let ids = match &mut self.ids.data {
+            Data::I32(x) => x.as_mut_slice(),
+            Data::F32(_) => unreachable!("ids are i32"),
+        };
+        let sl = match &mut self.seq_len.data {
+            Data::I32(x) => x.as_mut_slice(),
+            Data::F32(_) => unreachable!("seq_len is i32"),
+        };
+        (ids, sl, &mut self.dirty[..], &mut self.cursor[..])
+    }
+
+    /// Tokens row `i` has staged for an unfinished chunked prefill.
+    pub fn cursor(&self, i: usize) -> usize {
+        self.cursor[i]
+    }
+
+    /// Drop row `i`'s resume cursor (the slot was reaped or preempted
+    /// half-prefilled); its staged span is reclaimed on the next acquire.
+    pub fn abort_row(&mut self, i: usize) {
+        self.cursor[i] = 0;
     }
 }
 
@@ -297,6 +342,20 @@ impl StagingArena {
         set.reset();
         set
     }
+
+    /// Drop prefill row `i`'s chunk-resume cursor without acquiring (the
+    /// owning slot was reaped or preempted half-prefilled). No-op before
+    /// the first prefill acquire.
+    pub fn abort_prefill_row(&mut self, i: usize) {
+        if let Some(set) = self.prefill.as_mut() {
+            set.abort_row(i);
+        }
+    }
+
+    /// Read access to the staged prefill set without acquiring.
+    pub fn prefill_peek(&self) -> Option<&PrefillStaging> {
+        self.prefill.as_ref()
+    }
 }
 
 #[cfg(test)]
@@ -374,6 +433,69 @@ mod tests {
             arena.prefill(b, s, row);
         }
         assert_eq!(arena.allocations(), 1);
+    }
+
+    #[test]
+    fn prefill_cursor_keeps_row_staged_across_acquires() {
+        let mut arena = StagingArena::new();
+        let (b, s, row) = (2, 16, 8);
+        {
+            let set = arena.prefill(b, s, row);
+            let (ids, sl, dirty, cursor) = set.chunk_mut();
+            // Row 0: first chunk of a long prompt (4 of 10 tokens).
+            for t in 0..4 {
+                ids[t] = (50 + t) as i32;
+            }
+            sl[0] = 4;
+            dirty[0] = 4;
+            cursor[0] = 4;
+            // Row 1: a complete one-shot prefill.
+            ids[s] = 7;
+            sl[1] = 1;
+            dirty[1] = 1;
+        }
+        {
+            // Re-acquire: row 0's staged prefix survives, row 1 cleared.
+            let set = arena.prefill(b, s, row);
+            let kept: Vec<i32> = set.ids.as_i32().unwrap()[..4].to_vec();
+            assert_eq!(kept, vec![50, 51, 52, 53], "mid-chunk span must persist");
+            assert_eq!(set.ids.as_i32().unwrap()[s], 0, "finished row cleared");
+            assert!(set.seq_len.as_i32().unwrap().iter().all(|&x| x == 0));
+            assert_eq!(set.cursor(0), 4);
+            // Second chunk completes the row.
+            let (ids, sl, dirty, cursor) = set.chunk_mut();
+            for t in 4..10 {
+                ids[t] = (50 + t) as i32;
+            }
+            sl[0] = 10;
+            dirty[0] = 10;
+            cursor[0] = 0;
+        }
+        // Completed: the next acquire clears the whole staged span.
+        let set = arena.prefill(b, s, row);
+        assert!(set.ids.as_i32().unwrap().iter().all(|&x| x == 0));
+        assert_eq!(arena.allocations(), 1, "chunking must not allocate sets");
+    }
+
+    #[test]
+    fn abort_prefill_row_releases_a_mid_chunk_span() {
+        let mut arena = StagingArena::new();
+        let (b, s, row) = (1, 8, 4);
+        {
+            let set = arena.prefill(b, s, row);
+            let (ids, sl, dirty, cursor) = set.chunk_mut();
+            ids[0] = 9;
+            ids[1] = 9;
+            sl[0] = 2;
+            dirty[0] = 2;
+            cursor[0] = 2;
+        }
+        // Cancelled mid-prefill: the engine aborts the row...
+        arena.abort_prefill_row(0);
+        assert_eq!(arena.prefill_peek().unwrap().cursor(0), 0);
+        // ...and the next acquire reclaims it.
+        let set = arena.prefill(b, s, row);
+        assert!(set.ids.as_i32().unwrap().iter().all(|&x| x == 0));
     }
 
     #[test]

@@ -78,6 +78,16 @@ pub struct EngineConfig {
     /// re-prefill) before it is terminated with
     /// [`StopReason::ResourceExhausted`].
     pub preempt_retries: u32,
+    /// Chunked prefill (continuous batching): the per-step budget of
+    /// prompt tokens prefilled, shared by every half-prefilled slot.
+    /// `0` = monolithic — a whole prompt per step, the pre-chunking
+    /// behavior that let one long admission stall every in-flight
+    /// decode. Must be a multiple of `block_size` so chunk boundaries
+    /// land on kcomp gate-block (= KV page) edges and the compressed
+    /// gate cache never straddles a resume point. The default, 128, is
+    /// the least common multiple of the paper's 64/128 sparse block
+    /// sizes (and a multiple of the default engine block size 16).
+    pub prefill_chunk: usize,
 }
 
 impl Default for EngineConfig {
@@ -94,6 +104,7 @@ impl Default for EngineConfig {
             gather_threads: 0,
             simd: true,
             preempt_retries: 3,
+            prefill_chunk: 128,
         }
     }
 }
@@ -115,6 +126,21 @@ struct Slot {
     stop: Option<StopReason>,
     /// Times this request has been preempted so far.
     retries: u32,
+    /// Prefill progress: tokens of the effective prefill span already
+    /// cached. While `< prefill_target` the slot is half-prefilled — it
+    /// occupies a slot and holds KV pages but has not emitted its first
+    /// token, does not decode, and can be cancelled/expired/preempted
+    /// like any other occupant.
+    prefill_pos: usize,
+    /// Effective prefill span: the whole prompt for fresh requests, all
+    /// but the trailing resume token for preempted ones.
+    prefill_target: usize,
+}
+
+impl Slot {
+    fn prefilling(&self) -> bool {
+        self.prefill_pos < self.prefill_target
+    }
 }
 
 /// Stop decision after emitting `tok` into `slot` (shared by the prefill
@@ -197,6 +223,11 @@ impl Engine {
         let max_seq = rt.manifest.aot.get("prefill_len")?.as_usize()?;
         if max_seq % ecfg.block_size != 0 {
             bail!("block size {} must divide max_seq {max_seq}", ecfg.block_size);
+        }
+        if ecfg.prefill_chunk % ecfg.block_size != 0 {
+            bail!("prefill chunk {} must be a multiple of block size {} \
+                   (kcomp gate blocks must not straddle a chunk boundary)",
+                  ecfg.prefill_chunk, ecfg.block_size);
         }
         let pages_per_seq = max_seq / ecfg.block_size + 1;
         let capacity = batch * cfg.n_layers * pages_per_seq;
@@ -295,9 +326,16 @@ impl Engine {
     /// generation from a preemption, original arrival, first-token
     /// instant, retry count).
     pub fn submit_queued(&mut self, q: QueuedReq) {
-        assert!(q.req.prompt.len() + 2 < self.max_seq,
-                "prompt {} too long for context {}", q.req.prompt.len(),
-                self.max_seq);
+        // Guard on the *effective* prefill span, not the prompt alone:
+        // re-admission stages `prompt ++ resume[..k-1]` (the trailing
+        // resume token plays the sampled-first-token role), so a request
+        // preempted near the context limit carries resume tokens that
+        // count against the staged span.
+        let eff = q.req.prompt.len() + q.resume.len().saturating_sub(1);
+        assert!(eff + 2 < self.max_seq,
+                "effective prefill of {eff} tokens (prompt {} + resume {}) \
+                 too long for context {}",
+                q.req.prompt.len(), q.resume.len(), self.max_seq);
         self.metrics.start_clock();
         self.queue.push_back(q);
     }
@@ -325,8 +363,9 @@ impl Engine {
         Ok(out)
     }
 
-    /// One engine iteration: admit+prefill if there are waiting requests
-    /// and free slots, otherwise decode one token for the running batch.
+    /// One engine iteration: at most one prefill chunk (admitting waiting
+    /// requests into free slots) *and* one decode token for the batch
+    /// that was already running.
     pub fn step(&mut self) -> Result<Vec<Completion>> {
         let mut out = Vec::new();
         self.step_core(&mut |ev| {
@@ -341,8 +380,12 @@ impl Engine {
     /// `step_events`, and the control-flow mirror of `SimEngine`'s
     /// `step_core`: control stops (cancel / deadline, the shared
     /// [`StopReason::control`] rule), an immediate reap so a stopped
-    /// slot's KV pages are freed *this* step, then admit-or-decode, then
-    /// the regular reap.
+    /// slot's KV pages are freed *this* step, then at most one prefill
+    /// chunk *and* a decode step for the already-running batch, then the
+    /// regular reap. Admission never suppresses decode: a long prompt is
+    /// prefilled `prefill_chunk` tokens per step while in-flight decodes
+    /// keep producing tokens, which is what bounds ITL under a mixed
+    /// long-prompt + short-decode trace.
     fn step_core(&mut self, sink: &mut dyn FnMut(EngineEvent)) -> Result<()> {
         self.apply_control_stops();
         self.reap_into(sink);
@@ -352,10 +395,20 @@ impl Engine {
         // path cancellation uses).
         self.preempt_for_priority(sink);
         self.reap_into(sink);
-        if !self.queue.is_empty() && self.slots.iter().any(|s| s.is_none()) {
-            self.admit_and_prefill(sink)?;
-        } else if self.active() > 0 {
-            self.decode_step(sink)?;
+        // Decode-eligible set snapshotted *before* this step's prefill
+        // chunk: a slot whose prefill completes this step takes its first
+        // token from the prefill logits and joins decode next step.
+        let decode_set: Vec<usize> = (0..self.batch)
+            .filter(|&i| {
+                self.slots[i]
+                    .as_ref()
+                    .map(|s| !s.prefilling() && s.stop.is_none())
+                    .unwrap_or(false)
+            })
+            .collect();
+        self.admit_and_prefill(sink)?;
+        if !decode_set.is_empty() {
+            self.decode_step(sink, &decode_set)?;
         }
         self.reap_into(sink);
         Ok(())
@@ -406,6 +459,14 @@ impl Engine {
             slot.stop = Some(StopReason::ResourceExhausted);
             self.slots[v] = Some(slot);
             return;
+        }
+        if slot.prefilling() {
+            // Half-prefilled victim: drop its staging resume cursor so
+            // the row is reclaimed on the next prefill acquire. Its
+            // `generated` still holds exactly the resume tokens it was
+            // admitted with (nothing is emitted mid-prefill), so the
+            // requeue below carries the correct replay state.
+            self.arena.abort_prefill_row(v);
         }
         for kv in &mut slot.kv {
             if let Some(t) = &mut self.offload {
@@ -482,10 +543,27 @@ impl Engine {
     // Prefill
     // ------------------------------------------------------------------
 
+    /// Admission plus at most one prefill chunk. Free slots are filled
+    /// from the queue (each new occupant starts half-prefilled at
+    /// position 0), then a shared budget of `prefill_chunk` tokens
+    /// (unbounded when 0) advances half-prefilled slots in slot order
+    /// through a single padded `prefill` call. The staged span is
+    /// *resumable*: mid-chunk rows keep their token prefix in the arena
+    /// (`PrefillStaging` cursor), so each step only writes the new span
+    /// and the device call re-covers the prefix (our AOT prefill has no
+    /// KV-prefix input; recompute is the price of a fixed executable
+    /// set — see PERF.md "Chunked prefill"). Rows already cached from
+    /// earlier chunks are not re-scattered, so KV/page state and the
+    /// final logits row are bit-identical to a monolithic prefill.
+    ///
+    /// A slot whose cursor reaches its target on this chunk samples its
+    /// first token from the chunk's logits (or, on resume replay, keeps
+    /// the trailing resume token) — TTFT semantics are unchanged: the
+    /// clock stops when the first token exists, and a chunked prefill
+    /// simply reaches that point a few steps later while decode keeps
+    /// running.
     fn admit_and_prefill(&mut self,
                          sink: &mut dyn FnMut(EngineEvent)) -> Result<()> {
-        let t0 = Instant::now();
-        let mut new_slots: Vec<usize> = Vec::new();
         for i in 0..self.batch {
             if self.slots[i].is_none() {
                 if let Some(q) = self.pop_best_queued() {
@@ -493,9 +571,10 @@ impl Engine {
                                     retries } = q;
                     // Resume replay: the effective prefill input is
                     // prompt ++ resume[..k-1]; the last resume token
-                    // plays the sampled-first-token role below.
+                    // plays the sampled-first-token role on completion.
                     let mut tokens = req.prompt.clone();
                     tokens.extend_from_slice(&resume);
+                    let target = tokens.len() - usize::from(!resume.is_empty());
                     self.slots[i] = Some(Slot {
                         tokens,
                         len: 0,
@@ -515,38 +594,56 @@ impl Engine {
                         admitted: arrived,
                         first_token: first_token_at,
                         retries,
+                        prefill_pos: 0,
+                        prefill_target: target,
                     });
-                    new_slots.push(i);
                 }
             }
         }
-        if new_slots.is_empty() {
+        let work: Vec<usize> = (0..self.batch)
+            .filter(|&i| {
+                self.slots[i].as_ref().map(|s| s.prefilling()).unwrap_or(false)
+            })
+            .collect();
+        if work.is_empty() {
             return Ok(());
         }
+        let t0 = Instant::now();
         let (b, s) = (self.batch, self.max_seq);
         let Engine { arena, slots, params, dev, rt, pool, cfg, ecfg, wk_gates,
                      rng, metrics, vocab, .. } = self;
         let (hkv, dh, l_n) = (cfg.n_kv_heads, cfg.head_dim, cfg.n_layers);
         let nvocab = cfg.vocab;
-        // Padded prefill batch staged through the persistent arena set:
-        // `ids` is dirty-extent cleared on acquire, so only new slots get
-        // nonzero spans and no fresh buffers are allocated.
-        let set = arena.prefill(b, s, hkv * dh);
-        // Effective prefill length: the whole token history for fresh
-        // requests (= the prompt), all but the trailing resume token for
-        // preempted ones (it is not yet in KV, exactly like a freshly
-        // sampled first token).
-        let eff_len = |slot: &Slot| {
-            slot.tokens.len() - usize::from(!slot.generated.is_empty())
+        let mut budget = if ecfg.prefill_chunk == 0 {
+            usize::MAX
+        } else {
+            ecfg.prefill_chunk
         };
+        // Padded prefill batch staged through the persistent arena set:
+        // acquire dirty-clears finished rows but keeps mid-chunk spans.
+        let set = arena.prefill(b, s, hkv * dh);
+        // Spans advanced this chunk: (slot, from, to).
+        let mut spans: Vec<(usize, usize, usize)> = Vec::new();
         {
-            let (ids, seq_len, dirty) = set.ids_mut();
-            for &i in &new_slots {
+            let (ids, seq_len, dirty, cursor) = set.chunk_mut();
+            for &i in &work {
+                if budget == 0 {
+                    break; // chunk spent; this slot resumes next step
+                }
                 let slot = slots[i].as_ref().unwrap();
-                let n = eff_len(slot);
-                ids[i * s..i * s + n].copy_from_slice(&slot.tokens[..n]);
-                seq_len[i] = n as i32;
-                dirty[i] = n;
+                let (pos, target) = (slot.prefill_pos, slot.prefill_target);
+                debug_assert_eq!(cursor[i], pos,
+                                 "staging cursor tracks slot progress");
+                let end = target.min(pos + budget);
+                ids[i * s + pos..i * s + end]
+                    .copy_from_slice(&slot.tokens[pos..end]);
+                seq_len[i] = end as i32;
+                dirty[i] = end;
+                // The cursor stays nonzero (span persists across
+                // acquires) until the slot's prefill completes.
+                cursor[i] = if end == target { 0 } else { end };
+                budget -= end - pos;
+                spans.push((i, pos, end));
             }
         }
         let outs = {
@@ -568,9 +665,11 @@ impl Engine {
         };
         // Pre-reserved per-token scatter rows (arena-owned, not per-call).
         let (krow, vrow, prow) = set.rows_mut();
-        for &i in &new_slots {
-            let plen = eff_len(slots[i].as_ref().unwrap());
-            for t in 0..plen {
+        let mut chunk_tokens = 0u64;
+        for &(i, pos, end) in &spans {
+            // Scatter only the newly covered span; rows before `pos` are
+            // already in the paged cache from earlier chunks.
+            for t in pos..end {
                 for l in 0..l_n {
                     for h in 0..hkv {
                         let o = idx(l, i, h, t);
@@ -584,15 +683,21 @@ impl Engine {
                     slot.kcomp[l].append(cfg, &wk_gates[l], prow);
                 }
             }
-            if !slots[i].as_ref().unwrap().generated.is_empty() {
+            chunk_tokens += (end - pos) as u64;
+            let slot = slots[i].as_mut().unwrap();
+            slot.prefill_pos = end;
+            slot.len = end;
+            if end < slot.prefill_target {
+                continue; // still half-prefilled; no first token yet
+            }
+            let plen = end;
+            if !slot.generated.is_empty() {
                 // Resume replay: the trailing resume token already sits
                 // in `tokens`/`generated`; with greedy decoding the
                 // logits at plen-1 would reproduce it exactly, so no
                 // sampling and — crucially — no re-emitted events
                 // (indices 0..k-1 reached the client before the
                 // preemption; decode continues at index k).
-                let slot = slots[i].as_mut().unwrap();
-                slot.len = plen;
                 let tok = *slot.tokens.last().unwrap();
                 if let Some(stop) = stop_for(slot, tok, vocab.eos, s) {
                     slot.stop = Some(stop);
@@ -602,8 +707,6 @@ impl Engine {
             // First generated token from logits[i, plen-1].
             let row = &lg[(i * s + plen - 1) * nvocab..(i * s + plen) * nvocab];
             let tok = sampling::sample(row, ecfg.temperature, rng);
-            let slot = slots[i].as_mut().unwrap();
-            slot.len = plen;
             slot.tokens.push(tok);
             slot.generated.push(tok);
             slot.first_token = Some(Instant::now());
@@ -614,6 +717,8 @@ impl Engine {
             sink(EngineEvent::Started { id });
             sink(EngineEvent::Token { id, tok, index: 0 });
         }
+        metrics.prefill_chunks += 1;
+        metrics.prefill_tokens += chunk_tokens;
         metrics.pages_peak =
             metrics.pages_peak.max(pool.capacity() - pool.free_pages());
         metrics.prefill_s.push(t0.elapsed().as_secs_f64());
@@ -624,19 +729,22 @@ impl Engine {
     // Decode
     // ------------------------------------------------------------------
 
-    fn decode_step(&mut self,
-                   sink: &mut dyn FnMut(EngineEvent)) -> Result<()> {
+    /// One decode token for `active` — the slots that had completed
+    /// prefill before this step's chunk ran (half-prefilled slots and
+    /// slots that sampled their first token this very step are excluded
+    /// by the `step_core` snapshot).
+    fn decode_step(&mut self, sink: &mut dyn FnMut(EngineEvent),
+                   active: &[usize]) -> Result<()> {
         let t0 = Instant::now();
         let (b, d) = (self.batch, self.cfg.d_model);
         let (hkv, _h_all, dh, dg) = (self.cfg.n_kv_heads, self.cfg.n_heads,
                                     self.cfg.head_dim, self.cfg.d_gate);
-        let active: Vec<usize> = (0..b).filter(|&i| self.slots[i].is_some()).collect();
         // Embed current tokens (host: one row copy per sequence).
         let mut x = vec![0f32; b * d];
         let mut pos = vec![0i32; b];
         {
             let emb = self.params.get("emb")?.as_f32()?;
-            for &i in &active {
+            for &i in active {
                 let slot = self.slots[i].as_ref().unwrap();
                 let tok = *slot.tokens.last().unwrap() as usize;
                 x[i * d..(i + 1) * d].copy_from_slice(&emb[tok * d..(tok + 1) * d]);
@@ -668,7 +776,7 @@ impl Engine {
             self.current_q.extend_from_slice(outs[0].as_f32()?);
 
             // 2. cache updates
-            for &i in &active {
+            for &i in active {
                 let krow = &k_rope[i * hkv * dh..(i + 1) * hkv * dh];
                 let vrow = &v_new[i * hkv * dh..(i + 1) * hkv * dh];
                 let prow = &k_pre[i * hkv * dh..(i + 1) * hkv * dh];
@@ -684,7 +792,7 @@ impl Engine {
             } else {
                 self.ecfg.policy
             };
-            for &i in &active {
+            for &i in active {
                 let qg = &q_gate_all[i * hkv * dg..(i + 1) * hkv * dg];
                 self.select(i, l, effective, qg)?;
                 if l == 0 {
@@ -693,7 +801,7 @@ impl Engine {
             }
 
             // 4+5. gather + attention
-            x_t = self.run_attention(l, &outs[0], &x_t, &active)?;
+            x_t = self.run_attention(l, &outs[0], &x_t, active)?;
         }
 
         // lm_head + sampling
@@ -707,7 +815,7 @@ impl Engine {
         };
         let lg = logits[0].as_f32()?;
         let vocab = self.cfg.vocab;
-        for &i in &active {
+        for &i in active {
             let row = &lg[i * vocab..(i + 1) * vocab];
             let tok = sampling::sample(row, self.ecfg.temperature, &mut self.rng);
             let slot = self.slots[i].as_mut().unwrap();
@@ -1099,6 +1207,13 @@ impl Engine {
                 .unwrap_or(false);
             if finished {
                 let mut slot = self.slots[i].take().unwrap();
+                if slot.prefilling() {
+                    // Cancelled / expired / exhausted half-prefilled: drop
+                    // the staging resume cursor so the next prefill
+                    // acquire reclaims the row; pages free below through
+                    // the exact same path a decoded slot uses.
+                    self.arena.abort_prefill_row(i);
+                }
                 for kv in &mut slot.kv {
                     if let Some(t) = &mut self.offload {
                         for &pg in &kv.pages {

@@ -38,6 +38,16 @@ pub struct Metrics {
     /// Requests this shard pulled from other shards' overflow queues
     /// (work stealing; set by the shard thread at shutdown).
     pub requests_stolen: u64,
+    /// Prefill chunk executions (one per engine step that did any
+    /// prefill work). With monolithic prefill (`prefill_chunk = 0`) this
+    /// equals the number of admission steps; with chunking it grows by
+    /// `ceil(eff_len / chunk)` per long prompt.
+    pub prefill_chunks: u64,
+    /// Prompt tokens prefilled, summed over chunks. A preempted request
+    /// that re-prefills counts its span again, so `prefill_tokens`
+    /// versus the sum of admitted prompt lengths exposes re-prefill
+    /// overhead.
+    pub prefill_tokens: u64,
     /// Peak overflow-queue length observed at this shard.
     pub queue_peak: u64,
     wall_start: Option<std::time::Instant>,
@@ -87,6 +97,8 @@ impl Metrics {
         self.kv_bytes_touched += other.kv_bytes_touched;
         self.kv_bytes_dense_equiv += other.kv_bytes_dense_equiv;
         self.requests_stolen += other.requests_stolen;
+        self.prefill_chunks += other.prefill_chunks;
+        self.prefill_tokens += other.prefill_tokens;
         // A fleet's "peak queue" is the worst shard's, not a sum; same
         // for peak pages (per-shard pools are independent).
         self.queue_peak = self.queue_peak.max(other.queue_peak);
@@ -112,7 +124,7 @@ impl Metrics {
 
     pub fn report(&self) -> String {
         format!(
-            "requests={} tokens={} tps={:.1} cancelled={} deadline-expired={} preempted={} exhausted={} pages-peak={}\n  ttft    {}\n  e2e     {}\n  decode  {}\n  kv-touch fraction {:.3}",
+            "requests={} tokens={} tps={:.1} cancelled={} deadline-expired={} preempted={} exhausted={} pages-peak={} prefill-chunks={} prefill-tokens={}\n  ttft    {}\n  e2e     {}\n  decode  {}\n  kv-touch fraction {:.3}",
             self.requests_completed,
             self.tokens_generated,
             self.throughput_tps(),
@@ -121,6 +133,8 @@ impl Metrics {
             self.requests_preempted,
             self.requests_exhausted,
             self.pages_peak,
+            self.prefill_chunks,
+            self.prefill_tokens,
             self.ttft_s.summary("s"),
             self.e2e_s.summary("s"),
             self.decode_step_s.summary("s"),

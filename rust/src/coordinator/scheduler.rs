@@ -111,20 +111,25 @@ impl TraceRunner {
     /// backoff with the router's `retry_after_ms` hint,
     /// [`SubmitOutcome::Rejected`] with a short fixed base — so no trace
     /// entry is lost and the router is not hammered while saturated.
+    /// Backoff is per entry: one deferred arrival waits out *its own*
+    /// retry window while the walk skips ahead to other due entries, so
+    /// a single stuck request never serializes the whole client. Ids
+    /// stay equal to trace position in both replay modes (the module's
+    /// comparability contract) regardless of the order submissions
+    /// actually land in.
     pub fn run_group<E: DecodeEngine>(&self, group: &mut EngineGroup<E>,
                                       trace: &[TracedRequest])
                                       -> Result<Vec<Completion>> {
         let mut completions = Vec::with_capacity(trace.len());
         let start = Instant::now();
-        let mut next = 0usize;
-        let mut id = 0u64;
         let window = group.admission_window();
-        // Client-side backoff state. The RNG seed is fixed: jitter
-        // decorrelates retries *within* a run, and runs stay
-        // reproducible.
+        // Client-side backoff state, one slot per trace entry. The RNG
+        // seed is fixed: jitter decorrelates retries *within* a run, and
+        // runs stay reproducible.
         let mut rng = crate::util::rng::Rng::new(0xBAC0_FF5E);
-        let mut retry_at: Option<Instant> = None;
-        let mut streak: u32 = 0;
+        let mut pending: Vec<usize> = (0..trace.len()).collect();
+        let mut retry_at: Vec<Option<Instant>> = vec![None; trace.len()];
+        let mut streak: Vec<u32> = vec![0; trace.len()];
         let mut backoff = |base_ms: u64, streak: &mut u32,
                            rng: &mut crate::util::rng::Rng| {
             let exp = 1u64 << (*streak).min(6);
@@ -142,48 +147,58 @@ impl TraceRunner {
                            max prompt length {max_prompt}",
                           t.episode.prompt.len());
         }
-        while next < trace.len() || group.inflight() > 0 {
-            while next < trace.len() {
-                // Still inside a backoff window: poll below instead of
-                // resubmitting (completions landing meanwhile free the
-                // capacity the retry needs).
-                if let Some(t) = retry_at {
+        while !pending.is_empty() || group.inflight() > 0 {
+            let mut i = 0;
+            while i < pending.len() {
+                let e = pending[i];
+                // Inside this entry's backoff window: leave it for a
+                // later pass, but keep walking — completions landing
+                // meanwhile free capacity for the *other* due entries,
+                // which must not wait behind this one's retry_at.
+                if let Some(t) = retry_at[e] {
                     if Instant::now() < t {
-                        break;
+                        i += 1;
+                        continue;
                     }
-                    retry_at = None;
+                    retry_at[e] = None;
                 }
                 let due = match self.replay {
                     Replay::RealTime => {
-                        start.elapsed().as_secs_f64() >= trace[next].arrival_s
+                        start.elapsed().as_secs_f64() >= trace[e].arrival_s
                     }
                     // Keep a bounded backlog so shard queues stay warm
                     // without submitting the whole trace up front.
                     Replay::Virtual => group.inflight() < window,
                 };
                 if !due {
+                    // Arrival times are non-decreasing and the virtual
+                    // window gates globally, so no later entry is due
+                    // either.
                     break;
                 }
-                match group.submit(self.request(id, &trace[next]))? {
+                match group.submit(self.request(e as u64, &trace[e]))? {
                     SubmitOutcome::Routed(_) => {
-                        id += 1;
-                        next += 1;
-                        streak = 0;
-                        retry_at = None;
+                        streak[e] = 0;
+                        pending.remove(i); // successor shifts into i
                     }
-                    // Memory headroom, not compute, is what's missing:
-                    // honour the router's retry hint (with jitter and an
-                    // escalating multiplier for repeat deferrals).
+                    // Memory headroom, not compute, is what's missing on
+                    // the shard the router picked: honour its retry hint
+                    // (with jitter and an escalating multiplier for
+                    // repeat deferrals) for this entry, and move on — a
+                    // differently-sized entry may still be routable.
                     SubmitOutcome::Deferred { retry_after_ms } => {
-                        retry_at =
-                            Some(backoff(retry_after_ms, &mut streak, &mut rng));
-                        break;
+                        retry_at[e] = Some(backoff(retry_after_ms,
+                                                   &mut streak[e], &mut rng));
+                        i += 1;
                     }
-                    // Every shard is at capacity: back off briefly, poll
-                    // below, retry this entry (capacity frees as
-                    // completions land, so this cannot livelock).
+                    // Every shard is at capacity: any other entry would
+                    // hear the same answer this instant, so stop the
+                    // walk, poll below, retry after a short backoff
+                    // (capacity frees as completions land, so this
+                    // cannot livelock).
                     SubmitOutcome::Rejected => {
-                        retry_at = Some(backoff(2, &mut streak, &mut rng));
+                        retry_at[e] = Some(backoff(2, &mut streak[e],
+                                                   &mut rng));
                         break;
                     }
                 }

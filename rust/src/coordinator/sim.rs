@@ -1,11 +1,13 @@
 //! Deterministic host-only decode engine for the serving test harness.
 //!
 //! [`SimEngine`] mirrors the PJRT engine's continuous-batching control
-//! flow exactly — bounded batch slots, admit+prefill when slots free up,
-//! one decode token per step for every running slot, stop on EOS /
-//! max-new / context-full, step-boundary control stops (cancellation,
-//! deadlines) via the shared [`StopReason::control`] rule, completion
-//! reaping, metrics recording, and the [`EngineEvent`] stream — but
+//! flow exactly — bounded batch slots, admission into free slots plus at
+//! most one prefill chunk ([`SimConfig::prefill_chunk`]) *and* a decode
+//! token per step for every slot that was already running (admission
+//! never suppresses decode), stop on EOS / max-new / context-full,
+//! step-boundary control stops (cancellation, deadlines) via the shared
+//! [`StopReason::control`] rule, completion reaping, metrics recording,
+//! and the [`EngineEvent`] stream — but
 //! replaces the device model with a pure token function: every generated
 //! token is a deterministic mix of the engine seed and the request's
 //! prompt. The output for a request therefore depends **only** on the
@@ -203,13 +205,26 @@ pub struct SimConfig {
     pub preempt_retries: u32,
     /// Deterministic fault injection schedule (default: none).
     pub faults: FaultSchedule,
+    /// Chunked prefill, mirroring [`EngineConfig::prefill_chunk`]: the
+    /// per-step budget of prefill tokens shared by every half-prefilled
+    /// slot (0 = monolithic). Generation content is a pure function of
+    /// (seed, prompt) and thus unaffected; what chunking changes is
+    /// *step accounting* — admitting an `n`-token prompt takes
+    /// `ceil(n / chunk)` steps during which the slot holds pages, emits
+    /// nothing, and can be cancelled / expired / preempted, while the
+    /// already-running batch keeps decoding every step. The default
+    /// matches the engine's (128).
+    ///
+    /// [`EngineConfig::prefill_chunk`]: super::engine::EngineConfig::prefill_chunk
+    pub prefill_chunk: usize,
 }
 
 impl Default for SimConfig {
     fn default() -> Self {
         SimConfig { batch: 4, max_seq: 512, seed: 0, min_gen: 4, eos_every: 23,
                     step_delay_ms: 0, pages_per_slot: 4, page_tokens: 0,
-                    preempt_retries: 3, faults: FaultSchedule::none() }
+                    preempt_retries: 3, faults: FaultSchedule::none(),
+                    prefill_chunk: 128 }
     }
 }
 
@@ -229,6 +244,27 @@ struct SimSlot {
     pages: usize,
     /// Times this request has been preempted before this admission.
     retries: u32,
+    /// Prefill progress: effective-span tokens folded so far. While
+    /// `< prefill_target` the slot is half-prefilled — it holds pages
+    /// but emits nothing and does not decode (the engine's
+    /// `Slot::prefilling` mirror).
+    prefill_pos: usize,
+    /// Effective prefill span: the prompt for fresh requests,
+    /// `prompt + resume - 1` tokens for preempted ones (same count the
+    /// engine stages, so chunked admission takes the same number of
+    /// steps on both engines).
+    prefill_target: usize,
+    /// Resume tokens awaiting the quiet replay that runs when prefill
+    /// completes. Until then this is also the stream the client has
+    /// already seen, which reap/preempt must carry instead of the empty
+    /// `generated`.
+    pending_resume: Vec<i32>,
+}
+
+impl SimSlot {
+    fn prefilling(&self) -> bool {
+        self.prefill_pos < self.prefill_target
+    }
 }
 
 pub struct SimEngine {
@@ -421,11 +457,12 @@ impl SimEngine {
         }
     }
 
-    fn admit_and_prefill(&mut self, sink: &mut dyn FnMut(EngineEvent)) {
-        let t0 = Instant::now();
+    /// Fill free slots from the queue (pages reserved up front, the
+    /// planner's conservative shape). Each new occupant starts
+    /// half-prefilled at position 0 — the state folding happens in
+    /// [`SimEngine::advance_prefill`], one chunk per step.
+    fn admit_slots(&mut self) {
         let cfg = self.cfg;
-        let vocab = self.vocab;
-        let mut admitted_any = false;
         while let Some(qi) = self.best_queued() {
             let Some(si) = self.slots.iter().position(|s| s.is_none()) else {
                 break;
@@ -440,13 +477,9 @@ impl SimEngine {
             self.held_pages += need;
             self.publish_gauge();
             self.metrics.pages_peak = self.metrics.pages_peak.max(self.held_pages);
-            // "Prefill": fold the prompt into the token-function state.
-            let mut state = cfg.seed ^ SIM_TAG;
-            for &t in &req.prompt {
-                state = mix(state ^ t as u64);
-            }
-            let mut slot = SimSlot {
-                state,
+            let target = req.prompt.len() + resume.len().saturating_sub(1);
+            self.slots[si] = Some(SimSlot {
+                state: cfg.seed ^ SIM_TAG,
                 len: req.prompt.len(),
                 generated: Vec::new(),
                 stop: None,
@@ -454,34 +487,79 @@ impl SimEngine {
                 admitted: arrived,
                 pages: need,
                 retries,
+                prefill_pos: 0,
+                prefill_target: target,
+                pending_resume: resume,
                 req,
-            };
-            if resume.is_empty() {
+            });
+        }
+    }
+
+    /// Advance half-prefilled slots by one shared chunk of
+    /// `prefill_chunk` tokens (unbounded when 0), in slot order.
+    /// "Prefill" here is folding prompt tokens into the token-function
+    /// state — made genuinely resumable so step accounting mirrors the
+    /// engine's chunked staging: an `n`-token effective span takes
+    /// `ceil(n / chunk)` steps, during which decode keeps running for
+    /// the rest of the batch. A slot whose cursor reaches its target
+    /// completes admission — fresh requests emit `Started` plus the
+    /// first token (TTFT stops here, exactly like the engine sampling
+    /// from the final chunk's logits); preempted requests quietly replay
+    /// their resume tokens:  the stream is a pure function of
+    /// (seed, prompt), so the replay is bit-identical and the slot lands
+    /// in the exact state it was preempted from — the next decode emits
+    /// the next index, no `Started` / `Token` re-emission, no gaps, no
+    /// repeats. Resume positions past the prompt fold nothing but still
+    /// consume chunk budget (they are staged tokens on the engine side).
+    fn advance_prefill(&mut self, sink: &mut dyn FnMut(EngineEvent)) {
+        let t0 = Instant::now();
+        let cfg = self.cfg;
+        let vocab = self.vocab;
+        let mut budget = if cfg.prefill_chunk == 0 {
+            usize::MAX
+        } else {
+            cfg.prefill_chunk
+        };
+        let mut chunk_tokens = 0u64;
+        for slot in self.slots.iter_mut().flatten() {
+            if budget == 0 {
+                break; // chunk spent; remaining slots resume next step
+            }
+            if !slot.prefilling() || slot.stop.is_some() {
+                continue;
+            }
+            let pos = slot.prefill_pos;
+            let end = slot.prefill_target.min(pos + budget);
+            let plen = slot.req.prompt.len();
+            for &t in &slot.req.prompt[pos.min(plen)..end.min(plen)] {
+                slot.state = mix(slot.state ^ t as u64);
+            }
+            budget -= end - pos;
+            chunk_tokens += (end - pos) as u64;
+            slot.prefill_pos = end;
+            if slot.prefilling() {
+                continue; // still half-prefilled; nothing emitted yet
+            }
+            if slot.pending_resume.is_empty() {
                 sink(EngineEvent::Started { id: slot.req.id });
-                Self::emit(&cfg, &vocab, &mut slot, sink);
+                Self::emit(&cfg, &vocab, slot, sink);
                 slot.first_token = Some(Instant::now());
             } else {
-                // Resume after preemption: replay the token function
-                // over the already-emitted tokens with a suppressed
-                // sink. The stream is a pure function of (seed, prompt),
-                // so the replay is bit-identical and the slot lands in
-                // the exact state it was preempted from — the next
-                // decode emits the next index, no Started / Token
-                // re-emission, no gaps, no repeats.
+                let resume = std::mem::take(&mut slot.pending_resume);
                 let mut quiet = |_: EngineEvent| {};
                 for j in 0..resume.len() {
                     if j > 0 {
                         slot.len += 1;
                     }
-                    Self::emit(&cfg, &vocab, &mut slot, &mut quiet);
+                    Self::emit(&cfg, &vocab, slot, &mut quiet);
                 }
                 debug_assert_eq!(slot.generated, resume,
                                  "resume replay must be bit-identical");
             }
-            self.slots[si] = Some(slot);
-            admitted_any = true;
         }
-        if admitted_any {
+        if chunk_tokens > 0 {
+            self.metrics.prefill_chunks += 1;
+            self.metrics.prefill_tokens += chunk_tokens;
             self.metrics.prefill_s.push(t0.elapsed().as_secs_f64());
         }
     }
@@ -503,11 +581,18 @@ impl SimEngine {
         });
     }
 
-    fn decode_step(&mut self, sink: &mut dyn FnMut(EngineEvent)) {
+    /// One decode token for `active` — the slots that had completed
+    /// prefill before this step's chunk ran (`step_core` snapshots the
+    /// set, so a slot that sampled its first token this very step waits
+    /// for the next one, and a slot preempted after the snapshot is
+    /// simply gone and skipped).
+    fn decode_step(&mut self, sink: &mut dyn FnMut(EngineEvent),
+                   active: &[usize]) {
         let t0 = Instant::now();
         let cfg = self.cfg;
         let vocab = self.vocab;
-        for slot in self.slots.iter_mut().flatten() {
+        for &i in active {
+            let Some(slot) = self.slots[i].as_mut() else { continue };
             // The previous step's token enters the cache, then the next
             // token is generated (engine decode order).
             slot.len += 1;
@@ -555,12 +640,21 @@ impl SimEngine {
         let slot = self.slots[vi].take().unwrap();
         self.held_pages -= slot.pages;
         self.publish_gauge();
+        // What the client has actually seen: a half-prefilled victim has
+        // emitted nothing this admission, so its stream state is the
+        // resume tokens it was re-admitted with, not the (empty)
+        // `generated` of the unfinished replay.
+        let emitted = if slot.prefilling() {
+            slot.pending_resume
+        } else {
+            slot.generated
+        };
         if slot.retries >= self.cfg.preempt_retries {
             let now = Instant::now();
             self.done_early.push(Completion {
                 id: slot.req.id,
                 prompt_len: slot.req.prompt.len(),
-                generated: slot.generated,
+                generated: emitted,
                 stop: StopReason::ResourceExhausted,
                 ttft: slot.first_token
                     .map(|t| t.saturating_duration_since(slot.admitted))
@@ -574,7 +668,7 @@ impl SimEngine {
             self.queue.push_front(QueuedReq {
                 req: slot.req,
                 arrived: slot.admitted,
-                resume: slot.generated,
+                resume: emitted,
                 first_token_at: slot.first_token,
                 retries: slot.retries + 1,
             });
@@ -657,12 +751,21 @@ impl SimEngine {
                     .unwrap_or_default();
                 let e2e = now - slot.admitted;
                 let stop = slot.stop.unwrap();
-                self.metrics.record_completion(ttft, e2e, slot.generated.len(),
+                // A slot cancelled / expired half-prefilled reports the
+                // stream the client actually saw (its pending resume
+                // tokens; empty for a fresh request) — its pages free
+                // through this same path either way.
+                let generated = if slot.prefilling() {
+                    slot.pending_resume
+                } else {
+                    slot.generated
+                };
+                self.metrics.record_completion(ttft, e2e, generated.len(),
                                                stop);
                 sink(EngineEvent::Finished(Completion {
                     id: slot.req.id,
                     prompt_len: slot.req.prompt.len(),
-                    generated: slot.generated,
+                    generated,
                     stop,
                     ttft,
                     e2e,
@@ -677,11 +780,14 @@ impl SimEngine {
     /// share, and a control-flow mirror of the PJRT engine's
     /// `step_core`: faults, control stops, an immediate reap (so a
     /// cancelled / expired slot frees its pages *this* step), deficit
-    /// shedding + infeasibility sweep, then admit-or-decode (with
-    /// pressure preemption when admission is blocked), then the regular
-    /// reap. With no faults scheduled and the flat page model, the
-    /// admit-or-decode decision reduces exactly to the pre-preemption
-    /// rule "admit iff a request is queued and a slot is free".
+    /// shedding + infeasibility sweep, then at most one prefill chunk
+    /// *and* a decode step for the already-running batch, then the
+    /// regular reap. Admission never suppresses decode, and — the fault
+    /// path and normal path share one step shape — a step that burns a
+    /// [`Fault::FailAdmits`] opportunity decodes exactly like a step
+    /// that admits (the fault suppresses slot filling only; the chunk
+    /// phase and decode run regardless), so chaos replays exercise the
+    /// real scheduler instead of a divergent fault-only variant.
     fn step_core(&mut self, sink: &mut dyn FnMut(EngineEvent)) -> Result<()> {
         if self.cfg.step_delay_ms > 0 {
             std::thread::sleep(std::time::Duration::from_millis(
@@ -697,20 +803,31 @@ impl SimEngine {
         self.reap_into(sink);
         self.shed_deficit(sink);
         self.expire_infeasible();
+        // Decode-eligible set snapshotted *before* this step's admission
+        // and prefill chunk: a slot whose prefill completes this step
+        // emitted its first token from the chunk and joins decode next
+        // step (the engine's exact rule).
+        let decode_set: Vec<usize> = (0..self.cfg.batch)
+            .filter(|&i| {
+                self.slots[i]
+                    .as_ref()
+                    .map(|s| !s.prefilling() && s.stop.is_none())
+                    .unwrap_or(false)
+            })
+            .collect();
         if self.admit_ready() {
             if self.fail_admits_left > 0 {
+                // Transient admission fault: skip slot filling only.
                 self.fail_admits_left -= 1;
-                if DecodeEngine::active(self) > 0 {
-                    self.decode_step(sink);
-                }
             } else {
-                self.admit_and_prefill(sink);
+                self.admit_slots();
             }
         } else {
             self.pressure_preempt(sink);
-            if DecodeEngine::active(self) > 0 {
-                self.decode_step(sink);
-            }
+        }
+        self.advance_prefill(sink);
+        if !decode_set.is_empty() {
+            self.decode_step(sink, &decode_set);
         }
         self.reap_into(sink);
         Ok(())
@@ -732,9 +849,19 @@ impl DecodeEngine for SimEngine {
     }
 
     fn submit_queued(&mut self, q: QueuedReq) {
-        assert!(q.req.prompt.len() + 2 < self.cfg.max_seq,
-                "prompt {} too long for context {}", q.req.prompt.len(),
-                self.cfg.max_seq);
+        // Guard on the *effective* prefill span, not the prompt alone
+        // (the engine's exact rule): re-admission replays
+        // `prompt ++ resume[..k-1]`, so a request preempted near the
+        // context limit carries resume tokens that count against the
+        // span. A legitimately preempted request always satisfies this
+        // (it was alive, so its cached length was < max_seq - 2); the
+        // assert catches corrupted or hand-built resume state before it
+        // can overrun the staged span at re-admission.
+        let eff = q.req.prompt.len() + q.resume.len().saturating_sub(1);
+        assert!(eff + 2 < self.cfg.max_seq,
+                "effective prefill of {eff} tokens (prompt {} + resume {}) \
+                 too long for context {}",
+                q.req.prompt.len(), q.resume.len(), self.cfg.max_seq);
         self.metrics.start_clock();
         self.queue.push_back(q);
     }
@@ -1209,6 +1336,184 @@ mod tests {
                        "faults may delay but never change tokens");
             assert_eq!(f.stop, c.stop);
         }
+    }
+
+    #[test]
+    fn chunked_prefill_interleaves_decode_with_admission() {
+        // A long admission must not stall the running batch: with a
+        // 4-token chunk, a 10-token prompt takes ceil(10/4) = 3 steps to
+        // admit, and the already-running slot decodes on every one of
+        // them — the head-of-line stall the monolithic path had.
+        let cfg = SimConfig { batch: 2, eos_every: 0, prefill_chunk: 4,
+                              ..Default::default() };
+        let mut eng = SimEngine::new(cfg);
+        DecodeEngine::submit(&mut eng, req(1, vec![2, 3], 64));
+        eng.step_events(&mut |_| {}).unwrap(); // admit 1 + its first token
+        let long: Vec<i32> = (0..10).collect();
+        DecodeEngine::submit(&mut eng, req(2, long.clone(), 4));
+        let mut started_at = None;
+        for s in 0..3 {
+            let mut toks_1 = 0;
+            eng.step_events(&mut |ev| match ev {
+                EngineEvent::Token { id: 1, .. } => toks_1 += 1,
+                EngineEvent::Started { id: 2 } => started_at = Some(s),
+                _ => {}
+            }).unwrap();
+            assert_eq!(toks_1, 1,
+                       "running slot decodes during prefill step {s}");
+        }
+        assert_eq!(started_at, Some(2),
+                   "10-token prompt over 4-token chunks admits on step 3");
+        let comps = eng.run_to_completion().unwrap();
+        for c in comps {
+            let (prompt, max_new) =
+                if c.id == 1 { (vec![2, 3], 64) } else { (long.clone(), 4) };
+            let (want, _) = SimEngine::expected_generation(&cfg, &prompt,
+                                                           max_new);
+            assert_eq!(c.generated, want, "id {}", c.id);
+        }
+        assert_eq!(eng.pool_free(), eng.pool_capacity(), "page leak");
+    }
+
+    #[test]
+    fn cancel_mid_prefill_frees_pages_without_emitting() {
+        let cfg = SimConfig { batch: 1, eos_every: 0, prefill_chunk: 2,
+                              ..Default::default() };
+        let mut eng = SimEngine::new(cfg);
+        DecodeEngine::submit(&mut eng, req(7, (0..10).collect(), 8));
+        let mut events = Vec::new();
+        eng.step_events(&mut |ev| events.push(ev)).unwrap();
+        assert!(events.is_empty(), "half-prefilled slot emits nothing");
+        assert_eq!(eng.pool_free(), 0, "admitted slot holds its pages");
+        assert!(DecodeEngine::cancel(&mut eng, 7));
+        eng.step_events(&mut |ev| events.push(ev)).unwrap();
+        assert_eq!(events.len(), 1);
+        let EngineEvent::Finished(c) = &events[0] else {
+            panic!("cancel mid-prefill must finish, not stream");
+        };
+        assert_eq!(c.stop, StopReason::Cancelled);
+        assert!(c.generated.is_empty(), "no tokens were ever streamed");
+        assert_eq!(eng.pool_free(), eng.pool_capacity(), "page leak");
+        assert!(DecodeEngine::idle(&eng));
+    }
+
+    #[test]
+    fn deadline_mid_prefill_reaps_through_the_same_path() {
+        // 40 tokens at 1 token per 2ms step outlives the 8ms deadline,
+        // so the stop lands on a half-prefilled slot (or, on a very slow
+        // machine, while still queued — same observable outcome).
+        let cfg = SimConfig { batch: 1, eos_every: 0, prefill_chunk: 1,
+                              step_delay_ms: 2, ..Default::default() };
+        let mut eng = SimEngine::new(cfg);
+        let r = req(3, (0..40).collect(), 8)
+            .with_deadline(Instant::now() + Duration::from_millis(8));
+        DecodeEngine::submit(&mut eng, r);
+        let mut events = Vec::new();
+        while !DecodeEngine::idle(&eng) {
+            eng.step_events(&mut |ev| events.push(ev)).unwrap();
+        }
+        assert_eq!(events.len(), 1);
+        let EngineEvent::Finished(c) = &events[0] else {
+            panic!("expired mid-prefill must finish without streaming");
+        };
+        assert_eq!(c.stop, StopReason::DeadlineExceeded);
+        assert!(c.generated.is_empty());
+        assert_eq!(eng.pool_free(), eng.pool_capacity(), "page leak");
+    }
+
+    #[test]
+    fn preempt_mid_prefill_requeues_and_still_streams_bit_identical() {
+        let cfg = SimConfig { batch: 1, eos_every: 0, prefill_chunk: 2,
+                              ..Default::default() };
+        let mut eng = SimEngine::new(cfg);
+        let pa: Vec<i32> = (0..9).collect();
+        let pb: Vec<i32> = vec![7, 11];
+        DecodeEngine::submit(&mut eng,
+                             req(1, pa.clone(), 5)
+                                 .with_priority(Priority::Batch));
+        let mut events = Vec::new();
+        for _ in 0..2 {
+            eng.step_events(&mut |ev| events.push(ev)).unwrap();
+        }
+        assert!(events.is_empty(), "still half-prefilled: nothing streamed");
+        // The interactive arrival evicts the half-prefilled batch slot.
+        DecodeEngine::submit(&mut eng, req(2, pb.clone(), 3));
+        while !DecodeEngine::idle(&eng) {
+            eng.step_events(&mut |ev| events.push(ev)).unwrap();
+        }
+        let preempts = events.iter().filter(|e| {
+            matches!(e, EngineEvent::Preempted { id: 1 })
+        }).count();
+        assert_eq!(preempts, 1, "mid-prefill victim preempted once");
+        // The victim had streamed nothing, so re-admission is a fresh
+        // start: exactly one Started, full bit-identical stream.
+        for (id, prompt, max_new) in [(1u64, &pa, 5usize), (2, &pb, 3)] {
+            let toks: Vec<i32> = events.iter().filter_map(|e| match e {
+                EngineEvent::Token { id: i, tok, .. } if *i == id => Some(*tok),
+                _ => None,
+            }).collect();
+            let starts = events.iter().filter(|e| {
+                matches!(e, EngineEvent::Started { id: i } if *i == id)
+            }).count();
+            assert_eq!(starts, 1, "id {id}: exactly one Started");
+            let (want, _) = SimEngine::expected_generation(&cfg, prompt,
+                                                           max_new);
+            assert_eq!(toks, want, "id {id}: stream bit-identical");
+        }
+        assert_eq!(eng.pool_free(), eng.pool_capacity(), "page leak");
+    }
+
+    #[test]
+    fn resume_tokens_count_against_the_context_guard() {
+        let cfg = SimConfig { batch: 1, max_seq: 16, ..Default::default() };
+        let mk = |resume_len: usize| QueuedReq {
+            req: req(1, vec![1, 2, 3, 4, 5], 32),
+            arrived: Instant::now(),
+            resume: vec![9; resume_len],
+            first_token_at: None,
+            retries: 1,
+        };
+        // Boundary pass: eff = 5 + (9 - 1) = 13 and 13 + 2 < 16.
+        let mut eng = SimEngine::new(cfg);
+        DecodeEngine::submit_queued(&mut eng, mk(9));
+        // One more resume token overruns: eff = 14, 14 + 2 == 16.
+        let denied = std::panic::catch_unwind(
+            std::panic::AssertUnwindSafe(|| {
+                let mut eng = SimEngine::new(cfg);
+                DecodeEngine::submit_queued(&mut eng, mk(10));
+            }));
+        assert!(denied.is_err(),
+                "resume span past the context window must be rejected");
+    }
+
+    #[test]
+    fn chunked_and_monolithic_prefill_produce_identical_streams() {
+        let chunked = SimConfig { batch: 2, eos_every: 0, prefill_chunk: 4,
+                                  ..Default::default() };
+        let mono = SimConfig { prefill_chunk: 0, ..chunked };
+        let prompts: Vec<Vec<i32>> =
+            (0..4).map(|i| (0..18 + i).collect()).collect();
+        let run = |cfg: SimConfig| {
+            let mut eng = SimEngine::new(cfg);
+            for (i, p) in prompts.iter().enumerate() {
+                DecodeEngine::submit(&mut eng, req(i as u64, p.clone(), 6));
+            }
+            let mut comps = eng.run_to_completion().unwrap();
+            comps.sort_by_key(|c| c.id);
+            (comps, eng.metrics.prefill_chunks, eng.metrics.prefill_tokens)
+        };
+        let (a, chunks_a, toks_a) = run(chunked);
+        let (b, chunks_b, toks_b) = run(mono);
+        assert_eq!(a.len(), 4);
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.id, y.id);
+            assert_eq!(x.generated, y.generated, "id {}", x.id);
+            assert_eq!(x.stop, y.stop, "id {}", x.id);
+        }
+        assert_eq!(toks_a, toks_b, "same tokens prefilled either way");
+        assert_eq!(toks_a, (18 + 19 + 20 + 21) as u64);
+        assert!(chunks_a > chunks_b,
+                "4-token chunks over ~20-token prompts take more chunk steps");
     }
 
     #[test]

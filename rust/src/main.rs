@@ -27,12 +27,15 @@ USAGE:
                    [--max-conns N] [--idle-timeout-ms MS] [--queue-depth N]
                    [--stream] [--deadline-ms MS] [--no-simd]
                    [--defer-retry-ms MS] [--preempt-retries N]
+                   [--prefill-chunk TOKENS]
                    [--default-priority interactive|batch]
   seerattn generate [--task easy|hard] [--policy P] [--budget TOKENS] [--n N]
                    [--no-simd]
 
 POLICIES: dense | seer | seer-threshold:T | seer-topp:P | oracle | quest
 --gather-threads: 0 = auto (half the cores, max 4), 1 = serial.
+--prefill-chunk: prompt tokens prefilled per step, a multiple of
+--block-size (default 128; 0 = monolithic prefill, stalls decode).
 --no-simd pins the host hot path to the bit-identical scalar kernels
 (auto-dispatch picks AVX2+FMA / NEON when the CPU has them).
 Artifacts are read from ./artifacts (override: SEERATTN_ARTIFACTS).";
@@ -233,6 +236,9 @@ fn cmd_serve(args: &Args, dir: &PathBuf) -> Result<()> {
         // Preemptions a request survives (requeue + re-prefill) before
         // it is terminated with "resource_exhausted".
         preempt_retries: args.usize_flag("preempt-retries", 3) as u32,
+        // Prefill tokens staged per engine step (0 = monolithic); must
+        // be a multiple of --block-size so gate blocks stay aligned.
+        prefill_chunk: args.usize_flag("prefill-chunk", 128),
         ..Default::default()
     };
     let gcfg = GroupConfig {

@@ -250,3 +250,47 @@ fn top_p_full_mass_matches_dense_and_adapts() {
     gen_tokens(&mut eng, &prompts, 8);
     assert!(eng.metrics.kv_touch_fraction() < 1.0);
 }
+
+#[test]
+fn chunked_prefill_matches_monolithic_token_streams() {
+    let Some(rt) = runtime() else { return };
+    let prompts = sample_prompts(3);
+    let mono = gen_tokens(
+        &mut engine(&rt, EngineConfig { prefill_chunk: 0, ..Default::default() }),
+        &prompts,
+        8,
+    );
+    // One gate block per chunk: every admission spans multiple steps,
+    // with decode interleaved — the KV state and sampled streams must
+    // still be bit-identical to the monolithic path.
+    let chunked = gen_tokens(
+        &mut engine(&rt, EngineConfig { prefill_chunk: 16, ..Default::default() }),
+        &prompts,
+        8,
+    );
+    assert_eq!(chunked, mono,
+               "chunked prefill must be bit-identical to monolithic");
+}
+
+#[test]
+fn cancel_mid_prefill_frees_pages_without_streaming() {
+    use seerattn::coordinator::DecodeEngine;
+    let Some(rt) = runtime() else { return };
+    let mut eng = engine(&rt, EngineConfig { prefill_chunk: 16,
+                                             ..Default::default() });
+    let capacity = eng.pool_capacity();
+    // 48 prompt tokens over a 16-token chunk: after one step the slot is
+    // half-prefilled — pages reserved, nothing sampled yet.
+    let prompt: Vec<i32> = (0..48).map(|t| 4 + (t % 80)).collect();
+    eng.submit(Request::new(9, prompt, 8));
+    let first = DecodeEngine::step(&mut eng).unwrap();
+    assert!(first.is_empty(), "half-prefilled slot must not complete");
+    assert!(eng.pool_free() < capacity, "admitted slot holds its pages");
+    assert!(DecodeEngine::cancel(&mut eng, 9));
+    let comps = DecodeEngine::step(&mut eng).unwrap();
+    assert_eq!(comps.len(), 1, "cancel mid-prefill must finish the request");
+    assert_eq!(comps[0].stop, seerattn::coordinator::request::StopReason::Cancelled);
+    assert!(comps[0].generated.is_empty(), "no tokens were ever streamed");
+    assert_eq!(eng.pool_free(), capacity,
+               "mid-prefill cancellation leaked pages");
+}

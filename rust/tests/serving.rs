@@ -32,6 +32,11 @@
 //!     submissions carry retry hints the trace runner honours with
 //!     backoff, and cancel/disconnect storms leave every shard's page
 //!     pool gauge at full capacity.
+//!  8. Chunked prefill (ISSUE 7): interleaving admission with decode
+//!     changes nothing a client can observe — on a long-prompt +
+//!     short-decode mix, a 4-shard group's per-request output and a
+//!     single engine's completion order are bit-identical between
+//!     chunked and monolithic prefill under virtual replay.
 
 use std::collections::BTreeMap;
 use std::io::{BufRead, BufReader, Write};
@@ -735,19 +740,27 @@ fn chaos_seeds() -> Vec<u64> {
 /// A trace whose every request is individually servable (projected peak
 /// of 3-4 pages, at most half the 8-page per-shard pool, so it survives
 /// the worst seeded `ShrinkPool`) while the aggregate in-flight demand
-/// oversubscribes the fleet's page pools ~2x.
+/// oversubscribes the fleet's page pools ~2x. Every 5th entry is a
+/// long-prompt / short-decode request (17-24 prompt tokens over the
+/// chaos configs' 8-token prefill chunk, still a 4-page projection), so
+/// the fault matrix lands preemptions and cancellations on half-prefilled
+/// slots, not just mid-decode ones.
 fn chaos_trace(n: usize, seed: u64) -> Vec<TracedRequest> {
     let mut rng = Rng::new(seed ^ 0x00C0_FFEE);
     (0..n)
-        .map(|_| {
-            let plen = rng.range(4, 15);
+        .map(|i| {
+            let (plen, max_new) = if i % 5 == 4 {
+                (rng.range(17, 25), 7) // ceil((24 + 7 + 1) / 8) = 4 pages
+            } else {
+                (rng.range(4, 15), 16)
+            };
             let prompt: Vec<i32> =
                 (0..plen).map(|_| rng.range(4, 90) as i32).collect();
             TracedRequest {
                 arrival_s: 0.0,
                 episode: Episode { prompt, target: Vec::new(), answer: 0,
                                    cfg: TaskConfig::easy() },
-                max_new: 16,
+                max_new,
             }
         })
         .collect()
@@ -766,6 +779,9 @@ fn chaos_oversubscribed_group_never_loses_a_request() {
             step_delay_ms: 1,
             preempt_retries: 2,
             faults: FaultSchedule::seeded(seed, 8),
+            // Long chaos_trace prompts span 3 chunks, so the seeded
+            // faults hit slots in every prefill phase.
+            prefill_chunk: 8,
             ..Default::default()
         };
         let gcfg = GroupConfig { shards: 4, queue_depth: 2,
@@ -1046,6 +1062,113 @@ fn page_deferral_and_priority_errors_are_structured_over_sockets() {
             &sim_cfg, &[3, id as i32, 8], 44);
         assert_eq!(generated, &want, "request {id}");
     }
+}
+
+// ---------------------------------------------------------------------
+// Chunked prefill: interleaved admission must change nothing a client
+// can observe.
+// ---------------------------------------------------------------------
+
+/// Long-prompt + short-decode entries interleaved with short-prompt +
+/// long-decode ones — the mix where monolithic prefill stalls every
+/// in-flight decode behind one big admission.
+fn long_short_trace(n: usize, seed: u64) -> Vec<TracedRequest> {
+    let mut rng = Rng::new(seed ^ 0x0C0D_ED0C);
+    (0..n)
+        .map(|i| {
+            let (plen, max_new) = if i % 3 == 0 {
+                (rng.range(40, 81), 4)
+            } else {
+                (rng.range(4, 10), 24)
+            };
+            let prompt: Vec<i32> =
+                (0..plen).map(|_| rng.range(4, 90) as i32).collect();
+            TracedRequest {
+                arrival_s: 0.0,
+                episode: Episode { prompt, target: Vec::new(), answer: 0,
+                                   cfg: TaskConfig::easy() },
+                max_new,
+            }
+        })
+        .collect()
+}
+
+#[test]
+fn chunked_prefill_matches_monolithic_across_a_sharded_group() {
+    let n = 24usize;
+    let trace = long_short_trace(n, 11);
+    let runner = TraceRunner { replay: Replay::Virtual, ..Default::default() };
+    let run = |chunk: usize| {
+        let sim_cfg = SimConfig { batch: 2, eos_every: 0,
+                                  prefill_chunk: chunk,
+                                  ..Default::default() };
+        let gcfg = GroupConfig { shards: 4, queue_depth: 2,
+                                 ..Default::default() };
+        let mut group: EngineGroup<SimEngine> =
+            EngineGroup::with_config(gcfg,
+                                     move |_| Ok(SimEngine::new(sim_cfg)))
+                .unwrap();
+        let comps = by_id(runner.run_group(&mut group, &trace).unwrap());
+        let gm = group.shutdown().unwrap();
+        (comps, gm.fleet().prefill_chunks, gm.fleet().prefill_tokens)
+    };
+    let (chunked, chunks_c, toks_c) = run(8);
+    let (mono, chunks_m, toks_m) = run(0);
+    assert_eq!(chunked.len(), n);
+    assert_eq!(mono.len(), n);
+    for (id, want) in &mono {
+        assert_eq!(chunked.get(id).expect("missing id"), want,
+                   "id {id}: chunked prefill changed the stream");
+    }
+    // No preemption in this mix, so both modes prefill the same tokens;
+    // the chunked run just spreads them over more steps.
+    assert_eq!(toks_c, toks_m, "same tokens prefilled either way");
+    assert!(chunks_c > chunks_m,
+            "40-80-token prompts over an 8-token chunk must take more \
+             chunk steps ({chunks_c} vs {chunks_m})");
+}
+
+#[test]
+fn chunked_prefill_preserves_finish_order_and_streams_on_one_engine() {
+    // Four concurrent slots with widely separated decode lengths: the
+    // chunk phase shifts first tokens by at most ceil(80/8) = 10 steps,
+    // far less than the 40-step finish spacing, so completion order is
+    // a stable property of this trace — and must survive chunking. The
+    // single-engine runner steps deterministically (no shard threads),
+    // making the order assertion exact.
+    let mk = |plen: usize, max_new: usize| TracedRequest {
+        arrival_s: 0.0,
+        episode: Episode {
+            prompt: (0..plen as i32).map(|t| 3 + t).collect(),
+            target: Vec::new(),
+            answer: 0,
+            cfg: TaskConfig::easy(),
+        },
+        max_new,
+    };
+    let trace = vec![mk(8, 5), mk(16, 45), mk(24, 85), mk(32, 125)];
+    let runner = TraceRunner { replay: Replay::Virtual, ..Default::default() };
+    let run = |chunk: usize| {
+        let mut eng = SimEngine::new(SimConfig { batch: 4, eos_every: 0,
+                                                 prefill_chunk: chunk,
+                                                 ..Default::default() });
+        let comps = runner.run(&mut eng, &trace).unwrap();
+        (comps, eng.metrics.prefill_chunks)
+    };
+    let (chunked, chunks_c) = run(8);
+    let (mono, chunks_m) = run(0);
+    let ids = |comps: &[Completion]| -> Vec<u64> {
+        comps.iter().map(|c| c.id).collect()
+    };
+    assert_eq!(ids(&chunked), ids(&mono),
+               "chunked prefill must not reorder completions");
+    for (a, b) in chunked.iter().zip(&mono) {
+        assert_eq!(a.generated, b.generated, "id {}: stream diverged", a.id);
+        assert_eq!(a.stop, b.stop, "id {}", a.id);
+    }
+    assert!(chunks_c > chunks_m,
+            "80 effective prefill tokens over 8-token chunks must take \
+             more chunk steps ({chunks_c} vs {chunks_m})");
 }
 
 #[test]
