@@ -704,6 +704,116 @@ fn chunked_prefill_json() -> Json {
 }
 
 // ---------------------------------------------------------------------
+// Prefix cache: TTFT under shared-prompt workloads (ISSUE 8). Same
+// virtual cost model as the chunked-prefill section: the SimEngine's
+// content-addressed prefix cache decides how many prompt tokens each
+// admission actually stages, so the TTFT saving at every hit rate is
+// exact and assertable even in smoke mode.
+// ---------------------------------------------------------------------
+
+/// Serve `n` requests one at a time, each a 256-token prompt whose
+/// first `shared` tokens are common (the rest diverge per request),
+/// with the prefix cache on or off. Returns (per-request TTFT ms under
+/// the virtual clock, per-request streams, total prefill tokens staged,
+/// total cached blocks reused).
+fn prefix_cache_run(n: usize, plen: usize, shared: usize, cache: bool)
+    -> (Vec<f64>, Vec<(u64, Vec<i32>)>, u64, u64) {
+    use seerattn::coordinator::{DecodeEngine, EngineEvent, Request, SimConfig,
+                                SimEngine};
+    let cfg = SimConfig { batch: 1, eos_every: 0, prefill_chunk: 32,
+                          page_tokens: 8, pages_per_slot: 128,
+                          prefix_cache: cache, ..Default::default() };
+    let mut eng = SimEngine::new(cfg);
+    let head: Vec<i32> = (0..shared).map(|t| 9 + (t % 50) as i32).collect();
+    let mut clock = 0.0f64;
+    let mut ttfts = Vec::new();
+    let mut streams: Vec<(u64, Vec<i32>)> = Vec::new();
+    let mut prev_prefill = 0u64;
+    for i in 0..n as u64 {
+        let mut prompt = head.clone();
+        prompt.extend((0..plen - shared)
+            .map(|t| 60 + ((i as usize * 13 + t) % 60) as i32));
+        eng.submit(Request::new(i, prompt, 4));
+        let submitted_at = clock;
+        let mut first: Option<f64> = None;
+        while !eng.idle() {
+            let mut saw_token = false;
+            eng.step_events(&mut |ev| match ev {
+                EngineEvent::Token { id, .. } if id == i => saw_token = true,
+                EngineEvent::Finished(c) => streams.push((c.id, c.generated)),
+                _ => {}
+            }).unwrap();
+            let staged = eng.metrics.prefill_tokens - prev_prefill;
+            prev_prefill = eng.metrics.prefill_tokens;
+            clock += VSTEP_MS + VPREFILL_TOK_MS * staged as f64;
+            if saw_token && first.is_none() {
+                first = Some(clock - submitted_at);
+            }
+        }
+        ttfts.push(first.expect("request produced no token"));
+    }
+    (ttfts, streams, eng.metrics.prefill_tokens,
+     eng.metrics.prefix_blocks_reused)
+}
+
+fn prefix_cache_json() -> Json {
+    let (n, plen) = (4usize, 256usize);
+    let bs = 8usize; // page_tokens in prefix_cache_run
+    // Warm TTFT = mean over the repeats (the first request is the cold
+    // publisher at every hit rate).
+    let warm_mean = |ttfts: &[f64]| {
+        ttfts[1..].iter().sum::<f64>() / (ttfts.len() - 1) as f64
+    };
+    println!("prefix cache (virtual clock, {plen}-token prompts, \
+              shared-head sweep):");
+    let mut sweep = Vec::new();
+    let mut prev_warm = f64::INFINITY;
+    for shared in [0usize, 64, 128, 192, 240] {
+        let (t_on, s_on, toks_on, reused) =
+            prefix_cache_run(n, plen, shared, true);
+        let (t_off, s_off, toks_off, reused_off) =
+            prefix_cache_run(n, plen, shared, false);
+        assert_eq!(s_on, s_off,
+                   "shared {shared}: prefix reuse changed a stream");
+        assert_eq!(reused_off, 0, "cache off must not reuse");
+        assert_eq!(reused, ((shared / bs) * (n - 1)) as u64,
+                   "shared {shared}: every repeat must splice the whole \
+                    shared head");
+        assert_eq!(toks_on, toks_off - bs as u64 * reused,
+                   "shared {shared}: reused blocks must come off prefill");
+        let (on, off) = (warm_mean(&t_on), warm_mean(&t_off));
+        assert!(on <= off + 1e-9,
+                "shared {shared}: cache must not slow TTFT down");
+        assert!(on <= prev_warm + 1e-9,
+                "warm TTFT must fall as the shared head grows");
+        prev_warm = on;
+        println!("  shared {shared:>3} ({:>3.0}%): TTFT {off:>6.2}ms cold \
+                  -> {on:>6.2}ms warm (x{:.2}), {reused} blocks reused",
+                 100.0 * shared as f64 / plen as f64, off / on);
+        sweep.push(Json::obj(vec![
+            ("shared_tokens", Json::Num(shared as f64)),
+            ("hit_rate", Json::Num(shared as f64 / plen as f64)),
+            ("ttft_ms_cold", Json::Num(off)),
+            ("ttft_ms_warm", Json::Num(on)),
+            ("ttft_speedup", Json::Num(off / on)),
+            ("prefill_tokens_cold", Json::Num(toks_off as f64)),
+            ("prefill_tokens_warm", Json::Num(toks_on as f64)),
+            ("blocks_reused", Json::Num(reused as f64)),
+        ]));
+    }
+    println!();
+    Json::obj(vec![
+        ("n_requests", Json::Num(n as f64)),
+        ("prompt_tokens", Json::Num(plen as f64)),
+        ("block_tokens", Json::Num(bs as f64)),
+        ("vstep_ms", Json::Num(VSTEP_MS)),
+        ("vprefill_tok_ms", Json::Num(VPREFILL_TOK_MS)),
+        ("sweep", Json::Arr(sweep)),
+        ("bit_identical", Json::Bool(true)),
+    ])
+}
+
+// ---------------------------------------------------------------------
 
 fn ms(r: &BenchResult) -> Json {
     Json::Num(r.median_s * 1e3)
@@ -985,9 +1095,10 @@ fn main() {
         ])
     };
 
-    // Deterministic virtual-clock section — asserts run in smoke mode
+    // Deterministic virtual-clock sections — asserts run in smoke mode
     // too (no timer noise to exclude).
     let chunked_prefill = chunked_prefill_json();
+    let prefix_cache = prefix_cache_json();
 
     let out = Json::obj(vec![
         ("bench", Json::Str("decode_hot_path".into())),
@@ -1014,6 +1125,7 @@ fn main() {
         ("steady_state_allocs_total", Json::Num(total_allocs as f64)),
         ("gather", gather_json),
         ("chunked_prefill", chunked_prefill),
+        ("prefix_cache", prefix_cache),
         ("policies", Json::Obj(
             policy_json.into_iter().collect(),
         )),

@@ -32,7 +32,8 @@ use super::sampling;
 use super::DecodeEngine;
 use crate::gate;
 use crate::kvcache::offload::{OffloadConfig, TieredKv};
-use crate::kvcache::{KcompCache, PagedKvPool, SeqKv};
+use crate::kvcache::{chain_hash, KcompCache, PageId, PagedKvPool, PrefixCache,
+                     SeqKv, ROOT_HASH};
 use crate::model::{ModelConfig, ParamStore};
 use crate::runtime::{Arg, DeviceTensor, HostTensor, Runtime};
 use crate::sparse::policy::{select_budget_into, select_threshold_into,
@@ -88,6 +89,18 @@ pub struct EngineConfig {
     /// the least common multiple of the paper's 64/128 sparse block
     /// sizes (and a multiple of the default engine block size 16).
     pub prefill_chunk: usize,
+    /// Content-addressed prefix KV cache: completed prompt blocks are
+    /// published (KV page + kcomp gate entry + Quest metadata per layer)
+    /// under their rolling chain hash, and an admission whose prompt
+    /// shares a cached block-aligned prefix maps those pages instead of
+    /// re-prefilling them. Pages are refcount-shared in the pool, so a
+    /// cached block and the live sequences using it never copy; warm
+    /// prefills are bit-identical to cold ones (the gate/Quest splice is
+    /// exact, see `kvcache::kcomp` / `sparse::quest`).
+    pub prefix_cache: bool,
+    /// Cap on cached prefix blocks (LRU-evicted beyond); 0 = unbounded —
+    /// memory pressure still evicts, see `Engine::prefix_gc`.
+    pub prefix_cache_blocks: usize,
 }
 
 impl Default for EngineConfig {
@@ -105,8 +118,26 @@ impl Default for EngineConfig {
             simd: true,
             preempt_retries: 3,
             prefill_chunk: 128,
+            prefix_cache: false,
+            prefix_cache_blocks: 0,
         }
     }
+}
+
+/// What the prefix cache stores per cached prompt block: one shared KV
+/// page per layer (refcounted in the pool — the cache holds its own
+/// reference) plus the per-layer compressed-gate entry and Quest min/max
+/// metadata for the block, so a warm admission splices selection state
+/// instead of recomputing it.
+struct PrefixBlock {
+    /// [n_layers] — page holding the block's K/V at every layer.
+    pages: Vec<PageId>,
+    /// [n_layers][hkv * d_gate] — kcomp entry rows
+    /// ([`KcompCache::export_block`] format).
+    kcomp: Vec<Vec<f32>>,
+    /// [n_layers][hkv * 2 * head_dim] — Quest min/max rows
+    /// ([`QuestMeta::export_block`] format).
+    quest: Vec<Vec<f32>>,
 }
 
 /// Per-slot sequence state.
@@ -135,6 +166,13 @@ struct Slot {
     /// Effective prefill span: the whole prompt for fresh requests, all
     /// but the trailing resume token for preempted ones.
     prefill_target: usize,
+    /// Deepest prefix-cache chain hash this slot has pinned
+    /// ([`ROOT_HASH`] while none): the blocks it adopted at admission
+    /// plus every block it has published since. Unpinned on every
+    /// terminal / preemption path.
+    prefix_hash: u64,
+    /// Length of the pinned chain, in blocks.
+    prefix_blocks: usize,
 }
 
 impl Slot {
@@ -191,6 +229,9 @@ pub struct Engine {
     /// Completions synthesized off-slot (cancelled or deadline-expired
     /// while still queued), drained by the next reap.
     done_early: Vec<Completion>,
+    /// Content-addressed prefix cache (`ecfg.prefix_cache`): radix index
+    /// of published prompt blocks, keyed by rolling chain hash.
+    prefix: Option<PrefixCache<PrefixBlock>>,
 }
 
 /// Reusable selection scratch (see `Engine::select`).
@@ -285,7 +326,59 @@ impl Engine {
             },
             cancels: HashSet::new(),
             done_early: Vec::new(),
+            prefix: ecfg.prefix_cache.then(|| {
+                PrefixCache::new(ecfg.block_size, ecfg.prefix_cache_blocks)
+            }),
         })
+    }
+
+    /// Prompt blocks currently cached in the prefix cache.
+    pub fn prefix_cached_blocks(&self) -> usize {
+        self.prefix.as_ref().map(|p| p.len()).unwrap_or(0)
+    }
+
+    /// Drop every unpinned cached prefix block, releasing the cache's
+    /// page references; returns the number evicted. Blocks pinned by
+    /// live slots stay (their pages are shared with those slots anyway).
+    pub fn prefix_evict_all(&mut self) -> usize {
+        let Some(pc) = self.prefix.as_mut() else { return 0 };
+        let mut evicted = Vec::new();
+        let n = pc.evict_all(&mut evicted);
+        for blk in evicted {
+            for pg in blk.pages {
+                self.pool.release(pg);
+            }
+        }
+        self.metrics.prefix_evictions += n as u64;
+        n
+    }
+
+    /// Memory-pressure GC: while pool headroom is below one step's worst
+    /// case allocation, evict unpinned cached blocks (LRU leaves) before
+    /// any live slot could starve. With every unpinned block evicted the
+    /// pool is back to its no-cache worst case — which the pool is sized
+    /// for — so cached pages can never make an admission or decode
+    /// append fail. Runs every step; a no-op without the prefix cache.
+    fn prefix_gc(&mut self) {
+        if self.prefix.is_none() {
+            return;
+        }
+        let chunk_pages = if self.ecfg.prefill_chunk == 0 {
+            self.max_seq / self.ecfg.block_size
+        } else {
+            self.ecfg.prefill_chunk / self.ecfg.block_size
+        };
+        // Per step, each slot appends <= 1 decode page per layer and the
+        // prefill chunk spans <= chunk_pages (+1 partial per slot).
+        let margin = self.cfg.n_layers * (2 * self.batch + chunk_pages + 1);
+        while self.pool.free_pages() < margin {
+            let Some(pc) = self.prefix.as_mut() else { return };
+            let Some(blk) = pc.evict_one() else { return };
+            for pg in blk.pages {
+                self.pool.release(pg);
+            }
+            self.metrics.prefix_evictions += 1;
+        }
     }
 
     /// Staging buffer-set creations so far (constant in steady state —
@@ -389,6 +482,9 @@ impl Engine {
     fn step_core(&mut self, sink: &mut dyn FnMut(EngineEvent)) -> Result<()> {
         self.apply_control_stops();
         self.reap_into(sink);
+        // Yield cached prefix pages back under memory pressure *before*
+        // any admission or append could contend for them.
+        self.prefix_gc();
         // Priority preemption: a strictly-higher-priority request waiting
         // in the queue evicts the weakest occupant of a full batch at
         // this step boundary (its pages released through the same reap
@@ -468,14 +564,7 @@ impl Engine {
             // requeue below carries the correct replay state.
             self.arena.abort_prefill_row(v);
         }
-        for kv in &mut slot.kv {
-            if let Some(t) = &mut self.offload {
-                for &pg in &kv.pages {
-                    t.invalidate(pg);
-                }
-            }
-            kv.release(&mut self.pool);
-        }
+        self.release_slot_resources(&mut slot);
         self.metrics.requests_preempted += 1;
         sink(EngineEvent::Preempted { id: slot.req.id });
         self.queue.push_front(QueuedReq {
@@ -484,6 +573,7 @@ impl Engine {
             resume: slot.generated,
             first_token_at: slot.first_token,
             retries: slot.retries + 1,
+            sticky: false,
         });
     }
 
@@ -568,25 +658,65 @@ impl Engine {
             if self.slots[i].is_none() {
                 if let Some(q) = self.pop_best_queued() {
                     let QueuedReq { req, arrived, resume, first_token_at,
-                                    retries } = q;
+                                    retries, .. } = q;
                     // Resume replay: the effective prefill input is
                     // prompt ++ resume[..k-1]; the last resume token
                     // plays the sampled-first-token role on completion.
                     let mut tokens = req.prompt.clone();
                     tokens.extend_from_slice(&resume);
                     let target = tokens.len() - usize::from(!resume.is_empty());
+                    let mut kv: Vec<SeqKv> =
+                        (0..self.cfg.n_layers).map(|_| SeqKv::new()).collect();
+                    let mut kcomp: Vec<KcompCache> = (0..self.cfg.n_layers)
+                        .map(|_| KcompCache::with_max_seq(
+                            &self.cfg, self.ecfg.block_size, self.max_seq))
+                        .collect();
+                    let mut quest: Vec<QuestMeta> = (0..self.cfg.n_layers)
+                        .map(|_| QuestMeta::new(&self.cfg, self.ecfg.block_size,
+                                                self.max_seq))
+                        .collect();
+                    // Prefix-cache lookup: adopt the longest cached
+                    // block-aligned prompt prefix — shared pages are
+                    // retained (never copied), gate entries and Quest
+                    // metadata spliced — and start the chunked prefill
+                    // at the first uncached block. Reuse is capped one
+                    // block short of the effective span so the first
+                    // token still samples through the normal prefill
+                    // logits path.
+                    let bs = self.ecfg.block_size;
+                    let mut prefix_hash = ROOT_HASH;
+                    let mut prefix_blocks = 0usize;
+                    if let Some(pc) = self.prefix.as_mut() {
+                        let hit = pc.lookup(&req.prompt);
+                        let mut r = hit.blocks;
+                        while r > 0 && r * bs >= target {
+                            r -= 1;
+                        }
+                        if r > 0 {
+                            let hash = pc.ancestor(hit.hash, hit.blocks - r);
+                            pc.pin(hash, r);
+                            for blk in pc.chain_payloads(hash, r) {
+                                for l in 0..self.cfg.n_layers {
+                                    let pg = blk.pages[l];
+                                    self.pool.retain(pg);
+                                    kv[l].pages.push(pg);
+                                    kv[l].len += bs;
+                                    kcomp[l].adopt_block(&blk.kcomp[l]);
+                                    quest[l].adopt_block(&blk.quest[l]);
+                                }
+                            }
+                            prefix_hash = hash;
+                            prefix_blocks = r;
+                            self.metrics.prefix_hits += 1;
+                            self.metrics.prefix_blocks_reused += r as u64;
+                        }
+                    }
                     self.slots[i] = Some(Slot {
                         tokens,
-                        len: 0,
-                        kv: (0..self.cfg.n_layers).map(|_| SeqKv::new()).collect(),
-                        kcomp: (0..self.cfg.n_layers)
-                            .map(|_| KcompCache::with_max_seq(
-                                &self.cfg, self.ecfg.block_size, self.max_seq))
-                            .collect(),
-                        quest: (0..self.cfg.n_layers)
-                            .map(|_| QuestMeta::new(&self.cfg, self.ecfg.block_size,
-                                                    self.max_seq))
-                            .collect(),
+                        len: prefix_blocks * bs,
+                        kv,
+                        kcomp,
+                        quest,
                         generated: resume,
                         stats: SeqStats::default(),
                         stop: None,
@@ -594,8 +724,10 @@ impl Engine {
                         admitted: arrived,
                         first_token: first_token_at,
                         retries,
-                        prefill_pos: 0,
+                        prefill_pos: prefix_blocks * bs,
                         prefill_target: target,
+                        prefix_hash,
+                        prefix_blocks,
                     });
                 }
             }
@@ -611,7 +743,7 @@ impl Engine {
         let t0 = Instant::now();
         let (b, s) = (self.batch, self.max_seq);
         let Engine { arena, slots, params, dev, rt, pool, cfg, ecfg, wk_gates,
-                     rng, metrics, vocab, .. } = self;
+                     rng, metrics, vocab, prefix, .. } = self;
         let (hkv, dh, l_n) = (cfg.n_kv_heads, cfg.head_dim, cfg.n_layers);
         let nvocab = cfg.vocab;
         let mut budget = if ecfg.prefill_chunk == 0 {
@@ -632,11 +764,17 @@ impl Engine {
                 }
                 let slot = slots[i].as_ref().unwrap();
                 let (pos, target) = (slot.prefill_pos, slot.prefill_target);
-                debug_assert_eq!(cursor[i], pos,
-                                 "staging cursor tracks slot progress");
+                // A warm admission starts its cursor at 0 but its scatter
+                // position at the reused-prefix end: the device prefill
+                // has no KV-prefix input, so the adopted span's *ids*
+                // must still be staged (and recomputed) even though its
+                // KV is mapped from the cache and never re-scattered.
+                debug_assert!(cursor[i] <= pos,
+                              "staging cursor tracks slot progress");
+                let cur = cursor[i];
                 let end = target.min(pos + budget);
-                ids[i * s + pos..i * s + end]
-                    .copy_from_slice(&slot.tokens[pos..end]);
+                ids[i * s + cur..i * s + end]
+                    .copy_from_slice(&slot.tokens[cur..end]);
                 seq_len[i] = end as i32;
                 dirty[i] = end;
                 // The cursor stays nonzero (span persists across
@@ -687,6 +825,54 @@ impl Engine {
             let slot = slots[i].as_mut().unwrap();
             slot.prefill_pos = end;
             slot.len = end;
+            // Publish freshly completed full *prompt* blocks into the
+            // prefix cache, extending this slot's pinned chain (parents
+            // are pinned, so cap-eviction can never break the chain
+            // mid-publish). Pages gain the cache's own reference; gate /
+            // Quest state is exported at the block boundary, where the
+            // splice is exact.
+            if let Some(pc) = prefix.as_mut() {
+                let bs = ecfg.block_size;
+                let upto = (end / bs).min(slot.req.prompt.len() / bs);
+                let mut evicted: Vec<PrefixBlock> = Vec::new();
+                for jb in slot.prefix_blocks..upto {
+                    let next = chain_hash(slot.prefix_hash,
+                                          &slot.tokens[jb * bs..(jb + 1) * bs]);
+                    if pc.payload(next).is_some() {
+                        // A sibling slot published this block first:
+                        // share its copy, pin it for this sequence.
+                        pc.pin(next, 1);
+                    } else {
+                        let mut blk = PrefixBlock {
+                            pages: Vec::with_capacity(l_n),
+                            kcomp: Vec::with_capacity(l_n),
+                            quest: Vec::with_capacity(l_n),
+                        };
+                        for l in 0..l_n {
+                            let pg = slot.kv[l].pages[jb];
+                            pool.retain(pg); // the cache's reference
+                            blk.pages.push(pg);
+                            let mut kc = vec![0.0; hkv * cfg.d_gate];
+                            slot.kcomp[l].export_block(jb, &mut kc);
+                            blk.kcomp.push(kc);
+                            let mut qm = vec![0.0; hkv * 2 * dh];
+                            slot.quest[l].export_block(jb, &mut qm);
+                            blk.quest.push(qm);
+                        }
+                        let ok = pc.insert(slot.prefix_hash, next, blk,
+                                           &mut evicted);
+                        debug_assert!(ok, "single-threaded publish races");
+                    }
+                    slot.prefix_hash = next;
+                    slot.prefix_blocks += 1;
+                }
+                for blk in evicted {
+                    for pg in blk.pages {
+                        pool.release(pg);
+                    }
+                    metrics.prefix_evictions += 1;
+                }
+            }
             if end < slot.prefill_target {
                 continue; // still half-prefilled; no first token yet
             }
@@ -1183,6 +1369,34 @@ impl Engine {
         Ok(outs.into_iter().next().unwrap())
     }
 
+    /// Drop a departing slot's prefix pins and release its KV pages.
+    /// Every terminal and preemption path funnels here, so a
+    /// half-prefilled slot killed by cancellation, deadline, fault, or
+    /// preemption can never leak a pin or a page reference. Offload
+    /// fast-tier entries are invalidated only when this release actually
+    /// frees the page — a prefix-cache reference keeps a shared page
+    /// resident (and its fast-tier residency useful) past any one
+    /// sequence.
+    fn release_slot_resources(&mut self, slot: &mut Slot) {
+        if slot.prefix_blocks > 0 {
+            if let Some(pc) = self.prefix.as_mut() {
+                pc.unpin(slot.prefix_hash, slot.prefix_blocks);
+            }
+            slot.prefix_blocks = 0;
+            slot.prefix_hash = ROOT_HASH;
+        }
+        for kv in &mut slot.kv {
+            if let Some(t) = &mut self.offload {
+                for &pg in &kv.pages {
+                    if self.pool.ref_count(pg) == 1 {
+                        t.invalidate(pg);
+                    }
+                }
+            }
+            kv.release(&mut self.pool);
+        }
+    }
+
     fn check_stop(&mut self, i: usize, tok: i32) {
         let max_seq = self.max_seq;
         let eos = self.vocab.eos;
@@ -1214,14 +1428,7 @@ impl Engine {
                     // the exact same path a decoded slot uses.
                     self.arena.abort_prefill_row(i);
                 }
-                for kv in &mut slot.kv {
-                    if let Some(t) = &mut self.offload {
-                        for &pg in &kv.pages {
-                            t.invalidate(pg);
-                        }
-                    }
-                    kv.release(&mut self.pool);
-                }
+                self.release_slot_resources(&mut slot);
                 let now = Instant::now();
                 let ttft = slot
                     .first_token

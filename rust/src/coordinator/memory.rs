@@ -66,6 +66,21 @@ impl PageGeometry {
         tokens.div_ceil(self.tokens_per_page) * self.rows_per_seq.max(1)
     }
 
+    /// Pages already resident for `blocks` cached prefix blocks under
+    /// the token paging model — the prefix-cache discount: a request
+    /// whose leading blocks are warm on a shard maps those pages instead
+    /// of allocating them, so the router charges shared pages once
+    /// (reservation = projected peak − discount). Zero under the fixed
+    /// model (its per-sequence cost is length-independent) and on
+    /// engines with no page accounting. Advisory like the rest of the
+    /// plan: an over-discount is absorbed by engine preemption.
+    pub fn prefix_discount(&self, blocks: usize) -> usize {
+        if self.fixed_pages_per_seq > 0 || self.tokens_per_page == 0 {
+            return 0;
+        }
+        blocks * self.rows_per_seq.max(1)
+    }
+
     /// Page budget the router may promise against this shard: the pool
     /// itself plus one average-sequence share per overflow-queue slot
     /// (queued requests need their pages only once a batch slot frees,
@@ -198,6 +213,30 @@ mod tests {
         };
         assert_eq!(g.project(1, 1), 4);
         assert_eq!(g.project(500, 100), 4);
+    }
+
+    #[test]
+    fn prefix_discount_only_applies_to_the_token_model() {
+        let tokens = PageGeometry {
+            pool_pages: 64,
+            tokens_per_page: 16,
+            rows_per_seq: 2,
+            fixed_pages_per_seq: 0,
+            slots: 4,
+        };
+        assert_eq!(tokens.prefix_discount(3), 6, "blocks * rows_per_seq");
+        // Discounted reservation never goes negative even if the cached
+        // prefix covers the whole projection.
+        let need = tokens.project(10, 5).saturating_sub(tokens.prefix_discount(10));
+        assert_eq!(need, 0);
+        let fixed = PageGeometry {
+            pool_pages: 16,
+            fixed_pages_per_seq: 4,
+            slots: 4,
+            ..Default::default()
+        };
+        assert_eq!(fixed.prefix_discount(3), 0);
+        assert_eq!(PageGeometry::default().prefix_discount(3), 0);
     }
 
     #[test]

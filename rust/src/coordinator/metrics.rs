@@ -50,6 +50,16 @@ pub struct Metrics {
     pub prefill_tokens: u64,
     /// Peak overflow-queue length observed at this shard.
     pub queue_peak: u64,
+    /// Admissions that found at least one full prompt block in the
+    /// prefix cache.
+    pub prefix_hits: u64,
+    /// Full prompt blocks spliced from the prefix cache instead of being
+    /// prefilled (each one is a block of KV *and* gate work skipped —
+    /// compare against `prefill_tokens` to see the saving).
+    pub prefix_blocks_reused: u64,
+    /// Cached prefix blocks evicted (LRU under the capacity cap or
+    /// yielded back under page-pool pressure).
+    pub prefix_evictions: u64,
     wall_start: Option<std::time::Instant>,
 }
 
@@ -99,6 +109,9 @@ impl Metrics {
         self.requests_stolen += other.requests_stolen;
         self.prefill_chunks += other.prefill_chunks;
         self.prefill_tokens += other.prefill_tokens;
+        self.prefix_hits += other.prefix_hits;
+        self.prefix_blocks_reused += other.prefix_blocks_reused;
+        self.prefix_evictions += other.prefix_evictions;
         // A fleet's "peak queue" is the worst shard's, not a sum; same
         // for peak pages (per-shard pools are independent).
         self.queue_peak = self.queue_peak.max(other.queue_peak);
@@ -124,7 +137,7 @@ impl Metrics {
 
     pub fn report(&self) -> String {
         format!(
-            "requests={} tokens={} tps={:.1} cancelled={} deadline-expired={} preempted={} exhausted={} pages-peak={} prefill-chunks={} prefill-tokens={}\n  ttft    {}\n  e2e     {}\n  decode  {}\n  kv-touch fraction {:.3}",
+            "requests={} tokens={} tps={:.1} cancelled={} deadline-expired={} preempted={} exhausted={} pages-peak={} prefill-chunks={} prefill-tokens={} prefix-hits={} prefix-blocks-reused={} prefix-evictions={}\n  ttft    {}\n  e2e     {}\n  decode  {}\n  kv-touch fraction {:.3}",
             self.requests_completed,
             self.tokens_generated,
             self.throughput_tps(),
@@ -135,6 +148,9 @@ impl Metrics {
             self.pages_peak,
             self.prefill_chunks,
             self.prefill_tokens,
+            self.prefix_hits,
+            self.prefix_blocks_reused,
+            self.prefix_evictions,
             self.ttft_s.summary("s"),
             self.e2e_s.summary("s"),
             self.decode_step_s.summary("s"),
@@ -222,6 +238,7 @@ impl GroupMetrics {
              rejected={} deferred={} cancelled={} deadline-expired={} \
              preempted={} exhausted={} stolen={} \
              queue-depth={} pages-peak={} \
+             prefix-hits={} prefix-blocks-reused={} prefix-evictions={} \
              ttft p50={:.4}s p95={:.4}s p99={:.4}s \
              e2e p50={:.4}s p95={:.4}s p99={:.4}s kv-touch {:.3}",
             self.shards.len(),
@@ -237,6 +254,9 @@ impl GroupMetrics {
             f.requests_stolen,
             self.queue_depth,
             f.pages_peak,
+            f.prefix_hits,
+            f.prefix_blocks_reused,
+            f.prefix_evictions,
             f.ttft_s.median(),
             f.ttft_s.percentile(95.0),
             f.ttft_s.percentile(99.0),
@@ -346,6 +366,32 @@ mod tests {
         assert!(r.contains("preempted=5"), "{r}");
         assert!(r.contains("exhausted=2"), "{r}");
         assert!(r.contains("pages-peak=12"), "{r}");
+    }
+
+    #[test]
+    fn prefix_counters_add_on_merge_and_reach_both_reports() {
+        let mut a = Metrics::new();
+        a.prefix_hits = 2;
+        a.prefix_blocks_reused = 7;
+        a.prefix_evictions = 1;
+        let mut b = Metrics::new();
+        b.prefix_hits = 3;
+        b.prefix_blocks_reused = 4;
+        b.prefix_evictions = 2;
+        a.merge_from(&b);
+        assert_eq!(a.prefix_hits, 5);
+        assert_eq!(a.prefix_blocks_reused, 11);
+        assert_eq!(a.prefix_evictions, 3);
+        let r = a.report();
+        assert!(r.contains("prefix-hits=5"), "{r}");
+        assert!(r.contains("prefix-blocks-reused=11"), "{r}");
+        assert!(r.contains("prefix-evictions=3"), "{r}");
+        let mut g = GroupMetrics::default();
+        g.shards.push(a);
+        let r = g.report();
+        assert!(r.contains("prefix-hits=5"), "{r}");
+        assert!(r.contains("prefix-blocks-reused=11"), "{r}");
+        assert!(r.contains("prefix-evictions=3"), "{r}");
     }
 
     #[test]

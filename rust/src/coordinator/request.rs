@@ -122,11 +122,17 @@ pub struct QueuedReq {
     pub first_token_at: Option<Instant>,
     /// How many times this request has been preempted-and-requeued.
     pub retries: u32,
+    /// Pinned to the shard queue it sits in: work stealing skips it.
+    /// Set by the router under prefix routing for requests placed on
+    /// their prefix-affinity shard — stealing one would move it away
+    /// from the cached (or about-to-be-cached) KV blocks it shares.
+    pub sticky: bool,
 }
 
 impl QueuedReq {
     pub fn fresh(req: Request, arrived: Instant) -> QueuedReq {
-        QueuedReq { req, arrived, resume: Vec::new(), first_token_at: None, retries: 0 }
+        QueuedReq { req, arrived, resume: Vec::new(), first_token_at: None,
+                    retries: 0, sticky: false }
     }
 }
 
@@ -389,6 +395,7 @@ mod tests {
             resume: vec![10, 11, 12],
             first_token_at: Some(first_tok),
             retries: 1,
+            sticky: false,
         });
         let mut cancels: HashSet<u64> = [7].into_iter().collect();
         let mut done = Vec::new();

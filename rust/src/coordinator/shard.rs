@@ -51,10 +51,23 @@
 //! **Work stealing**: requests wait in shared `Mutex<VecDeque>` overflow
 //! queues rather than private channels, so a shard with free batch slots
 //! and an empty queue of its own pulls work from the most-loaded shard's
-//! queue. Routing still prefers the request's *affinity shard* (a
-//! deterministic hash of its prompt) while that shard's load is within
-//! `affinity_slack` of the fleet minimum — the prompt-affinity fast path
-//! is untouched; stealing only rebalances what affinity left queued.
+//! queue. Routing still prefers the request's *affinity shard* while
+//! that shard's load is within `affinity_slack` of the fleet minimum —
+//! stealing only rebalances what affinity left queued. The affinity key
+//! is the **prefix-affinity hash**: the rolling chain hash of the
+//! prompt's first page-sized block (the whole prompt when the engine
+//! does no token paging), so requests sharing a cacheable first block
+//! land on the shard whose prefix cache is warm for it. With
+//! [`GroupConfig::prefix_routing`] on, the router additionally keeps an
+//! advisory per-shard memory of prefix blocks it has routed and
+//! *discounts* a repeat request's page reservation by the pages its warm
+//! leading blocks already hold on that shard
+//! ([`PageGeometry::prefix_discount`]) — shared pages are charged once,
+//! so a prefix-heavy workload stops deferring on phantom demand. Warm
+//! leading blocks also *widen* the affinity window (each cached block is
+//! prefill work any other shard would redo), and a request placed on its
+//! prefix-affinity shard is marked **sticky**: thieves skip it, so
+//! stealing never separates a request from the cached blocks it shares.
 //! With content-deterministic engines (greedy decoding; see `SimEngine`)
 //! per-request output is independent of placement, so stealing cannot
 //! change completions — `rust/tests/serving.rs` pins that property.
@@ -83,6 +96,8 @@ use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, bail, Result};
 
+use crate::kvcache::prefix::{chain_hash, first_block_hash, ROOT_HASH};
+
 use super::memory::{MemoryPlan, PageGeometry};
 use super::metrics::{GroupMetrics, Metrics};
 use super::request::{Completion, EngineEvent, Priority, QueuedReq, Request};
@@ -104,12 +119,19 @@ pub struct GroupConfig {
     /// replies — how long a client should wait before resubmitting a
     /// request deferred for page-budget headroom.
     pub defer_retry_ms: u64,
+    /// Track routed prefix blocks per shard and discount repeat
+    /// requests' page reservations by their warm leading blocks
+    /// ([`PageGeometry::prefix_discount`]). Advisory — enable together
+    /// with the engines' prefix cache; an over-discount (the shard
+    /// evicted the blocks since) is absorbed by engine-side eviction /
+    /// preemption, exactly like any other plan optimism.
+    pub prefix_routing: bool,
 }
 
 impl Default for GroupConfig {
     fn default() -> Self {
         GroupConfig { shards: 1, affinity_slack: 1, queue_depth: 32,
-                      defer_retry_ms: 25 }
+                      defer_retry_ms: 25, prefix_routing: false }
     }
 }
 
@@ -257,7 +279,15 @@ impl ShardQueues {
         }
         let (v, _) = victim?;
         // Re-lock and re-check: another thief may have raced us here.
-        let item = self.queues[v].lock().unwrap().pop_front()?;
+        // Sticky requests (placed on their prefix-affinity shard) are
+        // skipped — stealing one would strand it on a shard without its
+        // warm KV blocks, re-prefilling exactly the work the cache
+        // saved. An all-sticky victim just yields nothing this round.
+        let item = {
+            let mut q = self.queues[v].lock().unwrap();
+            let pos = q.iter().position(|it| !it.sticky)?;
+            q.remove(pos)?
+        };
         self.load[v].fetch_sub(1, Ordering::SeqCst);
         self.load[me].fetch_add(1, Ordering::SeqCst);
         self.steals[me].fetch_add(1, Ordering::SeqCst);
@@ -339,6 +369,9 @@ pub struct EngineGroup<E: DecodeEngine> {
     inflight: usize,
     affinity_slack: usize,
     queue_depth: usize,
+    /// Advisory routed-prefix memory per shard (empty vec when
+    /// [`GroupConfig::prefix_routing`] is off).
+    routed_prefixes: Vec<PrefixTracker>,
     /// Requests `submit` rejected because every shard was at capacity.
     rejected: u64,
     /// Requests `submit` deferred because no shard's page budget fit.
@@ -355,15 +388,49 @@ pub struct EngineGroup<E: DecodeEngine> {
     _engine: PhantomData<fn() -> E>,
 }
 
-/// FNV-1a over the prompt tokens — the deterministic affinity key.
-fn affinity_hash(prompt: &[i32]) -> u64 {
-    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
-    for &t in prompt {
-        h ^= t as u32 as u64;
-        h = h.wrapping_mul(0x0000_0100_0000_01b3);
-    }
-    h
+/// The deterministic affinity key: the rolling chain hash of the
+/// prompt's first `block_tokens`-sized block — the same hash the prefix
+/// caches key their first-level nodes by, so requests that could share a
+/// cached first block share an affinity shard. `block_tokens == 0`
+/// (engine without token paging) hashes the whole prompt, preserving
+/// pure prompt affinity.
+fn affinity_hash(prompt: &[i32], block_tokens: usize) -> u64 {
+    first_block_hash(prompt, block_tokens)
 }
+
+/// Bounded advisory memory of prefix-block chain hashes the router has
+/// sent to one shard — FIFO-evicted at `cap` (no LRU bookkeeping: a
+/// false negative merely forgoes a discount, a false positive is
+/// absorbed downstream like any plan optimism).
+struct PrefixTracker {
+    cap: usize,
+    set: HashSet<u64>,
+    order: VecDeque<u64>,
+}
+
+impl PrefixTracker {
+    fn new(cap: usize) -> PrefixTracker {
+        PrefixTracker { cap, set: HashSet::new(), order: VecDeque::new() }
+    }
+
+    fn note(&mut self, h: u64) {
+        if self.set.insert(h) {
+            self.order.push_back(h);
+            while self.order.len() > self.cap {
+                if let Some(old) = self.order.pop_front() {
+                    self.set.remove(&old);
+                }
+            }
+        }
+    }
+
+    fn contains(&self, h: u64) -> bool {
+        self.set.contains(&h)
+    }
+}
+
+/// Per-shard cap on remembered routed prefix blocks.
+const ROUTED_PREFIX_CAP: usize = 4096;
 
 /// Submit a popped request, applying any cancel that raced the pop: the
 /// window between a queue-pop (normal admit or steal) and the engine
@@ -667,6 +734,12 @@ impl<E: DecodeEngine> EngineGroup<E> {
             inflight: 0,
             affinity_slack: cfg.affinity_slack,
             queue_depth: cfg.queue_depth,
+            routed_prefixes: if cfg.prefix_routing {
+                (0..cfg.shards).map(|_| PrefixTracker::new(ROUTED_PREFIX_CAP))
+                    .collect()
+            } else {
+                Vec::new()
+            },
             rejected: 0,
             deferred: 0,
             defer_retry_ms: cfg.defer_retry_ms,
@@ -728,6 +801,54 @@ impl<E: DecodeEngine> EngineGroup<E> {
         self.shards.iter().map(|s| s.max_prompt).min().unwrap_or(0)
     }
 
+    /// Leading full prompt blocks whose chain hashes this router already
+    /// sent to `shard` — 0 when prefix routing is off or the shard's
+    /// engine does no token paging. Advisory: says the shard *prefilled*
+    /// those blocks at some point, not that they are still cached.
+    fn warm_leading_blocks(&self, shard: usize, prompt: &[i32]) -> usize {
+        let Some(t) = self.routed_prefixes.get(shard) else { return 0 };
+        let bs = self.shards[shard].geometry.tokens_per_page;
+        if bs == 0 {
+            return 0;
+        }
+        let mut h = ROOT_HASH;
+        let mut lead = 0;
+        for blk in prompt.chunks_exact(bs) {
+            h = chain_hash(h, blk);
+            if !t.contains(h) {
+                break;
+            }
+            lead += 1;
+        }
+        lead
+    }
+
+    /// Pages to reserve for `req` on `shard`: the projected peak minus
+    /// the prefix discount for its warm leading blocks — shared pages
+    /// are charged once across the requests that share them.
+    fn reservation_pages(&self, shard: usize, req: &Request) -> usize {
+        let g = &self.shards[shard].geometry;
+        g.project(req.prompt.len(), req.max_new).saturating_sub(
+            g.prefix_discount(self.warm_leading_blocks(shard, &req.prompt)))
+    }
+
+    /// Remember the prefix-block chain of a prompt routed to `shard`.
+    fn note_routed_prefix(&mut self, shard: usize, prompt: &[i32]) {
+        if self.routed_prefixes.is_empty() {
+            return;
+        }
+        let bs = self.shards[shard].geometry.tokens_per_page;
+        if bs == 0 {
+            return;
+        }
+        let mut h = ROOT_HASH;
+        let t = &mut self.routed_prefixes[shard];
+        for blk in prompt.chunks_exact(bs) {
+            h = chain_hash(h, blk);
+            t.note(h);
+        }
+    }
+
     /// Pick the shard for a request: the prompt's affinity shard while
     /// its load is within `affinity_slack` of the minimum, below
     /// capacity, and its page plan fits the request's projected demand;
@@ -742,8 +863,7 @@ impl<E: DecodeEngine> EngineGroup<E> {
         let load = |i: usize| self.shared.load[i].load(Ordering::SeqCst);
         let cap = |i: usize| self.shards[i].batch + self.queue_depth;
         let fits = |i: usize| {
-            self.shared.plans[i].fits(
-                self.shards[i].geometry.project(req.prompt.len(), req.max_new))
+            self.shared.plans[i].fits(self.reservation_pages(i, req))
         };
         if n == 1 {
             if load(0) >= cap(0) {
@@ -751,7 +871,8 @@ impl<E: DecodeEngine> EngineGroup<E> {
             }
             return if fits(0) { Route::To(0) } else { Route::Defer };
         }
-        let aff = (affinity_hash(&req.prompt) % n as u64) as usize;
+        let block = self.shards[0].geometry.tokens_per_page;
+        let aff = (affinity_hash(&req.prompt, block) % n as u64) as usize;
         let mut min = usize::MAX;
         let mut aff_ok = false;
         let mut aff_load = usize::MAX;
@@ -777,7 +898,12 @@ impl<E: DecodeEngine> EngineGroup<E> {
                 best_load = l;
             }
         }
-        if aff_ok && aff_load <= min + self.affinity_slack {
+        // Warm leading blocks widen the affinity window: every block
+        // cached on the affinity shard is prefill work any other shard
+        // would redo, so queueing a little deeper there is still the
+        // cheaper placement. (Zero when prefix routing is off.)
+        let warm = self.warm_leading_blocks(aff, &req.prompt);
+        if aff_ok && aff_load <= min + self.affinity_slack + warm {
             return Route::To(aff);
         }
         match best {
@@ -823,18 +949,31 @@ impl<E: DecodeEngine> EngineGroup<E> {
                 return Ok(SubmitOutcome::Rejected);
             }
         };
-        // Reserve the projected peak page demand against the shard's
-        // plan. `route` checked `fits` advisorily; `try_reserve` is the
+        // Reserve the projected peak page demand — minus the prefix
+        // discount for warm leading blocks — against the shard's plan.
+        // `route` checked `fits` advisorily; `try_reserve` is the
         // authoritative (atomic) check, so a concurrent reservation can
-        // still turn the answer into a deferral here.
-        let need =
-            self.shards[shard].geometry.project(req.prompt.len(), req.max_new);
+        // still turn the answer into a deferral here. The discounted
+        // `need` is what the reservation map records, so transfers and
+        // the final release move exactly the pages that were charged.
+        let need = self.reservation_pages(shard, &req);
         if !self.shared.plans[shard].try_reserve(need) {
             self.deferred += 1;
             return Ok(SubmitOutcome::Deferred {
                 retry_after_ms: self.defer_retry_ms,
             });
         }
+        // A request placed on its prefix-affinity shard is pinned there:
+        // thieves must not separate it from the cached blocks it shares
+        // (or, for the chain's first request, is about to publish).
+        let sticky = !self.routed_prefixes.is_empty()
+            && self.shards[0].geometry.tokens_per_page > 0
+            && req.prompt.len() >= self.shards[0].geometry.tokens_per_page
+            && shard
+                == (affinity_hash(&req.prompt,
+                                  self.shards[0].geometry.tokens_per_page)
+                    % self.shards.len() as u64) as usize;
+        self.note_routed_prefix(shard, &req.prompt);
         let now = Instant::now();
         if self.first_submit.is_none() {
             self.first_submit = Some(now);
@@ -856,7 +995,7 @@ impl<E: DecodeEngine> EngineGroup<E> {
         self.shared.load[shard].fetch_add(1, Ordering::SeqCst);
         let qlen = {
             let mut q = self.shared.queues[shard].lock().unwrap();
-            q.push_back(QueuedReq::fresh(req, now));
+            q.push_back(QueuedReq { sticky, ..QueuedReq::fresh(req, now) });
             q.len()
         };
         self.shared.queue_peak[shard].fetch_max(qlen, Ordering::SeqCst);
@@ -1107,7 +1246,8 @@ mod tests {
     fn affinity_is_deterministic_and_respected_when_unloaded() {
         let g1 = group(4);
         let prompt = vec![5, 6, 7, 8];
-        let aff = (affinity_hash(&prompt) % 4) as usize;
+        // Default sim reports no token paging -> whole-prompt affinity.
+        let aff = (affinity_hash(&prompt, 0) % 4) as usize;
         let mut g = g1;
         let s = routed(g.submit(req(0, prompt, 4)).unwrap());
         assert_eq!(s, aff, "idle group must honour affinity");
@@ -1320,7 +1460,7 @@ mod tests {
             EngineGroup::with_config(cfg, |_| Ok(SimEngine::new(slow_sim())))
                 .unwrap();
         let prompt = vec![3, 14, 15, 92];
-        let aff = (affinity_hash(&prompt) % 2) as usize;
+        let aff = (affinity_hash(&prompt, 0) % 2) as usize;
         for i in 0..8u64 {
             let s = routed(g.submit(req(i, prompt.clone(), 12)).unwrap());
             assert_eq!(s, aff, "slack must pin routing to the affinity shard");
@@ -1374,5 +1514,132 @@ mod tests {
         let gm = g.shutdown().unwrap();
         assert_eq!(gm.deferred, 1);
         assert!(gm.report().contains("deferred=1"), "{}", gm.report());
+    }
+
+    #[test]
+    fn reservation_follows_steal_and_cancel_removal_released_once() {
+        // The reservation lifecycle driven directly (no threads, no
+        // timing): router reserve -> steal -> cancel-removal -> single
+        // release, with both plans' ledgers checked at every hop.
+        let sq = ShardQueues::new(2);
+        sq.plans[0].set_budget(10);
+        sq.plans[1].set_budget(10);
+        // Router path: reserve 4 pages on shard 0 and enqueue.
+        assert!(sq.plans[0].try_reserve(4));
+        sq.reservations.lock().unwrap().insert(7, (0, 4));
+        sq.load[0].fetch_add(1, Ordering::SeqCst);
+        sq.queues[0].lock().unwrap()
+            .push_back(QueuedReq::fresh(req(7, vec![1, 2, 3], 4),
+                                        Instant::now()));
+        // Shard 1 steals: the reservation must move with the request.
+        let stolen = sq.steal_for(1).expect("queued request is stealable");
+        assert_eq!(stolen.req.id, 7);
+        assert_eq!(sq.plans[0].planned(), 0, "victim got its headroom back");
+        assert_eq!(sq.plans[1].planned(), 4, "thief now carries the pages");
+        assert_eq!(sq.reservations.lock().unwrap().get(&7).unwrap().0, 1);
+        assert_eq!(sq.load[1].load(Ordering::SeqCst), 1);
+        // The thief requeues it (say its engine filled up), then a
+        // cancel-removal on shard 0 pulls it back: same transfer
+        // discipline as the steal, in the other direction.
+        sq.queues[1].lock().unwrap().push_back(stolen);
+        let removed = sq.remove_queued(0, 7).expect("cancel finds the request");
+        assert_eq!(removed.req.id, 7);
+        assert_eq!(sq.plans[1].planned(), 0);
+        assert_eq!(sq.plans[0].planned(), 4);
+        assert_eq!(sq.reservations.lock().unwrap().get(&7).unwrap().0, 0);
+        // Completion releases the pages exactly once...
+        sq.release_reservation(7);
+        assert_eq!(sq.plans[0].planned(), 0);
+        // ...and a duplicate release is a no-op (the entry is gone), so
+        // it cannot eat a later request's reservation.
+        assert!(sq.plans[0].try_reserve(2));
+        sq.release_reservation(7);
+        assert_eq!(sq.plans[0].planned(), 2,
+                   "double release must not underflow the ledger");
+    }
+
+    #[test]
+    fn prefix_affinity_routes_shared_first_blocks_together() {
+        // Token-paged engines: the affinity key is the first 8-token
+        // block, so prompts that diverge after block 0 still share an
+        // affinity shard — where that block's KV is warm.
+        let sim = SimConfig { batch: 4, pages_per_slot: 8, page_tokens: 8,
+                              ..Default::default() };
+        let cfg = GroupConfig { shards: 4, ..Default::default() };
+        let mut g: EngineGroup<SimEngine> =
+            EngineGroup::with_config(cfg, move |_| Ok(SimEngine::new(sim)))
+                .unwrap();
+        let head: Vec<i32> = (1..=8).collect();
+        let mut p1 = head.clone();
+        p1.extend([101, 102]);
+        let mut p2 = head.clone();
+        p2.extend([201, 202, 203]);
+        let aff = (affinity_hash(&head, 8) % 4) as usize;
+        let s1 = routed(g.submit(req(0, p1, 4)).unwrap());
+        let s2 = routed(g.submit(req(1, p2, 4)).unwrap());
+        assert_eq!(s1, aff, "idle group must honour prefix affinity");
+        assert_eq!(s2, aff, "shared first block -> same shard");
+        let comps = g.drain().unwrap();
+        assert_eq!(comps.len(), 2);
+        g.shutdown().unwrap();
+    }
+
+    #[test]
+    fn prefix_routing_discounts_repeat_reservations() {
+        // pool = 2*4 = 8 pages, share 4, queue_depth 2 -> budget 16.
+        // Each request projects (32 + 31 + 1)/8 = 8 pages; the 32-token
+        // prompt is 4 full blocks, so with prefix routing a repeat is
+        // charged 8 - 4 = 4. Reservations run 8 + 4 + 4 = 16: three
+        // admitted where the undiscounted plan stops at two.
+        let sim = SimConfig { batch: 2, pages_per_slot: 4, page_tokens: 8,
+                              eos_every: 0, step_delay_ms: 2,
+                              ..Default::default() };
+        let cfg = GroupConfig { shards: 1, queue_depth: 2,
+                                prefix_routing: true, ..Default::default() };
+        let mut g: EngineGroup<SimEngine> =
+            EngineGroup::with_config(cfg, move |_| Ok(SimEngine::new(sim)))
+                .unwrap();
+        let prompt: Vec<i32> = (1..=32).collect();
+        for i in 0..3u64 {
+            routed(g.submit(req(i, prompt.clone(), 31)).unwrap());
+        }
+        assert_eq!(g.deferred(), 0,
+                   "warm repeats must not defer on phantom page demand");
+        // A fourth repeat would only cost 4 more pages, but the budget
+        // is exactly full — the discounted ledger still gates.
+        assert_eq!(g.submit(req(3, prompt.clone(), 31)).unwrap(),
+                   SubmitOutcome::Deferred { retry_after_ms: 25 });
+        let comps = g.drain().unwrap();
+        assert_eq!(comps.len(), 3, "admitted repeats run to completion");
+        let gm = g.shutdown().unwrap();
+        assert_eq!(gm.deferred, 1);
+    }
+
+    #[test]
+    fn stealing_skips_sticky_requests() {
+        // Two sticky requests bracket a stealable one on shard 0: the
+        // thief must take the middle (non-sticky) request, and a second
+        // steal attempt — only sticky work left — must come up empty
+        // even though the victim's queue is the fleet's longest.
+        let sq = ShardQueues::new(2);
+        let now = Instant::now();
+        {
+            let mut q = sq.queues[0].lock().unwrap();
+            q.push_back(QueuedReq { sticky: true,
+                                    ..QueuedReq::fresh(req(0, vec![1], 4), now) });
+            q.push_back(QueuedReq::fresh(req(1, vec![2], 4), now));
+            q.push_back(QueuedReq { sticky: true,
+                                    ..QueuedReq::fresh(req(2, vec![3], 4), now) });
+        }
+        sq.load[0].fetch_add(3, Ordering::SeqCst);
+        let stolen = sq.steal_for(1).expect("non-sticky request is stealable");
+        assert_eq!(stolen.req.id, 1, "thief must skip the sticky head");
+        assert!(sq.steal_for(1).is_none(), "sticky work never migrates");
+        let ids: Vec<u64> = sq.queues[0].lock().unwrap()
+            .iter().map(|q| q.req.id).collect();
+        assert_eq!(ids, vec![0, 2], "sticky requests stay put, in order");
+        // Cancel-removal still reaches sticky requests: stickiness pins
+        // placement, not cancellation.
+        assert!(sq.remove_queued(0, 2).is_some());
     }
 }

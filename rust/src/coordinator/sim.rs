@@ -59,6 +59,7 @@ use super::metrics::Metrics;
 use super::request::{Completion, EngineEvent, Priority, QueuedReq, Request,
                      SeqStats, StopReason};
 use super::DecodeEngine;
+use crate::kvcache::prefix::{chain_hash, PrefixCache, ROOT_HASH};
 use crate::workload::Vocab;
 
 /// Domain-separation tag folded into every slot's initial state, so a
@@ -217,6 +218,21 @@ pub struct SimConfig {
     ///
     /// [`EngineConfig::prefill_chunk`]: super::engine::EngineConfig::prefill_chunk
     pub prefill_chunk: usize,
+    /// Content-addressed prefix caching (default off, preserving every
+    /// pre-existing trace bit-for-bit). Requires the token paging model
+    /// (`page_tokens > 0` — the cache's block IS the page unit: one
+    /// cached block ⇔ one simulated page); silently inert under the flat
+    /// model, which has no per-block pages to share. When on, admission
+    /// looks up the longest cached block-aligned prefix of the prompt,
+    /// restores the token-function fold state checkpointed at that
+    /// block boundary, and starts chunked prefill at the first uncached
+    /// block — generation stays a pure function of (seed, prompt), so
+    /// warm streams are bit-identical to cold ones while
+    /// `prefill_tokens` records the skipped work.
+    pub prefix_cache: bool,
+    /// Prefix-cache capacity in blocks (0 = unbounded); LRU leaves are
+    /// evicted beyond it.
+    pub prefix_cache_blocks: usize,
 }
 
 impl Default for SimConfig {
@@ -224,7 +240,8 @@ impl Default for SimConfig {
         SimConfig { batch: 4, max_seq: 512, seed: 0, min_gen: 4, eos_every: 23,
                     step_delay_ms: 0, pages_per_slot: 4, page_tokens: 0,
                     preempt_retries: 3, faults: FaultSchedule::none(),
-                    prefill_chunk: 128 }
+                    prefill_chunk: 128, prefix_cache: false,
+                    prefix_cache_blocks: 0 }
     }
 }
 
@@ -259,6 +276,14 @@ struct SimSlot {
     /// already seen, which reap/preempt must carry instead of the empty
     /// `generated`.
     pending_resume: Vec<i32>,
+    /// Chain hash of the deepest prefix block this slot has pinned
+    /// (reused at admission or published/pinned while folding);
+    /// [`ROOT_HASH`] while none. The slot's pins always form a
+    /// contiguous chain from the root — `prefix_blocks` long — which is
+    /// what makes unpin-on-any-release exact.
+    prefix_hash: u64,
+    /// Length of the pinned chain.
+    prefix_blocks: usize,
 }
 
 impl SimSlot {
@@ -293,6 +318,14 @@ pub struct SimEngine {
     stall_left: u64,
     /// Remaining [`Fault::FailAdmits`] admission failures.
     fail_admits_left: u32,
+    /// Content-addressed prefix index; payload = the token-function fold
+    /// state checkpointed at the block's boundary. Each resident block
+    /// owns one simulated page (`cache_pages`), transferred from the
+    /// publishing slot and returned to the pool only on eviction.
+    prefix: PrefixCache<u64>,
+    /// Pages owned by the prefix cache (`held_pages` counts live slots
+    /// only; free = capacity − held − cached).
+    cache_pages: usize,
 }
 
 impl SimEngine {
@@ -321,8 +354,51 @@ impl SimEngine {
             step_no: 0,
             stall_left: 0,
             fail_admits_left: 0,
+            prefix: PrefixCache::new(cfg.page_tokens.max(1),
+                                     cfg.prefix_cache_blocks),
+            cache_pages: 0,
             cfg,
         }
+    }
+
+    /// Prefix caching active? (Needs the token paging model — the flat
+    /// model has no per-block pages to share.)
+    fn prefix_on(&self) -> bool {
+        self.cfg.prefix_cache && self.cfg.page_tokens > 0
+    }
+
+    /// Blocks of `prompt` an admission could splice from the cache:
+    /// the longest cached chain, capped so at least one token is always
+    /// left to fold (a fully cached block-aligned prompt still takes one
+    /// chunk step to sample its first token — TTFT and the step
+    /// machinery stay uniform).
+    fn probe_reuse(&self, prompt: &[i32], resume_len: usize) -> usize {
+        if !self.prefix_on() {
+            return 0;
+        }
+        let target = prompt.len() + resume_len.saturating_sub(1);
+        let mut r = self.prefix.probe(prompt).blocks;
+        while r > 0 && r * self.cfg.page_tokens >= target {
+            r -= 1;
+        }
+        r
+    }
+
+    /// Blocks resident in the prefix cache (each owns one pool page).
+    pub fn prefix_cached_blocks(&self) -> usize {
+        self.cache_pages
+    }
+
+    /// Drop every unpinned cached block, returning its pages to the
+    /// pool; returns the count evicted (tests use this to prove the
+    /// gauge returns to baseline — cache pages are a cache, not a leak).
+    pub fn prefix_evict_all(&mut self) -> usize {
+        let mut freed = Vec::new();
+        let n = self.prefix.evict_all(&mut freed);
+        self.cache_pages -= n;
+        self.metrics.prefix_evictions += n as u64;
+        self.publish_gauge();
+        n
     }
 
     /// Free pages in the simulated KV pool (leak detection in tests).
@@ -336,8 +412,10 @@ impl SimEngine {
     }
 
     fn publish_gauge(&self) {
-        self.pool_free.store(self.capacity_pages.saturating_sub(self.held_pages),
-                             Ordering::SeqCst);
+        self.pool_free.store(
+            self.capacity_pages
+                .saturating_sub(self.held_pages + self.cache_pages),
+            Ordering::SeqCst);
     }
 
     /// Pages a sequence holds for its slot lifetime (projected peak).
@@ -443,7 +521,11 @@ impl SimEngine {
     }
 
     /// Can the next admission candidate actually be admitted right now
-    /// (free slot + pages fit)?
+    /// (free slot + pages fit)? Pages the prefix cache could either
+    /// contribute (reused blocks need no new page) or yield (unpinned
+    /// cached blocks are evictable on demand) count as available —
+    /// mirrored exactly by `admit_slots`, so readiness and admission
+    /// never disagree.
     fn admit_ready(&self) -> bool {
         match self.best_queued() {
             None => false,
@@ -451,8 +533,23 @@ impl SimEngine {
                 let q = &self.queue[qi];
                 let need = Self::seq_pages(&self.cfg, q.req.prompt.len(),
                                            q.req.max_new);
+                let reused = self.probe_reuse(&q.req.prompt, q.resume.len());
+                // Exact pool math: unpinned cached blocks are evictable
+                // (count as free) — except the candidate's own reuse
+                // chain, which must stay resident to be reused. This is
+                // the same arithmetic `admit_slots` realises by pinning
+                // the chain first and then evicting, so readiness and
+                // admission never disagree.
+                let mut keep = self.cache_pages
+                    - self.prefix.evictable().min(self.cache_pages);
+                if reused > 0 {
+                    let hit = self.prefix.probe(&q.req.prompt);
+                    let h = self.prefix.ancestor(hit.hash, hit.blocks - reused);
+                    keep += self.prefix.chain_unpinned(h, reused);
+                }
                 self.slots.iter().any(|s| s.is_none())
-                    && self.held_pages + need <= self.capacity_pages
+                    && self.held_pages + keep + (need - reused)
+                        <= self.capacity_pages
             }
         }
     }
@@ -469,27 +566,65 @@ impl SimEngine {
             };
             let need = Self::seq_pages(&cfg, self.queue[qi].req.prompt.len(),
                                        self.queue[qi].req.max_new);
-            if self.held_pages + need > self.capacity_pages {
+            let reused = self.probe_reuse(&self.queue[qi].req.prompt,
+                                          self.queue[qi].resume.len());
+            let private = need - reused;
+            // Pin the reuse chain BEFORE evicting for the shortfall —
+            // pinned blocks are invisible to eviction, so the chain this
+            // admission depends on can't be chosen as a victim while we
+            // make room for its private tail.
+            let (state, prefix_hash) = if reused > 0 {
+                let hit = self.prefix.lookup(&self.queue[qi].req.prompt);
+                debug_assert!(hit.blocks >= reused);
+                let h = self.prefix.ancestor(hit.hash, hit.blocks - reused);
+                self.prefix.pin(h, reused);
+                (*self.prefix.payload(h).expect("pinned prefix node"), h)
+            } else {
+                (cfg.seed ^ SIM_TAG, ROOT_HASH)
+            };
+            // Yield unpinned cached blocks back to the pool before
+            // giving up on the admission — the cache must never crowd
+            // out live traffic.
+            let used = self.held_pages + self.cache_pages;
+            if used + private > self.capacity_pages {
+                let shortfall = used + private - self.capacity_pages;
+                let mut freed = Vec::new();
+                let n = self.prefix.evict(shortfall, &mut freed);
+                self.cache_pages -= n;
+                self.metrics.prefix_evictions += n as u64;
+                self.publish_gauge();
+            }
+            if self.held_pages + self.cache_pages + private > self.capacity_pages {
+                if reused > 0 {
+                    self.prefix.unpin(prefix_hash, reused);
+                }
                 break;
             }
-            let QueuedReq { req, arrived, resume, first_token_at, retries } =
+            let QueuedReq { req, arrived, resume, first_token_at, retries, .. } =
                 self.queue.remove(qi).unwrap();
-            self.held_pages += need;
+            if reused > 0 {
+                self.metrics.prefix_hits += 1;
+                self.metrics.prefix_blocks_reused += reused as u64;
+            }
+            self.held_pages += private;
             self.publish_gauge();
-            self.metrics.pages_peak = self.metrics.pages_peak.max(self.held_pages);
+            self.metrics.pages_peak = self.metrics.pages_peak
+                .max(self.held_pages + self.cache_pages);
             let target = req.prompt.len() + resume.len().saturating_sub(1);
             self.slots[si] = Some(SimSlot {
-                state: cfg.seed ^ SIM_TAG,
+                state,
                 len: req.prompt.len(),
                 generated: Vec::new(),
                 stop: None,
                 first_token: first_token_at,
                 admitted: arrived,
-                pages: need,
+                pages: private,
                 retries,
-                prefill_pos: 0,
+                prefill_pos: reused * cfg.page_tokens,
                 prefill_target: target,
                 pending_resume: resume,
+                prefix_hash,
+                prefix_blocks: reused,
                 req,
             });
         }
@@ -521,7 +656,11 @@ impl SimEngine {
             cfg.prefill_chunk
         };
         let mut chunk_tokens = 0u64;
-        for slot in self.slots.iter_mut().flatten() {
+        let prefix_on = self.prefix_on();
+        let bs = cfg.page_tokens;
+        let SimEngine { slots, prefix, metrics, held_pages, cache_pages, .. } =
+            self;
+        for slot in slots.iter_mut().flatten() {
             if budget == 0 {
                 break; // chunk spent; remaining slots resume next step
             }
@@ -531,8 +670,41 @@ impl SimEngine {
             let pos = slot.prefill_pos;
             let end = slot.prefill_target.min(pos + budget);
             let plen = slot.req.prompt.len();
-            for &t in &slot.req.prompt[pos.min(plen)..end.min(plen)] {
-                slot.state = mix(slot.state ^ t as u64);
+            if prefix_on {
+                // Fold token by token, checkpointing the state at every
+                // full-prompt-block boundary: publishing transfers the
+                // block's page from the slot to the cache (first
+                // publisher wins; a block someone else published first
+                // is pinned instead and the slot keeps its private
+                // page). Either way the slot's pins stay a contiguous
+                // chain from the root.
+                for i in pos.min(plen)..end.min(plen) {
+                    slot.state = mix(slot.state ^ slot.req.prompt[i] as u64);
+                    let done = i + 1;
+                    if done % bs == 0 && done / bs > slot.prefix_blocks {
+                        let next = chain_hash(slot.prefix_hash,
+                                              &slot.req.prompt[done - bs..done]);
+                        let mut freed = Vec::new();
+                        if prefix.insert(slot.prefix_hash, next, slot.state,
+                                         &mut freed) {
+                            debug_assert!(slot.pages >= 2,
+                                          "publish would strand the slot");
+                            slot.pages -= 1;
+                            *held_pages -= 1;
+                            *cache_pages += 1;
+                        } else {
+                            prefix.pin(next, 1);
+                        }
+                        *cache_pages -= freed.len();
+                        metrics.prefix_evictions += freed.len() as u64;
+                        slot.prefix_hash = next;
+                        slot.prefix_blocks += 1;
+                    }
+                }
+            } else {
+                for &t in &slot.req.prompt[pos.min(plen)..end.min(plen)] {
+                    slot.state = mix(slot.state ^ t as u64);
+                }
             }
             budget -= end - pos;
             chunk_tokens += (end - pos) as u64;
@@ -561,6 +733,11 @@ impl SimEngine {
             self.metrics.prefill_chunks += 1;
             self.metrics.prefill_tokens += chunk_tokens;
             self.metrics.prefill_s.push(t0.elapsed().as_secs_f64());
+        }
+        if prefix_on {
+            // Page ownership may have moved slot→cache (sum-invariant)
+            // and cap evictions may have freed pages.
+            self.publish_gauge();
         }
     }
 
@@ -639,6 +816,11 @@ impl SimEngine {
         }
         let slot = self.slots[vi].take().unwrap();
         self.held_pages -= slot.pages;
+        if slot.prefix_blocks > 0 {
+            // The victim's prefix pins drop; the cached blocks stay warm
+            // (its re-admission will reuse them instead of re-prefilling).
+            self.prefix.unpin(slot.prefix_hash, slot.prefix_blocks);
+        }
         self.publish_gauge();
         // What the client has actually seen: a half-prefilled victim has
         // emitted nothing this admission, so its stream state is the
@@ -671,14 +853,27 @@ impl SimEngine {
                 resume: emitted,
                 first_token_at: slot.first_token,
                 retries: slot.retries + 1,
+                sticky: false,
             });
         }
         true
     }
 
-    /// After a pool shrink: preempt until held pages fit capacity again.
+    /// After a pool shrink: fit `held + cached` back under capacity —
+    /// unpinned prefix blocks are yielded first (evicting a cache entry
+    /// is free; preempting a live sequence costs a re-prefill), live
+    /// slots are preempted only once the cache has nothing left to give.
     fn shed_deficit(&mut self, sink: &mut dyn FnMut(EngineEvent)) {
-        while self.held_pages > self.capacity_pages {
+        while self.held_pages + self.cache_pages > self.capacity_pages {
+            if self.cache_pages > 0 {
+                let mut freed = Vec::new();
+                if self.prefix.evict(1, &mut freed) == 1 {
+                    self.cache_pages -= 1;
+                    self.metrics.prefix_evictions += 1;
+                    self.publish_gauge();
+                    continue;
+                }
+            }
             if !self.preempt_one(sink, None) {
                 break;
             }
@@ -735,14 +930,21 @@ impl SimEngine {
                                            c.stop);
             sink(EngineEvent::Finished(c));
         }
-        for entry in self.slots.iter_mut() {
-            let finished = entry
+        for i in 0..self.slots.len() {
+            let finished = self.slots[i]
                 .as_ref()
                 .map(|s| s.stop.is_some())
                 .unwrap_or(false);
             if finished {
-                let slot = entry.take().unwrap();
+                let slot = self.slots[i].take().unwrap();
                 self.held_pages -= slot.pages;
+                if slot.prefix_blocks > 0 {
+                    // Every terminal path — EOS, max-new, cancel,
+                    // deadline, exhaustion — drops the slot's prefix
+                    // pins here, so a cancel storm can never leak a
+                    // refcount; the blocks themselves stay cached.
+                    self.prefix.unpin(slot.prefix_hash, slot.prefix_blocks);
+                }
                 self.publish_gauge();
                 let now = Instant::now();
                 let ttft = slot
@@ -1472,6 +1674,7 @@ mod tests {
             resume: vec![9; resume_len],
             first_token_at: None,
             retries: 1,
+            sticky: false,
         };
         // Boundary pass: eff = 5 + (9 - 1) = 13 and 13 + 2 < 16.
         let mut eng = SimEngine::new(cfg);
@@ -1532,5 +1735,186 @@ mod tests {
         assert_eq!(g.pool_pages, 8);
         assert_eq!(g.tokens_per_page, 8);
         assert_eq!(g.project(8, 55), 8, "64 tokens over 8-token pages");
+    }
+
+    /// A prefix-cache config with deterministic step counts (EOS off).
+    fn prefix_cfg() -> SimConfig {
+        SimConfig {
+            batch: 2,
+            page_tokens: 4,
+            pages_per_slot: 8, // capacity = 16 pages
+            prefix_cache: true,
+            prefill_chunk: 8,
+            eos_every: 0,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn prefix_reuse_skips_prefill_work_and_streams_bit_identical() {
+        let cfg = prefix_cfg();
+        let prompt: Vec<i32> = (0..17).map(|i| 100 + i).collect(); // 4 blocks + 1
+        let mut eng = SimEngine::new(cfg);
+        DecodeEngine::submit(&mut eng, req(0, prompt.clone(), 8));
+        let cold = eng.run_to_completion().unwrap();
+        let cold_prefill = eng.metrics.prefill_tokens;
+        assert_eq!(cold_prefill, 17);
+        assert_eq!(eng.prefix_cached_blocks(), 4,
+                   "every full prompt block published");
+        assert_eq!(eng.metrics.prefix_hits, 0);
+        // Warm run: same prompt, different request.
+        DecodeEngine::submit(&mut eng, req(1, prompt.clone(), 8));
+        let warm = eng.run_to_completion().unwrap();
+        assert_eq!(warm[0].generated, cold[0].generated,
+                   "warm stream bit-identical to cold");
+        let (want, _) = SimEngine::expected_generation(&cfg, &prompt, 8);
+        assert_eq!(warm[0].generated, want);
+        assert_eq!(eng.metrics.prefix_hits, 1);
+        assert_eq!(eng.metrics.prefix_blocks_reused, 4);
+        assert_eq!(eng.metrics.prefill_tokens, cold_prefill + 1,
+                   "warm prefill folds only the 1-token tail");
+        // Pool balance: cached blocks are accounted, not leaked…
+        assert_eq!(eng.pool_free() + eng.prefix_cached_blocks(),
+                   eng.pool_capacity());
+        // …and fully reclaimable once evicted.
+        assert_eq!(eng.prefix_evict_all(), 4);
+        assert_eq!(eng.pool_free(), eng.pool_capacity());
+        assert_eq!(eng.metrics.prefix_evictions, 4);
+    }
+
+    #[test]
+    fn divergent_prompt_reuses_only_the_shared_blocks() {
+        let cfg = prefix_cfg();
+        let a: Vec<i32> = (0..12).map(|i| 100 + i).collect(); // 3 aligned blocks
+        let mut b = a.clone();
+        b[9] += 1; // diverges inside block 2
+        let mut eng = SimEngine::new(cfg);
+        DecodeEngine::submit(&mut eng, req(0, a.clone(), 6));
+        eng.run_to_completion().unwrap();
+        assert_eq!(eng.prefix_cached_blocks(), 3);
+        DecodeEngine::submit(&mut eng, req(1, b.clone(), 6));
+        let warm = eng.run_to_completion().unwrap();
+        assert_eq!(eng.metrics.prefix_blocks_reused, 2,
+                   "blocks 0–1 shared; block 2 diverges");
+        // The divergent block is freshly folded and published under its
+        // own content hash — both variants now coexist in the cache.
+        assert_eq!(eng.prefix_cached_blocks(), 4);
+        let (want, _) = SimEngine::expected_generation(&cfg, &b, 6);
+        assert_eq!(warm[0].generated, want, "divergence is never papered over");
+    }
+
+    #[test]
+    fn fully_aligned_prompt_still_folds_its_last_block() {
+        // A prompt whose every block is cached must still fold at least
+        // one token so admission samples a first token through the
+        // normal chunk machinery (and TTFT stays well-defined).
+        let cfg = prefix_cfg();
+        let prompt: Vec<i32> = (0..12).map(|i| 7 * i).collect(); // aligned
+        let mut eng = SimEngine::new(cfg);
+        DecodeEngine::submit(&mut eng, req(0, prompt.clone(), 6));
+        let cold = eng.run_to_completion().unwrap();
+        DecodeEngine::submit(&mut eng, req(1, prompt.clone(), 6));
+        let warm = eng.run_to_completion().unwrap();
+        assert_eq!(eng.metrics.prefix_blocks_reused, 2,
+                   "reuse is capped one block short of the full prompt");
+        assert_eq!(warm[0].generated, cold[0].generated);
+        assert_eq!(eng.pool_free() + eng.prefix_cached_blocks(),
+                   eng.pool_capacity());
+    }
+
+    #[test]
+    fn cancel_mid_prefill_with_reuse_unpins_without_leaking() {
+        // A warm admission pins its reuse chain; cancelling the request
+        // while it is still half-prefilled must drop those pins through
+        // the same reap path as a served request — the cached blocks
+        // stay resident (and evictable), and the page gauge balances.
+        let cfg = SimConfig { prefill_chunk: 2, ..prefix_cfg() };
+        // 5 full blocks + a 3-token tail: the warm admission reuses all
+        // 5 blocks and its remaining 3-token fold spans two 2-token
+        // chunks, so after one step the slot is genuinely mid-prefill.
+        let prompt: Vec<i32> = (0..23).map(|i| 100 + i).collect();
+        let mut eng = SimEngine::new(cfg);
+        DecodeEngine::submit(&mut eng, req(0, prompt.clone(), 8));
+        eng.run_to_completion().unwrap();
+        assert_eq!(eng.prefix_cached_blocks(), 5);
+        DecodeEngine::submit(&mut eng, req(1, prompt.clone(), 8));
+        DecodeEngine::step(&mut eng).unwrap(); // admit + first 2-token chunk
+        assert!(DecodeEngine::cancel(&mut eng, 1));
+        let comps = eng.run_to_completion().unwrap();
+        assert_eq!(comps.len(), 1);
+        assert_eq!(comps[0].stop, StopReason::Cancelled);
+        assert!(comps[0].generated.is_empty(), "cancelled before first token");
+        assert_eq!(eng.pool_free() + eng.prefix_cached_blocks(),
+                   eng.pool_capacity(), "no page leak after cancel");
+        // All pins dropped: the whole cache drains on demand.
+        assert_eq!(eng.prefix_evict_all(), 5);
+        assert_eq!(eng.pool_free(), eng.pool_capacity());
+    }
+
+    #[test]
+    fn pool_shrink_evicts_cached_blocks_before_preempting() {
+        // Cache pages are the cheapest thing to give back: a shrink that
+        // the evictable cache can absorb must not preempt live slots.
+        let cfg = SimConfig {
+            faults: FaultSchedule::none().at(15, Fault::ShrinkPool { pages: 5 }),
+            ..prefix_cfg()
+        };
+        let warmup: Vec<i32> = (0..17).map(|i| 100 + i).collect();
+        let mut eng = SimEngine::new(cfg);
+        DecodeEngine::submit(&mut eng, req(0, warmup.clone(), 8));
+        eng.run_to_completion().unwrap();
+        assert_eq!(eng.prefix_cached_blocks(), 4);
+        // An unrelated request is mid-decode when the pool shrinks to 5:
+        // held(3) + cached(4) exceeds it by 2, shed by evicting 2 blocks.
+        let small: Vec<i32> = vec![9, 8, 7];
+        DecodeEngine::submit(&mut eng, req(1, small.clone(), 8));
+        let comps = eng.run_to_completion().unwrap();
+        let (want, _) = SimEngine::expected_generation(&cfg, &small, 8);
+        assert_eq!(comps[0].generated, want, "shrink never corrupts streams");
+        assert_eq!(eng.metrics.prefix_evictions, 2,
+                   "deficit shed from the cache");
+        assert_eq!(eng.metrics.requests_preempted, 0,
+                   "no live slot paid for what the cache could yield");
+        assert_eq!(eng.pool_free() + eng.prefix_cached_blocks(),
+                   eng.pool_capacity());
+    }
+
+    #[test]
+    fn preempting_a_warm_slot_never_evicts_its_pinned_chain_or_leaks_pins() {
+        // A shrink the cache cannot absorb (every cached block is pinned
+        // by the live warm slot) must preempt the slot — not evict pages
+        // it still maps — and the preempt must drop the pins so the
+        // whole cache is reclaimable afterwards.
+        let cfg = SimConfig {
+            batch: 1, // capacity = 8 pages
+            faults: FaultSchedule::none().at(14, Fault::ShrinkPool { pages: 5 }),
+            ..prefix_cfg()
+        };
+        let prompt: Vec<i32> = (0..17).map(|i| 100 + i).collect();
+        let mut eng = SimEngine::new(cfg);
+        DecodeEngine::submit(&mut eng, req(0, prompt.clone(), 8));
+        let cold = eng.run_to_completion().unwrap();
+        assert_eq!(eng.prefix_cached_blocks(), 4);
+        // Warm re-run holds 3 private + 4 pinned cache pages when the
+        // pool shrinks to 5 at step 14 (mid-decode, 3 tokens out). The
+        // cache yields nothing (all pinned), so the slot is preempted;
+        // the shrunken pool can never re-fit its 7-page projection, so
+        // it terminates ResourceExhausted carrying a bit-exact partial
+        // stream.
+        DecodeEngine::submit(&mut eng, req(1, prompt.clone(), 8));
+        let comps = eng.run_to_completion().unwrap();
+        assert_eq!(comps.len(), 1);
+        assert_eq!(comps[0].stop, StopReason::ResourceExhausted);
+        assert_eq!(comps[0].generated, cold[0].generated[..3],
+                   "partial stream is a bit-exact prefix");
+        assert_eq!(eng.metrics.requests_preempted, 1);
+        assert_eq!(eng.metrics.prefix_evictions, 0,
+                   "pinned blocks are never evicted out from under a slot");
+        assert_eq!(eng.pool_free() + eng.prefix_cached_blocks(),
+                   eng.pool_capacity());
+        // Pins fully dropped on the preempt/exhaust path: every cached
+        // block is evictable again.
+        assert_eq!(eng.prefix_evict_all(), 4);
+        assert_eq!(eng.pool_free(), eng.pool_capacity());
     }
 }

@@ -166,6 +166,40 @@ impl KcompCache {
         &self.entries[(h * self.cap + j) * self.dg..][..self.dg]
     }
 
+    /// Copy completed entry `j` of every head into `out` (`[hkv, dg]`
+    /// contiguous) — the prefix cache's export format for one gate
+    /// block: one cached KV page ⇔ one kcomp entry row per head.
+    pub fn export_block(&self, j: usize, out: &mut [f32]) {
+        debug_assert!(j < self.n_complete);
+        debug_assert_eq!(out.len(), self.hkv * self.dg);
+        for h in 0..self.hkv {
+            let src = (h * self.cap + j) * self.dg;
+            out[h * self.dg..(h + 1) * self.dg]
+                .copy_from_slice(&self.entries[src..src + self.dg]);
+        }
+    }
+
+    /// Append one completed block's entry (`[hkv, dg]`, as produced by
+    /// [`export_block`](KcompCache::export_block)) **without recomputing
+    /// it** — a prefix-cache hit splices the shared prefix's gate blocks
+    /// in and prefill resumes at the divergence block. Only legal before
+    /// any partial block accumulates; advances the sequence length by one
+    /// full block so the partial-block protocol stays consistent.
+    pub fn adopt_block(&mut self, entry: &[f32]) {
+        assert_eq!(self.pending_tokens, 0,
+                   "adopt_block after partial tokens would reorder blocks");
+        assert!(self.n_complete < self.cap, "kcomp entry overflow");
+        debug_assert_eq!(entry.len(), self.hkv * self.dg);
+        let j = self.n_complete;
+        for h in 0..self.hkv {
+            let dst = (h * self.cap + j) * self.dg;
+            self.entries[dst..dst + self.dg]
+                .copy_from_slice(&entry[h * self.dg..(h + 1) * self.dg]);
+        }
+        self.n_complete += 1;
+        self.len += self.block_size;
+    }
+
     /// Gate scores of `q_gate` ([hkv, dg]) against all complete entries.
     /// Returns per-head rows [hkv][n_complete].
     pub fn score(&self, cfg: &ModelConfig, q_gate: &[f32]) -> Vec<Vec<f32>> {
@@ -320,6 +354,42 @@ mod tests {
             let expect = kc.score(&c, &qg);
             assert_eq!(buf, expect, "t={t}");
         }
+    }
+
+    #[test]
+    fn adopted_blocks_are_bit_identical_to_computed_ones() {
+        let c = cfg();
+        let mut rng = Rng::new(11);
+        let w = wk(&c, &mut rng);
+        // Cold cache computes 2 blocks the normal way.
+        let mut cold = KcompCache::new(&c, 4);
+        let tokens: Vec<Vec<f32>> =
+            (0..8).map(|_| (0..8).map(|_| rng.normal() as f32).collect()).collect();
+        for k in &tokens {
+            cold.append(&c, &w, k);
+        }
+        assert_eq!(cold.n_complete(), 2);
+        // Warm cache adopts block 0's exported entry, then computes
+        // block 1 itself — every entry must be bit-identical.
+        let mut row = vec![0.0; c.n_kv_heads * c.d_gate];
+        cold.export_block(0, &mut row);
+        let mut warm = KcompCache::new(&c, 4);
+        warm.adopt_block(&row);
+        assert_eq!(warm.len(), 4);
+        assert_eq!(warm.n_complete(), 1);
+        assert!(!warm.has_partial());
+        for k in &tokens[4..] {
+            warm.append(&c, &w, k);
+        }
+        assert_eq!(warm.n_complete(), 2);
+        for h in 0..c.n_kv_heads {
+            for j in 0..2 {
+                assert_eq!(cold.entry(h, j), warm.entry(h, j), "h={h} j={j}");
+            }
+        }
+        // Scores over adopted entries match the cold cache's exactly.
+        let qg: Vec<f32> = (0..8).map(|_| rng.normal() as f32).collect();
+        assert_eq!(cold.score(&c, &qg), warm.score(&c, &qg));
     }
 
     #[test]

@@ -4,6 +4,8 @@
 pub mod kcomp;
 pub mod offload;
 pub mod paged;
+pub mod prefix;
 
 pub use kcomp::KcompCache;
 pub use paged::{PageId, PagedKvPool, SeqKv};
+pub use prefix::{chain_hash, first_block_hash, PrefixCache, PrefixHit, ROOT_HASH};

@@ -17,10 +17,19 @@ struct Page {
     v: Vec<f32>,
 }
 
-/// Pool of pages with a free list.
+/// Pool of pages with a free list and per-page refcounts. A page starts
+/// at one reference on `allocate`; the prefix cache shares it across
+/// sequences via `retain`, and `release` only returns it to the free
+/// list when the last reference drops — sharers never copy (prefix
+/// pages are immutable by construction, see `kvcache::prefix`).
 pub struct PagedKvPool {
     pages: Vec<Page>,
     free: Vec<PageId>,
+    refs: Vec<u32>,
+    /// Debug-only O(1) double-free guard (replaces an O(pool) scan of
+    /// the free list that made debug-mode chaos runs quadratic).
+    #[cfg(debug_assertions)]
+    free_map: Vec<bool>,
     pub hkv: usize,
     pub dh: usize,
     pub block_size: usize,
@@ -33,7 +42,16 @@ impl PagedKvPool {
             .map(|_| Page { k: vec![0.0; elems], v: vec![0.0; elems] })
             .collect();
         let free = (0..capacity as u32).rev().collect();
-        PagedKvPool { pages, free, hkv, dh, block_size }
+        PagedKvPool {
+            pages,
+            free,
+            refs: vec![0; capacity],
+            #[cfg(debug_assertions)]
+            free_map: vec![true; capacity],
+            hkv,
+            dh,
+            block_size,
+        }
     }
 
     pub fn capacity(&self) -> usize {
@@ -46,14 +64,45 @@ impl PagedKvPool {
 
     pub fn allocate(&mut self) -> Result<PageId> {
         match self.free.pop() {
-            Some(id) => Ok(id),
+            Some(id) => {
+                self.refs[id as usize] = 1;
+                #[cfg(debug_assertions)]
+                {
+                    self.free_map[id as usize] = false;
+                }
+                Ok(id)
+            }
             None => bail!("KV page pool exhausted ({} pages)", self.pages.len()),
         }
     }
 
+    /// Add a reference to an allocated page (prefix-cache sharing).
+    pub fn retain(&mut self, id: PageId) {
+        debug_assert!(self.refs[id as usize] > 0, "retain of free page {id}");
+        self.refs[id as usize] += 1;
+    }
+
+    /// References currently held on `id` (0 = free).
+    pub fn ref_count(&self, id: PageId) -> u32 {
+        self.refs[id as usize]
+    }
+
+    /// Drop one reference; the page returns to the free list only when
+    /// the last holder releases it.
     pub fn release(&mut self, id: PageId) {
-        debug_assert!(!self.free.contains(&id), "double free of page {id}");
-        self.free.push(id);
+        #[cfg(debug_assertions)]
+        {
+            debug_assert!(!self.free_map[id as usize], "double free of page {id}");
+        }
+        debug_assert!(self.refs[id as usize] > 0, "release of free page {id}");
+        self.refs[id as usize] -= 1;
+        if self.refs[id as usize] == 0 {
+            #[cfg(debug_assertions)]
+            {
+                self.free_map[id as usize] = true;
+            }
+            self.free.push(id);
+        }
     }
 
     /// Write one token's K/V rows (`k`/`v`: [hkv, dh]) at `slot` within a
@@ -201,6 +250,56 @@ mod tests {
         // k_row agrees with gather.
         assert_eq!(p.k_row(s.pages[1], 1, 0), &ko[0..4]);
         s.release(&mut p);
+    }
+
+    #[test]
+    fn retained_page_survives_until_last_release() {
+        let mut p = pool();
+        let id = p.allocate().unwrap();
+        assert_eq!(p.ref_count(id), 1);
+        p.retain(id); // a second sequence maps the same prefix page
+        p.retain(id);
+        assert_eq!(p.ref_count(id), 3);
+        p.release(id);
+        p.release(id);
+        assert_eq!(p.free_pages(), 7, "still held by one sharer");
+        p.release(id);
+        assert_eq!(p.ref_count(id), 0);
+        assert_eq!(p.free_pages(), 8);
+        // The page can be handed out again after the last release.
+        let again = p.allocate().unwrap();
+        assert_eq!(again, id);
+        p.release(again);
+    }
+
+    #[test]
+    fn seq_release_drops_one_reference_per_page() {
+        // Two SeqKv views sharing a prefix page: releasing one sequence
+        // must not free the page under the other.
+        let mut p = pool();
+        let k = vec![1.0; 8];
+        let mut a = SeqKv::new();
+        for _ in 0..4 {
+            a.append(&mut p, &k, &k).unwrap();
+        }
+        let shared = a.pages[0];
+        p.retain(shared);
+        let mut b = SeqKv { pages: vec![shared], len: 4 };
+        a.release(&mut p);
+        assert_eq!(p.ref_count(shared), 1);
+        assert_eq!(p.free_pages(), 7);
+        b.release(&mut p);
+        assert_eq!(p.free_pages(), 8);
+    }
+
+    #[cfg(debug_assertions)]
+    #[test]
+    #[should_panic(expected = "double free")]
+    fn double_free_is_caught_in_debug() {
+        let mut p = pool();
+        let id = p.allocate().unwrap();
+        p.release(id);
+        p.release(id);
     }
 
     #[test]

@@ -1,0 +1,479 @@
+//! Content-addressed prefix cache over block-granular prompt hashes.
+//!
+//! Real fleets serve millions of requests sharing system prompts and
+//! few-shot prefixes; recomputing their KV (and the SeerAttention-R
+//! gate's compressed-K blocks) per request is pure waste. The paper's
+//! sparse block sizes make prefixes naturally content-addressable at
+//! block granularity: one cached block ⇔ one KV page per layer ⇔ one
+//! kcomp gate entry per head per layer.
+//!
+//! [`PrefixCache`] is a radix index keyed by **rolling block hashes**:
+//! the chain hash of a `k`-block prefix is `chain_hash` folded over
+//! block `k`'s tokens seeded with the `(k-1)`-block chain hash, so the
+//! key *is* the content address of the whole prefix and the radix trie
+//! is implicit — every node stores its parent's hash, and longest-prefix
+//! lookup walks the chain forward until a block is missing or the prompt
+//! runs out of full blocks.
+//!
+//! Sharing is **immutable by construction**: only *full* prompt blocks
+//! are ever published, and sequences append strictly beyond their prompt
+//! (the divergence block and everything after it live in freshly
+//! allocated private pages). That is the copy-on-write discipline at the
+//! divergence point — shared pages are never written, so no copy is ever
+//! needed.
+//!
+//! Lifetime rules, which the chaos suite leans on:
+//! - a node used by a live sequence is **pinned** (refcounted) and can
+//!   never be evicted, no matter the pressure;
+//! - eviction is **leaf-first LRU** over unpinned nodes (a mid-chain
+//!   node is only evictable once every longer chain through it is gone),
+//!   so a lookup can always trust a present chain to be contiguous;
+//! - the cache yields blocks back under memory pressure *before* the
+//!   engine defers admissions or preempts live sequences.
+//!
+//! The payload is generic: the deterministic `SimEngine` caches its
+//! folded token-function state per block boundary (plus one simulated
+//! page), the real engine caches per-layer `PageId`s together with the
+//! head-major kcomp gate rows and Quest min/max metadata for the block.
+
+use std::collections::HashMap;
+
+/// Chain-hash seed for the empty prefix (the radix root).
+pub const ROOT_HASH: u64 = 0xC0FF_EE00_5EED_0001;
+
+/// Roll `parent` (the chain hash of the preceding blocks) over one
+/// block's tokens. FNV-1a over the token bytes, then a SplitMix64-style
+/// finalizer so single-token differences diffuse through all 64 bits
+/// (the low bits feed shard routing via `% shards`).
+pub fn chain_hash(parent: u64, tokens: &[i32]) -> u64 {
+    let mut h = parent ^ 0xCBF2_9CE4_8422_2325;
+    for &t in tokens {
+        for b in (t as u32).to_le_bytes() {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x1000_0000_01B3);
+        }
+    }
+    h ^= h >> 30;
+    h = h.wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    h ^= h >> 27;
+    h = h.wrapping_mul(0x94D0_49BB_1331_11EB);
+    h ^ (h >> 31)
+}
+
+/// Chain hash of the first full block of `prompt` (the whole prompt if
+/// shorter than one block) — the prefix-affinity routing key: requests
+/// sharing a first block land on the shard where that prefix is warm.
+pub fn first_block_hash(prompt: &[i32], block_size: usize) -> u64 {
+    let take = if block_size == 0 { prompt.len() } else { prompt.len().min(block_size) };
+    chain_hash(ROOT_HASH, &prompt[..take])
+}
+
+struct Node<P> {
+    parent: u64,
+    payload: P,
+    /// Live sequences whose admitted prefix includes this block.
+    pinned: u32,
+    /// Cached blocks whose parent is this node (leaf ⇔ 0).
+    children: u32,
+    last_use: u64,
+}
+
+/// A longest-cached-prefix lookup result.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct PrefixHit {
+    /// Full blocks of the prompt found cached (0 = miss).
+    pub blocks: usize,
+    /// Chain hash of the deepest cached block ([`ROOT_HASH`] on miss).
+    pub hash: u64,
+}
+
+/// Content-addressed radix index of cached prefix blocks. See the
+/// module docs for the sharing and eviction rules.
+pub struct PrefixCache<P> {
+    block_size: usize,
+    /// Max cached blocks (0 = unbounded); LRU-evicted beyond.
+    cap_blocks: usize,
+    nodes: HashMap<u64, Node<P>>,
+    tick: u64,
+}
+
+impl<P> PrefixCache<P> {
+    pub fn new(block_size: usize, cap_blocks: usize) -> PrefixCache<P> {
+        assert!(block_size > 0, "prefix cache needs a block size");
+        PrefixCache { block_size, cap_blocks, nodes: HashMap::new(), tick: 0 }
+    }
+
+    pub fn block_size(&self) -> usize {
+        self.block_size
+    }
+
+    /// Cached blocks currently resident.
+    pub fn len(&self) -> usize {
+        self.nodes.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.nodes.is_empty()
+    }
+
+    fn touch(&mut self, hash: u64) {
+        self.tick += 1;
+        let tick = self.tick;
+        if let Some(n) = self.nodes.get_mut(&hash) {
+            n.last_use = tick;
+        }
+    }
+
+    /// Longest cached block-aligned prefix of `prompt`. Refreshes the
+    /// LRU clock of every node on the hit chain; does NOT pin.
+    pub fn lookup(&mut self, prompt: &[i32]) -> PrefixHit {
+        let full = prompt.len() / self.block_size;
+        let mut hash = ROOT_HASH;
+        let mut blocks = 0;
+        for b in 0..full {
+            let next =
+                chain_hash(hash, &prompt[b * self.block_size..(b + 1) * self.block_size]);
+            if !self.nodes.contains_key(&next) {
+                break;
+            }
+            self.touch(next);
+            hash = next;
+            blocks = b + 1;
+        }
+        PrefixHit { blocks, hash }
+    }
+
+    /// Non-mutating [`lookup`](PrefixCache::lookup): same longest-prefix
+    /// walk without refreshing the LRU clock — for admission-readiness
+    /// probes that must take `&self`.
+    pub fn probe(&self, prompt: &[i32]) -> PrefixHit {
+        let full = prompt.len() / self.block_size;
+        let mut hash = ROOT_HASH;
+        let mut blocks = 0;
+        for b in 0..full {
+            let next =
+                chain_hash(hash, &prompt[b * self.block_size..(b + 1) * self.block_size]);
+            if !self.nodes.contains_key(&next) {
+                break;
+            }
+            hash = next;
+            blocks = b + 1;
+        }
+        PrefixHit { blocks, hash }
+    }
+
+    /// Chain hash `up` blocks above `hash` ([`ROOT_HASH`] at the top).
+    /// Used to trim a lookup hit to a shorter reuse depth.
+    pub fn ancestor(&self, hash: u64, up: usize) -> u64 {
+        let mut h = hash;
+        for _ in 0..up {
+            h = self.nodes.get(&h).expect("ancestor of missing prefix node").parent;
+        }
+        h
+    }
+
+    /// Blocks evictable right now — i.e. unpinned. Because every pin
+    /// covers a full chain from the root, an unpinned node can have no
+    /// pinned descendant, so cascade (leaf-first) eviction can reach
+    /// every unpinned node: this count is exact, not a bound.
+    pub fn evictable(&self) -> usize {
+        self.nodes.values().filter(|n| n.pinned == 0).count()
+    }
+
+    /// How many of the `blocks`-long chain ending at `hash` are
+    /// currently unpinned (resident only as cache, chargeable to the
+    /// next sequence that pins them).
+    pub fn chain_unpinned(&self, hash: u64, blocks: usize) -> usize {
+        let mut h = hash;
+        let mut n = 0;
+        for _ in 0..blocks {
+            let node = self.nodes.get(&h).expect("broken prefix chain");
+            if node.pinned == 0 {
+                n += 1;
+            }
+            h = node.parent;
+        }
+        n
+    }
+
+    /// Payload of the chain ending at `hash`, shallowest block first
+    /// (`blocks` entries). Panics if the chain is shorter than claimed —
+    /// a pinned chain can never lose a node, so a caller that pinned
+    /// first is safe.
+    pub fn chain_payloads(&self, hash: u64, blocks: usize) -> Vec<&P> {
+        let mut out = Vec::with_capacity(blocks);
+        let mut h = hash;
+        for _ in 0..blocks {
+            let n = self.nodes.get(&h).expect("broken prefix chain");
+            out.push(&n.payload);
+            h = n.parent;
+        }
+        debug_assert_eq!(h, ROOT_HASH, "chain deeper than claimed");
+        out.reverse();
+        out
+    }
+
+    /// Payload of the single node at `hash`.
+    pub fn payload(&self, hash: u64) -> Option<&P> {
+        self.nodes.get(&hash).map(|n| &n.payload)
+    }
+
+    /// Pin the `blocks`-long chain ending at `hash` for a live sequence.
+    /// Every node on the chain gains one reference; none of them can be
+    /// evicted until [`PrefixCache::unpin`] with the same arguments.
+    pub fn pin(&mut self, hash: u64, blocks: usize) {
+        let mut h = hash;
+        for _ in 0..blocks {
+            let n = self.nodes.get_mut(&h).expect("pin of missing prefix node");
+            n.pinned += 1;
+            h = n.parent;
+        }
+        debug_assert_eq!(h, ROOT_HASH);
+    }
+
+    /// Drop a live sequence's references on the chain ending at `hash`.
+    pub fn unpin(&mut self, hash: u64, blocks: usize) {
+        let mut h = hash;
+        for _ in 0..blocks {
+            let n = self.nodes.get_mut(&h).expect("unpin of missing prefix node");
+            debug_assert!(n.pinned > 0, "prefix refcount underflow");
+            n.pinned = n.pinned.saturating_sub(1);
+            h = n.parent;
+        }
+        debug_assert_eq!(h, ROOT_HASH);
+    }
+
+    /// Publish one block: `hash` must be `chain_hash(parent, block)` and
+    /// `parent` must be [`ROOT_HASH`] or already cached. Returns `false`
+    /// (payload dropped, caller keeps its private copy) if the block is
+    /// already cached — first publisher wins, so two sequences that
+    /// prefilled the same prefix concurrently never double-insert. On
+    /// success the node starts with **one pin held by the publisher**
+    /// (count it in the publisher's pinned-chain length). If the cap is
+    /// exceeded, unpinned LRU leaves are evicted into `evicted`.
+    pub fn insert(&mut self, parent: u64, hash: u64, payload: P,
+                  evicted: &mut Vec<P>) -> bool {
+        if self.nodes.contains_key(&hash) {
+            return false;
+        }
+        if parent != ROOT_HASH {
+            let Some(p) = self.nodes.get_mut(&parent) else {
+                // Parent got evicted between lookup and publish (the
+                // publisher only pins blocks it reused, not blocks it is
+                // about to publish): refuse rather than orphan a node
+                // lookups could never reach contiguously.
+                return false;
+            };
+            p.children += 1;
+        }
+        self.tick += 1;
+        self.nodes.insert(hash, Node {
+            parent,
+            payload,
+            pinned: 1,
+            children: 0,
+            last_use: self.tick,
+        });
+        if self.cap_blocks > 0 {
+            while self.nodes.len() > self.cap_blocks {
+                match self.evict_one() {
+                    Some(p) => evicted.push(p),
+                    None => break, // everything left is pinned
+                }
+            }
+        }
+        true
+    }
+
+    /// Evict the least-recently-used unpinned **leaf** (a mid-chain node
+    /// only becomes a leaf once its longer chains are gone, keeping every
+    /// resident chain contiguous). Returns its payload so the caller can
+    /// free the pages it owned, or `None` if nothing is evictable.
+    pub fn evict_one(&mut self) -> Option<P> {
+        let victim = self
+            .nodes
+            .iter()
+            .filter(|(_, n)| n.pinned == 0 && n.children == 0)
+            .min_by_key(|(_, n)| n.last_use)
+            .map(|(h, _)| *h)?;
+        let node = self.nodes.remove(&victim).unwrap();
+        if node.parent != ROOT_HASH {
+            if let Some(p) = self.nodes.get_mut(&node.parent) {
+                p.children -= 1;
+            }
+        }
+        Some(node.payload)
+    }
+
+    /// Evict up to `want` unpinned blocks (pressure path: the engine
+    /// calls this to yield pages back before deferring or preempting).
+    pub fn evict(&mut self, want: usize, evicted: &mut Vec<P>) -> usize {
+        let mut n = 0;
+        while n < want {
+            match self.evict_one() {
+                Some(p) => {
+                    evicted.push(p);
+                    n += 1;
+                }
+                None => break,
+            }
+        }
+        n
+    }
+
+    /// Evict every unpinned block (drain/shutdown; cascades through
+    /// parents as their chains disappear).
+    pub fn evict_all(&mut self, evicted: &mut Vec<P>) -> usize {
+        self.evict(usize::MAX, evicted)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn prompt(n: usize, salt: i32) -> Vec<i32> {
+        (0..n as i32).map(|t| t * 7 + salt).collect()
+    }
+
+    /// Publish every full block of `p`, pinning the whole chain; returns
+    /// (deepest hash, blocks).
+    fn publish(c: &mut PrefixCache<usize>, p: &[i32]) -> (u64, usize) {
+        let bs = c.block_size();
+        let mut hash = ROOT_HASH;
+        let mut evicted = Vec::new();
+        let mut published = 0usize;
+        for b in 0..p.len() / bs {
+            let next = chain_hash(hash, &p[b * bs..(b + 1) * bs]);
+            if c.payload(next).is_none() {
+                assert!(c.insert(hash, next, b, &mut evicted));
+                published += 1;
+            } else {
+                c.pin(next, 1);
+            }
+            hash = next;
+        }
+        let _ = published;
+        (hash, p.len() / bs)
+    }
+
+    #[test]
+    fn chain_hash_is_deterministic_and_content_sensitive() {
+        let a = chain_hash(ROOT_HASH, &[1, 2, 3, 4]);
+        assert_eq!(a, chain_hash(ROOT_HASH, &[1, 2, 3, 4]));
+        assert_ne!(a, chain_hash(ROOT_HASH, &[1, 2, 3, 5]));
+        assert_ne!(a, chain_hash(a, &[1, 2, 3, 4]), "position-sensitive");
+        assert_ne!(first_block_hash(&[1, 2], 4), first_block_hash(&[1, 3], 4),
+                   "short prompts still route by content");
+    }
+
+    #[test]
+    fn lookup_finds_longest_prefix_and_stops_at_divergence() {
+        let mut c: PrefixCache<usize> = PrefixCache::new(4, 0);
+        let p = prompt(12, 0); // 3 full blocks
+        let (hash, blocks) = publish(&mut c, &p);
+        assert_eq!(blocks, 3);
+        assert_eq!(c.len(), 3);
+        // Exact prefix: all 3 blocks hit, payloads in block order.
+        let hit = c.lookup(&p);
+        assert_eq!(hit, PrefixHit { blocks: 3, hash });
+        let chain: Vec<usize> =
+            c.chain_payloads(hit.hash, hit.blocks).into_iter().copied().collect();
+        assert_eq!(chain, vec![0, 1, 2]);
+        // Diverges inside block 1: only block 0 reusable.
+        let mut q = p.clone();
+        q[5] += 1;
+        assert_eq!(c.lookup(&q).blocks, 1);
+        // Longer prompt sharing all 3 blocks plus a tail: still 3.
+        let mut r = p.clone();
+        r.extend_from_slice(&[99, 98]);
+        assert_eq!(c.lookup(&r).blocks, 3);
+        // Sub-block prompt: no full block to reuse.
+        assert_eq!(c.lookup(&p[..3]).blocks, 0);
+    }
+
+    #[test]
+    fn eviction_is_leaf_first_lru_and_respects_pins() {
+        let mut c: PrefixCache<usize> = PrefixCache::new(4, 0);
+        let p = prompt(12, 0);
+        let (hash, blocks) = publish(&mut c, &p); // pinned chain of 3
+        // Nothing evictable while pinned.
+        assert!(c.evict_one().is_none());
+        c.unpin(hash, blocks);
+        // Leaf first: block 2 (deepest) goes before block 0.
+        let first = c.evict_one().unwrap();
+        assert_eq!(first, 2);
+        assert_eq!(c.lookup(&p).blocks, 2, "remaining chain stays contiguous");
+        let mut ev = Vec::new();
+        assert_eq!(c.evict_all(&mut ev), 2);
+        assert!(c.is_empty());
+    }
+
+    #[test]
+    fn cap_evicts_lru_unpinned_on_insert() {
+        let mut c: PrefixCache<usize> = PrefixCache::new(2, 2);
+        let a = prompt(4, 0); // 2 blocks
+        let (ha, ba) = publish(&mut c, &a);
+        c.unpin(ha, ba);
+        // Publishing a different 2-block prefix overflows the cap: the
+        // LRU leaves of `a` get evicted to make room.
+        let b = prompt(4, 100);
+        let (hb, bb) = publish(&mut c, &b);
+        assert_eq!(c.len(), 2);
+        assert_eq!(c.lookup(&b).blocks, 2, "new pinned chain survives");
+        assert_eq!(c.lookup(&a).blocks, 0, "old chain evicted");
+        c.unpin(hb, bb);
+    }
+
+    #[test]
+    fn first_publisher_wins_and_pins_stack() {
+        let mut c: PrefixCache<usize> = PrefixCache::new(4, 0);
+        let p = prompt(4, 0);
+        let h = chain_hash(ROOT_HASH, &p);
+        let mut ev = Vec::new();
+        assert!(c.insert(ROOT_HASH, h, 7, &mut ev));
+        assert!(!c.insert(ROOT_HASH, h, 8, &mut ev), "second publisher loses");
+        assert_eq!(c.payload(h), Some(&7));
+        c.pin(h, 1); // a second sequence reuses it
+        c.unpin(h, 1);
+        assert!(c.evict_one().is_none(), "publisher pin still held");
+        c.unpin(h, 1);
+        assert_eq!(c.evict_one(), Some(7));
+    }
+
+    #[test]
+    fn probe_ancestor_and_pin_accounting_agree() {
+        let mut c: PrefixCache<usize> = PrefixCache::new(4, 0);
+        let p = prompt(12, 0);
+        let (hash, blocks) = publish(&mut c, &p);
+        assert_eq!(c.probe(&p), PrefixHit { blocks, hash },
+                   "probe matches lookup without touching");
+        assert_eq!(c.ancestor(hash, blocks), ROOT_HASH);
+        let h1 = c.ancestor(hash, 2); // depth-1 hash
+        assert_eq!(h1, chain_hash(ROOT_HASH, &p[..4]));
+        // Whole chain pinned by the publisher: nothing evictable.
+        assert_eq!(c.evictable(), 0);
+        assert_eq!(c.chain_unpinned(hash, blocks), 0);
+        c.unpin(hash, blocks);
+        assert_eq!(c.evictable(), 3);
+        assert_eq!(c.chain_unpinned(hash, blocks), 3);
+        // Re-pin a 1-block prefix of the chain: the deeper 2 stay
+        // evictable.
+        c.pin(h1, 1);
+        assert_eq!(c.evictable(), 2);
+        assert_eq!(c.chain_unpinned(hash, blocks), 2);
+        c.unpin(h1, 1);
+    }
+
+    #[test]
+    fn insert_without_resident_parent_is_refused() {
+        let mut c: PrefixCache<usize> = PrefixCache::new(4, 0);
+        let p = prompt(8, 0);
+        let h0 = chain_hash(ROOT_HASH, &p[..4]);
+        let h1 = chain_hash(h0, &p[4..8]);
+        let mut ev = Vec::new();
+        assert!(!c.insert(h0, h1, 1, &mut ev),
+                "a node whose parent is gone would be unreachable");
+        assert!(c.is_empty());
+    }
+}

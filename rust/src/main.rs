@@ -28,6 +28,7 @@ USAGE:
                    [--stream] [--deadline-ms MS] [--no-simd]
                    [--defer-retry-ms MS] [--preempt-retries N]
                    [--prefill-chunk TOKENS]
+                   [--prefix-cache] [--prefix-cache-blocks N]
                    [--default-priority interactive|batch]
   seerattn generate [--task easy|hard] [--policy P] [--budget TOKENS] [--n N]
                    [--no-simd]
@@ -36,6 +37,10 @@ POLICIES: dense | seer | seer-threshold:T | seer-topp:P | oracle | quest
 --gather-threads: 0 = auto (half the cores, max 4), 1 = serial.
 --prefill-chunk: prompt tokens prefilled per step, a multiple of
 --block-size (default 128; 0 = monolithic prefill, stalls decode).
+--prefix-cache: content-addressed prompt-prefix reuse — shared
+block-aligned prefixes map cached KV pages and gate blocks instead of
+re-prefilling (--prefix-cache-blocks caps cached blocks; 0 = unbounded,
+LRU-evicted under pool pressure either way).
 --no-simd pins the host hot path to the bit-identical scalar kernels
 (auto-dispatch picks AVX2+FMA / NEON when the CPU has them).
 Artifacts are read from ./artifacts (override: SEERATTN_ARTIFACTS).";
@@ -239,6 +244,10 @@ fn cmd_serve(args: &Args, dir: &PathBuf) -> Result<()> {
         // Prefill tokens staged per engine step (0 = monolithic); must
         // be a multiple of --block-size so gate blocks stay aligned.
         prefill_chunk: args.usize_flag("prefill-chunk", 128),
+        // Content-addressed prefix cache: admitted prompts reuse KV
+        // pages + gate blocks for any cached block-aligned prefix.
+        prefix_cache: args.flags.contains_key("prefix-cache"),
+        prefix_cache_blocks: args.usize_flag("prefix-cache-blocks", 0),
         ..Default::default()
     };
     let gcfg = GroupConfig {
@@ -248,6 +257,9 @@ fn cmd_serve(args: &Args, dir: &PathBuf) -> Result<()> {
         queue_depth: args.usize_flag("queue-depth", 32),
         // Retry hint carried on "deferred" (KV page headroom) replies.
         defer_retry_ms: args.usize_flag("defer-retry-ms", 25) as u64,
+        // Prefix-affinity routing + reservation discounts only make
+        // sense when the shards actually cache prefixes.
+        prefix_routing: args.flags.contains_key("prefix-cache"),
         ..Default::default()
     };
     let default_priority = {

@@ -65,6 +65,37 @@ impl QuestMeta {
         self.len
     }
 
+    /// Copy block `blk`'s metadata for every head into `out`
+    /// (`[hkv, 2, dh]` contiguous: per head `min[dh] ++ max[dh]`) — the
+    /// prefix cache's export format for one Quest block.
+    pub fn export_block(&self, blk: usize, out: &mut [f32]) {
+        debug_assert!(blk * self.block_size < self.len);
+        debug_assert_eq!(out.len(), self.hkv * 2 * self.dh);
+        for h in 0..self.hkv {
+            let base = ((h * self.max_blocks + blk) * 2) * self.dh;
+            out[h * 2 * self.dh..(h + 1) * 2 * self.dh]
+                .copy_from_slice(&self.data[base..base + 2 * self.dh]);
+        }
+    }
+
+    /// Append one *full* block's metadata (`[hkv, 2, dh]`, as produced by
+    /// [`export_block`](QuestMeta::export_block)) without replaying its
+    /// tokens — the prefix-cache splice for a shared-prefix block.
+    /// Only legal at a block boundary; advances `len` by one full block.
+    pub fn adopt_block(&mut self, meta: &[f32]) {
+        assert_eq!(self.len % self.block_size, 0,
+                   "adopt_block mid-block would corrupt min/max state");
+        debug_assert_eq!(meta.len(), self.hkv * 2 * self.dh);
+        let blk = self.len / self.block_size;
+        assert!(blk < self.max_blocks, "quest metadata overflow");
+        for h in 0..self.hkv {
+            let base = ((h * self.max_blocks + blk) * 2) * self.dh;
+            self.data[base..base + 2 * self.dh]
+                .copy_from_slice(&meta[h * 2 * self.dh..(h + 1) * 2 * self.dh]);
+        }
+        self.len += self.block_size;
+    }
+
     pub fn is_empty(&self) -> bool {
         self.len == 0
     }
@@ -200,6 +231,32 @@ mod tests {
                 m.scores_into(h, &q, &mut buf);
                 assert_eq!(buf, m.scores(h, &q));
             }
+        }
+    }
+
+    #[test]
+    fn adopted_block_scores_bit_identical() {
+        let c = cfg();
+        let mut rng = Rng::new(77);
+        let mut cold = QuestMeta::new(&c, 4, 64);
+        let tokens: Vec<Vec<f32>> = (0..8)
+            .map(|_| (0..c.n_kv_heads * c.head_dim).map(|_| rng.normal() as f32).collect())
+            .collect();
+        for k in &tokens {
+            cold.append(k);
+        }
+        // Warm meta adopts block 0, replays only block 1.
+        let mut row = vec![0.0; c.n_kv_heads * 2 * c.head_dim];
+        cold.export_block(0, &mut row);
+        let mut warm = QuestMeta::new(&c, 4, 64);
+        warm.adopt_block(&row);
+        assert_eq!(warm.len(), 4);
+        for k in &tokens[4..] {
+            warm.append(k);
+        }
+        let q: Vec<f32> = (0..c.head_dim).map(|_| rng.normal() as f32).collect();
+        for h in 0..c.n_kv_heads {
+            assert_eq!(cold.scores(h, &q), warm.scores(h, &q), "h={h}");
         }
     }
 

@@ -37,6 +37,14 @@
 //!     short-decode mix, a 4-shard group's per-request output and a
 //!     single engine's completion order are bit-identical between
 //!     chunked and monolithic prefill under virtual replay.
+//!  9. Content-addressed prefix cache (ISSUE 8): requests sharing a
+//!     block-aligned prompt head on a 4-shard group prefill the head
+//!     exactly once (prefix-affinity routing + sticky placement keep
+//!     them together) with streams bit-identical to a cold cache; the
+//!     bit-identity holds under the seeded chaos fault matrix; and a
+//!     cancel storm on half-prefilled shared-prefix slots leaks neither
+//!     pages nor cache pins — the full pool is re-admittable and the
+//!     gauge returns to capacity.
 
 use std::collections::BTreeMap;
 use std::io::{BufRead, BufReader, Write};
@@ -1261,6 +1269,295 @@ fn batch_stream_is_preempted_resumed_and_bit_identical_over_sockets() {
                want_stop.as_str());
     let (want_inter, _) = SimEngine::expected_generation(&sim_cfg, &other, 8);
     assert_eq!(inter_gen, want_inter);
+}
+
+// ---------------------------------------------------------------------
+// Content-addressed prefix cache (ISSUE 8): shared block-aligned prompt
+// heads are prefilled once and spliced into every later admission —
+// quiet case, chaos fault matrix, and cancel storms that must leak
+// neither pages nor pins.
+// ---------------------------------------------------------------------
+
+/// `n` requests sharing a 4-block (32-token) head with distinct 3-token
+/// tails; block size (`page_tokens`) is 8 in the prefix tests.
+fn shared_head_trace(n: usize) -> Vec<TracedRequest> {
+    let head: Vec<i32> = (0..32).map(|t| 10 + t).collect();
+    (0..n)
+        .map(|i| {
+            let mut prompt = head.clone();
+            prompt.extend([100 + i as i32, 55, 60 + i as i32]);
+            TracedRequest {
+                arrival_s: 0.0,
+                episode: Episode { prompt, target: Vec::new(), answer: 0,
+                                   cfg: TaskConfig::easy() },
+                max_new: 10,
+            }
+        })
+        .collect()
+}
+
+#[test]
+fn prefix_cache_prefills_shared_head_once_and_streams_bit_identical() {
+    // Six 35-token requests sharing a 4-block head on a 4-shard group.
+    // Prefix-affinity routing sends all of them to one shard (warm
+    // blocks widen the affinity window, sticky placement keeps thieves
+    // off), batch 1 serialises admission there, so the first request
+    // publishes the head and the other five splice it: total prefill
+    // work is one full prompt plus five 3-token tails — with output
+    // bit-identical to the cold-cache run.
+    let n = 6usize;
+    let trace = shared_head_trace(n);
+    let runner = TraceRunner { replay: Replay::Virtual, ..Default::default() };
+    let run = |cache: bool| {
+        let sim_cfg = SimConfig {
+            batch: 1,
+            pages_per_slot: 12, // 6 active + 4 cached pages fit: no eviction
+            page_tokens: 8,
+            eos_every: 0,
+            prefill_chunk: 8,
+            prefix_cache: cache,
+            ..Default::default()
+        };
+        let gcfg = GroupConfig { shards: 4, queue_depth: 8,
+                                 prefix_routing: cache,
+                                 ..Default::default() };
+        let mut group: EngineGroup<SimEngine> =
+            EngineGroup::with_config(gcfg,
+                                     move |_| Ok(SimEngine::new(sim_cfg)))
+                .unwrap();
+        let comps = by_id(runner.run_group(&mut group, &trace).unwrap());
+        (comps, group.shutdown().unwrap())
+    };
+    let (cold, gm_cold) = run(false);
+    let (warm, gm_warm) = run(true);
+    assert_eq!(cold.len(), n);
+    for (id, want) in &cold {
+        assert_eq!(warm.get(id).expect("missing id"), want,
+                   "id {id}: prefix reuse changed the stream");
+    }
+    let (fc, fw) = (gm_cold.fleet(), gm_warm.fleet());
+    assert_eq!(fc.prefix_hits, 0, "cold run must not touch the cache");
+    assert_eq!(fw.prefix_hits, (n - 1) as u64, "every repeat hits");
+    assert_eq!(fw.prefix_blocks_reused, 4 * (n - 1) as u64);
+    assert_eq!(fw.prefix_evictions, 0, "a 12-page pool never pressures \
+                                        a 4-block cache");
+    assert_eq!(fc.prefill_tokens, (n * 35) as u64);
+    assert_eq!(fw.prefill_tokens, (35 + (n - 1) * 3) as u64,
+               "one full prefill + n-1 small tails");
+    assert_eq!(fc.prefill_tokens - fw.prefill_tokens,
+               8 * fw.prefix_blocks_reused,
+               "every reused block saves exactly one block of prefill");
+}
+
+/// The chaos mix with a shared 2-block (16-token) head: four of every
+/// five requests extend the head with a random 1-7 token tail, the
+/// fifth is a random long prompt — all projecting at most 4 pages, so
+/// each survives the worst seeded `ShrinkPool` alone while the fault
+/// matrix lands preemptions and cancellations on half-prefilled
+/// shared-prefix slots.
+fn prefix_chaos_trace(n: usize, seed: u64) -> Vec<TracedRequest> {
+    let mut rng = Rng::new(seed ^ 0x00C0_FFEE);
+    let head: Vec<i32> = (0..16).map(|t| 30 + t).collect();
+    (0..n)
+        .map(|i| {
+            let prompt: Vec<i32> = if i % 5 == 4 {
+                let plen = rng.range(17, 25);
+                (0..plen).map(|_| rng.range(4, 90) as i32).collect()
+            } else {
+                let mut p = head.clone();
+                let tail = rng.range(1, 8);
+                p.extend((0..tail).map(|_| rng.range(4, 90) as i32));
+                p
+            };
+            TracedRequest {
+                arrival_s: 0.0,
+                episode: Episode { prompt, target: Vec::new(), answer: 0,
+                                   cfg: TaskConfig::easy() },
+                max_new: 7, // <= (24 + 7 + 1) / 8 = 4 pages either way
+            }
+        })
+        .collect()
+}
+
+#[test]
+fn prefix_cache_chaos_matrix_keeps_streams_bit_identical_to_cold() {
+    // The ISSUE 6 chaos property with the prefix cache in the loop:
+    // under 2x oversubscription and seeded stall/shrink/fail-admit
+    // faults, warm-spliced, preempted, and resumed requests all stay
+    // bit-identical to the pure token function — which IS the
+    // cold-cache stream — and nothing is lost or duplicated.
+    for seed in chaos_seeds() {
+        let n = 24usize;
+        let trace = prefix_chaos_trace(n, seed);
+        let sim_cfg = SimConfig {
+            batch: 2,
+            pages_per_slot: 4, // pool = 8 pages per shard
+            page_tokens: 8,
+            eos_every: 0,
+            step_delay_ms: 1,
+            preempt_retries: 2,
+            faults: FaultSchedule::seeded(seed, 8),
+            prefill_chunk: 8,
+            prefix_cache: true,
+            ..Default::default()
+        };
+        let gcfg = GroupConfig { shards: 4, queue_depth: 2,
+                                 prefix_routing: true,
+                                 ..Default::default() };
+        let expect = trace.clone();
+        let worker = std::thread::spawn(move || {
+            let mut group: EngineGroup<SimEngine> =
+                EngineGroup::with_config(gcfg,
+                                         move |_| Ok(SimEngine::new(sim_cfg)))
+                    .unwrap();
+            let runner =
+                TraceRunner { replay: Replay::Virtual, ..Default::default() };
+            let comps = runner.run_group(&mut group, &trace).unwrap();
+            let gm = group.shutdown().unwrap();
+            (comps, gm)
+        });
+        let deadline = Instant::now() + Duration::from_secs(60);
+        while !worker.is_finished() {
+            assert!(Instant::now() < deadline,
+                    "seed {seed}: prefix chaos replay deadlocked");
+            std::thread::sleep(Duration::from_millis(10));
+        }
+        let (comps, gm) = worker.join().unwrap();
+        let comps = by_id(comps); // also asserts no duplicated ids
+        assert_eq!(comps.len(), n, "seed {seed}: a request was lost");
+        for (id, (plen, generated, stop)) in &comps {
+            let t = &expect[*id as usize];
+            assert_eq!(*plen, t.episode.prompt.len(), "seed {seed} id {id}");
+            let (want, want_stop) = SimEngine::expected_generation(
+                &sim_cfg, &t.episode.prompt, t.max_new);
+            match stop {
+                StopReason::Eos | StopReason::MaxNewTokens
+                | StopReason::ContextFull => {
+                    assert_eq!(stop, &want_stop, "seed {seed} id {id}");
+                    assert_eq!(generated, &want,
+                               "seed {seed} id {id}: prefix splice or \
+                                preempt/resume broke bit-identity");
+                }
+                StopReason::ResourceExhausted => {
+                    assert!(want.starts_with(generated),
+                            "seed {seed} id {id}: exhausted completion \
+                             diverged from the token function");
+                }
+                StopReason::Cancelled | StopReason::DeadlineExceeded => {
+                    panic!("seed {seed} id {id}: stop {stop:?} without a \
+                            cancel or deadline")
+                }
+            }
+        }
+        // 19 of 24 requests share the head: the cache must actually have
+        // engaged under the fault matrix, not silently disabled itself.
+        assert!(gm.fleet().prefix_hits >= 1,
+                "seed {seed}: chaos run never reused the shared head");
+    }
+}
+
+#[test]
+fn prefix_cancel_storm_leaks_neither_pages_nor_pins() {
+    use std::sync::atomic::{AtomicUsize, Ordering};
+    use std::sync::Arc;
+
+    // A cancel storm on shared-prefix requests — many of them cancelled
+    // half-prefilled, pinning cached head blocks — followed by a leak
+    // probe: two fresh requests whose projections sum to the whole pool.
+    // They can only be admitted if every storm slot released its pages
+    // AND every cache pin was dropped (a leaked pin would make the
+    // cached blocks unevictable and wedge admission: the watchdog turns
+    // that into a failure). Their admission also forcibly evicts the
+    // leftover cache, so afterwards the gauge must sit at full capacity.
+    let sim_cfg = SimConfig {
+        batch: 2,
+        pages_per_slot: 8, // pool = 16 pages
+        page_tokens: 8,
+        eos_every: 0,
+        step_delay_ms: 2,
+        prefill_chunk: 8,
+        prefix_cache: true,
+        ..Default::default()
+    };
+    let capacity = sim_cfg.batch * sim_cfg.pages_per_slot;
+    let gauge = Arc::new(AtomicUsize::new(0));
+    let factory_gauge = gauge.clone();
+    let gcfg = GroupConfig { shards: 1, queue_depth: 2,
+                             prefix_routing: true, ..Default::default() };
+    let worker = std::thread::spawn(move || {
+        let mut group: EngineGroup<SimEngine> =
+            EngineGroup::with_config(gcfg, move |_| {
+                Ok(SimEngine::with_pool_gauge(sim_cfg, factory_gauge.clone()))
+            })
+            .unwrap();
+        // Storm: sixteen 31-token requests sharing a 2-block head with
+        // divergent 15-token tails (6-page projections against a
+        // 32-page budget: submission rides the deferral loop; multi-
+        // chunk tails keep slots half-prefilled long enough for cancels
+        // to land on them), then cancel every one of them.
+        let head: Vec<i32> = (0..16).map(|t| 50 + t).collect();
+        let mut settled = Vec::new();
+        let n = 16u64;
+        for i in 0..n {
+            let mut prompt = head.clone();
+            prompt.push(200 + i as i32);
+            prompt.extend((0..14).map(|t| 210 + ((i as i32 + t) % 40)));
+            loop {
+                match group.submit(Request::new(i, prompt.clone(), 12)).unwrap() {
+                    SubmitOutcome::Routed(_) => break,
+                    SubmitOutcome::Deferred { .. } | SubmitOutcome::Rejected => {
+                        if let Some(c) =
+                            group.poll(Duration::from_millis(1)).unwrap()
+                        {
+                            settled.push(c);
+                        }
+                    }
+                }
+            }
+        }
+        for id in 0..n {
+            group.cancel(id);
+        }
+        settled.extend(group.drain().unwrap());
+        // Leak probe: 2 x 8-page requests = the whole pool. The second
+        // admission must evict whatever the storm left cached.
+        for i in 0..2u64 {
+            loop {
+                match group
+                    .submit(Request::new(100 + i, vec![3, 7 + i as i32, 11], 60))
+                    .unwrap()
+                {
+                    SubmitOutcome::Routed(_) => break,
+                    SubmitOutcome::Deferred { .. } | SubmitOutcome::Rejected => {
+                        std::thread::sleep(Duration::from_millis(1));
+                    }
+                }
+            }
+        }
+        settled.extend(group.drain().unwrap());
+        let gm = group.shutdown().unwrap();
+        (settled, gm)
+    });
+    let deadline = Instant::now() + Duration::from_secs(60);
+    while !worker.is_finished() {
+        assert!(Instant::now() < deadline,
+                "a leaked page or cache pin wedged admission");
+        std::thread::sleep(Duration::from_millis(10));
+    }
+    let (settled, gm) = worker.join().unwrap();
+    let comps = by_id(settled); // also asserts no duplicated ids
+    assert_eq!(comps.len(), 18, "a request went missing in the storm");
+    for i in 0..2u64 {
+        let (_plen, generated, stop) = comps.get(&(100 + i)).unwrap();
+        let (want, want_stop) = SimEngine::expected_generation(
+            &sim_cfg, &[3, 7 + i as i32, 11], 60);
+        assert_eq!(generated, &want, "probe {i}: stream diverged");
+        assert_eq!(stop, &want_stop, "probe {i}");
+    }
+    assert!(gm.fleet().prefix_hits >= 1,
+            "the storm must actually have exercised the cache");
+    assert_eq!(gauge.load(Ordering::SeqCst), capacity,
+               "pages leaked: gauge must return to full capacity");
 }
 
 // ---------------------------------------------------------------------
