@@ -1,23 +1,54 @@
-//! Streaming-request end-to-end smoke bench: drives one
-//! `{"stream": true}` request through the real reactor front-end +
-//! shard + `SimEngine` stack over a real socket, asserting the event
-//! path works (≥1 delta frame before the terminal reply, concatenated
-//! deltas byte-identical to `generated`, which equals the sim
-//! reference), and reports time-to-first-delta and end-to-end time.
+//! Streaming-request end-to-end smoke bench: drives `{"stream": true}`
+//! requests through the real reactor front-end + shard + `SimEngine`
+//! stack over real sockets.
+//!
+//! Two sections:
+//!
+//!  1. **Single-stream parity** (the original smoke): one streaming
+//!     request, asserting the event path works (≥1 delta frame before
+//!     the terminal reply, concatenated deltas byte-identical to
+//!     `generated`, which equals the sim reference), reporting
+//!     time-to-first-delta and end-to-end time.
+//!  2. **Reactor scaling**: the same pipelined streaming workload served
+//!     at `--reactors` 1, 2, and 4 (multi-lane group + accept-handoff
+//!     fan-out over a pre-bound listener), measuring connection-setup
+//!     time, idle time-to-first-delta (every reactor parked in
+//!     `epoll_wait` with *no poll tick* — the first delta must arrive at
+//!     eventfd/syscall latency, not at a tick boundary), and aggregate
+//!     streaming token throughput. Every reply is still asserted
+//!     byte-identical to the sim reference, so the scaling section is a
+//!     parity test that happens to be timed.
 //!
 //! Runs identically under `scripts/bench.sh --smoke` — it is cheap by
-//! construction — so the streaming event path can never rot uncompiled
-//! or unexercised in CI.
+//! construction — so the streaming and multi-reactor event paths can
+//! never rot uncompiled or unexercised in CI. Outside smoke mode the
+//! scaling numbers are merged into `BENCH_decode.json` under the
+//! `"serving"` key (read-modify-write: the decode bench owns the rest of
+//! the file and runs first in `bench.sh`).
 
+use std::collections::BTreeMap;
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
-use seerattn::coordinator::{server, EngineGroup, ServeConfig, SimConfig,
-                            SimEngine};
+use seerattn::coordinator::{server, EngineGroup, GroupConfig, ServeConfig,
+                            SimConfig, SimEngine};
 use seerattn::util::json::Json;
 
-fn main() {
+fn prompt_for(id: usize) -> Vec<i32> {
+    vec![1, 17, 29, 3 + (id % 7) as i32]
+}
+
+fn stream_request_line(id: usize, prompt: &[i32], max_new: usize) -> String {
+    let toks: Vec<String> = prompt.iter().map(|t| t.to_string()).collect();
+    format!("{{\"id\": {id}, \"prompt\": [{}], \"max_new\": {max_new}, \
+             \"stream\": true}}",
+            toks.join(", "))
+}
+
+/// Single streaming request through a 1-shard group: asserts the delta
+/// path and returns (time-to-first-delta ms, end-to-end ms).
+fn single_stream_parity() -> (f64, f64) {
     let listener = TcpListener::bind("127.0.0.1:0").unwrap();
     let addr = listener.local_addr().unwrap();
     let group: EngineGroup<SimEngine> =
@@ -74,11 +105,192 @@ fn main() {
     assert!(!deltas.is_empty(), "no delta frame arrived before Finished");
     assert_eq!(deltas, generated, "concatenated deltas != final generated");
     assert_eq!(generated, want, "generation != sim reference");
+    let ttfd_ms = first_delta.unwrap().as_secs_f64() * 1e3;
+    let e2e_ms = e2e.as_secs_f64() * 1e3;
     println!(
-        "serving_stream: {} delta tokens, time-to-first-delta {:.3} ms, \
-         e2e {:.3} ms",
+        "serving_stream: {} delta tokens, time-to-first-delta {ttfd_ms:.3} ms, \
+         e2e {e2e_ms:.3} ms",
         deltas.len(),
-        first_delta.unwrap().as_secs_f64() * 1e3,
-        e2e.as_secs_f64() * 1e3
     );
+    (ttfd_ms, e2e_ms)
+}
+
+struct ScalingRun {
+    reactors: usize,
+    conn_setup_ms: f64,
+    idle_first_delta_ms: f64,
+    tokens_per_s: f64,
+}
+
+/// One reactor-scaling leg: a 4-shard group with `reactors` lanes served
+/// by `reactors` reactor threads (pre-bound listener, so >1 reactor uses
+/// the accept-handoff fan-out — the path that works on every kernel),
+/// driven by `n_conns` pipelined streaming connections.
+fn scaling_run(reactors: usize, n_conns: usize, reqs: usize,
+               max_new: usize) -> ScalingRun {
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    let group: EngineGroup<SimEngine> = EngineGroup::with_config(
+        GroupConfig { shards: 4, lanes: reactors, ..Default::default() },
+        |_| Ok(SimEngine::new(SimConfig::default())),
+    )
+    .unwrap();
+    let cfg = ServeConfig { limit: Some(reqs), reactors,
+                            ..Default::default() };
+    let srv = std::thread::spawn(move || {
+        server::serve_on(listener, group, cfg).unwrap();
+    });
+
+    // Connection setup: each connect exercises accept + (for reactors
+    // beyond the first) the cross-reactor handoff + wake + epoll
+    // registration on the adopting reactor.
+    let t = Instant::now();
+    let conns: Vec<TcpStream> =
+        (0..n_conns).map(|_| TcpStream::connect(addr).unwrap()).collect();
+    let conn_setup_ms = t.elapsed().as_secs_f64() * 1e3;
+    let mut writers: Vec<TcpStream> =
+        conns.iter().map(|c| c.try_clone().unwrap()).collect();
+    let mut readers: Vec<BufReader<TcpStream>> =
+        conns.into_iter().map(BufReader::new).collect();
+
+    // Idle wake latency: let every reactor park in epoll_wait (nothing
+    // due, no tick), then send one request and time the first delta.
+    std::thread::sleep(Duration::from_millis(50));
+    let t = Instant::now();
+    writeln!(writers[0], "{}",
+             stream_request_line(0, &prompt_for(0), max_new))
+        .unwrap();
+    writers[0].flush().unwrap();
+    let idle_first_delta_ms = loop {
+        let mut line = String::new();
+        assert!(readers[0].read_line(&mut line).unwrap() > 0,
+                "EOF before first delta");
+        let j = Json::parse(&line)
+            .unwrap_or_else(|_| panic!("bad frame {line:?}"));
+        assert!(j.get("error").is_err(), "unexpected error {line:?}");
+        if j.opt("delta").is_some() {
+            break t.elapsed().as_secs_f64() * 1e3;
+        }
+        assert!(j.opt("stop").is_none(), "terminal before any delta");
+    };
+
+    // Aggregate streaming throughput: the remaining requests fan
+    // round-robin over every connection, all streaming, all in flight
+    // together.
+    let t = Instant::now();
+    for id in 1..reqs {
+        let c = id % n_conns;
+        writeln!(writers[c], "{}",
+                 stream_request_line(id, &prompt_for(id), max_new))
+            .unwrap();
+    }
+    for w in &mut writers {
+        w.flush().unwrap();
+    }
+    // Drain every connection: frames for the requests pipelined on one
+    // connection interleave, so accumulate deltas per id and stop after
+    // that connection's expected terminal count.
+    let mut deltas: BTreeMap<usize, Vec<i32>> = BTreeMap::new();
+    let mut generated: BTreeMap<usize, Vec<i32>> = BTreeMap::new();
+    for (c, reader) in readers.iter_mut().enumerate() {
+        // id 0 went to conn 0 in the idle phase; 0 % n_conns == 0, so
+        // one modular filter covers both phases.
+        let expected_terminals = (0..reqs).filter(|&id| id % n_conns == c).count();
+        let mut terminals = 0usize;
+        while terminals < expected_terminals {
+            let mut line = String::new();
+            assert!(reader.read_line(&mut line).unwrap() > 0,
+                    "conn {c}: EOF with {terminals}/{expected_terminals} \
+                     terminals");
+            let j = Json::parse(&line)
+                .unwrap_or_else(|_| panic!("bad frame {line:?}"));
+            assert!(j.get("error").is_err(), "unexpected error {line:?}");
+            let id = j.get("id").unwrap().as_i64().unwrap() as usize;
+            if j.opt("stop").is_some() {
+                terminals += 1;
+                let g: Vec<i32> = j
+                    .get("generated").unwrap().as_arr().unwrap()
+                    .iter().map(|t| t.as_i64().unwrap() as i32).collect();
+                generated.insert(id, g);
+            } else {
+                let d = deltas.entry(id).or_default();
+                for t in j.get("delta").unwrap().as_arr().unwrap() {
+                    d.push(t.as_i64().unwrap() as i32);
+                }
+            }
+        }
+    }
+    let wall = t.elapsed();
+    srv.join().unwrap();
+
+    // Parity: every reply equals the sim reference, and every stream's
+    // concatenated deltas equal its terminal `generated`.
+    assert_eq!(generated.len(), reqs, "reactors={reactors}: lost a reply");
+    let mut tokens = 0usize;
+    for (id, g) in &generated {
+        let (want, _) = SimEngine::expected_generation(
+            &SimConfig::default(), &prompt_for(*id), max_new);
+        assert_eq!(g, &want, "reactors={reactors} id {id}: generation \
+                              != sim reference");
+        assert_eq!(deltas.get(id).unwrap(), g,
+                   "reactors={reactors} id {id}: deltas != generated");
+        if *id != 0 {
+            tokens += g.len(); // id 0 decoded before the timed window
+        }
+    }
+    let tokens_per_s = tokens as f64 / wall.as_secs_f64();
+    println!(
+        "serving_stream: reactors={reactors} conn_setup {conn_setup_ms:.3} ms \
+         ({n_conns} conns), idle-first-delta {idle_first_delta_ms:.3} ms, \
+         {tokens} tokens in {:.3} ms => {tokens_per_s:.0} tok/s",
+        wall.as_secs_f64() * 1e3,
+    );
+    ScalingRun { reactors, conn_setup_ms, idle_first_delta_ms, tokens_per_s }
+}
+
+fn main() {
+    let smoke = std::env::var("SEERATTN_BENCH_SMOKE").as_deref() == Ok("1");
+    let (ttfd_ms, e2e_ms) = single_stream_parity();
+
+    // Reactor scaling: same workload at 1, 2, and 4 reactors. Sizes are
+    // identical in smoke mode — the section is cheap — only the JSON
+    // rewrite is gated.
+    let runs: Vec<ScalingRun> = [1usize, 2, 4]
+        .iter()
+        .map(|&r| scaling_run(r, 6, 18, 32))
+        .collect();
+
+    if smoke {
+        println!("smoke mode: all asserts green, BENCH_decode.json untouched");
+        return;
+    }
+    // Merge the serving section into BENCH_decode.json (owned and
+    // rewritten wholesale by decode_hot_path, which bench.sh runs first).
+    let root = std::env::var("CARGO_MANIFEST_DIR")
+        .map(|d| std::path::PathBuf::from(d).parent().unwrap().to_path_buf())
+        .unwrap_or_else(|_| std::path::PathBuf::from("."));
+    let path = root.join("BENCH_decode.json");
+    let mut parsed =
+        Json::parse_file(&path).unwrap_or(Json::Obj(BTreeMap::new()));
+    let scaling = Json::Arr(
+        runs.iter()
+            .map(|r| Json::obj(vec![
+                ("reactors", Json::Num(r.reactors as f64)),
+                ("conn_setup_ms", Json::Num(r.conn_setup_ms)),
+                ("idle_first_delta_ms", Json::Num(r.idle_first_delta_ms)),
+                ("stream_tokens_per_s", Json::Num(r.tokens_per_s)),
+            ]))
+            .collect(),
+    );
+    let serving = Json::obj(vec![
+        ("stream_ttfd_ms", Json::Num(ttfd_ms)),
+        ("stream_e2e_ms", Json::Num(e2e_ms)),
+        ("reactor_scaling", scaling),
+    ]);
+    if let Json::Obj(ref mut m) = parsed {
+        m.insert("serving".to_string(), serving);
+    }
+    std::fs::write(&path, parsed.to_string())
+        .expect("write BENCH_decode.json");
+    println!("merged serving section into {}", path.display());
 }

@@ -159,6 +159,40 @@ impl Metrics {
     }
 }
 
+/// Front-end counters for one reactor thread: connection-set churn plus
+/// the eventfd wakeups it consumed. Collected by the serve loop and
+/// stitched into [`GroupMetrics::report`] at fleet teardown so a
+/// multi-reactor run shows where accepts and evictions landed.
+#[derive(Debug, Default, Clone, PartialEq, Eq)]
+pub struct ReactorStats {
+    /// Connections accepted (or adopted via accept-fd handoff) and
+    /// registered with this reactor.
+    pub conns_accepted: u64,
+    /// Connections turned away with a structured "overloaded" reply
+    /// because this reactor was at its connection cap.
+    pub conns_rejected: u64,
+    /// Connections dropped by this reactor: idle eviction or a write
+    /// buffer over the slow-consumer cap.
+    pub conns_evicted: u64,
+    /// Accepted sockets lost to a setup failure (`set_nonblocking` or
+    /// epoll registration) before they could carry a request. Counted so
+    /// capacity accounting can't silently lie.
+    pub conns_failed: u64,
+    /// eventfd wakeups consumed (completion signals from shards plus
+    /// handoff notifications from reactor 0).
+    pub wakes: u64,
+}
+
+impl ReactorStats {
+    pub fn merge_from(&mut self, other: &ReactorStats) {
+        self.conns_accepted += other.conns_accepted;
+        self.conns_rejected += other.conns_rejected;
+        self.conns_evicted += other.conns_evicted;
+        self.conns_failed += other.conns_failed;
+        self.wakes += other.wakes;
+    }
+}
+
 /// Aggregated serving metrics for an [`EngineGroup`]: the per-shard
 /// [`Metrics`] snapshots plus the group's own wall-clock span, from which
 /// fleet throughput and latency percentiles are derived.
@@ -184,6 +218,10 @@ pub struct GroupMetrics {
     /// The configured per-shard overflow-queue bound the rejections were
     /// measured against.
     pub queue_depth: usize,
+    /// One entry per front-end reactor thread, indexed by reactor id.
+    /// Empty when the group was driven without a socket front end (trace
+    /// harness, unit tests).
+    pub reactors: Vec<ReactorStats>,
 }
 
 impl GroupMetrics {
@@ -230,6 +268,17 @@ impl GroupMetrics {
                 s.ttft_s.percentile(99.0),
                 s.e2e_s.median(),
                 s.e2e_s.percentile(95.0),
+            ));
+        }
+        for (r, s) in self.reactors.iter().enumerate() {
+            out.push_str(&format!(
+                "reactor {r}: accepted={} rejected={} evicted={} failed={} \
+                 wakes={}\n",
+                s.conns_accepted,
+                s.conns_rejected,
+                s.conns_evicted,
+                s.conns_failed,
+                s.wakes,
             ));
         }
         let f = self.fleet();
@@ -416,6 +465,42 @@ mod tests {
         assert_eq!(a.requests_stolen, 5, "steal counts add");
         assert_eq!(a.queue_peak, 7, "fleet queue peak is the worst shard's");
         assert!((a.ttft_s.mean() - 0.02).abs() < 1e-9);
+    }
+
+    #[test]
+    fn reactor_stats_merge_and_reach_the_group_report() {
+        let mut a = ReactorStats {
+            conns_accepted: 3,
+            conns_rejected: 1,
+            conns_evicted: 0,
+            conns_failed: 1,
+            wakes: 7,
+        };
+        let b = ReactorStats {
+            conns_accepted: 2,
+            conns_rejected: 0,
+            conns_evicted: 2,
+            conns_failed: 0,
+            wakes: 5,
+        };
+        a.merge_from(&b);
+        assert_eq!(a.conns_accepted, 5);
+        assert_eq!(a.conns_evicted, 2);
+        assert_eq!(a.conns_failed, 1);
+        assert_eq!(a.wakes, 12);
+
+        let mut g = GroupMetrics::default();
+        g.reactors.push(a);
+        g.reactors.push(b);
+        let r = g.report();
+        assert!(r.contains("reactor 0: accepted=5"), "{r}");
+        assert!(r.contains("failed=1"), "{r}");
+        assert!(r.contains("wakes=12"), "{r}");
+        assert!(r.contains("reactor 1: accepted=2"), "{r}");
+
+        // A trace-harness group reports no reactor lines at all.
+        let g = GroupMetrics::default();
+        assert!(!g.report().contains("reactor"), "{}", g.report());
     }
 
     #[test]

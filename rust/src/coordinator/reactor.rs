@@ -14,6 +14,11 @@
 //! CI runs on Linux). The API is deliberately tiny: register / modify /
 //! deregister an fd with a `u64` token and read/write interest, then
 //! `wait` for a batch of [`Event`]s.
+//!
+//! [`WakeFd`] vendors `eventfd` the same way: an 8-byte counter fd that
+//! other threads bump to wake a reactor parked in `wait` with no timeout
+//! tick — the kernel-side add is atomic, so `signal()` is safe from any
+//! thread while the owning reactor holds the fd registered.
 
 use std::io;
 use std::os::unix::io::RawFd;
@@ -42,12 +47,73 @@ struct EpollEvent {
     data: u64,
 }
 
+const EFD_NONBLOCK: i32 = 0o4000;
+const EFD_CLOEXEC: i32 = 0o2000000;
+
 extern "C" {
     fn epoll_create1(flags: i32) -> i32;
     fn epoll_ctl(epfd: i32, op: i32, fd: i32, event: *mut EpollEvent) -> i32;
     fn epoll_wait(epfd: i32, events: *mut EpollEvent, maxevents: i32,
                   timeout_ms: i32) -> i32;
+    fn eventfd(initval: u32, flags: i32) -> i32;
+    fn read(fd: i32, buf: *mut u8, count: usize) -> isize;
+    fn write(fd: i32, buf: *const u8, count: usize) -> isize;
     fn close(fd: i32) -> i32;
+}
+
+/// A vendored `eventfd` wakeup handle.
+///
+/// The owning reactor registers `as_raw_fd()` for read interest; any
+/// other thread calls [`WakeFd::signal`] to make the next (or current)
+/// `epoll_wait` return immediately. The fd is a saturating 64-bit
+/// counter: concurrent signals coalesce into one readable event, and
+/// [`WakeFd::drain`] resets it so level-triggered polling goes quiet
+/// again. Both ends are a single syscall — no locks, no pipes.
+pub struct WakeFd {
+    fd: RawFd,
+}
+
+impl WakeFd {
+    pub fn new() -> Result<WakeFd> {
+        let fd = unsafe { eventfd(0, EFD_NONBLOCK | EFD_CLOEXEC) };
+        if fd < 0 {
+            return Err(anyhow!("eventfd: {}", io::Error::last_os_error()));
+        }
+        Ok(WakeFd { fd })
+    }
+
+    /// Wake the reactor watching this fd. Never blocks: if the counter
+    /// is already saturated the write fails with EAGAIN, but a wakeup is
+    /// pending in that case by definition, so the error is ignored.
+    pub fn signal(&self) {
+        let one: u64 = 1;
+        unsafe {
+            write(self.fd, &one as *const u64 as *const u8,
+                  std::mem::size_of::<u64>());
+        }
+    }
+
+    /// Reset the counter after a wakeup so the fd stops reading as ready.
+    /// Ignores EAGAIN (someone else — or nobody — already drained it).
+    pub fn drain(&self) {
+        let mut buf: u64 = 0;
+        unsafe {
+            read(self.fd, &mut buf as *mut u64 as *mut u8,
+                 std::mem::size_of::<u64>());
+        }
+    }
+
+    pub fn as_raw_fd(&self) -> RawFd {
+        self.fd
+    }
+}
+
+impl Drop for WakeFd {
+    fn drop(&mut self) {
+        unsafe {
+            close(self.fd);
+        }
+    }
 }
 
 /// What a registered fd wants to be woken for.
@@ -185,6 +251,7 @@ mod tests {
     use std::io::Write;
     use std::net::{TcpListener, TcpStream};
     use std::os::unix::io::AsRawFd;
+    use std::time::Instant;
 
     #[test]
     fn reports_accept_and_read_readiness() {
@@ -238,5 +305,41 @@ mod tests {
         assert!(events.iter().all(|e| e.token != 2 || !e.writable),
                 "writable after interest dropped: {events:?}");
         r.deregister(accepted.as_raw_fd()).unwrap();
+    }
+
+    #[test]
+    fn wakefd_signals_across_threads_and_drains_quiet() {
+        let mut r = Reactor::new().unwrap();
+        let wake = std::sync::Arc::new(WakeFd::new().unwrap());
+        r.register(wake.as_raw_fd(), 7, Interest::READ).unwrap();
+
+        let mut events = Vec::new();
+        r.wait(Duration::from_millis(1), &mut events).unwrap();
+        assert!(events.is_empty(), "fresh eventfd must be quiet");
+
+        // Signal from another thread after a delay: the reactor must be
+        // woken out of a long wait, not at the timeout.
+        let w = wake.clone();
+        let t0 = Instant::now();
+        let h = std::thread::spawn(move || {
+            std::thread::sleep(Duration::from_millis(20));
+            w.signal();
+            w.signal(); // coalesces with the first
+        });
+        r.wait(Duration::from_secs(10), &mut events).unwrap();
+        h.join().unwrap();
+        assert!(t0.elapsed() < Duration::from_secs(5),
+                "wait did not wake on signal");
+        assert!(events.iter().any(|e| e.token == 7 && e.readable),
+                "no wake event: {events:?}");
+
+        // Level-triggered: still readable until drained, quiet after.
+        r.wait(Duration::from_millis(1), &mut events).unwrap();
+        assert!(events.iter().any(|e| e.token == 7 && e.readable),
+                "undrained eventfd must stay ready");
+        wake.drain();
+        r.wait(Duration::from_millis(1), &mut events).unwrap();
+        assert!(events.is_empty(), "drained eventfd must be quiet");
+        wake.drain(); // double drain is a harmless EAGAIN
     }
 }

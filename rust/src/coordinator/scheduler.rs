@@ -209,4 +209,106 @@ impl TraceRunner {
         }
         Ok(completions)
     }
+
+    /// Replay against the lane views of a multi-lane group (see
+    /// [`EngineGroup::into_lanes`]) from a single client thread, the way
+    /// the multi-reactor server partitions connections: trace entry `e`
+    /// is submitted through lane `e % lanes` with `id == e`, which
+    /// satisfies the lane-ownership contract (`id % lanes == lane`) by
+    /// construction and keeps ids equal to trace position — the module's
+    /// comparability contract — so a run over `L` lanes is comparable
+    /// per-request with `run_group` over one. Admission windowing,
+    /// deferral backoff, and rejection backoff are identical to
+    /// `run_group` (same fixed RNG seed), with "inflight" meaning the sum
+    /// across lanes. Polling rotates: each pass drains one lane with a
+    /// short wait and the rest without blocking, so no lane's completions
+    /// can starve behind another's.
+    pub fn run_lanes<E: DecodeEngine>(&self, lanes: &mut [EngineGroup<E>],
+                                      trace: &[TracedRequest])
+                                      -> Result<Vec<Completion>> {
+        let n_lanes = lanes.len();
+        anyhow::ensure!(n_lanes > 0, "run_lanes needs at least one lane");
+        if n_lanes == 1 {
+            return self.run_group(&mut lanes[0], trace);
+        }
+        let mut completions = Vec::with_capacity(trace.len());
+        let start = Instant::now();
+        let window = lanes[0].admission_window();
+        let mut rng = crate::util::rng::Rng::new(0xBAC0_FF5E);
+        let mut pending: Vec<usize> = (0..trace.len()).collect();
+        let mut retry_at: Vec<Option<Instant>> = vec![None; trace.len()];
+        let mut streak: Vec<u32> = vec![0; trace.len()];
+        let mut backoff = |base_ms: u64, streak: &mut u32,
+                           rng: &mut crate::util::rng::Rng| {
+            let exp = 1u64 << (*streak).min(6);
+            let wait_ms = (base_ms.max(1) * exp) as f64 * (0.5 + rng.f64());
+            *streak += 1;
+            Instant::now() + Duration::from_micros((wait_ms * 1000.0) as u64)
+        };
+        let max_prompt = lanes[0].max_prompt_len();
+        if let Some(t) = trace.iter().find(|t| t.episode.prompt.len() > max_prompt)
+        {
+            anyhow::bail!("trace prompt of {} tokens exceeds the engines' \
+                           max prompt length {max_prompt}",
+                          t.episode.prompt.len());
+        }
+        let inflight = |lanes: &[EngineGroup<E>]| -> usize {
+            lanes.iter().map(|l| l.inflight()).sum()
+        };
+        let mut rotor = 0usize;
+        while !pending.is_empty() || inflight(lanes) > 0 {
+            let mut i = 0;
+            while i < pending.len() {
+                let e = pending[i];
+                if let Some(t) = retry_at[e] {
+                    if Instant::now() < t {
+                        i += 1;
+                        continue;
+                    }
+                    retry_at[e] = None;
+                }
+                let due = match self.replay {
+                    Replay::RealTime => {
+                        start.elapsed().as_secs_f64() >= trace[e].arrival_s
+                    }
+                    Replay::Virtual => inflight(lanes) < window,
+                };
+                if !due {
+                    break;
+                }
+                let lane = e % n_lanes;
+                match lanes[lane].submit(self.request(e as u64, &trace[e]))? {
+                    SubmitOutcome::Routed(_) => {
+                        streak[e] = 0;
+                        pending.remove(i);
+                    }
+                    SubmitOutcome::Deferred { retry_after_ms } => {
+                        retry_at[e] = Some(backoff(retry_after_ms,
+                                                   &mut streak[e], &mut rng));
+                        i += 1;
+                    }
+                    SubmitOutcome::Rejected => {
+                        retry_at[e] = Some(backoff(2, &mut streak[e],
+                                                   &mut rng));
+                        break;
+                    }
+                }
+            }
+            // One lane gets a bounded wait, the others a non-blocking
+            // sweep; the rotor advances every pass so waiting is shared.
+            for k in 0..n_lanes {
+                let lane = (rotor + k) % n_lanes;
+                let wait = if k == 0 {
+                    Duration::from_millis(1)
+                } else {
+                    Duration::ZERO
+                };
+                if let Some(c) = lanes[lane].poll(wait)? {
+                    completions.push(c);
+                }
+            }
+            rotor = (rotor + 1) % n_lanes;
+        }
+        Ok(completions)
+    }
 }

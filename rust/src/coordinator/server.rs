@@ -31,13 +31,25 @@
 //! "resource_exhausted" (preempted for memory and out of retry budget);
 //! all carry whatever was generated up to that point.
 //!
-//! The front-end is a **single-threaded reactor** over raw epoll (see
-//! [`super::reactor`]): one thread drives non-blocking accept, reads,
-//! writes, and engine-completion fan-out over per-connection state
-//! machines with partial-read/partial-write buffers. Compared to the
-//! previous thread-per-connection design this caps front-end cost at one
-//! thread regardless of connection count and makes hard limits
-//! enforceable:
+//! The front-end is a fleet of **reactor threads** over raw epoll (see
+//! [`super::reactor`]): each reactor owns a disjoint set of connections
+//! and drives non-blocking accept, reads, writes, and engine-completion
+//! fan-out over per-connection state machines with
+//! partial-read/partial-write buffers. [`ServeConfig::reactors`] sets
+//! the fleet size (default 1 — the original single-threaded shape; 0 =
+//! auto from the core count). With N > 1 each reactor prefers its own
+//! `SO_REUSEPORT` listener (the kernel spreads accepts), falling back to
+//! an accept-handoff channel from reactor 0 when the socket option is
+//! unavailable or the caller pre-bound a single listener ([`serve_on`]).
+//! Completion delivery is wakeup-driven: every reactor parks in
+//! `epoll_wait` on an [`WakeFd`] eventfd that the shard fleet signals
+//! after each event send ([`EngineGroup::register_wake`]), so an idle
+//! reactor blocks indefinitely yet sees tokens at syscall latency — no
+//! completion-poll tick. Request ids are partitioned by lane
+//! (`id % reactors`), so each completion flows back to the reactor that
+//! owns its connection. Compared to the thread-per-connection design
+//! this caps front-end cost at N threads regardless of connection count
+//! and makes hard limits enforceable:
 //!
 //! - **connection cap** (`max_conns`): excess clients get a structured
 //!   error reply and are closed immediately — no unbounded thread spawn.
@@ -68,20 +80,29 @@
 use std::collections::HashMap;
 use std::io::{Read, Write};
 use std::net::{TcpListener, TcpStream};
-use std::os::unix::io::AsRawFd;
+use std::os::unix::io::{AsRawFd, FromRawFd};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::Arc;
 use std::time::{Duration, Instant};
 
-use anyhow::{anyhow, Result};
+use anyhow::{anyhow, bail, Result};
 
-use super::reactor::{Event, Interest, Reactor};
+use super::metrics::ReactorStats;
+use super::reactor::{Event, Interest, Reactor, WakeFd};
 use super::request::{Completion, Priority, Request};
 use super::shard::{EngineGroup, GroupEvent, SubmitOutcome};
 use super::DecodeEngine;
 use crate::util::json::Json;
 
-/// Reactor token reserved for the listener; connections get tokens
-/// starting at 1.
+/// Reactor token reserved for the listener (when this reactor owns one).
 const LISTENER: u64 = 0;
+
+/// Reactor token reserved for the completion/handoff wake eventfd.
+const WAKER: u64 = 1;
+
+/// Connection tokens start here.
+const FIRST_CONN: u64 = 2;
 
 /// A request line longer than this (no newline seen yet) is answered
 /// with an error and the connection closed — a reasonable bound for a
@@ -118,6 +139,12 @@ pub struct ServeConfig {
     /// Scheduling class for requests that carry no `"priority"` field
     /// (CLI `--default-priority`).
     pub default_priority: Priority,
+    /// Front-end reactor threads (CLI `--reactors`). `0` = auto: one
+    /// reactor per ~4 cores, clamped to `[1, 8]`. The effective count is
+    /// additionally clamped to the group's lane count
+    /// ([`super::shard::GroupConfig::lanes`]) — each reactor needs a
+    /// completion lane of its own.
+    pub reactors: usize,
 }
 
 impl Default for ServeConfig {
@@ -129,8 +156,24 @@ impl Default for ServeConfig {
             stream_by_default: false,
             deadline: None,
             default_priority: Priority::default(),
+            reactors: 1,
         }
     }
+}
+
+/// Resolve the `reactors` knob against the machine: `0` = auto — one
+/// reactor per ~4 cores (the front end only parses and frames; shard
+/// threads should get the bulk), clamped to `[1, 8]`. An explicit
+/// request is honoured as-is. `main.rs` uses this to size
+/// [`super::shard::GroupConfig::lanes`] before building the group.
+pub fn resolve_reactors(requested: usize) -> usize {
+    if requested != 0 {
+        return requested;
+    }
+    let cores = std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1);
+    (cores / 4).clamp(1, 8)
 }
 
 /// One parsed request line: the request itself plus the per-request
@@ -259,24 +302,272 @@ struct Conn {
     read_closed: bool,
 }
 
+// Vendored socket syscalls for `SO_REUSEPORT` listeners (x86-64/aarch64
+// Linux ABI, same approach as the epoll shims in `super::reactor` — the
+// offline vendor set has no libc crate).
+const AF_INET: i32 = 2;
+const SOCK_STREAM: i32 = 1;
+const SOCK_CLOEXEC: i32 = 0o2000000;
+const SOL_SOCKET: i32 = 1;
+const SO_REUSEADDR: i32 = 2;
+const SO_REUSEPORT: i32 = 15;
+
+/// `struct sockaddr_in` (16 bytes); `sin_port` and `sin_addr` are in
+/// network byte order.
+#[repr(C)]
+#[derive(Clone, Copy)]
+struct SockAddrIn {
+    sin_family: u16,
+    sin_port: u16,
+    sin_addr: u32,
+    sin_zero: [u8; 8],
+}
+
+extern "C" {
+    fn socket(domain: i32, ty: i32, protocol: i32) -> i32;
+    fn setsockopt(fd: i32, level: i32, optname: i32, optval: *const i32,
+                  optlen: u32) -> i32;
+    fn bind(fd: i32, addr: *const SockAddrIn, addrlen: u32) -> i32;
+    fn listen(fd: i32, backlog: i32) -> i32;
+    fn getsockname(fd: i32, addr: *mut SockAddrIn, addrlen: *mut u32) -> i32;
+}
+
+/// Bind `n` independent listeners to one address via `SO_REUSEPORT`
+/// (the kernel load-balances accepts across them — the multi-reactor
+/// fast path, one listener per reactor, no shared accept lock). Port 0
+/// binds the first listener ephemeral and pins the rest to the port it
+/// got. IPv4 only. Errors — including `ENOPROTOOPT` from a kernel
+/// without `SO_REUSEPORT` — leave nothing bound; callers fall back to
+/// single-listener accept handoff.
+pub fn reuseport_listeners(addr: &str, n: usize) -> Result<Vec<TcpListener>> {
+    let sa: std::net::SocketAddr =
+        addr.parse().map_err(|e| anyhow!("parse {addr}: {e}"))?;
+    let std::net::SocketAddr::V4(v4) = sa else {
+        bail!("SO_REUSEPORT listeners support IPv4 addresses only");
+    };
+    let mut port = v4.port();
+    let mut out = Vec::with_capacity(n);
+    for i in 0..n {
+        let fd = unsafe { socket(AF_INET, SOCK_STREAM | SOCK_CLOEXEC, 0) };
+        if fd < 0 {
+            bail!("socket: {}", std::io::Error::last_os_error());
+        }
+        // Wrap immediately: any error below drops (closes) the fd, and
+        // earlier listeners in `out` close with it.
+        let listener = unsafe { TcpListener::from_raw_fd(fd) };
+        let one: i32 = 1;
+        for opt in [SO_REUSEADDR, SO_REUSEPORT] {
+            if unsafe { setsockopt(fd, SOL_SOCKET, opt, &one, 4) } < 0 {
+                bail!("setsockopt(opt={opt}): {}",
+                      std::io::Error::last_os_error());
+            }
+        }
+        let sin = SockAddrIn {
+            sin_family: AF_INET as u16,
+            sin_port: port.to_be(),
+            sin_addr: u32::from_ne_bytes(v4.ip().octets()),
+            sin_zero: [0; 8],
+        };
+        let len = std::mem::size_of::<SockAddrIn>() as u32;
+        if unsafe { bind(fd, &sin, len) } < 0 {
+            bail!("bind {addr}: {}", std::io::Error::last_os_error());
+        }
+        if unsafe { listen(fd, 1024) } < 0 {
+            bail!("listen: {}", std::io::Error::last_os_error());
+        }
+        if i == 0 && port == 0 {
+            // Ephemeral bind: read the real port so siblings share it.
+            let mut got = sin;
+            let mut gl = len;
+            if unsafe { getsockname(fd, &mut got, &mut gl) } < 0 {
+                bail!("getsockname: {}", std::io::Error::last_os_error());
+            }
+            port = u16::from_be(got.sin_port);
+        }
+        out.push(listener);
+    }
+    Ok(out)
+}
+
+/// How one reactor comes by its connections.
+enum ListenerMode {
+    /// This reactor owns a listener: the sole listener of a 1-reactor
+    /// server, or its own `SO_REUSEPORT` socket in a fleet.
+    Own(TcpListener),
+    /// Fallback fleet, reactor 0: owns the only listener, keeps every
+    /// N-th accepted connection, hands the rest to its peers.
+    OwnAndDistribute(TcpListener, Vec<Sender<TcpStream>>),
+    /// Fallback fleet, reactors 1..N: adopt connections reactor 0 hands
+    /// over (each send is followed by a wake signal).
+    Handoff(Receiver<TcpStream>),
+}
+
+/// Build the fallback modes for a fleet that must share one bound
+/// listener: reactor 0 accepts and round-robins, the rest adopt.
+fn handoff_modes(listener: TcpListener, n: usize) -> Vec<ListenerMode> {
+    let mut txs = Vec::with_capacity(n - 1);
+    let mut rest = Vec::with_capacity(n - 1);
+    for _ in 1..n {
+        let (tx, rx) = channel();
+        txs.push(tx);
+        rest.push(ListenerMode::Handoff(rx));
+    }
+    let mut out = Vec::with_capacity(n);
+    out.push(ListenerMode::OwnAndDistribute(listener, txs));
+    out.extend(rest);
+    out
+}
+
+/// Fleet-wide serve state shared by all reactors.
+struct ReactorShared {
+    /// Completions delivered across the fleet ([`ServeConfig::limit`] is
+    /// a fleet limit).
+    served: AtomicUsize,
+    /// Set when any reactor reaches the limit or fails; everyone exits.
+    stop: AtomicBool,
+    /// Every reactor's wake fd, indexed by reactor — for stop broadcast
+    /// and accept-handoff nudges.
+    wakes: Vec<Arc<WakeFd>>,
+}
+
+impl ReactorShared {
+    /// Ask every reactor to wind down (they still drain their own lanes).
+    fn request_stop(&self) {
+        self.stop.store(true, Ordering::SeqCst);
+        for w in &self.wakes {
+            w.signal();
+        }
+    }
+}
+
 /// Serve forever on `addr` across the group's shards.
-pub fn serve<E: DecodeEngine>(group: EngineGroup<E>, addr: &str,
-                              cfg: ServeConfig) -> Result<()> {
-    let listener = TcpListener::bind(addr).map_err(|e| anyhow!("bind {addr}: {e}"))?;
-    eprintln!("[seerattn] serving on {addr} ({} shard{}, max-conns {}, \
-               idle-timeout {:?}, queue-depth {})",
+pub fn serve<E: DecodeEngine + 'static>(group: EngineGroup<E>, addr: &str,
+                                        cfg: ServeConfig) -> Result<()> {
+    let n = resolve_reactors(cfg.reactors).min(group.n_lanes()).max(1);
+    let modes = if n == 1 {
+        let l = TcpListener::bind(addr).map_err(|e| anyhow!("bind {addr}: {e}"))?;
+        vec![ListenerMode::Own(l)]
+    } else {
+        match reuseport_listeners(addr, n) {
+            Ok(ls) => ls.into_iter().map(ListenerMode::Own).collect(),
+            Err(e) => {
+                eprintln!("[seerattn] SO_REUSEPORT listeners unavailable \
+                           ({e}); falling back to accept handoff");
+                let l = TcpListener::bind(addr)
+                    .map_err(|e| anyhow!("bind {addr}: {e}"))?;
+                handoff_modes(l, n)
+            }
+        }
+    };
+    eprintln!("[seerattn] serving on {addr} ({} shard{}, {} reactor{}, \
+               max-conns {}, idle-timeout {:?}, queue-depth {})",
               group.n_shards(),
               if group.n_shards() == 1 { "" } else { "s" },
+              n, if n == 1 { "" } else { "s" },
               cfg.max_conns, cfg.idle_timeout, group.queue_depth());
-    serve_on(listener, group, cfg)
+    serve_fleet(modes, group, cfg)
 }
 
 /// Serve on an already-bound listener. With `cfg.limit = Some(n)` the
-/// loop exits after collecting `n` completions, drains in-flight work,
-/// and prints the aggregated fleet metrics on the way out.
-pub fn serve_on<E: DecodeEngine>(listener: TcpListener, group: EngineGroup<E>,
-                                 cfg: ServeConfig) -> Result<()> {
-    FrontEnd::new(listener, group, cfg)?.run()
+/// loop exits after collecting `n` completions fleet-wide, drains
+/// in-flight work, and prints the aggregated metrics on the way out.
+/// With `cfg.reactors` > 1 the single pre-bound listener forces the
+/// accept-handoff fallback (`SO_REUSEPORT` cannot be retrofitted onto a
+/// bound socket) — which is exactly the path the fallback tests pin.
+pub fn serve_on<E: DecodeEngine + 'static>(listener: TcpListener,
+                                           group: EngineGroup<E>,
+                                           cfg: ServeConfig) -> Result<()> {
+    let n = resolve_reactors(cfg.reactors).min(group.n_lanes()).max(1);
+    let modes = if n == 1 {
+        vec![ListenerMode::Own(listener)]
+    } else {
+        handoff_modes(listener, n)
+    };
+    serve_fleet(modes, group, cfg)
+}
+
+/// Run one reactor per mode; the calling thread drives reactor 0 (the
+/// lane that owns the shard fleet), collects every reactor's stats, and
+/// performs the single group shutdown.
+fn serve_fleet<E: DecodeEngine + 'static>(modes: Vec<ListenerMode>,
+                                          group: EngineGroup<E>,
+                                          cfg: ServeConfig) -> Result<()> {
+    let n = modes.len();
+    let wakes = (0..n)
+        .map(|_| WakeFd::new().map(Arc::new))
+        .collect::<Result<Vec<_>>>()?;
+    let shared = Arc::new(ReactorShared {
+        served: AtomicUsize::new(0),
+        stop: AtomicBool::new(false),
+        wakes,
+    });
+    let mut lanes = group.into_lanes();
+    // Spare lanes beyond the reactor count (group built with more lanes
+    // than reactors resolved) never receive submissions; drop them.
+    lanes.truncate(n);
+    let spawned: Vec<EngineGroup<E>> = lanes.drain(1..).collect();
+    let lane0 = lanes.pop().expect("lane 0");
+    let mut modes = modes.into_iter();
+    let mode0 = modes.next().expect("mode 0");
+    let mut handles = Vec::with_capacity(n - 1);
+    for (k, (mode, lane)) in modes.zip(spawned).enumerate() {
+        let r = k + 1;
+        let shared = shared.clone();
+        let wake = shared.wakes[r].clone();
+        let h = std::thread::Builder::new()
+            .name(format!("reactor-{r}"))
+            .spawn(move || match FrontEnd::new(mode, lane, cfg, wake, shared) {
+                Ok(fe) => {
+                    let (_lane, stats, failure) = fe.run();
+                    (stats, failure)
+                }
+                Err(e) => (ReactorStats::default(), Some(e)),
+            })
+            .map_err(|e| anyhow!("spawn reactor {r}: {e}"))?;
+        handles.push(h);
+    }
+    let fe0 = match FrontEnd::new(mode0, lane0, cfg, shared.wakes[0].clone(),
+                                  shared.clone()) {
+        Ok(fe) => fe,
+        Err(e) => {
+            shared.request_stop();
+            for h in handles {
+                let _ = h.join();
+            }
+            return Err(e);
+        }
+    };
+    let (group0, stats0, mut failure) = fe0.run();
+    let mut reactors = vec![ReactorStats::default(); n];
+    reactors[0] = stats0;
+    for (k, h) in handles.into_iter().enumerate() {
+        match h.join() {
+            Ok((stats, fail)) => {
+                reactors[k + 1] = stats;
+                if failure.is_none() {
+                    failure = fail;
+                }
+            }
+            Err(_) => {
+                if failure.is_none() {
+                    failure = Some(anyhow!("reactor {} panicked", k + 1));
+                }
+            }
+        }
+    }
+    match failure {
+        None => {
+            let mut gm = group0.shutdown()?;
+            gm.reactors = reactors;
+            eprintln!("{}", gm.report());
+            Ok(())
+        }
+        Some(e) => {
+            // Best-effort teardown; the original failure is the story.
+            let _ = group0.shutdown();
+            Err(e)
+        }
+    }
 }
 
 /// Front-end bookkeeping for one accepted request.
@@ -291,7 +582,13 @@ struct InflightReq {
 
 struct FrontEnd<E: DecodeEngine> {
     reactor: Reactor,
-    listener: TcpListener,
+    mode: ListenerMode,
+    /// This reactor's eventfd: registered at [`WAKER`], signalled by the
+    /// shard fleet on every event for this lane, by reactor 0 on accept
+    /// handoff, and by any reactor broadcasting stop.
+    wake: Arc<WakeFd>,
+    shared: Arc<ReactorShared>,
+    /// This reactor's lane view of the group (ids ≡ lane mod lanes).
     group: EngineGroup<E>,
     cfg: ServeConfig,
     max_prompt: usize,
@@ -299,58 +596,80 @@ struct FrontEnd<E: DecodeEngine> {
     /// Internal request id -> per-request front-end state.
     inflight: HashMap<u64, InflightReq>,
     next_token: u64,
+    /// Next internal request id: starts at the lane index, strides by
+    /// the lane count, so id ownership routes completions back here.
     next_req: u64,
-    served: usize,
-    conns_rejected: u64,
-    conns_evicted: u64,
+    /// Round-robin cursor for accept handoff (reactor 0, fallback mode).
+    next_handoff: usize,
+    /// Earliest instant any idle/stuck eviction can fire; the O(conns)
+    /// scan — and the epoll timeout — are driven by it.
+    next_idle_check: Instant,
+    stats: ReactorStats,
     failure: Option<anyhow::Error>,
 }
 
 impl<E: DecodeEngine> FrontEnd<E> {
-    fn new(listener: TcpListener, group: EngineGroup<E>,
-           cfg: ServeConfig) -> Result<FrontEnd<E>> {
-        listener.set_nonblocking(true)?;
+    fn new(mode: ListenerMode, group: EngineGroup<E>, cfg: ServeConfig,
+           wake: Arc<WakeFd>, shared: Arc<ReactorShared>)
+           -> Result<FrontEnd<E>> {
         let reactor = Reactor::new()?;
-        reactor.register(listener.as_raw_fd(), LISTENER, Interest::READ)?;
+        match &mode {
+            ListenerMode::Own(l) | ListenerMode::OwnAndDistribute(l, _) => {
+                l.set_nonblocking(true)?;
+                reactor.register(l.as_raw_fd(), LISTENER, Interest::READ)?;
+            }
+            ListenerMode::Handoff(_) => {}
+        }
+        reactor.register(wake.as_raw_fd(), WAKER, Interest::READ)?;
+        group.register_wake(wake.clone());
         let max_prompt = group.max_prompt_len();
+        let next_req = group.lane() as u64;
         Ok(FrontEnd {
             reactor,
-            listener,
+            mode,
+            wake,
+            shared,
             group,
             cfg,
             max_prompt,
             conns: HashMap::new(),
             inflight: HashMap::new(),
-            next_token: 1,
-            next_req: 0,
-            served: 0,
-            conns_rejected: 0,
-            conns_evicted: 0,
+            next_token: FIRST_CONN,
+            next_req,
+            next_handoff: 0,
+            next_idle_check: Instant::now() + cfg.idle_timeout,
+            stats: ReactorStats::default(),
             failure: None,
         })
     }
 
-    fn run(mut self) -> Result<()> {
+    fn run(mut self) -> (EngineGroup<E>, ReactorStats, Option<anyhow::Error>) {
         let mut events: Vec<Event> = Vec::new();
         loop {
+            if self.shared.stop.load(Ordering::SeqCst) {
+                break;
+            }
             if let Some(n) = self.cfg.limit {
                 // Checked at loop entry so limit = Some(0) terminates
                 // without waiting for a completion.
-                if self.served >= n {
+                if self.shared.served.load(Ordering::SeqCst) >= n {
+                    self.shared.request_stop();
                     break;
                 }
             }
             if self.failure.is_some() {
                 break;
             }
-            // Completions can only arrive while work is in flight; when
-            // nothing is, wait longer per syscall (idle eviction still
-            // ticks, just at coarser granularity).
-            let timeout = if self.group.inflight() > 0 {
-                Duration::from_millis(1)
-            } else {
-                Duration::from_millis(20)
-            };
+            // The wake eventfd replaces the old completion-poll tick:
+            // shard events, accept handoffs, and stop requests all
+            // signal the fd, so the only *timed* work left is idle
+            // eviction — park until its earliest deadline. An idle
+            // server therefore blocks for the whole idle window in one
+            // syscall, yet sees a completion the instant it is sent.
+            let timeout = self
+                .next_idle_check
+                .saturating_duration_since(Instant::now())
+                .clamp(Duration::from_millis(1), Duration::from_secs(600));
             if let Err(e) = self.reactor.wait(timeout, &mut events) {
                 // Route through the failure path so the shard fleet is
                 // still torn down and connections closed.
@@ -358,75 +677,153 @@ impl<E: DecodeEngine> FrontEnd<E> {
                 break;
             }
             for ev in &events {
-                if ev.token == LISTENER {
-                    self.accept_ready();
-                } else {
-                    if ev.readable {
-                        self.conn_readable(ev.token);
+                match ev.token {
+                    LISTENER => self.accept_ready(),
+                    WAKER => {
+                        self.wake.drain();
+                        self.stats.wakes += 1;
                     }
-                    if ev.writable {
-                        self.conn_writable(ev.token);
+                    token => {
+                        if ev.readable {
+                            self.conn_readable(token);
+                        }
+                        if ev.writable {
+                            self.conn_writable(token);
+                        }
                     }
                 }
                 if self.failure.is_some() {
                     break;
                 }
             }
+            self.adopt_handoffs();
             self.pump_events();
             self.evict_idle();
         }
         self.finish()
     }
 
-    /// Accept everything pending; over-cap clients get a structured
-    /// reply and an immediate close.
+    /// Accept everything pending on this reactor's listener (if it has
+    /// one) and place each connection — locally, or with a peer reactor
+    /// in handoff mode.
     fn accept_ready(&mut self) {
         loop {
-            match self.listener.accept() {
-                Ok((stream, _)) => {
-                    if stream.set_nonblocking(true).is_err() {
-                        continue;
-                    }
-                    if self.conns.len() >= self.cfg.max_conns {
-                        self.conns_rejected += 1;
-                        let line = error_line(
-                            None,
-                            &format!("server at connection capacity \
-                                      (max-conns {})", self.cfg.max_conns),
-                        );
-                        // Best effort: a fresh socket's send buffer is
-                        // empty, so this short line lands unless the
-                        // peer is already gone.
-                        let mut s = stream;
-                        let _ = s.write_all(line.as_bytes());
-                        let _ = s.write_all(b"\n");
-                        let _ = s.shutdown(std::net::Shutdown::Both);
-                        continue;
-                    }
-                    let token = self.next_token;
-                    self.next_token += 1;
-                    if self
-                        .reactor
-                        .register(stream.as_raw_fd(), token, Interest::READ)
-                        .is_err()
-                    {
-                        continue;
-                    }
-                    self.conns.insert(token, Conn {
-                        stream,
-                        rd: Vec::new(),
-                        wr: Vec::new(),
-                        last_activity: Instant::now(),
-                        inflight: 0,
-                        want_write: false,
-                        closing: false,
-                        read_closed: false,
-                    });
-                }
+            let accepted = match &self.mode {
+                ListenerMode::Own(l) => l.accept(),
+                ListenerMode::OwnAndDistribute(l, _) => l.accept(),
+                ListenerMode::Handoff(_) => return,
+            };
+            match accepted {
+                Ok((stream, _)) => self.place(stream),
                 Err(ref e) if e.kind() == std::io::ErrorKind::WouldBlock => break,
                 Err(ref e) if e.kind() == std::io::ErrorKind::Interrupted => {}
                 Err(_) => break,
             }
+        }
+    }
+
+    /// Route a freshly accepted connection: round-robin across the fleet
+    /// in handoff mode (reactor 0 keeps every N-th), local otherwise.
+    fn place(&mut self, stream: TcpStream) {
+        let n_peers = match &self.mode {
+            ListenerMode::OwnAndDistribute(_, peers) => peers.len(),
+            _ => 0,
+        };
+        if n_peers > 0 {
+            let target = self.next_handoff % (n_peers + 1);
+            self.next_handoff += 1;
+            if target > 0 {
+                let sent = match &self.mode {
+                    ListenerMode::OwnAndDistribute(_, peers) => {
+                        peers[target - 1].send(stream)
+                    }
+                    _ => unreachable!("n_peers > 0 only in distribute mode"),
+                };
+                match sent {
+                    // The peer parks on its wake fd; nudge it to adopt.
+                    Ok(()) => self.shared.wakes[target].signal(),
+                    // Peer already exited (failure path): serve locally
+                    // rather than dropping an accepted client.
+                    Err(back) => self.adopt(back.0),
+                }
+                return;
+            }
+        }
+        self.adopt(stream);
+    }
+
+    /// Adopt connections peers handed over (handoff fleet mode only).
+    fn adopt_handoffs(&mut self) {
+        loop {
+            let next = match &self.mode {
+                ListenerMode::Handoff(rx) => rx.try_recv().ok(),
+                _ => None,
+            };
+            match next {
+                Some(stream) => self.adopt(stream),
+                None => break,
+            }
+        }
+    }
+
+    /// Take ownership of a connected stream: non-blocking mode, cap
+    /// check (over-cap clients get a structured reply and an immediate
+    /// close), reactor registration, bookkeeping.
+    fn adopt(&mut self, stream: TcpStream) {
+        if stream.set_nonblocking(true).is_err() {
+            // A socket that cannot be made non-blocking is unusable, but
+            // it must not vanish from the accounting (this was once a
+            // silent drop): `conns_failed` keeps capacity math honest.
+            self.stats.conns_failed += 1;
+            return;
+        }
+        if self.conns.len() >= self.cfg.max_conns {
+            self.stats.conns_rejected += 1;
+            let line = error_line(
+                None,
+                &format!("server at connection capacity \
+                          (max-conns {})", self.cfg.max_conns),
+            );
+            // Best effort: a fresh socket's send buffer is empty, so
+            // this short line lands unless the peer is already gone.
+            let mut s = stream;
+            let _ = s.write_all(line.as_bytes());
+            let _ = s.write_all(b"\n");
+            let _ = s.shutdown(std::net::Shutdown::Both);
+            return;
+        }
+        let token = self.next_token;
+        self.next_token += 1;
+        if self
+            .reactor
+            .register(stream.as_raw_fd(), token, Interest::READ)
+            .is_err()
+        {
+            self.stats.conns_failed += 1;
+            return;
+        }
+        self.stats.conns_accepted += 1;
+        let now = Instant::now();
+        self.conns.insert(token, Conn {
+            stream,
+            rd: Vec::new(),
+            wr: Vec::new(),
+            last_activity: now,
+            inflight: 0,
+            want_write: false,
+            closing: false,
+            read_closed: false,
+        });
+        self.note_idle_deadline(now + self.cfg.idle_timeout);
+    }
+
+    /// Record a new (earlier) eviction deadline; [`FrontEnd::evict_idle`]
+    /// scans no later than the earliest recorded one. Refreshes that
+    /// merely *extend* a connection's deadline need no call — a scan
+    /// firing early just reschedules.
+    fn note_idle_deadline(&mut self, at: Instant) {
+        if at < self.next_idle_check {
+            self.next_idle_check = at;
         }
     }
 
@@ -572,7 +969,8 @@ impl<E: DecodeEngine> FrontEnd<E> {
         });
         match routed {
             Ok(SubmitOutcome::Routed(_)) => {
-                self.next_req += 1;
+                // Stride by the lane count so this id stays this lane's.
+                self.next_req += self.group.n_lanes() as u64;
                 self.inflight.insert(internal, InflightReq {
                     conn: token,
                     client_id,
@@ -643,7 +1041,13 @@ impl<E: DecodeEngine> FrontEnd<E> {
                 }
             }
             GroupEvent::Done(c) => {
-                self.served += 1;
+                let served =
+                    self.shared.served.fetch_add(1, Ordering::SeqCst) + 1;
+                if self.cfg.limit.map_or(false, |n| served >= n) {
+                    // Fleet limit reached: wake every reactor so no one
+                    // keeps parking on an idle eventfd.
+                    self.shared.request_stop();
+                }
                 self.deliver(c);
             }
         }
@@ -656,9 +1060,17 @@ impl<E: DecodeEngine> FrontEnd<E> {
         let token = entry.conn;
         c.id = entry.client_id;
         let line = encode_completion(&c);
+        let mut idle_from = None;
         if let Some(conn) = self.conns.get_mut(&token) {
             conn.inflight = conn.inflight.saturating_sub(1);
             conn.last_activity = Instant::now();
+            if conn.inflight == 0 {
+                // Back to idle-eligible: its eviction clock starts now.
+                idle_from = Some(conn.last_activity);
+            }
+        }
+        if let Some(at) = idle_from {
+            self.note_idle_deadline(at + self.cfg.idle_timeout);
         }
         // The owning connection may be gone (client hung up mid-decode;
         // its work was cancelled at close): the completion is dropped.
@@ -667,8 +1079,15 @@ impl<E: DecodeEngine> FrontEnd<E> {
 
     /// Evict connections with no in-flight work and no traffic inside
     /// the idle window. In-flight work keeps a connection alive no
-    /// matter how long decode takes.
+    /// matter how long decode takes. The O(conns) scan runs only when
+    /// the earliest tracked deadline (`next_idle_check`) is due — which
+    /// also bounds the reactor's epoll timeout, so an idle reactor
+    /// parks until exactly then instead of rescanning every tick.
     fn evict_idle(&mut self) {
+        let now = Instant::now();
+        if now < self.next_idle_check {
+            return;
+        }
         let cutoff = self.cfg.idle_timeout;
         let stale: Vec<u64> = self
             .conns
@@ -679,7 +1098,7 @@ impl<E: DecodeEngine> FrontEnd<E> {
             .map(|(&t, _)| t)
             .collect();
         for token in stale {
-            self.conns_evicted += 1;
+            self.stats.conns_evicted += 1;
             let line = error_line(
                 None,
                 &format!("idle timeout ({} ms), closing",
@@ -699,6 +1118,23 @@ impl<E: DecodeEngine> FrontEnd<E> {
         for token in stuck {
             self.close_conn(token);
         }
+        // Reschedule: the earliest deadline among the survivors, one
+        // idle window out when nothing is tracked. Connections with work
+        // in flight re-enter via `deliver`'s note when they go idle.
+        let mut next = now + cutoff;
+        for c in self.conns.values() {
+            let deadline = if c.closing {
+                c.last_activity + cutoff * 2
+            } else if c.inflight == 0 {
+                c.last_activity + cutoff
+            } else {
+                continue;
+            };
+            if deadline < next {
+                next = deadline;
+            }
+        }
+        self.next_idle_check = next;
     }
 
     /// Queue `line` on the connection and push as much as the socket
@@ -707,7 +1143,7 @@ impl<E: DecodeEngine> FrontEnd<E> {
     fn queue_reply(&mut self, token: u64, line: &str) {
         let Some(conn) = self.conns.get_mut(&token) else { return };
         if conn.wr.len() + line.len() + 1 > MAX_WR_BYTES {
-            self.conns_evicted += 1;
+            self.stats.conns_evicted += 1;
             self.close_conn(token);
             return;
         }
@@ -768,11 +1204,18 @@ impl<E: DecodeEngine> FrontEnd<E> {
     /// Mark the connection for close once its output drains (goodbye
     /// lines); closes immediately when nothing is pending.
     fn close_after_flush(&mut self, token: u64) {
+        let mut stuck_at = None;
         if let Some(conn) = self.conns.get_mut(&token) {
             conn.closing = true;
             if conn.wr.is_empty() {
                 self.close_conn(token);
+            } else {
+                // Its stuck-drain deadline is now tracked by the scan.
+                stuck_at = Some(conn.last_activity);
             }
+        }
+        if let Some(at) = stuck_at {
+            self.note_idle_deadline(at + self.cfg.idle_timeout * 2);
         }
     }
 
@@ -805,9 +1248,15 @@ impl<E: DecodeEngine> FrontEnd<E> {
         }
     }
 
-    /// Exit path: drain in-flight work (its replies still flush), report
-    /// fleet metrics, close every connection.
-    fn finish(mut self) -> Result<()> {
+    /// Exit path: drain this lane's in-flight work (its replies still
+    /// flush), close every owned connection, and hand the lane view back
+    /// to [`serve_fleet`] — which joins the fleet and performs the one
+    /// group shutdown.
+    fn finish(mut self) -> (EngineGroup<E>, ReactorStats, Option<anyhow::Error>) {
+        if self.failure.is_some() {
+            // A failing reactor takes the fleet down with it.
+            self.shared.request_stop();
+        }
         if self.failure.is_none() {
             // The limit counts served replies: anything already routed
             // to a shard still gets its reply (and its delta frames)
@@ -820,6 +1269,9 @@ impl<E: DecodeEngine> FrontEnd<E> {
                     Ok(None) => {}
                     Err(e) => self.failure = Some(e),
                 }
+            }
+            if self.failure.is_some() {
+                self.shared.request_stop();
             }
         }
         // Push queued replies out before closing; bounded patience so a
@@ -844,19 +1296,7 @@ impl<E: DecodeEngine> FrontEnd<E> {
         for t in tokens {
             self.close_conn(t);
         }
-        if self.conns_rejected + self.conns_evicted > 0 {
-            eprintln!("[seerattn] front-end: {} connection(s) rejected at cap, \
-                       {} evicted idle",
-                      self.conns_rejected, self.conns_evicted);
-        }
-        match self.failure {
-            None => self.group.shutdown().map(|gm| eprintln!("{}", gm.report())),
-            Some(e) => {
-                // Best-effort teardown; the original failure is the story.
-                let _ = self.group.shutdown();
-                Err(e)
-            }
-        }
+        (self.group, self.stats, self.failure)
     }
 }
 
@@ -969,6 +1409,30 @@ mod tests {
         assert_eq!(j.get("id").unwrap().as_i64().unwrap(), 3);
         assert_eq!(j.get("stop").unwrap().as_str().unwrap(), "eos");
         assert_eq!(j.get("generated").unwrap().as_arr().unwrap().len(), 2);
+    }
+
+    #[test]
+    fn reuseport_listeners_share_one_ephemeral_port() {
+        match reuseport_listeners("127.0.0.1:0", 2) {
+            Ok(ls) => {
+                assert_eq!(ls.len(), 2);
+                let p0 = ls[0].local_addr().unwrap().port();
+                let p1 = ls[1].local_addr().unwrap().port();
+                assert_eq!(p0, p1, "siblings must share the resolved port");
+                assert_ne!(p0, 0, "ephemeral port must be resolved");
+            }
+            // Kernel without SO_REUSEPORT: serve() falls back to accept
+            // handoff, which the e2e fallback test exercises directly.
+            Err(_) => {}
+        }
+    }
+
+    #[test]
+    fn resolve_reactors_honours_explicit_and_clamps_auto() {
+        assert_eq!(resolve_reactors(1), 1);
+        assert_eq!(resolve_reactors(3), 3);
+        let auto = resolve_reactors(0);
+        assert!((1..=8).contains(&auto), "auto = {auto}");
     }
 
     #[test]

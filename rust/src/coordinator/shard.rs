@@ -85,10 +85,27 @@
 //! traffic nothing per token. Deadline-expired requests are pulled out
 //! of the overflow queues even while every slot is busy, so their
 //! replies land at the deadline instead of whenever a slot frees.
+//!
+//! **Lanes (multi-reactor fan-out)**: with [`GroupConfig::lanes`] > 1
+//! the single completion channel becomes one channel per *lane*, and
+//! [`EngineGroup::into_lanes`] splits the group into per-lane views that
+//! can move to their own front-end reactor threads. Ownership is by id:
+//! a lane submits only requests whose `id % lanes` equals its lane
+//! index, and shards route every event for an id to its owning lane —
+//! so per-request event ordering, the load/reservation discipline, and
+//! the router's shared state are untouched; only the fan-in is
+//! partitioned. Each lane may register an eventfd
+//! ([`EngineGroup::register_wake`]) that shards signal after every event
+//! send, letting a reactor parked in `epoll_wait` see completions at
+//! syscall latency instead of a poll tick. The router breaks
+//! least-loaded ties toward the submitting lane's shard subset
+//! (`shard % lanes == lane`) for locality; prefix affinity is computed
+//! from the prompt hash as before, so placement-visible routing is
+//! independent of which reactor accepted the connection.
 
 use std::collections::{HashMap, HashSet, VecDeque};
 use std::marker::PhantomData;
-use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
@@ -100,6 +117,7 @@ use crate::kvcache::prefix::{chain_hash, first_block_hash, ROOT_HASH};
 
 use super::memory::{MemoryPlan, PageGeometry};
 use super::metrics::{GroupMetrics, Metrics};
+use super::reactor::WakeFd;
 use super::request::{Completion, EngineEvent, Priority, QueuedReq, Request};
 use super::DecodeEngine;
 
@@ -126,12 +144,18 @@ pub struct GroupConfig {
     /// evicted the blocks since) is absorbed by engine-side eviction /
     /// preemption, exactly like any other plan optimism.
     pub prefix_routing: bool,
+    /// Completion-consumer lanes: one event channel per front-end
+    /// reactor (see the module docs). A lane owns the ids with
+    /// `id % lanes == lane`; [`EngineGroup::into_lanes`] hands out the
+    /// per-lane views. `1` (the default, with `0` treated the same)
+    /// keeps the single-consumer behaviour of earlier revisions.
+    pub lanes: usize,
 }
 
 impl Default for GroupConfig {
     fn default() -> Self {
         GroupConfig { shards: 1, affinity_slack: 1, queue_depth: 32,
-                      defer_retry_ms: 25, prefix_routing: false }
+                      defer_retry_ms: 25, prefix_routing: false, lanes: 1 }
     }
 }
 
@@ -225,6 +249,10 @@ struct ShardQueues {
     /// queue (so a thief's transfer always finds it), re-owned on steal
     /// / cancel-removal, and released when the completion flows back.
     reservations: Mutex<HashMap<u64, (usize, usize)>>,
+    /// Cleared by shard `i`'s thread when it exits — including on panic
+    /// unwind (see `AliveGuard`) — so any lane view can diagnose a dead
+    /// shard without owning its `JoinHandle` (only lane 0 holds those).
+    alive: Vec<AtomicBool>,
 }
 
 impl ShardQueues {
@@ -237,6 +265,7 @@ impl ShardQueues {
             cancelled: Mutex::new(HashSet::new()),
             plans: (0..n).map(|_| MemoryPlan::default()).collect(),
             reservations: Mutex::new(HashMap::new()),
+            alive: (0..n).map(|_| AtomicBool::new(true)).collect(),
         }
     }
 
@@ -347,9 +376,9 @@ impl ShardQueues {
     }
 }
 
-struct ShardHandle {
-    tx: Sender<ShardCmd>,
-    join: JoinHandle<Metrics>,
+/// Per-shard facts reported in `Ready` and immutable afterwards, so
+/// every lane view can read them without synchronization.
+struct ShardInfo {
     batch: usize,
     max_prompt: usize,
     /// The shard engine's page-pool shape (reported in `Ready`); used by
@@ -358,33 +387,145 @@ struct ShardHandle {
     geometry: PageGeometry,
 }
 
+/// Wake-fd registry: one slot per lane, filled in by a front-end reactor
+/// when it parks on an eventfd ([`EngineGroup::register_wake`]). Shards
+/// signal the owning lane's fd after every event send, so a parked
+/// reactor sees completions at syscall latency; lanes that never
+/// register (trace harness, unit tests) pay nothing.
+struct WakeSet {
+    slots: Vec<Mutex<Option<Arc<WakeFd>>>>,
+}
+
+impl WakeSet {
+    fn new(lanes: usize) -> WakeSet {
+        WakeSet { slots: (0..lanes).map(|_| Mutex::new(None)).collect() }
+    }
+
+    fn set(&self, lane: usize, fd: Arc<WakeFd>) {
+        *self.slots[lane].lock().unwrap() = Some(fd);
+    }
+
+    fn signal(&self, lane: usize) {
+        if let Some(w) = self.slots[lane].lock().unwrap().as_ref() {
+            w.signal();
+        }
+    }
+}
+
+/// Completion fan-out held by each shard thread: one event channel per
+/// lane, addressed by id ownership (`id % lanes`). Because a lane only
+/// submits its own ids, every event for a request lands on the channel
+/// of the lane that submitted it, preserving the per-request
+/// Token-before-Done ordering within that channel.
+#[derive(Clone)]
+struct EventFan {
+    txs: Vec<Sender<ShardEvent>>,
+    wakes: Arc<WakeSet>,
+}
+
+impl EventFan {
+    fn lane_of(&self, id: u64) -> usize {
+        (id % self.txs.len() as u64) as usize
+    }
+
+    fn send_to(&self, lane: usize, ev: ShardEvent) {
+        let _ = self.txs[lane].send(ev);
+        self.wakes.signal(lane);
+    }
+
+    fn send_for(&self, id: u64, ev: ShardEvent) {
+        self.send_to(self.lane_of(id), ev);
+    }
+
+    /// `Ready` goes to lane 0: startup runs before the lanes split, and
+    /// the constructor consumes lane 0's receiver.
+    fn ready(&self, ev: ShardEvent) {
+        self.send_to(0, ev);
+    }
+
+    /// `Fatal` is broadcast: every front-end reactor must observe a
+    /// fleet failure, whichever ids it owns.
+    fn fatal(&self, shard: usize, msg: &str) {
+        for lane in 0..self.txs.len() {
+            self.send_to(lane, ShardEvent::Fatal { shard, msg: msg.into() });
+        }
+    }
+}
+
+/// Clears the shard's `alive` flag when its thread exits — on clean
+/// return *and* on panic unwind — so dead-shard diagnosis works from
+/// any lane without the `JoinHandle`.
+struct AliveGuard<'a>(&'a AtomicBool);
+
+impl Drop for AliveGuard<'_> {
+    fn drop(&mut self) {
+        self.0.store(false, Ordering::SeqCst);
+    }
+}
+
+/// Router state shared by every lane view of one group. All mutation is
+/// through atomics or short uncontended mutexes: `submit` can run
+/// concurrently from N reactor threads.
+struct GroupCore {
+    shards: Vec<ShardInfo>,
+    shared: Arc<ShardQueues>,
+    wakes: Arc<WakeSet>,
+    n_lanes: usize,
+    affinity_slack: usize,
+    queue_depth: usize,
+    /// Retry hint carried by `Deferred` outcomes.
+    defer_retry_ms: u64,
+    /// Advisory routed-prefix memory per shard (empty vec when
+    /// [`GroupConfig::prefix_routing`] is off).
+    routed_prefixes: Mutex<Vec<PrefixTracker>>,
+    /// Requests `submit` rejected because every shard was at capacity.
+    rejected: AtomicU64,
+    /// Requests `submit` deferred because no shard's page budget fit.
+    deferred: AtomicU64,
+    /// Serving-clock start: set by the first accepted `submit` on any
+    /// lane, so idle time before traffic does not skew throughput.
+    first_submit: Mutex<Option<Instant>>,
+    /// Last completion observed by any lane — the serving-clock end when
+    /// the group is already drained at `shutdown` (caller dwell between
+    /// draining and shutting down must not dilute fleet throughput).
+    last_done: Mutex<Option<Instant>>,
+}
+
+/// What only lane 0 holds: the shard `JoinHandle`s (joined at
+/// [`EngineGroup::shutdown`]) and the not-yet-taken lane views.
+struct Fleet {
+    joins: Vec<JoinHandle<Metrics>>,
+    spare: Vec<LaneParts>,
+}
+
+struct LaneParts {
+    lane: usize,
+    cmds: Vec<Sender<ShardCmd>>,
+    events: Receiver<ShardEvent>,
+}
+
 /// N decode-engine shards behind a bounded least-loaded router with
 /// affinity and cross-shard work stealing. `E` itself never leaves its
 /// shard thread, so the group is `Send` even for non-`Send` engines.
+///
+/// A group built with [`GroupConfig::lanes`] > 1 is additionally a *lane
+/// view*: [`EngineGroup::into_lanes`] splits it into one `EngineGroup`
+/// per lane, each owning its slice of the completion fan-in (ids with
+/// `id % lanes == lane`) while routing state stays shared. Lane 0 is the
+/// primary — it retains the shard threads and is the only view
+/// [`EngineGroup::shutdown`] accepts.
 pub struct EngineGroup<E: DecodeEngine> {
-    shards: Vec<ShardHandle>,
-    shared: Arc<ShardQueues>,
+    core: Arc<GroupCore>,
+    /// This lane's clones of the per-shard control senders.
+    cmds: Vec<Sender<ShardCmd>>,
+    /// This lane's slice of the completion fan-in.
     events: Receiver<ShardEvent>,
-    /// Requests accepted and not yet collected via `poll`/`drain`.
+    lane: usize,
+    /// Requests this lane accepted and not yet collected via
+    /// `poll`/`drain`.
     inflight: usize,
-    affinity_slack: usize,
-    queue_depth: usize,
-    /// Advisory routed-prefix memory per shard (empty vec when
-    /// [`GroupConfig::prefix_routing`] is off).
-    routed_prefixes: Vec<PrefixTracker>,
-    /// Requests `submit` rejected because every shard was at capacity.
-    rejected: u64,
-    /// Requests `submit` deferred because no shard's page budget fit.
-    deferred: u64,
-    /// Retry hint carried by `Deferred` outcomes.
-    defer_retry_ms: u64,
-    /// Serving-clock start: set by the first accepted `submit`, so idle
-    /// time between construction and traffic does not skew throughput.
-    first_submit: Option<Instant>,
-    /// Last completion observed via `poll` — the serving-clock end when
-    /// the group is already drained at `shutdown` (caller dwell between
-    /// draining and shutting down must not dilute fleet throughput).
-    last_done: Option<Instant>,
+    /// Present on the primary (lane 0) view only.
+    fleet: Option<Fleet>,
     _engine: PhantomData<fn() -> E>,
 }
 
@@ -473,14 +614,15 @@ fn apply_cancel<E: DecodeEngine>(shard: usize, engine: &mut E,
 }
 
 fn shard_main<E, F>(shard: usize, factory: Arc<F>, shared: Arc<ShardQueues>,
-                    rx: Receiver<ShardCmd>, tx: Sender<ShardEvent>) -> Metrics
+                    rx: Receiver<ShardCmd>, fan: EventFan) -> Metrics
 where
     E: DecodeEngine + 'static,
     F: Fn(usize) -> Result<E> + Send + Sync + 'static,
 {
+    let _alive = AliveGuard(&shared.alive[shard]);
     let mut engine = match factory(shard) {
         Ok(e) => {
-            let _ = tx.send(ShardEvent::Ready {
+            fan.ready(ShardEvent::Ready {
                 shard,
                 batch: e.batch_size(),
                 max_prompt: e.max_prompt_len(),
@@ -489,7 +631,7 @@ where
             e
         }
         Err(e) => {
-            let _ = tx.send(ShardEvent::Fatal { shard, msg: format!("{e}") });
+            fan.fatal(shard, &format!("{e}"));
             return Metrics::new();
         }
     };
@@ -598,13 +740,13 @@ where
         // pays no per-token channel cost), completions settle the load
         // accounting.
         let step = {
-            let tx = &tx;
+            let fan = &fan;
             let shared = &shared;
             let streaming = &mut streaming;
             let mut sink = |ev: EngineEvent| match ev {
                 EngineEvent::Token { id, tok, index } => {
                     if streaming.contains(&id) {
-                        let _ = tx.send(ShardEvent::Token { id, tok, index });
+                        fan.send_for(id, ShardEvent::Token { id, tok, index });
                     }
                 }
                 EngineEvent::Preempted { id } => {
@@ -613,21 +755,22 @@ where
                     // front-ends get a notice; load / reservations are
                     // untouched (the request is still this shard's).
                     if streaming.contains(&id) {
-                        let _ = tx.send(ShardEvent::Preempted { id });
+                        fan.send_for(id, ShardEvent::Preempted { id });
                     }
                 }
                 EngineEvent::Finished(completion) => {
                     streaming.remove(&completion.id);
                     shared.release_reservation(completion.id);
                     shared.load[shard].fetch_sub(1, Ordering::SeqCst);
-                    let _ = tx.send(ShardEvent::Done(completion));
+                    let id = completion.id;
+                    fan.send_for(id, ShardEvent::Done(completion));
                 }
                 EngineEvent::Started { .. } => {}
             };
             engine.step_events(&mut sink)
         };
         if let Err(e) = step {
-            let _ = tx.send(ShardEvent::Fatal { shard, msg: format!("{e}") });
+            fan.fatal(shard, &format!("{e}"));
             return finish(engine.take_metrics());
         }
     }
@@ -655,36 +798,55 @@ impl<E: DecodeEngine> EngineGroup<E> {
         if cfg.shards == 0 {
             bail!("engine group needs at least one shard");
         }
+        let lanes = cfg.lanes.max(1);
         let factory = Arc::new(factory);
         let shared = Arc::new(ShardQueues::new(cfg.shards));
-        let (etx, erx) = channel();
-        let mut shards = Vec::with_capacity(cfg.shards);
+        let wakes = Arc::new(WakeSet::new(lanes));
+        let mut lane_txs = Vec::with_capacity(lanes);
+        let mut lane_rxs = Vec::with_capacity(lanes);
+        for _ in 0..lanes {
+            let (tx, rx) = channel();
+            lane_txs.push(tx);
+            lane_rxs.push(rx);
+        }
+        let fan = EventFan { txs: lane_txs, wakes: wakes.clone() };
+        let mut cmds = Vec::with_capacity(cfg.shards);
+        let mut joins = Vec::with_capacity(cfg.shards);
+        let mut infos: Vec<ShardInfo> = (0..cfg.shards)
+            .map(|_| ShardInfo { batch: 0, max_prompt: 0,
+                                 geometry: PageGeometry::default() })
+            .collect();
         for i in 0..cfg.shards {
             let (ctx, crx) = channel();
             let f = factory.clone();
-            let tx = etx.clone();
             let sq = shared.clone();
+            let sfan = fan.clone();
             let join = std::thread::Builder::new()
                 .name(format!("shard-{i}"))
-                .spawn(move || shard_main(i, f, sq, crx, tx))
+                .spawn(move || shard_main(i, f, sq, crx, sfan))
                 .map_err(|e| anyhow!("spawn shard {i}: {e}"))?;
-            shards.push(ShardHandle { tx: ctx, join, batch: 0, max_prompt: 0,
-                                      geometry: PageGeometry::default() });
+            cmds.push(ctx);
+            joins.push(join);
         }
-        drop(etx);
-        // Wait for every shard's engine to come up (or fail fast). A
-        // slow factory (e.g. N shards concurrently loading weights) is
-        // fine — we keep waiting while every unready thread is still
-        // alive. A thread that *exited* without sending Ready or Fatal
-        // panicked in the factory; that is fatal.
+        // The shard threads now hold the only event senders: when every
+        // shard has exited, each lane's channel disconnects.
+        drop(fan);
+        let erx = lane_rxs.remove(0);
+        // Wait for every shard's engine to come up (or fail fast) —
+        // `Ready` always lands on lane 0, whose receiver this loop owns
+        // until the lanes split. A slow factory (e.g. N shards
+        // concurrently loading weights) is fine — we keep waiting while
+        // every unready thread is still alive. A thread that *exited*
+        // without sending Ready or Fatal panicked in the factory; that
+        // is fatal.
         let mut ready = 0usize;
         let mut failure: Option<String> = None;
-        while ready < shards.len() && failure.is_none() {
+        while ready < infos.len() && failure.is_none() {
             match erx.recv_timeout(Duration::from_secs(1)) {
                 Ok(ShardEvent::Ready { shard, batch, max_prompt, geometry }) => {
-                    shards[shard].batch = batch;
-                    shards[shard].max_prompt = max_prompt;
-                    shards[shard].geometry = geometry;
+                    infos[shard].batch = batch;
+                    infos[shard].max_prompt = max_prompt;
+                    infos[shard].geometry = geometry;
                     // Arm the shard's page plan (stays disabled — admit
                     // everything — when the engine reports no geometry).
                     shared.plans[shard].set_budget(geometry.budget(cfg.queue_depth));
@@ -701,15 +863,15 @@ impl<E: DecodeEngine> EngineGroup<E> {
                     unreachable!("preemption before submit")
                 }
                 Err(RecvTimeoutError::Timeout) => {
-                    if let Some((i, _)) = shards
+                    if let Some((i, _)) = joins
                         .iter()
                         .enumerate()
-                        .find(|(_, s)| s.join.is_finished())
+                        .find(|(_, j)| j.is_finished())
                     {
                         failure = Some(format!(
                             "shard {i} thread exited during startup \
                              (factory panic?), {ready}/{} ready",
-                            shards.len()
+                            infos.len()
                         ));
                     }
                 }
@@ -719,51 +881,116 @@ impl<E: DecodeEngine> EngineGroup<E> {
             }
         }
         if let Some(msg) = failure {
-            for s in &shards {
-                let _ = s.tx.send(ShardCmd::Shutdown);
+            for tx in &cmds {
+                let _ = tx.send(ShardCmd::Shutdown);
             }
-            for s in shards {
-                let _ = s.join.join();
+            for j in joins {
+                let _ = j.join();
             }
             bail!("{msg}");
         }
-        Ok(EngineGroup {
-            shards,
+        let spare = lane_rxs
+            .into_iter()
+            .enumerate()
+            .map(|(k, rx)| LaneParts { lane: k + 1, cmds: cmds.clone(),
+                                       events: rx })
+            .collect();
+        let core = Arc::new(GroupCore {
+            shards: infos,
             shared,
-            events: erx,
-            inflight: 0,
+            wakes,
+            n_lanes: lanes,
             affinity_slack: cfg.affinity_slack,
             queue_depth: cfg.queue_depth,
-            routed_prefixes: if cfg.prefix_routing {
+            defer_retry_ms: cfg.defer_retry_ms,
+            routed_prefixes: Mutex::new(if cfg.prefix_routing {
                 (0..cfg.shards).map(|_| PrefixTracker::new(ROUTED_PREFIX_CAP))
                     .collect()
             } else {
                 Vec::new()
-            },
-            rejected: 0,
-            deferred: 0,
-            defer_retry_ms: cfg.defer_retry_ms,
-            first_submit: None,
-            last_done: None,
+            }),
+            rejected: AtomicU64::new(0),
+            deferred: AtomicU64::new(0),
+            first_submit: Mutex::new(None),
+            last_done: Mutex::new(None),
+        });
+        Ok(EngineGroup {
+            core,
+            cmds,
+            events: erx,
+            lane: 0,
+            inflight: 0,
+            fleet: Some(Fleet { joins, spare }),
             _engine: PhantomData,
         })
     }
 
+    /// Number of completion lanes this group was built with.
+    pub fn n_lanes(&self) -> usize {
+        self.core.n_lanes
+    }
+
+    /// This view's lane index (ids with `id % n_lanes == lane` belong
+    /// to it).
+    pub fn lane(&self) -> usize {
+        self.lane
+    }
+
+    /// Split the group into its per-lane views. Element `k` owns lane
+    /// `k`'s event stream and may move to its own thread (the group is
+    /// `Send`); element 0 is `self`, which keeps the shard threads —
+    /// call [`EngineGroup::shutdown`] on it (and only it) once every
+    /// lane has finished its work. Each lane submits only ids it owns;
+    /// [`EngineGroup::submit`] enforces the contract.
+    pub fn into_lanes(mut self) -> Vec<EngineGroup<E>> {
+        let spare = self
+            .fleet
+            .as_mut()
+            .map(|f| std::mem::take(&mut f.spare))
+            .unwrap_or_default();
+        let core = self.core.clone();
+        let mut out = Vec::with_capacity(spare.len() + 1);
+        out.push(self);
+        for p in spare {
+            out.push(EngineGroup {
+                core: core.clone(),
+                cmds: p.cmds,
+                events: p.events,
+                lane: p.lane,
+                inflight: 0,
+                fleet: None,
+                _engine: PhantomData,
+            });
+        }
+        out
+    }
+
+    /// Register an eventfd that shards signal whenever an event lands on
+    /// this lane's channel — the front-end reactor's completion wakeup
+    /// (drain the fd, then drain the channel; the signal-after-send
+    /// order guarantees no event is ever left behind an unsignalled fd).
+    /// Re-registering replaces the previous fd.
+    pub fn register_wake(&self, wake: Arc<WakeFd>) {
+        self.core.wakes.set(self.lane, wake);
+    }
+
     pub fn n_shards(&self) -> usize {
-        self.shards.len()
+        self.core.shards.len()
     }
 
     /// Sum of shard batch capacities.
     pub fn total_batch(&self) -> usize {
-        self.shards.iter().map(|s| s.batch).sum()
+        self.core.shards.iter().map(|s| s.batch).sum()
     }
 
     /// Configured per-shard overflow bound.
     pub fn queue_depth(&self) -> usize {
-        self.queue_depth
+        self.core.queue_depth
     }
 
-    /// Requests accepted and not yet collected via `poll`/`drain`.
+    /// Requests accepted *on this lane* and not yet collected via
+    /// `poll`/`drain` (with one lane — the default — that is every
+    /// outstanding request in the group).
     pub fn inflight(&self) -> usize {
         self.inflight
     }
@@ -771,21 +998,24 @@ impl<E: DecodeEngine> EngineGroup<E> {
     /// Per-shard load (queued + active) snapshot — router introspection
     /// for tests; changes concurrently with shard progress.
     pub fn loads(&self) -> Vec<usize> {
-        self.shared
+        self.core
+            .shared
             .load
             .iter()
             .map(|l| l.load(Ordering::SeqCst))
             .collect()
     }
 
-    /// Requests rejected by admission backpressure so far.
+    /// Requests rejected by admission backpressure so far (group-wide,
+    /// all lanes).
     pub fn rejected(&self) -> u64 {
-        self.rejected
+        self.core.rejected.load(Ordering::Relaxed)
     }
 
-    /// Requests deferred for page-budget headroom so far.
+    /// Requests deferred for page-budget headroom so far (group-wide,
+    /// all lanes).
     pub fn deferred(&self) -> u64 {
-        self.deferred
+        self.core.deferred.load(Ordering::Relaxed)
     }
 
     /// Virtual-replay admission window: keep up to one extra batch per
@@ -798,7 +1028,7 @@ impl<E: DecodeEngine> EngineGroup<E> {
     /// Front-ends must reject longer prompts — submitting one panics
     /// the target shard's engine.
     pub fn max_prompt_len(&self) -> usize {
-        self.shards.iter().map(|s| s.max_prompt).min().unwrap_or(0)
+        self.core.shards.iter().map(|s| s.max_prompt).min().unwrap_or(0)
     }
 
     /// Leading full prompt blocks whose chain hashes this router already
@@ -806,8 +1036,9 @@ impl<E: DecodeEngine> EngineGroup<E> {
     /// engine does no token paging. Advisory: says the shard *prefilled*
     /// those blocks at some point, not that they are still cached.
     fn warm_leading_blocks(&self, shard: usize, prompt: &[i32]) -> usize {
-        let Some(t) = self.routed_prefixes.get(shard) else { return 0 };
-        let bs = self.shards[shard].geometry.tokens_per_page;
+        let trackers = self.core.routed_prefixes.lock().unwrap();
+        let Some(t) = trackers.get(shard) else { return 0 };
+        let bs = self.core.shards[shard].geometry.tokens_per_page;
         if bs == 0 {
             return 0;
         }
@@ -827,22 +1058,23 @@ impl<E: DecodeEngine> EngineGroup<E> {
     /// the prefix discount for its warm leading blocks — shared pages
     /// are charged once across the requests that share them.
     fn reservation_pages(&self, shard: usize, req: &Request) -> usize {
-        let g = &self.shards[shard].geometry;
+        let g = &self.core.shards[shard].geometry;
         g.project(req.prompt.len(), req.max_new).saturating_sub(
             g.prefix_discount(self.warm_leading_blocks(shard, &req.prompt)))
     }
 
     /// Remember the prefix-block chain of a prompt routed to `shard`.
-    fn note_routed_prefix(&mut self, shard: usize, prompt: &[i32]) {
-        if self.routed_prefixes.is_empty() {
+    fn note_routed_prefix(&self, shard: usize, prompt: &[i32]) {
+        let mut trackers = self.core.routed_prefixes.lock().unwrap();
+        if trackers.is_empty() {
             return;
         }
-        let bs = self.shards[shard].geometry.tokens_per_page;
+        let bs = self.core.shards[shard].geometry.tokens_per_page;
         if bs == 0 {
             return;
         }
         let mut h = ROOT_HASH;
-        let t = &mut self.routed_prefixes[shard];
+        let t = &mut trackers[shard];
         for blk in prompt.chunks_exact(bs) {
             h = chain_hash(h, blk);
             t.note(h);
@@ -852,18 +1084,26 @@ impl<E: DecodeEngine> EngineGroup<E> {
     /// Pick the shard for a request: the prompt's affinity shard while
     /// its load is within `affinity_slack` of the minimum, below
     /// capacity, and its page plan fits the request's projected demand;
-    /// else the least-loaded fitting shard with headroom (lowest index
-    /// on ties). `Route::Defer` when count headroom exists somewhere but
-    /// no shard's page budget fits (memory is the bottleneck — retry
+    /// else the least-loaded fitting shard with headroom. Load ties
+    /// break toward this lane's shard subset (`shard % lanes == lane`) —
+    /// routing locality for multi-reactor front ends — then toward the
+    /// lowest index, which with one lane (every shard "local") is
+    /// exactly the historical lowest-index tie-break. Prefix affinity is
+    /// keyed on the prompt hash alone, so the lane preference never
+    /// overrides it. `Route::Defer` when count headroom exists somewhere
+    /// but no shard's page budget fits (memory is the bottleneck — retry
     /// later); `Route::Full` when every shard is at
     /// `batch + queue_depth`. One pass over the load atomics, no
     /// allocation — this sits on the admission path of every request.
     fn route(&self, req: &Request) -> Route {
-        let n = self.shards.len();
-        let load = |i: usize| self.shared.load[i].load(Ordering::SeqCst);
-        let cap = |i: usize| self.shards[i].batch + self.queue_depth;
+        let n = self.core.shards.len();
+        let load = |i: usize| self.core.shared.load[i].load(Ordering::SeqCst);
+        let cap = |i: usize| self.core.shards[i].batch + self.core.queue_depth;
         let fits = |i: usize| {
-            self.shared.plans[i].fits(self.reservation_pages(i, req))
+            self.core.shared.plans[i].fits(self.reservation_pages(i, req))
+        };
+        let local = |i: usize| {
+            self.core.n_lanes <= 1 || i % self.core.n_lanes == self.lane
         };
         if n == 1 {
             if load(0) >= cap(0) {
@@ -871,7 +1111,7 @@ impl<E: DecodeEngine> EngineGroup<E> {
             }
             return if fits(0) { Route::To(0) } else { Route::Defer };
         }
-        let block = self.shards[0].geometry.tokens_per_page;
+        let block = self.core.shards[0].geometry.tokens_per_page;
         let aff = (affinity_hash(&req.prompt, block) % n as u64) as usize;
         let mut min = usize::MAX;
         let mut aff_ok = false;
@@ -879,6 +1119,7 @@ impl<E: DecodeEngine> EngineGroup<E> {
         let mut count_open = false;
         let mut best = None;
         let mut best_load = usize::MAX;
+        let mut best_local = false;
         for i in 0..n {
             let l = load(i);
             if l >= cap(i) {
@@ -893,9 +1134,11 @@ impl<E: DecodeEngine> EngineGroup<E> {
                 aff_ok = true;
                 aff_load = l;
             }
-            if l < best_load {
+            let loc = local(i);
+            if l < best_load || (l == best_load && loc && !best_local) {
                 best = Some(i);
                 best_load = l;
+                best_local = loc;
             }
         }
         // Warm leading blocks widen the affinity window: every block
@@ -903,7 +1146,7 @@ impl<E: DecodeEngine> EngineGroup<E> {
         // would redo, so queueing a little deeper there is still the
         // cheaper placement. (Zero when prefix routing is off.)
         let warm = self.warm_leading_blocks(aff, &req.prompt);
-        if aff_ok && aff_load <= min + self.affinity_slack + warm {
+        if aff_ok && aff_load <= min + self.core.affinity_slack + warm {
             return Route::To(aff);
         }
         match best {
@@ -920,32 +1163,45 @@ impl<E: DecodeEngine> EngineGroup<E> {
     /// fit any shard's page pool at all), [`SubmitOutcome::Deferred`]
     /// when count headroom exists but no shard's page budget fits right
     /// now; `Err` only on a dead shard (fleet failure, not
-    /// backpressure).
+    /// backpressure) or on a request whose id belongs to another lane —
+    /// events fan out by `id % lanes`, so submitting a foreign id here
+    /// would strand its tokens on a different lane's channel.
     pub fn submit(&mut self, req: Request) -> Result<SubmitOutcome> {
+        if self.core.n_lanes > 1
+            && req.id % self.core.n_lanes as u64 != self.lane as u64
+        {
+            bail!(
+                "request id {} belongs to lane {} (this is lane {}): \
+                 ids must satisfy id % lanes == lane",
+                req.id,
+                req.id % self.core.n_lanes as u64,
+                self.lane
+            );
+        }
         // A request whose projected peak exceeds every shard's *whole
         // pool* can never be admitted — deferral would retry forever.
         // (Engines detect the same condition post-admission — e.g. after
         // a pool-shrink fault — and answer `ResourceExhausted`.)
-        if !self.shards.is_empty()
-            && self.shards.iter().all(|s| {
+        if !self.core.shards.is_empty()
+            && self.core.shards.iter().all(|s| {
                 s.geometry.pool_pages > 0
                     && s.geometry.project(req.prompt.len(), req.max_new)
                         > s.geometry.pool_pages
             })
         {
-            self.rejected += 1;
+            self.core.rejected.fetch_add(1, Ordering::Relaxed);
             return Ok(SubmitOutcome::Rejected);
         }
         let shard = match self.route(&req) {
             Route::To(s) => s,
             Route::Defer => {
-                self.deferred += 1;
+                self.core.deferred.fetch_add(1, Ordering::Relaxed);
                 return Ok(SubmitOutcome::Deferred {
-                    retry_after_ms: self.defer_retry_ms,
+                    retry_after_ms: self.core.defer_retry_ms,
                 });
             }
             Route::Full => {
-                self.rejected += 1;
+                self.core.rejected.fetch_add(1, Ordering::Relaxed);
                 return Ok(SubmitOutcome::Rejected);
             }
         };
@@ -957,32 +1213,36 @@ impl<E: DecodeEngine> EngineGroup<E> {
         // `need` is what the reservation map records, so transfers and
         // the final release move exactly the pages that were charged.
         let need = self.reservation_pages(shard, &req);
-        if !self.shared.plans[shard].try_reserve(need) {
-            self.deferred += 1;
+        if !self.core.shared.plans[shard].try_reserve(need) {
+            self.core.deferred.fetch_add(1, Ordering::Relaxed);
             return Ok(SubmitOutcome::Deferred {
-                retry_after_ms: self.defer_retry_ms,
+                retry_after_ms: self.core.defer_retry_ms,
             });
         }
         // A request placed on its prefix-affinity shard is pinned there:
         // thieves must not separate it from the cached blocks it shares
         // (or, for the chain's first request, is about to publish).
-        let sticky = !self.routed_prefixes.is_empty()
-            && self.shards[0].geometry.tokens_per_page > 0
-            && req.prompt.len() >= self.shards[0].geometry.tokens_per_page
+        let block = self.core.shards[0].geometry.tokens_per_page;
+        let sticky = !self.core.routed_prefixes.lock().unwrap().is_empty()
+            && block > 0
+            && req.prompt.len() >= block
             && shard
-                == (affinity_hash(&req.prompt,
-                                  self.shards[0].geometry.tokens_per_page)
-                    % self.shards.len() as u64) as usize;
+                == (affinity_hash(&req.prompt, block)
+                    % self.core.shards.len() as u64) as usize;
         self.note_routed_prefix(shard, &req.prompt);
         let now = Instant::now();
-        if self.first_submit.is_none() {
-            self.first_submit = Some(now);
+        {
+            let mut first = self.core.first_submit.lock().unwrap();
+            if first.is_none() {
+                *first = Some(now);
+            }
         }
         // Record the reservation BEFORE the request becomes visible in
         // the queue, so a thief's transfer always finds it.
         let id = req.id;
-        if self.shared.plans[shard].enabled() && need > 0 {
-            self.shared
+        if self.core.shared.plans[shard].enabled() && need > 0 {
+            self.core
+                .shared
                 .reservations
                 .lock()
                 .unwrap()
@@ -992,16 +1252,15 @@ impl<E: DecodeEngine> EngineGroup<E> {
         // queue: a fast shard (or thief) could otherwise pop + complete
         // it and fetch_sub before this add, underflowing the counter
         // and wedging admission forever.
-        self.shared.load[shard].fetch_add(1, Ordering::SeqCst);
+        self.core.shared.load[shard].fetch_add(1, Ordering::SeqCst);
         let qlen = {
-            let mut q = self.shared.queues[shard].lock().unwrap();
+            let mut q = self.core.shared.queues[shard].lock().unwrap();
             q.push_back(QueuedReq { sticky, ..QueuedReq::fresh(req, now) });
             q.len()
         };
-        self.shared.queue_peak[shard].fetch_max(qlen, Ordering::SeqCst);
+        self.core.shared.queue_peak[shard].fetch_max(qlen, Ordering::SeqCst);
         self.inflight += 1;
-        self.shards[shard]
-            .tx
+        self.cmds[shard]
             .send(ShardCmd::Wake)
             .map_err(|_| anyhow!("shard {shard} is gone"))?;
         Ok(SubmitOutcome::Routed(shard))
@@ -1021,9 +1280,9 @@ impl<E: DecodeEngine> EngineGroup<E> {
     ///
     /// [`StopReason::Cancelled`]: super::request::StopReason::Cancelled
     pub fn cancel(&mut self, id: u64) {
-        self.shared.cancelled.lock().unwrap().insert(id);
-        for s in &self.shards {
-            let _ = s.tx.send(ShardCmd::Cancel(id));
+        self.core.shared.cancelled.lock().unwrap().insert(id);
+        for tx in &self.cmds {
+            let _ = tx.send(ShardCmd::Cancel(id));
         }
     }
 
@@ -1037,10 +1296,15 @@ impl<E: DecodeEngine> EngineGroup<E> {
             }
             ShardEvent::Done(completion) => {
                 self.inflight = self.inflight.saturating_sub(1);
-                self.last_done = Some(Instant::now());
+                *self.core.last_done.lock().unwrap() = Some(Instant::now());
                 // A cancel that raced the natural finish leaves its mark
                 // unclaimed; clear it here so the set cannot grow.
-                self.shared.cancelled.lock().unwrap().remove(&completion.id);
+                self.core
+                    .shared
+                    .cancelled
+                    .lock()
+                    .unwrap()
+                    .remove(&completion.id);
                 Ok(Some(GroupEvent::Done(completion)))
             }
             ShardEvent::Fatal { shard, msg } => {
@@ -1068,28 +1332,32 @@ impl<E: DecodeEngine> EngineGroup<E> {
                 // thief — but only if some other shard thread is still
                 // alive to steal it; requests active inside the dead
                 // engine (queue empty, load > 0) are always lost.
+                // Liveness comes from the `alive` flags (cleared by
+                // `AliveGuard` on exit, panic included) — the join
+                // handles live only on the lane-0 view's `Fleet`.
                 if self.inflight > 0 {
-                    for (i, s) in self.shards.iter().enumerate() {
-                        if !s.join.is_finished()
-                            || self.shared.load[i].load(Ordering::SeqCst) == 0
+                    let alive =
+                        |i: usize| self.core.shared.alive[i].load(Ordering::SeqCst);
+                    for i in 0..self.core.shards.len() {
+                        if alive(i)
+                            || self.core.shared.load[i].load(Ordering::SeqCst)
+                                == 0
                         {
                             continue;
                         }
-                        let rescuable = !self.shared.queues[i]
+                        let rescuable = !self.core.shared.queues[i]
                             .lock()
                             .unwrap()
                             .is_empty()
-                            && self
-                                .shards
-                                .iter()
-                                .enumerate()
-                                .any(|(j, sj)| j != i && !sj.join.is_finished());
+                            && (0..self.core.shards.len())
+                                .any(|j| j != i && alive(j));
                         if !rescuable {
                             if let Ok(ev) = self.events.try_recv() {
                                 return self.handle_event(ev);
                             }
                             bail!("shard {i} exited with {} requests in flight",
-                                  self.shared.load[i].load(Ordering::SeqCst));
+                                  self.core.shared.load[i]
+                                      .load(Ordering::SeqCst));
                         }
                     }
                 }
@@ -1131,21 +1399,42 @@ impl<E: DecodeEngine> EngineGroup<E> {
 
     /// Stop all shards (they finish in-flight work first) and aggregate
     /// their metrics. Call `drain` first if completions are still owed —
-    /// any left unread are dropped here.
+    /// any left unread are dropped here. Must be called on the primary
+    /// (lane 0) view, which holds the join handles; secondary lane views
+    /// from [`EngineGroup::into_lanes`] are just dropped once drained.
     pub fn shutdown(self) -> Result<GroupMetrics> {
-        for s in &self.shards {
-            let _ = s.tx.send(ShardCmd::Shutdown);
+        let Some(fleet) = self.fleet else {
+            bail!(
+                "shutdown must be called on the primary (lane 0) view; \
+                 this is lane {}",
+                self.lane
+            );
+        };
+        for tx in &self.cmds {
+            let _ = tx.send(ShardCmd::Shutdown);
         }
-        let first_submit = self.first_submit;
+        let first_submit = *self.core.first_submit.lock().unwrap();
         // Drained group: the clock ended at the last completion (caller
         // dwell before shutdown is not serving time). Work still in
-        // flight: the clock runs through the joins below, which wait
-        // for the shards to finish it.
-        let drained_end = if self.inflight == 0 { self.last_done } else { None };
-        let mut shard_metrics = Vec::with_capacity(self.shards.len());
+        // flight — on this lane (`inflight`) or any other (a nonzero
+        // load counter): the clock runs through the joins below, which
+        // wait for the shards to finish it.
+        let quiescent = self.inflight == 0
+            && self
+                .core
+                .shared
+                .load
+                .iter()
+                .all(|l| l.load(Ordering::SeqCst) == 0);
+        let drained_end = if quiescent {
+            *self.core.last_done.lock().unwrap()
+        } else {
+            None
+        };
+        let mut shard_metrics = Vec::with_capacity(fleet.joins.len());
         let mut panicked = Vec::new();
-        for (i, s) in self.shards.into_iter().enumerate() {
-            match s.join.join() {
+        for (i, join) in fleet.joins.into_iter().enumerate() {
+            match join.join() {
                 Ok(m) => shard_metrics.push(m),
                 Err(_) => {
                     // Keep joining: one panicked shard must not discard
@@ -1164,9 +1453,10 @@ impl<E: DecodeEngine> EngineGroup<E> {
             shards: shard_metrics,
             wall_s,
             panicked,
-            rejected: self.rejected,
-            deferred: self.deferred,
-            queue_depth: self.queue_depth,
+            rejected: self.core.rejected.load(Ordering::Relaxed),
+            deferred: self.core.deferred.load(Ordering::Relaxed),
+            queue_depth: self.core.queue_depth,
+            reactors: Vec::new(),
         })
     }
 }
@@ -1641,5 +1931,71 @@ mod tests {
         // Cancel-removal still reaches sticky requests: stickiness pins
         // placement, not cancellation.
         assert!(sq.remove_queued(0, 2).is_some());
+    }
+
+    #[test]
+    fn lanes_partition_events_by_id_ownership() {
+        let g: EngineGroup<SimEngine> = EngineGroup::with_config(
+            GroupConfig { shards: 2, lanes: 2, ..Default::default() },
+            |_| Ok(SimEngine::new(SimConfig::default())),
+        )
+        .unwrap();
+        assert_eq!(g.n_lanes(), 2);
+        let mut lanes = g.into_lanes();
+        assert_eq!(lanes.len(), 2);
+        let mut secondary = lanes.pop().unwrap();
+        let mut primary = lanes.pop().unwrap();
+        assert_eq!(primary.lane(), 0);
+        assert_eq!(secondary.lane(), 1);
+        // Submitting a foreign id is a contract violation, not a silent
+        // misroute: its events would land on the other lane's channel.
+        let err = secondary.submit(req(2, vec![1, 2, 3], 4));
+        assert!(err.is_err(), "lane 1 must refuse id 2");
+        assert!(format!("{}", err.unwrap_err()).contains("lane"));
+        for e in 0..6u64 {
+            let lane = if e % 2 == 0 { &mut primary } else { &mut secondary };
+            routed(lane.submit(req(e, vec![1, e as i32 + 5, 9], 6)).unwrap());
+        }
+        // Each lane drains exactly its own ids — nothing crosses over.
+        for lane in [&mut primary, &mut secondary] {
+            let comps = lane.drain().unwrap();
+            assert_eq!(comps.len(), 3, "lane {} completions", lane.lane());
+            for c in &comps {
+                assert_eq!(c.id % 2, lane.lane() as u64,
+                           "completion {} on lane {}", c.id, lane.lane());
+            }
+        }
+        // Only the primary view may shut the fleet down.
+        assert!(secondary.shutdown().is_err());
+        let gm = primary.shutdown().unwrap();
+        assert_eq!(gm.fleet().requests_completed, 6);
+    }
+
+    #[test]
+    fn registered_wake_fd_signals_on_events() {
+        use super::super::reactor::{Interest, Reactor};
+        let mut g = group(1);
+        let wake = Arc::new(WakeFd::new().unwrap());
+        g.register_wake(wake.clone());
+        let mut r = Reactor::new().unwrap();
+        r.register(wake.as_raw_fd(), 9, Interest::READ).unwrap();
+        routed(g.submit(req(0, vec![1, 2, 3], 4)).unwrap());
+        // The shard signals the lane's fd after each event send; a
+        // reactor parked on epoll must observe it without any poll tick.
+        let mut evs = Vec::new();
+        let mut woke = false;
+        for _ in 0..500 {
+            r.wait(Duration::from_millis(10), &mut evs).unwrap();
+            if evs.iter().any(|e| e.token == 9 && e.readable) {
+                woke = true;
+                break;
+            }
+        }
+        assert!(woke, "completion must signal the registered eventfd");
+        wake.drain();
+        // The events themselves are on the channel, exactly as without a
+        // wake registration.
+        assert_eq!(g.drain().unwrap().len(), 1);
+        g.shutdown().unwrap();
     }
 }

@@ -27,7 +27,7 @@ USAGE:
                    [--max-conns N] [--idle-timeout-ms MS] [--queue-depth N]
                    [--stream] [--deadline-ms MS] [--no-simd]
                    [--defer-retry-ms MS] [--preempt-retries N]
-                   [--prefill-chunk TOKENS]
+                   [--prefill-chunk TOKENS] [--reactors N]
                    [--prefix-cache] [--prefix-cache-blocks N]
                    [--default-priority interactive|batch]
   seerattn generate [--task easy|hard] [--policy P] [--budget TOKENS] [--n N]
@@ -35,6 +35,8 @@ USAGE:
 
 POLICIES: dense | seer | seer-threshold:T | seer-topp:P | oracle | quest
 --gather-threads: 0 = auto (half the cores, max 4), 1 = serial.
+--reactors: front-end reactor threads, each with its own SO_REUSEPORT
+listener (accept-handoff fallback); 0 = auto (~cores/4, max 8).
 --prefill-chunk: prompt tokens prefilled per step, a multiple of
 --block-size (default 128; 0 = monolithic prefill, stalls decode).
 --prefix-cache: content-addressed prompt-prefix reuse — shared
@@ -250,6 +252,9 @@ fn cmd_serve(args: &Args, dir: &PathBuf) -> Result<()> {
         prefix_cache_blocks: args.usize_flag("prefix-cache-blocks", 0),
         ..Default::default()
     };
+    // Resolve the reactor count up front: the group needs one completion
+    // lane per front-end reactor (0 = auto from the core count).
+    let reactors = server::resolve_reactors(args.usize_flag("reactors", 1));
     let gcfg = GroupConfig {
         shards: args.usize_flag("shards", 1),
         // Bounded per-shard overflow queue; beyond `batch + queue_depth`
@@ -260,6 +265,7 @@ fn cmd_serve(args: &Args, dir: &PathBuf) -> Result<()> {
         // Prefix-affinity routing + reservation discounts only make
         // sense when the shards actually cache prefixes.
         prefix_routing: args.flags.contains_key("prefix-cache"),
+        lanes: reactors,
         ..Default::default()
     };
     let default_priority = {
@@ -284,6 +290,9 @@ fn cmd_serve(args: &Args, dir: &PathBuf) -> Result<()> {
         },
         // Scheduling class for requests without a "priority" field.
         default_priority,
+        // Front-end reactor threads (SO_REUSEPORT listeners, or accept
+        // handoff when the kernel lacks the option).
+        reactors,
     };
     // Each shard thread constructs its own runtime + engine (the engine
     // holds an Rc and never crosses threads); the factory just captures

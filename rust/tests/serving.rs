@@ -745,6 +745,18 @@ fn chaos_seeds() -> Vec<u64> {
     }
 }
 
+/// Lane count for the chaos sweep: `SEERATTN_REACTORS` lets CI run the
+/// same fault schedule through the multi-lane client partitioning the
+/// multi-reactor front end uses (`run_lanes`); the default of 1
+/// preserves the single-lane `run_group` path exactly.
+fn chaos_reactors() -> usize {
+    std::env::var("SEERATTN_REACTORS")
+        .ok()
+        .and_then(|s| s.trim().parse().ok())
+        .filter(|&n| n >= 1)
+        .unwrap_or(1)
+}
+
 /// A trace whose every request is individually servable (projected peak
 /// of 3-4 pages, at most half the 8-page per-shard pool, so it survives
 /// the worst seeded `ShrinkPool`) while the aggregate in-flight demand
@@ -792,21 +804,32 @@ fn chaos_oversubscribed_group_never_loses_a_request() {
             prefill_chunk: 8,
             ..Default::default()
         };
-        let gcfg = GroupConfig { shards: 4, queue_depth: 2,
+        let lanes = chaos_reactors();
+        let gcfg = GroupConfig { shards: 4, queue_depth: 2, lanes,
                                  ..Default::default() };
         // Run under a watchdog: the property under test is liveness, so
         // a regression would hang the suite instead of failing it.
         let expect = trace.clone();
         let worker = std::thread::spawn(move || {
-            let mut group: EngineGroup<SimEngine> =
+            let group: EngineGroup<SimEngine> =
                 EngineGroup::with_config(gcfg,
                                          move |_| Ok(SimEngine::new(sim_cfg)))
                     .unwrap();
             let runner =
                 TraceRunner { replay: Replay::Virtual, ..Default::default() };
-            let comps = runner.run_group(&mut group, &trace).unwrap();
-            let gm = group.shutdown().unwrap();
-            (comps, gm)
+            if lanes == 1 {
+                let mut group = group;
+                let comps = runner.run_group(&mut group, &trace).unwrap();
+                let gm = group.shutdown().unwrap();
+                (comps, gm)
+            } else {
+                let mut views = group.into_lanes();
+                let comps = runner.run_lanes(&mut views, &trace).unwrap();
+                let primary = views.remove(0);
+                drop(views);
+                let gm = primary.shutdown().unwrap();
+                (comps, gm)
+            }
         });
         let deadline = Instant::now() + Duration::from_secs(60);
         while !worker.is_finished() {
@@ -1558,6 +1581,230 @@ fn prefix_cancel_storm_leaks_neither_pages_nor_pins() {
             "the storm must actually have exercised the cache");
     assert_eq!(gauge.load(Ordering::SeqCst), capacity,
                "pages leaked: gauge must return to full capacity");
+}
+
+// ---------------------------------------------------------------------
+// Multi-reactor front end (ISSUE 9): lane-partitioned clients and the
+// reactor fleet must be invisible to clients — per-request output is
+// bit-identical to the single-reactor (and single-engine) baseline,
+// streaming survives adversarial segmentation through a 2-reactor
+// server, and the accept-handoff fallback (the path taken wherever
+// SO_REUSEPORT is unavailable, and always for pre-bound listeners)
+// round-trips every connection.
+// ---------------------------------------------------------------------
+
+fn lane_group(shards: usize, lanes: usize) -> EngineGroup<SimEngine> {
+    EngineGroup::with_config(
+        GroupConfig { shards, lanes, ..Default::default() },
+        |_| Ok(SimEngine::new(SimConfig::default())),
+    )
+    .unwrap()
+}
+
+#[test]
+fn run_lanes_matches_run_group_per_request() {
+    let trace = mixed_trace(48, 7);
+    let runner = TraceRunner { replay: Replay::Virtual, ..Default::default() };
+
+    let base = {
+        let mut group = sim_group(4);
+        let out = by_id(runner.run_group(&mut group, &trace).unwrap());
+        group.shutdown().unwrap();
+        out
+    };
+
+    // Same 4-shard fleet, 4 lane views driven the way the multi-reactor
+    // server partitions traffic: entry e submits through lane e % 4.
+    let mut lanes = lane_group(4, 4).into_lanes();
+    assert_eq!(lanes.len(), 4);
+    let comps = by_id(runner.run_lanes(&mut lanes, &trace).unwrap());
+    let primary = lanes.remove(0);
+    drop(lanes); // secondary views drop; the primary owns shutdown
+    let gm = primary.shutdown().unwrap();
+
+    assert_eq!(comps, base, "4-lane replay diverged from 1-lane");
+    assert_eq!(gm.fleet().requests_completed, 48);
+}
+
+#[test]
+fn four_reactors_match_one_reactor_bit_identically_over_sockets() {
+    let trace = mixed_trace(48, 7);
+    let runner = TraceRunner { replay: Replay::Virtual, ..Default::default() };
+    let mut single = SimEngine::new(SimConfig::default());
+    let base = by_id(runner.run(&mut single, &trace).unwrap());
+
+    let mut outputs: Vec<BTreeMap<u64, (Vec<i32>, String)>> = Vec::new();
+    for reactors in [1usize, 4] {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let group = lane_group(4, reactors);
+        let cfg = ServeConfig { limit: Some(trace.len()), reactors,
+                                ..Default::default() };
+        let srv = std::thread::spawn(move || {
+            server::serve_on(listener, group, cfg).unwrap();
+        });
+
+        // Four pipelined connections; with 4 reactors the round-robin
+        // accept handoff spreads them one per reactor, so every reactor
+        // parses, routes through its own lane, and streams replies.
+        const CLIENTS: usize = 4;
+        let mut conns: Vec<TcpStream> = (0..CLIENTS)
+            .map(|_| TcpStream::connect(addr).unwrap())
+            .collect();
+        let mut sent = vec![0usize; CLIENTS];
+        for (i, t) in trace.iter().enumerate() {
+            let c = i % CLIENTS;
+            writeln!(conns[c], "{}",
+                     request_line(i, &t.episode.prompt, t.max_new))
+                .unwrap();
+            sent[c] += 1;
+        }
+        for c in &mut conns {
+            c.flush().unwrap();
+        }
+
+        let mut got: BTreeMap<u64, (Vec<i32>, String)> = BTreeMap::new();
+        for (c, conn) in conns.into_iter().enumerate() {
+            let mut reader = BufReader::new(conn);
+            for _ in 0..sent[c] {
+                let mut line = String::new();
+                reader.read_line(&mut line).unwrap();
+                let j = Json::parse(&line)
+                    .unwrap_or_else(|_| panic!("bad {line:?}"));
+                assert!(j.get("error").is_err(),
+                        "reactors={reactors}: unexpected error {line:?}");
+                let id = j.get("id").unwrap().as_i64().unwrap() as u64;
+                let generated: Vec<i32> = j
+                    .get("generated").unwrap().as_arr().unwrap()
+                    .iter().map(|t| t.as_i64().unwrap() as i32).collect();
+                let stop = j.get("stop").unwrap().as_str().unwrap().to_string();
+                assert!(got.insert(id, (generated, stop)).is_none(),
+                        "reactors={reactors}: duplicate reply for {id}");
+            }
+        }
+        srv.join().unwrap();
+
+        assert_eq!(got.len(), base.len(), "reactors={reactors}");
+        for (id, (_plen, want_gen, want_stop)) in &base {
+            let (gen, stop) = got.get(id).expect("missing reply");
+            assert_eq!(gen, want_gen,
+                       "reactors={reactors} request {id} diverged from the \
+                        blocking baseline");
+            assert_eq!(stop, want_stop.as_str(),
+                       "reactors={reactors} request {id} stop reason");
+        }
+        outputs.push(got);
+    }
+    assert_eq!(outputs[0], outputs[1],
+               "1-reactor and 4-reactor runs must be bit-identical");
+}
+
+#[test]
+fn two_reactor_streaming_survives_adversarial_segmentation() {
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    let group = lane_group(2, 2);
+    let cfg = ServeConfig { limit: Some(2), reactors: 2,
+                            ..Default::default() };
+    let srv = std::thread::spawn(move || {
+        server::serve_on(listener, group, cfg).unwrap();
+    });
+
+    let prompt = vec![6, 28, 496, 3];
+    // First connection stays on reactor 0; the round-robin handoff
+    // places the second on reactor 1 — the streaming request crosses
+    // the eventfd wake path of a *different* reactor than the plain one.
+    let mut plain = TcpStream::connect(addr).unwrap();
+    writeln!(plain, "{}", request_line(10, &prompt, 24)).unwrap();
+    plain.flush().unwrap();
+
+    let mut stream = TcpStream::connect(addr).unwrap();
+    let toks: Vec<String> = prompt.iter().map(|t| t.to_string()).collect();
+    let line = format!(
+        "{{\"id\": 11, \"prompt\": [{}], \"max_new\": 24, \"stream\": true}}",
+        toks.join(", "));
+    write_segmented(&mut stream, &line, 3);
+
+    let mut deltas: Vec<i32> = Vec::new();
+    let mut reader = BufReader::new(stream);
+    let terminal = loop {
+        let mut l = String::new();
+        assert!(reader.read_line(&mut l).unwrap() > 0,
+                "EOF before terminal reply");
+        let j = Json::parse(&l).unwrap_or_else(|_| panic!("bad frame {l:?}"));
+        assert!(j.get("error").is_err(), "unexpected error {l:?}");
+        assert_eq!(j.get("id").unwrap().as_i64().unwrap(), 11);
+        if j.opt("stop").is_some() {
+            break j;
+        }
+        assert_eq!(j.get("index").unwrap().as_i64().unwrap() as usize,
+                   deltas.len(), "delta frames arrive in order");
+        for t in j.get("delta").unwrap().as_arr().unwrap() {
+            deltas.push(t.as_i64().unwrap() as i32);
+        }
+    };
+    assert!(!deltas.is_empty(), "at least one delta before Finished");
+
+    let mut plain_reader = BufReader::new(plain);
+    let mut l = String::new();
+    plain_reader.read_line(&mut l).unwrap();
+    let j = Json::parse(&l).unwrap();
+    assert_eq!(j.get("id").unwrap().as_i64().unwrap(), 10);
+    let plain_gen: Vec<i32> = j
+        .get("generated").unwrap().as_arr().unwrap()
+        .iter().map(|t| t.as_i64().unwrap() as i32).collect();
+    srv.join().unwrap();
+
+    let stream_gen: Vec<i32> = terminal
+        .get("generated").unwrap().as_arr().unwrap()
+        .iter().map(|t| t.as_i64().unwrap() as i32).collect();
+    assert_eq!(deltas, stream_gen,
+               "concatenated deltas != streaming terminal reply");
+    assert_eq!(stream_gen, plain_gen,
+               "streaming and non-streaming replies diverged across reactors");
+    let (want, _) =
+        SimEngine::expected_generation(&SimConfig::default(), &prompt, 24);
+    assert_eq!(plain_gen, want, "both must equal the sim reference");
+}
+
+#[test]
+fn prebound_listener_falls_back_to_accept_handoff_across_reactors() {
+    // SO_REUSEPORT cannot be retrofitted onto a pre-bound listener, so
+    // `serve_on` with reactors > 1 *always* takes the accept-handoff
+    // fallback — the exact path used on kernels without the option.
+    // Six sequential connections round-robin across three reactors
+    // (0,1,2,0,1,2); each must round-trip one request, which requires
+    // the handoff send + eventfd wake + adoption on the target reactor
+    // to all work.
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    let group = lane_group(2, 3);
+    let cfg = ServeConfig { limit: Some(6), reactors: 3,
+                            ..Default::default() };
+    let srv = std::thread::spawn(move || {
+        server::serve_on(listener, group, cfg).unwrap();
+    });
+
+    for i in 0..6usize {
+        let prompt = vec![5, 6, 7 + i as i32];
+        let mut conn = TcpStream::connect(addr).unwrap();
+        writeln!(conn, "{}", request_line(i, &prompt, 8)).unwrap();
+        conn.flush().unwrap();
+        let mut reader = BufReader::new(conn);
+        let mut l = String::new();
+        assert!(reader.read_line(&mut l).unwrap() > 0,
+                "conn {i}: EOF instead of a reply");
+        let j = Json::parse(&l).unwrap_or_else(|_| panic!("bad {l:?}"));
+        assert!(j.get("error").is_err(), "conn {i}: unexpected error {l:?}");
+        assert_eq!(j.get("id").unwrap().as_i64().unwrap() as usize, i);
+        let generated: Vec<i32> = j
+            .get("generated").unwrap().as_arr().unwrap()
+            .iter().map(|t| t.as_i64().unwrap() as i32).collect();
+        let (want, _) = SimEngine::expected_generation(
+            &SimConfig::default(), &prompt, 8);
+        assert_eq!(generated, want, "conn {i} diverged");
+    }
+    srv.join().unwrap();
 }
 
 // ---------------------------------------------------------------------
