@@ -180,6 +180,15 @@ impl MemoryPlan {
             |p| Some(p.saturating_sub(pages)),
         );
     }
+
+    /// Zero the ledger and return what it still held — shard-supervisor
+    /// reconciliation after a crash. Per-request reservations the router
+    /// rescues are released (or transferred) individually first; anything
+    /// left after that is state only the dead shard knew about, and a
+    /// respawned engine starts from an empty pool, so the plan must too.
+    pub fn reclaim(&self) -> usize {
+        self.planned.swap(0, Ordering::Relaxed)
+    }
 }
 
 #[cfg(test)]
@@ -286,6 +295,19 @@ mod tests {
         assert_eq!(p.peak(), 10, "peak survives releases");
         p.release(100);
         assert_eq!(p.planned(), 0, "release saturates at zero");
+    }
+
+    #[test]
+    fn reclaim_zeroes_the_ledger_and_reports_the_leak() {
+        let p = MemoryPlan::default();
+        p.set_budget(10);
+        assert!(p.try_reserve(7));
+        assert_eq!(p.reclaim(), 7, "reclaim returns what was still planned");
+        assert_eq!(p.planned(), 0);
+        assert!(p.try_reserve(10), "budget is whole again after reclaim");
+        p.release(10);
+        assert_eq!(p.reclaim(), 0, "clean ledger reclaims nothing");
+        assert_eq!(p.peak(), 10, "reclaim never rewrites history");
     }
 
     #[test]

@@ -193,6 +193,49 @@ impl ReactorStats {
     }
 }
 
+/// Shard-supervisor counters: crash/wedge detection and the recovery
+/// work done on behalf of the requests a failing shard held. Kept by the
+/// router (the supervisor runs on the polling side, not in shard
+/// threads), stitched into [`GroupMetrics::report`] at shutdown.
+#[derive(Debug, Default, Clone, PartialEq, Eq)]
+pub struct ShardRestarts {
+    /// Shard threads respawned after a panic.
+    pub restarts: u64,
+    /// Wedge-watchdog trips: heartbeat stalls past `wedge_timeout` that
+    /// circuit-broke a live shard out of routing (each recovery when the
+    /// heartbeat resumes clears the trip but not the count).
+    pub wedges: u64,
+    /// Requests rescued out of a dead shard's overflow queue and requeued
+    /// to live shards.
+    pub rescued_queued: u64,
+    /// In-flight requests re-submitted with resume-replay after their
+    /// shard died.
+    pub rescued_inflight: u64,
+    /// Requests terminated with `ResourceExhausted` because their rescue
+    /// budget ran out, plus shards retired for good after exhausting
+    /// `restart_limit`.
+    pub give_ups: u64,
+    /// Pages the dead shards' `MemoryPlan` ledgers still held after
+    /// per-request reconciliation (leaked state only the crash knew
+    /// about, zeroed so respawned shards start with a clean budget).
+    pub pages_reclaimed: u64,
+}
+
+impl ShardRestarts {
+    pub fn merge_from(&mut self, other: &ShardRestarts) {
+        self.restarts += other.restarts;
+        self.wedges += other.wedges;
+        self.rescued_queued += other.rescued_queued;
+        self.rescued_inflight += other.rescued_inflight;
+        self.give_ups += other.give_ups;
+        self.pages_reclaimed += other.pages_reclaimed;
+    }
+
+    pub fn is_quiet(&self) -> bool {
+        *self == ShardRestarts::default()
+    }
+}
+
 /// Aggregated serving metrics for an [`EngineGroup`]: the per-shard
 /// [`Metrics`] snapshots plus the group's own wall-clock span, from which
 /// fleet throughput and latency percentiles are derived.
@@ -200,13 +243,16 @@ impl ReactorStats {
 /// [`EngineGroup`]: super::shard::EngineGroup
 #[derive(Debug, Default)]
 pub struct GroupMetrics {
-    /// One snapshot per shard, indexed by shard id. A panicked shard
-    /// contributes an empty snapshot (its metrics died with it).
+    /// One snapshot per shard, indexed by shard id. A shard that
+    /// panicked and was respawned contributes its replacement
+    /// incarnations' metrics (merged in at shutdown); the crashed
+    /// incarnation's own counters died with it.
     pub shards: Vec<Metrics>,
     /// Group wall-clock seconds from first submit to shutdown.
     pub wall_s: f64,
-    /// Shards whose threads panicked instead of shutting down cleanly;
-    /// their metrics are lost but the healthy shards' survive.
+    /// Shards at least one of whose thread incarnations panicked instead
+    /// of shutting down cleanly (deduplicated); the supervisor rescues
+    /// their requests, but the crashed incarnation's metrics are lost.
     pub panicked: Vec<usize>,
     /// Requests the router rejected under admission backpressure (every
     /// shard at `batch + queue_depth` load).
@@ -222,6 +268,9 @@ pub struct GroupMetrics {
     /// Empty when the group was driven without a socket front end (trace
     /// harness, unit tests).
     pub reactors: Vec<ReactorStats>,
+    /// Shard-supervisor activity (crash respawns, wedge trips, request
+    /// rescues). All-zero on a run with no shard failures.
+    pub supervision: ShardRestarts,
 }
 
 impl GroupMetrics {
@@ -279,6 +328,19 @@ impl GroupMetrics {
                 s.conns_evicted,
                 s.conns_failed,
                 s.wakes,
+            ));
+        }
+        if !self.supervision.is_quiet() {
+            let s = &self.supervision;
+            out.push_str(&format!(
+                "supervisor: restarts={} wedges={} rescued-queued={} \
+                 rescued-inflight={} give-ups={} pages-reclaimed={}\n",
+                s.restarts,
+                s.wedges,
+                s.rescued_queued,
+                s.rescued_inflight,
+                s.give_ups,
+                s.pages_reclaimed,
             ));
         }
         let f = self.fleet();
@@ -501,6 +563,41 @@ mod tests {
         // A trace-harness group reports no reactor lines at all.
         let g = GroupMetrics::default();
         assert!(!g.report().contains("reactor"), "{}", g.report());
+    }
+
+    #[test]
+    fn supervision_counters_merge_and_only_report_when_active() {
+        // A quiet run must not grow a supervisor line in the report.
+        let quiet = GroupMetrics::default();
+        assert!(quiet.supervision.is_quiet());
+        assert!(!quiet.report().contains("supervisor:"), "{}", quiet.report());
+
+        let mut a = ShardRestarts {
+            restarts: 1,
+            wedges: 0,
+            rescued_queued: 3,
+            rescued_inflight: 2,
+            give_ups: 0,
+            pages_reclaimed: 5,
+        };
+        let b = ShardRestarts { wedges: 2, give_ups: 1, ..Default::default() };
+        a.merge_from(&b);
+        assert_eq!(a.restarts, 1);
+        assert_eq!(a.wedges, 2);
+        assert_eq!(a.rescued_queued, 3);
+        assert_eq!(a.rescued_inflight, 2);
+        assert_eq!(a.give_ups, 1);
+        assert_eq!(a.pages_reclaimed, 5);
+        assert!(!a.is_quiet());
+
+        let g = GroupMetrics { supervision: a, ..Default::default() };
+        let r = g.report();
+        assert!(r.contains("supervisor: restarts=1"), "{r}");
+        assert!(r.contains("wedges=2"), "{r}");
+        assert!(r.contains("rescued-queued=3"), "{r}");
+        assert!(r.contains("rescued-inflight=2"), "{r}");
+        assert!(r.contains("give-ups=1"), "{r}");
+        assert!(r.contains("pages-reclaimed=5"), "{r}");
     }
 
     #[test]

@@ -29,7 +29,7 @@ pub use arena::StagingArena;
 #[cfg(feature = "pjrt")]
 pub use engine::{Engine, EngineConfig};
 pub use memory::{MemoryPlan, PageGeometry};
-pub use metrics::{GroupMetrics, Metrics, ReactorStats};
+pub use metrics::{GroupMetrics, Metrics, ReactorStats, ShardRestarts};
 pub use request::{Completion, EngineEvent, Priority, QueuedReq, Request, StopReason};
 pub use server::ServeConfig;
 pub use shard::{EngineGroup, GroupConfig, GroupEvent, SubmitOutcome};

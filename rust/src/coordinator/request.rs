@@ -134,6 +134,18 @@ impl QueuedReq {
         QueuedReq { req, arrived, resume: Vec::new(), first_token_at: None,
                     retries: 0, sticky: false }
     }
+
+    /// Rebuild a queue record for a request rescued off a dead shard:
+    /// same shape as a preemption requeue — `resume` carries the tokens
+    /// the router has already observed (and already streamed), so
+    /// re-admission replays them without re-emitting and the client
+    /// stream continues bit-identically at the next index. Never sticky:
+    /// the rescuing shard is by definition not the affinity placement.
+    pub fn resumed(req: Request, arrived: Instant, resume: Vec<i32>,
+                   first_token_at: Option<Instant>, retries: u32) -> QueuedReq {
+        QueuedReq { req, arrived, resume, first_token_at, retries,
+                    sticky: false }
+    }
 }
 
 /// Why a generation stopped.

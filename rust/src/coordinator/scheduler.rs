@@ -8,11 +8,12 @@
 //! over the same trace are comparable per-request across replay modes,
 //! shard counts, and engine implementations.
 
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::time::{Duration, Instant};
 
 use anyhow::Result;
 
-use super::request::{Completion, Request};
+use super::request::{Completion, Request, StopReason};
 use super::shard::{EngineGroup, SubmitOutcome};
 use super::DecodeEngine;
 use crate::workload::trace::TracedRequest;
@@ -34,15 +35,62 @@ pub struct TraceRunner {
     /// returns its partial generation. Lets overload replays bound
     /// tail latency the way a deadline-aware client would.
     pub deadline: Option<Duration>,
+    /// Consecutive failed submissions (`Rejected` or `Deferred`) one
+    /// trace entry tolerates before the runner stops retrying it and
+    /// synthesizes a `StopReason::ResourceExhausted` completion (empty
+    /// generation, client-side wait as its e2e). `None` — the historical
+    /// behaviour — retries forever, which livelocks the replay when the
+    /// fleet can never admit the entry again (e.g. every shard dark
+    /// after exhausting its restart budget). The backoff between
+    /// attempts is exponential, so a cap of `k` spans roughly
+    /// `2^min(k,6)` base intervals of client patience.
+    pub give_up_after: Option<u32>,
+    /// Trace entries abandoned under `give_up_after`, across every run
+    /// driven through this runner. Atomic so the `&self` run methods
+    /// can count. Public (external callers build `TraceRunner` with
+    /// struct-update syntax, which needs every field visible); read it
+    /// through [`TraceRunner::gave_up`].
+    pub gave_up: AtomicU64,
 }
 
 impl Default for TraceRunner {
     fn default() -> Self {
-        TraceRunner { replay: Replay::Virtual, deadline: None }
+        TraceRunner { replay: Replay::Virtual, deadline: None,
+                      give_up_after: None, gave_up: AtomicU64::new(0) }
     }
 }
 
 impl TraceRunner {
+    /// Entries abandoned after [`TraceRunner::give_up_after`] consecutive
+    /// failed submissions, summed over every run on this runner.
+    pub fn gave_up(&self) -> u64 {
+        self.gave_up.load(Ordering::Relaxed)
+    }
+
+    /// Has entry `e` burned its retry budget? (`streak` counts
+    /// consecutive `Rejected`/`Deferred` answers; a `Routed` resets it.)
+    fn exhausted(&self, streak: u32) -> bool {
+        self.give_up_after.map(|cap| streak >= cap).unwrap_or(false)
+    }
+
+    /// The structured outcome of abandoning entry `e`: the same
+    /// `ResourceExhausted` completion an admission-starved request
+    /// inside the fleet would produce, with nothing generated and the
+    /// client-side wait (submission attempts + backoff) as its e2e — so
+    /// summaries count the give-up instead of silently losing the entry.
+    fn give_up_completion(&self, e: usize, t: &TracedRequest,
+                          start: Instant) -> Completion {
+        self.gave_up.fetch_add(1, Ordering::Relaxed);
+        Completion {
+            id: e as u64,
+            prompt_len: t.episode.prompt.len(),
+            generated: Vec::new(),
+            stop: StopReason::ResourceExhausted,
+            ttft: Duration::ZERO,
+            e2e: start.elapsed(),
+            stats: Default::default(),
+        }
+    }
     fn request(&self, id: u64, t: &TracedRequest) -> Request {
         let mut req = Request::new(id, t.episode.prompt.clone(), t.max_new);
         if let Some(d) = self.deadline {
@@ -187,6 +235,12 @@ impl TraceRunner {
                     // repeat deferrals) for this entry, and move on — a
                     // differently-sized entry may still be routable.
                     SubmitOutcome::Deferred { retry_after_ms } => {
+                        if self.exhausted(streak[e]) {
+                            completions.push(
+                                self.give_up_completion(e, &trace[e], start));
+                            pending.remove(i);
+                            continue;
+                        }
                         retry_at[e] = Some(backoff(retry_after_ms,
                                                    &mut streak[e], &mut rng));
                         i += 1;
@@ -195,8 +249,15 @@ impl TraceRunner {
                     // hear the same answer this instant, so stop the
                     // walk, poll below, retry after a short backoff
                     // (capacity frees as completions land, so this
-                    // cannot livelock).
+                    // cannot livelock — unless the fleet can never
+                    // admit again, which is what `give_up_after` bounds).
                     SubmitOutcome::Rejected => {
+                        if self.exhausted(streak[e]) {
+                            completions.push(
+                                self.give_up_completion(e, &trace[e], start));
+                            pending.remove(i);
+                            continue;
+                        }
                         retry_at[e] = Some(backoff(2, &mut streak[e],
                                                    &mut rng));
                         break;
@@ -283,11 +344,23 @@ impl TraceRunner {
                         pending.remove(i);
                     }
                     SubmitOutcome::Deferred { retry_after_ms } => {
+                        if self.exhausted(streak[e]) {
+                            completions.push(
+                                self.give_up_completion(e, &trace[e], start));
+                            pending.remove(i);
+                            continue;
+                        }
                         retry_at[e] = Some(backoff(retry_after_ms,
                                                    &mut streak[e], &mut rng));
                         i += 1;
                     }
                     SubmitOutcome::Rejected => {
+                        if self.exhausted(streak[e]) {
+                            completions.push(
+                                self.give_up_completion(e, &trace[e], start));
+                            pending.remove(i);
+                            continue;
+                        }
                         retry_at[e] = Some(backoff(2, &mut streak[e],
                                                    &mut rng));
                         break;

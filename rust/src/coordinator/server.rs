@@ -76,14 +76,26 @@
 //! Ids are rewritten internally so concurrent clients cannot collide.
 //! (The offline vendor set has no tokio; epoll + std::net provides the
 //! same architecture.)
+//!
+//! **Graceful drain** ([`ServeConfig::drain_on_signal`]): `SIGTERM`
+//! flips the fleet into *draining* instead of killing it. The handler
+//! is a single async-signal-safe eventfd write; reactor 0 has that
+//! process-global fd in its epoll set (token [`DRAIN`]) and broadcasts
+//! the transition. Draining reactors stop accepting (listeners
+//! deregistered, handed-off sockets get a structured refusal), reject
+//! new request lines with a structured `draining` error, send a goodbye
+//! to idle connections, let every in-flight request run to its normal
+//! completion (deltas included), and exit through the ordinary
+//! success path — final metrics report printed, exit code 0, zero
+//! accepted requests dropped.
 
 use std::collections::HashMap;
 use std::io::{Read, Write};
 use std::net::{TcpListener, TcpStream};
 use std::os::unix::io::{AsRawFd, FromRawFd};
-use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicI32, AtomicUsize, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
-use std::sync::Arc;
+use std::sync::{Arc, OnceLock};
 use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, bail, Result};
@@ -101,8 +113,13 @@ const LISTENER: u64 = 0;
 /// Reactor token reserved for the completion/handoff wake eventfd.
 const WAKER: u64 = 1;
 
+/// Reactor token reserved for the process-global SIGTERM drain eventfd
+/// (registered by reactor 0 only, and only when
+/// [`ServeConfig::drain_on_signal`] is set).
+const DRAIN: u64 = 2;
+
 /// Connection tokens start here.
-const FIRST_CONN: u64 = 2;
+const FIRST_CONN: u64 = 3;
 
 /// A request line longer than this (no newline seen yet) is answered
 /// with an error and the connection closed — a reasonable bound for a
@@ -145,6 +162,12 @@ pub struct ServeConfig {
     /// ([`super::shard::GroupConfig::lanes`]) — each reactor needs a
     /// completion lane of its own.
     pub reactors: usize,
+    /// Install a `SIGTERM` handler that gracefully drains the fleet
+    /// instead of letting the default disposition kill the process:
+    /// stop accepting, finish in-flight work, goodbye idle clients,
+    /// exit 0 with the final report. Off by default — libraries must
+    /// not hijack process signal dispositions; the CLI opts in.
+    pub drain_on_signal: bool,
 }
 
 impl Default for ServeConfig {
@@ -157,6 +180,7 @@ impl Default for ServeConfig {
             deadline: None,
             default_priority: Priority::default(),
             reactors: 1,
+            drain_on_signal: false,
         }
     }
 }
@@ -389,6 +413,55 @@ pub fn reuseport_listeners(addr: &str, n: usize) -> Result<Vec<TcpListener>> {
     Ok(out)
 }
 
+/// `SIGTERM`, vendored like the socket constants above (no libc crate
+/// in the offline vendor set).
+const SIGTERM: i32 = 15;
+
+// Vendored signal syscalls for the graceful-drain hook. `write` is
+// re-declared here (the reactor's declaration is module-private);
+// duplicate extern declarations of one symbol are fine.
+extern "C" {
+    fn signal(signum: i32, handler: extern "C" fn(i32)) -> usize;
+    fn write(fd: i32, buf: *const u8, count: usize) -> isize;
+}
+
+/// Raw fd the SIGTERM handler writes to; `-1` until the drain hook is
+/// armed. Split out of [`DRAIN_WAKE`] so the handler body is two
+/// async-signal-safe operations: an atomic load and one `write(2)`.
+static DRAIN_FD_RAW: AtomicI32 = AtomicI32::new(-1);
+
+/// The process-global drain eventfd. Created at most once and never
+/// closed — a signal can land at any instant, including between serve
+/// loops, and the handler must always have a live fd to poke. `None`
+/// records an `eventfd` failure so it is not retried forever.
+static DRAIN_WAKE: OnceLock<Option<WakeFd>> = OnceLock::new();
+
+/// The entire SIGTERM handler: bump the drain eventfd. Everything else
+/// — broadcasting, listener teardown, goodbyes — happens on reactor 0's
+/// thread when its epoll reports the [`DRAIN`] token.
+extern "C" fn on_sigterm(_sig: i32) {
+    let fd = DRAIN_FD_RAW.load(Ordering::Relaxed);
+    if fd >= 0 {
+        let one: u64 = 1;
+        unsafe {
+            write(fd, &one as *const u64 as *const u8,
+                  std::mem::size_of::<u64>());
+        }
+    }
+}
+
+/// Arm the SIGTERM → drain hook (idempotent) and return the eventfd
+/// reactor 0 registers under [`DRAIN`].
+fn arm_sigterm_drain() -> Result<&'static WakeFd> {
+    let wake = DRAIN_WAKE
+        .get_or_init(|| WakeFd::new().ok())
+        .as_ref()
+        .ok_or_else(|| anyhow!("drain eventfd unavailable"))?;
+    DRAIN_FD_RAW.store(wake.as_raw_fd(), Ordering::SeqCst);
+    unsafe { signal(SIGTERM, on_sigterm) };
+    Ok(wake)
+}
+
 /// How one reactor comes by its connections.
 enum ListenerMode {
     /// This reactor owns a listener: the sole listener of a 1-reactor
@@ -425,6 +498,10 @@ struct ReactorShared {
     served: AtomicUsize,
     /// Set when any reactor reaches the limit or fails; everyone exits.
     stop: AtomicBool,
+    /// Set when SIGTERM asks for a graceful drain: stop accepting and
+    /// reject new requests, but let in-flight work finish before
+    /// exiting (contrast `stop`, which breaks the loop immediately).
+    draining: AtomicBool,
     /// Every reactor's wake fd, indexed by reactor — for stop broadcast
     /// and accept-handoff nudges.
     wakes: Vec<Arc<WakeFd>>,
@@ -434,6 +511,14 @@ impl ReactorShared {
     /// Ask every reactor to wind down (they still drain their own lanes).
     fn request_stop(&self) {
         self.stop.store(true, Ordering::SeqCst);
+        for w in &self.wakes {
+            w.signal();
+        }
+    }
+
+    /// Flip the fleet into graceful drain (reactor 0, on SIGTERM).
+    fn request_drain(&self) {
+        self.draining.store(true, Ordering::SeqCst);
         for w in &self.wakes {
             w.signal();
         }
@@ -499,6 +584,7 @@ fn serve_fleet<E: DecodeEngine + 'static>(modes: Vec<ListenerMode>,
     let shared = Arc::new(ReactorShared {
         served: AtomicUsize::new(0),
         stop: AtomicBool::new(false),
+        draining: AtomicBool::new(false),
         wakes,
     });
     let mut lanes = group.into_lanes();
@@ -604,6 +690,10 @@ struct FrontEnd<E: DecodeEngine> {
     /// Earliest instant any idle/stuck eviction can fire; the O(conns)
     /// scan — and the epoll timeout — are driven by it.
     next_idle_check: Instant,
+    /// This reactor has performed its drain transition (listener gone,
+    /// idle conns goodbye'd); set once [`ReactorShared::draining`] is
+    /// observed.
+    draining: bool,
     stats: ReactorStats,
     failure: Option<anyhow::Error>,
 }
@@ -621,6 +711,12 @@ impl<E: DecodeEngine> FrontEnd<E> {
             ListenerMode::Handoff(_) => {}
         }
         reactor.register(wake.as_raw_fd(), WAKER, Interest::READ)?;
+        if cfg.drain_on_signal && group.lane() == 0 {
+            // Reactor 0 watches the process-global drain eventfd and
+            // broadcasts the transition to its peers.
+            let drain = arm_sigterm_drain()?;
+            reactor.register(drain.as_raw_fd(), DRAIN, Interest::READ)?;
+        }
         group.register_wake(wake.clone());
         let max_prompt = group.max_prompt_len();
         let next_req = group.lane() as u64;
@@ -638,6 +734,7 @@ impl<E: DecodeEngine> FrontEnd<E> {
             next_req,
             next_handoff: 0,
             next_idle_check: Instant::now() + cfg.idle_timeout,
+            draining: false,
             stats: ReactorStats::default(),
             failure: None,
         })
@@ -683,6 +780,14 @@ impl<E: DecodeEngine> FrontEnd<E> {
                         self.wake.drain();
                         self.stats.wakes += 1;
                     }
+                    DRAIN => {
+                        // SIGTERM landed: clear the level-triggered
+                        // eventfd and tell the whole fleet to drain.
+                        if let Some(Some(w)) = DRAIN_WAKE.get() {
+                            w.drain();
+                        }
+                        self.shared.request_drain();
+                    }
                     token => {
                         if ev.readable {
                             self.conn_readable(token);
@@ -699,8 +804,46 @@ impl<E: DecodeEngine> FrontEnd<E> {
             self.adopt_handoffs();
             self.pump_events();
             self.evict_idle();
+            if self.shared.draining.load(Ordering::SeqCst) {
+                self.enter_drain();
+                // Checked *after* pump_events so the completion that
+                // empties the lane also ends the loop — otherwise the
+                // reactor would park a full idle window on a dead lane.
+                if self.group.inflight() == 0 {
+                    break;
+                }
+            }
         }
         self.finish()
+    }
+
+    /// One-shot local transition into graceful drain: stop accepting
+    /// (listener deregistered), goodbye connections with nothing in
+    /// flight. Busy connections keep their replies coming and are
+    /// goodbye'd by [`FrontEnd::deliver`] when their last one lands;
+    /// [`FrontEnd::finish`] flushes whatever is still buffered.
+    fn enter_drain(&mut self) {
+        if self.draining {
+            return;
+        }
+        self.draining = true;
+        match &self.mode {
+            ListenerMode::Own(l) | ListenerMode::OwnAndDistribute(l, _) => {
+                let _ = self.reactor.deregister(l.as_raw_fd());
+            }
+            ListenerMode::Handoff(_) => {}
+        }
+        let idle: Vec<u64> = self
+            .conns
+            .iter()
+            .filter(|(_, c)| c.inflight == 0 && !c.closing)
+            .map(|(&t, _)| t)
+            .collect();
+        for t in idle {
+            self.queue_reply(
+                t, &error_line(None, "server draining (SIGTERM), closing"));
+            self.close_after_flush(t);
+        }
     }
 
     /// Accept everything pending on this reactor's listener (if it has
@@ -770,6 +913,19 @@ impl<E: DecodeEngine> FrontEnd<E> {
     /// check (over-cap clients get a structured reply and an immediate
     /// close), reactor registration, bookkeeping.
     fn adopt(&mut self, stream: TcpStream) {
+        if self.draining {
+            // Raced into the accept queue (or a peer's handoff channel)
+            // after the drain began: structured refusal and an
+            // immediate close — never a silent drop.
+            self.stats.conns_rejected += 1;
+            let line = error_line(
+                None, "server draining (SIGTERM), not accepting connections");
+            let mut s = stream;
+            let _ = s.write_all(line.as_bytes());
+            let _ = s.write_all(b"\n");
+            let _ = s.shutdown(std::net::Shutdown::Both);
+            return;
+        }
         if stream.set_nonblocking(true).is_err() {
             // A socket that cannot be made non-blocking is unusable, but
             // it must not vanish from the accounting (this was once a
@@ -942,6 +1098,17 @@ impl<E: DecodeEngine> FrontEnd<E> {
             }
         };
         let req = wire.req;
+        if self.draining {
+            // The drain contract: everything routed before SIGTERM
+            // completes; nothing new is admitted after it.
+            self.queue_reply(
+                token,
+                &error_line(Some(req.id),
+                            "server draining (SIGTERM), request not \
+                             accepted"),
+            );
+            return;
+        }
         // Reject instead of submitting: an over-long prompt would panic
         // the target shard's engine (context overflow).
         if req.prompt.len() > self.max_prompt {
@@ -1075,6 +1242,18 @@ impl<E: DecodeEngine> FrontEnd<E> {
         // The owning connection may be gone (client hung up mid-decode;
         // its work was cancelled at close): the completion is dropped.
         self.queue_reply(token, &line);
+        if self.draining
+            && self
+                .conns
+                .get(&token)
+                .map_or(false, |c| c.inflight == 0 && !c.closing)
+        {
+            // Draining and this was the connection's last owed reply:
+            // goodbye behind it, close once both frames flush.
+            self.queue_reply(
+                token, &error_line(None, "server draining (SIGTERM), closing"));
+            self.close_after_flush(token);
+        }
     }
 
     /// Evict connections with no in-flight work and no traffic inside
@@ -1433,6 +1612,25 @@ mod tests {
         assert_eq!(resolve_reactors(3), 3);
         let auto = resolve_reactors(0);
         assert!((1..=8).contains(&auto), "auto = {auto}");
+    }
+
+    #[test]
+    fn sigterm_handler_pokes_the_drain_eventfd() {
+        extern "C" {
+            fn raise(sig: i32) -> i32;
+        }
+        let wake = arm_sigterm_drain().unwrap();
+        // `raise` delivers to the calling thread before returning, so
+        // the handler's eventfd write has landed by the next line.
+        unsafe { raise(SIGTERM) };
+        let r = Reactor::new().unwrap();
+        r.register(wake.as_raw_fd(), DRAIN, Interest::READ).unwrap();
+        let mut evs = Vec::new();
+        r.wait(Duration::from_millis(500), &mut evs).unwrap();
+        assert!(evs.iter().any(|e| e.token == DRAIN && e.readable),
+                "drain eventfd must be readable after SIGTERM");
+        // Leave the process-global fd clean for any other user.
+        wake.drain();
     }
 
     #[test]

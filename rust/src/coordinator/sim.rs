@@ -44,8 +44,9 @@
 //!   [`StopReason::ResourceExhausted`] terminal.
 //! - **Deterministic fault injection.** [`SimConfig::faults`] holds a
 //!   [`FaultSchedule`] of (step, [`Fault`]) pairs — pool shrinks, step
-//!   stalls, transient admit failures — applied at exact step numbers,
-//!   so adversarial end-to-end tests are reproducible from a seed.
+//!   stalls, transient admit failures, injected panics (shard crashes),
+//!   and wedges (heartbeat stalls) — applied at exact step numbers, so
+//!   adversarial end-to-end tests are reproducible from a seed.
 
 use std::collections::{HashSet, VecDeque};
 use std::sync::atomic::{AtomicUsize, Ordering};
@@ -112,15 +113,26 @@ pub enum Fault {
     /// The next `count` admission opportunities fail transiently: the
     /// request stays queued and the step decodes instead.
     FailAdmits { count: u32 },
+    /// The engine thread panics at this step — a shard crash. The shard
+    /// supervisor catches the unwind via `AliveGuard`, rescues the dead
+    /// shard's requests onto live shards, and respawns the thread.
+    Panic,
+    /// The engine sleeps `ms` milliseconds inside one step without
+    /// yielding — a wedge, not a crash: the shard thread stays alive but
+    /// its heartbeat stalls, which the router-side watchdog must detect
+    /// (circuit-break) and then forgive (heartbeat resumes).
+    Wedge { ms: u64 },
 }
 
-/// A deterministic schedule of up to 8 `(step, fault)` pairs. `Copy` so
-/// [`SimConfig`] stays `Copy`. Steps are the engine's 1-based step
-/// counter (first `step()` call is step 1); several faults may share a
-/// step.
+/// A deterministic schedule of up to 16 `(step, fault)` pairs. `Copy` so
+/// [`SimConfig`] stays `Copy` (the fixed array, rather than a `Vec`, is
+/// what buys that — 16 slots let crash/wedge faults compose with a full
+/// seeded ShrinkPool/Stall/FailAdmits schedule in one run). Steps are
+/// the engine's 1-based step counter (first `step()` call is step 1);
+/// several faults may share a step.
 #[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
 pub struct FaultSchedule {
-    entries: [Option<(u64, Fault)>; 8],
+    entries: [Option<(u64, Fault)>; 16],
 }
 
 impl FaultSchedule {
@@ -129,7 +141,7 @@ impl FaultSchedule {
         FaultSchedule::default()
     }
 
-    /// Builder: add `fault` at `step`. Panics when all 8 slots are used.
+    /// Builder: add `fault` at `step`. Panics when all 16 slots are used.
     pub fn at(mut self, step: u64, fault: Fault) -> FaultSchedule {
         for e in self.entries.iter_mut() {
             if e.is_none() {
@@ -137,7 +149,7 @@ impl FaultSchedule {
                 return self;
             }
         }
-        panic!("fault schedule full (max 8 entries)");
+        panic!("fault schedule full (max 16 entries)");
     }
 
     /// A reproducible adversarial schedule derived from `seed`: one pool
@@ -476,6 +488,19 @@ impl SimEngine {
                 }
                 Fault::Stall { steps } => self.stall_left += steps,
                 Fault::FailAdmits { count } => self.fail_admits_left += count,
+                // A real crash: the unwind rips through shard_main, the
+                // AliveGuard flips the shard dead, and the supervisor
+                // takes over. Nothing here is cleaned up on purpose —
+                // that is exactly the mess rescue must reconcile.
+                Fault::Panic => {
+                    panic!("injected panic fault at step {}", self.step_no)
+                }
+                // A wedge: the thread blocks mid-step without yielding,
+                // so the shard's heartbeat goes quiet while `alive`
+                // stays true — the watchdog case, not the crash case.
+                Fault::Wedge { ms } => {
+                    std::thread::sleep(std::time::Duration::from_millis(ms));
+                }
             }
         }
     }
@@ -1371,6 +1396,74 @@ mod tests {
         assert_eq!(a, b);
         assert!(!a.is_empty());
         assert_ne!(a, FaultSchedule::seeded(12, 16));
+    }
+
+    #[test]
+    fn fault_schedule_composes_crash_faults_onto_a_full_seeded_run() {
+        // The 16-slot schedule must hold a seeded 3-fault run plus
+        // Panic/Wedge chaos on top — the composition the supervisor
+        // chaos matrix uses — with room to spare (13 on a seeded base).
+        let mut s = FaultSchedule::seeded(7, 16)
+            .at(12, Fault::Panic)
+            .at(20, Fault::Wedge { ms: 50 });
+        assert_eq!(s.due(12).collect::<Vec<_>>(), vec![Fault::Panic]);
+        assert_eq!(s.due(20).collect::<Vec<_>>(),
+                   vec![Fault::Wedge { ms: 50 }]);
+        // Fill every remaining slot; the 17th insert must refuse loudly.
+        for k in 0..11 {
+            s = s.at(100 + k, Fault::Stall { steps: 1 });
+        }
+        assert_eq!((1..200).map(|t| s.due(t).count()).sum::<usize>(), 16);
+        let full = s;
+        let overflow = std::panic::catch_unwind(|| {
+            full.at(999, Fault::Panic)
+        });
+        assert!(overflow.is_err(), "17th entry must panic, not drop");
+    }
+
+    #[test]
+    fn panic_fault_panics_the_engine_at_its_step() {
+        let cfg = SimConfig {
+            batch: 1,
+            eos_every: 0,
+            faults: FaultSchedule::none().at(3, Fault::Panic),
+            ..Default::default()
+        };
+        let mut eng = SimEngine::new(cfg);
+        DecodeEngine::submit(&mut eng, req(1, vec![2, 3, 5], 12));
+        let blew = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            for _ in 0..3 {
+                eng.step().unwrap();
+            }
+        }));
+        assert!(blew.is_err(), "Panic fault must unwind at step 3");
+    }
+
+    #[test]
+    fn wedge_fault_stalls_wall_clock_without_changing_output() {
+        let prompt: Vec<i32> = vec![4, 9, 2];
+        let wedged = SimConfig {
+            batch: 1,
+            eos_every: 0,
+            faults: FaultSchedule::none().at(2, Fault::Wedge { ms: 60 }),
+            ..Default::default()
+        };
+        let mut eng = SimEngine::new(wedged);
+        DecodeEngine::submit(&mut eng, req(1, prompt.clone(), 8));
+        let t0 = Instant::now();
+        let mut comps = Vec::new();
+        while !DecodeEngine::idle(&eng) {
+            comps.extend(eng.step().unwrap());
+        }
+        assert!(t0.elapsed() >= Duration::from_millis(60),
+                "wedge must actually block the step");
+        assert_eq!(comps.len(), 1);
+        let clean = SimConfig { faults: FaultSchedule::none(), ..wedged };
+        let (want, want_stop) =
+            SimEngine::expected_generation(&clean, &prompt, 8);
+        assert_eq!(comps[0].generated, want,
+                   "a wedge delays tokens, never changes them");
+        assert_eq!(comps[0].stop, want_stop);
     }
 
     #[test]

@@ -30,6 +30,7 @@ USAGE:
                    [--prefill-chunk TOKENS] [--reactors N]
                    [--prefix-cache] [--prefix-cache-blocks N]
                    [--default-priority interactive|batch]
+                   [--restart-limit N] [--wedge-timeout-ms MS]
   seerattn generate [--task easy|hard] [--policy P] [--budget TOKENS] [--n N]
                    [--no-simd]
 
@@ -43,6 +44,11 @@ listener (accept-handoff fallback); 0 = auto (~cores/4, max 8).
 block-aligned prefixes map cached KV pages and gate blocks instead of
 re-prefilling (--prefix-cache-blocks caps cached blocks; 0 = unbounded,
 LRU-evicted under pool pressure either way).
+--restart-limit: respawns a crashed shard gets before it is retired
+dark (default 3); --wedge-timeout-ms: heartbeat stall that
+circuit-breaks a shard out of routing (default 1500).
+`serve` drains gracefully on SIGTERM: stop accepting, finish
+in-flight requests, exit 0 with the final metrics report.
 --no-simd pins the host hot path to the bit-identical scalar kernels
 (auto-dispatch picks AVX2+FMA / NEON when the CPU has them).
 Artifacts are read from ./artifacts (override: SEERATTN_ARTIFACTS).";
@@ -266,6 +272,13 @@ fn cmd_serve(args: &Args, dir: &PathBuf) -> Result<()> {
         // sense when the shards actually cache prefixes.
         prefix_routing: args.flags.contains_key("prefix-cache"),
         lanes: reactors,
+        // Shard supervision: a stalled shard is circuit-broken out of
+        // routing past this heartbeat silence...
+        wedge_timeout: std::time::Duration::from_millis(
+            args.usize_flag("wedge-timeout-ms", 1500) as u64),
+        // ...and a crashed shard is respawned (queued + in-flight work
+        // rescued) at most this many times before it goes dark.
+        restart_limit: args.usize_flag("restart-limit", 3) as u32,
         ..Default::default()
     };
     let default_priority = {
@@ -293,6 +306,9 @@ fn cmd_serve(args: &Args, dir: &PathBuf) -> Result<()> {
         // Front-end reactor threads (SO_REUSEPORT listeners, or accept
         // handoff when the kernel lacks the option).
         reactors,
+        // The CLI owns the process, so SIGTERM means "drain and exit
+        // 0" (libraries embedding serve() keep the default false).
+        drain_on_signal: true,
     };
     // Each shard thread constructs its own runtime + engine (the engine
     // holds an Rc and never crosses threads); the factory just captures

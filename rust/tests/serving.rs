@@ -45,6 +45,16 @@
 //!     cancel storm on half-prefilled shared-prefix slots leaks neither
 //!     pages nor cache pins — the full pool is re-admittable and the
 //!     gauge returns to capacity.
+//! 10. Shard supervision (ISSUE 10): a shard that panics mid-stream is
+//!     respawned and its in-flight requests are replayed from the
+//!     tokens the router already observed — the client's delta stream
+//!     stays gapless and bit-identical across the crash; the seeded
+//!     chaos matrix still loses nothing with a `Panic` fault in the
+//!     mix; an admission-starved trace entry gives up after a bounded
+//!     retry streak with a structured `resource_exhausted` outcome
+//!     instead of livelocking; and SIGTERM drains the server
+//!     gracefully — in-flight completes, idle connections get a
+//!     goodbye, new work is refused, and serve() returns cleanly.
 
 use std::collections::BTreeMap;
 use std::io::{BufRead, BufReader, Write};
@@ -54,9 +64,9 @@ use std::time::{Duration, Instant};
 use seerattn::coordinator::request::StopReason;
 use seerattn::coordinator::scheduler::{Replay, TraceRunner};
 use seerattn::coordinator::server;
-use seerattn::coordinator::{Completion, EngineGroup, FaultSchedule, GroupConfig,
-                            Request, ServeConfig, SimConfig, SimEngine,
-                            SubmitOutcome};
+use seerattn::coordinator::{Completion, EngineGroup, Fault, FaultSchedule,
+                            GroupConfig, Request, ServeConfig, SimConfig,
+                            SimEngine, SubmitOutcome};
 use seerattn::util::json::Json;
 use seerattn::util::rng::Rng;
 use seerattn::workload::trace::{poisson_trace, TracedRequest};
@@ -1965,4 +1975,380 @@ mod gather_parity {
         assert_eq!(pset.seq_len.as_i32().unwrap(), sset.seq_len.as_i32().unwrap());
         assert_eq!(pset.dirty(), sset.dirty());
     }
+}
+
+// ---------------------------------------------------------------------
+// Shard supervision (ISSUE 10): panic recovery with bit-identical
+// request rescue, the chaos matrix with a Panic leg, the trace runner's
+// bounded give-up, and the SIGTERM graceful drain.
+// ---------------------------------------------------------------------
+
+#[test]
+fn shard_panic_mid_stream_rescues_bit_identical() {
+    use std::sync::atomic::{AtomicUsize, Ordering};
+    use std::sync::Arc;
+
+    // Every incarnation of the single shard panics at its own step 10,
+    // so finishing the 20-token stream takes several crash + respawn +
+    // rescue cycles. The client must see one gapless delta stream whose
+    // concatenation equals the pure token function — no token repeated,
+    // none lost — and the respawned engine's page pool must end at full
+    // capacity.
+    let sim_cfg = SimConfig {
+        batch: 2,
+        pages_per_slot: 8,
+        page_tokens: 8,
+        eos_every: 0,
+        faults: FaultSchedule::none().at(10, Fault::Panic),
+        ..Default::default()
+    };
+    let capacity = sim_cfg.batch * sim_cfg.pages_per_slot;
+    let gauge = Arc::new(AtomicUsize::new(0));
+    let factory_gauge = gauge.clone();
+    let gcfg = GroupConfig {
+        shards: 1,
+        queue_depth: 8,
+        restart_limit: 64,
+        restart_backoff_ms: 1,
+        rescue_limit: 64,
+        ..Default::default()
+    };
+    let group: EngineGroup<SimEngine> =
+        EngineGroup::with_config(gcfg, move |_| {
+            Ok(SimEngine::with_pool_gauge(sim_cfg, factory_gauge.clone()))
+        })
+        .unwrap();
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    let cfg = ServeConfig { limit: Some(2), ..Default::default() };
+    let srv = std::thread::spawn(move || {
+        server::serve_on(listener, group, cfg).unwrap();
+    });
+
+    // The streaming request first, so it is routed while the shard's
+    // first incarnation is certainly alive.
+    let prompt = vec![2, 4, 6];
+    let stream_conn = TcpStream::connect(addr).unwrap();
+    stream_conn
+        .set_read_timeout(Some(Duration::from_secs(30)))
+        .unwrap();
+    {
+        let mut w = stream_conn.try_clone().unwrap();
+        writeln!(w, "{{\"id\": 1, \"prompt\": [2, 4, 6], \"max_new\": 20, \
+                     \"stream\": true}}")
+            .unwrap();
+        w.flush().unwrap();
+    }
+    let mut reader = BufReader::new(stream_conn);
+    let mut first = String::new();
+    assert!(reader.read_line(&mut first).unwrap() > 0, "EOF before deltas");
+
+    // A short non-streaming co-resident racing the crash windows. A
+    // submission landing in the brief dead-shard gap gets a structured
+    // backpressure reply; retry like a well-behaved client.
+    let plain = TcpStream::connect(addr).unwrap();
+    plain.set_read_timeout(Some(Duration::from_secs(30))).unwrap();
+    let plain_prompt = vec![3, 5];
+    let mut plain_reader = BufReader::new(plain.try_clone().unwrap());
+    let plain_reply = loop {
+        {
+            let mut w = plain.try_clone().unwrap();
+            writeln!(w, "{}", request_line(2, &plain_prompt, 2)).unwrap();
+            w.flush().unwrap();
+        }
+        let mut l = String::new();
+        assert!(plain_reader.read_line(&mut l).unwrap() > 0,
+                "EOF before the plain reply");
+        let j = Json::parse(&l).unwrap_or_else(|_| panic!("bad frame {l:?}"));
+        if j.get("error").is_ok() {
+            assert!(j.get("retry_after_ms").is_ok(),
+                    "only backpressure errors are acceptable: {l:?}");
+            std::thread::sleep(Duration::from_millis(5));
+            continue;
+        }
+        break j;
+    };
+
+    // Drain the stream: every delta's index must equal the count of
+    // tokens already seen — gapless and repeat-free across respawns.
+    let mut deltas: Vec<i32> = Vec::new();
+    let mut line = first;
+    let terminal = loop {
+        let j = Json::parse(&line)
+            .unwrap_or_else(|_| panic!("bad frame {line:?}"));
+        assert!(j.get("error").is_err(), "unexpected error {line:?}");
+        assert_eq!(j.get("id").unwrap().as_i64().unwrap(), 1);
+        if j.opt("stop").is_some() {
+            break j;
+        }
+        if j.opt("delta").is_some() {
+            assert_eq!(j.get("index").unwrap().as_i64().unwrap() as usize,
+                       deltas.len(),
+                       "delta index gap across a shard crash: {line:?}");
+            for t in j.get("delta").unwrap().as_arr().unwrap() {
+                deltas.push(t.as_i64().unwrap() as i32);
+            }
+        }
+        line.clear();
+        assert!(reader.read_line(&mut line).unwrap() > 0,
+                "EOF before the terminal reply");
+    };
+    srv.join().unwrap();
+
+    let (want, want_stop) = SimEngine::expected_generation(&sim_cfg, &prompt, 20);
+    let term_gen: Vec<i32> = terminal
+        .get("generated").unwrap().as_arr().unwrap()
+        .iter().map(|t| t.as_i64().unwrap() as i32).collect();
+    assert_eq!(deltas, term_gen, "concatenated deltas != terminal reply");
+    assert_eq!(term_gen, want,
+               "crash + rescue broke the stream's bit-identity");
+    assert_eq!(terminal.get("stop").unwrap().as_str().unwrap(),
+               want_stop.as_str());
+    let (want_plain, _) =
+        SimEngine::expected_generation(&sim_cfg, &plain_prompt, 2);
+    let plain_gen: Vec<i32> = plain_reply
+        .get("generated").unwrap().as_arr().unwrap()
+        .iter().map(|t| t.as_i64().unwrap() as i32).collect();
+    assert_eq!(plain_gen, want_plain, "co-resident diverged");
+    assert_eq!(gauge.load(Ordering::SeqCst), capacity,
+               "the respawned pool must end at full capacity");
+}
+
+#[test]
+fn chaos_with_panic_leg_never_loses_a_request() {
+    // The ISSUE 6 chaos property with shard death in the matrix: on top
+    // of the seeded stall/shrink/fail-admit schedule, every incarnation
+    // of every shard panics at a seed-chosen step. With a generous
+    // restart budget nothing may be lost, duplicated, or perturbed —
+    // rescued-and-replayed streams equal the pure token function.
+    for seed in chaos_seeds() {
+        let n = 24usize;
+        let trace = chaos_trace(n, seed);
+        let sim_cfg = SimConfig {
+            batch: 2,
+            pages_per_slot: 4, // pool = 8 pages per shard
+            page_tokens: 8,
+            eos_every: 0,
+            step_delay_ms: 1,
+            preempt_retries: 2,
+            faults: FaultSchedule::seeded(seed, 8)
+                .at(18 + seed % 14, Fault::Panic),
+            prefill_chunk: 8,
+            ..Default::default()
+        };
+        let gcfg = GroupConfig {
+            shards: 4,
+            queue_depth: 2,
+            restart_limit: 100,
+            restart_backoff_ms: 1,
+            rescue_limit: 100,
+            ..Default::default()
+        };
+        let expect = trace.clone();
+        let worker = std::thread::spawn(move || {
+            let mut group: EngineGroup<SimEngine> =
+                EngineGroup::with_config(gcfg,
+                                         move |_| Ok(SimEngine::new(sim_cfg)))
+                    .unwrap();
+            let runner =
+                TraceRunner { replay: Replay::Virtual, ..Default::default() };
+            let comps = runner.run_group(&mut group, &trace).unwrap();
+            let gm = group.shutdown().unwrap();
+            (comps, gm)
+        });
+        let deadline = Instant::now() + Duration::from_secs(60);
+        while !worker.is_finished() {
+            assert!(Instant::now() < deadline,
+                    "seed {seed}: panic-leg chaos replay deadlocked");
+            std::thread::sleep(Duration::from_millis(10));
+        }
+        let (comps, gm) = worker.join().unwrap();
+        let comps = by_id(comps); // also asserts no duplicated ids
+        assert_eq!(comps.len(), n, "seed {seed}: a request was lost");
+        for (id, (plen, generated, stop)) in &comps {
+            let t = &expect[*id as usize];
+            assert_eq!(*plen, t.episode.prompt.len(), "seed {seed} id {id}");
+            let (want, want_stop) = SimEngine::expected_generation(
+                &sim_cfg, &t.episode.prompt, t.max_new);
+            match stop {
+                StopReason::Eos | StopReason::MaxNewTokens
+                | StopReason::ContextFull => {
+                    assert_eq!(stop, &want_stop, "seed {seed} id {id}");
+                    assert_eq!(generated, &want,
+                               "seed {seed} id {id}: crash rescue broke \
+                                bit-identity");
+                }
+                StopReason::ResourceExhausted => {
+                    assert!(want.starts_with(generated),
+                            "seed {seed} id {id}: exhausted completion \
+                             diverged from the token function");
+                }
+                StopReason::Cancelled | StopReason::DeadlineExceeded => {
+                    panic!("seed {seed} id {id}: stop {stop:?} without a \
+                            cancel or deadline")
+                }
+            }
+        }
+        assert!(gm.supervision.restarts >= 1,
+                "seed {seed}: the panic fault never landed");
+    }
+}
+
+#[test]
+fn trace_runner_gives_up_after_bounded_retries() {
+    // Two long blockers saturate a 1-shard, capacity-2 admission window
+    // for ~0.5s; the three followers hear `Rejected` on every attempt
+    // and must stop after a 3-long streak (~15ms of client patience)
+    // with structured `resource_exhausted` completions — the historical
+    // retry-forever client would have waited the blockers out instead.
+    let sim_cfg = SimConfig { batch: 1, eos_every: 0, step_delay_ms: 5,
+                              ..Default::default() };
+    let gcfg = GroupConfig { shards: 1, queue_depth: 1,
+                             ..Default::default() };
+    let mk = |prompt: Vec<i32>, max_new: usize| TracedRequest {
+        arrival_s: 0.0,
+        episode: Episode { prompt, target: Vec::new(), answer: 0,
+                           cfg: TaskConfig::easy() },
+        max_new,
+    };
+    let trace = vec![
+        mk(vec![5, 9, 2], 100),
+        mk(vec![6, 1, 3], 100),
+        mk(vec![7, 7], 4),
+        mk(vec![8, 2], 4),
+        mk(vec![9, 4], 4),
+    ];
+    let mut group: EngineGroup<SimEngine> =
+        EngineGroup::with_config(gcfg, move |_| Ok(SimEngine::new(sim_cfg)))
+            .unwrap();
+    let runner = TraceRunner { replay: Replay::Virtual,
+                               give_up_after: Some(3),
+                               ..Default::default() };
+    let comps = by_id(runner.run_group(&mut group, &trace).unwrap());
+    group.shutdown().unwrap();
+
+    assert_eq!(comps.len(), trace.len(), "an entry was silently dropped");
+    assert_eq!(runner.gave_up(), 3, "exactly the three followers give up");
+    for id in [0u64, 1] {
+        let (plen, generated, stop) = comps.get(&id).unwrap();
+        let t = &trace[id as usize];
+        let (want, want_stop) = SimEngine::expected_generation(
+            &sim_cfg, &t.episode.prompt, t.max_new);
+        assert_eq!(*plen, t.episode.prompt.len());
+        assert_eq!(generated, &want, "blocker {id} diverged");
+        assert_eq!(stop, &want_stop);
+    }
+    for id in [2u64, 3, 4] {
+        let (plen, generated, stop) = comps.get(&id).unwrap();
+        assert_eq!(*stop, StopReason::ResourceExhausted,
+                   "give-up outcome must be structured, id {id}");
+        assert!(generated.is_empty(), "nothing was ever generated");
+        assert_eq!(*plen, trace[id as usize].episode.prompt.len());
+    }
+}
+
+#[test]
+fn sigterm_drains_gracefully_with_zero_dropped_requests() {
+    extern "C" {
+        fn raise(sig: i32) -> i32;
+    }
+    const SIGTERM: i32 = 15;
+
+    let sim_cfg = SimConfig { batch: 2, eos_every: 0, step_delay_ms: 2,
+                              ..Default::default() };
+    let group: EngineGroup<SimEngine> =
+        EngineGroup::new(1, move |_| Ok(SimEngine::new(sim_cfg))).unwrap();
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    // No completion limit: the only way this server exits is the
+    // SIGTERM drain, so the join below is the clean-exit assertion.
+    let cfg = ServeConfig { drain_on_signal: true, ..Default::default() };
+    let srv = std::thread::spawn(move || {
+        server::serve_on(listener, group, cfg).unwrap();
+    });
+
+    // A streaming request slow enough (~2ms x 80 steps) that the signal
+    // lands mid-decode.
+    let prompt = vec![2, 4, 6];
+    let busy = TcpStream::connect(addr).unwrap();
+    busy.set_read_timeout(Some(Duration::from_secs(30))).unwrap();
+    {
+        let mut w = busy.try_clone().unwrap();
+        writeln!(w, "{{\"id\": 1, \"prompt\": [2, 4, 6], \"max_new\": 80, \
+                     \"stream\": true}}")
+            .unwrap();
+        w.flush().unwrap();
+    }
+    let mut busy_reader = BufReader::new(busy.try_clone().unwrap());
+    let mut first = String::new();
+    assert!(busy_reader.read_line(&mut first).unwrap() > 0);
+    assert!(Json::parse(&first).unwrap().get("delta").is_ok(),
+            "expected a delta frame, got {first:?}");
+
+    // An idle connection open across the drain; it must get a goodbye.
+    let idle = TcpStream::connect(addr).unwrap();
+    idle.set_read_timeout(Some(Duration::from_secs(30))).unwrap();
+    std::thread::sleep(Duration::from_millis(30)); // let it be adopted
+
+    unsafe { raise(SIGTERM) };
+
+    // The idle connection's goodbye doubles as the "drain observed"
+    // barrier: after it, new requests are deterministically refused.
+    let mut idle_reader = BufReader::new(idle);
+    let mut l = String::new();
+    assert!(idle_reader.read_line(&mut l).unwrap() > 0,
+            "idle connection closed without a goodbye");
+    let j = Json::parse(&l).unwrap_or_else(|_| panic!("bad goodbye {l:?}"));
+    assert!(j.get("error").unwrap().as_str().unwrap().contains("draining"),
+            "goodbye must say why: {l:?}");
+    let mut rest = String::new();
+    assert_eq!(idle_reader.read_line(&mut rest).unwrap(), 0,
+               "idle connection must be closed after the goodbye");
+
+    // A request line arriving mid-drain is refused, not silently eaten.
+    {
+        let mut w = busy.try_clone().unwrap();
+        writeln!(w, "{}", request_line(2, &[8, 8], 4)).unwrap();
+        w.flush().unwrap();
+    }
+
+    // The in-flight stream still runs to its normal completion.
+    let mut deltas: Vec<i32> = Vec::new();
+    let mut refused = false;
+    let mut line = first;
+    let terminal = loop {
+        let j = Json::parse(&line)
+            .unwrap_or_else(|_| panic!("bad frame {line:?}"));
+        if j.get("error").is_ok() {
+            assert_eq!(j.get("id").unwrap().as_i64().unwrap(), 2,
+                       "only the mid-drain request may be refused: {line:?}");
+            assert!(j.get("error").unwrap().as_str().unwrap()
+                        .contains("draining"));
+            refused = true;
+        } else if j.opt("stop").is_some() {
+            break j;
+        } else if j.opt("delta").is_some() {
+            assert_eq!(j.get("index").unwrap().as_i64().unwrap() as usize,
+                       deltas.len(), "delta gap across the drain");
+            for t in j.get("delta").unwrap().as_arr().unwrap() {
+                deltas.push(t.as_i64().unwrap() as i32);
+            }
+        }
+        line.clear();
+        assert!(busy_reader.read_line(&mut line).unwrap() > 0,
+                "EOF before the terminal reply");
+    };
+    assert!(refused, "the mid-drain request must get a structured refusal");
+
+    // serve_on returning Ok is the exit-0 criterion; the drain must not
+    // have dropped or truncated the in-flight request.
+    srv.join().unwrap();
+    let (want, want_stop) = SimEngine::expected_generation(&sim_cfg, &prompt, 80);
+    let term_gen: Vec<i32> = terminal
+        .get("generated").unwrap().as_arr().unwrap()
+        .iter().map(|t| t.as_i64().unwrap() as i32).collect();
+    assert_eq!(deltas, term_gen, "concatenated deltas != terminal reply");
+    assert_eq!(term_gen, want, "the drain truncated an in-flight stream");
+    assert_eq!(terminal.get("stop").unwrap().as_str().unwrap(),
+               want_stop.as_str());
 }

@@ -280,7 +280,7 @@ fn serving_trace_tokens_identical_with_and_without_simd() {
 
             // Group pass: 2 shards, real router/steal/completion fan-in.
             let gcfg = GroupConfig { shards: 2, affinity_slack: 1,
-                                     queue_depth: 16 };
+                                     queue_depth: 16, ..Default::default() };
             let mut group: EngineGroup<SimEngine> =
                 EngineGroup::with_config(gcfg, move |_| Ok(SimEngine::new(sim_cfg)))
                     .unwrap();
